@@ -1,0 +1,83 @@
+//! Platform shoot-out: run the same ETL pipeline through the real
+//! multithreaded Rust CPU engine (measured), the calibrated
+//! pandas/Beam/NVTabular models (paper scale), and the PipeRec vFPGA
+//! simulation — the Fig. 13/15/16 comparison in miniature.
+//!
+//! ```bash
+//! cargo run --release --example etl_compare -- --pipeline 3 --dataset 1
+//! ```
+
+use piperec::baselines::{BeamModel, GpuKind, GpuModel, PandasModel, RustCpuEtl};
+use piperec::bench_harness::Table;
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::etl::pipelines::{build, PipelineKind};
+use piperec::fpga::Pipeline;
+use piperec::memsys::IngestSource;
+use piperec::prelude::*;
+use piperec::util::cli::Args;
+use piperec::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let kind = match args.get_str("pipeline", "2").as_str() {
+        "1" => PipelineKind::I,
+        "3" => PipelineKind::III,
+        _ => PipelineKind::II,
+    };
+    let dkind = match args.get_str("dataset", "1").as_str() {
+        "2" => DatasetKind::II,
+        "3" => DatasetKind::III,
+        _ => DatasetKind::I,
+    };
+    let mut spec = DatasetSpec::by_kind(dkind, args.get("scale", 0.02));
+    spec.shards = 2;
+
+    let dag = build(kind, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default())?;
+    let mut pipe = Pipeline::new(plan);
+
+    // Measured: our real Rust CPU baseline on this machine.
+    let shard = spec.shard(0, 42);
+    let threads = piperec::util::pool::default_threads();
+    let (_, rust_cpu_s) = RustCpuEtl::new(threads).run(&dag, &shard)?;
+
+    // Measured (simulated clock): PipeRec on the same shard.
+    pipe.fit(&shard)?;
+    let (_, t) = pipe.process(&shard)?;
+
+    // Models at paper scale (per DESIGN.md §1 substitutions).
+    let source = if spec.ssd_bound { IngestSource::Ssd } else { IngestSource::Host };
+    let profile = piperec::planner::StreamProfile::from_schema(&spec.schema, spec.paper_rows);
+    let piperec_paper = pipe.projected_seconds_profiled(profile, source);
+    let pandas = PandasModel::default().pipeline_seconds(kind, &spec);
+    let beam = BeamModel::new(128).pipeline_seconds(kind, &spec);
+    let gpu3090 = GpuModel::new(GpuKind::Rtx3090).pipeline_seconds(kind, &spec);
+    let a100 = GpuModel::new(GpuKind::A100).pipeline_seconds(kind, &spec);
+
+    let mut table = Table::new(
+        format!("{} + {} — ETL latency", spec.name, kind.label()),
+        &["platform", "latency", "vs PipeRec"],
+    );
+    let mut row = |name: &str, secs: f64| {
+        table.row(vec![
+            name.into(),
+            fmt_secs(secs),
+            format!("{:.1}×", secs / piperec_paper),
+        ]);
+    };
+    row("CPU pandas (64T, model)", pandas);
+    row("CPU Beam 128 vCPU (model)", beam);
+    row("RTX 3090 NVTabular (model)", gpu3090);
+    row("A100 NVTabular (model)", a100);
+    row("PipeRec (sim, paper scale)", piperec_paper);
+    table.print();
+
+    println!(
+        "\nmeasured on this machine ({} rows): Rust CPU {} ({} threads) vs PipeRec sim {}",
+        shard.rows(),
+        fmt_secs(rust_cpu_s),
+        threads,
+        fmt_secs(t.elapsed_s),
+    );
+    Ok(())
+}

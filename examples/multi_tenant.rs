@@ -1,0 +1,91 @@
+//! Multi-tenant elasticity demo (paper §3.4 Q1/Q2, §4.8): load
+//! heterogeneous ETL pipelines into the vFPGA's dynamic regions via
+//! partial reconfiguration, then scale one pipeline across 1–7 regions
+//! and watch throughput and resource usage (Fig. 17).
+//!
+//! ```bash
+//! cargo run --release --example multi_tenant
+//! ```
+
+use piperec::dataio::dataset::DatasetSpec;
+use piperec::etl::pipelines::{build, PipelineKind};
+use piperec::fpga::VFpga;
+use piperec::memsys::IngestSource;
+use piperec::planner::resources::Device;
+use piperec::prelude::*;
+use piperec::util::fmt_rate;
+
+fn main() -> anyhow::Result<()> {
+    let device = Device::alveo_u55c();
+
+    // ---- Q1: heterogeneous pipelines coexist ----------------------------
+    println!("== multi-tenancy: heterogeneous pipelines ==");
+    let mut fpga = VFpga::new(device);
+    let mut spec = DatasetSpec::dataset_i(0.002);
+    spec.shards = 1;
+    let shard = spec.shard(0, 42);
+
+    let mut regions = Vec::new();
+    for kind in PipelineKind::all() {
+        let dag = build(kind, &spec.schema);
+        let plan = compile(&dag, &spec.schema, &PlannerConfig::default())?;
+        let id = fpga.load(plan)?;
+        if kind != PipelineKind::I {
+            fpga.fit(id, &shard)?;
+        }
+        regions.push((kind, id));
+    }
+    let util = fpga.utilization();
+    println!(
+        "loaded {} pipelines; device: CLB {:.1}% BRAM {:.1}% DSP {:.2}% (reconfig {:.1} ms total)",
+        fpga.active(),
+        util.clb_frac * 100.0,
+        util.bram_frac * 100.0,
+        util.dsp_frac * 100.0,
+        fpga.reconfig_s * 1e3,
+    );
+    for (kind, id) in &regions {
+        let (out, t) = fpga.process(*id, &shard)?;
+        println!(
+            "  region {:>2} runs {:>5}: {} rows in {:.2} ms (sim) → {}",
+            id.0,
+            kind.label(),
+            out.rows(),
+            t.elapsed_s * 1e3,
+            fmt_rate(t.throughput()),
+        );
+    }
+
+    // Tenant churn: swap P-I out for another P-III within milliseconds.
+    let (_, first) = regions[0];
+    fpga.unload(first)?;
+    let dag = build(PipelineKind::III, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default())?;
+    let id = fpga.load(plan)?;
+    println!("swapped region {} → P-III (partial reconfiguration)", id.0);
+
+    // ---- Q2: elasticity — Fig. 17-style scaling -------------------------
+    println!("\n== elasticity: concurrent instances of P-I on Dataset-II ==");
+    let wide = DatasetSpec::dataset_ii(1.0);
+    let dag = build(PipelineKind::I, &wide.schema);
+    let plan = compile(&dag, &wide.schema, &PlannerConfig::default())?;
+    let fresh = VFpga::new(device);
+    println!("{:>9}  {:>14}  {:>10}  {:>8}", "pipelines", "throughput", "scaling", "clock");
+    let base = fresh.concurrent_throughput(&plan, 1, IngestSource::OnBoard);
+    for n in [1usize, 2, 4, 7] {
+        let tput = fresh.concurrent_throughput(&plan, n, IngestSource::OnBoard);
+        let clock = match n {
+            0..=4 => 200,
+            5 | 6 => 180,
+            _ => 150,
+        };
+        println!(
+            "{:>9}  {:>14}  {:>9.2}×  {:>5} MHz",
+            n,
+            fmt_rate(tput),
+            tput / base,
+            clock
+        );
+    }
+    Ok(())
+}

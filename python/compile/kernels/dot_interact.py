@@ -1,0 +1,97 @@
+"""Pallas kernel: DLRM pairwise dot-product feature interaction (L1).
+
+Hardware adaptation (DESIGN.md §6): the paper's trainer is a GPU DLRM; on
+TPU the interaction is one small-matrix Gram product per sample — ideal
+MXU work. We tile over the batch: each grid step loads a [BT, F, D] block
+of feature vectors into VMEM, computes the [F, F] Gram matrix per sample
+on the MXU, and writes the upper-triangular entries using a precomputed
+(static) index mask so no gather hits the hot loop.
+
+VMEM footprint per grid step (defaults BT=32, F=27, D=16, f32):
+  in 32·27·16·4 ≈ 55 KiB, gram 32·27·27·4 ≈ 93 KiB, out 32·351·4 ≈ 45 KiB
+  → ≈ 193 KiB ≪ 16 MiB VMEM; MXU sees 27×16 @ 16×27 matmuls batched 32×.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against ``ref.py`` and real-TPU
+performance is estimated analytically (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dot_interact_kernel(feats_ref, out_ref, *, iu, ju):
+    """One batch tile: Gram matrix + static upper-triangle selection."""
+    feats = feats_ref[...]  # [BT, F, D]
+    # MXU: batched feats @ featsᵀ.
+    gram = jax.lax.dot_general(
+        feats,
+        feats,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )  # [BT, F, F]
+    # Static index lists → compile-time slice selection, no runtime gather.
+    cols = [gram[:, i, j] for i, j in zip(iu, ju)]
+    out_ref[...] = jnp.stack(cols, axis=1)
+
+
+def _dot_interaction_pallas(feats: jnp.ndarray, block_b: int) -> jnp.ndarray:
+    """Pairwise interactions of [B, F, D] → [B, F(F-1)/2] via Pallas."""
+    b, f, d = feats.shape
+    npairs = (f * (f - 1)) // 2
+    iu, ju = [], []
+    for i in range(f):
+        for j in range(i + 1, f):
+            iu.append(i)
+            ju.append(j)
+    iu, ju = tuple(iu), tuple(ju)
+
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"batch {b} not divisible by tile {block_b}"
+    grid = (b // block_b,)
+
+    return pl.pallas_call(
+        functools.partial(_dot_interact_kernel, iu=iu, ju=ju),
+        out_shape=jax.ShapeDtypeStruct((b, npairs), feats.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b, npairs), lambda i: (i, 0)),
+        interpret=True,
+    )(feats)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def dot_interaction(feats: jnp.ndarray, block_b: int = 32) -> jnp.ndarray:
+    """Pairwise dot interactions with a Pallas forward pass.
+
+    Pallas `interpret=True` calls do not support reverse-mode autodiff in
+    this JAX version, so the backward pass uses the (mathematically
+    identical) reference formulation via `jax.vjp` — the standard
+    custom-VJP pattern for Pallas kernels.
+    """
+    return _dot_interaction_pallas(feats, block_b)
+
+
+def _di_fwd(feats, block_b):
+    return _dot_interaction_pallas(feats, block_b), feats
+
+
+def _di_bwd(_block_b, feats, g):
+    from compile.kernels import ref
+
+    _, vjp = jax.vjp(ref.dot_interaction_ref, feats)
+    return vjp(g)
+
+
+dot_interaction.defvjp(_di_fwd, _di_bwd)
+
+
+def vmem_bytes(block_b: int, f: int, d: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint per grid step (DESIGN.md §Perf)."""
+    feats = block_b * f * d * dtype_bytes
+    gram = block_b * f * f * dtype_bytes
+    out = block_b * ((f * (f - 1)) // 2) * dtype_bytes
+    return feats + gram + out

@@ -1,0 +1,108 @@
+"""Pallas kernel: fused dense layer (matmul + bias + ReLU) for the DLRM
+MLP stacks (L1).
+
+Hardware adaptation (DESIGN.md §6): instead of porting a CUDA GEMM, the
+layer is tiled for the MXU — [BM, K] × [K, BN] blocks staged through VMEM
+with the bias add and activation fused into the epilogue so the
+activation tensor never round-trips to HBM between ops (the same fusion
+motivation as the paper's FPGA operator fusion, applied to the trainer).
+
+Grid is (M/BM, N/BN); K is kept whole per block (DLRM layer widths are
+small: K ≤ 512), so each grid step is a single MXU pass: VMEM per step at
+BM=128, BN=128, K=512, f32 ≈ 128·512·4 + 512·128·4 + 128·128·4 ≈ 576 KiB.
+
+``interpret=True``: see dot_interact.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]  # [BM, K]
+    w = w_ref[...]  # [K, BN]
+    b = b_ref[...]  # [BN]
+    y = jax.lax.dot_general(
+        x, w, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    y = y + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _mlp_layer_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    relu: bool,
+    block_m: int,
+    block_n: int,
+) -> jnp.ndarray:
+    """Fused ``act(x @ w + b)`` via Pallas. x: [M, K], w: [K, N], b: [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    assert m % bm == 0 and n % bn == 0, f"({m},{n}) not tiled by ({bm},{bn})"
+
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_mlp_kernel, relu=relu),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def mlp_layer(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    relu: bool = True,
+    block_m: int = 128,
+    block_n: int = 128,
+) -> jnp.ndarray:
+    """Fused dense layer with a Pallas forward pass; the backward pass uses
+    the reference formulation via `jax.vjp` (see dot_interact.py)."""
+    return _mlp_layer_pallas(x, w, b, relu, block_m, block_n)
+
+
+def _mlp_fwd(x, w, b, relu, block_m, block_n):
+    return _mlp_layer_pallas(x, w, b, relu, block_m, block_n), (x, w, b)
+
+
+def _mlp_bwd(relu, _bm, _bn, res, g):
+    from compile.kernels import ref
+
+    x, w, b = res
+    _, vjp = jax.vjp(lambda x, w, b: ref.mlp_layer_ref(x, w, b, relu), x, w, b)
+    return vjp(g)
+
+
+mlp_layer.defvjp(_mlp_fwd, _mlp_bwd)
+
+
+def vmem_bytes(block_m: int, block_n: int, k: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint per grid step (DESIGN.md §Perf)."""
+    return (block_m * k + k * block_n + block_n + block_m * block_n) * dtype_bytes
+
+
+def mxu_utilization(block_m: int, block_n: int, k: int) -> float:
+    """Fraction of 128×128 MXU tiles doing useful work for one step."""
+    pad = lambda v: -(-v // 128) * 128
+    useful = block_m * block_n * k
+    padded = pad(block_m) * pad(block_n) * pad(k)
+    return useful / padded

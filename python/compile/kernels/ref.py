@@ -1,0 +1,39 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has a reference implementation here;
+pytest (and Hypothesis sweeps) assert elementwise closeness. These
+references are also what the DLRM model uses when ``use_pallas=False``.
+"""
+
+import jax.numpy as jnp
+
+
+def dot_interaction_ref(feats: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise dot-product feature interaction (DLRM's hot op).
+
+    Args:
+      feats: [B, F, D] — F feature vectors (bottom-MLP output + embeddings).
+
+    Returns:
+      [B, F*(F-1)//2] — the strictly-upper-triangular entries of the
+      per-sample Gram matrix feats @ featsᵀ.
+    """
+    b, f, _ = feats.shape
+    gram = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(f, k=1)
+    return gram[:, iu, ju].reshape(b, (f * (f - 1)) // 2)
+
+
+def mlp_layer_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, relu: bool = True) -> jnp.ndarray:
+    """Fused dense layer: ``act(x @ w + b)``.
+
+    Args:
+      x: [B, I]; w: [I, O]; b: [O].
+    """
+    y = x @ w + b[None, :]
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def embedding_gather_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Embedding lookup: table [V, D], idx [B, F] → [B, F, D]."""
+    return table[idx]

@@ -1,0 +1,165 @@
+"""L2: DLRM forward/backward in JAX, calling the L1 Pallas kernels.
+
+The model follows Naumov et al.'s DLRM: a bottom MLP embeds the dense
+features, sparse features index one shared embedding table (one logical
+table per feature, stored stacked with per-feature row offsets), the
+pairwise dot-interaction crosses all feature vectors, and a top MLP
+produces the click logit trained with BCE.
+
+The train step is written over a **flat f32 state vector** (all params
+concatenated + one trailing loss slot) so the Rust runtime can keep a
+single device-resident buffer and re-feed it across steps (`execute_b`)
+with zero host traffic — see rust/src/runtime/mod.rs.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import dot_interact, mlp, ref
+
+
+@dataclass(frozen=True)
+class DlrmConfig:
+    """Model + training hyperparameters (mirrored into artifacts/meta.txt)."""
+
+    batch: int = 256
+    n_dense: int = 13
+    n_sparse: int = 26
+    vocab: int = 4000          # rows per sparse feature
+    embed_dim: int = 16
+    bot_hidden: int = 64
+    top_hidden: int = 64
+    lr: float = 0.05
+    use_pallas: bool = True
+
+    @property
+    def emb_rows(self) -> int:
+        return self.n_sparse * self.vocab
+
+    @property
+    def n_pairs(self) -> int:
+        f = self.n_sparse + 1  # embeddings + bottom-MLP vector
+        return (f * (f - 1)) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.embed_dim + self.n_pairs
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Name → shape, in flat-state layout order."""
+        return [
+            ("emb", (self.emb_rows, self.embed_dim)),
+            ("w_bot1", (self.n_dense, self.bot_hidden)),
+            ("b_bot1", (self.bot_hidden,)),
+            ("w_bot2", (self.bot_hidden, self.embed_dim)),
+            ("b_bot2", (self.embed_dim,)),
+            ("w_top1", (self.top_in, self.top_hidden)),
+            ("b_top1", (self.top_hidden,)),
+            ("w_top2", (self.top_hidden, 1)),
+            ("b_top2", (1,)),
+        ]
+
+    def param_count(self) -> int:
+        import math
+
+        return sum(math.prod(s) for _, s in self.param_specs())
+
+    def state_len(self) -> int:
+        return self.param_count() + 1  # + loss slot
+
+
+def init_params(cfg: DlrmConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Glorot-ish init (the Rust runtime reproduces the same scheme)."""
+    params = {}
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.startswith("b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "emb":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.05
+        else:
+            scale = (2.0 / (shape[0] + shape[-1])) ** 0.5
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * scale
+    return params
+
+
+def flatten_params(cfg: DlrmConfig, params: Dict[str, jnp.ndarray], loss: jnp.ndarray) -> jnp.ndarray:
+    """Params + loss slot → flat f32 state."""
+    parts = [params[name].reshape(-1) for name, _ in cfg.param_specs()]
+    parts.append(jnp.reshape(loss.astype(jnp.float32), (1,)))
+    return jnp.concatenate(parts)
+
+
+def unflatten_params(cfg: DlrmConfig, state: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Flat state → params dict (loss slot ignored)."""
+    params = {}
+    off = 0
+    for name, shape in cfg.param_specs():
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = jax.lax.dynamic_slice_in_dim(state, off, n).reshape(shape)
+        off += n
+    return params
+
+
+def forward(cfg: DlrmConfig, params: Dict[str, jnp.ndarray], dense: jnp.ndarray, sparse: jnp.ndarray) -> jnp.ndarray:
+    """DLRM forward pass → logits [B]."""
+    mlp_layer = mlp.mlp_layer if cfg.use_pallas else ref.mlp_layer_ref
+    interact = dot_interact.dot_interaction if cfg.use_pallas else ref.dot_interaction_ref
+
+    # Bottom MLP: dense [B, n_dense] → [B, D].
+    h = mlp_layer(dense, params["w_bot1"], params["b_bot1"], True)
+    bottom = mlp_layer(h, params["w_bot2"], params["b_bot2"], True)
+
+    # Embedding lookup with per-feature row offsets into the stacked table.
+    offsets = (jnp.arange(cfg.n_sparse, dtype=jnp.int32) * cfg.vocab)[None, :]
+    flat_idx = sparse + offsets  # [B, F]
+    emb = params["emb"][flat_idx]  # [B, F, D]
+
+    # Interaction over [bottom | embeddings].
+    feats = jnp.concatenate([bottom[:, None, :], emb], axis=1)  # [B, F+1, D]
+    pairs = interact(feats)  # [B, P]
+
+    top = jnp.concatenate([bottom, pairs], axis=1)  # [B, top_in]
+    h = mlp_layer(top, params["w_top1"], params["b_top1"], True)
+    logits = ref.mlp_layer_ref(h, params["w_top2"], params["b_top2"], relu=False)
+    return logits[:, 0]
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable binary cross-entropy with logits."""
+    return jnp.mean(
+        jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def loss_fn(cfg: DlrmConfig, params, dense, sparse, labels) -> jnp.ndarray:
+    return bce_loss(forward(cfg, params, dense, sparse), labels)
+
+
+def train_step(cfg: DlrmConfig, state: jnp.ndarray, dense: jnp.ndarray, sparse: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """One SGD step over the flat state; returns the new flat state with
+    the loss written into the trailing slot."""
+    params = unflatten_params(cfg, state)
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, dense, sparse, labels))(params)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g, params, grads)
+    return flatten_params(cfg, new_params, loss)
+
+
+def read_loss(cfg: DlrmConfig, state: jnp.ndarray) -> jnp.ndarray:
+    """Extract the loss slot (lowered into its own tiny executable)."""
+    return state[cfg.state_len() - 1]
+
+
+def batch_specs(cfg: DlrmConfig):
+    """ShapeDtypeStructs of the train-step arguments (after the state)."""
+    return (
+        jax.ShapeDtypeStruct((cfg.state_len(),), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.n_dense), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.batch, cfg.n_sparse), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.batch,), jnp.float32),
+    )

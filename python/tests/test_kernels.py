@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py),
+including Hypothesis sweeps over shapes and value ranges."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dot_interact, mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestDotInteraction:
+    def test_matches_ref_basic(self):
+        feats = rand(0, 64, 27, 16)
+        got = dot_interact.dot_interaction(feats)
+        want = ref.dot_interaction_ref(feats)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_tile(self):
+        feats = rand(1, 32, 5, 8)
+        got = dot_interact.dot_interaction(feats)
+        assert got.shape == (32, 10)
+        np.testing.assert_allclose(got, ref.dot_interaction_ref(feats), rtol=1e-5)
+
+    def test_multiple_tiles(self):
+        feats = rand(2, 128, 9, 4)
+        got = dot_interact.dot_interaction(feats, block_b=32)
+        np.testing.assert_allclose(got, ref.dot_interaction_ref(feats), rtol=1e-5, atol=1e-5)
+
+    def test_gradients_flow(self):
+        feats = rand(3, 32, 6, 8)
+        g_pallas = jax.grad(lambda f: jnp.sum(dot_interact.dot_interaction(f) ** 2))(feats)
+        g_ref = jax.grad(lambda f: jnp.sum(ref.dot_interaction_ref(f) ** 2))(feats)
+        np.testing.assert_allclose(g_pallas, g_ref, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b_tiles=st.integers(1, 4),
+        f=st.integers(2, 12),
+        d=st.sampled_from([1, 4, 8, 16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, b_tiles, f, d, seed):
+        b = 16 * b_tiles
+        feats = jax.random.normal(jax.random.PRNGKey(seed), (b, f, d), jnp.float32)
+        got = dot_interact.dot_interaction(feats, block_b=16)
+        want = ref.dot_interaction_ref(feats)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_vmem_estimate_within_budget(self):
+        # Default DLRM tile must sit far below the 16 MiB VMEM budget.
+        assert dot_interact.vmem_bytes(32, 27, 16) < 1 << 20
+
+
+class TestMlpLayer:
+    def test_matches_ref_with_relu(self):
+        x, w, b = rand(0, 128, 32), rand(1, 32, 64), rand(2, 64)
+        got = mlp.mlp_layer(x, w, b, True)
+        np.testing.assert_allclose(got, ref.mlp_layer_ref(x, w, b, True), rtol=1e-5, atol=1e-5)
+
+    def test_matches_ref_no_relu(self):
+        x, w, b = rand(3, 64, 16), rand(4, 16, 8), rand(5, 8)
+        got = mlp.mlp_layer(x, w, b, False)
+        np.testing.assert_allclose(got, ref.mlp_layer_ref(x, w, b, False), rtol=1e-5, atol=1e-5)
+        assert bool(jnp.any(got < 0))  # negatives survive without relu
+
+    def test_relu_clips_negatives(self):
+        x, w, b = rand(6, 32, 8), rand(7, 8, 4), rand(8, 4)
+        got = mlp.mlp_layer(x, w, b, True)
+        assert bool(jnp.all(got >= 0))
+
+    def test_tiling_grid(self):
+        x, w, b = rand(9, 256, 48), rand(10, 48, 256), rand(11, 256)
+        got = mlp.mlp_layer(x, w, b, True, block_m=128, block_n=128)
+        np.testing.assert_allclose(got, ref.mlp_layer_ref(x, w, b, True), rtol=1e-4, atol=1e-4)
+
+    def test_gradients_flow(self):
+        x, w, b = rand(12, 32, 8), rand(13, 8, 4), rand(14, 4)
+        f_pallas = lambda w: jnp.sum(mlp.mlp_layer(x, w, b, True) ** 2)
+        f_ref = lambda w: jnp.sum(ref.mlp_layer_ref(x, w, b, True) ** 2)
+        np.testing.assert_allclose(
+            jax.grad(f_pallas)(w), jax.grad(f_ref)(w), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m_tiles=st.integers(1, 4),
+        k=st.integers(1, 64),
+        n=st.sampled_from([1, 4, 16, 64]),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_shape_sweep(self, m_tiles, k, n, relu, seed):
+        m = 32 * m_tiles
+        key = jax.random.PRNGKey(seed)
+        kx, kw, kb = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32)
+        b = jax.random.normal(kb, (n,), jnp.float32)
+        got = mlp.mlp_layer(x, w, b, relu, block_m=32, block_n=min(n, 128))
+        np.testing.assert_allclose(got, ref.mlp_layer_ref(x, w, b, relu), rtol=1e-4, atol=1e-4)
+
+    def test_mxu_utilization_model(self):
+        assert mlp.mxu_utilization(128, 128, 128) == 1.0
+        assert mlp.mxu_utilization(128, 1, 128) < 0.01
+
+
+class TestEmbeddingRef:
+    def test_gather_shape(self):
+        table = rand(0, 100, 8)
+        idx = jnp.array([[0, 1], [99, 50]], jnp.int32)
+        out = ref.embedding_gather_ref(table, idx)
+        assert out.shape == (2, 2, 8)
+        np.testing.assert_allclose(out[1, 0], table[99])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_dtype_passthrough(dtype):
+    feats = rand(0, 32, 4, 8).astype(dtype)
+    assert dot_interact.dot_interaction(feats).dtype == dtype

@@ -1,0 +1,145 @@
+"""L2 correctness: DLRM model shapes, flat-state round-trip, training
+dynamics, and Pallas-vs-reference agreement of the full forward pass."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    DlrmConfig,
+    batch_specs,
+    bce_loss,
+    flatten_params,
+    forward,
+    init_params,
+    loss_fn,
+    read_loss,
+    train_step,
+    unflatten_params,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = DlrmConfig(batch=32, n_dense=4, n_sparse=3, vocab=50, embed_dim=8,
+                 bot_hidden=16, top_hidden=16)
+
+
+def make_batch(cfg, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kd, ks, kl = jax.random.split(key, 3)
+    dense = jax.random.normal(kd, (cfg.batch, cfg.n_dense), jnp.float32)
+    sparse = jax.random.randint(ks, (cfg.batch, cfg.n_sparse), 0, cfg.vocab, jnp.int32)
+    labels = (jax.random.uniform(kl, (cfg.batch,)) < 0.3).astype(jnp.float32)
+    return dense, sparse, labels
+
+
+def test_param_specs_count():
+    assert CFG.param_count() == sum(
+        int(np.prod(s)) for _, s in CFG.param_specs()
+    )
+    assert CFG.state_len() == CFG.param_count() + 1
+
+
+def test_flatten_roundtrip():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    state = flatten_params(CFG, params, jnp.float32(3.5))
+    assert state.shape == (CFG.state_len(),)
+    back = unflatten_params(CFG, state)
+    for name, _ in CFG.param_specs():
+        np.testing.assert_array_equal(back[name], params[name])
+    assert state[-1] == 3.5
+
+
+def test_forward_shapes():
+    params = init_params(CFG, jax.random.PRNGKey(1))
+    dense, sparse, _ = make_batch(CFG)
+    logits = forward(CFG, params, dense, sparse)
+    assert logits.shape == (CFG.batch,)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_pallas_matches_reference_forward():
+    cfg_p = CFG
+    cfg_r = DlrmConfig(**{**cfg_p.__dict__, "use_pallas": False})
+    params = init_params(cfg_p, jax.random.PRNGKey(2))
+    dense, sparse, _ = make_batch(cfg_p)
+    lp = forward(cfg_p, params, dense, sparse)
+    lr_ = forward(cfg_r, params, dense, sparse)
+    np.testing.assert_allclose(lp, lr_, rtol=1e-4, atol=1e-4)
+
+
+def test_bce_loss_known_values():
+    logits = jnp.array([0.0, 100.0, -100.0])
+    labels = jnp.array([0.5, 1.0, 0.0])
+    # log(2) for the first, ~0 for the saturated ones.
+    assert abs(float(bce_loss(logits, labels)) - float(jnp.log(2.0)) / 3) < 1e-4
+
+
+def test_loss_decreases_over_steps():
+    cfg = DlrmConfig(**{**CFG.__dict__, "lr": 0.5})
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    state = flatten_params(cfg, params, jnp.float32(0))
+    step = jax.jit(functools.partial(train_step, cfg))
+    dense, sparse, labels = make_batch(cfg, seed=7)
+    losses = []
+    for _ in range(80):
+        state = step(state, dense, sparse, labels)
+        losses.append(float(read_loss(cfg, state)))
+    # Overfitting a fixed batch must drive the loss down substantially.
+    assert losses[-1] < losses[0] * 0.8, losses[:3] + losses[-3:]
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_train_step_only_touches_used_embeddings():
+    params = init_params(CFG, jax.random.PRNGKey(4))
+    state = flatten_params(CFG, params, jnp.float32(0))
+    dense, sparse, labels = make_batch(CFG, seed=9)
+    new_state = train_step(CFG, state, dense, sparse, labels)
+    new_params = unflatten_params(CFG, new_state)
+    # Embedding rows never indexed must be untouched by the sparse update.
+    offsets = np.arange(CFG.n_sparse) * CFG.vocab
+    used = set((np.asarray(sparse) + offsets[None, :]).reshape(-1).tolist())
+    emb_old = np.asarray(params["emb"])
+    emb_new = np.asarray(new_params["emb"])
+    untouched = [r for r in range(CFG.emb_rows) if r not in used]
+    np.testing.assert_array_equal(emb_new[untouched], emb_old[untouched])
+    # And at least one used row changed.
+    assert any(not np.allclose(emb_new[r], emb_old[r]) for r in used)
+
+
+def test_read_loss_slot():
+    params = init_params(CFG, jax.random.PRNGKey(5))
+    state = flatten_params(CFG, params, jnp.float32(1.25))
+    assert float(read_loss(CFG, state)) == 1.25
+
+
+def test_batch_specs_shapes():
+    s, d, sp, l = batch_specs(CFG)
+    assert s.shape == (CFG.state_len(),)
+    assert d.shape == (CFG.batch, CFG.n_dense)
+    assert sp.shape == (CFG.batch, CFG.n_sparse)
+    assert sp.dtype == jnp.int32
+    assert l.shape == (CFG.batch,)
+
+
+def test_deterministic_step():
+    params = init_params(CFG, jax.random.PRNGKey(6))
+    state = flatten_params(CFG, params, jnp.float32(0))
+    dense, sparse, labels = make_batch(CFG, seed=11)
+    a = train_step(CFG, state, dense, sparse, labels)
+    b = train_step(CFG, state, dense, sparse, labels)
+    np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("vocab", [10, 100])
+def test_config_scaling(vocab):
+    cfg = DlrmConfig(batch=32, n_dense=2, n_sparse=2, vocab=vocab, embed_dim=4,
+                     bot_hidden=8, top_hidden=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    dense, sparse, labels = make_batch(cfg)
+    sparse = sparse % vocab
+    loss = loss_fn(cfg, params, dense, sparse, labels)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,76 @@
+//! Fig. 11 — micro-benchmark I: throughput and latency vs transfer size
+//! for host DMA, CPU→FPGA→CPU, GPU→FPGA→GPU, and RoCEv2 RDMA.
+//! Paper plateaus: host ~12–14 GB/s, loopback ~12–13, GPU ~7, RDMA ~11–12;
+//! latency floors ~0.6–1.5 µs (host) and ~8–10 µs (RDMA).
+
+use piperec::bench_harness::{rate, secs, Table};
+use piperec::memsys::{ChannelModel, Path};
+
+fn main() {
+    let sizes: Vec<u64> = (6..=26).step_by(2).map(|p| 1u64 << p).collect();
+    let paths = [
+        Path::HostDmaRead,
+        Path::HostDmaWrite,
+        Path::CpuFpgaCpu,
+        Path::GpuFpgaGpu,
+        Path::RdmaRead,
+        Path::RdmaWrite,
+    ];
+
+    let mut thr = Table::new(
+        "Fig. 11 (top) — throughput vs transfer size",
+        &["size", "hostR", "hostW", "CPU⇄FPGA", "GPU⇄FPGA", "rdmaR", "rdmaW"],
+    );
+    for &s in &sizes {
+        let mut row = vec![piperec::util::fmt_bytes(s)];
+        for p in paths {
+            row.push(rate(ChannelModel::of(p).effective_bw(s)));
+        }
+        thr.row(row);
+    }
+    thr.print();
+
+    let mut lat = Table::new(
+        "Fig. 11 (bottom) — latency vs transfer size",
+        &["size", "hostR", "hostW", "CPU⇄FPGA", "GPU⇄FPGA", "rdmaR", "rdmaW"],
+    );
+    for &s in &sizes {
+        let mut row = vec![piperec::util::fmt_bytes(s)];
+        for p in paths {
+            row.push(secs(ChannelModel::of(p).time(s)));
+        }
+        lat.row(row);
+    }
+    lat.print();
+
+    let mut sums = Table::new(
+        "plateau + floor vs paper",
+        &["path", "plateau", "paper", "floor", "paper floor"],
+    );
+    let paper = [
+        ("host-DMA read", "12–14 GB/s", "0.6–1.5 µs"),
+        ("host-DMA write", "12–14 GB/s", "0.6–1.5 µs"),
+        ("CPU→FPGA→CPU", "12–13 GB/s", "~1.5 µs"),
+        ("GPU→FPGA→GPU", "~7 GB/s", "~2 µs"),
+        ("RDMA read", "11–12 GB/s", "8–10 µs"),
+        ("RDMA write", "11–12 GB/s", "8–10 µs"),
+    ];
+    for (p, (label, bw, fl)) in paths.iter().zip(paper) {
+        let m = ChannelModel::of(*p);
+        sums.row(vec![
+            label.into(),
+            rate(m.effective_bw(64 << 20)),
+            bw.into(),
+            secs(m.time(64)),
+            fl.into(),
+        ]);
+    }
+    sums.print();
+    println!("\n→ batch into MiB-scale chunks and double-buffer (paper conclusion):");
+    let m = ChannelModel::of(Path::RdmaRead);
+    println!(
+        "  256 MiB serial 64K-chunks: {}  vs chunked 4MiB depth-2: {}",
+        secs((0..4096).map(|_| m.time(64 * 1024)).sum::<f64>()),
+        secs(m.time_chunked(256 << 20, 4 << 20, 2)),
+    );
+}

@@ -1,0 +1,104 @@
+//! Fig. 12 — micro-benchmark II: single-thread per-feature pipeline time.
+//! Four pipelines (LoadOnly / Stateless / VocabGen / VocabMap) × feature
+//! types (Dense, Sparse, Small-vocab, Large-vocab).
+//!
+//! Two columns per cell: the *measured* Rust CPU engine on this machine
+//! (scaled rows) and the paper-calibrated pandas model at 45 M rows. The
+//! paper's observable is the shape: LoadOnly ≪ Stateless ≪ VocabGen <
+//! VocabMap(large).
+
+use piperec::baselines::cpu_pandas::{costs, PandasModel};
+use piperec::bench_harness::{secs, BenchCtx, Table};
+use piperec::dataio::synth::{generate, SynthConfig};
+use piperec::etl::column::Column;
+use piperec::etl::ops::vocab::{vocab_gen, vocab_map_oov};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::util::timer::time_it;
+
+fn main() {
+    let ctx = BenchCtx::from_env();
+    let rows = ctx.scale(2_000_000.0, 100_000.0) as usize;
+    let schema = Schema::tabular("f", 1, 1, 600_000);
+    let raw = generate(&schema, rows, 42, &SynthConfig::default());
+    let dense = raw.get("f_i0").unwrap().clone();
+    let sparse_hex = raw.get("f_c0").unwrap().clone();
+
+    // Pre-derive the integer sparse stream (the chain input for vocab ops).
+    let ints = OpSpec::Hex2Int.apply(&[&sparse_hex], None).unwrap();
+    let small = OpSpec::Modulus { m: 8192 }.apply(&[&ints], None).unwrap();
+    let large = OpSpec::Modulus { m: 512 * 1024 }.apply(&[&ints], None).unwrap();
+
+    let model = PandasModel::default();
+    let paper_rows = 45_000_000u64;
+
+    let mut t = Table::new(
+        format!("Fig. 12 — single-thread per-feature time ({rows} rows measured; pandas model at 45M)"),
+        &["feature", "pipeline", "measured (rust)", "pandas model"],
+    );
+
+    // LoadOnly: a full pass over the column.
+    let (_, load_d) = time_it(|| {
+        std::hint::black_box(dense.as_f32().unwrap().iter().copied().sum::<f32>())
+    });
+    t.row(vec![
+        "Dense".into(),
+        "LoadOnly".into(),
+        secs(load_d),
+        secs(model.op_seconds("LoadOnly", paper_rows)),
+    ]);
+
+    // Stateless dense: Clamp + Logarithm.
+    let (_, st_d) = time_it(|| {
+        let c = OpSpec::Clamp { lo: 0.0, hi: f32::MAX }.apply(&[&dense], None).unwrap();
+        std::hint::black_box(OpSpec::Logarithm.apply(&[&c], None).unwrap());
+    });
+    t.row(vec![
+        "Dense".into(),
+        "Stateless".into(),
+        secs(st_d),
+        secs(model.op_seconds("Clamp", paper_rows) + model.op_seconds("Logarithm", paper_rows)),
+    ]);
+
+    // Stateless sparse: Hex2Int + Modulus.
+    let (_, st_s) = time_it(|| {
+        let h = OpSpec::Hex2Int.apply(&[&sparse_hex], None).unwrap();
+        std::hint::black_box(OpSpec::Modulus { m: 1 << 22 }.apply(&[&h], None).unwrap());
+    });
+    t.row(vec![
+        "Sparse".into(),
+        "Stateless".into(),
+        secs(st_s),
+        secs(model.op_seconds("Hex2Int", paper_rows) + model.op_seconds("Modulus", paper_rows)),
+    ]);
+
+    // VocabGen / VocabMap, small and large.
+    for (label, col, card, gen_key, map_key) in [
+        ("Small", &small, 8192usize, "VocabGen-8K", "VocabMap-8K"),
+        ("Large", &large, 512 * 1024, "VocabGen-512K", "VocabMap-512K"),
+    ] {
+        let data = col.as_i64().unwrap();
+        let (table, gen_t) = time_it(|| vocab_gen(data, card));
+        t.row(vec![
+            label.into(),
+            "VocabGen".into(),
+            secs(gen_t),
+            secs(model.op_seconds(gen_key, paper_rows)),
+        ]);
+        let (_, map_t) = time_it(|| std::hint::black_box(vocab_map_oov(data, &table, 0)));
+        t.row(vec![
+            label.into(),
+            "VocabMap".into(),
+            secs(map_t),
+            secs(model.op_seconds(map_key, paper_rows)),
+        ]);
+        let _ = Column::i64(vec![]);
+    }
+    t.print();
+
+    println!("\nshape check (pandas model): LoadOnly {} ≪ stateless {} ≪ VocabMap-512K {}",
+        secs(costs::LOAD_ONLY * paper_rows as f64),
+        secs((costs::HEX2INT + costs::MODULUS) * paper_rows as f64),
+        secs(costs::VOCAB_MAP_512K * paper_rows as f64),
+    );
+}

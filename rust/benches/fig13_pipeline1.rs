@@ -1,0 +1,57 @@
+//! Fig. 13 — Pipeline I (stateless) latency across platforms and
+//! datasets. Paper: PipeRec beats pandas by 85×/87× on D-I/D-II; on
+//! D-III both GPU and PipeRec are SSD-bound (~1.2 GB/s), with PR-T the
+//! theoretical lower bound without the I/O limit.
+
+use piperec::bench_harness::experiments::{latencies, paper_latency, render_pipeline_figure};
+use piperec::bench_harness::{secs, Table};
+use piperec::dataio::dataset::DatasetSpec;
+use piperec::etl::pipelines::PipelineKind;
+
+fn main() {
+    render_pipeline_figure("Fig. 13 — Pipeline I latency (paper scale)", PipelineKind::I).print();
+
+    // Beam cluster sweep (Fig. 13's x-axis for the Beam series).
+    let mut beam = Table::new(
+        "Fig. 13 — Apache Beam cluster sweep (Dataset-I, P-I)",
+        &["vCPUs", "latency"],
+    );
+    let r = latencies(PipelineKind::I, &DatasetSpec::dataset_i(1.0));
+    for (v, s) in &r.beam {
+        beam.row(vec![v.to_string(), secs(*s)]);
+    }
+    beam.print();
+
+    // vs-paper summary.
+    let mut cmp = Table::new(
+        "vs paper anchors (D-I / D-II)",
+        &["dataset", "platform", "measured", "paper"],
+    );
+    for spec in [DatasetSpec::dataset_i(1.0), DatasetSpec::dataset_ii(1.0)] {
+        let got = latencies(PipelineKind::I, &spec);
+        let paper = paper_latency(PipelineKind::I, &spec).unwrap();
+        for (name, g, p) in [
+            ("pandas", got.pandas, paper[0]),
+            ("RTX 3090", got.rtx3090, paper[1]),
+            ("A100", got.a100, paper[2]),
+            ("PipeRec", got.piperec, paper[3]),
+        ] {
+            cmp.row(vec![spec.name.into(), name.into(), secs(g), format!("{p} s")]);
+        }
+    }
+    cmp.print();
+
+    let d1 = latencies(PipelineKind::I, &DatasetSpec::dataset_i(1.0));
+    let d2 = latencies(PipelineKind::I, &DatasetSpec::dataset_ii(1.0));
+    println!(
+        "\nspeedup vs pandas: D-I {:.0}× (paper 85×), D-II {:.0}× (paper 87×)",
+        d1.pandas / d1.piperec,
+        d2.pandas / d2.piperec
+    );
+    let d3 = latencies(PipelineKind::I, &DatasetSpec::dataset_iii(1.0));
+    println!(
+        "Dataset-III: PR-R {} (SSD-bound), PR-T {} (paper: PR-T = 105 s)",
+        secs(d3.piperec),
+        secs(d3.piperec_theoretical)
+    );
+}

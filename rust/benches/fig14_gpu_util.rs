@@ -1,0 +1,62 @@
+//! Fig. 14 — normalized GPU utilization during end-to-end training:
+//! CPU–GPU fluctuates between 0% and ~80%; PipeRec's FPGA–GPU path is
+//! stable and near-saturated (paper: 64–91% across workloads).
+
+use piperec::baselines::{TrainerModel, CPU_ETL_BW_12CORE};
+use piperec::bench_harness::Table;
+use piperec::coordinator::{cpu_gpu_config, piperec_config, simulate_overlap};
+
+fn main() {
+    let row_bytes = 160u64;
+    let batch_rows = 4096usize;
+    let batch_bytes = batch_rows as u64 * row_bytes;
+    let trainer = TrainerModel::a100_dlrm(row_bytes);
+    let train_s = trainer.step_seconds(batch_rows);
+
+    // CPU–GPU: ETL ~10 MB/s with irregular delivery.
+    let cpu_etl_s = batch_bytes as f64 / CPU_ETL_BW_12CORE;
+    let cpu = simulate_overlap(&cpu_gpu_config(600, cpu_etl_s, train_s, batch_bytes));
+
+    // PipeRec: line-rate ETL with P2P staging and double buffering.
+    let pr_etl_s = batch_bytes as f64 / 12.0e9;
+    let pr = simulate_overlap(&piperec_config(600, pr_etl_s, train_s, batch_bytes));
+
+    let mut t = Table::new(
+        "Fig. 14 — GPU utilization during training",
+        &["pipeline", "mean util", "min", "max", "stability (CV)", "paper"],
+    );
+    t.row(vec![
+        "CPU–GPU".into(),
+        format!("{:.0}%", cpu.mean_util * 100.0),
+        format!("{:.0}%", cpu.trace.min() * 100.0),
+        format!("{:.0}%", cpu.trace.max() * 100.0),
+        format!("{:.2}", cpu.trace.cv()),
+        "fluctuates 0–80%".into(),
+    ]);
+    t.row(vec![
+        "PipeRec (FPGA–GPU)".into(),
+        format!("{:.0}%", pr.mean_util * 100.0),
+        format!("{:.0}%", pr.trace.min() * 100.0),
+        format!("{:.0}%", pr.trace.max() * 100.0),
+        format!("{:.2}", pr.trace.cv()),
+        "stable, near-saturated".into(),
+    ]);
+    t.print();
+
+    println!("\nutilization traces (one char ≈ 1% of the run):");
+    println!("  CPU–GPU : {}", cpu.trace.sparkline(72));
+    println!("  PipeRec : {}", pr.trace.sparkline(72));
+
+    // The paper's 64–91% band appears when ETL line rate is within ~2× of
+    // trainer consumption (e.g. Pipeline III's II=6 dataflow).
+    let mut band = Table::new(
+        "paper band: util vs ETL/trainer rate ratio",
+        &["ETL time / train time", "mean util"],
+    );
+    for ratio in [0.25, 0.5, 0.8, 1.0, 1.2] {
+        let r = simulate_overlap(&piperec_config(400, train_s * ratio, train_s, batch_bytes));
+        band.row(vec![format!("{ratio:.2}"), format!("{:.0}%", r.mean_util * 100.0)]);
+    }
+    band.print();
+    println!("\npaper: 'PipeRec maintains 64–91% GPU utilization'");
+}

@@ -1,0 +1,44 @@
+//! Fig. 15 — Pipeline II (stateful, small 8K vocab) latency across
+//! platforms and datasets. Paper: PipeRec improves over pandas by up to
+//! 32× (D-I) / 40× (D-III); for D-III PipeRec is SSD-read-bound.
+
+use piperec::bench_harness::experiments::{latencies, paper_latency, render_pipeline_figure};
+use piperec::bench_harness::{secs, Table};
+use piperec::dataio::dataset::DatasetSpec;
+use piperec::etl::pipelines::PipelineKind;
+
+fn main() {
+    render_pipeline_figure("Fig. 15 — Pipeline II latency (paper scale)", PipelineKind::II)
+        .print();
+
+    let mut cmp = Table::new(
+        "vs paper anchors",
+        &["dataset", "platform", "measured", "paper"],
+    );
+    for spec in [DatasetSpec::dataset_i(1.0), DatasetSpec::dataset_ii(1.0)] {
+        let got = latencies(PipelineKind::II, &spec);
+        let paper = paper_latency(PipelineKind::II, &spec).unwrap();
+        for (name, g, p) in [
+            ("pandas", got.pandas, paper[0]),
+            ("RTX 3090", got.rtx3090, paper[1]),
+            ("A100", got.a100, paper[2]),
+            ("PipeRec", got.piperec, paper[3]),
+        ] {
+            cmp.row(vec![spec.name.into(), name.into(), secs(g), format!("{p} s")]);
+        }
+    }
+    cmp.print();
+
+    let d1 = latencies(PipelineKind::II, &DatasetSpec::dataset_i(1.0));
+    println!(
+        "\nspeedup vs pandas on D-I: {:.0}× (paper: up to 32×); GPU(A100) vs PipeRec: {:.1}×",
+        d1.pandas / d1.piperec,
+        d1.a100 / d1.piperec
+    );
+    let d3 = latencies(PipelineKind::II, &DatasetSpec::dataset_iii(1.0));
+    println!(
+        "Dataset-III PipeRec: {} (paper: 1280 s, SSD-bound; theoretical {})",
+        secs(d3.piperec),
+        secs(d3.piperec_theoretical)
+    );
+}

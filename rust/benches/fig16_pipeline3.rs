@@ -1,0 +1,59 @@
+//! Fig. 16 — Pipeline III (stateful, large 512K vocab) latency across
+//! platforms and datasets. Paper: 43×/47× over pandas; the GPU's gap
+//! widens with vocabulary size (2.4–17× PipeRec speedup over GPUs);
+//! PipeRec's HBM-resident tables push dataflow II to ≈6.
+
+use piperec::bench_harness::experiments::{latencies, paper_latency, render_pipeline_figure};
+use piperec::bench_harness::{secs, Table};
+use piperec::dataio::dataset::DatasetSpec;
+use piperec::etl::pipelines::PipelineKind;
+
+fn main() {
+    render_pipeline_figure("Fig. 16 — Pipeline III latency (paper scale)", PipelineKind::III)
+        .print();
+
+    let mut cmp = Table::new(
+        "vs paper anchors",
+        &["dataset", "platform", "measured", "paper"],
+    );
+    for spec in [DatasetSpec::dataset_i(1.0), DatasetSpec::dataset_ii(1.0)] {
+        let got = latencies(PipelineKind::III, &spec);
+        let paper = paper_latency(PipelineKind::III, &spec).unwrap();
+        for (name, g, p) in [
+            ("pandas", got.pandas, paper[0]),
+            ("RTX 3090", got.rtx3090, paper[1]),
+            ("A100", got.a100, paper[2]),
+            ("PipeRec", got.piperec, paper[3]),
+        ] {
+            cmp.row(vec![spec.name.into(), name.into(), secs(g), format!("{p} s")]);
+        }
+    }
+    cmp.print();
+
+    // The paper's GPU-vs-PipeRec band: 2.4–17× depending on dataset/vocab.
+    let mut band = Table::new(
+        "GPU vs PipeRec speedup band (paper: 2.4–17×)",
+        &["config", "A100 / PipeRec", "3090 / PipeRec"],
+    );
+    for (spec, kind) in [
+        (DatasetSpec::dataset_i(1.0), PipelineKind::II),
+        (DatasetSpec::dataset_i(1.0), PipelineKind::III),
+        (DatasetSpec::dataset_ii(1.0), PipelineKind::II),
+        (DatasetSpec::dataset_ii(1.0), PipelineKind::III),
+    ] {
+        let r = latencies(kind, &spec);
+        band.row(vec![
+            format!("{} + {}", spec.name, kind.label()),
+            format!("{:.1}×", r.a100 / r.piperec),
+            format!("{:.1}×", r.rtx3090 / r.piperec),
+        ]);
+    }
+    band.print();
+
+    let d1 = latencies(PipelineKind::III, &DatasetSpec::dataset_i(1.0));
+    println!(
+        "\nspeedup vs pandas on D-I: {:.0}× (paper: 43×); vocab cost visible in PR-T {}",
+        d1.pandas / d1.piperec,
+        secs(d1.piperec_theoretical)
+    );
+}

@@ -1,0 +1,103 @@
+//! Hot-path microbenchmarks (§Perf): the L3 code every training byte
+//! crosses — functional operators, the vocabulary table, the packer, and
+//! rcol serialization — measured in wall-clock throughput on this machine.
+//! This is the bench the performance pass iterates against.
+
+use piperec::bench_harness::{bench, rate, BenchCtx, Table};
+use piperec::coordinator::{pack, PackLayout};
+use piperec::dataio::synth::{generate, SynthConfig};
+use piperec::etl::ops::vocab::{vocab_gen, vocab_map_oov};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::pipelines::{build, PipelineKind};
+use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+
+fn main() {
+    let ctx = BenchCtx::from_env();
+    let rows = ctx.scale(1_000_000.0, 50_000.0) as usize;
+    let iters = ctx.iters(5);
+
+    let schema = Schema::tabular("h", 2, 2, 500_000);
+    let raw = generate(&schema, rows, 42, &SynthConfig::default());
+    let dense = raw.get("h_i0").unwrap().clone();
+    let hexes = raw.get("h_c0").unwrap().clone();
+    let ints = OpSpec::Hex2Int.apply(&[&hexes], None).unwrap();
+    let modded = OpSpec::Modulus { m: 512 * 1024 }.apply(&[&ints], None).unwrap();
+
+    let mut t = Table::new(
+        format!("hot-path throughput ({rows} rows, best of {iters})"),
+        &["stage", "throughput", "ns/row"],
+    );
+    let mut add = |name: &str, bytes_per_row: f64, s: piperec::util::stats::Summary| {
+        t.row(vec![
+            name.into(),
+            rate(rows as f64 * bytes_per_row / s.min),
+            format!("{:.1}", s.min * 1e9 / rows as f64),
+        ]);
+    };
+
+    add("Hex2Int", 8.0, bench(1, iters, || {
+        std::hint::black_box(OpSpec::Hex2Int.apply(&[&hexes], None).unwrap());
+    }));
+    add("Modulus", 8.0, bench(1, iters, || {
+        std::hint::black_box(OpSpec::Modulus { m: 1 << 22 }.apply(&[&ints], None).unwrap());
+    }));
+    add("Clamp+Log (dense chain)", 4.0, bench(1, iters, || {
+        let c = OpSpec::Clamp { lo: 0.0, hi: f32::MAX }.apply(&[&dense], None).unwrap();
+        std::hint::black_box(OpSpec::Logarithm.apply(&[&c], None).unwrap());
+    }));
+    add("VocabGen 512K", 8.0, bench(1, iters, || {
+        std::hint::black_box(vocab_gen(modded.as_i64().unwrap(), 512 * 1024));
+    }));
+    let table = vocab_gen(modded.as_i64().unwrap(), 512 * 1024);
+    add("VocabMap 512K", 8.0, bench(1, iters, || {
+        std::hint::black_box(vocab_map_oov(modded.as_i64().unwrap(), &table, 0));
+    }));
+
+    // End-to-end pipeline apply + pack (the producer thread's inner loop).
+    let mut spec = piperec::dataio::dataset::DatasetSpec::dataset_i(0.01);
+    spec.shards = 1;
+    let shard = spec.shard(0, 7);
+    let dag = build(PipelineKind::II, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+    let mut pipe = Pipeline::new(plan);
+    pipe.fit(&shard).unwrap();
+    let layout = PackLayout::of(&pipe.plan.dag).unwrap();
+    let (out, _) = pipe.process(&shard).unwrap();
+    let srows = shard.rows();
+    let rb = spec.row_bytes() as f64;
+
+    let apply = bench(1, iters, || {
+        std::hint::black_box(pipe.process(&shard).unwrap());
+    });
+    t.row(vec![
+        "Pipeline-II apply (full DAG)".into(),
+        rate(srows as f64 * rb / apply.min),
+        format!("{:.1}", apply.min * 1e9 / srows as f64),
+    ]);
+    let packb = bench(1, iters, || {
+        std::hint::black_box(pack(&out, &layout).unwrap());
+    });
+    t.row(vec![
+        "packer".into(),
+        rate(srows as f64 * 160.0 / packb.min),
+        format!("{:.1}", packb.min * 1e9 / srows as f64),
+    ]);
+
+    // rcol serialization.
+    let ser = bench(1, iters, || {
+        let mut buf = Vec::with_capacity(shard.total_bytes() + 1024);
+        piperec::dataio::rcol::write_batch(&mut buf, &shard).unwrap();
+        std::hint::black_box(buf);
+    });
+    t.row(vec![
+        "rcol serialize".into(),
+        rate(shard.total_bytes() as f64 / ser.min),
+        format!("{:.1}", ser.min * 1e9 / srows as f64),
+    ]);
+
+    t.print();
+    println!("\ntargets (§Perf): packer and stateless ops in GB/s territory so the");
+    println!("host functional emulation is never the bottleneck vs the simulated line rate.");
+}

@@ -1,0 +1,75 @@
+//! Table 2 — micro-benchmark III: per-operator runtime on Dataset-I
+//! across platforms (CPU / RTX 3090 / A100 / PipeRec), in seconds.
+//!
+//! CPU and GPU columns come from the calibrated models (paper anchors);
+//! the PipeRec column is the vFPGA timing model: `rows × II / (N × W/row
+//! × f_clk)` per operator at 45 M rows.
+
+use piperec::baselines::{GpuKind, GpuModel, PandasModel};
+use piperec::bench_harness::Table;
+use piperec::etl::ops::{OpSpec, StatePlacement};
+
+/// PipeRec per-operator time at paper scale: the operator streams *all*
+/// features of its type (Table 2 reports whole-dataset costs) through the
+/// 64-byte datapath at the op's II, bounded by host-DMA ingest.
+fn piperec_op_seconds(
+    op: &OpSpec,
+    placement: StatePlacement,
+    rows: u64,
+    bytes_per_val: u64,
+    features: u64,
+) -> f64 {
+    let width: f64 = 64.0;
+    let f_clk = 200.0e6;
+    let util = 0.9;
+    let ii = op.ii_cycles(placement);
+    let bytes = (rows * bytes_per_val * features) as f64;
+    let rate = (width * f_clk * util / ii).min(14.0e9); // host-DMA ceiling
+    bytes / rate
+}
+
+fn main() {
+    let rows = 45_000_000u64;
+    let cpu = PandasModel::default();
+    let g3090 = GpuModel::new(GpuKind::Rtx3090);
+    let a100 = GpuModel::new(GpuKind::A100);
+
+    // (label, op, placement, bytes/val, features, paper [cpu, 3090, a100, piperec]).
+    // Dense ops stream 13 f32 features; Hex2Int streams 26 raw 8-byte hex
+    // features; downstream integer ops stream 26 packed 4-byte values.
+    let rowspec: Vec<(&str, OpSpec, StatePlacement, u64, u64, [f64; 4])> = vec![
+        ("Clamp", OpSpec::Clamp { lo: 0.0, hi: f32::MAX }, StatePlacement::Bram, 4, 13, [4.20, 0.029, 0.043, 0.23]),
+        ("Logarithm", OpSpec::Logarithm, StatePlacement::Bram, 4, 13, [475.28, 0.01, 0.015, 0.23]),
+        ("Hex2Int", OpSpec::Hex2Int, StatePlacement::Bram, 8, 26, [410.59, 0.051, 0.059, 0.92]),
+        ("Modulus", OpSpec::Modulus { m: 1 << 22 }, StatePlacement::Bram, 4, 26, [354.25, 0.017, 0.026, 0.46]),
+        ("VocabGen-8K", OpSpec::VocabGen { expected: 8192 }, StatePlacement::Bram, 4, 26, [4.97, 7.57, 8.76, 0.92]),
+        ("VocabMap-8K", OpSpec::VocabMap { oov: None }, StatePlacement::Bram, 4, 26, [21.94, 0.02, 0.11, 0.46]),
+        ("VocabGen-512K", OpSpec::VocabGen { expected: 512 * 1024 }, StatePlacement::Hbm, 4, 26, [549.79, 64.10, 69.03, 2.15]),
+        ("VocabMap-512K", OpSpec::VocabMap { oov: None }, StatePlacement::Hbm, 4, 26, [2390.26, 0.015, 0.11, 2.96]),
+    ];
+
+    let mut t = Table::new(
+        "Table 2 — per-operator runtime on Dataset-I (seconds; 'paper' in parentheses)",
+        &["operator", "CPU", "RTX 3090", "A100", "PipeRec"],
+    );
+    for (label, op, placement, bpv, feats, paper) in &rowspec {
+        let c = cpu.op_seconds(label, rows);
+        let r3 = g3090.op_seconds(label, rows);
+        let ra = a100.op_seconds(label, rows);
+        let pr = piperec_op_seconds(op, *placement, rows, *bpv, *feats);
+        let fmt = |got: f64, paper: f64| format!("{got:.3} ({paper})");
+        t.row(vec![
+            label.to_string(),
+            fmt(c, paper[0]),
+            fmt(r3, paper[1]),
+            fmt(ra, paper[2]),
+            fmt(pr, paper[3]),
+        ]);
+    }
+    t.print();
+
+    println!("\nshape checks:");
+    println!("  · GPUs dominate stateless ops; CPU is 100–1000× slower there");
+    println!("  · VocabGen stays expensive on GPUs (64–69 s @512K) but not on PipeRec");
+    println!("  · PipeRec large-vocab ops are >100× cheaper than CPU (paper: 'two orders')");
+}

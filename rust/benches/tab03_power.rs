@@ -1,0 +1,86 @@
+//! Table 3 — average power, latency, and Perf/W across configurations
+//! (Dataset I/II × Pipelines I/II/III × CPU/3090/A100/PipeRec),
+//! normalized to the CPU baseline.
+
+use piperec::baselines::Platform;
+use piperec::bench_harness::experiments::{latencies, paper_latency};
+use piperec::bench_harness::Table;
+use piperec::dataio::dataset::DatasetSpec;
+use piperec::etl::pipelines::PipelineKind;
+use piperec::power::{dynamic_power, table3_rows};
+
+fn main() {
+    // Paper Perf/W anchors for the footer comparison.
+    let paper_eff: &[(&str, [f64; 3])] = &[
+        ("D-I+P-I", [59.4, 107.8, 868.6]),
+        ("D-I+P-II", [17.4, 28.3, 368.5]),
+        ("D-I+P-III", [7.15, 11.3, 514.6]),
+        ("D-II+P-I", [25.7, 29.1, 1101.4]),
+        ("D-II+P-II", [12.7, 17.7, 590.5]),
+        ("D-II+P-III", [8.9, 14.7, 699.7]),
+    ];
+
+    let mut t = Table::new(
+        "Table 3 — power, latency, Perf/W (CPU = 1.0×)",
+        &["config", "platform", "power", "latency", "Perf/W", "paper Perf/W"],
+    );
+    let mut idx = 0;
+    for spec in [DatasetSpec::dataset_i(1.0), DatasetSpec::dataset_ii(1.0)] {
+        for kind in PipelineKind::all() {
+            let lat = latencies(kind, &spec);
+            let rows = table3_rows(
+                &spec,
+                kind,
+                &[
+                    (Platform::CpuPandas, lat.pandas),
+                    (Platform::Rtx3090, lat.rtx3090),
+                    (Platform::A100, lat.a100),
+                    (Platform::PipeRec, lat.piperec),
+                ],
+            );
+            let (label, paper) = paper_eff[idx];
+            idx += 1;
+            for row in &rows {
+                let paper_str = match row.platform {
+                    Platform::CpuPandas => "1.0×".to_string(),
+                    Platform::Rtx3090 => format!("{}×", paper[0]),
+                    Platform::A100 => format!("{}×", paper[1]),
+                    Platform::PipeRec => format!("{}×", paper[2]),
+                    _ => "-".into(),
+                };
+                t.row(vec![
+                    label.to_string(),
+                    row.platform.label().to_string(),
+                    format!("{:.0} W", row.power_w),
+                    format!("{:.1} s", row.latency_s),
+                    format!("{:.1}×", row.eff_vs_cpu),
+                    paper_str,
+                ]);
+            }
+            let _ = paper_latency(kind, &spec);
+        }
+    }
+    t.print();
+
+    let mut p = Table::new(
+        "static power (paper §4.6)",
+        &["platform", "static", "dynamic range (model)"],
+    );
+    use piperec::dataio::dataset::DatasetKind;
+    for (plat, stat) in [
+        (Platform::CpuPandas, "150 W"),
+        (Platform::Rtx3090, "33 W"),
+        (Platform::A100, "43 W"),
+        (Platform::PipeRec, "17 W"),
+    ] {
+        let lo = dynamic_power(plat, DatasetKind::I, PipelineKind::I);
+        let hi = dynamic_power(plat, DatasetKind::II, PipelineKind::III);
+        p.row(vec![
+            plat.label().into(),
+            stat.into(),
+            format!("{:.0}–{:.0} W", lo.min(hi), lo.max(hi)),
+        ]);
+    }
+    p.print();
+    println!("\npaper: power reduced 2.9–6.4× vs GPUs; PipeRec up to 1101× CPU Perf/W");
+}

@@ -1,0 +1,291 @@
+//! CPU baselines (paper §4.2.2).
+//!
+//! Two layers, per the DESIGN.md substitution table:
+//!
+//! * [`RustCpuEtl`] — a *real* multithreaded columnar ETL engine in Rust
+//!   (what a well-tuned single-node CPU baseline looks like on this
+//!   machine). Used for measured wall-clock numbers and for the Fig. 12
+//!   single-thread decomposition, whose *shape* (LoadOnly ≪ Stateless ≪
+//!   VocabGen < VocabMap-large) is the paper's observable.
+//! * [`PandasModel`] — a cost model calibrated to the paper's own pandas
+//!   measurements (Table 2 per-operator costs, Table 3 pipeline
+//!   latencies on the 128-core EPYC 7V13), used to report paper-scale
+//!   numbers for the comparison tables.
+
+use crate::dataio::dataset::DatasetSpec;
+use crate::error::Result;
+use crate::etl::column::Batch;
+use crate::etl::dag::{Dag, EtlState};
+use crate::etl::pipelines::PipelineKind;
+use crate::util::pool::parallel_chunks;
+
+/// Real multithreaded CPU execution of an ETL DAG: columns are partitioned
+/// across worker threads (the natural pandas/numpy parallelisation axis
+/// for columnar workloads).
+pub struct RustCpuEtl {
+    pub threads: usize,
+}
+
+impl RustCpuEtl {
+    pub fn new(threads: usize) -> RustCpuEtl {
+        RustCpuEtl { threads: threads.max(1) }
+    }
+
+    /// Fit + apply, returning the output batch and measured seconds.
+    pub fn run(&self, dag: &Dag, input: &Batch) -> Result<(Batch, f64)> {
+        let t0 = std::time::Instant::now();
+        let state = dag.fit(input)?;
+        let out = self.apply(dag, input, &state)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    }
+
+    /// Apply with frozen state, parallelised across row ranges.
+    pub fn apply(&self, dag: &Dag, input: &Batch, state: &EtlState) -> Result<Batch> {
+        if self.threads == 1 || input.rows() < 2 * self.threads {
+            return dag.apply(input, state);
+        }
+        // Row-range parallelism: each worker transforms a horizontal slice.
+        let rows = input.rows();
+        let slices = parallel_chunks(rows, self.threads, |_, range| {
+            let sub = slice_batch(input, range.clone());
+            dag.apply(&sub, state)
+        });
+        // Stitch slices back together column-wise.
+        let mut parts = Vec::new();
+        for s in slices {
+            parts.push(s?);
+        }
+        concat_batches(&parts)
+    }
+}
+
+/// Extract rows `range` of every column.
+pub fn slice_batch(b: &Batch, range: std::ops::Range<usize>) -> Batch {
+    use crate::etl::column::Column;
+    let mut out = Batch::new();
+    for (name, col) in &b.columns {
+        let c = match col {
+            Column::F32 { data, width } => Column::F32 {
+                data: data[range.start * width..range.end * width].to_vec(),
+                width: *width,
+            },
+            Column::Hex8 { data } => Column::Hex8 { data: data[range.clone()].to_vec() },
+            Column::I64 { data, width } => Column::I64 {
+                data: data[range.start * width..range.end * width].to_vec(),
+                width: *width,
+            },
+        };
+        out.push(name.clone(), c).expect("slice preserves row counts");
+    }
+    out
+}
+
+/// Concatenate batches with identical schemas row-wise.
+pub fn concat_batches(parts: &[Batch]) -> Result<Batch> {
+    use crate::etl::column::Column;
+    let mut out = Batch::new();
+    if parts.is_empty() {
+        return Ok(out);
+    }
+    for (ci, (name, first)) in parts[0].columns.iter().enumerate() {
+        let col = match first {
+            Column::F32 { width, .. } => {
+                let mut data = Vec::new();
+                for p in parts {
+                    data.extend_from_slice(p.columns[ci].1.as_f32()?);
+                }
+                Column::F32 { data, width: *width }
+            }
+            Column::Hex8 { .. } => {
+                let mut data = Vec::new();
+                for p in parts {
+                    data.extend_from_slice(p.columns[ci].1.as_hex8()?);
+                }
+                Column::Hex8 { data }
+            }
+            Column::I64 { width, .. } => {
+                let mut data = Vec::new();
+                for p in parts {
+                    data.extend_from_slice(p.columns[ci].1.as_i64()?);
+                }
+                Column::I64 { data, width: *width }
+            }
+        };
+        out.push(name.clone(), col)?;
+    }
+    Ok(out)
+}
+
+/// Cost model calibrated to the paper's pandas measurements.
+///
+/// Table 2 anchors (Dataset-I, 45 M rows, whole dataset, single thread):
+/// Clamp 4.2 s, Logarithm 475 s, Hex2Int 411 s, Modulus 354 s,
+/// VocabGen-8K 4.97 s, VocabMap-8K 21.9 s, VocabGen-512K 550 s,
+/// VocabMap-512K 2390 s.
+#[derive(Debug, Clone, Copy)]
+pub struct PandasModel {
+    /// Worker threads (paper: best run used 64 threads on 128 cores).
+    pub threads: usize,
+    /// Parallel efficiency of pandas/joblib column-parallel execution.
+    pub efficiency: f64,
+}
+
+impl Default for PandasModel {
+    fn default() -> Self {
+        PandasModel { threads: 64, efficiency: 0.40 }
+    }
+}
+
+/// Per-row single-thread costs (seconds), derived from Table 2 at 45 M rows.
+pub mod costs {
+    pub const LOAD_ONLY: f64 = 2.2e-9; // negligible (Fig. 12)
+    pub const CLAMP: f64 = 4.20 / 45.0e6;
+    pub const LOGARITHM: f64 = 475.28 / 45.0e6;
+    pub const HEX2INT: f64 = 410.59 / 45.0e6;
+    pub const MODULUS: f64 = 354.25 / 45.0e6;
+    pub const VOCAB_GEN_8K: f64 = 4.97 / 45.0e6;
+    pub const VOCAB_MAP_8K: f64 = 21.94 / 45.0e6;
+    pub const VOCAB_GEN_512K: f64 = 549.79 / 45.0e6;
+    pub const VOCAB_MAP_512K: f64 = 2390.26 / 45.0e6;
+
+    /// Interpolate vocabulary op cost for arbitrary cardinality via a
+    /// power law through the 8K and 512K anchors.
+    pub fn vocab_gen(card: usize) -> f64 {
+        powerlaw(card, VOCAB_GEN_8K, VOCAB_GEN_512K)
+    }
+
+    pub fn vocab_map(card: usize) -> f64 {
+        powerlaw(card, VOCAB_MAP_8K, VOCAB_MAP_512K)
+    }
+
+    fn powerlaw(card: usize, at_8k: f64, at_512k: f64) -> f64 {
+        let alpha = (at_512k / at_8k).ln() / 64f64.ln(); // 512K/8K = 64×
+        at_8k * (card as f64 / 8192.0).powf(alpha).max(1.0 / 64.0)
+    }
+}
+
+impl PandasModel {
+    /// Single-thread seconds for the full dense+sparse op chain of
+    /// `pipeline` over `spec` (whole dataset, paper scale).
+    pub fn single_thread_seconds(&self, pipeline: PipelineKind, spec: &DatasetSpec) -> f64 {
+        let rows = spec.paper_rows as f64;
+        let dense = spec.schema.dense_count() as f64;
+        let sparse = spec.schema.sparse_count() as f64;
+        // Reference schema for the anchors is Dataset-I (13 dense, 26
+        // sparse): per-feature cost = anchor / feature-count.
+        let dense_chain = (costs::CLAMP + costs::LOGARITHM) / 13.0 * dense;
+        let sparse_chain = (costs::HEX2INT + costs::MODULUS) / 26.0 * sparse;
+        let vocab = match pipeline.vocab_size() {
+            None => 0.0,
+            Some(card) => {
+                (costs::vocab_gen(card) + costs::vocab_map(card)) / 26.0 * sparse
+            }
+        };
+        (dense_chain + sparse_chain + vocab) * rows
+    }
+
+    /// Parallel pipeline latency (the paper's Pandas rows in Fig. 13/15/16
+    /// and Table 3): column-parallel speedup capped by the column count.
+    pub fn pipeline_seconds(&self, pipeline: PipelineKind, spec: &DatasetSpec) -> f64 {
+        let cols = spec.schema.fields.len() as f64;
+        let parallel = (self.threads as f64).min(cols) * self.efficiency;
+        self.single_thread_seconds(pipeline, spec) / parallel.max(1.0)
+    }
+
+    /// Per-operator cost on a dataset (Table 2 regeneration).
+    pub fn op_seconds(&self, op: &str, rows: u64) -> f64 {
+        let per_row = match op {
+            "Clamp" => costs::CLAMP,
+            "Logarithm" => costs::LOGARITHM,
+            "Hex2Int" => costs::HEX2INT,
+            "Modulus" => costs::MODULUS,
+            "VocabGen-8K" => costs::VOCAB_GEN_8K,
+            "VocabMap-8K" => costs::VOCAB_MAP_8K,
+            "VocabGen-512K" => costs::VOCAB_GEN_512K,
+            "VocabMap-512K" => costs::VOCAB_MAP_512K,
+            _ => costs::LOAD_ONLY,
+        };
+        per_row * rows as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::pipelines::build;
+
+    #[test]
+    fn rust_cpu_matches_reference_executor() {
+        let mut spec = DatasetSpec::dataset_i(0.001);
+        spec.shards = 1;
+        let shard = spec.shard(0, 7);
+        let dag = build(PipelineKind::II, &spec.schema);
+        let state = dag.fit(&shard).unwrap();
+        let reference = dag.apply(&shard, &state).unwrap();
+        let parallel = RustCpuEtl::new(4).apply(&dag, &shard, &state).unwrap();
+        assert_eq!(reference.rows(), parallel.rows());
+        for ((n1, c1), (n2, c2)) in reference.columns.iter().zip(&parallel.columns) {
+            assert_eq!(n1, n2);
+            assert_eq!(c1, c2, "column {n1} diverged");
+        }
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let spec = DatasetSpec::dataset_i(0.0005);
+        let shard = spec.shard(0, 3);
+        let rows = shard.rows();
+        let a = slice_batch(&shard, 0..rows / 2);
+        let b = slice_batch(&shard, rows / 2..rows);
+        let back = concat_batches(&[a, b]).unwrap();
+        assert_eq!(back.rows(), rows);
+        assert_eq!(
+            back.get("criteo_c0").unwrap().as_hex8().unwrap(),
+            shard.get("criteo_c0").unwrap().as_hex8().unwrap()
+        );
+    }
+
+    #[test]
+    fn pandas_model_reproduces_table3_dataset1() {
+        // Paper Table 3, CPU column, Dataset-I: 78 s / 94 s / 218 s.
+        let m = PandasModel::default();
+        let spec = DatasetSpec::dataset_i(1.0);
+        let p1 = m.pipeline_seconds(PipelineKind::I, &spec);
+        let p2 = m.pipeline_seconds(PipelineKind::II, &spec);
+        let p3 = m.pipeline_seconds(PipelineKind::III, &spec);
+        assert!((p1 / 78.0 - 1.0).abs() < 0.35, "P-I {p1}");
+        assert!((p2 / 94.0 - 1.0).abs() < 0.35, "P-II {p2}");
+        assert!((p3 / 218.0 - 1.0).abs() < 0.35, "P-III {p3}");
+        // Ordering is strict.
+        assert!(p1 < p2 && p2 < p3);
+    }
+
+    #[test]
+    fn pandas_model_table2_anchors_exact() {
+        let m = PandasModel::default();
+        assert!((m.op_seconds("Logarithm", 45_000_000) - 475.28).abs() < 0.1);
+        assert!((m.op_seconds("VocabMap-512K", 45_000_000) - 2390.26).abs() < 0.5);
+    }
+
+    #[test]
+    fn vocab_cost_interpolation_monotonic() {
+        let c64k = costs::vocab_map(64 * 1024);
+        assert!(c64k > costs::VOCAB_MAP_8K && c64k < costs::VOCAB_MAP_512K);
+    }
+
+    #[test]
+    fn more_threads_is_faster_until_column_cap() {
+        let spec = DatasetSpec::dataset_i(1.0);
+        let t8 = PandasModel { threads: 8, efficiency: 0.4 }
+            .pipeline_seconds(PipelineKind::I, &spec);
+        let t32 = PandasModel { threads: 32, efficiency: 0.4 }
+            .pipeline_seconds(PipelineKind::I, &spec);
+        let t64 = PandasModel { threads: 64, efficiency: 0.4 }
+            .pipeline_seconds(PipelineKind::I, &spec);
+        let t128 = PandasModel { threads: 128, efficiency: 0.4 }
+            .pipeline_seconds(PipelineKind::I, &spec);
+        assert!(t8 > t32 && t32 > t64);
+        // 40 columns cap the useful parallelism below 64 threads.
+        assert_eq!(t64, t128);
+    }
+}

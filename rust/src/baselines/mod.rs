@@ -1,0 +1,35 @@
+//! Comparison baselines (paper §4.2): real multithreaded CPU ETL plus
+//! calibrated models of pandas, Apache Beam/Dataflow, and NVTabular on
+//! RTX 3090/A100, and the GPU trainer consumption model.
+
+pub mod beam;
+pub mod cpu_pandas;
+pub mod gpu_nvtabular;
+pub mod trainer_model;
+
+pub use beam::BeamModel;
+pub use cpu_pandas::{PandasModel, RustCpuEtl};
+pub use gpu_nvtabular::{GpuKind, GpuModel};
+pub use trainer_model::{TrainerModel, CPU_ETL_BW_12CORE};
+
+/// All platforms the evaluation compares (Tables 2/3, Figs. 13–16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Platform {
+    CpuPandas,
+    CpuBeam,
+    Rtx3090,
+    A100,
+    PipeRec,
+}
+
+impl Platform {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Platform::CpuPandas => "CPU (pandas)",
+            Platform::CpuBeam => "CPU (Beam)",
+            Platform::Rtx3090 => "RTX 3090",
+            Platform::A100 => "A100",
+            Platform::PipeRec => "PipeRec",
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! GPU trainer consumption model (paper Fig. 1/8): the rate at which DLRM
+//! training consumes packed batches, used to size backpressure and to
+//! reproduce the end-to-end imbalance figures. Calibrated to the paper's
+//! production pipeline: a 12-core CPU sustains ~10 MB/s of preprocessing
+//! while the GPU can consume ~100 MB/s, making CPU ETL 11.4–13× slower
+//! than training (Fig. 1b).
+
+/// DLRM training-step time model for an accelerator.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainerModel {
+    /// Fixed per-step overhead: kernel launches, optimizer, allreduce (s).
+    pub step_overhead_s: f64,
+    /// Per-row forward+backward time (s/row).
+    pub per_row_s: f64,
+    /// Packed bytes per row (schema-dependent).
+    pub row_bytes: u64,
+}
+
+impl TrainerModel {
+    /// A100-class trainer on the Criteo DLRM (packed row = 160 B):
+    /// consumes ≈100 MB/s at large batch sizes (Fig. 8).
+    pub fn a100_dlrm(row_bytes: u64) -> TrainerModel {
+        TrainerModel {
+            step_overhead_s: 5.0e-3,
+            per_row_s: 1.35e-6,
+            row_bytes,
+        }
+    }
+
+    /// Step latency for a batch of `rows`.
+    pub fn step_seconds(&self, rows: usize) -> f64 {
+        self.step_overhead_s + rows as f64 * self.per_row_s
+    }
+
+    /// Sustained consumption bandwidth at a given batch size (bytes/s).
+    pub fn consume_bw(&self, batch_rows: usize) -> f64 {
+        (batch_rows as u64 * self.row_bytes) as f64 / self.step_seconds(batch_rows)
+    }
+
+    /// Seconds to train one epoch of `total_rows` at `batch_rows`.
+    pub fn epoch_seconds(&self, total_rows: u64, batch_rows: usize) -> f64 {
+        let steps = total_rows.div_ceil(batch_rows as u64);
+        steps as f64 * self.step_seconds(batch_rows)
+    }
+}
+
+/// The production 12-core CPU ETL rate from Fig. 1/8 (~10 MB/s).
+pub const CPU_ETL_BW_12CORE: f64 = 10.0e6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consumption_near_100mbps_at_large_batches() {
+        let t = TrainerModel::a100_dlrm(160);
+        let bw = t.consume_bw(1 << 21); // 2M rows
+        assert!(bw > 90.0e6 && bw < 130.0e6, "bw={bw}");
+    }
+
+    #[test]
+    fn etl_training_imbalance_matches_fig1() {
+        // CPU ETL 11.4–13.0× slower than training across 64K–2M batches.
+        let t = TrainerModel::a100_dlrm(160);
+        let total_rows = 45_000_000u64;
+        let total_bytes = total_rows * 160;
+        let etl_s = total_bytes as f64 / CPU_ETL_BW_12CORE;
+        for batch in [64 * 1024, 256 * 1024, 1 << 20, 2 << 20] {
+            let train_s = t.epoch_seconds(total_rows, batch);
+            let ratio = etl_s / train_s;
+            assert!(
+                (10.0..14.0).contains(&ratio),
+                "batch={batch} ratio={ratio:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn larger_batches_amortize_overhead() {
+        let t = TrainerModel::a100_dlrm(160);
+        assert!(t.consume_bw(1 << 21) > t.consume_bw(64 * 1024));
+    }
+
+    #[test]
+    fn epoch_time_counts_partial_step() {
+        let t = TrainerModel::a100_dlrm(160);
+        let a = t.epoch_seconds(100, 64);
+        assert!((a - 2.0 * t.step_seconds(64)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,160 @@
+//! Shared experiment harness for the pipeline-latency comparisons
+//! (Figs. 13/15/16 and Table 3): computes per-platform latencies for a
+//! (dataset, pipeline) configuration at paper scale, including the
+//! Beam cluster sweep and the SSD-bound PR-R / theoretical PR-T points
+//! for Dataset-III.
+
+use crate::baselines::{BeamModel, GpuKind, GpuModel, PandasModel, Platform};
+use crate::dataio::dataset::DatasetSpec;
+use crate::etl::pipelines::{build, PipelineKind};
+use crate::memsys::IngestSource;
+use crate::planner::{compile, PlannerConfig, StreamProfile};
+
+/// All latencies for one (dataset, pipeline) configuration, paper scale.
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    pub pandas: f64,
+    /// (vCPUs, seconds) Beam sweep.
+    pub beam: Vec<(usize, f64)>,
+    pub rtx3090: f64,
+    pub a100: f64,
+    /// PipeRec, realistic ingest (SSD-bound for D-III) — "PR-R".
+    pub piperec: f64,
+    /// PipeRec theoretical lower bound without the I/O limit — "PR-T".
+    pub piperec_theoretical: f64,
+}
+
+impl LatencyRow {
+    /// Latency for the platforms of Table 3.
+    pub fn of(&self, p: Platform) -> f64 {
+        match p {
+            Platform::CpuPandas => self.pandas,
+            Platform::CpuBeam => self.beam.last().map(|(_, s)| *s).unwrap_or(f64::NAN),
+            Platform::Rtx3090 => self.rtx3090,
+            Platform::A100 => self.a100,
+            Platform::PipeRec => self.piperec,
+        }
+    }
+}
+
+/// Compute the full latency row for `kind` over `spec` at paper scale.
+pub fn latencies(kind: PipelineKind, spec: &DatasetSpec) -> LatencyRow {
+    let dag = build(kind, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default())
+        .expect("canned pipelines always compile");
+    let profile = StreamProfile::from_schema(&spec.schema, spec.paper_rows);
+    let source = if spec.ssd_bound { IngestSource::Ssd } else { IngestSource::Host };
+    LatencyRow {
+        pandas: PandasModel::default().pipeline_seconds(kind, spec),
+        beam: BeamModel::sweep(kind, spec),
+        rtx3090: GpuModel::new(GpuKind::Rtx3090).pipeline_seconds(kind, spec),
+        a100: GpuModel::new(GpuKind::A100).pipeline_seconds(kind, spec),
+        piperec: plan.etl_seconds_profiled(profile, source),
+        piperec_theoretical: plan.fit_seconds(profile) + plan.apply_seconds(profile),
+    }
+}
+
+/// Paper Table 3 latency anchors (s), for the vs-paper columns.
+pub fn paper_latency(kind: PipelineKind, spec: &DatasetSpec) -> Option<[f64; 4]> {
+    use crate::dataio::dataset::DatasetKind;
+    // [pandas, 3090, a100, piperec]
+    match (spec.kind, kind) {
+        (DatasetKind::I, PipelineKind::I) => Some([78.0, 4.2, 2.8, 1.1]),
+        (DatasetKind::I, PipelineKind::II) => Some([94.0, 12.8, 11.9, 3.0]),
+        (DatasetKind::I, PipelineKind::III) => Some([218.0, 66.7, 77.2, 5.1]),
+        (DatasetKind::II, PipelineKind::I) => Some([57.0, 8.3, 9.7, 0.8]),
+        (DatasetKind::II, PipelineKind::II) => Some([61.0, 15.4, 16.7, 1.5]),
+        (DatasetKind::II, PipelineKind::III) => Some([72.0, 25.8, 24.4, 1.5]),
+        _ => None,
+    }
+}
+
+/// Render one figure's comparison table for a pipeline over all datasets.
+pub fn render_pipeline_figure(title: &str, kind: PipelineKind) -> super::Table {
+    let mut t = super::Table::new(
+        title,
+        &["dataset", "pandas", "Beam-128", "RTX 3090", "A100", "PipeRec", "PR-T", "PipeRec vs pandas"],
+    );
+    for spec in [
+        DatasetSpec::dataset_i(1.0),
+        DatasetSpec::dataset_ii(1.0),
+        DatasetSpec::dataset_iii(1.0),
+    ] {
+        let r = latencies(kind, &spec);
+        t.row(vec![
+            spec.name.to_string(),
+            super::secs(r.pandas),
+            super::secs(r.beam.last().unwrap().1),
+            super::secs(r.rtx3090),
+            super::secs(r.a100),
+            super::secs(r.piperec),
+            super::secs(r.piperec_theoretical),
+            format!("{:.0}×", r.pandas / r.piperec),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset1_latencies_track_paper_anchors() {
+        let spec = DatasetSpec::dataset_i(1.0);
+        for kind in PipelineKind::all() {
+            let got = latencies(kind, &spec);
+            let paper = paper_latency(kind, &spec).unwrap();
+            // Within 2× on every platform (the *shape* constraint; most
+            // are much closer — see EXPERIMENTS.md).
+            for (g, p) in [
+                (got.pandas, paper[0]),
+                (got.rtx3090, paper[1]),
+                (got.a100, paper[2]),
+                (got.piperec, paper[3]),
+            ] {
+                let ratio = g / p;
+                assert!(
+                    ratio > 0.4 && ratio < 2.5,
+                    "{}: got {g:.1}s vs paper {p}s",
+                    kind.label()
+                );
+            }
+            // Ordering: pandas > GPUs > PipeRec.
+            assert!(got.pandas > got.a100 && got.a100 > got.piperec);
+        }
+    }
+
+    #[test]
+    fn dataset3_is_ssd_bound_with_theoretical_point_below() {
+        let spec = DatasetSpec::dataset_iii(1.0);
+        let r = latencies(PipelineKind::I, &spec);
+        let ssd_floor = spec.paper_bytes() as f64 / 1.2e9;
+        assert!((r.piperec / ssd_floor - 1.0).abs() < 0.02);
+        assert!(r.piperec_theoretical < r.piperec);
+    }
+
+    #[test]
+    fn speedups_match_paper_magnitudes() {
+        // §4.4: 85×/87× (P-I, D-I/D-II); §4.5: 32×/43× (D-I P-II/P-III).
+        let d1 = DatasetSpec::dataset_i(1.0);
+        let d2 = DatasetSpec::dataset_ii(1.0);
+        let s_p1_d1 = {
+            let r = latencies(PipelineKind::I, &d1);
+            r.pandas / r.piperec
+        };
+        let s_p1_d2 = {
+            let r = latencies(PipelineKind::I, &d2);
+            r.pandas / r.piperec
+        };
+        let r2 = latencies(PipelineKind::II, &d1);
+        let r3 = latencies(PipelineKind::III, &d1);
+        assert!(s_p1_d1 > 30.0 && s_p1_d1 < 250.0, "{s_p1_d1}");
+        assert!(s_p1_d2 > 30.0 && s_p1_d2 < 250.0, "{s_p1_d2}");
+        assert!(r2.pandas / r2.piperec > 15.0, "{}", r2.pandas / r2.piperec);
+        assert!(r3.pandas / r3.piperec > 20.0, "{}", r3.pandas / r3.piperec);
+        // GPU speedup band: 2.4–17× (abstract).
+        let gpu_speedup = r3.a100 / r3.piperec;
+        assert!(gpu_speedup > 2.0 && gpu_speedup < 30.0, "{gpu_speedup}");
+    }
+}

@@ -1,0 +1,156 @@
+//! Bench harness substrate (the offline registry has no criterion): table
+//! rendering, measurement loops, and paper-vs-measured comparison rows
+//! shared by every `cargo bench` target.
+
+pub mod experiments;
+
+use crate::util::stats::Summary;
+use crate::util::timer::measure_n;
+
+/// An aligned ASCII table for bench output.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Bench context: honors `PIPEREC_BENCH_QUICK=1` to shrink workloads in CI.
+pub struct BenchCtx {
+    pub quick: bool,
+}
+
+impl BenchCtx {
+    pub fn from_env() -> BenchCtx {
+        BenchCtx {
+            quick: std::env::var("PIPEREC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false),
+        }
+    }
+
+    /// Scale a workload knob down in quick mode.
+    pub fn scale(&self, full: f64, quick: f64) -> f64 {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+
+    pub fn iters(&self, full: usize) -> usize {
+        if self.quick {
+            1
+        } else {
+            full
+        }
+    }
+}
+
+/// Measure a closure with warmup and return a summary of seconds/iter.
+pub fn bench(warmup: usize, iters: usize, f: impl FnMut()) -> Summary {
+    Summary::of(&measure_n(warmup, iters, f))
+}
+
+/// Format a paper-vs-measured comparison cell: `measured (paper ×r)`.
+pub fn vs_paper(measured: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        return format!("{measured:.3}");
+    }
+    format!("{:.3} (paper {:.3}, ×{:.2})", measured, paper, measured / paper)
+}
+
+/// Format seconds compactly.
+pub fn secs(s: f64) -> String {
+    crate::util::fmt_secs(s)
+}
+
+/// Format a rate compactly.
+pub fn rate(bytes_per_sec: f64) -> String {
+    crate::util::fmt_rate(bytes_per_sec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("test", &["a", "column_b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["long_value".into(), "x".into()]);
+        let s = t.render();
+        assert!(s.contains("=== test ==="));
+        assert!(s.contains("long_value"));
+        // All data lines have the same visual width for col 1.
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains("  ")).collect();
+        assert!(lines.len() >= 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_returns_summary() {
+        let s = bench(1, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.n, 3);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn vs_paper_formats_ratio() {
+        let s = vs_paper(2.0, 1.0);
+        assert!(s.contains("×2.00"), "{s}");
+    }
+}

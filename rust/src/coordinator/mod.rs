@@ -1,0 +1,18 @@
+//! L3 co-scheduling runtime (the paper's system contribution, §3): the
+//! format-aware packer, credit-gated P2P staging with double buffering,
+//! the ETL/training overlap scheduler, and the live training loop that
+//! composes the FPGA data plane with the PJRT trainer.
+
+pub mod online;
+pub mod packer;
+pub mod scheduler;
+pub mod sharding;
+pub mod staging;
+pub mod train_loop;
+
+pub use packer::{pack, PackLayout, PackedBatch};
+pub use scheduler::{cpu_gpu_config, piperec_config, simulate_overlap, OverlapConfig, OverlapResult};
+pub use online::{classify_psi, DriftDetector, DriftVerdict, FreshnessTracker, OnlineVocab};
+pub use sharding::{provision, route, ShardingPlan};
+pub use staging::{StagingConsumer, StagingQueue, StagingSim};
+pub use train_loop::{run as train, TrainConfig, TrainReport};

@@ -1,0 +1,285 @@
+//! Online / continuous-training support (paper §2.1): recommender
+//! datasets grow continuously and drift; PipeRec's fit/apply split must
+//! therefore handle *dynamic vocabularies* ("dynamic vocabulary tables are
+//! frequently updated with new data", §3.2.2) and surface *data drift* so
+//! the control plane can trigger refits or model refreshes.
+//!
+//! This module provides the L3 pieces the paper's online deployment needs:
+//!
+//! * [`OnlineVocab`] — a bounded, continuously-updated vocabulary: new
+//!   tokens are admitted in first-appearance order until `capacity`, then
+//!   mapped to the shared OOV index; tracks admission/OOV rates so the
+//!   control plane can size tables (and decide BRAM↔HBM promotion).
+//! * [`DriftDetector`] — streaming population-stability monitoring over
+//!   sparse-feature histograms (PSI), flagging distribution shift.
+//! * [`FreshnessTracker`] — time-to-freshness accounting: the latency
+//!   between an event's ingest and the training step that consumed it
+//!   (the paper's "time-to-freshness for online models").
+
+use crate::etl::ops::vocab::VocabTable;
+
+/// A continuously-updated, capacity-bounded vocabulary.
+#[derive(Debug)]
+pub struct OnlineVocab {
+    table: VocabTable,
+    capacity: usize,
+    /// Tokens admitted since construction.
+    pub admitted: u64,
+    /// Lookups that hit an existing entry.
+    pub hits: u64,
+    /// Lookups rejected to OOV because the table is full.
+    pub oov: u64,
+}
+
+impl OnlineVocab {
+    pub fn new(capacity: usize) -> OnlineVocab {
+        OnlineVocab {
+            table: VocabTable::with_capacity(capacity),
+            capacity,
+            admitted: 0,
+            hits: 0,
+            oov: 0,
+        }
+    }
+
+    /// Index for the out-of-vocabulary bucket (one past the last slot).
+    pub fn oov_index(&self) -> i64 {
+        self.capacity as i64
+    }
+
+    /// Map a token, admitting it if the table still has room.
+    pub fn map(&mut self, token: i64) -> i64 {
+        if let Some(idx) = self.table.get(token) {
+            self.hits += 1;
+            return idx as i64;
+        }
+        if self.table.len() < self.capacity {
+            self.admitted += 1;
+            self.table.get_or_insert(token) as i64
+        } else {
+            self.oov += 1;
+            self.oov_index()
+        }
+    }
+
+    /// Map a whole column in place.
+    pub fn map_slice(&mut self, tokens: &mut [i64]) {
+        for t in tokens.iter_mut() {
+            *t = self.map(*t);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// Fraction of recent lookups that fell to OOV — the control-plane
+    /// signal for growing the table (or promoting it to HBM).
+    pub fn oov_rate(&self) -> f64 {
+        let total = self.hits + self.admitted + self.oov;
+        if total == 0 {
+            0.0
+        } else {
+            self.oov as f64 / total as f64
+        }
+    }
+
+    /// Freeze into an immutable table (checkpoint / plan redeployment).
+    pub fn freeze(self) -> VocabTable {
+        self.table
+    }
+}
+
+/// Population-stability-index drift detector over bucketized token
+/// frequencies. PSI < 0.1: stable; 0.1–0.25: moderate shift; > 0.25:
+/// significant drift (the classical credit-scoring thresholds).
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    buckets: usize,
+    reference: Vec<f64>,
+    current: Vec<u64>,
+    current_n: u64,
+}
+
+impl DriftDetector {
+    /// `buckets` histogram bins over the hashed token space.
+    pub fn new(buckets: usize) -> DriftDetector {
+        assert!(buckets >= 2);
+        DriftDetector {
+            buckets,
+            reference: Vec::new(),
+            current: vec![0; buckets],
+            current_n: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket(&self, token: i64) -> usize {
+        (crate::etl::ops::kernels::mix64(token as u64) % self.buckets as u64) as usize
+    }
+
+    /// Record a batch of tokens into the current window.
+    pub fn observe(&mut self, tokens: &[i64]) {
+        for &t in tokens {
+            let b = self.bucket(t);
+            self.current[b] += 1;
+        }
+        self.current_n += tokens.len() as u64;
+    }
+
+    /// Close the window: returns the PSI vs the reference distribution
+    /// (None for the first window, which becomes the reference).
+    pub fn rotate(&mut self) -> Option<f64> {
+        if self.current_n == 0 {
+            return None;
+        }
+        let dist: Vec<f64> = self
+            .current
+            .iter()
+            .map(|&c| (c as f64 / self.current_n as f64).max(1e-9))
+            .collect();
+        let psi = if self.reference.is_empty() {
+            None
+        } else {
+            Some(
+                dist.iter()
+                    .zip(&self.reference)
+                    .map(|(c, r)| (c - r) * (c / r).ln())
+                    .sum(),
+            )
+        };
+        self.reference = dist;
+        self.current = vec![0; self.buckets];
+        self.current_n = 0;
+        psi
+    }
+}
+
+/// Drift verdicts at the classical PSI thresholds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriftVerdict {
+    Stable,
+    Moderate,
+    Significant,
+}
+
+pub fn classify_psi(psi: f64) -> DriftVerdict {
+    if psi < 0.1 {
+        DriftVerdict::Stable
+    } else if psi < 0.25 {
+        DriftVerdict::Moderate
+    } else {
+        DriftVerdict::Significant
+    }
+}
+
+/// Time-to-freshness accounting: event ingest time → training time.
+#[derive(Debug, Default)]
+pub struct FreshnessTracker {
+    /// (ingest_time, trained_time) per batch.
+    samples: Vec<(f64, f64)>,
+}
+
+impl FreshnessTracker {
+    /// Record that a batch ingested at `ingest_t` was trained at `train_t`.
+    pub fn record(&mut self, ingest_t: f64, train_t: f64) {
+        assert!(train_t >= ingest_t, "training cannot precede ingest");
+        self.samples.push((ingest_t, train_t));
+    }
+
+    /// Mean time-to-freshness (s).
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|(i, t)| t - i).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Worst-case time-to-freshness (s).
+    pub fn max(&self) -> f64 {
+        self.samples.iter().map(|(i, t)| t - i).fold(0.0, f64::max)
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn online_vocab_admits_then_oovs() {
+        let mut v = OnlineVocab::new(4);
+        for t in [10, 20, 30, 40] {
+            assert!(v.map(t) < 4);
+        }
+        assert_eq!(v.len(), 4);
+        // Known tokens still map; new ones go to OOV.
+        assert_eq!(v.map(10), 0);
+        assert_eq!(v.map(99), v.oov_index());
+        assert_eq!(v.oov, 1);
+        assert!(v.oov_rate() > 0.0);
+    }
+
+    #[test]
+    fn online_vocab_is_first_appearance_ordered() {
+        let mut v = OnlineVocab::new(16);
+        assert_eq!(v.map(77), 0);
+        assert_eq!(v.map(33), 1);
+        assert_eq!(v.map(77), 0);
+        let frozen = v.freeze();
+        assert_eq!(frozen.keys_in_order(), &[77, 33]);
+    }
+
+    #[test]
+    fn map_slice_updates_in_place() {
+        let mut v = OnlineVocab::new(8);
+        let mut xs = vec![5, 6, 5, 7];
+        v.map_slice(&mut xs);
+        assert_eq!(xs, vec![0, 1, 0, 2]);
+    }
+
+    #[test]
+    fn drift_detector_flags_distribution_change() {
+        let mut d = DriftDetector::new(32);
+        let mut rng = Rng::new(1);
+        // Window 1: tokens 0..100 (reference).
+        let w1: Vec<i64> = (0..20_000).map(|_| rng.below(100) as i64).collect();
+        d.observe(&w1);
+        assert!(d.rotate().is_none());
+        // Window 2: same distribution → stable.
+        let w2: Vec<i64> = (0..20_000).map(|_| rng.below(100) as i64).collect();
+        d.observe(&w2);
+        let psi = d.rotate().unwrap();
+        assert_eq!(classify_psi(psi), DriftVerdict::Stable, "psi={psi}");
+        // Window 3: disjoint token range → significant drift.
+        let w3: Vec<i64> = (0..20_000).map(|_| 10_000 + rng.below(100) as i64).collect();
+        d.observe(&w3);
+        let psi = d.rotate().unwrap();
+        assert_eq!(classify_psi(psi), DriftVerdict::Significant, "psi={psi}");
+    }
+
+    #[test]
+    fn freshness_tracks_mean_and_max() {
+        let mut f = FreshnessTracker::default();
+        f.record(0.0, 0.5);
+        f.record(1.0, 2.5);
+        assert_eq!(f.count(), 2);
+        assert!((f.mean() - 1.0).abs() < 1e-12);
+        assert_eq!(f.max(), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "training cannot precede ingest")]
+    fn freshness_rejects_time_travel() {
+        let mut f = FreshnessTracker::default();
+        f.record(2.0, 1.0);
+    }
+}

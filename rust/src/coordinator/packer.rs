@@ -1,0 +1,215 @@
+//! Format-aware packer (paper §1/§3): converts the transformed columnar
+//! batch into the exact memory layout the trainer consumes — one
+//! contiguous buffer per framework tensor (dense f32 [B, D_d], sparse i32
+//! indices [B, D_s], labels f32 [B]) — so the P2P stream lands in GPU
+//! memory training-ready, with no host-side reshaping.
+//!
+//! This is the L3 hot path: every training byte flows through `pack`.
+
+use crate::error::{EtlError, Result};
+use crate::etl::column::{Batch, Column};
+use crate::etl::dag::{Dag, SinkRole};
+
+/// A training-ready packed batch (the unit streamed over P2P DMA).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedBatch {
+    pub rows: usize,
+    pub n_dense: usize,
+    pub n_sparse: usize,
+    /// Row-major `[rows, n_dense]` normalized dense features.
+    pub dense: Vec<f32>,
+    /// Row-major `[rows, n_sparse]` embedding indices.
+    pub sparse: Vec<i32>,
+    /// `[rows]` labels.
+    pub labels: Vec<f32>,
+}
+
+impl PackedBatch {
+    /// Total payload bytes (what the DMA engine moves).
+    pub fn bytes(&self) -> u64 {
+        (self.dense.len() * 4 + self.sparse.len() * 4 + self.labels.len() * 4) as u64
+    }
+
+    /// Split into per-training-step slices of `step_rows` (the last slice
+    /// is dropped if incomplete — DLRM training uses fixed batch shapes).
+    pub fn chunks(&self, step_rows: usize) -> Vec<PackedBatch> {
+        assert!(step_rows > 0);
+        let full = self.rows / step_rows;
+        (0..full)
+            .map(|i| {
+                let r = i * step_rows..(i + 1) * step_rows;
+                PackedBatch {
+                    rows: step_rows,
+                    n_dense: self.n_dense,
+                    n_sparse: self.n_sparse,
+                    dense: self.dense[r.start * self.n_dense..r.end * self.n_dense].to_vec(),
+                    sparse: self.sparse[r.start * self.n_sparse..r.end * self.n_sparse].to_vec(),
+                    labels: self.labels[r.clone()].to_vec(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Sink layout extracted from a DAG: which output columns feed which
+/// tensor, in declaration order.
+#[derive(Debug, Clone)]
+pub struct PackLayout {
+    pub dense_cols: Vec<String>,
+    pub sparse_cols: Vec<String>,
+    pub label_col: String,
+}
+
+impl PackLayout {
+    pub fn of(dag: &Dag) -> Result<PackLayout> {
+        let mut dense_cols = Vec::new();
+        let mut sparse_cols = Vec::new();
+        let mut label_col = None;
+        for (name, _, role) in dag.sinks() {
+            match role {
+                SinkRole::Dense => dense_cols.push(name.to_string()),
+                SinkRole::SparseIndex => sparse_cols.push(name.to_string()),
+                SinkRole::Label => label_col = Some(name.to_string()),
+            }
+        }
+        Ok(PackLayout {
+            dense_cols,
+            sparse_cols,
+            label_col: label_col
+                .ok_or_else(|| EtlError::Coord("DAG has no label sink".into()))?,
+        })
+    }
+}
+
+/// Pack a transformed batch into the trainer layout.
+///
+/// Transposes column-major ETL output into row-major tensors; sparse
+/// indices are range-checked into `i32` (embedding rows fit 2^31).
+pub fn pack(batch: &Batch, layout: &PackLayout) -> Result<PackedBatch> {
+    let rows = batch.rows();
+    let n_dense = layout.dense_cols.len();
+    let n_sparse = layout.sparse_cols.len();
+
+    let mut dense = vec![0f32; rows * n_dense];
+    for (ci, name) in layout.dense_cols.iter().enumerate() {
+        let col = expect_col(batch, name)?;
+        let data = col.as_f32()?;
+        if col.width() != 1 {
+            return Err(EtlError::Coord(format!(
+                "dense sink {name} has width {} (expected 1)",
+                col.width()
+            )));
+        }
+        // Column-major → row-major scatter; the stride-friendly loop is
+        // over rows so the destination writes are sequential per column.
+        for (r, &v) in data.iter().enumerate() {
+            dense[r * n_dense + ci] = v;
+        }
+    }
+
+    let mut sparse = vec![0i32; rows * n_sparse];
+    for (ci, name) in layout.sparse_cols.iter().enumerate() {
+        let data = expect_col(batch, name)?.as_i64()?;
+        for (r, &v) in data.iter().enumerate() {
+            if v < 0 || v > i32::MAX as i64 {
+                return Err(EtlError::Coord(format!(
+                    "sparse index {v} out of i32 range in {name}"
+                )));
+            }
+            sparse[r * n_sparse + ci] = v as i32;
+        }
+    }
+
+    let labels = expect_col(batch, &layout.label_col)?.as_f32()?.to_vec();
+
+    Ok(PackedBatch { rows, n_dense, n_sparse, dense, sparse, labels })
+}
+
+fn expect_col<'a>(batch: &'a Batch, name: &str) -> Result<&'a Column> {
+    batch
+        .get(name)
+        .ok_or_else(|| EtlError::Coord(format!("transformed batch missing column {name:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::column::Column;
+    use crate::etl::dag::Dag;
+    use crate::etl::ops::OpSpec;
+    use crate::etl::schema::Schema;
+
+    fn layout_and_batch() -> (PackLayout, Batch) {
+        let _schema = Schema::tabular("t", 2, 2, 100);
+        let mut dag = Dag::new("p");
+        let l = dag.source("t_label", crate::etl::column::ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        for i in 0..2 {
+            let s = dag.source(format!("t_i{i}"), crate::etl::column::ColType::F32);
+            let o = dag.op(OpSpec::Clamp { lo: 0.0, hi: 1.0 }, &[s]);
+            dag.sink(format!("dense{i}"), o, SinkRole::Dense);
+        }
+        for i in 0..2 {
+            let s = dag.source(format!("t_c{i}"), crate::etl::column::ColType::Hex8);
+            let h = dag.op(OpSpec::Hex2Int, &[s]);
+            dag.sink(format!("sparse{i}"), h, SinkRole::SparseIndex);
+        }
+        let layout = PackLayout::of(&dag).unwrap();
+
+        let mut b = Batch::new();
+        b.push("label", Column::f32(vec![1.0, 0.0, 1.0])).unwrap();
+        b.push("dense0", Column::f32(vec![0.1, 0.2, 0.3])).unwrap();
+        b.push("dense1", Column::f32(vec![1.1, 1.2, 1.3])).unwrap();
+        b.push("sparse0", Column::i64(vec![7, 8, 9])).unwrap();
+        b.push("sparse1", Column::i64(vec![70, 80, 90])).unwrap();
+        (layout, b)
+    }
+
+    #[test]
+    fn packs_row_major() {
+        let (layout, b) = layout_and_batch();
+        let p = pack(&b, &layout).unwrap();
+        assert_eq!(p.rows, 3);
+        assert_eq!(p.dense, vec![0.1, 1.1, 0.2, 1.2, 0.3, 1.3]);
+        assert_eq!(p.sparse, vec![7, 70, 8, 80, 9, 90]);
+        assert_eq!(p.labels, vec![1.0, 0.0, 1.0]);
+        assert_eq!(p.bytes(), (6 * 4 + 6 * 4 + 3 * 4) as u64);
+    }
+
+    #[test]
+    fn missing_column_is_an_error() {
+        let (layout, mut b) = layout_and_batch();
+        b.columns.retain(|(n, _)| n != "sparse1");
+        assert!(pack(&b, &layout).is_err());
+    }
+
+    #[test]
+    fn negative_index_rejected() {
+        let (layout, mut b) = layout_and_batch();
+        for (n, c) in b.columns.iter_mut() {
+            if n == "sparse0" {
+                *c = Column::i64(vec![-1, 0, 1]);
+            }
+        }
+        assert!(pack(&b, &layout).is_err());
+    }
+
+    #[test]
+    fn chunks_split_evenly_and_drop_tail() {
+        let (layout, b) = layout_and_batch();
+        let p = pack(&b, &layout).unwrap();
+        let chunks = p.chunks(2);
+        assert_eq!(chunks.len(), 1); // 3 rows → one chunk of 2, tail dropped
+        assert_eq!(chunks[0].rows, 2);
+        assert_eq!(chunks[0].dense, vec![0.1, 1.1, 0.2, 1.2]);
+        assert_eq!(chunks[0].labels, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn layout_orders_match_declaration() {
+        let (layout, _) = layout_and_batch();
+        assert_eq!(layout.dense_cols, vec!["dense0", "dense1"]);
+        assert_eq!(layout.sparse_cols, vec!["sparse0", "sparse1"]);
+        assert_eq!(layout.label_col, "label");
+    }
+}

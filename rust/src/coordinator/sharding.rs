@@ -1,0 +1,163 @@
+//! Multi-FPGA ETL sharding (paper §3.5): "because ETL demand scales with
+//! data volume rather than model size, ETL can be sharded across FPGAs
+//! independently of the number of trainers." This module plans and
+//! simulates that scale-out: a fleet of vFPGA devices, a shard router
+//! assigning dataset shards to devices, and aggregate-throughput
+//! provisioning against a target trainer consumption rate.
+
+use crate::memsys::IngestSource;
+use crate::planner::HardwarePlan;
+
+/// One ETL device in the fleet.
+#[derive(Debug, Clone)]
+pub struct EtlShard {
+    pub device_id: usize,
+    /// Pipelines instantiated on this device.
+    pub pipelines: usize,
+    /// Ingest source for this device.
+    pub source: IngestSource,
+}
+
+/// A provisioning plan for a trainer fleet.
+#[derive(Debug, Clone)]
+pub struct ShardingPlan {
+    pub shards: Vec<EtlShard>,
+    /// Aggregate ETL bandwidth (bytes/s).
+    pub aggregate_bw: f64,
+    /// Target trainer consumption (bytes/s).
+    pub target_bw: f64,
+}
+
+impl ShardingPlan {
+    /// Headroom ratio (≥ 1.0 means the trainers stay fed).
+    pub fn headroom(&self) -> f64 {
+        self.aggregate_bw / self.target_bw
+    }
+}
+
+/// Per-device throughput with `pipelines` instances (clock derating per
+/// §4.8) ingesting from `source`.
+pub fn device_bw(plan: &HardwarePlan, pipelines: usize, source: IngestSource) -> f64 {
+    let clk_scale = match pipelines {
+        0..=4 => 1.0,
+        5 | 6 => 0.9,
+        _ => 0.75,
+    };
+    let per_pipe = plan.line_rate() * clk_scale;
+    let ingest_share = source.stream_bandwidth() / pipelines.max(1) as f64;
+    pipelines as f64 * per_pipe.min(ingest_share)
+}
+
+/// Provision the minimum fleet that sustains `target_bw` of trainer
+/// consumption with `headroom` (>1 keeps backpressure credits from
+/// exhausting during vocab-heavy phases). Fills devices up to 4 pipelines
+/// (the linear-scaling region) before adding a device.
+pub fn provision(
+    plan: &HardwarePlan,
+    target_bw: f64,
+    headroom: f64,
+    source: IngestSource,
+) -> ShardingPlan {
+    assert!(target_bw > 0.0 && headroom >= 1.0);
+    let need = target_bw * headroom;
+    let per_device = device_bw(plan, 4, source);
+    let mut shards = Vec::new();
+    let mut agg = 0.0;
+    let mut device_id = 0;
+    while agg < need {
+        // Last device may need fewer pipelines.
+        let remaining = need - agg;
+        let mut pipelines = 4;
+        for p in 1..=4usize {
+            if device_bw(plan, p, source) >= remaining {
+                pipelines = p;
+                break;
+            }
+        }
+        let bw = device_bw(plan, pipelines, source);
+        shards.push(EtlShard { device_id, pipelines, source });
+        agg += bw;
+        device_id += 1;
+        if device_id > 1024 {
+            break; // provisioning guard
+        }
+        let _ = per_device;
+    }
+    ShardingPlan { shards, aggregate_bw: agg, target_bw }
+}
+
+/// Route dataset shard `shard_idx` to a device round-robin — stateless
+/// operators permit arbitrary routing; stateful pipelines use a stable
+/// hash so each device's vocabulary sees a consistent key partition.
+pub fn route(plan: &ShardingPlan, shard_idx: usize, stateful: bool) -> usize {
+    let n = plan.shards.len().max(1);
+    if stateful {
+        (crate::etl::ops::kernels::mix64(shard_idx as u64) % n as u64) as usize
+    } else {
+        shard_idx % n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::pipelines::{build, PipelineKind};
+    use crate::etl::schema::Schema;
+    use crate::planner::{compile, PlannerConfig};
+
+    fn plan() -> HardwarePlan {
+        let schema = Schema::criteo_kaggle();
+        let dag = build(PipelineKind::I, &schema);
+        compile(&dag, &schema, &PlannerConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn provision_meets_target_with_headroom() {
+        let p = plan();
+        // Feed 8 trainers at 100 MB/s each with 1.5× headroom.
+        let sharding = provision(&p, 8.0 * 100.0e6, 1.5, IngestSource::OnBoard);
+        assert!(sharding.headroom() >= 1.5);
+        // One device at 11.5 GB/s line rate is plenty.
+        assert_eq!(sharding.shards.len(), 1);
+    }
+
+    #[test]
+    fn provision_scales_out_for_big_fleets() {
+        let p = plan();
+        // A trainer fleet consuming 100 GB/s needs multiple devices.
+        let sharding = provision(&p, 100.0e9, 1.0, IngestSource::OnBoard);
+        assert!(sharding.shards.len() > 1, "{:?}", sharding.shards.len());
+        assert!(sharding.aggregate_bw >= 100.0e9);
+        // Devices fill to 4 pipelines (linear region) before adding more.
+        assert!(sharding.shards[0].pipelines == 4);
+    }
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let p = plan();
+        let sharding = provision(&p, 100.0e9, 1.0, IngestSource::OnBoard);
+        let n = sharding.shards.len();
+        for idx in 0..100 {
+            let a = route(&sharding, idx, true);
+            let b = route(&sharding, idx, true);
+            assert_eq!(a, b);
+            assert!(a < n);
+            assert_eq!(route(&sharding, idx, false), idx % n);
+        }
+    }
+
+    #[test]
+    fn stateful_routing_balances() {
+        let p = plan();
+        let sharding = provision(&p, 100.0e9, 1.0, IngestSource::OnBoard);
+        let n = sharding.shards.len();
+        let mut counts = vec![0usize; n];
+        for idx in 0..10_000 {
+            counts[route(&sharding, idx, true)] += 1;
+        }
+        let expect = 10_000 / n;
+        for c in counts {
+            assert!(c > expect / 2 && c < expect * 2, "c={c} expect={expect}");
+        }
+    }
+}

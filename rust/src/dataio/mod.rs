@@ -1,0 +1,7 @@
+//! Data ingestion substrate: the `rcol` columnar format, synthetic
+//! Criteo-faithful generators, and the evaluation dataset specifications.
+
+pub mod dataset;
+pub mod rcol;
+pub mod synth;
+pub mod tsv;

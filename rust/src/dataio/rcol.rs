@@ -1,0 +1,216 @@
+//! `rcol` — the repository's columnar binary format (a minimal stand-in
+//! for uncompressed Parquet, which the paper also uses uncompressed to
+//! isolate preprocessing cost, §4.1.1). Column-major layout enables the
+//! selective, streaming scans the FPGA data loader performs.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "RCOL1\0\0\0" | u64 rows | u32 ncols
+//! per column: u16 name_len | name | u8 type_tag | u32 width | payload
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{EtlError, Result};
+use crate::etl::column::{Batch, ColType, Column};
+
+const MAGIC: &[u8; 8] = b"RCOL1\0\0\0";
+
+fn type_tag(t: ColType) -> u8 {
+    match t {
+        ColType::F32 => 0,
+        ColType::Hex8 => 1,
+        ColType::I64 => 2,
+    }
+}
+
+fn tag_type(tag: u8) -> Result<ColType> {
+    match tag {
+        0 => Ok(ColType::F32),
+        1 => Ok(ColType::Hex8),
+        2 => Ok(ColType::I64),
+        t => Err(EtlError::Format(format!("unknown column type tag {t}"))),
+    }
+}
+
+/// Serialize a batch to a writer.
+pub fn write_batch<W: Write>(w: &mut W, batch: &Batch) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&(batch.rows() as u64).to_le_bytes())?;
+    w.write_all(&(batch.columns.len() as u32).to_le_bytes())?;
+    for (name, col) in &batch.columns {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            return Err(EtlError::Format(format!("column name too long: {name:?}")));
+        }
+        w.write_all(&(nb.len() as u16).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&[type_tag(col.coltype())])?;
+        w.write_all(&(col.width() as u32).to_le_bytes())?;
+        match col {
+            Column::F32 { data, .. } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Column::Hex8 { data } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            Column::I64 { data, .. } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Deserialize a batch from a reader.
+pub fn read_batch<R: Read>(r: &mut R) -> Result<Batch> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(EtlError::Format("bad rcol magic".into()));
+    }
+    let rows = read_u64(r)? as usize;
+    let ncols = read_u32(r)? as usize;
+    let mut batch = Batch::new();
+    for _ in 0..ncols {
+        let name_len = read_u16(r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name)
+            .map_err(|e| EtlError::Format(format!("bad column name: {e}")))?;
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        let ty = tag_type(tag[0])?;
+        let width = read_u32(r)? as usize;
+        let n = rows * width.max(1);
+        let col = match ty {
+            ColType::F32 => {
+                let mut data = vec![0f32; n];
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(4).enumerate() {
+                    data[i] = f32::from_le_bytes(c.try_into().unwrap());
+                }
+                Column::F32 { data, width }
+            }
+            ColType::Hex8 => {
+                let mut data = vec![0u64; n];
+                let mut buf = vec![0u8; n * 8];
+                r.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(8).enumerate() {
+                    data[i] = u64::from_le_bytes(c.try_into().unwrap());
+                }
+                Column::Hex8 { data }
+            }
+            ColType::I64 => {
+                let mut data = vec![0i64; n];
+                let mut buf = vec![0u8; n * 8];
+                r.read_exact(&mut buf)?;
+                for (i, c) in buf.chunks_exact(8).enumerate() {
+                    data[i] = i64::from_le_bytes(c.try_into().unwrap());
+                }
+                Column::I64 { data, width }
+            }
+        };
+        batch.push(name, col)?;
+    }
+    Ok(batch)
+}
+
+/// Write a batch to a file path.
+pub fn write_file(path: &Path, batch: &Batch) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    write_batch(&mut f, batch)?;
+    f.flush()?;
+    Ok(())
+}
+
+/// Read a batch from a file path.
+pub fn read_file(path: &Path) -> Result<Batch> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    read_batch(&mut f)
+}
+
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_batch() -> Batch {
+        let mut b = Batch::new();
+        b.push("dense", Column::f32(vec![1.5, -2.0, f32::NAN])).unwrap();
+        b.push("hex", Column::hex8(vec![0x3030303030303141, 0x3030303030306666, 1])).unwrap();
+        b.push("idx", Column::I64 { data: vec![1, 2, 3, 4, 5, 6], width: 2 }).unwrap();
+        b
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let batch = sample_batch();
+        let mut buf = Vec::new();
+        write_batch(&mut buf, &batch).unwrap();
+        let got = read_batch(&mut buf.as_slice()).unwrap();
+        assert_eq!(got.rows(), 3);
+        assert_eq!(got.columns.len(), 3);
+        // NaN-aware compare for the f32 column.
+        let a = batch.get("dense").unwrap().as_f32().unwrap();
+        let b = got.get("dense").unwrap().as_f32().unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert!(x == y || (x.is_nan() && y.is_nan()));
+        }
+        assert_eq!(
+            batch.get("idx").unwrap().as_i64().unwrap(),
+            got.get("idx").unwrap().as_i64().unwrap()
+        );
+        assert_eq!(got.get("idx").unwrap().width(), 2);
+    }
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("piperec_rcol_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("batch.rcol");
+        write_file(&path, &sample_batch()).unwrap();
+        let got = read_file(&path).unwrap();
+        assert_eq!(got.rows(), 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOTRCOL!rest".to_vec();
+        assert!(read_batch(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut buf = Vec::new();
+        write_batch(&mut buf, &sample_batch()).unwrap();
+        buf.truncate(buf.len() - 4);
+        assert!(read_batch(&mut buf.as_slice()).is_err());
+    }
+}

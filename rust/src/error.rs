@@ -1,0 +1,55 @@
+//! Error types shared across the library.
+
+use crate::etl::column::ColType;
+
+/// Library-wide result alias.
+pub type Result<T, E = EtlError> = std::result::Result<T, E>;
+
+/// Errors raised by ETL, planning, simulation and runtime layers.
+#[derive(Debug, thiserror::Error)]
+pub enum EtlError {
+    #[error("column type mismatch: expected {expected}, got {got}")]
+    TypeMismatch { expected: ColType, got: ColType },
+
+    #[error("row count mismatch: expected {expected}, got {got}")]
+    RowCountMismatch { expected: usize, got: usize },
+
+    #[error("invalid hex token: {0:?}")]
+    BadHex(String),
+
+    #[error("schema error: {0}")]
+    Schema(String),
+
+    #[error("DAG validation error: {0}")]
+    Dag(String),
+
+    #[error("planner error: {0}")]
+    Plan(String),
+
+    #[error("operator {op}: {msg}")]
+    Op { op: &'static str, msg: String },
+
+    #[error("vocabulary error: {0}")]
+    Vocab(String),
+
+    #[error("data format error: {0}")]
+    Format(String),
+
+    #[error("memory subsystem error: {0}")]
+    Mem(String),
+
+    #[error("coordinator error: {0}")]
+    Coord(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl EtlError {
+    pub fn op(op: &'static str, msg: impl Into<String>) -> EtlError {
+        EtlError::Op { op, msg: msg.into() }
+    }
+}

@@ -1,0 +1,243 @@
+//! Typed columnar values flowing through ETL pipelines.
+//!
+//! Recommender ETL is columnar: every feature is a column, and operators
+//! transform whole columns. Three physical representations cover the
+//! paper's operator pool (Table 1):
+//!
+//! * `F32`  — dense numeric features (possibly multi-wide after OneHot),
+//! * `Hex8` — raw categorical tokens: 8 ASCII hex chars packed in a `u64`
+//!            (the Criteo on-disk encoding),
+//! * `I64`  — integer categorical values / vocabulary indices.
+
+use crate::error::{EtlError, Result};
+
+/// A typed column of feature values.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    /// Dense floats; `width` values per row (width > 1 after OneHot).
+    F32 { data: Vec<f32>, width: usize },
+    /// Raw categorical tokens as 8 packed ASCII hex characters.
+    Hex8 { data: Vec<u64> },
+    /// Integer categorical values or indices; `width` values per row.
+    I64 { data: Vec<i64>, width: usize },
+}
+
+/// Logical type tags used by DAG validation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ColType {
+    F32,
+    Hex8,
+    I64,
+}
+
+impl std::fmt::Display for ColType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ColType::F32 => write!(f, "f32"),
+            ColType::Hex8 => write!(f, "hex8"),
+            ColType::I64 => write!(f, "i64"),
+        }
+    }
+}
+
+impl Column {
+    pub fn f32(data: Vec<f32>) -> Column {
+        Column::F32 { data, width: 1 }
+    }
+
+    pub fn i64(data: Vec<i64>) -> Column {
+        Column::I64 { data, width: 1 }
+    }
+
+    pub fn hex8(data: Vec<u64>) -> Column {
+        Column::Hex8 { data }
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::F32 { data, width } => data.len() / width.max(&1),
+            Column::Hex8 { data } => data.len(),
+            Column::I64 { data, width } => data.len() / width.max(&1),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Values per row.
+    pub fn width(&self) -> usize {
+        match self {
+            Column::F32 { width, .. } => *width,
+            Column::Hex8 { .. } => 1,
+            Column::I64 { width, .. } => *width,
+        }
+    }
+
+    pub fn coltype(&self) -> ColType {
+        match self {
+            Column::F32 { .. } => ColType::F32,
+            Column::Hex8 { .. } => ColType::Hex8,
+            Column::I64 { .. } => ColType::I64,
+        }
+    }
+
+    /// Bytes per row on the wire (64-bit words for hex/int, 4-byte floats).
+    pub fn row_bytes(&self) -> usize {
+        match self {
+            Column::F32 { width, .. } => 4 * width,
+            Column::Hex8 { .. } => 8,
+            Column::I64 { width, .. } => 8 * width,
+        }
+    }
+
+    /// Total payload bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.len() * self.row_bytes()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Column::F32 { data, .. } => Ok(data),
+            other => Err(EtlError::TypeMismatch {
+                expected: ColType::F32,
+                got: other.coltype(),
+            }),
+        }
+    }
+
+    pub fn as_hex8(&self) -> Result<&[u64]> {
+        match self {
+            Column::Hex8 { data } => Ok(data),
+            other => Err(EtlError::TypeMismatch {
+                expected: ColType::Hex8,
+                got: other.coltype(),
+            }),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match self {
+            Column::I64 { data, .. } => Ok(data),
+            other => Err(EtlError::TypeMismatch {
+                expected: ColType::I64,
+                got: other.coltype(),
+            }),
+        }
+    }
+}
+
+/// Pack an ASCII hex string (up to 8 chars) into the `Hex8` wire format.
+/// Shorter strings are left-padded with '0'.
+pub fn pack_hex(s: &str) -> Result<u64> {
+    let bytes = s.as_bytes();
+    if bytes.len() > 8 || bytes.is_empty() {
+        return Err(EtlError::BadHex(s.to_string()));
+    }
+    let mut out = [b'0'; 8];
+    out[8 - bytes.len()..].copy_from_slice(bytes);
+    for &b in &out {
+        if !b.is_ascii_hexdigit() {
+            return Err(EtlError::BadHex(s.to_string()));
+        }
+    }
+    Ok(u64::from_be_bytes(out))
+}
+
+/// Unpack the `Hex8` wire format back to an ASCII string.
+pub fn unpack_hex(v: u64) -> String {
+    String::from_utf8(v.to_be_bytes().to_vec()).expect("hex8 is always ASCII")
+}
+
+/// A batch: a set of named columns with equal row counts.
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    pub columns: Vec<(String, Column)>,
+}
+
+impl Batch {
+    pub fn new() -> Batch {
+        Batch::default()
+    }
+
+    /// Number of rows (0 for an empty batch). All columns must agree —
+    /// enforced by `push`.
+    pub fn rows(&self) -> usize {
+        self.columns.first().map(|(_, c)| c.len()).unwrap_or(0)
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, col: Column) -> Result<()> {
+        if !self.columns.is_empty() && col.len() != self.rows() {
+            return Err(EtlError::RowCountMismatch {
+                expected: self.rows(),
+                got: col.len(),
+            });
+        }
+        self.columns.push((name.into(), col));
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Column> {
+        self.columns
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, c)| c)
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.columns.iter().map(|(_, c)| c.total_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hex_roundtrip() {
+        let v = pack_hex("0a1b2c3d").unwrap();
+        assert_eq!(unpack_hex(v), "0a1b2c3d");
+    }
+
+    #[test]
+    fn hex_pads_short_strings() {
+        let v = pack_hex("1a3f").unwrap();
+        assert_eq!(unpack_hex(v), "00001a3f");
+    }
+
+    #[test]
+    fn hex_rejects_bad_input() {
+        assert!(pack_hex("xyz").is_err());
+        assert!(pack_hex("123456789").is_err());
+        assert!(pack_hex("").is_err());
+    }
+
+    #[test]
+    fn widths_and_lengths() {
+        let c = Column::F32 {
+            data: vec![0.0; 12],
+            width: 4,
+        };
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.width(), 4);
+        assert_eq!(c.row_bytes(), 16);
+        assert_eq!(c.total_bytes(), 48);
+    }
+
+    #[test]
+    fn batch_rejects_mismatched_rows() {
+        let mut b = Batch::new();
+        b.push("a", Column::f32(vec![1.0, 2.0])).unwrap();
+        assert!(b.push("b", Column::f32(vec![1.0])).is_err());
+        assert_eq!(b.rows(), 2);
+    }
+
+    #[test]
+    fn typed_accessors_enforce_types() {
+        let c = Column::f32(vec![1.0]);
+        assert!(c.as_f32().is_ok());
+        assert!(c.as_i64().is_err());
+        assert!(c.as_hex8().is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Training-aware ETL abstraction (paper §3): typed columns, schemas,
+//! the software-defined operator pool, symbolic DAGs with fit/apply
+//! semantics, and the canned evaluation pipelines.
+
+pub mod column;
+pub mod dag;
+pub mod ops;
+pub mod pipelines;
+pub mod schema;

@@ -1,0 +1,231 @@
+//! Scalar/streaming functional kernels for every operator in the paper's
+//! operator pool (Table 1). These are the single source of truth for
+//! operator semantics: the FPGA dataflow simulator, the CPU baseline and
+//! the property tests all call into this module, so platform comparisons
+//! are bit-identical by construction.
+
+/// Clamp: restrict values to `[lo, hi]` (§3.2.1; paper's production config
+/// clips negatives to zero with `lo = 0`).
+#[inline]
+pub fn clamp(x: f32, lo: f32, hi: f32) -> f32 {
+    // NaNs pass through (handled by FillMissing upstream).
+    if x < lo {
+        lo
+    } else if x > hi {
+        hi
+    } else {
+        x
+    }
+}
+
+/// Logarithm: `log(x + 1)` — reduces skew and compresses heavy tails.
+#[inline]
+pub fn logarithm(x: f32) -> f32 {
+    (x + 1.0).ln()
+}
+
+/// FillMissing (dense): replace NaN with a default.
+#[inline]
+pub fn fill_missing_f32(x: f32, default: f32) -> f32 {
+    if x.is_nan() {
+        default
+    } else {
+        x
+    }
+}
+
+/// FillMissing (sparse): replace the missing sentinel with a default token.
+pub const MISSING_I64: i64 = i64::MIN;
+
+#[inline]
+pub fn fill_missing_i64(x: i64, default: i64) -> i64 {
+    if x == MISSING_I64 {
+        default
+    } else {
+        x
+    }
+}
+
+/// Hex2Int: parse 8 packed ASCII hex chars (big-endian `u64`) into an
+/// integer. Mirrors the FPGA implementation: translate each ASCII code to
+/// its nibble and concatenate (II = 1).
+///
+/// Branchless SWAR (§Perf): for valid hex ASCII, `nibble = (b & 0x0F) +
+/// 9·bit6(b)` — digits have bit 6 clear, letters (upper or lower) have it
+/// set and their low nibble is 1–6. All eight bytes are decoded in
+/// parallel inside the u64, then the nibbles are horizontally packed.
+/// Malformed bytes decode to an unspecified nibble (the scalar reference
+/// used by the validator decodes them as 0; generators only emit valid
+/// hex — see `hex2int_checked` for the validating path).
+#[inline]
+pub fn hex2int(packed: u64) -> i64 {
+    const LOW: u64 = 0x0F0F_0F0F_0F0F_0F0F;
+    const ONE: u64 = 0x0101_0101_0101_0101;
+    // Per-byte nibble value, one per byte lane. Byte lane i (LSB = least
+    // significant hex digit) holds nibble n_i.
+    let n = (packed & LOW) + 9 * ((packed >> 6) & ONE);
+    // Horizontal pack: n_i·16^i via three fold steps.
+    let x = (n | (n >> 4)) & 0x00FF_00FF_00FF_00FF;
+    let x = (x | (x >> 8)) & 0x0000_FFFF_0000_FFFF;
+    let x = (x | (x >> 16)) & 0x0000_0000_FFFF_FFFF;
+    x as i64
+}
+
+/// Validating Hex2Int: returns `None` for non-hex bytes (ingest
+/// validation path; the hot loop uses the branchless `hex2int`).
+#[inline]
+pub fn hex2int_checked(packed: u64) -> Option<i64> {
+    for b in packed.to_be_bytes() {
+        if !b.is_ascii_hexdigit() {
+            return None;
+        }
+    }
+    Some(hex2int(packed))
+}
+
+/// Modulus: positive modulus mapping IDs into `[0, m)` (e.g. (-7) mod 5 = 3).
+#[inline]
+pub fn modulus(x: i64, m: i64) -> i64 {
+    debug_assert!(m > 0);
+    x.rem_euclid(m)
+}
+
+/// SigridHash: bound categorical IDs via a 64-bit mix then positive mod.
+/// (Named after Meta's torcharrow `sigrid_hash`.)
+#[inline]
+pub fn sigrid_hash(x: i64, m: i64) -> i64 {
+    modulus(mix64(x as u64) as i64, m)
+}
+
+/// Cartesian: cross two categorical keys into a new key distinct from the
+/// originals — `hash(a, b) mod m` (§2.2).
+#[inline]
+pub fn cartesian(a: i64, b: i64, m: i64) -> i64 {
+    let h = mix64((a as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ mix64(b as u64));
+    modulus(h as i64, m)
+}
+
+/// OneHot: encode `bin ∈ [0, k)` as an indicator row of width `k`.
+/// Out-of-range bins produce an all-zero row (matching tf.one_hot).
+#[inline]
+pub fn one_hot_into(bin: i64, k: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), k);
+    out.fill(0.0);
+    if bin >= 0 && (bin as usize) < k {
+        out[bin as usize] = 1.0;
+    }
+}
+
+/// Bucketize: discretize a scalar by ascending bin borders; returns the
+/// number of borders strictly below-or-equal, i.e. `x=37, borders=[10,20,40]
+/// → bin 2` counting from 0 (the paper's example counts from 1).
+#[inline]
+pub fn bucketize(x: f32, borders: &[f32]) -> i64 {
+    // Branchless-ish binary search over ascending borders.
+    let mut lo = 0usize;
+    let mut hi = borders.len();
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if x >= borders[mid] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as i64
+}
+
+/// SplitMix64 finalizer — the hash core shared by SigridHash/Cartesian and
+/// the vocabulary table.
+#[inline]
+pub fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::column::pack_hex;
+
+    #[test]
+    fn clamp_paper_example() {
+        // x=-1, [0,10] → 0
+        assert_eq!(clamp(-1.0, 0.0, 10.0), 0.0);
+        assert_eq!(clamp(5.0, 0.0, 10.0), 5.0);
+        assert_eq!(clamp(11.0, 0.0, 10.0), 10.0);
+    }
+
+    #[test]
+    fn logarithm_paper_example() {
+        // x=999 → log(999+1)
+        assert!((logarithm(999.0) - 1000f32.ln()).abs() < 1e-6);
+        assert_eq!(logarithm(0.0), 0.0);
+    }
+
+    #[test]
+    fn hex2int_paper_example() {
+        // "0x1a3f" → 6719
+        assert_eq!(hex2int(pack_hex("1a3f").unwrap()), 6719);
+        assert_eq!(hex2int(pack_hex("00000000").unwrap()), 0);
+        assert_eq!(hex2int(pack_hex("ffffffff").unwrap()), 0xffff_ffff);
+        // Full 8 chars, upper case.
+        assert_eq!(hex2int(pack_hex("DEADBEEF").unwrap()), 0xDEAD_BEEFu32 as i64);
+    }
+
+    #[test]
+    fn modulus_paper_example() {
+        // (-7) mod 5 → 3
+        assert_eq!(modulus(-7, 5), 3);
+        assert_eq!(modulus(7, 5), 2);
+        assert_eq!(modulus(0, 5), 0);
+    }
+
+    #[test]
+    fn one_hot_paper_example() {
+        // bin=3, K=5 → [0,0,0,1,0]
+        let mut out = [0f32; 5];
+        one_hot_into(3, 5, &mut out);
+        assert_eq!(out, [0.0, 0.0, 0.0, 1.0, 0.0]);
+        one_hot_into(9, 5, &mut out);
+        assert_eq!(out, [0.0; 5]);
+        one_hot_into(-1, 5, &mut out);
+        assert_eq!(out, [0.0; 5]);
+    }
+
+    #[test]
+    fn bucketize_matches_linear_scan() {
+        let borders = [10.0, 20.0, 40.0];
+        for (x, want) in [(5.0, 0), (10.0, 1), (15.0, 1), (37.0, 2), (40.0, 3), (99.0, 3)] {
+            assert_eq!(bucketize(x, &borders), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn fill_missing_handles_nan_and_sentinel() {
+        assert_eq!(fill_missing_f32(f32::NAN, 0.5), 0.5);
+        assert_eq!(fill_missing_f32(3.2, 0.0), 3.2);
+        assert_eq!(fill_missing_i64(MISSING_I64, 7), 7);
+        assert_eq!(fill_missing_i64(42, 7), 42);
+    }
+
+    #[test]
+    fn sigrid_hash_bounded_and_stable() {
+        for x in [-100i64, 0, 1, 1 << 40] {
+            let h = sigrid_hash(x, 1000);
+            assert!((0..1000).contains(&h));
+            assert_eq!(h, sigrid_hash(x, 1000), "deterministic");
+        }
+    }
+
+    #[test]
+    fn cartesian_distinct_from_inputs() {
+        let m = 1 << 20;
+        let c1 = cartesian(42, 17, m);
+        let c2 = cartesian(17, 42, m);
+        assert!((0..m).contains(&c1));
+        // Order matters for a cross feature.
+        assert_ne!(c1, c2);
+    }
+}

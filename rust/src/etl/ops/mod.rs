@@ -1,0 +1,424 @@
+//! The software-defined operator pool (paper Table 1): declarative
+//! [`OpSpec`]s with categories, hardware cost metadata (initiation
+//! interval, resource estimate) and a functional `apply` used by every
+//! execution backend.
+
+pub mod kernels;
+pub mod vocab;
+
+use crate::error::{EtlError, Result};
+use crate::etl::column::{ColType, Column};
+use kernels::*;
+use vocab::VocabTable;
+
+/// Where a stateful operator's table lives — decided by the planner and
+/// reflected in the initiation interval (§3.2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StatePlacement {
+    /// On-chip BRAM: VocabGen II=2 (read-after-write), VocabMap II=1.
+    Bram,
+    /// Off-chip HBM: II ≈ 6 for both.
+    Hbm,
+}
+
+/// Operator category along the paper's two axes (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpCategory {
+    pub dense: bool,
+    pub sparse: bool,
+    pub stateful: bool,
+}
+
+/// A software-defined ETL operator with frozen parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpSpec {
+    /// Impute NaN (dense) / missing sentinel (sparse) with a default.
+    FillMissing { dense_default: f32, sparse_default: i64 },
+    /// Restrict values to `[lo, hi]`.
+    Clamp { lo: f32, hi: f32 },
+    /// `log(x + 1)`.
+    Logarithm,
+    /// Indicator encoding of a small-cardinality bin.
+    OneHot { k: usize },
+    /// Discretize by ascending borders.
+    Bucketize { borders: Vec<f32> },
+    /// Parse packed ASCII hex to integer.
+    Hex2Int,
+    /// Positive modulus into `[0, m)`.
+    Modulus { m: i64 },
+    /// Bounded hash of a categorical ID.
+    SigridHash { m: i64 },
+    /// Cross two categorical keys (binary operator).
+    Cartesian { m: i64 },
+    /// Fit: build the vocabulary table (stateful).
+    VocabGen { expected: usize },
+    /// Apply: map through the frozen table; `oov` = index for unseen keys
+    /// (None ⇒ unseen keys are an error).
+    VocabMap { oov: Option<i64> },
+}
+
+/// Per-operator FPGA resource estimate, in absolute units of the Alveo
+/// U55c (1,303,680 LUT-equivalent CLB units, 2,016 BRAM tiles, 9,024 DSPs).
+/// Calibrated against the paper's Table 4 (see `planner::resources`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceCost {
+    pub clb: f64,
+    pub bram: f64,
+    pub dsp: f64,
+}
+
+impl std::ops::Add for ResourceCost {
+    type Output = ResourceCost;
+    fn add(self, o: ResourceCost) -> ResourceCost {
+        ResourceCost {
+            clb: self.clb + o.clb,
+            bram: self.bram + o.bram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+impl std::ops::Mul<f64> for ResourceCost {
+    type Output = ResourceCost;
+    fn mul(self, k: f64) -> ResourceCost {
+        ResourceCost {
+            clb: self.clb * k,
+            bram: self.bram * k,
+            dsp: self.dsp * k,
+        }
+    }
+}
+
+impl OpSpec {
+    /// Short stable name (used in plans, logs and resource tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpSpec::FillMissing { .. } => "FillMissing",
+            OpSpec::Clamp { .. } => "Clamp",
+            OpSpec::Logarithm => "Logarithm",
+            OpSpec::OneHot { .. } => "OneHot",
+            OpSpec::Bucketize { .. } => "Bucketize",
+            OpSpec::Hex2Int => "Hex2Int",
+            OpSpec::Modulus { .. } => "Modulus",
+            OpSpec::SigridHash { .. } => "SigridHash",
+            OpSpec::Cartesian { .. } => "Cartesian",
+            OpSpec::VocabGen { .. } => "VocabGen",
+            OpSpec::VocabMap { .. } => "VocabMap",
+        }
+    }
+
+    /// Category per Table 1.
+    pub fn category(&self) -> OpCategory {
+        let (dense, sparse, stateful) = match self {
+            OpSpec::FillMissing { .. } => (true, true, false),
+            OpSpec::Clamp { .. } => (true, false, false),
+            OpSpec::Logarithm => (true, false, false),
+            OpSpec::OneHot { .. } => (true, false, false),
+            OpSpec::Bucketize { .. } => (true, true, false),
+            OpSpec::Hex2Int => (false, true, false),
+            OpSpec::Modulus { .. } => (false, true, false),
+            OpSpec::SigridHash { .. } => (false, true, false),
+            OpSpec::Cartesian { .. } => (false, true, false),
+            OpSpec::VocabGen { .. } => (false, true, true),
+            OpSpec::VocabMap { .. } => (false, true, true),
+        };
+        OpCategory { dense, sparse, stateful }
+    }
+
+    pub fn is_stateful(&self) -> bool {
+        self.category().stateful
+    }
+
+    /// Number of input columns (Cartesian is binary).
+    pub fn arity(&self) -> usize {
+        match self {
+            OpSpec::Cartesian { .. } => 2,
+            _ => 1,
+        }
+    }
+
+    /// Input column type accepted.
+    pub fn input_type(&self) -> &'static [ColType] {
+        match self {
+            OpSpec::FillMissing { .. } => &[ColType::F32, ColType::I64],
+            OpSpec::Clamp { .. } | OpSpec::Logarithm => &[ColType::F32],
+            OpSpec::OneHot { .. } => &[ColType::I64],
+            OpSpec::Bucketize { .. } => &[ColType::F32],
+            OpSpec::Hex2Int => &[ColType::Hex8],
+            OpSpec::Modulus { .. }
+            | OpSpec::SigridHash { .. }
+            | OpSpec::Cartesian { .. }
+            | OpSpec::VocabGen { .. }
+            | OpSpec::VocabMap { .. } => &[ColType::I64],
+        }
+    }
+
+    /// Output column type given an input type.
+    pub fn output_type(&self, input: ColType) -> ColType {
+        match self {
+            OpSpec::FillMissing { .. } => input,
+            OpSpec::Clamp { .. } | OpSpec::Logarithm => ColType::F32,
+            OpSpec::OneHot { .. } => ColType::F32,
+            OpSpec::Bucketize { .. } => ColType::I64,
+            OpSpec::Hex2Int => ColType::I64,
+            OpSpec::Modulus { .. }
+            | OpSpec::SigridHash { .. }
+            | OpSpec::Cartesian { .. }
+            | OpSpec::VocabGen { .. }
+            | OpSpec::VocabMap { .. } => ColType::I64,
+        }
+    }
+
+    /// Initiation interval in cycles (§3.2): stateless ops sustain II=1;
+    /// vocabulary ops depend on table placement.
+    pub fn ii_cycles(&self, placement: StatePlacement) -> f64 {
+        match self {
+            OpSpec::VocabGen { .. } => match placement {
+                StatePlacement::Bram => 2.0, // read-after-write latency
+                StatePlacement::Hbm => 6.0,
+            },
+            OpSpec::VocabMap { .. } => match placement {
+                StatePlacement::Bram => 1.0,
+                StatePlacement::Hbm => 6.0,
+            },
+            _ => 1.0,
+        }
+    }
+
+    /// Per-lane FPGA resource estimate (absolute units; see
+    /// `planner::resources` for device totals and calibration).
+    pub fn resources(&self) -> ResourceCost {
+        // CLB figures are LUT-equivalents per processing lane; BRAM in
+        // 36Kb tiles; DSP slices. Stateful table storage is added by the
+        // planner from the actual table size, not here.
+        match self {
+            OpSpec::FillMissing { .. } => ResourceCost { clb: 380.0, bram: 0.0, dsp: 0.0 },
+            OpSpec::Clamp { .. } => ResourceCost { clb: 420.0, bram: 0.0, dsp: 0.0 },
+            OpSpec::Logarithm => ResourceCost { clb: 2900.0, bram: 0.5, dsp: 0.25 },
+            OpSpec::OneHot { .. } => ResourceCost { clb: 610.0, bram: 0.0, dsp: 0.0 },
+            OpSpec::Bucketize { .. } => ResourceCost { clb: 900.0, bram: 0.25, dsp: 0.0 },
+            OpSpec::Hex2Int => ResourceCost { clb: 760.0, bram: 0.0, dsp: 0.0 },
+            OpSpec::Modulus { .. } => ResourceCost { clb: 1450.0, bram: 0.0, dsp: 1.0 },
+            OpSpec::SigridHash { .. } => ResourceCost { clb: 2100.0, bram: 0.0, dsp: 8.0 },
+            OpSpec::Cartesian { .. } => ResourceCost { clb: 2400.0, bram: 0.0, dsp: 8.0 },
+            OpSpec::VocabGen { .. } => ResourceCost { clb: 5200.0, bram: 4.0, dsp: 51.0 },
+            OpSpec::VocabMap { .. } => ResourceCost { clb: 3400.0, bram: 2.0, dsp: 51.0 },
+        }
+    }
+
+    /// Functional application. `inputs` carries `arity()` columns; `state`
+    /// is the fitted vocabulary for `VocabMap` (and receives inserts for
+    /// `VocabGen` when used in streaming-fit mode).
+    pub fn apply(&self, inputs: &[&Column], state: Option<&VocabTable>) -> Result<Column> {
+        if inputs.len() != self.arity() {
+            return Err(EtlError::op(
+                self.name(),
+                format!("expected {} inputs, got {}", self.arity(), inputs.len()),
+            ));
+        }
+        let x = inputs[0];
+        match self {
+            OpSpec::FillMissing { dense_default, sparse_default } => match x {
+                Column::F32 { data, width } => Ok(Column::F32 {
+                    data: data.iter().map(|&v| fill_missing_f32(v, *dense_default)).collect(),
+                    width: *width,
+                }),
+                Column::I64 { data, width } => Ok(Column::I64 {
+                    data: data.iter().map(|&v| fill_missing_i64(v, *sparse_default)).collect(),
+                    width: *width,
+                }),
+                other => Err(self.type_err(other)),
+            },
+            OpSpec::Clamp { lo, hi } => {
+                let data = x.as_f32()?;
+                Ok(Column::F32 {
+                    data: data.iter().map(|&v| clamp(v, *lo, *hi)).collect(),
+                    width: x.width(),
+                })
+            }
+            OpSpec::Logarithm => {
+                let data = x.as_f32()?;
+                Ok(Column::F32 {
+                    data: data.iter().map(|&v| logarithm(v)).collect(),
+                    width: x.width(),
+                })
+            }
+            OpSpec::OneHot { k } => {
+                let data = x.as_i64()?;
+                let mut out = vec![0f32; data.len() * k];
+                for (i, &v) in data.iter().enumerate() {
+                    one_hot_into(v, *k, &mut out[i * k..(i + 1) * k]);
+                }
+                Ok(Column::F32 { data: out, width: *k })
+            }
+            OpSpec::Bucketize { borders } => {
+                let data = x.as_f32()?;
+                Ok(Column::i64(data.iter().map(|&v| bucketize(v, borders)).collect()))
+            }
+            OpSpec::Hex2Int => {
+                let data = x.as_hex8()?;
+                Ok(Column::i64(data.iter().map(|&v| hex2int(v)).collect()))
+            }
+            OpSpec::Modulus { m } => {
+                let data = x.as_i64()?;
+                Ok(Column::i64(data.iter().map(|&v| modulus(v, *m)).collect()))
+            }
+            OpSpec::SigridHash { m } => {
+                let data = x.as_i64()?;
+                Ok(Column::i64(data.iter().map(|&v| sigrid_hash(v, *m)).collect()))
+            }
+            OpSpec::Cartesian { m } => {
+                let a = inputs[0].as_i64()?;
+                let b = inputs[1].as_i64()?;
+                if a.len() != b.len() {
+                    return Err(EtlError::RowCountMismatch {
+                        expected: a.len(),
+                        got: b.len(),
+                    });
+                }
+                Ok(Column::i64(
+                    a.iter().zip(b).map(|(&x, &y)| cartesian(x, y, *m)).collect(),
+                ))
+            }
+            OpSpec::VocabGen { expected } => {
+                // Fit-and-emit: building the table also emits the indices
+                // (the FPGA's downstream module assigns them on the fly).
+                let data = x.as_i64()?;
+                let mut t = VocabTable::with_capacity(*expected);
+                let out: Vec<i64> = data.iter().map(|&v| t.get_or_insert(v) as i64).collect();
+                Ok(Column::i64(out))
+            }
+            OpSpec::VocabMap { oov } => {
+                let data = x.as_i64()?;
+                let table = state.ok_or_else(|| {
+                    EtlError::op("VocabMap", "no fitted vocabulary table provided")
+                })?;
+                match oov {
+                    Some(d) => Ok(Column::i64(vocab::vocab_map_oov(data, table, *d))),
+                    None => Ok(Column::i64(vocab::vocab_map(data, table)?)),
+                }
+            }
+        }
+    }
+
+    /// In-place application for unary elementwise f32 operators on an
+    /// exclusively-owned column (§Perf: saves one allocation + pass per
+    /// chained dense op). Returns false when the op/type combination has
+    /// no in-place form (caller falls back to [`OpSpec::apply`]).
+    pub fn apply_inplace(&self, col: &mut Column) -> bool {
+        match (self, col) {
+            (OpSpec::FillMissing { dense_default, .. }, Column::F32 { data, .. }) => {
+                for v in data.iter_mut() {
+                    *v = fill_missing_f32(*v, *dense_default);
+                }
+                true
+            }
+            (OpSpec::Clamp { lo, hi }, Column::F32 { data, .. }) => {
+                for v in data.iter_mut() {
+                    *v = clamp(*v, *lo, *hi);
+                }
+                true
+            }
+            (OpSpec::Logarithm, Column::F32 { data, .. }) => {
+                for v in data.iter_mut() {
+                    *v = logarithm(*v);
+                }
+                true
+            }
+            (OpSpec::FillMissing { sparse_default, .. }, Column::I64 { data, .. }) => {
+                for v in data.iter_mut() {
+                    *v = fill_missing_i64(*v, *sparse_default);
+                }
+                true
+            }
+            (OpSpec::Modulus { m }, Column::I64 { data, .. }) => {
+                for v in data.iter_mut() {
+                    *v = modulus(*v, *m);
+                }
+                true
+            }
+            (OpSpec::SigridHash { m }, Column::I64 { data, .. }) => {
+                for v in data.iter_mut() {
+                    *v = sigrid_hash(*v, *m);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn type_err(&self, got: &Column) -> EtlError {
+        EtlError::op(self.name(), format!("unsupported input type {}", got.coltype()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::column::pack_hex;
+
+    #[test]
+    fn categories_match_table1() {
+        assert!(OpSpec::Clamp { lo: 0.0, hi: 1.0 }.category().dense);
+        assert!(!OpSpec::Clamp { lo: 0.0, hi: 1.0 }.category().stateful);
+        assert!(OpSpec::VocabGen { expected: 8 }.is_stateful());
+        assert!(OpSpec::VocabMap { oov: None }.is_stateful());
+        let fm = OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 };
+        assert!(fm.category().dense && fm.category().sparse);
+    }
+
+    #[test]
+    fn ii_model_matches_paper() {
+        let gen = OpSpec::VocabGen { expected: 8 };
+        let map = OpSpec::VocabMap { oov: None };
+        assert_eq!(gen.ii_cycles(StatePlacement::Bram), 2.0);
+        assert_eq!(gen.ii_cycles(StatePlacement::Hbm), 6.0);
+        assert_eq!(map.ii_cycles(StatePlacement::Bram), 1.0);
+        assert_eq!(map.ii_cycles(StatePlacement::Hbm), 6.0);
+        assert_eq!(OpSpec::Hex2Int.ii_cycles(StatePlacement::Bram), 1.0);
+    }
+
+    #[test]
+    fn chain_hex_mod_vocab() {
+        let raw = Column::hex8(vec![
+            pack_hex("1a3f").unwrap(),
+            pack_hex("00ff").unwrap(),
+            pack_hex("1a3f").unwrap(),
+        ]);
+        let ints = OpSpec::Hex2Int.apply(&[&raw], None).unwrap();
+        let modded = OpSpec::Modulus { m: 100 }.apply(&[&ints], None).unwrap();
+        assert_eq!(modded.as_i64().unwrap(), &[19, 55, 19]); // 6719%100, 255%100
+        let indexed = OpSpec::VocabGen { expected: 4 }.apply(&[&modded], None).unwrap();
+        assert_eq!(indexed.as_i64().unwrap(), &[0, 1, 0]);
+    }
+
+    #[test]
+    fn one_hot_widens() {
+        let c = Column::i64(vec![1, 0]);
+        let oh = OpSpec::OneHot { k: 3 }.apply(&[&c], None).unwrap();
+        assert_eq!(oh.width(), 3);
+        assert_eq!(oh.as_f32().unwrap(), &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn vocab_map_requires_state() {
+        let c = Column::i64(vec![1]);
+        assert!(OpSpec::VocabMap { oov: None }.apply(&[&c], None).is_err());
+    }
+
+    #[test]
+    fn cartesian_requires_two_inputs() {
+        let a = Column::i64(vec![1, 2]);
+        assert!(OpSpec::Cartesian { m: 10 }.apply(&[&a], None).is_err());
+        let b = Column::i64(vec![3, 4]);
+        let out = OpSpec::Cartesian { m: 10 }.apply(&[&a, &b], None).unwrap();
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn wrong_type_is_rejected() {
+        let c = Column::f32(vec![1.0]);
+        assert!(OpSpec::Hex2Int.apply(&[&c], None).is_err());
+        assert!(OpSpec::Modulus { m: 5 }.apply(&[&c], None).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Vocabulary table — the stateful heart of sparse-feature ETL (§3.2.2).
+//!
+//! `VocabGen` streams values and assigns each previously-unseen value the
+//! next index in order of first appearance; `VocabMap` replays the stream
+//! through the frozen table. The table is an open-addressing hash map
+//! specialised for `i64 → u32` with power-of-two capacity and SplitMix64
+//! hashing — this is the ETL hot path for Pipelines II/III, so it avoids
+//! the std `HashMap` per-entry overhead.
+
+use crate::error::{EtlError, Result};
+use crate::etl::ops::kernels::mix64;
+
+const EMPTY: i64 = i64::MIN + 1;
+
+/// Insertion-ordered `i64 → u32` vocabulary table.
+#[derive(Debug, Clone)]
+pub struct VocabTable {
+    keys: Vec<i64>,
+    vals: Vec<u32>,
+    mask: usize,
+    len: usize,
+    /// Keys in first-appearance order (the FPGA stores value-index pairs in
+    /// memory in exactly this order).
+    order: Vec<i64>,
+}
+
+impl VocabTable {
+    /// Create with capacity for about `expected` distinct keys.
+    pub fn with_capacity(expected: usize) -> VocabTable {
+        let cap = (expected.max(8) * 2).next_power_of_two();
+        VocabTable {
+            keys: vec![EMPTY; cap],
+            vals: vec![0; cap],
+            mask: cap - 1,
+            len: 0,
+            order: Vec::with_capacity(expected),
+        }
+    }
+
+    /// Number of distinct keys.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub(crate) fn slot(&self, key: i64) -> usize {
+        mix64(key as u64) as usize & self.mask
+    }
+
+    /// Insert if absent; returns the index assigned to `key`.
+    #[inline]
+    pub fn get_or_insert(&mut self, key: i64) -> u32 {
+        debug_assert!(key != EMPTY, "reserved sentinel");
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return self.vals[i];
+            }
+            if k == EMPTY {
+                if (self.len + 1) * 2 > self.keys.len() {
+                    self.grow();
+                    return self.get_or_insert(key);
+                }
+                let idx = self.len as u32;
+                self.keys[i] = key;
+                self.vals[i] = idx;
+                self.len += 1;
+                self.order.push(key);
+                return idx;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Lookup without insertion.
+    #[inline]
+    pub fn get(&self, key: i64) -> Option<u32> {
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return Some(self.vals[i]);
+            }
+            if k == EMPTY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.keys.len() * 2;
+        let mut bigger = VocabTable {
+            keys: vec![EMPTY; new_cap],
+            vals: vec![0; new_cap],
+            mask: new_cap - 1,
+            len: 0,
+            order: Vec::with_capacity(self.order.len() * 2),
+        };
+        for &key in &self.order {
+            bigger.get_or_insert(key);
+        }
+        *self = bigger;
+    }
+
+    /// Keys in first-appearance order.
+    pub fn keys_in_order(&self) -> &[i64] {
+        &self.order
+    }
+
+    /// Approximate bytes of state — drives planner placement (BRAM vs HBM).
+    pub fn state_bytes(&self) -> usize {
+        self.keys.len() * (8 + 4)
+    }
+}
+
+/// Distance (in elements) the bulk loops prefetch ahead. The probe into a
+/// multi-MB table is a dependent random access; issuing the next keys'
+/// cache-line fetches ~16 iterations early hides most of the DRAM latency
+/// (§Perf: VocabGen 385 MB/s → see EXPERIMENTS.md).
+const PREFETCH_AHEAD: usize = 16;
+
+#[inline(always)]
+fn prefetch_slot(t: &VocabTable, key: i64) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        let i = t.slot(key);
+        std::arch::x86_64::_mm_prefetch(
+            t.keys.as_ptr().add(i) as *const i8,
+            std::arch::x86_64::_MM_HINT_T0,
+        );
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (t, key);
+    }
+}
+
+/// Fit phase: build a vocabulary from a stream of values (bulk path with
+/// lookahead prefetch).
+pub fn vocab_gen(values: &[i64], expected: usize) -> VocabTable {
+    let mut t = VocabTable::with_capacity(expected);
+    for (i, &v) in values.iter().enumerate() {
+        if let Some(&ahead) = values.get(i + PREFETCH_AHEAD) {
+            prefetch_slot(&t, ahead);
+        }
+        t.get_or_insert(v);
+    }
+    t
+}
+
+/// Apply phase: map values through a frozen vocabulary. Unknown values are
+/// an error (the planner's fit/apply split guarantees coverage; reaching
+/// this error means fit and apply streams diverged).
+pub fn vocab_map(values: &[i64], table: &VocabTable) -> Result<Vec<i64>> {
+    let mut out = Vec::with_capacity(values.len());
+    for &v in values {
+        match table.get(v) {
+            Some(idx) => out.push(idx as i64),
+            None => {
+                return Err(EtlError::Vocab(format!(
+                    "value {v} not present in fitted vocabulary (size {})",
+                    table.len()
+                )))
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Apply phase with an out-of-vocabulary default (index for unseen keys) —
+/// used by the online/continuous path where new tokens appear mid-stream.
+pub fn vocab_map_oov(values: &[i64], table: &VocabTable, oov: i64) -> Vec<i64> {
+    // Measured: lookahead prefetch *hurts* the read-only path (hits are
+    // common and cheap; the extra address computation dominates) — see
+    // EXPERIMENTS.md §Perf iteration log. Keep the plain loop.
+    values
+        .iter()
+        .map(|&v| table.get(v).map(|i| i as i64).unwrap_or(oov))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assigns_indices_in_first_appearance_order() {
+        let t = vocab_gen(&[30, 10, 30, 20, 10, 40], 8);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.get(30), Some(0));
+        assert_eq!(t.get(10), Some(1));
+        assert_eq!(t.get(20), Some(2));
+        assert_eq!(t.get(40), Some(3));
+        assert_eq!(t.keys_in_order(), &[30, 10, 20, 40]);
+    }
+
+    #[test]
+    fn map_roundtrips() {
+        let vals = vec![5, 5, 9, 7, 5];
+        let t = vocab_gen(&vals, 4);
+        let mapped = vocab_map(&vals, &t).unwrap();
+        assert_eq!(mapped, vec![0, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn map_rejects_unknown() {
+        let t = vocab_gen(&[1, 2], 4);
+        assert!(vocab_map(&[3], &t).is_err());
+    }
+
+    #[test]
+    fn map_oov_substitutes() {
+        let t = vocab_gen(&[1, 2], 4);
+        assert_eq!(vocab_map_oov(&[1, 3, 2], &t, -1), vec![0, -1, 1]);
+    }
+
+    #[test]
+    fn grows_past_initial_capacity() {
+        let mut t = VocabTable::with_capacity(4);
+        for k in 0..10_000i64 {
+            assert_eq!(t.get_or_insert(k), k as u32);
+        }
+        assert_eq!(t.len(), 10_000);
+        // Order preserved through growth.
+        for k in 0..10_000i64 {
+            assert_eq!(t.get(k), Some(k as u32));
+        }
+        assert_eq!(t.keys_in_order().len(), 10_000);
+    }
+
+    #[test]
+    fn handles_negative_keys() {
+        let t = vocab_gen(&[-5, -1, -5, 0], 4);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.get(-5), Some(0));
+    }
+
+    #[test]
+    fn state_bytes_scale_with_capacity() {
+        let small = VocabTable::with_capacity(8);
+        let large = VocabTable::with_capacity(512 * 1024);
+        assert!(large.state_bytes() > small.state_bytes() * 1000);
+    }
+}

@@ -1,0 +1,146 @@
+//! The three canned evaluation pipelines (§4.1.3, Fig. 9), constructed
+//! over an arbitrary tabular schema:
+//!
+//! * **Pipeline I** — stateless: dense → FillMissing→Clamp→Logarithm,
+//!   sparse → Hex2Int→Modulus.
+//! * **Pipeline II** — Pipeline I + small (8K) vocabulary tables.
+//! * **Pipeline III** — Pipeline I + large (512K) vocabulary tables.
+
+use crate::etl::column::ColType;
+use crate::etl::schema::FeatureKind;
+use crate::etl::dag::{Dag, SinkRole};
+use crate::etl::ops::OpSpec;
+use crate::etl::schema::Schema;
+
+/// Small-vocabulary size used by Pipeline II (BRAM-resident).
+pub const SMALL_VOCAB: usize = 8 * 1024;
+/// Large-vocabulary size used by Pipeline III (HBM-resident).
+pub const LARGE_VOCAB: usize = 512 * 1024;
+
+/// Which evaluation pipeline to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PipelineKind {
+    /// Stateless only.
+    I,
+    /// Stateful, small vocab tables.
+    II,
+    /// Stateful, large vocab tables.
+    III,
+}
+
+impl PipelineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PipelineKind::I => "P-I",
+            PipelineKind::II => "P-II",
+            PipelineKind::III => "P-III",
+        }
+    }
+
+    /// Modulus bound / expected vocabulary cardinality.
+    pub fn vocab_size(&self) -> Option<usize> {
+        match self {
+            PipelineKind::I => None,
+            PipelineKind::II => Some(SMALL_VOCAB),
+            PipelineKind::III => Some(LARGE_VOCAB),
+        }
+    }
+
+    pub fn all() -> [PipelineKind; 3] {
+        [PipelineKind::I, PipelineKind::II, PipelineKind::III]
+    }
+}
+
+/// Build the evaluation pipeline `kind` over `schema`.
+///
+/// Every dense field runs FillMissing→Clamp→Logarithm; every sparse field
+/// runs Hex2Int→Modulus (bound = vocab size for stateful pipelines, 2^22
+/// for Pipeline I) and, for Pipelines II/III, VocabGen. The label passes
+/// through.
+pub fn build(kind: PipelineKind, schema: &Schema) -> Dag {
+    let mut dag = Dag::new(format!("{}", kind.label()));
+
+    // Label passthrough.
+    for f in &schema.fields {
+        if f.kind == FeatureKind::Label {
+            let s = dag.source(&f.name, ColType::F32);
+            dag.sink("label", s, SinkRole::Label);
+        }
+    }
+
+    // Dense chain.
+    for (di, f) in schema.dense_fields().enumerate() {
+        let s = dag.source(&f.name, ColType::F32);
+        let fm = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[s],
+        );
+        let cl = dag.op(OpSpec::Clamp { lo: 0.0, hi: f32::MAX }, &[fm]);
+        let lg = dag.op(OpSpec::Logarithm, &[cl]);
+        dag.sink(format!("dense{di}"), lg, SinkRole::Dense);
+    }
+
+    // Sparse chain.
+    let modulus = kind.vocab_size().unwrap_or(1 << 22) as i64;
+    for (si, f) in schema.sparse_fields().enumerate() {
+        let s = dag.source(&f.name, ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: modulus }, &[h]);
+        let out = match kind.vocab_size() {
+            None => m,
+            Some(expected) => dag.vocab_op(
+                OpSpec::VocabGen { expected },
+                m,
+                format!("vocab_{}", f.name),
+            ),
+        };
+        dag.sink(format!("sparse{si}"), out, SinkRole::SparseIndex);
+    }
+
+    dag
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::schema::Schema;
+
+    #[test]
+    fn all_pipelines_validate_on_criteo() {
+        let schema = Schema::criteo_kaggle();
+        for kind in PipelineKind::all() {
+            let dag = build(kind, &schema);
+            dag.validate(&schema).unwrap();
+        }
+    }
+
+    #[test]
+    fn pipeline1_is_stateless() {
+        let schema = Schema::criteo_kaggle();
+        let dag = build(PipelineKind::I, &schema);
+        assert_eq!(dag.stateful_count(), 0);
+    }
+
+    #[test]
+    fn pipeline2_has_one_vocab_per_sparse_feature() {
+        let schema = Schema::criteo_kaggle();
+        let dag = build(PipelineKind::II, &schema);
+        assert_eq!(dag.stateful_count(), 26);
+    }
+
+    #[test]
+    fn sink_counts_match_schema() {
+        let schema = Schema::synthetic_wide();
+        let dag = build(PipelineKind::III, &schema);
+        let sinks: Vec<_> = dag.sinks().collect();
+        // label + 504 dense + 42 sparse
+        assert_eq!(sinks.len(), 1 + 504 + 42);
+    }
+
+    #[test]
+    fn vocab_sizes_match_paper() {
+        assert_eq!(PipelineKind::II.vocab_size(), Some(8192));
+        assert_eq!(PipelineKind::III.vocab_size(), Some(524288));
+        assert_eq!(PipelineKind::I.vocab_size(), None);
+    }
+}

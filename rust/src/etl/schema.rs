@@ -1,0 +1,139 @@
+//! Dataset schemas: which features exist, their kinds, and the canonical
+//! Criteo-style layouts used throughout the evaluation (§4.1.1).
+
+use crate::etl::column::ColType;
+
+/// Feature kind as the paper partitions them (§2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FeatureKind {
+    /// Well-defined numeric attribute (user age, item price, counts).
+    Dense,
+    /// High-cardinality categorical token (user id, ad id) as hex string.
+    Sparse,
+    /// Binary click label.
+    Label,
+}
+
+/// One field of the input schema.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FieldSpec {
+    pub name: String,
+    pub kind: FeatureKind,
+    /// Physical type of the raw column on disk.
+    pub raw_type: ColType,
+    /// Approximate cardinality for sparse features (drives vocab sizing
+    /// and state placement in the planner).
+    pub cardinality: Option<u64>,
+}
+
+/// A dataset schema: ordered fields, with convenience accessors.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Schema {
+    pub fields: Vec<FieldSpec>,
+}
+
+impl Schema {
+    pub fn dense_count(&self) -> usize {
+        self.count(FeatureKind::Dense)
+    }
+
+    pub fn sparse_count(&self) -> usize {
+        self.count(FeatureKind::Sparse)
+    }
+
+    fn count(&self, kind: FeatureKind) -> usize {
+        self.fields.iter().filter(|f| f.kind == kind).count()
+    }
+
+    pub fn dense_fields(&self) -> impl Iterator<Item = &FieldSpec> {
+        self.fields.iter().filter(|f| f.kind == FeatureKind::Dense)
+    }
+
+    pub fn sparse_fields(&self) -> impl Iterator<Item = &FieldSpec> {
+        self.fields.iter().filter(|f| f.kind == FeatureKind::Sparse)
+    }
+
+    pub fn field(&self, name: &str) -> Option<&FieldSpec> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    /// Raw bytes per row: f32 dense, 8-byte hex tokens, 4-byte label.
+    pub fn raw_row_bytes(&self) -> usize {
+        self.fields
+            .iter()
+            .map(|f| match f.raw_type {
+                ColType::F32 => 4,
+                ColType::Hex8 => 8,
+                ColType::I64 => 8,
+            })
+            .sum()
+    }
+
+    /// Criteo Kaggle layout (Dataset-I): 1 label + 13 dense + 26 sparse.
+    pub fn criteo_kaggle() -> Schema {
+        Schema::tabular("criteo", 13, 26, 2_000_000)
+    }
+
+    /// Synthetic wide layout (Dataset-II): 504 dense + 42 sparse (§4.1.1).
+    pub fn synthetic_wide() -> Schema {
+        Schema::tabular("wide", 504, 42, 500_000)
+    }
+
+    /// Generic label + N dense + M sparse tabular schema.
+    pub fn tabular(prefix: &str, dense: usize, sparse: usize, cardinality: u64) -> Schema {
+        let mut fields = Vec::with_capacity(1 + dense + sparse);
+        fields.push(FieldSpec {
+            name: format!("{prefix}_label"),
+            kind: FeatureKind::Label,
+            raw_type: ColType::F32,
+            cardinality: None,
+        });
+        for i in 0..dense {
+            fields.push(FieldSpec {
+                name: format!("{prefix}_i{i}"),
+                kind: FeatureKind::Dense,
+                raw_type: ColType::F32,
+                cardinality: None,
+            });
+        }
+        for i in 0..sparse {
+            fields.push(FieldSpec {
+                name: format!("{prefix}_c{i}"),
+                kind: FeatureKind::Sparse,
+                raw_type: ColType::Hex8,
+                cardinality: Some(cardinality),
+            });
+        }
+        Schema { fields }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn criteo_shape() {
+        let s = Schema::criteo_kaggle();
+        assert_eq!(s.dense_count(), 13);
+        assert_eq!(s.sparse_count(), 26);
+        assert_eq!(s.fields.len(), 40);
+        // 4 (label) + 13*4 + 26*8 = 264 bytes/row raw.
+        assert_eq!(s.raw_row_bytes(), 4 + 52 + 208);
+    }
+
+    #[test]
+    fn wide_shape() {
+        let s = Schema::synthetic_wide();
+        assert_eq!(s.dense_count(), 504);
+        assert_eq!(s.sparse_count(), 42);
+    }
+
+    #[test]
+    fn field_lookup() {
+        let s = Schema::criteo_kaggle();
+        assert!(s.field("criteo_c0").is_some());
+        assert!(s.field("nope").is_none());
+        assert_eq!(s.field("criteo_c0").unwrap().kind, FeatureKind::Sparse);
+    }
+}

@@ -1,0 +1,11 @@
+//! The streaming vFPGA dataflow engine (paper §3): compiled pipelines with
+//! functional + cycle-approximate execution, an event-level simulator
+//! validating the analytical timing model, and the virtualized device with
+//! dynamic regions and partial reconfiguration.
+
+pub mod eventsim;
+pub mod pipeline;
+pub mod vfpga;
+
+pub use pipeline::{Pipeline, ShardTiming};
+pub use vfpga::{RegionId, VFpga, MAX_REGIONS, RECONFIG_SECONDS};

@@ -1,0 +1,205 @@
+//! A compiled pipeline instance: functional execution (bit-exact operator
+//! semantics via the shared kernels) plus the cycle-approximate timing
+//! model from the hardware plan.
+
+use crate::error::Result;
+use crate::etl::column::Batch;
+use crate::etl::dag::EtlState;
+use crate::memsys::IngestSource;
+use crate::planner::{HardwarePlan, StreamProfile};
+
+/// Timing breakdown of one shard pass through the pipeline.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShardTiming {
+    /// Raw bytes ingested.
+    pub ingest_bytes: u64,
+    /// Packed bytes egressed toward the GPU.
+    pub egress_bytes: u64,
+    /// Simulated seconds on the ingest channel.
+    pub ingest_s: f64,
+    /// Simulated seconds in the streaming dataflow.
+    pub compute_s: f64,
+    /// Simulated wall time (ingest/compute overlap: max, §3.5).
+    pub elapsed_s: f64,
+    /// Host wall-clock seconds spent on the functional emulation (not part
+    /// of the simulated time; reported for profiling).
+    pub host_s: f64,
+}
+
+impl ShardTiming {
+    pub fn accumulate(&mut self, o: &ShardTiming) {
+        self.ingest_bytes += o.ingest_bytes;
+        self.egress_bytes += o.egress_bytes;
+        self.ingest_s += o.ingest_s;
+        self.compute_s += o.compute_s;
+        self.elapsed_s += o.elapsed_s;
+        self.host_s += o.host_s;
+    }
+
+    /// Simulated ETL throughput (bytes/s of raw input).
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed_s == 0.0 {
+            0.0
+        } else {
+            self.ingest_bytes as f64 / self.elapsed_s
+        }
+    }
+}
+
+/// A deployed pipeline: plan + fitted state.
+#[derive(Debug)]
+pub struct Pipeline {
+    pub plan: HardwarePlan,
+    pub state: EtlState,
+    fitted: bool,
+}
+
+impl Pipeline {
+    pub fn new(plan: HardwarePlan) -> Pipeline {
+        Pipeline { plan, state: EtlState::default(), fitted: false }
+    }
+
+    /// Fit phase (§3.1): stream a sample through the stateful operators to
+    /// build vocabulary tables. Returns the simulated fit time.
+    pub fn fit(&mut self, sample: &Batch) -> Result<ShardTiming> {
+        let t0 = std::time::Instant::now();
+        self.state = self.plan.dag.fit(sample)?;
+        self.fitted = true;
+        // The fit pass streams only the sparse columns (§3.1 fit/apply).
+        let profile = StreamProfile::from_batch(sample);
+        let bytes = profile.sparse_bytes.max(1);
+        let compute_s = self.plan.fit_seconds(profile);
+        let ingest_s = bytes as f64 / self.plan.runtime.source.stream_bandwidth();
+        Ok(ShardTiming {
+            ingest_bytes: bytes,
+            egress_bytes: 0,
+            ingest_s,
+            compute_s,
+            elapsed_s: ingest_s.max(compute_s),
+            host_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        self.fitted
+    }
+
+    /// Apply phase: transform a raw shard into the training-ready batch,
+    /// returning both the data and the simulated timing.
+    pub fn process(&self, shard: &Batch) -> Result<(Batch, ShardTiming)> {
+        let t0 = std::time::Instant::now();
+        let out = self.plan.dag.apply(shard, &self.state)?;
+        let host_s = t0.elapsed().as_secs_f64();
+
+        let profile = StreamProfile::from_batch(shard);
+        let ingest_bytes = profile.total();
+        let egress_bytes = (out.rows() as u64) * self.plan.runtime.packed_row_bytes;
+        let ingest_s = ingest_bytes as f64 / self.plan.runtime.source.stream_bandwidth();
+        let compute_s = self.plan.apply_seconds(profile);
+        Ok((
+            out,
+            ShardTiming {
+                ingest_bytes,
+                egress_bytes,
+                ingest_s,
+                compute_s,
+                elapsed_s: ingest_s.max(compute_s),
+                host_s,
+            },
+        ))
+    }
+
+    /// Simulated seconds to ETL an entire dataset of `bytes` raw input
+    /// from `source` (conservative unprofiled bound).
+    pub fn projected_seconds(&self, bytes: u64, source: IngestSource) -> f64 {
+        let ingest = bytes as f64 / source.stream_bandwidth();
+        ingest.max(self.plan.compute_seconds(bytes))
+    }
+
+    /// Paper-accurate projection with a schema profile: fit + apply
+    /// passes, per-column II weighting (see `HardwarePlan`).
+    pub fn projected_seconds_profiled(&self, profile: StreamProfile, source: IngestSource) -> f64 {
+        self.plan.etl_seconds_profiled(profile, source)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataio::dataset::DatasetSpec;
+    use crate::etl::pipelines::{build, PipelineKind};
+    use crate::planner::{compile, PlannerConfig};
+
+    fn deployed(kind: PipelineKind) -> (Pipeline, DatasetSpec) {
+        let mut spec = DatasetSpec::dataset_i(0.002);
+        spec.shards = 2;
+        let dag = build(kind, &spec.schema);
+        let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+        (Pipeline::new(plan), spec)
+    }
+
+    #[test]
+    fn fit_then_process_produces_training_batch() {
+        let (mut p, spec) = deployed(PipelineKind::II);
+        let shard = spec.shard(0, 42);
+        p.fit(&shard).unwrap();
+        assert!(p.is_fitted());
+        let (out, t) = p.process(&shard).unwrap();
+        assert_eq!(out.rows(), shard.rows());
+        // 13 dense + 26 sparse + label sinks.
+        assert_eq!(out.columns.len(), 40);
+        assert!(t.elapsed_s > 0.0 && t.egress_bytes > 0);
+        // Sparse outputs are in-vocabulary indices.
+        let sparse = out.get("sparse0").unwrap().as_i64().unwrap();
+        let vocab_len = p.state.vocabs["vocab_criteo_c0"].len() as i64;
+        assert!(sparse.iter().all(|&v| v >= 0 && v <= vocab_len));
+    }
+
+    #[test]
+    fn stateless_pipeline_near_datapath_rate() {
+        let (p, spec) = deployed(PipelineKind::I);
+        let shard = spec.shard(0, 42);
+        let (_, t) = p.process(&shard).unwrap();
+        // II=1 everywhere: compute rate equals the datapath rate.
+        let rate = t.ingest_bytes as f64 / t.compute_s;
+        assert!((rate / p.plan.datapath_rate() - 1.0).abs() < 0.05, "{t:?}");
+        assert_eq!(t.elapsed_s, t.ingest_s.max(t.compute_s));
+    }
+
+    #[test]
+    fn large_vocab_pipeline_is_compute_bound() {
+        let (mut p, spec) = deployed(PipelineKind::III);
+        let shard = spec.shard(0, 42);
+        p.fit(&shard).unwrap();
+        let (_, t) = p.process(&shard).unwrap();
+        assert!(t.compute_s > t.ingest_s, "{t:?}");
+    }
+
+    #[test]
+    fn throughput_matches_line_rate_when_compute_bound() {
+        let (p, _) = deployed(PipelineKind::III);
+        let bytes = 1u64 << 28;
+        let secs = p.plan.compute_seconds(bytes);
+        let rate = bytes as f64 / secs;
+        let line = p.plan.line_rate();
+        assert!((rate - line).abs() / line < 0.05, "rate={rate} line={line}");
+    }
+
+    #[test]
+    fn timing_accumulates() {
+        let mut acc = ShardTiming::default();
+        let t = ShardTiming {
+            ingest_bytes: 10,
+            egress_bytes: 5,
+            ingest_s: 1.0,
+            compute_s: 2.0,
+            elapsed_s: 2.0,
+            host_s: 0.1,
+        };
+        acc.accumulate(&t);
+        acc.accumulate(&t);
+        assert_eq!(acc.ingest_bytes, 20);
+        assert_eq!(acc.elapsed_s, 4.0);
+        assert!((acc.throughput() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,256 @@
+//! The vFPGA device: dynamic regions hosting reconfigurable pipelines
+//! (paper §3.4/§4.8). Partial reconfiguration swaps pipelines in
+//! milliseconds without a full bitstream recompile (Q1: multi-tenancy);
+//! replicating pipelines across regions scales throughput (Q2: elasticity)
+//! until the fabric clock derates (7 regions run at 150 MHz) or the shared
+//! ingest channels saturate.
+
+use crate::error::{EtlError, Result};
+use crate::etl::column::Batch;
+use crate::fpga::pipeline::{Pipeline, ShardTiming};
+use crate::memsys::{IngestSource, Mmu};
+use crate::planner::resources::{Device, ResourceReport};
+use crate::planner::HardwarePlan;
+
+/// Handle to a loaded dynamic region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionId(pub usize);
+
+/// Maximum dynamic regions in the U55c floorplan (paper §4.8).
+pub const MAX_REGIONS: usize = 7;
+
+/// Partial-reconfiguration latency (paper: "within milliseconds").
+pub const RECONFIG_SECONDS: f64 = 4.0e-3;
+
+/// The virtualized FPGA device.
+pub struct VFpga {
+    pub device: Device,
+    regions: Vec<Option<Pipeline>>,
+    pub mmu: Mmu,
+    /// Simulated seconds spent on partial reconfiguration.
+    pub reconfig_s: f64,
+    /// Whether the RDMA stack is resident (consumes shell resources).
+    pub with_rdma: bool,
+}
+
+impl VFpga {
+    pub fn new(device: Device) -> VFpga {
+        VFpga {
+            device,
+            regions: (0..MAX_REGIONS).map(|_| None).collect(),
+            mmu: Mmu::default(),
+            reconfig_s: 0.0,
+            with_rdma: false,
+        }
+    }
+
+    /// Number of loaded pipelines.
+    pub fn active(&self) -> usize {
+        self.regions.iter().filter(|r| r.is_some()).count()
+    }
+
+    /// Aggregate resource usage (shell + RDMA + all loaded pipelines).
+    pub fn utilization(&self) -> ResourceReport {
+        let mut r = ResourceReport {
+            clb_frac: crate::planner::resources::Calib::SHELL_CLB_FRAC,
+            bram_frac: crate::planner::resources::Calib::SHELL_BRAM_FRAC,
+            dsp_frac: 0.0,
+        };
+        if self.with_rdma {
+            r.clb_frac += crate::planner::resources::Calib::RDMA_CLB_FRAC;
+            r.bram_frac += crate::planner::resources::Calib::RDMA_BRAM_FRAC;
+        }
+        for p in self.regions.iter().flatten() {
+            r = r.add(&p.plan.resources);
+        }
+        r
+    }
+
+    /// Effective fabric clock: full speed up to 4 regions, derated beyond
+    /// (paper: 7 concurrent pipelines at 150 MHz).
+    pub fn effective_clock(&self) -> f64 {
+        match self.active() {
+            0..=4 => self.device.f_clk,
+            5 | 6 => self.device.f_clk * 0.9,
+            _ => 150.0e6,
+        }
+    }
+
+    /// Load a compiled plan into a free dynamic region via partial
+    /// reconfiguration. Fails when no region is free or resources would
+    /// not fit.
+    pub fn load(&mut self, plan: HardwarePlan) -> Result<RegionId> {
+        let slot = self
+            .regions
+            .iter()
+            .position(|r| r.is_none())
+            .ok_or_else(|| EtlError::Mem("no free dynamic region".into()))?;
+        let mut candidate = self.utilization();
+        candidate = candidate.add(&plan.resources);
+        if !candidate.fits() {
+            return Err(EtlError::Plan(format!(
+                "loading {} would exceed device resources: {candidate:?}",
+                plan.name
+            )));
+        }
+        if plan.with_rdma {
+            self.with_rdma = true;
+        }
+        // Register the staging buffers with the MMU.
+        for buf in &plan.runtime.buffers {
+            let _ = self.mmu.map(crate::memsys::MemClass::Gpu, buf.bytes, 0);
+        }
+        self.regions[slot] = Some(Pipeline::new(plan));
+        self.reconfig_s += RECONFIG_SECONDS;
+        Ok(RegionId(slot))
+    }
+
+    /// Unload a region (partial reconfiguration back to empty).
+    pub fn unload(&mut self, id: RegionId) -> Result<()> {
+        if self.regions.get(id.0).map(|r| r.is_none()).unwrap_or(true) {
+            return Err(EtlError::Mem(format!("region {} not loaded", id.0)));
+        }
+        self.regions[id.0] = None;
+        self.reconfig_s += RECONFIG_SECONDS;
+        Ok(())
+    }
+
+    pub fn pipeline(&self, id: RegionId) -> Result<&Pipeline> {
+        self.regions
+            .get(id.0)
+            .and_then(|r| r.as_ref())
+            .ok_or_else(|| EtlError::Mem(format!("region {} not loaded", id.0)))
+    }
+
+    pub fn pipeline_mut(&mut self, id: RegionId) -> Result<&mut Pipeline> {
+        self.regions
+            .get_mut(id.0)
+            .and_then(|r| r.as_mut())
+            .ok_or_else(|| EtlError::Mem(format!("region {} not loaded", id.0)))
+    }
+
+    /// Fit the pipeline in `id` on a sample shard.
+    pub fn fit(&mut self, id: RegionId, sample: &Batch) -> Result<ShardTiming> {
+        self.pipeline_mut(id)?.fit(sample)
+    }
+
+    /// Process one shard on one region, derating for the current clock.
+    pub fn process(&self, id: RegionId, shard: &Batch) -> Result<(Batch, ShardTiming)> {
+        let clk_scale = self.effective_clock() / self.device.f_clk;
+        let p = self.pipeline(id)?;
+        let (out, mut t) = p.process(shard)?;
+        t.compute_s /= clk_scale;
+        t.elapsed_s = t.ingest_s.max(t.compute_s);
+        Ok((out, t))
+    }
+
+    /// Steady-state aggregate throughput (bytes/s) with `n` identical
+    /// pipelines ingesting from `source`: per-pipeline compute at the
+    /// derated clock, ingest shared fairly across pipelines (Fig. 17).
+    pub fn concurrent_throughput(
+        &self,
+        plan: &HardwarePlan,
+        n: usize,
+        source: IngestSource,
+    ) -> f64 {
+        assert!(n >= 1 && n <= MAX_REGIONS);
+        let clk_scale = match n {
+            0..=4 => 1.0,
+            5 | 6 => 0.9,
+            _ => 150.0e6 / self.device.f_clk,
+        };
+        let per_pipe_compute = plan.line_rate() * clk_scale;
+        let ingest_share = source.stream_bandwidth() / n as f64;
+        n as f64 * per_pipe_compute.min(ingest_share)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataio::dataset::DatasetSpec;
+    use crate::etl::pipelines::{build, PipelineKind};
+    use crate::planner::{compile, PlannerConfig};
+
+    fn plan(kind: PipelineKind) -> HardwarePlan {
+        let spec = DatasetSpec::dataset_i(0.001);
+        let dag = build(kind, &spec.schema);
+        compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn load_unload_cycle() {
+        let mut fpga = VFpga::new(Device::alveo_u55c());
+        let id = fpga.load(plan(PipelineKind::I)).unwrap();
+        assert_eq!(fpga.active(), 1);
+        assert!(fpga.reconfig_s > 0.0);
+        fpga.unload(id).unwrap();
+        assert_eq!(fpga.active(), 0);
+        assert!(fpga.unload(id).is_err());
+    }
+
+    #[test]
+    fn heterogeneous_pipelines_coexist() {
+        // Q1 multi-tenancy: different pipelines in different regions.
+        let mut fpga = VFpga::new(Device::alveo_u55c());
+        let a = fpga.load(plan(PipelineKind::I)).unwrap();
+        let b = fpga.load(plan(PipelineKind::III)).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(fpga.active(), 2);
+        let util = fpga.utilization();
+        assert!(util.fits());
+        assert!(util.clb_frac > 0.2);
+    }
+
+    #[test]
+    fn clock_derates_beyond_four_regions() {
+        let mut fpga = VFpga::new(Device::alveo_u55c());
+        for _ in 0..4 {
+            fpga.load(plan(PipelineKind::I)).unwrap();
+        }
+        assert_eq!(fpga.effective_clock(), 200.0e6);
+        for _ in 0..3 {
+            fpga.load(plan(PipelineKind::I)).unwrap();
+        }
+        assert_eq!(fpga.active(), 7);
+        assert_eq!(fpga.effective_clock(), 150.0e6);
+        // Eighth load fails: no free region.
+        assert!(fpga.load(plan(PipelineKind::I)).is_err());
+    }
+
+    #[test]
+    fn concurrent_throughput_scales_linearly_then_derates() {
+        let fpga = VFpga::new(Device::alveo_u55c());
+        let p = plan(PipelineKind::I);
+        let t1 = fpga.concurrent_throughput(&p, 1, IngestSource::OnBoard);
+        let t2 = fpga.concurrent_throughput(&p, 2, IngestSource::OnBoard);
+        let t4 = fpga.concurrent_throughput(&p, 4, IngestSource::OnBoard);
+        let t7 = fpga.concurrent_throughput(&p, 7, IngestSource::OnBoard);
+        assert!((t2 / t1 - 2.0).abs() < 0.05, "t2/t1={}", t2 / t1);
+        assert!((t4 / t1 - 4.0).abs() < 0.05);
+        // 7 regions: sublinear because of the 150 MHz clock.
+        assert!(t7 / t1 > 4.5 && t7 / t1 < 6.0, "t7/t1={}", t7 / t1);
+    }
+
+    #[test]
+    fn ingest_bound_when_source_is_slow() {
+        let fpga = VFpga::new(Device::alveo_u55c());
+        let p = plan(PipelineKind::I);
+        let t4 = fpga.concurrent_throughput(&p, 4, IngestSource::Ssd);
+        // SSD at 1.2 GB/s caps the aggregate regardless of pipeline count.
+        assert!((t4 / 1.2e9 - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn process_on_loaded_region_runs_functionally() {
+        let mut spec = DatasetSpec::dataset_i(0.001);
+        spec.shards = 1;
+        let mut fpga = VFpga::new(Device::alveo_u55c());
+        let id = fpga.load(plan(PipelineKind::II)).unwrap();
+        let shard = spec.shard(0, 9);
+        fpga.fit(id, &shard).unwrap();
+        let (out, t) = fpga.process(id, &shard).unwrap();
+        assert_eq!(out.rows(), shard.rows());
+        assert!(t.elapsed_s > 0.0);
+    }
+}

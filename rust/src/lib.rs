@@ -1,0 +1,51 @@
+//! # PipeRec
+//!
+//! Reproduction of *"Accelerating Recommender Model ETL with a Streaming
+//! FPGA-GPU Dataflow"* (Zhu et al., ETH Zurich, 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! * [`etl`] — the training-aware ETL abstraction: operators, schemas,
+//!   symbolic DAGs with fit/apply semantics.
+//! * [`planner`] — the planner–compiler lowering DAGs to vFPGA dataflows
+//!   (operator fusion, lane/width selection, state placement, resource
+//!   estimation, runtime plan emission).
+//! * [`fpga`] — the streaming vFPGA dataflow engine: functional execution
+//!   plus a cycle-approximate timing model.
+//! * [`memsys`] — the I/O & memory subsystem: HBM / host-DMA / RDMA / SSD
+//!   channel models, MMU, crossbars, credit-based backpressure.
+//! * [`coordinator`] — the co-scheduling runtime: format-aware packer,
+//!   double-buffered GPU staging, ETL/training overlap.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
+//! * [`baselines`] — CPU (pandas-like, Beam-like) and GPU (NVTabular-like)
+//!   comparison systems.
+//! * [`power`] — platform power and Perf/W models (Table 3).
+//! * [`dataio`] — columnar format + synthetic Criteo-faithful datasets.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod coordinator;
+pub mod dataio;
+pub mod error;
+pub mod etl;
+pub mod fpga;
+pub mod memsys;
+pub mod metrics;
+pub mod planner;
+pub mod power;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::dataio::dataset::{DatasetKind, DatasetSpec, ShardSource};
+    pub use crate::error::{EtlError, Result};
+    pub use crate::etl::column::{Batch, ColType, Column};
+    pub use crate::etl::dag::{Dag, EtlState, SinkRole};
+    pub use crate::etl::ops::{OpSpec, StatePlacement};
+    pub use crate::etl::pipelines::{self, PipelineKind};
+    pub use crate::etl::schema::{FeatureKind, Schema};
+    pub use crate::planner::{compile, HardwarePlan, PlannerConfig};
+}

@@ -1,0 +1,191 @@
+//! `piperec` — the launcher CLI.
+//!
+//! Subcommands:
+//! * `compile`  — plan a pipeline and print the hardware plan + resources
+//! * `etl`      — run an ETL pass (simulated FPGA vs baselines)
+//! * `train`    — end-to-end: ETL → staging → PJRT DLRM training
+//! * `inspect`  — dataset / artifact information
+//!
+//! Run `piperec <cmd> --help-args` for each command's options.
+
+use piperec::baselines::{GpuKind, GpuModel, PandasModel};
+use piperec::coordinator::{train, TrainConfig};
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::etl::pipelines::{self, PipelineKind};
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::ArtifactPaths;
+use piperec::runtime::Trainer;
+use piperec::util::cli::Args;
+use piperec::util::{fmt_bytes, fmt_rate, fmt_secs};
+
+fn parse_pipeline(s: &str) -> PipelineKind {
+    match s {
+        "1" | "p1" | "I" => PipelineKind::I,
+        "2" | "p2" | "II" => PipelineKind::II,
+        "3" | "p3" | "III" => PipelineKind::III,
+        other => panic!("unknown pipeline {other:?} (use 1|2|3)"),
+    }
+}
+
+fn parse_dataset(s: &str) -> DatasetKind {
+    match s {
+        "1" | "d1" | "I" => DatasetKind::I,
+        "2" | "d2" | "II" => DatasetKind::II,
+        "3" | "d3" | "III" => DatasetKind::III,
+        other => panic!("unknown dataset {other:?} (use 1|2|3)"),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("compile") => cmd_compile(&args)?,
+        Some("etl") => cmd_etl(&args)?,
+        Some("train") => cmd_train(&args)?,
+        Some("inspect") => cmd_inspect(&args)?,
+        _ => {
+            eprintln!(
+                "usage: piperec <compile|etl|train|inspect> \
+                 [--pipeline 1|2|3] [--dataset 1|2|3] [--scale F] [--steps N]"
+            );
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_pipeline(&args.get_str("pipeline", "1"));
+    let spec = DatasetSpec::by_kind(parse_dataset(&args.get_str("dataset", "1")), 1.0);
+    let dag = pipelines::build(kind, &spec.schema);
+    let mut cfg = PlannerConfig::default();
+    cfg.with_rdma = args.flag("rdma");
+    cfg.lanes = args.get("lanes", cfg.lanes);
+    let plan = compile(&dag, &spec.schema, &cfg)?;
+    println!("plan {} over {}:", plan.name, spec.name);
+    println!("  stages        : {}", plan.stages.len());
+    println!("  lanes × width : {} × {} B", plan.lanes, plan.width_bytes);
+    println!("  dataflow II   : {}", plan.dataflow_ii);
+    println!("  line rate     : {}", fmt_rate(plan.line_rate()));
+    println!("  HBM tables    : {}", plan.hbm_tables());
+    let r = plan.device_report;
+    println!(
+        "  device        : CLB {:.1}%  BRAM {:.1}%  DSP {:.2}%",
+        r.clb_frac * 100.0,
+        r.bram_frac * 100.0,
+        r.dsp_frac * 100.0
+    );
+    println!(
+        "  paper-scale ETL time ({}): {}",
+        spec.name,
+        fmt_secs(plan.etl_seconds(spec.paper_bytes()))
+    );
+    Ok(())
+}
+
+fn cmd_etl(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_pipeline(&args.get_str("pipeline", "2"));
+    let scale = args.get("scale", 0.1);
+    let spec = DatasetSpec::by_kind(parse_dataset(&args.get_str("dataset", "1")), scale);
+    let dag = pipelines::build(kind, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default())?;
+    let mut pipe = Pipeline::new(plan);
+
+    println!(
+        "ETL {} on {} ({} rows, {})",
+        kind.label(),
+        spec.name,
+        spec.rows,
+        fmt_bytes(spec.total_bytes())
+    );
+    let sample = spec.shard(0, 42);
+    pipe.fit(&sample)?;
+    let mut acc = piperec::fpga::ShardTiming::default();
+    for i in 0..spec.shards {
+        let shard = spec.shard(i, 42);
+        if shard.rows() == 0 {
+            break;
+        }
+        let (_, t) = pipe.process(&shard)?;
+        acc.accumulate(&t);
+    }
+    println!("  simulated FPGA time : {}", fmt_secs(acc.elapsed_s));
+    println!("  simulated throughput: {}", fmt_rate(acc.throughput()));
+    println!("  host (functional)   : {}", fmt_secs(acc.host_s));
+    let pandas = PandasModel::default().pipeline_seconds(kind, &spec)
+        / spec.paper_scale_factor();
+    let gpu = GpuModel::new(GpuKind::A100).pipeline_seconds(kind, &spec)
+        / spec.paper_scale_factor();
+    println!("  pandas model (same scale): {}", fmt_secs(pandas));
+    println!("  A100 NVTabular model     : {}", fmt_secs(gpu));
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let kind = parse_pipeline(&args.get_str("pipeline", "2"));
+    let scale = args.get("scale", 0.05);
+    let mut spec = DatasetSpec::by_kind(parse_dataset(&args.get_str("dataset", "1")), scale);
+    spec.shards = args.get("shards", 4usize);
+    let dag = pipelines::build(kind, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default())?;
+    let mut pipe = Pipeline::new(plan);
+    pipe.fit(&spec.shard(0, 42))?;
+
+    let paths = ArtifactPaths::default_dir();
+    let mut trainer = Trainer::load(&paths, 7)?;
+    println!(
+        "training DLRM ({} params) on {} via {}",
+        trainer.param_count(),
+        spec.name,
+        kind.label()
+    );
+    let cfg = TrainConfig {
+        max_steps: args.get("steps", 100usize),
+        loss_every: args.get("loss-every", 10usize),
+        ..Default::default()
+    };
+    let report = train(&pipe, &spec, &mut trainer, &cfg)?;
+    for (s, l) in &report.losses {
+        println!("  step {s:>5}  loss {l:.5}");
+    }
+    println!(
+        "steps={} wall={} util={:.1}% stalls={}",
+        report.steps,
+        fmt_secs(report.wall_s),
+        report.util * 100.0,
+        report.producer_stalls
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    for kind in [DatasetKind::I, DatasetKind::II, DatasetKind::III] {
+        let spec = DatasetSpec::by_kind(kind, args.get("scale", 1.0));
+        println!(
+            "{:<12} rows={:>10} (paper {:>11})  row={}B  total={}  shards={}",
+            spec.name,
+            spec.rows,
+            spec.paper_rows,
+            spec.row_bytes(),
+            fmt_bytes(spec.total_bytes()),
+            spec.shards
+        );
+    }
+    let paths = ArtifactPaths::default_dir();
+    if paths.exist() {
+        let meta = piperec::runtime::artifacts::ModelMeta::load(&paths.meta)?;
+        println!(
+            "artifacts: batch={} dense={} sparse={} vocab={} dim={} params={}",
+            meta.batch,
+            meta.n_dense,
+            meta.n_sparse,
+            meta.vocab,
+            meta.embed_dim,
+            meta.param_count()
+        );
+    } else {
+        println!("artifacts: not built (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,210 @@
+//! MMU with TLB (paper Fig. 7): the vFPGA's unified virtual address space
+//! over on-board, host and remote memory. Operator logic addresses virtual
+//! pages; the MMU translates to (memory class, physical offset) and the
+//! TLB caches translations. Used functionally by the dataflow engine for
+//! buffer descriptors and by the timing model for translation overhead.
+
+use crate::error::{EtlError, Result};
+
+/// Memory class a page maps to (Fig. 6/7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemClass {
+    /// On-board HBM.
+    Hbm,
+    /// Host DRAM over PCIe.
+    Host,
+    /// Remote memory over RoCEv2.
+    Remote,
+    /// GPU HBM over P2P PCIe.
+    Gpu,
+}
+
+/// Page size: 2 MiB huge pages (Coyote's default for streaming buffers).
+pub const PAGE_SIZE: u64 = 2 << 20;
+
+/// One virtual→physical mapping.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PageEntry {
+    pub vpage: u64,
+    pub class: MemClass,
+    pub poffset: u64,
+}
+
+/// Direct-mapped TLB over the page table.
+#[derive(Debug)]
+pub struct Tlb {
+    entries: Vec<Option<PageEntry>>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Tlb {
+    pub fn new(slots: usize) -> Tlb {
+        Tlb { entries: vec![None; slots.next_power_of_two()], hits: 0, misses: 0 }
+    }
+
+    #[inline]
+    fn slot(&self, vpage: u64) -> usize {
+        (vpage as usize) & (self.entries.len() - 1)
+    }
+
+    fn lookup(&mut self, vpage: u64) -> Option<PageEntry> {
+        let e = self.entries[self.slot(vpage)];
+        match e {
+            Some(pe) if pe.vpage == vpage => {
+                self.hits += 1;
+                Some(pe)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn fill(&mut self, e: PageEntry) {
+        let s = self.slot(e.vpage);
+        self.entries[s] = Some(e);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 { 0.0 } else { self.hits as f64 / total as f64 }
+    }
+}
+
+/// The MMU: page table + TLB + translation-cost model.
+#[derive(Debug)]
+pub struct Mmu {
+    table: std::collections::BTreeMap<u64, PageEntry>,
+    tlb: Tlb,
+    next_vpage: u64,
+    /// Cycles per TLB hit / miss at the fabric clock (miss walks the
+    /// BRAM-resident table).
+    pub hit_cycles: u64,
+    pub miss_cycles: u64,
+}
+
+impl Default for Mmu {
+    fn default() -> Self {
+        Mmu::new(512)
+    }
+}
+
+impl Mmu {
+    pub fn new(tlb_slots: usize) -> Mmu {
+        Mmu {
+            table: Default::default(),
+            tlb: Tlb::new(tlb_slots),
+            next_vpage: 1, // vpage 0 reserved as NULL
+            hit_cycles: 1,
+            miss_cycles: 24,
+        }
+    }
+
+    /// Map `bytes` of memory in `class`; returns the base virtual address.
+    pub fn map(&mut self, class: MemClass, bytes: u64, poffset: u64) -> u64 {
+        let pages = bytes.div_ceil(PAGE_SIZE).max(1);
+        let base = self.next_vpage;
+        for i in 0..pages {
+            let e = PageEntry {
+                vpage: base + i,
+                class,
+                poffset: poffset + i * PAGE_SIZE,
+            };
+            self.table.insert(base + i, e);
+        }
+        self.next_vpage += pages;
+        base * PAGE_SIZE
+    }
+
+    /// Translate a virtual address; returns (entry, cycles spent).
+    pub fn translate(&mut self, vaddr: u64) -> Result<(MemClass, u64, u64)> {
+        let vpage = vaddr / PAGE_SIZE;
+        let off = vaddr % PAGE_SIZE;
+        if let Some(e) = self.tlb.lookup(vpage) {
+            return Ok((e.class, e.poffset + off, self.hit_cycles));
+        }
+        let e = *self
+            .table
+            .get(&vpage)
+            .ok_or_else(|| EtlError::Mem(format!("unmapped vaddr {vaddr:#x}")))?;
+        self.tlb.fill(e);
+        Ok((e.class, e.poffset + off, self.miss_cycles))
+    }
+
+    pub fn tlb_hit_rate(&self) -> f64 {
+        self.tlb.hit_rate()
+    }
+
+    /// Unmap everything (partial reconfiguration clears pipeline state).
+    pub fn clear(&mut self) {
+        self.table.clear();
+        self.tlb = Tlb::new(self.tlb.entries.len());
+        self.next_vpage = 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_translate_roundtrip() {
+        let mut mmu = Mmu::default();
+        let va = mmu.map(MemClass::Hbm, 8 * PAGE_SIZE, 0x1000_0000);
+        let (class, pa, _) = mmu.translate(va).unwrap();
+        assert_eq!(class, MemClass::Hbm);
+        assert_eq!(pa, 0x1000_0000);
+        let (_, pa2, _) = mmu.translate(va + 3 * PAGE_SIZE + 17).unwrap();
+        assert_eq!(pa2, 0x1000_0000 + 3 * PAGE_SIZE + 17);
+    }
+
+    #[test]
+    fn unmapped_address_errors() {
+        let mut mmu = Mmu::default();
+        assert!(mmu.translate(0xdead_beef_0000).is_err());
+    }
+
+    #[test]
+    fn tlb_caches_translations() {
+        let mut mmu = Mmu::new(64);
+        let va = mmu.map(MemClass::Host, PAGE_SIZE, 0);
+        let (_, _, c1) = mmu.translate(va).unwrap(); // miss
+        let (_, _, c2) = mmu.translate(va).unwrap(); // hit
+        assert_eq!(c1, mmu.miss_cycles);
+        assert_eq!(c2, mmu.hit_cycles);
+        assert!(mmu.tlb_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn sequential_stream_has_high_hit_rate() {
+        let mut mmu = Mmu::new(64);
+        let va = mmu.map(MemClass::Hbm, 4 * PAGE_SIZE, 0);
+        // 64-byte streaming over 4 pages: 1 miss per page.
+        let words = (4 * PAGE_SIZE / 64) as u64;
+        for i in 0..words {
+            mmu.translate(va + i * 64).unwrap();
+        }
+        assert!(mmu.tlb_hit_rate() > 0.999, "rate {}", mmu.tlb_hit_rate());
+    }
+
+    #[test]
+    fn distinct_classes_coexist() {
+        let mut mmu = Mmu::default();
+        let a = mmu.map(MemClass::Hbm, PAGE_SIZE, 0);
+        let b = mmu.map(MemClass::Remote, PAGE_SIZE, 0);
+        let c = mmu.map(MemClass::Gpu, PAGE_SIZE, 0);
+        assert_eq!(mmu.translate(a).unwrap().0, MemClass::Hbm);
+        assert_eq!(mmu.translate(b).unwrap().0, MemClass::Remote);
+        assert_eq!(mmu.translate(c).unwrap().0, MemClass::Gpu);
+    }
+
+    #[test]
+    fn clear_resets_mappings() {
+        let mut mmu = Mmu::default();
+        let va = mmu.map(MemClass::Hbm, PAGE_SIZE, 0);
+        mmu.clear();
+        assert!(mmu.translate(va).is_err());
+    }
+}

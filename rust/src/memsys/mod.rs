@@ -1,0 +1,68 @@
+//! The vFPGA I/O & memory subsystem (paper §3.3, Fig. 6/7): calibrated
+//! channel models for every data path (host DMA, P2P PCIe, RoCEv2 RDMA,
+//! HBM, SSD), an MMU with TLB exposing a unified virtual address space,
+//! and RD/WR crossbars with credit-based backpressure.
+
+pub mod channel;
+pub mod mmu;
+pub mod xbar;
+
+pub use channel::{hbm_aggregate_bw, ChannelModel, Path};
+pub use mmu::{MemClass, Mmu, PAGE_SIZE};
+pub use xbar::{CreditGate, Crossbar, PortRequest};
+
+/// Where a pipeline ingests its raw data from — selects the source channel
+/// model (Fig. 7: on-board memory, host memory via PCIe, or remote memory
+/// via RoCEv2; Dataset-III adds SSD-bound ingest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IngestSource {
+    /// Already resident in on-board HBM.
+    OnBoard,
+    /// Streamed from host DRAM via PCIe DMA.
+    Host,
+    /// Streamed from a remote node via RDMA.
+    Remote,
+    /// Streamed from SSD through host memory (Dataset-III).
+    Ssd,
+}
+
+impl IngestSource {
+    /// The bandwidth-limiting channel for this source.
+    pub fn channel(&self) -> ChannelModel {
+        match self {
+            IngestSource::OnBoard => ChannelModel::of(Path::HbmChannel),
+            IngestSource::Host => ChannelModel::of(Path::HostDmaRead),
+            IngestSource::Remote => ChannelModel::of(Path::RdmaRead),
+            IngestSource::Ssd => ChannelModel::of(Path::SsdRead),
+        }
+    }
+
+    /// Effective ingest bandwidth (bytes/s) for large streams. On-board
+    /// ingest can stripe across all 32 HBM channels.
+    pub fn stream_bandwidth(&self) -> f64 {
+        match self {
+            IngestSource::OnBoard => hbm_aggregate_bw(),
+            other => other.channel().bandwidth,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingest_bandwidth_ordering() {
+        // HBM > host DMA > RDMA > SSD.
+        let onboard = IngestSource::OnBoard.stream_bandwidth();
+        let host = IngestSource::Host.stream_bandwidth();
+        let remote = IngestSource::Remote.stream_bandwidth();
+        let ssd = IngestSource::Ssd.stream_bandwidth();
+        assert!(onboard > host && host > remote && remote > ssd);
+    }
+
+    #[test]
+    fn ssd_is_1_2_gbps() {
+        assert!((IngestSource::Ssd.stream_bandwidth() / 1e9 - 1.2).abs() < 0.01);
+    }
+}

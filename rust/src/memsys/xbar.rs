@@ -1,0 +1,178 @@
+//! RD/WR crossbars with round-robin arbitration and credit-based flow
+//! control (paper Fig. 7). `N` pipeline requesters share the memory and
+//! network channels; the arbiter divides plateau bandwidth among active
+//! requesters and exposes per-port credits for backpressure.
+
+use crate::memsys::channel::ChannelModel;
+
+/// Credit-based flow control endpoint: the producer may only send while it
+/// holds credits; the consumer returns credits as buffers drain. This is
+/// the exact mechanism the FPGA uses to rate-match ETL to the trainer
+/// (§3: "the FPGA writes only when the GPU notifies a free staging
+/// buffer").
+#[derive(Debug, Clone)]
+pub struct CreditGate {
+    capacity: u32,
+    available: u32,
+    /// Stall events observed (producer wanted to send with 0 credits).
+    pub stalls: u64,
+}
+
+impl CreditGate {
+    pub fn new(capacity: u32) -> CreditGate {
+        assert!(capacity > 0);
+        CreditGate { capacity, available: capacity, stalls: 0 }
+    }
+
+    /// Try to consume one credit; returns false (and records a stall) when
+    /// none are available.
+    pub fn try_acquire(&mut self) -> bool {
+        if self.available > 0 {
+            self.available -= 1;
+            true
+        } else {
+            self.stalls += 1;
+            false
+        }
+    }
+
+    /// Return one credit (consumer freed a buffer).
+    pub fn release(&mut self) {
+        assert!(self.available < self.capacity, "credit overflow");
+        self.available += 1;
+    }
+
+    pub fn available(&self) -> u32 {
+        self.available
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+}
+
+/// A crossbar port request: `bytes` to move over the shared channel.
+#[derive(Debug, Clone, Copy)]
+pub struct PortRequest {
+    pub port: usize,
+    pub bytes: u64,
+}
+
+/// Round-robin crossbar: computes per-port completion times when `ports`
+/// requesters share one [`ChannelModel`]. Bandwidth is divided equally
+/// among ports that still have outstanding bytes (processor-sharing, which
+/// is what a fine-grained round-robin arbiter converges to).
+#[derive(Debug)]
+pub struct Crossbar {
+    pub channel: ChannelModel,
+}
+
+impl Crossbar {
+    pub fn new(channel: ChannelModel) -> Crossbar {
+        Crossbar { channel }
+    }
+
+    /// Completion time (s) of each request under fair sharing.
+    pub fn schedule(&self, requests: &[PortRequest]) -> Vec<f64> {
+        let n = requests.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Processor-sharing completion times: sort by size, finish small
+        // flows first while all active flows share bandwidth equally.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by_key(|&i| requests[i].bytes);
+        let bw = self.channel.bandwidth;
+        let mut done = vec![0f64; n];
+        let mut t = 0f64;
+        let mut prev_bytes = 0u64;
+        let mut active = n;
+        for &i in &order {
+            let b = requests[i].bytes;
+            // Time for the remaining (b - prev_bytes) at bw/active each.
+            let delta = (b - prev_bytes) as f64 * active as f64 / bw;
+            t += delta;
+            done[i] = t + self.channel.setup_s;
+            prev_bytes = b;
+            active -= 1;
+        }
+        done
+    }
+
+    /// Aggregate time to move all requests (the makespan).
+    pub fn makespan(&self, requests: &[PortRequest]) -> f64 {
+        self.schedule(requests).into_iter().fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsys::channel::Path;
+
+    #[test]
+    fn credits_block_at_zero() {
+        let mut g = CreditGate::new(2);
+        assert!(g.try_acquire());
+        assert!(g.try_acquire());
+        assert!(!g.try_acquire());
+        assert_eq!(g.stalls, 1);
+        g.release();
+        assert!(g.try_acquire());
+    }
+
+    #[test]
+    #[should_panic(expected = "credit overflow")]
+    fn over_release_panics() {
+        let mut g = CreditGate::new(1);
+        g.release();
+    }
+
+    #[test]
+    fn single_port_gets_full_bandwidth() {
+        let xbar = Crossbar::new(ChannelModel::of(Path::HostDmaRead));
+        let reqs = [PortRequest { port: 0, bytes: 1 << 24 }];
+        let t = xbar.schedule(&reqs)[0];
+        let direct = xbar.channel.time(1 << 24);
+        assert!((t - direct).abs() / direct < 0.01);
+    }
+
+    #[test]
+    fn equal_ports_share_equally() {
+        let xbar = Crossbar::new(ChannelModel::of(Path::HostDmaRead));
+        let reqs = [
+            PortRequest { port: 0, bytes: 1 << 24 },
+            PortRequest { port: 1, bytes: 1 << 24 },
+        ];
+        let times = xbar.schedule(&reqs);
+        let solo = xbar.channel.time(1 << 24);
+        // Two equal flows take ~2× the solo time.
+        for t in times {
+            assert!(t > 1.8 * solo && t < 2.2 * solo, "t={t} solo={solo}");
+        }
+    }
+
+    #[test]
+    fn short_flow_finishes_first() {
+        let xbar = Crossbar::new(ChannelModel::of(Path::HostDmaRead));
+        let reqs = [
+            PortRequest { port: 0, bytes: 1 << 26 },
+            PortRequest { port: 1, bytes: 1 << 16 },
+        ];
+        let times = xbar.schedule(&reqs);
+        assert!(times[1] < times[0]);
+        // Makespan equals the long flow's completion.
+        assert_eq!(xbar.makespan(&reqs), times[0]);
+    }
+
+    #[test]
+    fn makespan_conserves_bytes() {
+        let xbar = Crossbar::new(ChannelModel::of(Path::RdmaRead));
+        let reqs: Vec<PortRequest> =
+            (0..7).map(|p| PortRequest { port: p, bytes: 10 << 20 }).collect();
+        let total_bytes: u64 = reqs.iter().map(|r| r.bytes).sum();
+        let makespan = xbar.makespan(&reqs);
+        // Can't beat the channel's aggregate bandwidth.
+        assert!(makespan >= total_bytes as f64 / xbar.channel.bandwidth);
+    }
+}

@@ -1,0 +1,199 @@
+//! Runtime metrics: counters, histograms, and time-series traces (used for
+//! GPU-utilization plots, Fig. 14).
+
+use std::collections::BTreeMap;
+
+/// Fixed-boundary histogram (log2 buckets of nanoseconds by default).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// Histogram with explicit ascending bucket upper bounds.
+    pub fn with_bounds(bounds: Vec<f64>) -> Histogram {
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], sum: 0.0, n: 0 }
+    }
+
+    /// Log-spaced bounds covering `[lo, hi]` with `k` buckets.
+    pub fn log_spaced(lo: f64, hi: f64, k: usize) -> Histogram {
+        assert!(lo > 0.0 && hi > lo && k >= 1);
+        let ratio = (hi / lo).powf(1.0 / k as f64);
+        let mut bounds = Vec::with_capacity(k);
+        let mut b = lo;
+        for _ in 0..k {
+            bounds.push(b);
+            b *= ratio;
+        }
+        Histogram::with_bounds(bounds)
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    /// Approximate quantile from bucket midpoints.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i == 0 {
+                    self.bounds.first().copied().unwrap_or(0.0)
+                } else if i >= self.bounds.len() {
+                    *self.bounds.last().unwrap()
+                } else {
+                    (self.bounds[i - 1] + self.bounds[i]) / 2.0
+                };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// A named scalar time series — e.g. GPU utilization per window.
+#[derive(Debug, Clone, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|(_, v)| v).sum::<f64>() / self.points.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.points.iter().map(|(_, v)| *v).fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.points.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Coefficient of variation — used to quantify the *stability* of GPU
+    /// utilization (Fig. 14's contrast is jitter, not just the mean).
+    pub fn cv(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 || self.points.len() < 2 {
+            return 0.0;
+        }
+        let var = self
+            .points
+            .iter()
+            .map(|(_, v)| (v - m).powi(2))
+            .sum::<f64>()
+            / (self.points.len() - 1) as f64;
+        var.sqrt() / m
+    }
+
+    /// Render a compact sparkline for terminal output.
+    pub fn sparkline(&self, width: usize) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.points.is_empty() {
+            return String::new();
+        }
+        let (lo, hi) = (0.0f64, self.max().max(1e-12));
+        let step = (self.points.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < self.points.len() && out.chars().count() < width {
+            let v = self.points[i as usize].1;
+            let frac = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+            out.push(BARS[(frac * 7.0).round() as usize]);
+            i += step;
+        }
+        out
+    }
+}
+
+/// A registry of named counters.
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    map: BTreeMap<String, u64>,
+}
+
+impl Counters {
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.map.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.map.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles() {
+        let mut h = Histogram::log_spaced(1.0, 1024.0, 10);
+        for v in [1.0, 2.0, 4.0, 8.0, 512.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() > 100.0);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn timeseries_stats() {
+        let mut ts = TimeSeries::default();
+        for i in 0..10 {
+            ts.push(i as f64, if i % 2 == 0 { 0.2 } else { 0.8 });
+        }
+        assert!((ts.mean() - 0.5).abs() < 1e-9);
+        assert_eq!(ts.min(), 0.2);
+        assert_eq!(ts.max(), 0.8);
+        assert!(ts.cv() > 0.5);
+        let stable = TimeSeries { points: (0..10).map(|i| (i as f64, 0.9)).collect() };
+        assert!(stable.cv() < 1e-9);
+    }
+
+    #[test]
+    fn sparkline_has_requested_width() {
+        let ts = TimeSeries { points: (0..100).map(|i| (i as f64, i as f64)).collect() };
+        let s = ts.sparkline(20);
+        assert_eq!(s.chars().count(), 20);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let mut c = Counters::default();
+        c.add("bytes", 10);
+        c.add("bytes", 5);
+        assert_eq!(c.get("bytes"), 15);
+        assert_eq!(c.get("missing"), 0);
+    }
+}

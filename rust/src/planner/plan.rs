@@ -1,0 +1,113 @@
+//! Runtime plan (paper §3.1 step 5): everything the L3 coordinator needs
+//! to drive a compiled pipeline — DMA queue layout, batching policy and
+//! staging buffer descriptors.
+
+use crate::memsys::IngestSource;
+
+/// Batching policy: how many rows per training-ready batch and how many
+/// staging buffers to expose to the GPU (credits).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    /// Rows per packed batch handed to the trainer.
+    pub batch_rows: usize,
+    /// Number of GPU staging buffers (double buffering = 2).
+    pub staging_buffers: u32,
+    /// Preferred DMA chunk for streaming transfers (≥1 MiB to sit on the
+    /// Fig. 11 plateau).
+    pub dma_chunk_bytes: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            batch_rows: 4096,
+            staging_buffers: 2,
+            dma_chunk_bytes: 4 << 20,
+        }
+    }
+}
+
+/// One DMA queue descriptor — a ring of fixed-size buffers on a path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DmaQueue {
+    pub name: String,
+    pub entries: u32,
+    pub entry_bytes: u64,
+}
+
+/// A staging buffer in GPU memory that the packer streams into.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferDescriptor {
+    pub name: String,
+    pub bytes: u64,
+    /// Virtual address assigned by the MMU at deployment time.
+    pub vaddr: Option<u64>,
+}
+
+/// The emitted runtime plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RuntimePlan {
+    pub source: IngestSource,
+    pub policy: BatchPolicy,
+    pub queues: Vec<DmaQueue>,
+    pub buffers: Vec<BufferDescriptor>,
+    /// Packed bytes per output row (dense f32 + sparse i32 + label f32).
+    pub packed_row_bytes: u64,
+}
+
+impl RuntimePlan {
+    /// Build the standard plan: one ingest queue, one P2P egress queue and
+    /// `staging_buffers` GPU staging buffers sized for a packed batch.
+    pub fn standard(
+        source: IngestSource,
+        policy: BatchPolicy,
+        packed_row_bytes: u64,
+    ) -> RuntimePlan {
+        let batch_bytes = policy.batch_rows as u64 * packed_row_bytes;
+        let queues = vec![
+            DmaQueue {
+                name: "ingest".into(),
+                entries: 8,
+                entry_bytes: policy.dma_chunk_bytes,
+            },
+            DmaQueue {
+                name: "p2p-egress".into(),
+                entries: policy.staging_buffers,
+                entry_bytes: batch_bytes,
+            },
+        ];
+        let buffers = (0..policy.staging_buffers)
+            .map(|i| BufferDescriptor {
+                name: format!("gpu-staging-{i}"),
+                bytes: batch_bytes,
+                vaddr: None,
+            })
+            .collect();
+        RuntimePlan { source, policy, queues, buffers, packed_row_bytes }
+    }
+
+    /// Bytes of one packed batch.
+    pub fn batch_bytes(&self) -> u64 {
+        self.policy.batch_rows as u64 * self.packed_row_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_plan_has_double_buffering() {
+        let plan = RuntimePlan::standard(IngestSource::Host, BatchPolicy::default(), 264);
+        assert_eq!(plan.buffers.len(), 2);
+        assert_eq!(plan.queues.len(), 2);
+        assert_eq!(plan.batch_bytes(), 4096 * 264);
+        assert_eq!(plan.queues[1].entry_bytes, plan.batch_bytes());
+    }
+
+    #[test]
+    fn dma_chunk_on_plateau() {
+        let plan = RuntimePlan::standard(IngestSource::Host, BatchPolicy::default(), 100);
+        assert!(plan.policy.dma_chunk_bytes >= 1 << 20);
+    }
+}

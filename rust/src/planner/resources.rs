@@ -1,0 +1,252 @@
+//! FPGA resource model (paper Table 4), calibrated to the Alveo U55c.
+//!
+//! Device totals (U55c): 1,303,680 LUTs (we report CLB as LUT-equivalents),
+//! 2,016 BRAM36 tiles, 9,024 DSP slices, 43 MB total SRAM.
+//!
+//! Calibration notes (derived by solving the paper's Table 4):
+//! * the static shell (XDMA, ICAP, host control) costs ~14.1% CLB and
+//!   ~9.1% BRAM and is counted once;
+//! * the full-duplex RDMA stack adds ~26.5% CLB and ~11.4% BRAM, no DSP;
+//! * per-lane operator costs reproduce the paper's DSP column exactly
+//!   (Modulus = 1 DSP/lane ⇒ P-I 0.04%; VocabGen = 51 DSP/lane ⇒ 2.3%
+//!   with the default N = 4 lanes);
+//! * Pipeline-II's small (8K) vocabularies live in LUTRAM (the paper's
+//!   BRAM column barely moves: 9.9% → 10.0%), while Pipeline-III's large
+//!   (512K) tables are HBM-resident with per-table BRAM staging buffers
+//!   (24.5%). When the RDMA stack is co-resident the planner demotes the
+//!   staging buffers to minimal depth (Table 4: R-P-III 26.3% < 24.5% +
+//!   RDMA's 11.4%).
+
+use crate::etl::ops::{OpSpec, ResourceCost, StatePlacement};
+
+/// Alveo U55c device totals.
+#[derive(Debug, Clone, Copy)]
+pub struct Device {
+    pub clb_total: f64,
+    pub bram_tiles: f64,
+    pub dsp_total: f64,
+    /// Fabric clock (Hz) — 200 MHz default, 150 MHz at 7 pipelines (§4.8).
+    pub f_clk: f64,
+}
+
+impl Device {
+    pub fn alveo_u55c() -> Device {
+        Device {
+            clb_total: 1_303_680.0,
+            bram_tiles: 2_016.0,
+            dsp_total: 9_024.0,
+            f_clk: 200.0e6,
+        }
+    }
+}
+
+/// Calibration constants (see module docs).
+pub struct Calib;
+
+impl Calib {
+    /// Static shell, counted once per device.
+    pub const SHELL_CLB_FRAC: f64 = 0.141;
+    pub const SHELL_BRAM_FRAC: f64 = 0.091;
+    /// Full-duplex RDMA stack (StRoM-style).
+    pub const RDMA_CLB_FRAC: f64 = 0.265;
+    pub const RDMA_BRAM_FRAC: f64 = 0.114;
+    /// Stream FIFO + handshake infra per fused stage per lane.
+    pub const STAGE_INFRA_CLB: f64 = 2_200.0;
+    pub const STAGE_INFRA_BRAM: f64 = 0.5;
+    /// Broadcast/gather fabric for a stateful stage (shared-table access).
+    pub const STATEFUL_FABRIC_CLB: f64 = 4_000.0;
+    /// HBM access infra (AXI masters, reorder buffers) per lane when any
+    /// stage's state is HBM-placed.
+    pub const HBM_ACCESS_CLB: f64 = 18_000.0;
+    /// Packer + control per pipeline instance.
+    pub const PACKER_CLB: f64 = 7_500.0;
+    pub const PACKER_BRAM: f64 = 8.0;
+    /// BRAM staging buffer per HBM-resident vocabulary table.
+    pub const HBM_TABLE_STAGE_TILES: f64 = 11.0;
+    /// Reduced staging depth when co-resident with the RDMA stack.
+    pub const HBM_TABLE_STAGE_TILES_RDMA: f64 = 4.0;
+}
+
+/// Resource utilization report, in fractions of the device (Table 4 rows).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceReport {
+    pub clb_frac: f64,
+    pub bram_frac: f64,
+    pub dsp_frac: f64,
+}
+
+impl ResourceReport {
+    pub fn fits(&self) -> bool {
+        self.clb_frac <= 1.0 && self.bram_frac <= 1.0 && self.dsp_frac <= 1.0
+    }
+
+    pub fn add(&self, o: &ResourceReport) -> ResourceReport {
+        ResourceReport {
+            clb_frac: self.clb_frac + o.clb_frac,
+            bram_frac: self.bram_frac + o.bram_frac,
+            dsp_frac: self.dsp_frac + o.dsp_frac,
+        }
+    }
+}
+
+/// Inputs to the pipeline resource estimate.
+pub struct PipelineShape<'a> {
+    /// Fused stages: operator chains + placement of any state.
+    pub stages: &'a [(Vec<OpSpec>, Option<StatePlacement>)],
+    pub lanes: usize,
+    /// Count of HBM-resident vocabulary tables.
+    pub hbm_tables: usize,
+    /// RDMA stack co-resident on the device.
+    pub with_rdma: bool,
+}
+
+/// Estimate one pipeline instance (without shell/RDMA, which are device-
+/// level and added by [`full_report`]).
+pub fn pipeline_cost(dev: &Device, shape: &PipelineShape) -> ResourceReport {
+    let mut clb = Calib::PACKER_CLB;
+    let mut bram = Calib::PACKER_BRAM;
+    let mut dsp = 0.0;
+    let mut any_hbm = false;
+
+    for (ops, placement) in shape.stages {
+        let mut stage = ResourceCost::default();
+        for op in ops {
+            stage = stage + op.resources();
+        }
+        let stateful = ops.iter().any(|o| o.is_stateful());
+        let mut per_lane_clb = stage.clb + Calib::STAGE_INFRA_CLB;
+        if stateful {
+            per_lane_clb += Calib::STATEFUL_FABRIC_CLB;
+        }
+        clb += per_lane_clb * shape.lanes as f64;
+        bram += (stage.bram + Calib::STAGE_INFRA_BRAM) * shape.lanes as f64;
+        dsp += stage.dsp * shape.lanes as f64;
+        if matches!(placement, Some(StatePlacement::Hbm)) {
+            any_hbm = true;
+        }
+    }
+
+    if any_hbm {
+        clb += Calib::HBM_ACCESS_CLB * shape.lanes as f64;
+        let tiles = if shape.with_rdma {
+            Calib::HBM_TABLE_STAGE_TILES_RDMA
+        } else {
+            Calib::HBM_TABLE_STAGE_TILES
+        };
+        bram += tiles * shape.hbm_tables as f64;
+    }
+
+    ResourceReport {
+        clb_frac: clb / dev.clb_total,
+        bram_frac: bram / dev.bram_tiles,
+        dsp_frac: dsp / dev.dsp_total,
+    }
+}
+
+/// Device-level report: shell + optional RDMA + `n` pipeline instances.
+pub fn full_report(
+    dev: &Device,
+    pipeline: &ResourceReport,
+    n_pipelines: usize,
+    with_rdma: bool,
+) -> ResourceReport {
+    let mut r = ResourceReport {
+        clb_frac: Calib::SHELL_CLB_FRAC,
+        bram_frac: Calib::SHELL_BRAM_FRAC,
+        dsp_frac: 0.0,
+    };
+    if with_rdma {
+        r.clb_frac += Calib::RDMA_CLB_FRAC;
+        r.bram_frac += Calib::RDMA_BRAM_FRAC;
+    }
+    for _ in 0..n_pipelines {
+        r = r.add(pipeline);
+    }
+    let _ = dev;
+    r
+}
+
+/// Max pipelines that fit the device (paper: 7 dynamic regions max).
+pub fn max_pipelines(dev: &Device, pipeline: &ResourceReport, with_rdma: bool) -> usize {
+    // Dynamic-region floorplanning caps at 7 regions on the U55c prototype.
+    const MAX_REGIONS: usize = 7;
+    let mut n = 0;
+    while n < MAX_REGIONS {
+        let r = full_report(dev, pipeline, n + 1, with_rdma);
+        if !r.fits() {
+            break;
+        }
+        n += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsp_calibration_matches_table4_exactly() {
+        // P-I: Modulus only ⇒ 1 DSP × 4 lanes = 4/9024 ≈ 0.04%.
+        let dev = Device::alveo_u55c();
+        let stages = vec![
+            (
+                vec![
+                    OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+                    OpSpec::Clamp { lo: 0.0, hi: f32::MAX },
+                    OpSpec::Logarithm,
+                ],
+                None,
+            ),
+            (vec![OpSpec::Hex2Int, OpSpec::Modulus { m: 1 << 22 }], None),
+        ];
+        let r = pipeline_cost(
+            &dev,
+            &PipelineShape { stages: &stages, lanes: 4, hbm_tables: 0, with_rdma: false },
+        );
+        assert!((r.dsp_frac - 0.0004).abs() < 2e-4, "dsp={}", r.dsp_frac);
+    }
+
+    #[test]
+    fn shell_plus_rdma_matches_table4() {
+        let dev = Device::alveo_u55c();
+        let empty = ResourceReport::default();
+        let rdma_only = full_report(&dev, &empty, 0, true);
+        assert!((rdma_only.clb_frac - 0.406).abs() < 0.005, "clb={}", rdma_only.clb_frac);
+        assert!((rdma_only.bram_frac - 0.205).abs() < 0.005, "bram={}", rdma_only.bram_frac);
+        assert_eq!(rdma_only.dsp_frac, 0.0);
+    }
+
+    #[test]
+    fn hbm_tables_inflate_bram() {
+        let dev = Device::alveo_u55c();
+        let stages = vec![(
+            vec![OpSpec::VocabGen { expected: 512 * 1024 }],
+            Some(StatePlacement::Hbm),
+        )];
+        let small = pipeline_cost(
+            &dev,
+            &PipelineShape { stages: &stages, lanes: 4, hbm_tables: 1, with_rdma: false },
+        );
+        let large = pipeline_cost(
+            &dev,
+            &PipelineShape { stages: &stages, lanes: 4, hbm_tables: 26, with_rdma: false },
+        );
+        assert!(large.bram_frac > small.bram_frac + 0.1);
+        // RDMA co-residency demotes staging depth.
+        let with_rdma = pipeline_cost(
+            &dev,
+            &PipelineShape { stages: &stages, lanes: 4, hbm_tables: 26, with_rdma: true },
+        );
+        assert!(with_rdma.bram_frac < large.bram_frac);
+    }
+
+    #[test]
+    fn max_pipelines_is_bounded_by_regions() {
+        let dev = Device::alveo_u55c();
+        let tiny = ResourceReport { clb_frac: 0.01, bram_frac: 0.01, dsp_frac: 0.0 };
+        assert_eq!(max_pipelines(&dev, &tiny, false), 7);
+        let huge = ResourceReport { clb_frac: 0.5, bram_frac: 0.1, dsp_frac: 0.0 };
+        assert_eq!(max_pipelines(&dev, &huge, false), 1);
+    }
+}

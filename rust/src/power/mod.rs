@@ -1,0 +1,151 @@
+//! Platform power and energy-efficiency models (paper §4.6, Table 3).
+//!
+//! Static powers from the paper: CPU 150 W, RTX 3090 33 W, A100 43 W,
+//! PipeRec 17 W. Dynamic power is modeled as static + activity terms
+//! calibrated to Table 3's measured averages; Perf/W is the reciprocal of
+//! latency × power, normalized to the CPU baseline.
+
+use crate::baselines::Platform;
+use crate::dataio::dataset::{DatasetKind, DatasetSpec};
+use crate::etl::pipelines::PipelineKind;
+
+/// Idle/static power (W), per the paper.
+pub fn static_power(p: Platform) -> f64 {
+    match p {
+        Platform::CpuPandas | Platform::CpuBeam => 150.0,
+        Platform::Rtx3090 => 33.0,
+        Platform::A100 => 43.0,
+        Platform::PipeRec => 17.0,
+    }
+}
+
+/// Average power under load (W) for a configuration. Calibrated to
+/// Table 3: CPU 294–379 W, 3090 92–143 W, A100 75–82 W, PipeRec 24–26 W.
+pub fn dynamic_power(p: Platform, dataset: DatasetKind, pipeline: PipelineKind) -> f64 {
+    let wide = dataset == DatasetKind::II;
+    let vocab_activity = match pipeline {
+        PipelineKind::I => 0.0,
+        PipelineKind::II => 1.0,
+        PipelineKind::III => 2.0,
+    };
+    match p {
+        // All cores saturated; wide schemas push more memory traffic.
+        Platform::CpuPandas | Platform::CpuBeam => {
+            294.0 + if wide { 75.0 } else { 0.0 } + vocab_activity * 7.0
+        }
+        // GPU power rises with vocabulary work (groupby kernels).
+        Platform::Rtx3090 => 92.0 + if wide { 9.0 } else { 0.0 } + vocab_activity * 17.0,
+        Platform::A100 => 76.0 + if wide { -1.0 } else { 0.0 } + vocab_activity * 2.5,
+        // The FPGA's draw is nearly flat (paper: 24–26 W).
+        Platform::PipeRec => 24.0 + vocab_activity * 1.0,
+    }
+}
+
+/// Energy for one pipeline execution (J).
+pub fn energy_joules(power_w: f64, latency_s: f64) -> f64 {
+    power_w * latency_s
+}
+
+/// Perf/W of a platform relative to the CPU baseline (Table 3's
+/// "Eff. (CPU=1)" rows): `(lat_cpu × pwr_cpu) / (lat × pwr)`.
+pub fn perf_per_watt_vs_cpu(
+    cpu_latency_s: f64,
+    cpu_power_w: f64,
+    latency_s: f64,
+    power_w: f64,
+) -> f64 {
+    (cpu_latency_s * cpu_power_w) / (latency_s * power_w)
+}
+
+/// One row of Table 3.
+#[derive(Debug, Clone)]
+pub struct PowerRow {
+    pub platform: Platform,
+    pub power_w: f64,
+    pub latency_s: f64,
+    pub eff_vs_cpu: f64,
+}
+
+/// Build the Table 3 rows for a configuration given per-platform latencies.
+pub fn table3_rows(
+    spec: &DatasetSpec,
+    pipeline: PipelineKind,
+    latencies: &[(Platform, f64)],
+) -> Vec<PowerRow> {
+    let cpu_lat = latencies
+        .iter()
+        .find(|(p, _)| *p == Platform::CpuPandas)
+        .map(|(_, l)| *l)
+        .expect("CPU latency required as the baseline");
+    let cpu_pwr = dynamic_power(Platform::CpuPandas, spec.kind, pipeline);
+    latencies
+        .iter()
+        .map(|&(platform, latency_s)| {
+            let power_w = dynamic_power(platform, spec.kind, pipeline);
+            PowerRow {
+                platform,
+                power_w,
+                latency_s,
+                eff_vs_cpu: perf_per_watt_vs_cpu(cpu_lat, cpu_pwr, latency_s, power_w),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_powers_match_paper() {
+        assert_eq!(static_power(Platform::CpuPandas), 150.0);
+        assert_eq!(static_power(Platform::Rtx3090), 33.0);
+        assert_eq!(static_power(Platform::A100), 43.0);
+        assert_eq!(static_power(Platform::PipeRec), 17.0);
+    }
+
+    #[test]
+    fn dynamic_power_in_table3_ranges() {
+        for ds in [DatasetKind::I, DatasetKind::II] {
+            for pl in PipelineKind::all() {
+                let cpu = dynamic_power(Platform::CpuPandas, ds, pl);
+                assert!((290.0..385.0).contains(&cpu), "cpu {cpu}");
+                let g = dynamic_power(Platform::Rtx3090, ds, pl);
+                assert!((90.0..145.0).contains(&g), "3090 {g}");
+                let a = dynamic_power(Platform::A100, ds, pl);
+                assert!((70.0..85.0).contains(&a), "a100 {a}");
+                let f = dynamic_power(Platform::PipeRec, ds, pl);
+                assert!((23.0..27.0).contains(&f), "piperec {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn table3_anchor_d1_p1() {
+        // Paper D-I + P-I: CPU 294 W/78 s, PipeRec 24 W/1.1 s ⇒ 868.6×.
+        let eff = perf_per_watt_vs_cpu(78.0, 294.0, 1.1, 24.0);
+        assert!((eff / 868.6 - 1.0).abs() < 0.01, "eff={eff}");
+    }
+
+    #[test]
+    fn table3_rows_normalize_to_cpu() {
+        let spec = DatasetSpec::dataset_i(1.0);
+        let rows = table3_rows(
+            &spec,
+            PipelineKind::I,
+            &[
+                (Platform::CpuPandas, 78.0),
+                (Platform::A100, 2.8),
+                (Platform::PipeRec, 1.1),
+            ],
+        );
+        assert!((rows[0].eff_vs_cpu - 1.0).abs() < 1e-12);
+        assert!(rows[2].eff_vs_cpu > rows[1].eff_vs_cpu);
+        assert!(rows[2].eff_vs_cpu > 500.0);
+    }
+
+    #[test]
+    fn energy_is_power_times_time() {
+        assert_eq!(energy_joules(25.0, 4.0), 100.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Artifact manifest: metadata emitted by `python/compile/aot.py`
+//! alongside the HLO text files, describing model shapes and the train
+//! step's argument order. Parsed at load time so the Rust runtime never
+//! needs Python.
+//!
+//! Format (`artifacts/meta.txt`, `key=value` lines, `#` comments):
+//! ```text
+//! batch=256
+//! n_dense=13
+//! n_sparse=26
+//! vocab=2000
+//! embed_dim=16
+//! param=emb:52000,16
+//! param=w_bot1:13,64
+//! ...
+//! ```
+//! `param=` lines appear in the exact positional-argument order of the
+//! lowered train step (params first, then dense, sparse, labels).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{EtlError, Result};
+
+/// One model parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// Parsed artifact metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub batch: usize,
+    pub n_dense: usize,
+    pub n_sparse: usize,
+    pub vocab: usize,
+    pub embed_dim: usize,
+    pub params: Vec<ParamSpec>,
+    pub extra: BTreeMap<String, String>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<ModelMeta> {
+        let mut kv = BTreeMap::new();
+        let mut params = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                EtlError::Runtime(format!("meta line {} not key=value: {line:?}", lineno + 1))
+            })?;
+            if k == "param" {
+                let (name, dims) = v.split_once(':').ok_or_else(|| {
+                    EtlError::Runtime(format!("bad param spec: {v:?}"))
+                })?;
+                let dims: Vec<usize> = dims
+                    .split(',')
+                    .map(|d| {
+                        d.trim().parse().map_err(|e| {
+                            EtlError::Runtime(format!("bad dim in {v:?}: {e}"))
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+                params.push(ParamSpec { name: name.trim().to_string(), dims });
+            } else {
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| EtlError::Runtime(format!("meta missing key {k:?}")))?
+                .parse()
+                .map_err(|e| EtlError::Runtime(format!("bad {k}: {e}")))
+        };
+        Ok(ModelMeta {
+            batch: get("batch")?,
+            n_dense: get("n_dense")?,
+            n_sparse: get("n_sparse")?,
+            vocab: get("vocab")?,
+            embed_dim: get("embed_dim")?,
+            params,
+            extra: kv,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ModelMeta> {
+        let text = std::fs::read_to_string(path)?;
+        ModelMeta::parse(&text)
+    }
+
+    /// Total trainable parameters.
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.elements()).sum()
+    }
+}
+
+/// Locations of the artifacts produced by `make artifacts`.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    pub dir: PathBuf,
+    pub train_hlo: PathBuf,
+    pub loss_hlo: PathBuf,
+    pub meta: PathBuf,
+}
+
+impl ArtifactPaths {
+    pub fn in_dir(dir: impl Into<PathBuf>) -> ArtifactPaths {
+        let dir = dir.into();
+        ArtifactPaths {
+            train_hlo: dir.join("train_step.hlo.txt"),
+            loss_hlo: dir.join("read_loss.hlo.txt"),
+            meta: dir.join("meta.txt"),
+            dir,
+        }
+    }
+
+    /// Default location relative to the repo root (or `PIPEREC_ARTIFACTS`).
+    pub fn default_dir() -> ArtifactPaths {
+        let dir = std::env::var("PIPEREC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        ArtifactPaths::in_dir(dir)
+    }
+
+    pub fn exist(&self) -> bool {
+        self.train_hlo.exists() && self.loss_hlo.exists() && self.meta.exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# DLRM artifact metadata
+batch=256
+n_dense=13
+n_sparse=26
+vocab=2000
+embed_dim=16
+param=emb:52000,16
+param=w_bot1:13,64
+param=b_bot1:64
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.n_sparse, 26);
+        assert_eq!(m.params.len(), 3);
+        assert_eq!(m.params[0].name, "emb");
+        assert_eq!(m.params[0].dims, vec![52000, 16]);
+        assert_eq!(m.params[0].elements(), 832_000);
+        assert_eq!(m.param_count(), 832_000 + 13 * 64 + 64);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        assert!(ModelMeta::parse("batch=1\n").is_err());
+    }
+
+    #[test]
+    fn bad_dims_are_error() {
+        let text = SAMPLE.replace("52000,16", "52000,x");
+        assert!(ModelMeta::parse(&text).is_err());
+    }
+
+    #[test]
+    fn paths_layout() {
+        let p = ArtifactPaths::in_dir("/tmp/a");
+        assert!(p.train_hlo.ends_with("train_step.hlo.txt"));
+        assert!(p.meta.ends_with("meta.txt"));
+    }
+}

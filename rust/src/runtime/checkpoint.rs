@@ -1,0 +1,216 @@
+//! Checkpointing for continuous training (paper §2: "warm-starting from
+//! previous checkpoints" is how production recommender pipelines run).
+//! Saves/restores the trainer's flat parameter state and the fitted ETL
+//! vocabularies so a PipeRec deployment can restart without refitting or
+//! reinitializing.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "PRCKPT1\0" | u64 step | u64 state_len | f32[state_len]
+//! u32 n_vocabs | per vocab: u16 key_len | key | u64 n_keys | i64[n_keys]
+//! ```
+//! Vocabularies are stored as keys in first-appearance order — replaying
+//! them through `VocabTable::get_or_insert` reconstructs identical
+//! indices (the table's defining invariant).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{EtlError, Result};
+use crate::etl::dag::EtlState;
+use crate::etl::ops::vocab::VocabTable;
+
+const MAGIC: &[u8; 8] = b"PRCKPT1\0";
+
+/// A checkpoint: trainer step, flat model state, fitted vocabularies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub state: Vec<f32>,
+    /// (vocab key, table keys in first-appearance order).
+    pub vocabs: Vec<(String, Vec<i64>)>,
+}
+
+impl Checkpoint {
+    /// Capture from a trainer state vector and fitted ETL state.
+    pub fn capture(step: u64, state: Vec<f32>, etl: &EtlState) -> Checkpoint {
+        let mut vocabs: Vec<(String, Vec<i64>)> = etl
+            .vocabs
+            .iter()
+            .map(|(k, t)| (k.clone(), t.keys_in_order().to_vec()))
+            .collect();
+        vocabs.sort_by(|a, b| a.0.cmp(&b.0)); // deterministic order
+        Checkpoint { step, state, vocabs }
+    }
+
+    /// Reconstruct the ETL state (identical indices by replay).
+    pub fn restore_etl(&self) -> EtlState {
+        let mut etl = EtlState::default();
+        for (key, keys) in &self.vocabs {
+            let mut t = VocabTable::with_capacity(keys.len());
+            for &k in keys {
+                t.get_or_insert(k);
+            }
+            etl.vocabs.insert(key.clone(), t);
+        }
+        etl
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        w.write_all(MAGIC)?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.state.len() as u64).to_le_bytes())?;
+        for v in &self.state {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.write_all(&(self.vocabs.len() as u32).to_le_bytes())?;
+        for (key, keys) in &self.vocabs {
+            let kb = key.as_bytes();
+            if kb.len() > u16::MAX as usize {
+                return Err(EtlError::Format("vocab key too long".into()));
+            }
+            w.write_all(&(kb.len() as u16).to_le_bytes())?;
+            w.write_all(kb)?;
+            w.write_all(&(keys.len() as u64).to_le_bytes())?;
+            for &k in keys {
+                w.write_all(&k.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Checkpoint> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(EtlError::Format("bad checkpoint magic".into()));
+        }
+        let step = read_u64(r)?;
+        let state_len = read_u64(r)? as usize;
+        if state_len > (1 << 32) {
+            return Err(EtlError::Format(format!("implausible state_len {state_len}")));
+        }
+        let mut state = vec![0f32; state_len];
+        let mut buf = vec![0u8; state_len * 4];
+        r.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            state[i] = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        let n_vocabs = read_u32(r)? as usize;
+        let mut vocabs = Vec::with_capacity(n_vocabs);
+        for _ in 0..n_vocabs {
+            let klen = read_u16(r)? as usize;
+            let mut kb = vec![0u8; klen];
+            r.read_exact(&mut kb)?;
+            let key = String::from_utf8(kb)
+                .map_err(|e| EtlError::Format(format!("bad vocab key: {e}")))?;
+            let n = read_u64(r)? as usize;
+            let mut keys = vec![0i64; n];
+            let mut buf = vec![0u8; n * 8];
+            r.read_exact(&mut buf)?;
+            for (i, c) in buf.chunks_exact(8).enumerate() {
+                keys[i] = i64::from_le_bytes(c.try_into().unwrap());
+            }
+            vocabs.push((key, keys));
+        }
+        Ok(Checkpoint { step, state, vocabs })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)?;
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Checkpoint::read_from(&mut f)
+    }
+}
+
+fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::ops::vocab::vocab_gen;
+
+    fn sample() -> Checkpoint {
+        let mut etl = EtlState::default();
+        etl.vocabs.insert("a".into(), vocab_gen(&[30, 10, 30, 20], 8));
+        etl.vocabs.insert("b".into(), vocab_gen(&[-5, 7], 8));
+        Checkpoint::capture(123, vec![1.0, -2.5, f32::NAN, 0.0], &etl)
+    }
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let ck = sample();
+        let mut buf = Vec::new();
+        ck.write_to(&mut buf).unwrap();
+        let back = Checkpoint::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.step, 123);
+        assert_eq!(back.vocabs, ck.vocabs);
+        // NaN-aware state compare.
+        assert_eq!(back.state.len(), 4);
+        for (a, b) in ck.state.iter().zip(&back.state) {
+            assert!(a == b || (a.is_nan() && b.is_nan()));
+        }
+    }
+
+    #[test]
+    fn restore_replays_identical_indices() {
+        let ck = sample();
+        let etl = ck.restore_etl();
+        let t = &etl.vocabs["a"];
+        assert_eq!(t.get(30), Some(0));
+        assert_eq!(t.get(10), Some(1));
+        assert_eq!(t.get(20), Some(2));
+        assert_eq!(etl.vocabs["b"].get(-5), Some(0));
+    }
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join("piperec_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, ck.step);
+        assert_eq!(back.vocabs, ck.vocabs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Checkpoint::read_from(&mut &b"NOTACKPT"[..]).is_err());
+        let mut buf = Vec::new();
+        sample().write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() / 2);
+        assert!(Checkpoint::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn capture_orders_vocabs_deterministically() {
+        let ck = sample();
+        assert_eq!(ck.vocabs[0].0, "a");
+        assert_eq!(ck.vocabs[1].0, "b");
+    }
+}

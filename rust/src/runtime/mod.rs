@@ -1,0 +1,262 @@
+//! PJRT runtime (the paper's GPU-trainer stand-in): loads the HLO-text
+//! artifacts AOT-compiled by `python/compile/aot.py`, compiles them on the
+//! PJRT CPU client, and drives training with a **device-resident flat
+//! state buffer** — all parameters live in one `f32[state_len]` array with
+//! a trailing loss slot; each step the host uploads only the packed batch
+//! and re-feeds the previous output buffer (`execute_b`), mirroring the
+//! paper's zero-copy ingest discipline. A second tiny executable slices
+//! the loss slot out on-device (the CPU PJRT plugin lacks CopyRawToHost).
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+
+pub mod artifacts;
+pub mod checkpoint;
+
+use crate::coordinator::packer::PackedBatch;
+use crate::error::{EtlError, Result};
+use crate::util::prng::Rng;
+use artifacts::{ArtifactPaths, ModelMeta};
+
+/// Wrap an `xla::Error` into our error type.
+fn xe(e: xla::Error) -> EtlError {
+    EtlError::Runtime(e.to_string())
+}
+
+/// The PJRT engine: one CPU client shared by all executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu().map_err(xe)? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn compile_hlo(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(xe)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(xe)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(xe)
+    }
+}
+
+impl ModelMeta {
+    /// Flat state length: all parameters + 1 loss slot.
+    pub fn state_len(&self) -> usize {
+        self.param_count() + 1
+    }
+}
+
+/// A loaded DLRM train step with a device-resident flat state buffer.
+pub struct Trainer {
+    engine: Engine,
+    step_exe: xla::PjRtLoadedExecutable,
+    loss_exe: xla::PjRtLoadedExecutable,
+    pub meta: ModelMeta,
+    state: xla::PjRtBuffer,
+    /// Steps executed.
+    pub steps: u64,
+}
+
+impl Trainer {
+    /// Load artifacts, compile both executables, and initialize the state
+    /// buffer with a deterministic Glorot-ish scheme.
+    pub fn load(paths: &ArtifactPaths, seed: u64) -> Result<Trainer> {
+        if !paths.exist() {
+            return Err(EtlError::Runtime(format!(
+                "artifacts not found in {:?} — run `make artifacts`",
+                paths.dir
+            )));
+        }
+        let engine = Engine::cpu()?;
+        let meta = ModelMeta::load(&paths.meta)?;
+        let step_exe = engine.compile_hlo(&paths.train_hlo)?;
+        let loss_exe = engine.compile_hlo(&paths.loss_hlo)?;
+        let state = engine.upload_f32(&init_state(&meta, seed), &[meta.state_len()])?;
+        Ok(Trainer { engine, step_exe, loss_exe, meta, state, steps: 0 })
+    }
+
+    /// Reset parameters.
+    pub fn init_params(&mut self, seed: u64) -> Result<()> {
+        self.state = self
+            .engine
+            .upload_f32(&init_state(&self.meta, seed), &[self.meta.state_len()])?;
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// Run one training step on a packed batch; the state stays on device.
+    pub fn step(&mut self, batch: &PackedBatch) -> Result<()> {
+        let m = &self.meta;
+        if batch.rows != m.batch || batch.n_dense != m.n_dense || batch.n_sparse != m.n_sparse {
+            return Err(EtlError::Runtime(format!(
+                "batch shape ({}, {}, {}) != artifact shape ({}, {}, {})",
+                batch.rows, batch.n_dense, batch.n_sparse, m.batch, m.n_dense, m.n_sparse
+            )));
+        }
+        // Fold indices into the (possibly smaller) artifact vocabulary.
+        let vocab = m.vocab as i32;
+        let sparse: Vec<i32> = batch.sparse.iter().map(|&v| v % vocab).collect();
+
+        let dense_b = self.engine.upload_f32(&batch.dense, &[batch.rows, m.n_dense])?;
+        let sparse_b = self.engine.upload_i32(&sparse, &[batch.rows, m.n_sparse])?;
+        let labels_b = self.engine.upload_f32(&batch.labels, &[batch.rows])?;
+
+        let mut outs = self
+            .step_exe
+            .execute_b(&[&self.state, &dense_b, &sparse_b, &labels_b])
+            .map_err(xe)?;
+        let mut replica = outs
+            .drain(..)
+            .next()
+            .ok_or_else(|| EtlError::Runtime("no outputs".into()))?;
+        if replica.len() != 1 {
+            return Err(EtlError::Runtime(format!(
+                "expected 1 state output, got {}",
+                replica.len()
+            )));
+        }
+        self.state = replica.remove(0);
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Read the loss slot of the current state (runs the on-device slice
+    /// executable; downloads 4 bytes).
+    pub fn loss(&self) -> Result<f32> {
+        let mut outs = self.loss_exe.execute_b(&[&self.state]).map_err(xe)?;
+        let buf = outs
+            .drain(..)
+            .next()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| EtlError::Runtime("loss executable produced no output".into()))?;
+        let lit = buf.to_literal_sync().map_err(xe)?;
+        lit.get_first_element().map_err(xe)
+    }
+
+    /// Convenience: step then read loss.
+    pub fn step_with_loss(&mut self, batch: &PackedBatch) -> Result<f32> {
+        self.step(batch)?;
+        self.loss()
+    }
+
+    /// Download the full state (tests / checkpoints).
+    pub fn state_to_vec(&self) -> Result<Vec<f32>> {
+        let lit = self.state.to_literal_sync().map_err(xe)?;
+        lit.to_vec::<f32>().map_err(xe)
+    }
+
+    /// Download one named parameter tensor by slicing the host copy.
+    pub fn param_to_vec(&self, name: &str) -> Result<Vec<f32>> {
+        let state = self.state_to_vec()?;
+        let mut off = 0usize;
+        for p in &self.meta.params {
+            let n = p.elements();
+            if p.name == name {
+                return Ok(state[off..off + n].to_vec());
+            }
+            off += n;
+        }
+        Err(EtlError::Runtime(format!("no parameter named {name:?}")))
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.meta.param_count()
+    }
+
+    /// Capture a checkpoint of the current device state (downloads the
+    /// flat state once; §2's warm-start path).
+    pub fn checkpoint(&self, etl: &crate::etl::dag::EtlState) -> Result<checkpoint::Checkpoint> {
+        Ok(checkpoint::Checkpoint::capture(self.steps, self.state_to_vec()?, etl))
+    }
+
+    /// Restore from a checkpoint: uploads the state and resumes the step
+    /// counter. Fails if the state length does not match the artifact.
+    pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
+        if ck.state.len() != self.meta.state_len() {
+            return Err(EtlError::Runtime(format!(
+                "checkpoint state_len {} != artifact {}",
+                ck.state.len(),
+                self.meta.state_len()
+            )));
+        }
+        self.state = self.engine.upload_f32(&ck.state, &[ck.state.len()])?;
+        self.steps = ck.step;
+        Ok(())
+    }
+}
+
+/// Host-side initial state: per-parameter init + zeroed loss slot.
+pub fn init_state(meta: &ModelMeta, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut state = Vec::with_capacity(meta.state_len());
+    for p in &meta.params {
+        let n = p.elements();
+        if p.name.starts_with('b') {
+            state.extend(std::iter::repeat(0f32).take(n));
+        } else if p.name.starts_with("emb") {
+            state.extend((0..n).map(|_| (rng.normal() as f32) * 0.05));
+        } else {
+            let fan_in = *p.dims.first().unwrap_or(&1) as f64;
+            let fan_out = *p.dims.last().unwrap_or(&1) as f64;
+            let scale = (2.0 / (fan_in + fan_out)).sqrt();
+            state.extend((0..n).map(|_| (rng.normal() * scale) as f32));
+        }
+    }
+    state.push(0.0); // loss slot
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use artifacts::ParamSpec;
+
+    #[test]
+    fn missing_artifacts_error_is_actionable() {
+        let paths = ArtifactPaths::in_dir("/nonexistent");
+        let msg = match Trainer::load(&paths, 0) {
+            Err(e) => format!("{e}"),
+            Ok(_) => panic!("expected an error"),
+        };
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn init_state_layout() {
+        let meta = ModelMeta {
+            batch: 4,
+            n_dense: 2,
+            n_sparse: 2,
+            vocab: 10,
+            embed_dim: 4,
+            params: vec![
+                ParamSpec { name: "emb".into(), dims: vec![20, 4] },
+                ParamSpec { name: "w1".into(), dims: vec![2, 8] },
+                ParamSpec { name: "b1".into(), dims: vec![8] },
+            ],
+            extra: Default::default(),
+        };
+        let s = init_state(&meta, 42);
+        assert_eq!(s.len(), 80 + 16 + 8 + 1);
+        // biases zero, loss slot zero
+        assert!(s[96..104].iter().all(|&v| v == 0.0));
+        assert_eq!(*s.last().unwrap(), 0.0);
+        // deterministic
+        assert_eq!(s, init_state(&meta, 42));
+        assert_ne!(s, init_state(&meta, 43));
+    }
+}

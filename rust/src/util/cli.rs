@@ -1,0 +1,128 @@
+//! Minimal command-line argument parser (the offline registry has no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process command line (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// True if `--name` was given as a bare flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.options
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string option.
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.options.get(name).cloned()
+    }
+
+    /// Typed option with default; panics with a clear message on a bad value.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("invalid value for --{name}: {v:?} ({e})")),
+        }
+    }
+
+    /// First positional argument, if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = parse("train --steps 100 --lr=0.05 --verbose");
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get::<u32>("steps", 0), 100);
+        assert_eq!(a.get::<f64>("lr", 0.0), 0.05);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let a = parse("etl");
+        assert_eq!(a.get::<u32>("steps", 7), 7);
+        assert_eq!(a.get_str("pipeline", "p1"), "p1");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_not_a_value() {
+        let a = parse("--fast --steps 5");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get::<u32>("steps", 0), 5);
+    }
+
+    #[test]
+    fn positionals_collected_in_order() {
+        let a = parse("bench fig13 extra");
+        assert_eq!(a.positional, vec!["bench", "fig13", "extra"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value for --steps")]
+    fn bad_typed_value_panics() {
+        let a = parse("--steps abc");
+        let _ = a.get::<u32>("steps", 0);
+    }
+}

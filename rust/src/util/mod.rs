@@ -1,0 +1,79 @@
+//! Infrastructure substrates built in-repo because the offline environment
+//! lacks the usual crates (clap/rayon/criterion/proptest): a deterministic
+//! PRNG, a CLI argument parser, a scoped thread pool, timing helpers,
+//! summary statistics and a property-testing mini-framework.
+
+pub mod cli;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod timer;
+
+/// Format a byte count using binary units (KiB/MiB/GiB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+/// Format a throughput in bytes/second.
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    } else if bytes_per_sec >= 1e6 {
+        format!("{:.2} MB/s", bytes_per_sec / 1e6)
+    } else if bytes_per_sec >= 1e3 {
+        format!("{:.2} KB/s", bytes_per_sec / 1e3)
+    } else {
+        format!("{bytes_per_sec:.1} B/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(2.0), "2.00 s");
+        assert_eq!(fmt_secs(0.002), "2.00 ms");
+        assert_eq!(fmt_secs(2e-6), "2.00 µs");
+        assert_eq!(fmt_secs(2e-9), "2.0 ns");
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(12.5e9), "12.50 GB/s");
+        assert_eq!(fmt_rate(10e6), "10.00 MB/s");
+    }
+}

@@ -1,0 +1,103 @@
+//! Scoped worker pool over `std::thread` (the offline registry has no
+//! rayon). Provides `parallel_chunks` — the only parallel idiom the CPU
+//! baseline and data generators need: split a range into contiguous chunks
+//! and run a closure per chunk on `n` threads.
+
+/// Run `f(chunk_index, range)` for each of `chunks` contiguous sub-ranges of
+/// `0..len` across up to `threads` OS threads, returning per-chunk results
+/// in order.
+pub fn parallel_chunks<T, F>(len: usize, chunks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, std::ops::Range<usize>) -> T + Sync,
+{
+    assert!(chunks > 0, "chunks must be > 0");
+    let chunks = chunks.min(len.max(1));
+    let per = len.div_ceil(chunks);
+    let ranges: Vec<std::ops::Range<usize>> = (0..chunks)
+        .map(|i| (i * per).min(len)..((i + 1) * per).min(len))
+        .collect();
+
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| scope.spawn({ let f = &f; move || f(i, r) }))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker panicked"))
+            .collect()
+    })
+}
+
+/// Map a slice in parallel, preserving order.
+pub fn parallel_map<I, O, F>(items: &[I], threads: usize, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(&I) -> O + Sync,
+{
+    let results = parallel_chunks(items.len(), threads, |_, range| {
+        items[range].iter().map(&f).collect::<Vec<O>>()
+    });
+    results.into_iter().flatten().collect()
+}
+
+/// Number of worker threads to use by default (respects `PIPEREC_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PIPEREC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_range_exactly() {
+        let parts = parallel_chunks(103, 4, |_, r| r);
+        let total: usize = parts.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 103);
+        // Contiguous and ordered.
+        let mut next = 0;
+        for r in parts {
+            assert_eq!(r.start, next);
+            next = r.end;
+        }
+        assert_eq!(next, 103);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let xs: Vec<u64> = (0..10_000).collect();
+        let partials = parallel_chunks(xs.len(), 8, |_, r| xs[r].iter().sum::<u64>());
+        let total: u64 = partials.iter().sum();
+        assert_eq!(total, xs.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<u32> = (0..1000).collect();
+        let ys = parallel_map(&xs, 4, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let ys: Vec<u32> = parallel_map(&[] as &[u32], 4, |x| *x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn more_chunks_than_items_clamps() {
+        let parts = parallel_chunks(3, 16, |_, r| r.len());
+        assert_eq!(parts.iter().sum::<usize>(), 3);
+    }
+}

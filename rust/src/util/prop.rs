@@ -1,0 +1,224 @@
+//! Property-testing mini-framework (the offline registry has no proptest).
+//!
+//! A property is a closure over a [`Gen`] handle that draws random inputs
+//! and asserts invariants. `check` runs it for `cases` seeds; on failure it
+//! re-runs with progressively smaller size budgets (a coarse shrinking
+//! pass) and reports the failing seed so the case can be replayed
+//! deterministically with `replay`.
+
+use super::prng::Rng;
+
+/// Random-input generation handle passed to properties. The `size` budget
+/// bounds collection lengths so shrinking can retry smaller inputs.
+pub struct Gen {
+    rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        self.rng.below(bound.max(1))
+    }
+
+    pub fn usize(&mut self, bound: usize) -> usize {
+        self.rng.below_usize(bound.max(1))
+    }
+
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        let span = (hi as i128 - lo as i128 + 1) as u128;
+        let off = if span > u64::MAX as u128 {
+            self.rng.next_u64() as u128
+        } else {
+            self.rng.below(span as u64) as u128
+        };
+        (lo as i128 + off as i128) as i64
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.next_f32() * (hi - lo)
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// A length in `[1, size]`.
+    pub fn len(&mut self) -> usize {
+        1 + self.usize(self.size.max(1))
+    }
+
+    /// A possibly-empty length in `[0, size]`.
+    pub fn len0(&mut self) -> usize {
+        self.usize(self.size + 1)
+    }
+
+    /// Vector of draws.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Raw RNG access for custom distributions.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { seed: u64, size: usize, message: String },
+}
+
+/// Run `prop` for `cases` random cases. Panics with the failing seed on
+/// failure (after a coarse shrink pass over smaller size budgets).
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    match check_quiet(name, cases, &prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { seed, size, message } => panic!(
+            "property '{name}' failed (replay seed={seed}, size={size}): {message}"
+        ),
+    }
+}
+
+/// Like [`check`] but returns the outcome instead of panicking.
+pub fn check_quiet(
+    name: &str,
+    cases: usize,
+    prop: &impl Fn(&mut Gen) -> Result<(), String>,
+) -> PropResult {
+    let base_seed = 0x5EED_0000u64 ^ fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = 2 + (case * 64 / cases.max(1));
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // Coarse shrink: retry the same seed with smaller size budgets
+            // and report the smallest still-failing configuration.
+            let mut best = (seed, size, msg);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                let mut g = Gen::new(seed, s);
+                if let Err(m) = prop(&mut g) {
+                    best = (seed, s, m);
+                } else {
+                    break;
+                }
+            }
+            return PropResult::Failed {
+                seed: best.0,
+                size: best.1,
+                message: best.2,
+            };
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Replay a specific failing case.
+pub fn replay(
+    seed: u64,
+    size: usize,
+    prop: impl Fn(&mut Gen) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut g = Gen::new(seed, size);
+    prop(&mut g)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let close = (x - y).abs() <= tol + tol * x.abs().max(y.abs())
+            || (x.is_nan() && y.is_nan());
+        if !close {
+            return Err(format!("mismatch at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add_commutes", 50, |g| {
+            let a = g.i64_range(-1000, 1000);
+            let b = g.i64_range(-1000, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("addition does not commute".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let res = check_quiet("always_fails", 10, &|_g: &mut Gen| Err("nope".to_string()));
+        match res {
+            PropResult::Failed { message, .. } => assert_eq!(message, "nope"),
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn shrink_reduces_size() {
+        // Fails whenever size >= 4: shrinker should land below the original.
+        let res = check_quiet("size_sensitive", 64, &|g: &mut Gen| {
+            if g.size >= 4 {
+                Err(format!("size {}", g.size))
+            } else {
+                Ok(())
+            }
+        });
+        match res {
+            PropResult::Failed { size, .. } => assert!(size >= 4 && size <= 7, "size={size}"),
+            _ => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let prop = |g: &mut Gen| -> Result<(), String> {
+            let v = g.u64(1000);
+            Err(format!("{v}"))
+        };
+        let a = replay(42, 8, prop).unwrap_err();
+        let b = replay(42, 8, prop).unwrap_err();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! Wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs then `iters` measured runs,
+/// returning per-iteration seconds.
+pub fn measure_n(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// A simple scope stopwatch accumulating named spans — used for coarse
+/// profiling of the coordinator hot path.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    spans: Vec<(String, f64)>,
+}
+
+impl Stopwatch {
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time_it(f);
+        self.spans.push((name.to_string(), secs));
+        out
+    }
+
+    pub fn spans(&self) -> &[(String, f64)] {
+        &self.spans
+    }
+
+    pub fn total(&self) -> f64 {
+        self.spans.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Merge spans with identical names (sums their times).
+    pub fn rollup(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = Vec::new();
+        for (name, secs) in &self.spans {
+            match out.iter_mut().find(|(n, _)| n == name) {
+                Some((_, acc)) => *acc += secs,
+                None => out.push((name.clone(), *secs)),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value_and_positive_time() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn measure_n_counts() {
+        let mut calls = 0;
+        let times = measure_n(2, 5, || calls += 1);
+        assert_eq!(times.len(), 5);
+        assert_eq!(calls, 7);
+    }
+
+    #[test]
+    fn stopwatch_rollup_merges() {
+        let mut sw = Stopwatch::default();
+        sw.time("a", || {});
+        sw.time("b", || {});
+        sw.time("a", || {});
+        let rolled = sw.rollup();
+        assert_eq!(rolled.len(), 2);
+        assert_eq!(rolled[0].0, "a");
+        assert!(sw.total() >= 0.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Integration: ETL DAGs end-to-end over synthetic datasets — fit/apply
+//! semantics, platform-independent functional equivalence, and the rcol
+//! on-disk roundtrip.
+
+use piperec::baselines::RustCpuEtl;
+use piperec::dataio::{dataset::DatasetSpec, rcol};
+use piperec::etl::ops::kernels;
+use piperec::etl::pipelines::{build, PipelineKind};
+use piperec::prelude::*;
+
+#[test]
+fn all_pipelines_validate_and_run_on_all_datasets() {
+    for (spec, scale) in [
+        (DatasetSpec::dataset_i(0.001), 0.001),
+        (DatasetSpec::dataset_ii(0.002), 0.002),
+        (DatasetSpec::dataset_iii(0.01), 0.01),
+    ] {
+        let _ = scale;
+        let mut spec = spec;
+        spec.shards = 2;
+        let shard = spec.shard(0, 42);
+        for kind in PipelineKind::all() {
+            let dag = build(kind, &spec.schema);
+            dag.validate(&spec.schema).unwrap();
+            let state = dag.fit(&shard).unwrap();
+            let out = dag.apply(&shard, &state).unwrap();
+            assert_eq!(out.rows(), shard.rows(), "{} {}", spec.name, kind.label());
+            // Output columns: label + dense + sparse.
+            assert_eq!(
+                out.columns.len(),
+                1 + spec.schema.dense_count() + spec.schema.sparse_count()
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_chain_semantics_match_scalar_kernels() {
+    let mut spec = DatasetSpec::dataset_i(0.001);
+    spec.shards = 1;
+    let shard = spec.shard(0, 7);
+    let dag = build(PipelineKind::I, &spec.schema);
+    let state = dag.fit(&shard).unwrap();
+    let out = dag.apply(&shard, &state).unwrap();
+
+    let raw = shard.get("criteo_i0").unwrap().as_f32().unwrap();
+    let got = out.get("dense0").unwrap().as_f32().unwrap();
+    for (r, g) in raw.iter().zip(got) {
+        let want = kernels::logarithm(kernels::clamp(
+            kernels::fill_missing_f32(*r, 0.0),
+            0.0,
+            f32::MAX,
+        ));
+        assert_eq!(*g, want);
+    }
+}
+
+#[test]
+fn sparse_chain_semantics_match_scalar_kernels() {
+    let mut spec = DatasetSpec::dataset_i(0.001);
+    spec.shards = 1;
+    let shard = spec.shard(0, 7);
+    let dag = build(PipelineKind::I, &spec.schema);
+    let out = dag.apply(&shard, &EtlState::default()).unwrap();
+
+    let raw = shard.get("criteo_c0").unwrap().as_hex8().unwrap();
+    let got = out.get("sparse0").unwrap().as_i64().unwrap();
+    for (r, g) in raw.iter().zip(got) {
+        assert_eq!(*g, kernels::modulus(kernels::hex2int(*r), 1 << 22));
+    }
+}
+
+#[test]
+fn vocab_fit_apply_is_consistent_across_shards() {
+    let mut spec = DatasetSpec::dataset_i(0.002);
+    spec.shards = 3;
+    let dag = build(PipelineKind::II, &spec.schema);
+    // Fit on shard 0 only, apply to all shards (continuous-training style:
+    // the pipeline uses OOV index = table size via the VocabGen replay).
+    let state = dag.fit(&spec.shard(0, 42)).unwrap();
+    for i in 0..3 {
+        let out = dag.apply(&spec.shard(i, 42), &state).unwrap();
+        let table_len = state.vocabs["vocab_criteo_c0"].len() as i64;
+        let idx = out.get("sparse0").unwrap().as_i64().unwrap();
+        assert!(idx.iter().all(|&v| (0..=table_len).contains(&v)));
+    }
+}
+
+#[test]
+fn multithreaded_cpu_equals_reference_on_every_pipeline() {
+    let mut spec = DatasetSpec::dataset_i(0.001);
+    spec.shards = 1;
+    let shard = spec.shard(0, 13);
+    for kind in PipelineKind::all() {
+        let dag = build(kind, &spec.schema);
+        let state = dag.fit(&shard).unwrap();
+        let reference = dag.apply(&shard, &state).unwrap();
+        for threads in [2, 3, 8] {
+            let parallel = RustCpuEtl::new(threads).apply(&dag, &shard, &state).unwrap();
+            for ((n1, c1), (n2, c2)) in reference.columns.iter().zip(&parallel.columns) {
+                assert_eq!(n1, n2);
+                assert_eq!(c1, c2, "{} threads={threads} col={n1}", kind.label());
+            }
+        }
+    }
+}
+
+#[test]
+fn rcol_roundtrip_of_raw_and_transformed_batches() {
+    let dir = std::env::temp_dir().join("piperec_it_rcol");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut spec = DatasetSpec::dataset_i(0.0005);
+    spec.shards = 1;
+    let shard = spec.shard(0, 21);
+
+    let raw_path = dir.join("raw.rcol");
+    rcol::write_file(&raw_path, &shard).unwrap();
+    let raw_back = rcol::read_file(&raw_path).unwrap();
+    assert_eq!(raw_back.rows(), shard.rows());
+    assert_eq!(
+        shard.get("criteo_c3").unwrap().as_hex8().unwrap(),
+        raw_back.get("criteo_c3").unwrap().as_hex8().unwrap()
+    );
+
+    let dag = build(PipelineKind::II, &spec.schema);
+    let state = dag.fit(&shard).unwrap();
+    let out = dag.apply(&shard, &state).unwrap();
+    let t_path = dir.join("transformed.rcol");
+    rcol::write_file(&t_path, &out).unwrap();
+    let t_back = rcol::read_file(&t_path).unwrap();
+    assert_eq!(
+        out.get("sparse5").unwrap().as_i64().unwrap(),
+        t_back.get("sparse5").unwrap().as_i64().unwrap()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn wide_dataset_onehot_bucketize_cartesian_compose() {
+    // Exercise the operators the canned pipelines do not use.
+    let schema = Schema::tabular("t", 2, 2, 50);
+    let mut dag = Dag::new("extended");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+
+    // dense0 → Bucketize → OneHot (dense path producing wide output).
+    let d0 = dag.source("t_i0", ColType::F32);
+    let fm = dag.op(
+        OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+        &[d0],
+    );
+    let bk = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[fm]);
+    dag.sink("bucket", bk, SinkRole::SparseIndex);
+
+    // Cross the two sparse features.
+    let c0 = dag.source("t_c0", ColType::Hex8);
+    let c1 = dag.source("t_c1", ColType::Hex8);
+    let h0 = dag.op(OpSpec::Hex2Int, &[c0]);
+    let h1 = dag.op(OpSpec::Hex2Int, &[c1]);
+    let sh = dag.op(OpSpec::SigridHash { m: 1000 }, &[h0]);
+    let cross = dag.op(OpSpec::Cartesian { m: 5000 }, &[sh, h1]);
+    dag.sink("cross", cross, SinkRole::SparseIndex);
+
+    dag.validate(&schema).unwrap();
+    let batch = piperec::dataio::synth::generate(
+        &schema,
+        500,
+        3,
+        &piperec::dataio::synth::SynthConfig::default(),
+    );
+    let out = dag.apply(&batch, &EtlState::default()).unwrap();
+    let bucket = out.get("bucket").unwrap().as_i64().unwrap();
+    assert!(bucket.iter().all(|&b| (0..=3).contains(&b)));
+    let cross = out.get("cross").unwrap().as_i64().unwrap();
+    assert!(cross.iter().all(|&c| (0..5000).contains(&c)));
+}

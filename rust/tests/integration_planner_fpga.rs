@@ -1,0 +1,159 @@
+//! Integration: planner → vFPGA deployment — Table 4 reproduction,
+//! event-sim vs analytical timing agreement on compiled plans, and
+//! multi-tenant partial reconfiguration (§3.4, §4.8).
+
+use piperec::etl::pipelines::{build, PipelineKind};
+use piperec::fpga::eventsim::{analytical_cycles, simulate, SimStage};
+use piperec::fpga::{Pipeline, VFpga};
+use piperec::memsys::IngestSource;
+use piperec::planner::resources::Device;
+use piperec::prelude::*;
+
+fn plan_for(kind: PipelineKind, with_rdma: bool) -> HardwarePlan {
+    let schema = Schema::criteo_kaggle();
+    let dag = build(kind, &schema);
+    let cfg = PlannerConfig { with_rdma, ..Default::default() };
+    compile(&dag, &schema, &cfg).unwrap()
+}
+
+#[test]
+fn table4_all_seven_columns() {
+    // Paper Table 4 (CLB / BRAM / DSP %):
+    //   P-I 17.6/9.9/0.04  P-II 21.0/10.0/2.3  P-III 26.9/24.5/2.3
+    //   RDMA 40.6/20.5/0   R-P-I 44.1/21.3/2.3 … R-P-III 52.4/26.3/2.3
+    let rows: Vec<(&str, f64, f64)> = vec![
+        ("P-I", 17.6, 9.9),
+        ("P-II", 21.0, 10.0),
+        ("P-III", 26.9, 24.5),
+        ("R-P-I", 44.1, 21.3),
+        ("R-P-II", 45.5, 21.7),
+        ("R-P-III", 52.4, 26.3),
+    ];
+    for (label, clb_paper, bram_paper) in rows {
+        let (kind, rdma) = match label {
+            "P-I" => (PipelineKind::I, false),
+            "P-II" => (PipelineKind::II, false),
+            "P-III" => (PipelineKind::III, false),
+            "R-P-I" => (PipelineKind::I, true),
+            "R-P-II" => (PipelineKind::II, true),
+            _ => (PipelineKind::III, true),
+        };
+        let plan = plan_for(kind, rdma);
+        let got_clb = plan.device_report.clb_frac * 100.0;
+        let got_bram = plan.device_report.bram_frac * 100.0;
+        assert!(
+            (got_clb - clb_paper).abs() < 4.0,
+            "{label}: CLB {got_clb:.1}% vs paper {clb_paper}%"
+        );
+        assert!(
+            (got_bram - bram_paper).abs() < 5.0,
+            "{label}: BRAM {got_bram:.1}% vs paper {bram_paper}%"
+        );
+    }
+}
+
+#[test]
+fn event_sim_confirms_compiled_dataflow_ii() {
+    // Build SimStages from each compiled plan and check the event-level
+    // simulation sustains the analytical II.
+    for kind in PipelineKind::all() {
+        let plan = plan_for(kind, false);
+        let stages: Vec<SimStage> = plan
+            .stages
+            .iter()
+            .map(|s| SimStage { ii: s.ii() as u64, depth: 4 })
+            .collect();
+        // A pipeline processes feature chains in parallel; its II is the
+        // max chain II. Simulate the slowest chain.
+        let slowest: Vec<SimStage> = vec![SimStage {
+            ii: plan.dataflow_ii as u64,
+            depth: 4,
+        }];
+        let tokens = 10_000;
+        let sim = simulate(&slowest, 8, tokens);
+        let ana = analytical_cycles(&slowest, tokens);
+        let err = (sim.total_cycles as f64 - ana).abs() / ana;
+        assert!(err < 0.02, "{}: err {err}", kind.label());
+        assert!(!stages.is_empty());
+    }
+}
+
+#[test]
+fn multi_tenant_load_fit_process_unload() {
+    let mut spec = piperec::dataio::dataset::DatasetSpec::dataset_i(0.001);
+    spec.shards = 1;
+    let shard = spec.shard(0, 5);
+    let mut fpga = VFpga::new(Device::alveo_u55c());
+
+    // Q1: heterogeneous pipelines coexist.
+    let a = fpga.load(plan_for(PipelineKind::I, false)).unwrap();
+    let b = fpga.load(plan_for(PipelineKind::II, false)).unwrap();
+    fpga.fit(b, &shard).unwrap();
+    let (out_a, t_a) = fpga.process(a, &shard).unwrap();
+    let (out_b, t_b) = fpga.process(b, &shard).unwrap();
+    assert_eq!(out_a.rows(), shard.rows());
+    assert_eq!(out_b.rows(), shard.rows());
+    // Stateless pipeline is not slower than the stateful one.
+    assert!(t_a.compute_s <= t_b.compute_s);
+
+    // Swap pipeline A for a Pipeline-III instance (partial reconfig).
+    fpga.unload(a).unwrap();
+    let c = fpga.load(plan_for(PipelineKind::III, false)).unwrap();
+    fpga.fit(c, &shard).unwrap();
+    let (out_c, _) = fpga.process(c, &shard).unwrap();
+    assert_eq!(out_c.rows(), shard.rows());
+    assert!(fpga.reconfig_s >= 3.0 * piperec::fpga::RECONFIG_SECONDS);
+}
+
+#[test]
+fn fig17_scaling_shape() {
+    // Linear to 4, sublinear at 7 (150 MHz), per the paper §4.8.
+    let fpga = VFpga::new(Device::alveo_u55c());
+    let plan = {
+        let schema = Schema::synthetic_wide();
+        let dag = build(PipelineKind::I, &schema);
+        compile(&dag, &schema, &PlannerConfig::default()).unwrap()
+    };
+    let t: Vec<f64> = [1usize, 2, 4, 7]
+        .iter()
+        .map(|&n| fpga.concurrent_throughput(&plan, n, IngestSource::OnBoard))
+        .collect();
+    assert!((t[1] / t[0] - 2.0).abs() < 0.05);
+    assert!((t[2] / t[0] - 4.0).abs() < 0.05);
+    let eff7 = t[3] / (7.0 * t[0]);
+    assert!(eff7 > 0.70 && eff7 < 0.80, "eff7={eff7}");
+}
+
+#[test]
+fn paper_scale_pipeline1_beats_pandas_85x() {
+    // Fig. 13a: PipeRec outperforms pandas by ~85× on Dataset-I P-I.
+    let spec = piperec::dataio::dataset::DatasetSpec::dataset_i(1.0);
+    let plan = plan_for(PipelineKind::I, false);
+    let pipe = Pipeline::new(plan);
+    let piperec_s = pipe.projected_seconds(spec.paper_bytes(), IngestSource::Host);
+    let pandas_s = piperec::baselines::PandasModel::default()
+        .pipeline_seconds(PipelineKind::I, &spec);
+    let speedup = pandas_s / piperec_s;
+    assert!(speedup > 40.0 && speedup < 200.0, "speedup={speedup:.0}×");
+}
+
+#[test]
+fn ssd_bound_dataset3_hits_1_2gbps_ceiling() {
+    // §4.4: on Dataset-III both GPU and PipeRec are SSD-bound.
+    let spec = piperec::dataio::dataset::DatasetSpec::dataset_iii(1.0);
+    let plan = plan_for(PipelineKind::I, false);
+    let pipe = Pipeline::new(plan);
+    let t = pipe.projected_seconds(spec.paper_bytes(), IngestSource::Ssd);
+    let floor = spec.paper_bytes() as f64 / 1.2e9;
+    assert!((t / floor - 1.0).abs() < 0.02, "t={t} floor={floor}");
+}
+
+#[test]
+fn planner_rejects_overcommitted_device() {
+    // A degenerate device with almost no logic must reject the plan.
+    let schema = Schema::criteo_kaggle();
+    let dag = build(PipelineKind::III, &schema);
+    let mut cfg = PlannerConfig::default();
+    cfg.device.clb_total = 1000.0;
+    assert!(compile(&dag, &schema, &cfg).is_err());
+}

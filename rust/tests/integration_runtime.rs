@@ -1,0 +1,175 @@
+//! Integration: the PJRT runtime — load the AOT artifacts, run real train
+//! steps with device-resident state, and drive the full three-layer loop
+//! (FPGA-sim ETL → packer → staging → PJRT trainer).
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use piperec::coordinator::{pack, train, PackLayout, TrainConfig};
+use piperec::dataio::dataset::DatasetSpec;
+use piperec::etl::pipelines::{build, PipelineKind};
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::ArtifactPaths;
+use piperec::runtime::Trainer;
+use piperec::util::prng::Rng;
+
+fn artifacts() -> Option<ArtifactPaths> {
+    let paths = ArtifactPaths::default_dir();
+    if paths.exist() {
+        Some(paths)
+    } else {
+        eprintln!("skipping runtime integration test: run `make artifacts` first");
+        None
+    }
+}
+
+fn synthetic_packed(meta: &piperec::runtime::artifacts::ModelMeta, seed: u64) -> piperec::coordinator::PackedBatch {
+    let mut rng = Rng::new(seed);
+    let rows = meta.batch;
+    piperec::coordinator::PackedBatch {
+        rows,
+        n_dense: meta.n_dense,
+        n_sparse: meta.n_sparse,
+        dense: (0..rows * meta.n_dense).map(|_| rng.normal() as f32).collect(),
+        sparse: (0..rows * meta.n_sparse)
+            .map(|_| rng.below(meta.vocab as u64) as i32)
+            .collect(),
+        labels: (0..rows)
+            .map(|_| if rng.next_f64() < 0.3 { 1.0 } else { 0.0 })
+            .collect(),
+    }
+}
+
+#[test]
+fn trainer_loads_and_loss_decreases_on_fixed_batch() {
+    let Some(paths) = artifacts() else { return };
+    let mut trainer = Trainer::load(&paths, 7).unwrap();
+    assert!(trainer.param_count() > 1_000_000);
+    let batch = synthetic_packed(&trainer.meta, 3);
+
+    let first = trainer.step_with_loss(&batch).unwrap();
+    assert!(first.is_finite() && first > 0.0);
+    for _ in 0..30 {
+        trainer.step(&batch).unwrap();
+    }
+    let last = trainer.loss().unwrap();
+    assert!(
+        last < first,
+        "loss did not decrease on a fixed batch: {first} → {last}"
+    );
+    assert_eq!(trainer.steps, 31);
+}
+
+#[test]
+fn trainer_rejects_wrong_batch_shape() {
+    let Some(paths) = artifacts() else { return };
+    let mut trainer = Trainer::load(&paths, 1).unwrap();
+    let mut batch = synthetic_packed(&trainer.meta, 5);
+    batch.rows -= 1;
+    batch.labels.pop();
+    batch.dense.truncate(batch.rows * batch.n_dense);
+    batch.sparse.truncate(batch.rows * batch.n_sparse);
+    assert!(trainer.step(&batch).is_err());
+}
+
+#[test]
+fn init_params_is_deterministic_and_reseeds() {
+    let Some(paths) = artifacts() else { return };
+    let trainer1 = Trainer::load(&paths, 11).unwrap();
+    let trainer2 = Trainer::load(&paths, 11).unwrap();
+    let a = trainer1.param_to_vec("w_bot1").unwrap();
+    let b = trainer2.param_to_vec("w_bot1").unwrap();
+    assert_eq!(a, b);
+    let mut trainer3 = Trainer::load(&paths, 12).unwrap();
+    let c = trainer3.param_to_vec("w_bot1").unwrap();
+    assert_ne!(a, c);
+    trainer3.init_params(11).unwrap();
+    assert_eq!(trainer3.param_to_vec("w_bot1").unwrap(), a);
+}
+
+#[test]
+fn full_three_layer_training_loop() {
+    let Some(paths) = artifacts() else { return };
+    let mut trainer = Trainer::load(&paths, 21).unwrap();
+
+    let mut spec = DatasetSpec::dataset_i(0.02);
+    spec.shards = 3;
+    let dag = build(PipelineKind::II, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+    let mut pipe = Pipeline::new(plan);
+    pipe.fit(&spec.shard(0, 42)).unwrap();
+
+    let cfg = TrainConfig { max_steps: 40, loss_every: 5, ..Default::default() };
+    let report = train(&pipe, &spec, &mut trainer, &cfg).unwrap();
+    assert!(report.steps > 0, "no steps ran");
+    assert!(!report.losses.is_empty());
+    assert!(report.losses.iter().all(|(_, l)| l.is_finite()));
+    assert!(report.util > 0.0 && report.util <= 1.0);
+    assert!(report.etl_sim_s > 0.0);
+    // Real data + real model: loss after 40 steps below initial BCE.
+    let (first, last) = report.loss_delta().unwrap();
+    assert!(last < first + 0.05, "loss diverged: {first} → {last}");
+}
+
+#[test]
+fn packed_batches_from_pipeline_fit_trainer_shapes() {
+    let Some(paths) = artifacts() else { return };
+    let trainer = Trainer::load(&paths, 31).unwrap();
+    let mut spec = DatasetSpec::dataset_i(0.001);
+    spec.shards = 1;
+    let dag = build(PipelineKind::III, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+    let mut pipe = Pipeline::new(plan);
+    let shard = spec.shard(0, 42);
+    pipe.fit(&shard).unwrap();
+    let (out, _) = pipe.process(&shard).unwrap();
+    let layout = PackLayout::of(&pipe.plan.dag).unwrap();
+    let packed = pack(&out, &layout).unwrap();
+    let chunks = packed.chunks(trainer.meta.batch);
+    assert!(!chunks.is_empty());
+    for c in &chunks {
+        assert_eq!(c.rows, trainer.meta.batch);
+        assert_eq!(c.n_dense, trainer.meta.n_dense);
+        assert_eq!(c.n_sparse, trainer.meta.n_sparse);
+    }
+}
+
+#[test]
+fn checkpoint_restore_resumes_training() {
+    let Some(paths) = artifacts() else { return };
+    let mut trainer = Trainer::load(&paths, 41).unwrap();
+    let batch = synthetic_packed(&trainer.meta, 9);
+    for _ in 0..5 {
+        trainer.step(&batch).unwrap();
+    }
+    let loss_at_5 = trainer.loss().unwrap();
+
+    // Capture, keep training, then restore and verify determinism.
+    let etl = piperec::etl::dag::EtlState::default();
+    let ck = trainer.checkpoint(&etl).unwrap();
+    assert_eq!(ck.step, 5);
+    for _ in 0..3 {
+        trainer.step(&batch).unwrap();
+    }
+    let loss_at_8 = trainer.loss().unwrap();
+    assert_ne!(loss_at_5, loss_at_8);
+
+    trainer.restore(&ck).unwrap();
+    assert_eq!(trainer.steps, 5);
+    assert!((trainer.loss().unwrap() - loss_at_5).abs() < 1e-7);
+    for _ in 0..3 {
+        trainer.step(&batch).unwrap();
+    }
+    // Replay reproduces the same trajectory bit-for-bit.
+    assert_eq!(trainer.loss().unwrap(), loss_at_8);
+
+    // Disk roundtrip.
+    let dir = std::env::temp_dir().join("piperec_it_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ckpt");
+    ck.save(&path).unwrap();
+    let back = piperec::runtime::checkpoint::Checkpoint::load(&path).unwrap();
+    trainer.restore(&back).unwrap();
+    assert_eq!(trainer.steps, 5);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,300 @@
+//! Property-based tests over coordinator + ETL invariants (routing,
+//! batching, state), using the in-repo prop-test framework
+//! (`util::prop`): randomized cases with seed reporting and coarse
+//! shrinking.
+
+use piperec::coordinator::packer::{pack, PackLayout, PackedBatch};
+use piperec::etl::column::{Batch, ColType, Column};
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::ops::vocab::{vocab_gen, vocab_map};
+use piperec::etl::ops::{kernels, OpSpec};
+use piperec::etl::schema::Schema;
+use piperec::memsys::xbar::{Crossbar, PortRequest};
+use piperec::memsys::{ChannelModel, Path};
+use piperec::util::prop::{check, Gen};
+
+/// Build a random batch + layout with `nd` dense, `ns` sparse columns.
+fn random_packed(g: &mut Gen, rows: usize, nd: usize, ns: usize) -> (PackLayout, Batch) {
+    let mut dag = Dag::new("prop");
+    let l = dag.source("label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    let mut batch = Batch::new();
+    batch
+        .push("label", Column::f32(g.vec(rows, |g| if g.bool() { 1.0 } else { 0.0 })))
+        .unwrap();
+    for i in 0..nd {
+        let s = dag.source(format!("d{i}"), ColType::F32);
+        dag.sink(format!("dense{i}"), s, SinkRole::Dense);
+        batch
+            .push(format!("d{i}"), Column::f32(g.vec(rows, |g| g.f32_range(-10.0, 10.0))))
+            .unwrap();
+        // Sinks reference the source column names in the DAG, but the
+        // transformed batch carries sink names — emulate identity ops.
+        let (name, col) = batch.columns.last().unwrap().clone();
+        let _ = name;
+        batch.push(format!("dense{i}"), col).unwrap();
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("s{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        dag.sink(format!("sparse{i}"), h, SinkRole::SparseIndex);
+        batch
+            .push(format!("sparse{i}"), Column::i64(g.vec(rows, |g| g.u64(1 << 20) as i64)))
+            .unwrap();
+    }
+    (PackLayout::of(&dag).unwrap(), batch)
+}
+
+#[test]
+fn prop_packer_roundtrip_preserves_every_value() {
+    check("packer_roundtrip", 60, |g| {
+        let rows = g.len();
+        let nd = 1 + g.usize(4);
+        let ns = 1 + g.usize(4);
+        let (layout, batch) = random_packed(g, rows, nd, ns);
+        let p = pack(&batch, &layout).map_err(|e| e.to_string())?;
+        // Unpack and compare against the original columns.
+        for (ci, name) in layout.dense_cols.iter().enumerate() {
+            let col = batch.get(name).unwrap().as_f32().unwrap();
+            for r in 0..rows {
+                if p.dense[r * nd + ci] != col[r] {
+                    return Err(format!("dense mismatch at ({r},{ci})"));
+                }
+            }
+        }
+        for (ci, name) in layout.sparse_cols.iter().enumerate() {
+            let col = batch.get(name).unwrap().as_i64().unwrap();
+            for r in 0..rows {
+                if p.sparse[r * ns + ci] as i64 != col[r] {
+                    return Err(format!("sparse mismatch at ({r},{ci})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunking_preserves_rows_and_order() {
+    check("chunking", 80, |g| {
+        let rows = 1 + g.usize(500);
+        let nd = 1 + g.usize(3);
+        let ns = 1 + g.usize(3);
+        let step = 1 + g.usize(64);
+        let (layout, batch) = random_packed(g, rows, nd, ns);
+        let p = pack(&batch, &layout).map_err(|e| e.to_string())?;
+        let chunks = p.chunks(step);
+        if chunks.len() != rows / step {
+            return Err(format!("chunk count {} != {}", chunks.len(), rows / step));
+        }
+        // Invariant: concatenating chunks reproduces the packed prefix.
+        let mut dense = Vec::new();
+        let mut labels = Vec::new();
+        for c in &chunks {
+            if c.rows != step {
+                return Err("non-uniform chunk".into());
+            }
+            dense.extend_from_slice(&c.dense);
+            labels.extend_from_slice(&c.labels);
+        }
+        let full = (rows / step) * step;
+        if dense != p.dense[..full * nd] {
+            return Err("dense prefix mismatch".into());
+        }
+        if labels != p.labels[..full] {
+            return Err("label prefix mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vocab_bijection_and_order() {
+    check("vocab_bijection", 80, |g| {
+        let n = g.len() * 8;
+        let universe = 1 + g.usize(64) as i64;
+        let values: Vec<i64> = g.vec(n, |g| g.i64_range(-universe, universe));
+        let table = vocab_gen(&values, 16);
+        // Indices are dense 0..len and map back to first appearances.
+        let mapped = vocab_map(&values, &table).map_err(|e| e.to_string())?;
+        let mut first_seen: Vec<i64> = Vec::new();
+        for (v, m) in values.iter().zip(&mapped) {
+            if !first_seen.contains(v) {
+                if *m != first_seen.len() as i64 {
+                    return Err(format!("new value {v} got index {m}, want {}", first_seen.len()));
+                }
+                first_seen.push(*v);
+            } else {
+                let want = first_seen.iter().position(|x| x == v).unwrap() as i64;
+                if *m != want {
+                    return Err(format!("repeat value {v} got {m}, want {want}"));
+                }
+            }
+        }
+        if table.len() != first_seen.len() {
+            return Err("table size != distinct count".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_operator_chains_are_total_and_bounded() {
+    // Any hex token stream through Hex2Int→Modulus→SigridHash stays in
+    // range and is deterministic.
+    check("op_chain_bounds", 80, |g| {
+        let n = g.len() * 4;
+        let m = 1 + g.u64(1 << 24) as i64;
+        let tokens: Vec<u64> = g.vec(n, |g| {
+            piperec::dataio::synth::pack_hex_u32(g.u64(u32::MAX as u64 + 1) as u32)
+        });
+        for &t in &tokens {
+            let v = kernels::hex2int(t);
+            if v < 0 {
+                return Err(format!("hex2int produced negative {v}"));
+            }
+            let md = kernels::modulus(v, m);
+            if !(0..m).contains(&md) {
+                return Err(format!("modulus out of range: {md} (m={m})"));
+            }
+            let sh = kernels::sigrid_hash(v, m);
+            if !(0..m).contains(&sh) {
+                return Err(format!("sigrid out of range: {sh}"));
+            }
+            if kernels::hex2int(t) != v {
+                return Err("hex2int not deterministic".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dag_random_linear_chains_validate_and_run() {
+    // Random valid dense chains always validate and apply cleanly.
+    check("dag_linear_chains", 40, |g| {
+        let schema = Schema::tabular("t", 1, 0, 10);
+        let mut dag = Dag::new("rand");
+        let l = dag.source("t_label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let mut node = dag.source("t_i0", ColType::F32);
+        let len = 1 + g.usize(6);
+        for _ in 0..len {
+            let op = match g.usize(3) {
+                0 => OpSpec::FillMissing { dense_default: g.f32_range(-1.0, 1.0), sparse_default: 0 },
+                1 => OpSpec::Clamp { lo: 0.0, hi: g.f32_range(1.0, 100.0) },
+                _ => OpSpec::Logarithm,
+            };
+            node = dag.op(op, &[node]);
+        }
+        dag.sink("dense0", node, SinkRole::Dense);
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+        let batch = piperec::dataio::synth::generate(
+            &schema,
+            64,
+            g.u64(1 << 32),
+            &piperec::dataio::synth::SynthConfig::default(),
+        );
+        let state = dag.fit(&batch).map_err(|e| e.to_string())?;
+        let out = dag.apply(&batch, &state).map_err(|e| e.to_string())?;
+        if out.rows() != 64 {
+            return Err("row count changed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_crossbar_conserves_bandwidth() {
+    check("crossbar_conservation", 60, |g| {
+        let xbar = Crossbar::new(ChannelModel::of(Path::HostDmaRead));
+        let n = 1 + g.usize(12);
+        let reqs: Vec<PortRequest> = (0..n)
+            .map(|port| PortRequest { port, bytes: 1 + g.u64(1 << 26) })
+            .collect();
+        let times = xbar.schedule(&reqs);
+        let total: u64 = reqs.iter().map(|r| r.bytes).sum();
+        let makespan = times.iter().fold(0.0f64, |a, &b| a.max(b));
+        // Can't finish faster than aggregate bandwidth allows.
+        if makespan + 1e-12 < total as f64 / xbar.channel.bandwidth {
+            return Err(format!("makespan {makespan} beats physics"));
+        }
+        // Everyone finishes no earlier than their own solo payload time.
+        for (r, t) in reqs.iter().zip(&times) {
+            if *t + 1e-12 < r.bytes as f64 / xbar.channel.bandwidth {
+                return Err(format!("port {} too fast", r.port));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_staging_sim_respects_credits_and_causality() {
+    use piperec::coordinator::StagingSim;
+    check("staging_order", 60, |g| {
+        let buffers = 1 + g.usize(4) as u32;
+        let single = buffers == 1;
+        let mut sim = StagingSim::new(buffers, ChannelModel::of(Path::P2pToGpu));
+        let n = 2 + g.usize(40);
+        let mut now = 0.0f64;
+        let mut last_done = 0.0f64;
+        let mut last_gate = 0.0f64;
+        let mut in_flight: std::collections::VecDeque<f64> = Default::default();
+        for _ in 0..n {
+            now += g.f64_range(0.0, 1e-3);
+            if in_flight.len() == buffers as usize {
+                // Trainer must release before the next push is legal.
+                let done = in_flight.pop_front().unwrap();
+                last_gate = done + 1e-4;
+                sim.release(last_gate);
+            }
+            let bytes = 1 + g.u64(1 << 22);
+            let done = sim.push(now, bytes);
+            // Causality: never completes before submission nor before the
+            // credit that admitted it (when the gate was binding).
+            if done < now {
+                return Err("completed before submission".into());
+            }
+            if in_flight.len() == buffers as usize - 1
+                && done + 1e-12 < last_gate.min(now).max(0.0)
+            {
+                return Err(format!("ignored the credit gate: {done} < {last_gate}"));
+            }
+            // With a single buffer the channel is serial: strictly ordered.
+            if single && done < last_done - 1e-12 {
+                return Err(format!("serial channel reordered: {done} < {last_done}"));
+            }
+            last_done = done;
+            in_flight.push_back(done);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rcol_roundtrips_arbitrary_batches() {
+    check("rcol_roundtrip", 40, |g| {
+        let rows = g.len();
+        let mut batch = Batch::new();
+        let ncols = 1 + g.usize(6);
+        for c in 0..ncols {
+            let col = match g.usize(3) {
+                0 => Column::f32(g.vec(rows, |g| g.f32_range(-1e6, 1e6))),
+                1 => Column::hex8(g.vec(rows, |g| {
+                    piperec::dataio::synth::pack_hex_u32(g.u64(1 << 32) as u32)
+                })),
+                _ => Column::i64(g.vec(rows, |g| g.i64_range(i64::MIN / 2, i64::MAX / 2))),
+            };
+            batch.push(format!("c{c}"), col).unwrap();
+        }
+        let mut buf = Vec::new();
+        piperec::dataio::rcol::write_batch(&mut buf, &batch).map_err(|e| e.to_string())?;
+        let back = piperec::dataio::rcol::read_batch(&mut buf.as_slice())
+            .map_err(|e| e.to_string())?;
+        if back.columns != batch.columns {
+            return Err("columns differ after roundtrip".into());
+        }
+        Ok(())
+    });
+}

@@ -26,7 +26,7 @@ use piperec::runtime::Trainer;
 use piperec::util::cli::Args;
 use piperec::util::{fmt_bytes, fmt_rate, fmt_secs};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let steps: usize = args.get("steps", 300);
     let scale: f64 = args.get("scale", 0.05);

@@ -17,7 +17,7 @@ use piperec::prelude::*;
 use piperec::util::cli::Args;
 use piperec::util::fmt_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let kind = match args.get_str("pipeline", "2").as_str() {
         "1" => PipelineKind::I,
@@ -36,10 +36,13 @@ fn main() -> anyhow::Result<()> {
     let plan = compile(&dag, &spec.schema, &PlannerConfig::default())?;
     let mut pipe = Pipeline::new(plan);
 
-    // Measured: our real Rust CPU baseline on this machine.
+    // Measured: our real Rust CPU baseline on this machine — the columnar
+    // reference interpreter vs the fused tiled engine (same DAG, same
+    // thread budget, apply+pack in one pass).
     let shard = spec.shard(0, 42);
     let threads = piperec::util::pool::default_threads();
     let (_, rust_cpu_s) = RustCpuEtl::new(threads).run(&dag, &shard)?;
+    let (_, rust_fused_s) = RustCpuEtl::new(threads).run_fused(&dag, &shard)?;
 
     // Measured (simulated clock): PipeRec on the same shard.
     pipe.fit(&shard)?;
@@ -73,10 +76,13 @@ fn main() -> anyhow::Result<()> {
     table.print();
 
     println!(
-        "\nmeasured on this machine ({} rows): Rust CPU {} ({} threads) vs PipeRec sim {}",
+        "\nmeasured on this machine ({} rows): Rust CPU {} ({} threads), \
+         fused engine {} ({:.1}x), PipeRec sim {}",
         shard.rows(),
         fmt_secs(rust_cpu_s),
         threads,
+        fmt_secs(rust_fused_s),
+        rust_cpu_s / rust_fused_s.max(1e-12),
         fmt_secs(t.elapsed_s),
     );
     Ok(())

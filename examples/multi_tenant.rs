@@ -15,7 +15,7 @@ use piperec::planner::resources::Device;
 use piperec::prelude::*;
 use piperec::util::fmt_rate;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let device = Device::alveo_u55c();
 
     // ---- Q1: heterogeneous pipelines coexist ----------------------------

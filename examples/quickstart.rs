@@ -11,7 +11,7 @@ use piperec::fpga::Pipeline;
 use piperec::prelude::*;
 use piperec::util::{fmt_bytes, fmt_rate, fmt_secs};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. A dataset schema: 4 dense + 3 sparse features (Criteo-style).
     let schema = Schema::tabular("demo", 4, 3, 10_000);
 

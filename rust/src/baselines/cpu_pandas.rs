@@ -39,6 +39,23 @@ impl RustCpuEtl {
         Ok((out, t0.elapsed().as_secs_f64()))
     }
 
+    /// Fit + fused apply+pack: the comparison point for the fused tiled
+    /// engine (`etl::exec`) against this columnar baseline — same DAG,
+    /// same thread budget, but one pass straight into trainer layout.
+    pub fn run_fused(
+        &self,
+        dag: &Dag,
+        input: &Batch,
+    ) -> Result<(crate::coordinator::packer::PackedBatch, f64)> {
+        use crate::etl::exec::{ExecConfig, FusedEngine};
+        let t0 = std::time::Instant::now();
+        let state = dag.fit(input)?;
+        let cfg = ExecConfig { threads: self.threads, ..ExecConfig::default() };
+        let engine = FusedEngine::compile(dag, cfg)?;
+        let packed = engine.execute(input, &state)?;
+        Ok((packed, t0.elapsed().as_secs_f64()))
+    }
+
     /// Apply with frozen state, parallelised across row ranges.
     pub fn apply(&self, dag: &Dag, input: &Batch, state: &EtlState) -> Result<Batch> {
         if self.threads == 1 || input.rows() < 2 * self.threads {
@@ -59,25 +76,10 @@ impl RustCpuEtl {
     }
 }
 
-/// Extract rows `range` of every column.
+/// Extract rows `range` of every column (thin alias of
+/// [`Batch::slice_rows`], kept for API stability).
 pub fn slice_batch(b: &Batch, range: std::ops::Range<usize>) -> Batch {
-    use crate::etl::column::Column;
-    let mut out = Batch::new();
-    for (name, col) in &b.columns {
-        let c = match col {
-            Column::F32 { data, width } => Column::F32 {
-                data: data[range.start * width..range.end * width].to_vec(),
-                width: *width,
-            },
-            Column::Hex8 { data } => Column::Hex8 { data: data[range.clone()].to_vec() },
-            Column::I64 { data, width } => Column::I64 {
-                data: data[range.start * width..range.end * width].to_vec(),
-                width: *width,
-            },
-        };
-        out.push(name.clone(), c).expect("slice preserves row counts");
-    }
-    out
+    b.slice_rows(range)
 }
 
 /// Concatenate batches with identical schemas row-wise.
@@ -228,6 +230,22 @@ mod tests {
             assert_eq!(n1, n2);
             assert_eq!(c1, c2, "column {n1} diverged");
         }
+    }
+
+    #[test]
+    fn fused_run_matches_reference_apply_plus_pack() {
+        use crate::coordinator::packer::{pack, PackLayout};
+        let mut spec = DatasetSpec::dataset_i(0.001);
+        spec.shards = 1;
+        let shard = spec.shard(0, 11);
+        let dag = build(PipelineKind::II, &spec.schema);
+        let state = dag.fit(&shard).unwrap();
+        let reference = dag.apply(&shard, &state).unwrap();
+        let layout = PackLayout::of(&dag).unwrap();
+        let want = pack(&reference, &layout).unwrap();
+        let (got, secs) = RustCpuEtl::new(4).run_fused(&dag, &shard).unwrap();
+        assert_eq!(want, got);
+        assert!(secs >= 0.0);
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod sharding;
 pub mod staging;
 pub mod train_loop;
 
-pub use packer::{pack, PackLayout, PackedBatch};
+pub use packer::{pack, PackLayout, PackedBatch, PackedBatchView};
 pub use scheduler::{cpu_gpu_config, piperec_config, simulate_overlap, OverlapConfig, OverlapResult};
 pub use online::{classify_psi, DriftDetector, DriftVerdict, FreshnessTracker, OnlineVocab};
 pub use sharding::{provision, route, ShardingPlan};

@@ -33,21 +33,71 @@ impl PackedBatch {
     /// Split into per-training-step slices of `step_rows` (the last slice
     /// is dropped if incomplete — DLRM training uses fixed batch shapes).
     pub fn chunks(&self, step_rows: usize) -> Vec<PackedBatch> {
+        self.chunk_views(step_rows).iter().map(PackedBatchView::to_batch).collect()
+    }
+
+    /// Borrowed equivalent of [`chunks`](Self::chunks): zero-copy views
+    /// over the packed buffers. The train loop steps directly on these so
+    /// steady-state stepping never re-copies the batch payload.
+    pub fn chunk_views(&self, step_rows: usize) -> Vec<PackedBatchView<'_>> {
         assert!(step_rows > 0);
         let full = self.rows / step_rows;
         (0..full)
             .map(|i| {
                 let r = i * step_rows..(i + 1) * step_rows;
-                PackedBatch {
+                PackedBatchView {
                     rows: step_rows,
                     n_dense: self.n_dense,
                     n_sparse: self.n_sparse,
-                    dense: self.dense[r.start * self.n_dense..r.end * self.n_dense].to_vec(),
-                    sparse: self.sparse[r.start * self.n_sparse..r.end * self.n_sparse].to_vec(),
-                    labels: self.labels[r.clone()].to_vec(),
+                    dense: &self.dense[r.start * self.n_dense..r.end * self.n_dense],
+                    sparse: &self.sparse[r.start * self.n_sparse..r.end * self.n_sparse],
+                    labels: &self.labels[r],
                 }
             })
             .collect()
+    }
+
+    /// A borrowed view of the whole batch.
+    pub fn view(&self) -> PackedBatchView<'_> {
+        PackedBatchView {
+            rows: self.rows,
+            n_dense: self.n_dense,
+            n_sparse: self.n_sparse,
+            dense: &self.dense,
+            sparse: &self.sparse,
+            labels: &self.labels,
+        }
+    }
+}
+
+/// A borrowed slice of a [`PackedBatch`] — same shape metadata, zero-copy
+/// payload. What the trainer consumes in the steady state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PackedBatchView<'a> {
+    pub rows: usize,
+    pub n_dense: usize,
+    pub n_sparse: usize,
+    pub dense: &'a [f32],
+    pub sparse: &'a [i32],
+    pub labels: &'a [f32],
+}
+
+impl PackedBatchView<'_> {
+    /// Total payload bytes of this view.
+    pub fn bytes(&self) -> u64 {
+        (self.dense.len() * 4 + self.sparse.len() * 4 + self.labels.len() * 4) as u64
+    }
+
+    /// Materialize an owned copy.
+    pub fn to_batch(&self) -> PackedBatch {
+        PackedBatch {
+            rows: self.rows,
+            n_dense: self.n_dense,
+            n_sparse: self.n_sparse,
+            dense: self.dense.to_vec(),
+            sparse: self.sparse.to_vec(),
+            labels: self.labels.to_vec(),
+        }
     }
 }
 
@@ -203,6 +253,35 @@ mod tests {
         assert_eq!(chunks[0].rows, 2);
         assert_eq!(chunks[0].dense, vec![0.1, 1.1, 0.2, 1.2]);
         assert_eq!(chunks[0].labels, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn chunk_views_alias_the_owned_chunks() {
+        let (layout, b) = layout_and_batch();
+        let p = pack(&b, &layout).unwrap();
+        let views = p.chunk_views(2);
+        let owned = p.chunks(2);
+        assert_eq!(views.len(), owned.len());
+        for (v, o) in views.iter().zip(&owned) {
+            assert_eq!(v.rows, o.rows);
+            assert_eq!(v.dense, &o.dense[..]);
+            assert_eq!(v.sparse, &o.sparse[..]);
+            assert_eq!(v.labels, &o.labels[..]);
+            assert_eq!(v.bytes(), o.bytes());
+            assert_eq!(&v.to_batch(), o);
+        }
+        // Borrowed slices point into the parent's buffers (no copy).
+        assert!(std::ptr::eq(views[0].dense.as_ptr(), p.dense.as_ptr()));
+    }
+
+    #[test]
+    fn whole_batch_view_roundtrips() {
+        let (layout, b) = layout_and_batch();
+        let p = pack(&b, &layout).unwrap();
+        let v = p.view();
+        assert_eq!(v.rows, p.rows);
+        assert_eq!(v.to_batch(), p);
+        assert_eq!(p.chunk_views(1).len(), 3);
     }
 
     #[test]

@@ -7,10 +7,10 @@
 //! pop, train, release the buffer. GPU utilization is measured as
 //! train-busy time over wall time per window, exactly as Fig. 14 reports.
 
-use crate::coordinator::packer::{pack, PackLayout};
 use crate::coordinator::staging::StagingQueue;
 use crate::dataio::dataset::DatasetSpec;
 use crate::error::{EtlError, Result};
+use crate::etl::exec::BufferPool;
 use crate::fpga::Pipeline;
 use crate::metrics::TimeSeries;
 use crate::runtime::Trainer;
@@ -77,10 +77,12 @@ pub fn run(
     if !pipeline.is_fitted() && pipeline.plan.dag.stateful_count() > 0 {
         return Err(EtlError::Coord("pipeline must be fitted before training".into()));
     }
-    let layout = PackLayout::of(&pipeline.plan.dag)?;
     let step_rows = trainer.meta.batch;
     let (queue, consumer) = StagingQueue::with_buffers(cfg.staging_buffers);
     let stall_counter = queue.stall_counter();
+    // Packed-batch buffers cycle producer → staging → trainer → pool, so
+    // the steady state allocates nothing per shard.
+    let pool = BufferPool::new();
 
     let t0 = std::time::Instant::now();
     let mut etl_host_s = 0.0f64;
@@ -91,8 +93,11 @@ pub fn run(
     let mut util_trace = TimeSeries::default();
 
     std::thread::scope(|scope| -> Result<()> {
-        // Producer: the FPGA data plane. Takes ownership of the queue so
-        // dropping it at the end closes the channel and wakes the consumer.
+        // Producer: the FPGA data plane. Fused apply+pack transforms each
+        // shard straight into a recycled trainer-layout buffer. Takes
+        // ownership of the queue so dropping it at the end closes the
+        // channel and wakes the consumer.
+        let pool = &pool;
         let producer = scope.spawn(move || -> Result<(f64, f64, u64)> {
             let queue = queue;
             let mut host_s = 0.0;
@@ -102,41 +107,50 @@ pub fn run(
                 if shard.rows() == 0 {
                     break;
                 }
-                let (out, timing) = pipeline.process(&shard)?;
-                let tp = std::time::Instant::now();
-                let packed = pack(&out, &layout)?;
-                host_s += timing.host_s + tp.elapsed().as_secs_f64();
+                let mut packed = pool.take();
+                let timing = pipeline.process_packed_into(&shard, &mut packed)?;
+                host_s += timing.host_s;
                 sim_s += timing.elapsed_s;
-                for chunk in packed.chunks(step_rows) {
-                    if !queue.push(chunk) {
-                        // Consumer hung up (reached max_steps).
-                        return Ok((host_s, sim_s, 0));
-                    }
+                if !queue.push(packed) {
+                    // Consumer hung up (reached max_steps).
+                    return Ok((host_s, sim_s, 0));
                 }
             }
             Ok((host_s, sim_s, 0))
         });
 
-        // Consumer: the trainer.
+        // Consumer: the trainer steps on borrowed chunk views (zero-copy;
+        // the incomplete tail of each staged batch is dropped, matching
+        // DLRM's fixed batch shapes).
         let mut window_busy = 0.0f64;
         let mut window_start = 0.0f64;
         const WINDOW_STEPS: u64 = 20;
-        while trainer.steps < cfg.max_steps as u64 {
+        'consume: while trainer.steps < cfg.max_steps as u64 {
             let Some(batch) = consumer.pop() else { break };
-            let ts = std::time::Instant::now();
-            trainer.step(&batch)?;
-            let dt = ts.elapsed().as_secs_f64();
-            train_busy_s += dt;
-            window_busy += dt;
-            if trainer.steps % (cfg.loss_every as u64).max(1) == 0 {
-                losses.push((trainer.steps, trainer.loss()?));
+            for view in batch.chunk_views(step_rows) {
+                if trainer.steps >= cfg.max_steps as u64 {
+                    break;
+                }
+                let ts = std::time::Instant::now();
+                trainer.step_view(&view)?;
+                let dt = ts.elapsed().as_secs_f64();
+                train_busy_s += dt;
+                window_busy += dt;
+                if trainer.steps % (cfg.loss_every as u64).max(1) == 0 {
+                    losses.push((trainer.steps, trainer.loss()?));
+                }
+                if trainer.steps % WINDOW_STEPS == 0 {
+                    let now = t0.elapsed().as_secs_f64();
+                    let span = (now - window_start).max(1e-9);
+                    util_trace.push(now, (window_busy / span).min(1.0));
+                    window_busy = 0.0;
+                    window_start = now;
+                }
             }
-            if trainer.steps % WINDOW_STEPS == 0 {
-                let now = t0.elapsed().as_secs_f64();
-                let span = (now - window_start).max(1e-9);
-                util_trace.push(now, (window_busy / span).min(1.0));
-                window_busy = 0.0;
-                window_start = now;
+            // Return the drained buffer for reuse.
+            pool.put(batch);
+            if trainer.steps >= cfg.max_steps as u64 {
+                break 'consume;
             }
         }
         // Drain/close: dropping the consumer unblocks a blocked producer.

@@ -6,50 +6,91 @@ use crate::etl::column::ColType;
 pub type Result<T, E = EtlError> = std::result::Result<T, E>;
 
 /// Errors raised by ETL, planning, simulation and runtime layers.
-#[derive(Debug, thiserror::Error)]
+///
+/// (Display/Error are hand-implemented — the offline registry has no
+/// thiserror.)
+#[derive(Debug)]
 pub enum EtlError {
-    #[error("column type mismatch: expected {expected}, got {got}")]
     TypeMismatch { expected: ColType, got: ColType },
-
-    #[error("row count mismatch: expected {expected}, got {got}")]
     RowCountMismatch { expected: usize, got: usize },
-
-    #[error("invalid hex token: {0:?}")]
     BadHex(String),
-
-    #[error("schema error: {0}")]
     Schema(String),
-
-    #[error("DAG validation error: {0}")]
     Dag(String),
-
-    #[error("planner error: {0}")]
     Plan(String),
-
-    #[error("operator {op}: {msg}")]
     Op { op: &'static str, msg: String },
-
-    #[error("vocabulary error: {0}")]
     Vocab(String),
-
-    #[error("data format error: {0}")]
     Format(String),
-
-    #[error("memory subsystem error: {0}")]
     Mem(String),
-
-    #[error("coordinator error: {0}")]
     Coord(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
+    Io(std::io::Error),
+}
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+impl std::fmt::Display for EtlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EtlError::TypeMismatch { expected, got } => {
+                write!(f, "column type mismatch: expected {expected}, got {got}")
+            }
+            EtlError::RowCountMismatch { expected, got } => {
+                write!(f, "row count mismatch: expected {expected}, got {got}")
+            }
+            EtlError::BadHex(s) => write!(f, "invalid hex token: {s:?}"),
+            EtlError::Schema(s) => write!(f, "schema error: {s}"),
+            EtlError::Dag(s) => write!(f, "DAG validation error: {s}"),
+            EtlError::Plan(s) => write!(f, "planner error: {s}"),
+            EtlError::Op { op, msg } => write!(f, "operator {op}: {msg}"),
+            EtlError::Vocab(s) => write!(f, "vocabulary error: {s}"),
+            EtlError::Format(s) => write!(f, "data format error: {s}"),
+            EtlError::Mem(s) => write!(f, "memory subsystem error: {s}"),
+            EtlError::Coord(s) => write!(f, "coordinator error: {s}"),
+            EtlError::Runtime(s) => write!(f, "runtime error: {s}"),
+            EtlError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EtlError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EtlError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for EtlError {
+    fn from(e: std::io::Error) -> EtlError {
+        EtlError::Io(e)
+    }
 }
 
 impl EtlError {
     pub fn op(op: &'static str, msg: impl Into<String>) -> EtlError {
         EtlError::Op { op, msg: msg.into() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_previous_derive_format() {
+        let e = EtlError::TypeMismatch { expected: ColType::F32, got: ColType::Hex8 };
+        assert_eq!(e.to_string(), "column type mismatch: expected f32, got hex8");
+        assert_eq!(
+            EtlError::op("VocabMap", "no table").to_string(),
+            "operator VocabMap: no table"
+        );
+        assert_eq!(EtlError::Dag("x".into()).to_string(), "DAG validation error: x");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::Other, "disk");
+        let e: EtlError = ioe.into();
+        assert!(e.to_string().contains("disk"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

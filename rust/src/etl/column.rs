@@ -188,6 +188,27 @@ impl Batch {
     pub fn total_bytes(&self) -> usize {
         self.columns.iter().map(|(_, c)| c.total_bytes()).sum()
     }
+
+    /// Extract rows `range` of every column (tile slicing for row-range
+    /// parallel executors).
+    pub fn slice_rows(&self, range: std::ops::Range<usize>) -> Batch {
+        let mut out = Batch::new();
+        for (name, col) in &self.columns {
+            let c = match col {
+                Column::F32 { data, width } => Column::F32 {
+                    data: data[range.start * width..range.end * width].to_vec(),
+                    width: *width,
+                },
+                Column::Hex8 { data } => Column::Hex8 { data: data[range.clone()].to_vec() },
+                Column::I64 { data, width } => Column::I64 {
+                    data: data[range.start * width..range.end * width].to_vec(),
+                    width: *width,
+                },
+            };
+            out.push(name.clone(), c).expect("slice preserves row counts");
+        }
+        out
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,894 @@
+//! Fused tiled execution engine — the software analogue of the paper's
+//! streaming FPGA dataflow (§3.2).
+//!
+//! The reference executor ([`Dag::apply`]) is an interpreter: every
+//! operator materializes a fresh [`Column`], and the packer then pays a
+//! second strided transpose pass to produce the trainer layout. The FPGA
+//! never does this — operators are *fused* into streaming op-chains
+//! connected by on-chip FIFOs, and each record crosses the datapath once,
+//! landing directly in its training-ready position (§3.2, Fig. 4/5). This
+//! module reproduces that execution model on the host:
+//!
+//! 1. **Compile** — [`FusedEngine::compile`] lowers a `Dag` + its
+//!    [`PackLayout`] into per-sink fused chains: a linear sequence of
+//!    [`Step`]s over the scalar kernels in [`crate::etl::ops::kernels`]
+//!    (the single source of operator truth, so results stay bit-identical
+//!    to the reference executor). Sinks whose subgraph is not a linear
+//!    unary chain (Cartesian diamonds, OneHot widening, type errors)
+//!    compile to a *general* plan that evaluates the subgraph per tile
+//!    with the same semantics as `Dag::apply`.
+//! 2. **Tile** — execution walks the input in row tiles (default 8 K
+//!    rows, i.e. L1/L2-resident working sets, the software stand-in for
+//!    the FPGA's FIFO depth). Each chain runs stage-at-a-time over a
+//!    reused tile scratch buffer: no per-operator `Column` allocation,
+//!    no reference counting, nothing shared — the engine is `Send + Sync`.
+//! 3. **Pack** — the final stage of every chain writes the tile's values
+//!    *directly into the row-major [`PackedBatch`] buffers* (dense f32
+//!    `[B, D_d]`, sparse i32 `[B, D_s]`, labels `[B]`), fusing apply and
+//!    pack into one pass exactly as the format-aware packer does in
+//!    hardware (§3.2.3).
+//!
+//! Because tiles write disjoint row ranges, tiles are embarrassingly
+//! parallel: [`ExecConfig::threads`] workers split the tile list and one
+//! `process()` call saturates all cores. All apply-phase operators are
+//! row-wise pure (vocabularies are frozen during apply — the fit/apply
+//! split of §3.1), so the output is bit-identical for every tile size and
+//! thread count; `rust/tests/prop_invariants.rs` proves this against the
+//! reference executor across random pipelines.
+//!
+//! [`BufferPool`] recycles `PackedBatch` buffers so the steady-state
+//! train loop allocates nothing per batch ([`FusedEngine::execute_into`]
+//! reuses the destination's capacity).
+
+use std::sync::Mutex;
+
+use crate::coordinator::packer::{PackLayout, PackedBatch};
+use crate::error::{EtlError, Result};
+use crate::etl::column::{Batch, ColType, Column};
+use crate::etl::dag::{Dag, EtlState, Node, NodeId, SinkRole};
+use crate::etl::ops::kernels;
+use crate::etl::ops::OpSpec;
+
+/// Execution knobs.
+#[derive(Debug, Clone)]
+pub struct ExecConfig {
+    /// Rows per tile (cache-resident working set).
+    pub tile_rows: usize,
+    /// Worker threads for row-range parallelism (1 = serial).
+    pub threads: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig {
+            tile_rows: 8192,
+            threads: crate::util::pool::default_threads(),
+        }
+    }
+}
+
+/// One fused pipeline stage: a scalar kernel with frozen parameters.
+/// Mirrors the operator pool (Table 1) minus the widening/binary
+/// operators, which take the general per-tile path instead.
+#[derive(Debug, Clone)]
+enum Step {
+    FillMissingF32(f32),
+    Clamp { lo: f32, hi: f32 },
+    Logarithm,
+    Bucketize(Vec<f32>),
+    Hex2Int,
+    FillMissingI64(i64),
+    Modulus(i64),
+    SigridHash(i64),
+    /// VocabGen replayed through the frozen table (apply-phase semantics:
+    /// OOV maps to `table.len()`, matching `Dag::apply`).
+    VocabReplay(String),
+    VocabMap { key: String, oov: Option<i64> },
+}
+
+/// Where a chain's output lands in the packed batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Dest {
+    Dense(usize),
+    Sparse(usize),
+    Label,
+}
+
+/// Compiled plan for one sink.
+#[derive(Debug, Clone)]
+enum SinkPlan {
+    /// Linear unary chain fused end-to-end: source → steps → packed slot.
+    Fused {
+        name: String,
+        source: String,
+        src_type: ColType,
+        steps: Vec<Step>,
+        dest: Dest,
+    },
+    /// Non-linear / unsupported subgraph: evaluated per tile with
+    /// reference semantics, then scattered into the packed slot.
+    General { name: String, node: usize, dest: Dest },
+}
+
+/// A compiled DAG + layout, executable tile-at-a-time straight into
+/// trainer-layout buffers. `Send + Sync`: plain owned data, no `Rc`.
+#[derive(Debug, Clone)]
+pub struct FusedEngine {
+    dag: Dag,
+    layout: PackLayout,
+    sinks: Vec<SinkPlan>,
+    pub cfg: ExecConfig,
+    n_dense: usize,
+    n_sparse: usize,
+    fused: usize,
+}
+
+/// Reused per-worker tile scratch.
+struct TileBufs {
+    f: Vec<f32>,
+    i: Vec<i64>,
+}
+
+impl TileBufs {
+    fn new(tile: usize) -> TileBufs {
+        TileBufs { f: Vec::with_capacity(tile), i: Vec::with_capacity(tile) }
+    }
+}
+
+/// One tile's disjoint output region.
+struct TileJob<'a> {
+    start: usize,
+    rows: usize,
+    dense: &'a mut [f32],
+    sparse: &'a mut [i32],
+    labels: &'a mut [f32],
+}
+
+impl FusedEngine {
+    /// Lower `dag` into fused per-sink chains packing into the layout
+    /// derived from its sinks. Fails only if the DAG has no label sink
+    /// (no [`PackLayout`]); every sink shape is executable — unsupported
+    /// shapes fall back to the general per-tile evaluator.
+    pub fn compile(dag: &Dag, cfg: ExecConfig) -> Result<FusedEngine> {
+        let layout = PackLayout::of(dag)?;
+        let n_dense = layout.dense_cols.len();
+        let n_sparse = layout.sparse_cols.len();
+        let mut sinks = Vec::new();
+        let mut fused = 0usize;
+        let (mut di, mut si) = (0usize, 0usize);
+        for (name, input, role) in dag.sinks() {
+            let dest = match role {
+                SinkRole::Dense => {
+                    let d = Dest::Dense(di);
+                    di += 1;
+                    d
+                }
+                SinkRole::SparseIndex => {
+                    let d = Dest::Sparse(si);
+                    si += 1;
+                    d
+                }
+                SinkRole::Label => {
+                    // The packer reads only `layout.label_col` (the last
+                    // declared label sink); mirror that.
+                    if name != layout.label_col {
+                        continue;
+                    }
+                    Dest::Label
+                }
+            };
+            match lower_chain(dag, input, dest) {
+                Some((source, src_type, steps)) => {
+                    fused += 1;
+                    sinks.push(SinkPlan::Fused {
+                        name: name.to_string(),
+                        source,
+                        src_type,
+                        steps,
+                        dest,
+                    });
+                }
+                None => sinks.push(SinkPlan::General {
+                    name: name.to_string(),
+                    node: input.0,
+                    dest,
+                }),
+            }
+        }
+        Ok(FusedEngine {
+            dag: dag.clone(),
+            layout,
+            sinks,
+            cfg,
+            n_dense,
+            n_sparse,
+            fused,
+        })
+    }
+
+    /// Number of sinks compiled to fully-fused chains (vs general).
+    pub fn fused_sink_count(&self) -> usize {
+        self.fused
+    }
+
+    /// Total sinks in the compiled plan.
+    pub fn sink_count(&self) -> usize {
+        self.sinks.len()
+    }
+
+    /// The pack layout this engine targets.
+    pub fn layout(&self) -> &PackLayout {
+        &self.layout
+    }
+
+    /// Apply + pack in one pass, allocating a fresh batch.
+    pub fn execute(&self, input: &Batch, state: &EtlState) -> Result<PackedBatch> {
+        let mut out = empty_batch();
+        self.execute_into(input, state, &mut out)?;
+        Ok(out)
+    }
+
+    /// Apply + pack in one pass into `out`, reusing its buffers (zero
+    /// steady-state allocation when `out` comes from a [`BufferPool`]).
+    pub fn execute_into(&self, input: &Batch, state: &EtlState, out: &mut PackedBatch) -> Result<()> {
+        let rows = input.rows();
+        out.rows = rows;
+        out.n_dense = self.n_dense;
+        out.n_sparse = self.n_sparse;
+        out.dense.clear();
+        out.dense.resize(rows * self.n_dense, 0.0);
+        out.sparse.clear();
+        out.sparse.resize(rows * self.n_sparse, 0);
+        out.labels.clear();
+        out.labels.resize(rows, 0.0);
+        if rows == 0 {
+            return Ok(());
+        }
+
+        let tile = self.cfg.tile_rows.max(1);
+        let n_tiles = rows.div_ceil(tile);
+        let threads = self.cfg.threads.max(1).min(n_tiles);
+
+        // Carve the output into disjoint per-tile mutable regions.
+        let mut jobs: Vec<TileJob<'_>> = Vec::with_capacity(n_tiles);
+        {
+            let mut d: &mut [f32] = &mut out.dense;
+            let mut s: &mut [i32] = &mut out.sparse;
+            let mut l: &mut [f32] = &mut out.labels;
+            let mut start = 0usize;
+            while start < rows {
+                let n = tile.min(rows - start);
+                let (dh, dt) = std::mem::take(&mut d).split_at_mut(n * self.n_dense);
+                d = dt;
+                let (sh, st) = std::mem::take(&mut s).split_at_mut(n * self.n_sparse);
+                s = st;
+                let (lh, lt) = std::mem::take(&mut l).split_at_mut(n);
+                l = lt;
+                jobs.push(TileJob { start, rows: n, dense: dh, sparse: sh, labels: lh });
+                start += n;
+            }
+        }
+
+        if threads <= 1 {
+            let mut bufs = TileBufs::new(tile);
+            for job in jobs {
+                self.run_tile(input, state, job, &mut bufs)?;
+            }
+            return Ok(());
+        }
+
+        // Row-range data parallelism: round-robin tiles over a scoped
+        // worker pool; disjoint output regions need no synchronization.
+        let mut groups: Vec<Vec<TileJob<'_>>> = (0..threads).map(|_| Vec::new()).collect();
+        for (i, job) in jobs.into_iter().enumerate() {
+            groups[i % threads].push(job);
+        }
+        let results: Vec<Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|group| {
+                    scope.spawn(move || -> Result<()> {
+                        let mut bufs = TileBufs::new(tile);
+                        for job in group {
+                            self.run_tile(input, state, job, &mut bufs)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("fused-exec worker panicked"))
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+        Ok(())
+    }
+
+    /// Execute with a recycled destination buffer from `pool`.
+    pub fn execute_pooled(
+        &self,
+        input: &Batch,
+        state: &EtlState,
+        pool: &BufferPool,
+    ) -> Result<PackedBatch> {
+        let mut out = pool.take();
+        self.execute_into(input, state, &mut out)?;
+        Ok(out)
+    }
+
+    /// Run every sink chain over one tile.
+    fn run_tile(
+        &self,
+        input: &Batch,
+        state: &EtlState,
+        mut job: TileJob<'_>,
+        bufs: &mut TileBufs,
+    ) -> Result<()> {
+        let range = job.start..job.start + job.rows;
+        // Lazily sliced tile sub-batch + memo, shared by general sinks.
+        let mut sub: Option<Batch> = None;
+        let mut memo: Vec<Option<Column>> = Vec::new();
+        for sink in &self.sinks {
+            match sink {
+                SinkPlan::Fused { name, source, src_type, steps, dest } => self.run_fused(
+                    input, state, &range, bufs, name, source, *src_type, steps, *dest, &mut job,
+                )?,
+                SinkPlan::General { name, node, dest } => {
+                    if sub.is_none() {
+                        sub = Some(input.slice_rows(range.clone()));
+                        memo = vec![None; self.dag.nodes.len()];
+                    }
+                    let col = eval_owned(
+                        &self.dag,
+                        *node,
+                        sub.as_ref().expect("just set"),
+                        state,
+                        &mut memo,
+                    )?;
+                    write_general(name, &col, *dest, &mut job, self.n_dense, self.n_sparse)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Run one fused chain over a tile and scatter into the packed slot.
+    #[allow(clippy::too_many_arguments)]
+    fn run_fused(
+        &self,
+        input: &Batch,
+        state: &EtlState,
+        range: &std::ops::Range<usize>,
+        bufs: &mut TileBufs,
+        name: &str,
+        source: &str,
+        src_type: ColType,
+        steps: &[Step],
+        dest: Dest,
+        job: &mut TileJob<'_>,
+    ) -> Result<()> {
+        let col = input
+            .get(source)
+            .ok_or_else(|| EtlError::Dag(format!("input batch missing column {source:?}")))?;
+        if col.coltype() != src_type {
+            return Err(EtlError::TypeMismatch { expected: src_type, got: col.coltype() });
+        }
+        if col.width() != 1 {
+            let role = match dest {
+                Dest::Dense(_) => "dense",
+                Dest::Sparse(_) => "sparse",
+                Dest::Label => "label",
+            };
+            return Err(EtlError::Coord(format!(
+                "{role} sink {name} has width {} (expected 1)",
+                col.width()
+            )));
+        }
+
+        // Load the source tile (hex sources fuse straight through the
+        // leading Hex2Int — no staging copy of the raw tokens).
+        let mut next_step = 0usize;
+        let mut is_f32 = match col {
+            Column::F32 { data, .. } => {
+                bufs.f.clear();
+                bufs.f.extend_from_slice(&data[range.clone()]);
+                true
+            }
+            Column::I64 { data, .. } => {
+                bufs.i.clear();
+                bufs.i.extend_from_slice(&data[range.clone()]);
+                false
+            }
+            Column::Hex8 { data } => {
+                debug_assert!(matches!(steps.first(), Some(Step::Hex2Int)));
+                bufs.i.clear();
+                bufs.i.extend(data[range.clone()].iter().map(|&v| kernels::hex2int(v)));
+                next_step = 1;
+                false
+            }
+        };
+
+        // Stage-at-a-time over the cache-resident tile buffer.
+        for step in &steps[next_step..] {
+            match step {
+                Step::FillMissingF32(d) => {
+                    for v in bufs.f.iter_mut() {
+                        *v = kernels::fill_missing_f32(*v, *d);
+                    }
+                }
+                Step::Clamp { lo, hi } => {
+                    for v in bufs.f.iter_mut() {
+                        *v = kernels::clamp(*v, *lo, *hi);
+                    }
+                }
+                Step::Logarithm => {
+                    for v in bufs.f.iter_mut() {
+                        *v = kernels::logarithm(*v);
+                    }
+                }
+                Step::Bucketize(borders) => {
+                    bufs.i.clear();
+                    bufs.i.extend(bufs.f.iter().map(|&x| kernels::bucketize(x, borders)));
+                    is_f32 = false;
+                }
+                Step::Hex2Int => {
+                    return Err(EtlError::Dag(
+                        "fused Hex2Int on a non-source position (compiler bug)".into(),
+                    ));
+                }
+                Step::FillMissingI64(d) => {
+                    for v in bufs.i.iter_mut() {
+                        *v = kernels::fill_missing_i64(*v, *d);
+                    }
+                }
+                Step::Modulus(m) => {
+                    for v in bufs.i.iter_mut() {
+                        *v = kernels::modulus(*v, *m);
+                    }
+                }
+                Step::SigridHash(m) => {
+                    for v in bufs.i.iter_mut() {
+                        *v = kernels::sigrid_hash(*v, *m);
+                    }
+                }
+                Step::VocabReplay(key) => {
+                    let table = state
+                        .vocabs
+                        .get(key)
+                        .ok_or_else(|| EtlError::Vocab(format!("vocab {key:?} not fitted")))?;
+                    let oov = table.len() as i64;
+                    for v in bufs.i.iter_mut() {
+                        *v = table.get(*v).map(|i| i as i64).unwrap_or(oov);
+                    }
+                }
+                Step::VocabMap { key, oov } => {
+                    let table = state.vocabs.get(key).ok_or_else(|| {
+                        EtlError::op("VocabMap", "no fitted vocabulary table provided")
+                    })?;
+                    match oov {
+                        Some(d) => {
+                            for v in bufs.i.iter_mut() {
+                                *v = table.get(*v).map(|i| i as i64).unwrap_or(*d);
+                            }
+                        }
+                        None => {
+                            for v in bufs.i.iter_mut() {
+                                *v = table.get(*v).map(|i| i as i64).ok_or_else(|| {
+                                    EtlError::Vocab(format!(
+                                        "value {v} not present in fitted vocabulary (size {})",
+                                        table.len()
+                                    ))
+                                })?;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // Pack: scatter the tile into its row-major destination.
+        match dest {
+            Dest::Dense(ci) => {
+                debug_assert!(is_f32);
+                let nd = self.n_dense;
+                for (r, &v) in bufs.f.iter().enumerate() {
+                    job.dense[r * nd + ci] = v;
+                }
+            }
+            Dest::Label => {
+                debug_assert!(is_f32);
+                job.labels.copy_from_slice(&bufs.f);
+            }
+            Dest::Sparse(ci) => {
+                let ns = self.n_sparse;
+                for (r, &v) in bufs.i.iter().enumerate() {
+                    if v < 0 || v > i32::MAX as i64 {
+                        return Err(EtlError::Coord(format!(
+                            "sparse index {v} out of i32 range in {name}"
+                        )));
+                    }
+                    job.sparse[r * ns + ci] = v as i32;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn empty_batch() -> PackedBatch {
+    PackedBatch {
+        rows: 0,
+        n_dense: 0,
+        n_sparse: 0,
+        dense: Vec::new(),
+        sparse: Vec::new(),
+        labels: Vec::new(),
+    }
+}
+
+/// Walk back from a sink input to its source; `Some` iff the subgraph is
+/// a linear unary chain of fusable operators whose types check out for
+/// `dest` (the same checks `Dag::validate` performs, re-derived here so
+/// compilation works without a schema).
+fn lower_chain(dag: &Dag, from: NodeId, dest: Dest) -> Option<(String, ColType, Vec<Step>)> {
+    // Collect (spec, vocab_key) back-to-front.
+    let mut rev: Vec<(&OpSpec, Option<&String>)> = Vec::new();
+    let mut cur = from;
+    let (source, src_type) = loop {
+        match dag.nodes.get(cur.0)? {
+            Node::Source { field, coltype } => break (field.clone(), *coltype),
+            Node::Sink { input, .. } => cur = *input,
+            Node::Op { spec, inputs, vocab_key } => {
+                if inputs.len() != 1 {
+                    return None; // Cartesian et al. → general path
+                }
+                rev.push((spec, vocab_key.as_ref()));
+                cur = inputs[0];
+            }
+        }
+    };
+
+    // Forward type-checked lowering.
+    let mut ty = src_type;
+    let mut steps = Vec::with_capacity(rev.len());
+    for (spec, key) in rev.into_iter().rev() {
+        let step = match (spec, ty) {
+            (OpSpec::FillMissing { dense_default, .. }, ColType::F32) => {
+                Step::FillMissingF32(*dense_default)
+            }
+            (OpSpec::FillMissing { sparse_default, .. }, ColType::I64) => {
+                Step::FillMissingI64(*sparse_default)
+            }
+            (OpSpec::Clamp { lo, hi }, ColType::F32) => Step::Clamp { lo: *lo, hi: *hi },
+            (OpSpec::Logarithm, ColType::F32) => Step::Logarithm,
+            (OpSpec::Bucketize { borders }, ColType::F32) => {
+                ty = ColType::I64;
+                Step::Bucketize(borders.clone())
+            }
+            (OpSpec::Hex2Int, ColType::Hex8) => {
+                ty = ColType::I64;
+                Step::Hex2Int
+            }
+            (OpSpec::Modulus { m }, ColType::I64) => Step::Modulus(*m),
+            (OpSpec::SigridHash { m }, ColType::I64) => Step::SigridHash(*m),
+            (OpSpec::VocabGen { .. }, ColType::I64) => Step::VocabReplay(key?.clone()),
+            (OpSpec::VocabMap { oov }, ColType::I64) => {
+                Step::VocabMap { key: key?.clone(), oov: *oov }
+            }
+            // OneHot (widening), type mismatches → general path.
+            _ => return None,
+        };
+        steps.push(step);
+    }
+
+    // Hex sources are only fusable through a leading Hex2Int.
+    if src_type == ColType::Hex8 && !matches!(steps.first(), Some(Step::Hex2Int)) {
+        return None;
+    }
+    // Final type must match the destination tensor.
+    let ok = match dest {
+        Dest::Dense(_) | Dest::Label => ty == ColType::F32,
+        Dest::Sparse(_) => ty == ColType::I64,
+    };
+    if !ok {
+        return None;
+    }
+    Some((source, src_type, steps))
+}
+
+/// Reference-semantics evaluation of one node over a (tile) batch, memoized
+/// per tile. Mirrors `Dag::apply`'s `eval_node` (including the VocabGen
+/// replay-through-frozen-table apply semantics) without `Rc`, so the
+/// engine stays `Send`.
+fn eval_owned(
+    dag: &Dag,
+    i: usize,
+    batch: &Batch,
+    state: &EtlState,
+    memo: &mut Vec<Option<Column>>,
+) -> Result<Column> {
+    if let Some(col) = &memo[i] {
+        return Ok(col.clone());
+    }
+    let col = match &dag.nodes[i] {
+        Node::Source { field, .. } => batch
+            .get(field)
+            .cloned()
+            .ok_or_else(|| EtlError::Dag(format!("input batch missing column {field:?}")))?,
+        Node::Op { spec, inputs, vocab_key } => {
+            let mut cols = Vec::with_capacity(inputs.len());
+            for &NodeId(j) in inputs {
+                cols.push(eval_owned(dag, j, batch, state, memo)?);
+            }
+            let refs: Vec<&Column> = cols.iter().collect();
+            let vocab = vocab_key.as_ref().and_then(|k| state.vocabs.get(k));
+            match spec {
+                OpSpec::VocabGen { .. } => {
+                    let key = vocab_key
+                        .as_ref()
+                        .ok_or_else(|| EtlError::Vocab("VocabGen has no vocab key".into()))?;
+                    let table = state
+                        .vocabs
+                        .get(key)
+                        .ok_or_else(|| EtlError::Vocab(format!("vocab {key:?} not fitted")))?;
+                    let data = refs[0].as_i64()?;
+                    Column::i64(crate::etl::ops::vocab::vocab_map_oov(
+                        data,
+                        table,
+                        table.len() as i64,
+                    ))
+                }
+                _ => spec.apply(&refs, vocab)?,
+            }
+        }
+        Node::Sink { input: NodeId(j), .. } => eval_owned(dag, *j, batch, state, memo)?,
+    };
+    memo[i] = Some(col.clone());
+    Ok(col)
+}
+
+/// Scatter a general sink's tile column into the packed destination, with
+/// the packer's exact shape/range checks.
+fn write_general(
+    name: &str,
+    col: &Column,
+    dest: Dest,
+    job: &mut TileJob<'_>,
+    n_dense: usize,
+    n_sparse: usize,
+) -> Result<()> {
+    match dest {
+        Dest::Dense(ci) => {
+            let data = col.as_f32()?;
+            if col.width() != 1 {
+                return Err(EtlError::Coord(format!(
+                    "dense sink {name} has width {} (expected 1)",
+                    col.width()
+                )));
+            }
+            for (r, &v) in data.iter().enumerate() {
+                job.dense[r * n_dense + ci] = v;
+            }
+        }
+        Dest::Label => {
+            let data = col.as_f32()?;
+            if data.len() != job.rows {
+                return Err(EtlError::Coord(format!(
+                    "label sink {name} has width {} (expected 1)",
+                    col.width()
+                )));
+            }
+            job.labels.copy_from_slice(data);
+        }
+        Dest::Sparse(ci) => {
+            let data = col.as_i64()?;
+            if col.width() != 1 {
+                return Err(EtlError::Coord(format!(
+                    "sparse sink {name} has width {} (expected 1)",
+                    col.width()
+                )));
+            }
+            for (r, &v) in data.iter().enumerate() {
+                if v < 0 || v > i32::MAX as i64 {
+                    return Err(EtlError::Coord(format!(
+                        "sparse index {v} out of i32 range in {name}"
+                    )));
+                }
+                job.sparse[r * n_sparse + ci] = v as i32;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A recycling pool of [`PackedBatch`] buffers: `take` a buffer, fill it
+/// with [`FusedEngine::execute_into`], and `put` it back once consumed —
+/// the steady-state loop then allocates nothing per batch.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    free: Mutex<Vec<PackedBatch>>,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Pop a recycled buffer (or a fresh empty one).
+    pub fn take(&self) -> PackedBatch {
+        self.free
+            .lock()
+            .expect("buffer pool poisoned")
+            .pop()
+            .unwrap_or_else(empty_batch)
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&self, batch: PackedBatch) {
+        self.free.lock().expect("buffer pool poisoned").push(batch);
+    }
+
+    /// Buffers currently available.
+    pub fn available(&self) -> usize {
+        self.free.lock().expect("buffer pool poisoned").len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::packer::pack;
+    use crate::dataio::dataset::DatasetSpec;
+    use crate::etl::pipelines::{build, PipelineKind};
+
+    fn assert_packed_eq(a: &PackedBatch, b: &PackedBatch) {
+        assert_eq!((a.rows, a.n_dense, a.n_sparse), (b.rows, b.n_dense, b.n_sparse));
+        assert_eq!(a.sparse, b.sparse);
+        assert_eq!(a.labels.len(), b.labels.len());
+        for (x, y) in a.labels.iter().zip(&b.labels) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.dense.len(), b.dense.len());
+        for (x, y) in a.dense.iter().zip(&b.dense) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    fn reference(dag: &Dag, batch: &Batch, state: &EtlState) -> PackedBatch {
+        let out = dag.apply(batch, state).unwrap();
+        let layout = PackLayout::of(dag).unwrap();
+        pack(&out, &layout).unwrap()
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<FusedEngine>();
+        assert_send_sync::<BufferPool>();
+    }
+
+    #[test]
+    fn fused_matches_reference_on_all_canned_pipelines() {
+        let mut spec = DatasetSpec::dataset_i(0.002);
+        spec.shards = 1;
+        let shard = spec.shard(0, 7);
+        for kind in PipelineKind::all() {
+            let dag = build(kind, &spec.schema);
+            let state = dag.fit(&shard).unwrap();
+            let want = reference(&dag, &shard, &state);
+            for (tile, threads) in [(shard.rows() + 1, 1), (1000, 1), (333, 4), (1, 2)] {
+                let engine =
+                    FusedEngine::compile(&dag, ExecConfig { tile_rows: tile, threads }).unwrap();
+                // All canned-pipeline sinks are linear chains → fully fused.
+                assert_eq!(engine.fused_sink_count(), engine.sink_count(), "{}", kind.label());
+                let got = engine.execute(&shard, &state).unwrap();
+                assert_packed_eq(&want, &got);
+            }
+        }
+    }
+
+    #[test]
+    fn general_fallback_handles_cartesian_and_bucketize() {
+        use crate::etl::column::pack_hex;
+        let mut dag = Dag::new("diamond");
+        let l = dag.source("label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let d = dag.source("x", ColType::F32);
+        let bk = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0] }, &[d]);
+        dag.sink("bucket", bk, SinkRole::SparseIndex);
+        let c0 = dag.source("c0", ColType::Hex8);
+        let c1 = dag.source("c1", ColType::Hex8);
+        let h0 = dag.op(OpSpec::Hex2Int, &[c0]);
+        let h1 = dag.op(OpSpec::Hex2Int, &[c1]);
+        let cross = dag.op(OpSpec::Cartesian { m: 5000 }, &[h0, h1]);
+        dag.sink("cross", cross, SinkRole::SparseIndex);
+
+        let mut batch = Batch::new();
+        batch.push("label", Column::f32(vec![1.0, 0.0, 1.0])).unwrap();
+        batch.push("x", Column::f32(vec![0.1, f32::NAN, 7.0])).unwrap();
+        batch
+            .push("c0", Column::hex8(vec![pack_hex("1a3f").unwrap(); 3]))
+            .unwrap();
+        batch
+            .push("c1", Column::hex8(vec![pack_hex("00ff").unwrap(); 3]))
+            .unwrap();
+
+        let state = EtlState::default();
+        let want = reference(&dag, &batch, &state);
+        let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows: 2, threads: 2 }).unwrap();
+        // Bucketize chain fuses; the Cartesian diamond takes the general path.
+        assert!(engine.fused_sink_count() >= 2);
+        assert!(engine.fused_sink_count() < engine.sink_count());
+        let got = engine.execute(&batch, &state).unwrap();
+        assert_packed_eq(&want, &got);
+    }
+
+    #[test]
+    fn empty_batch_executes() {
+        let spec = DatasetSpec::dataset_i(0.001);
+        let dag = build(PipelineKind::I, &spec.schema);
+        let engine = FusedEngine::compile(&dag, ExecConfig::default()).unwrap();
+        let got = engine.execute(&Batch::new(), &EtlState::default());
+        // An empty batch has no columns at all — sources are missing.
+        // A zero-row batch with the right columns works:
+        let zero = spec.shard(9999, 42);
+        if zero.rows() == 0 && !zero.columns.is_empty() {
+            let p = engine.execute(&zero, &EtlState::default()).unwrap();
+            assert_eq!(p.rows, 0);
+        }
+        assert!(got.is_err() || got.unwrap().rows == 0);
+    }
+
+    #[test]
+    fn oov_replay_matches_reference_across_shards() {
+        // Fit on shard 0, apply to shard 1 (unseen tokens → OOV index).
+        let mut spec = DatasetSpec::dataset_i(0.002);
+        spec.shards = 2;
+        let dag = build(PipelineKind::II, &spec.schema);
+        let state = dag.fit(&spec.shard(0, 42)).unwrap();
+        let other = spec.shard(1, 42);
+        let want = reference(&dag, &other, &state);
+        let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows: 777, threads: 3 }).unwrap();
+        let got = engine.execute(&other, &state).unwrap();
+        assert_packed_eq(&want, &got);
+    }
+
+    #[test]
+    fn negative_sparse_index_is_rejected_like_pack() {
+        let mut dag = Dag::new("neg");
+        let l = dag.source("label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let s = dag.source("s", ColType::I64);
+        dag.sink("sparse0", s, SinkRole::SparseIndex);
+        let mut batch = Batch::new();
+        batch.push("label", Column::f32(vec![0.0, 1.0])).unwrap();
+        batch.push("s", Column::i64(vec![3, -1])).unwrap();
+        let engine = FusedEngine::compile(&dag, ExecConfig::default()).unwrap();
+        let err = engine.execute(&batch, &EtlState::default()).unwrap_err();
+        assert!(err.to_string().contains("out of i32 range"), "{err}");
+    }
+
+    #[test]
+    fn buffer_pool_recycles_capacity() {
+        let mut spec = DatasetSpec::dataset_i(0.001);
+        spec.shards = 1;
+        let shard = spec.shard(0, 3);
+        let dag = build(PipelineKind::I, &spec.schema);
+        let engine = FusedEngine::compile(&dag, ExecConfig::default()).unwrap();
+        let state = EtlState::default();
+        let pool = BufferPool::new();
+        let b1 = engine.execute_pooled(&shard, &state, &pool).unwrap();
+        let ptr = b1.dense.as_ptr();
+        let cap = b1.dense.capacity();
+        pool.put(b1);
+        assert_eq!(pool.available(), 1);
+        let b2 = engine.execute_pooled(&shard, &state, &pool).unwrap();
+        // Same allocation reused: no steady-state allocation.
+        assert_eq!(b2.dense.as_ptr(), ptr);
+        assert_eq!(b2.dense.capacity(), cap);
+        assert_eq!(pool.available(), 0);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod column;
 pub mod dag;
+pub mod exec;
 pub mod ops;
 pub mod pipelines;
 pub mod schema;

@@ -2,9 +2,11 @@
 //! semantics via the shared kernels) plus the cycle-approximate timing
 //! model from the hardware plan.
 
+use crate::coordinator::packer::{pack, PackLayout, PackedBatch};
 use crate::error::Result;
 use crate::etl::column::Batch;
 use crate::etl::dag::EtlState;
+use crate::etl::exec::{ExecConfig, FusedEngine};
 use crate::memsys::IngestSource;
 use crate::planner::{HardwarePlan, StreamProfile};
 
@@ -46,17 +48,32 @@ impl ShardTiming {
     }
 }
 
-/// A deployed pipeline: plan + fitted state.
+/// A deployed pipeline: plan + fitted state + the compiled fused engine
+/// (the host-side analogue of the bitstream's fused op-chains).
 #[derive(Debug)]
 pub struct Pipeline {
     pub plan: HardwarePlan,
     pub state: EtlState,
     fitted: bool,
+    engine: Option<FusedEngine>,
 }
 
 impl Pipeline {
     pub fn new(plan: HardwarePlan) -> Pipeline {
-        Pipeline { plan, state: EtlState::default(), fitted: false }
+        Pipeline::with_exec_config(plan, ExecConfig::default())
+    }
+
+    /// Deploy with explicit fused-engine knobs (tile size / threads).
+    pub fn with_exec_config(plan: HardwarePlan, cfg: ExecConfig) -> Pipeline {
+        // DAGs without a label sink (no pack layout) fall back to the
+        // reference executor in `process_packed`.
+        let engine = FusedEngine::compile(&plan.dag, cfg).ok();
+        Pipeline { plan, state: EtlState::default(), fitted: false, engine }
+    }
+
+    /// The compiled fused engine, if the plan's DAG admits a pack layout.
+    pub fn engine(&self) -> Option<&FusedEngine> {
+        self.engine.as_ref()
     }
 
     /// Fit phase (§3.1): stream a sample through the stateful operators to
@@ -107,6 +124,55 @@ impl Pipeline {
                 host_s,
             },
         ))
+    }
+
+    /// Apply + pack fused in one pass (tile-at-a-time, parallel across
+    /// row ranges): transform a raw shard straight into the training-ready
+    /// [`PackedBatch`], returning the data and the simulated timing. This
+    /// is the producer hot path of the live train loop; `process` remains
+    /// the reference (columnar) executor.
+    pub fn process_packed(&self, shard: &Batch) -> Result<(PackedBatch, ShardTiming)> {
+        let mut out = PackedBatch {
+            rows: 0,
+            n_dense: 0,
+            n_sparse: 0,
+            dense: Vec::new(),
+            sparse: Vec::new(),
+            labels: Vec::new(),
+        };
+        let timing = self.process_packed_into(shard, &mut out)?;
+        Ok((out, timing))
+    }
+
+    /// Like [`process_packed`](Self::process_packed), reusing `out`'s
+    /// buffers (zero steady-state allocation with a
+    /// [`crate::etl::exec::BufferPool`]).
+    pub fn process_packed_into(&self, shard: &Batch, out: &mut PackedBatch) -> Result<ShardTiming> {
+        let t0 = std::time::Instant::now();
+        match &self.engine {
+            Some(engine) => engine.execute_into(shard, &self.state, out)?,
+            None => {
+                // No pack layout compiled: reference executor + packer.
+                let transformed = self.plan.dag.apply(shard, &self.state)?;
+                let layout = PackLayout::of(&self.plan.dag)?;
+                *out = pack(&transformed, &layout)?;
+            }
+        }
+        let host_s = t0.elapsed().as_secs_f64();
+
+        let profile = StreamProfile::from_batch(shard);
+        let ingest_bytes = profile.total();
+        let egress_bytes = (out.rows as u64) * self.plan.runtime.packed_row_bytes;
+        let ingest_s = ingest_bytes as f64 / self.plan.runtime.source.stream_bandwidth();
+        let compute_s = self.plan.apply_seconds(profile);
+        Ok(ShardTiming {
+            ingest_bytes,
+            egress_bytes,
+            ingest_s,
+            compute_s,
+            elapsed_s: ingest_s.max(compute_s),
+            host_s,
+        })
     }
 
     /// Simulated seconds to ETL an entire dataset of `bytes` raw input
@@ -183,6 +249,20 @@ mod tests {
         let rate = bytes as f64 / secs;
         let line = p.plan.line_rate();
         assert!((rate - line).abs() / line < 0.05, "rate={rate} line={line}");
+    }
+
+    #[test]
+    fn process_packed_matches_reference_apply_then_pack() {
+        let (mut p, spec) = deployed(PipelineKind::II);
+        let shard = spec.shard(0, 42);
+        p.fit(&shard).unwrap();
+        assert!(p.engine().is_some());
+        let (out, _) = p.process(&shard).unwrap();
+        let layout = crate::coordinator::packer::PackLayout::of(&p.plan.dag).unwrap();
+        let want = crate::coordinator::packer::pack(&out, &layout).unwrap();
+        let (got, t) = p.process_packed(&shard).unwrap();
+        assert_eq!(want, got);
+        assert!(t.egress_bytes > 0 && t.host_s >= 0.0);
     }
 
     #[test]

@@ -5,7 +5,9 @@
 //! Rust + JAX + Pallas stack.
 //!
 //! * [`etl`] — the training-aware ETL abstraction: operators, schemas,
-//!   symbolic DAGs with fit/apply semantics.
+//!   symbolic DAGs with fit/apply semantics, and the fused tiled
+//!   execution engine (`etl::exec`) that compiles DAGs into streaming
+//!   op-chains packing directly into the trainer layout.
 //! * [`planner`] — the planner–compiler lowering DAGs to vFPGA dataflows
 //!   (operator fusion, lane/width selection, state placement, resource
 //!   estimation, runtime plan emission).
@@ -44,6 +46,7 @@ pub mod prelude {
     pub use crate::error::{EtlError, Result};
     pub use crate::etl::column::{Batch, ColType, Column};
     pub use crate::etl::dag::{Dag, EtlState, SinkRole};
+    pub use crate::etl::exec::{BufferPool, ExecConfig, FusedEngine};
     pub use crate::etl::ops::{OpSpec, StatePlacement};
     pub use crate::etl::pipelines::{self, PipelineKind};
     pub use crate::etl::schema::{FeatureKind, Schema};

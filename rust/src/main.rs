@@ -37,7 +37,7 @@ fn parse_dataset(s: &str) -> DatasetKind {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     match args.subcommand() {
         Some("compile") => cmd_compile(&args)?,
@@ -55,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+fn cmd_compile(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let kind = parse_pipeline(&args.get_str("pipeline", "1"));
     let spec = DatasetSpec::by_kind(parse_dataset(&args.get_str("dataset", "1")), 1.0);
     let dag = pipelines::build(kind, &spec.schema);
@@ -84,7 +84,7 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_etl(args: &Args) -> anyhow::Result<()> {
+fn cmd_etl(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let kind = parse_pipeline(&args.get_str("pipeline", "2"));
     let scale = args.get("scale", 0.1);
     let spec = DatasetSpec::by_kind(parse_dataset(&args.get_str("dataset", "1")), scale);
@@ -122,7 +122,7 @@ fn cmd_etl(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> anyhow::Result<()> {
+fn cmd_train(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let kind = parse_pipeline(&args.get_str("pipeline", "2"));
     let scale = args.get("scale", 0.05);
     let mut spec = DatasetSpec::by_kind(parse_dataset(&args.get_str("dataset", "1")), scale);
@@ -159,7 +159,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+fn cmd_inspect(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     for kind in [DatasetKind::I, DatasetKind::II, DatasetKind::III] {
         let spec = DatasetSpec::by_kind(kind, args.get("scale", 1.0));
         println!(

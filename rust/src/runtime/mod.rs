@@ -1,57 +1,28 @@
-//! PJRT runtime (the paper's GPU-trainer stand-in): loads the HLO-text
-//! artifacts AOT-compiled by `python/compile/aot.py`, compiles them on the
-//! PJRT CPU client, and drives training with a **device-resident flat
-//! state buffer** — all parameters live in one `f32[state_len]` array with
-//! a trailing loss slot; each step the host uploads only the packed batch
-//! and re-feeds the previous output buffer (`execute_b`), mirroring the
-//! paper's zero-copy ingest discipline. A second tiny executable slices
-//! the loss slot out on-device (the CPU PJRT plugin lacks CopyRawToHost).
+//! Trainer runtime (the paper's GPU-trainer stand-in).
 //!
-//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax≥0.5's
-//! 64-bit-id serialized protos; the text parser reassigns ids).
+//! The default build uses a **pure-Rust reference trainer**: a
+//! deterministic logistic-regression DLRM stand-in over the same flat
+//! `f32[state_len]` device-state layout the PJRT path uses (all
+//! parameters in one buffer with a trailing loss slot). It consumes
+//! [`PackedBatch`]es straight from the packer — the coordinator, staging
+//! and checkpoint layers are exercised end-to-end without any native
+//! dependency.
+//!
+//! The original PJRT/XLA-backed trainer (AOT-compiled JAX/Pallas DLRM,
+//! device-resident state, HLO-text interchange) is preserved in
+//! [`pjrt`](self) behind the `pjrt` cargo feature; enabling it requires
+//! vendoring the `xla` crate, which the offline build environment does
+//! not ship.
 
 pub mod artifacts;
 pub mod checkpoint;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-use crate::coordinator::packer::PackedBatch;
+use crate::coordinator::packer::{PackedBatch, PackedBatchView};
 use crate::error::{EtlError, Result};
 use crate::util::prng::Rng;
 use artifacts::{ArtifactPaths, ModelMeta};
-
-/// Wrap an `xla::Error` into our error type.
-fn xe(e: xla::Error) -> EtlError {
-    EtlError::Runtime(e.to_string())
-}
-
-/// The PJRT engine: one CPU client shared by all executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-}
-
-impl Engine {
-    pub fn cpu() -> Result<Engine> {
-        Ok(Engine { client: xla::PjRtClient::cpu().map_err(xe)? })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file.
-    pub fn compile_hlo(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(path).map_err(xe)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client.compile(&comp).map_err(xe)
-    }
-
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client.buffer_from_host_buffer(data, dims, None).map_err(xe)
-    }
-
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client.buffer_from_host_buffer(data, dims, None).map_err(xe)
-    }
-}
 
 impl ModelMeta {
     /// Flat state length: all parameters + 1 loss slot.
@@ -60,46 +31,66 @@ impl ModelMeta {
     }
 }
 
-/// A loaded DLRM train step with a device-resident flat state buffer.
+/// Default SGD learning rate of the reference trainer.
+const DEFAULT_LR: f32 = 0.05;
+
+/// A loaded DLRM train step with a flat state buffer (reference
+/// implementation: logistic regression over dense features plus one
+/// embedded scalar per sparse feature, SGD, bit-deterministic).
+///
+/// State layout within the `param_count()` prefix of the flat buffer:
+/// dense weights `[0, n_dense)`, bias at `n_dense`, embedding pool
+/// `[n_dense+1, param_count)` indexed by `(feature, index)`; the loss
+/// slot sits at `param_count()` exactly like the PJRT artifact.
 pub struct Trainer {
-    engine: Engine,
-    step_exe: xla::PjRtLoadedExecutable,
-    loss_exe: xla::PjRtLoadedExecutable,
     pub meta: ModelMeta,
-    state: xla::PjRtBuffer,
+    state: Vec<f32>,
     /// Steps executed.
     pub steps: u64,
+    lr: f32,
 }
 
 impl Trainer {
-    /// Load artifacts, compile both executables, and initialize the state
-    /// buffer with a deterministic Glorot-ish scheme.
+    /// Load artifact metadata and initialize the state buffer with the
+    /// same deterministic Glorot-ish scheme the PJRT path uses. Only
+    /// `meta.txt` is required — the reference trainer never reads the HLO
+    /// files, so training works without the Python AOT step.
     pub fn load(paths: &ArtifactPaths, seed: u64) -> Result<Trainer> {
-        if !paths.exist() {
+        if !paths.meta.exists() {
             return Err(EtlError::Runtime(format!(
                 "artifacts not found in {:?} — run `make artifacts`",
                 paths.dir
             )));
         }
-        let engine = Engine::cpu()?;
         let meta = ModelMeta::load(&paths.meta)?;
-        let step_exe = engine.compile_hlo(&paths.train_hlo)?;
-        let loss_exe = engine.compile_hlo(&paths.loss_hlo)?;
-        let state = engine.upload_f32(&init_state(&meta, seed), &[meta.state_len()])?;
-        Ok(Trainer { engine, step_exe, loss_exe, meta, state, steps: 0 })
+        let state = init_state(&meta, seed);
+        Ok(Trainer { meta, state, steps: 0, lr: DEFAULT_LR })
+    }
+
+    /// Build a trainer directly from metadata (no artifact files needed) —
+    /// used by tests and by deployments that only want the reference
+    /// trainer semantics.
+    pub fn from_meta(meta: ModelMeta, seed: u64) -> Trainer {
+        let state = init_state(&meta, seed);
+        Trainer { meta, state, steps: 0, lr: DEFAULT_LR }
     }
 
     /// Reset parameters.
     pub fn init_params(&mut self, seed: u64) -> Result<()> {
-        self.state = self
-            .engine
-            .upload_f32(&init_state(&self.meta, seed), &[self.meta.state_len()])?;
+        self.state = init_state(&self.meta, seed);
         self.steps = 0;
         Ok(())
     }
 
-    /// Run one training step on a packed batch; the state stays on device.
+    /// Run one training step on a packed batch.
     pub fn step(&mut self, batch: &PackedBatch) -> Result<()> {
+        self.step_view(&batch.view())
+    }
+
+    /// Run one training step on a borrowed slice of a packed batch — the
+    /// copy-free path the train loop uses with
+    /// [`PackedBatch::chunk_views`].
+    pub fn step_view(&mut self, batch: &PackedBatchView<'_>) -> Result<()> {
         let m = &self.meta;
         if batch.rows != m.batch || batch.n_dense != m.n_dense || batch.n_sparse != m.n_sparse {
             return Err(EtlError::Runtime(format!(
@@ -107,44 +98,79 @@ impl Trainer {
                 batch.rows, batch.n_dense, batch.n_sparse, m.batch, m.n_dense, m.n_sparse
             )));
         }
-        // Fold indices into the (possibly smaller) artifact vocabulary.
-        let vocab = m.vocab as i32;
-        let sparse: Vec<i32> = batch.sparse.iter().map(|&v| v % vocab).collect();
-
-        let dense_b = self.engine.upload_f32(&batch.dense, &[batch.rows, m.n_dense])?;
-        let sparse_b = self.engine.upload_i32(&sparse, &[batch.rows, m.n_sparse])?;
-        let labels_b = self.engine.upload_f32(&batch.labels, &[batch.rows])?;
-
-        let mut outs = self
-            .step_exe
-            .execute_b(&[&self.state, &dense_b, &sparse_b, &labels_b])
-            .map_err(xe)?;
-        let mut replica = outs
-            .drain(..)
-            .next()
-            .ok_or_else(|| EtlError::Runtime("no outputs".into()))?;
-        if replica.len() != 1 {
+        let p = m.param_count();
+        let nd = m.n_dense;
+        let ns = m.n_sparse;
+        if p < nd + 1 {
             return Err(EtlError::Runtime(format!(
-                "expected 1 state output, got {}",
-                replica.len()
+                "artifact has {p} params; reference trainer needs at least {}",
+                nd + 1
             )));
         }
-        self.state = replica.remove(0);
+        let vocab = m.vocab.max(1);
+        let emb_len = p - nd - 1; // may be 0: dense-only model
+        let rows = batch.rows;
+        let inv_rows = 1.0f32 / rows.max(1) as f32;
+
+        let mut gw = vec![0f32; nd];
+        let mut gb = 0f32;
+        let mut gemb: Vec<(usize, f32)> = Vec::with_capacity(rows * ns.min(8));
+        let mut loss = 0f32;
+
+        for r in 0..rows {
+            // Forward: logit = b + w·dense + Σ emb[feature, idx].
+            let mut z = self.state[nd];
+            for d in 0..nd {
+                z += self.state[d] * batch.dense[r * nd + d];
+            }
+            if emb_len > 0 {
+                for s in 0..ns {
+                    let v = batch.sparse[r * ns + s].rem_euclid(vocab as i32) as usize;
+                    let e = nd + 1 + (s * vocab + v) % emb_len;
+                    z += self.state[e];
+                }
+            }
+            let pred = 1.0 / (1.0 + (-z).exp());
+            let y = batch.labels[r];
+            let eps = 1e-7f32;
+            let pc = pred.clamp(eps, 1.0 - eps);
+            loss += -(y * pc.ln() + (1.0 - y) * (1.0 - pc).ln());
+
+            // Backward (mean BCE gradient).
+            let g = (pred - y) * inv_rows;
+            for d in 0..nd {
+                gw[d] += g * batch.dense[r * nd + d];
+            }
+            gb += g;
+            if emb_len > 0 {
+                for s in 0..ns {
+                    let v = batch.sparse[r * ns + s].rem_euclid(vocab as i32) as usize;
+                    let e = nd + 1 + (s * vocab + v) % emb_len;
+                    gemb.push((e, g));
+                }
+            }
+        }
+        loss *= inv_rows;
+
+        // SGD update.
+        for d in 0..nd {
+            self.state[d] -= self.lr * gw[d];
+        }
+        self.state[nd] -= self.lr * gb;
+        for (e, g) in gemb {
+            self.state[e] -= self.lr * g;
+        }
+        // Loss slot holds the (pre-update) batch loss, like the PJRT
+        // train step's fused loss output.
+        let last = self.state.len() - 1;
+        self.state[last] = loss;
         self.steps += 1;
         Ok(())
     }
 
-    /// Read the loss slot of the current state (runs the on-device slice
-    /// executable; downloads 4 bytes).
+    /// Read the loss slot of the current state.
     pub fn loss(&self) -> Result<f32> {
-        let mut outs = self.loss_exe.execute_b(&[&self.state]).map_err(xe)?;
-        let buf = outs
-            .drain(..)
-            .next()
-            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
-            .ok_or_else(|| EtlError::Runtime("loss executable produced no output".into()))?;
-        let lit = buf.to_literal_sync().map_err(xe)?;
-        lit.get_first_element().map_err(xe)
+        Ok(*self.state.last().expect("state always has a loss slot"))
     }
 
     /// Convenience: step then read loss.
@@ -155,18 +181,16 @@ impl Trainer {
 
     /// Download the full state (tests / checkpoints).
     pub fn state_to_vec(&self) -> Result<Vec<f32>> {
-        let lit = self.state.to_literal_sync().map_err(xe)?;
-        lit.to_vec::<f32>().map_err(xe)
+        Ok(self.state.clone())
     }
 
-    /// Download one named parameter tensor by slicing the host copy.
+    /// Download one named parameter tensor by slicing the flat state.
     pub fn param_to_vec(&self, name: &str) -> Result<Vec<f32>> {
-        let state = self.state_to_vec()?;
         let mut off = 0usize;
         for p in &self.meta.params {
             let n = p.elements();
             if p.name == name {
-                return Ok(state[off..off + n].to_vec());
+                return Ok(self.state[off..off + n].to_vec());
             }
             off += n;
         }
@@ -177,13 +201,12 @@ impl Trainer {
         self.meta.param_count()
     }
 
-    /// Capture a checkpoint of the current device state (downloads the
-    /// flat state once; §2's warm-start path).
+    /// Capture a checkpoint of the current state (§2's warm-start path).
     pub fn checkpoint(&self, etl: &crate::etl::dag::EtlState) -> Result<checkpoint::Checkpoint> {
         Ok(checkpoint::Checkpoint::capture(self.steps, self.state_to_vec()?, etl))
     }
 
-    /// Restore from a checkpoint: uploads the state and resumes the step
+    /// Restore from a checkpoint: replaces the state and resumes the step
     /// counter. Fails if the state length does not match the artifact.
     pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
         if ck.state.len() != self.meta.state_len() {
@@ -193,7 +216,7 @@ impl Trainer {
                 self.meta.state_len()
             )));
         }
-        self.state = self.engine.upload_f32(&ck.state, &[ck.state.len()])?;
+        self.state = ck.state.clone();
         self.steps = ck.step;
         Ok(())
     }
@@ -225,6 +248,33 @@ mod tests {
     use super::*;
     use artifacts::ParamSpec;
 
+    fn tiny_meta() -> ModelMeta {
+        ModelMeta {
+            batch: 4,
+            n_dense: 2,
+            n_sparse: 2,
+            vocab: 10,
+            embed_dim: 4,
+            params: vec![
+                ParamSpec { name: "emb".into(), dims: vec![20, 4] },
+                ParamSpec { name: "w1".into(), dims: vec![2, 8] },
+                ParamSpec { name: "b1".into(), dims: vec![8] },
+            ],
+            extra: Default::default(),
+        }
+    }
+
+    fn tiny_batch() -> PackedBatch {
+        PackedBatch {
+            rows: 4,
+            n_dense: 2,
+            n_sparse: 2,
+            dense: vec![0.5, 1.0, 0.0, 2.0, 1.5, 0.5, 0.2, 0.8],
+            sparse: vec![1, 7, 2, 3, 1, 7, 9, 0],
+            labels: vec![1.0, 0.0, 1.0, 0.0],
+        }
+    }
+
     #[test]
     fn missing_artifacts_error_is_actionable() {
         let paths = ArtifactPaths::in_dir("/nonexistent");
@@ -237,19 +287,7 @@ mod tests {
 
     #[test]
     fn init_state_layout() {
-        let meta = ModelMeta {
-            batch: 4,
-            n_dense: 2,
-            n_sparse: 2,
-            vocab: 10,
-            embed_dim: 4,
-            params: vec![
-                ParamSpec { name: "emb".into(), dims: vec![20, 4] },
-                ParamSpec { name: "w1".into(), dims: vec![2, 8] },
-                ParamSpec { name: "b1".into(), dims: vec![8] },
-            ],
-            extra: Default::default(),
-        };
+        let meta = tiny_meta();
         let s = init_state(&meta, 42);
         assert_eq!(s.len(), 80 + 16 + 8 + 1);
         // biases zero, loss slot zero
@@ -258,5 +296,71 @@ mod tests {
         // deterministic
         assert_eq!(s, init_state(&meta, 42));
         assert_ne!(s, init_state(&meta, 43));
+    }
+
+    #[test]
+    fn loss_decreases_on_fixed_batch() {
+        let mut t = Trainer::from_meta(tiny_meta(), 7);
+        let batch = tiny_batch();
+        let first = t.step_with_loss(&batch).unwrap();
+        assert!(first.is_finite() && first > 0.0);
+        for _ in 0..50 {
+            t.step(&batch).unwrap();
+        }
+        let last = t.loss().unwrap();
+        assert!(last < first, "loss did not decrease: {first} → {last}");
+        assert_eq!(t.steps, 51);
+    }
+
+    #[test]
+    fn rejects_wrong_batch_shape() {
+        let mut t = Trainer::from_meta(tiny_meta(), 1);
+        let mut batch = tiny_batch();
+        batch.rows -= 1;
+        batch.labels.pop();
+        batch.dense.truncate(batch.rows * batch.n_dense);
+        batch.sparse.truncate(batch.rows * batch.n_sparse);
+        assert!(t.step(&batch).is_err());
+    }
+
+    #[test]
+    fn step_and_step_view_are_identical() {
+        let mut a = Trainer::from_meta(tiny_meta(), 3);
+        let mut b = Trainer::from_meta(tiny_meta(), 3);
+        let batch = tiny_batch();
+        a.step(&batch).unwrap();
+        b.step_view(&batch.view()).unwrap();
+        assert_eq!(a.state_to_vec().unwrap(), b.state_to_vec().unwrap());
+    }
+
+    #[test]
+    fn checkpoint_restore_replays_bit_identically() {
+        let mut t = Trainer::from_meta(tiny_meta(), 9);
+        let batch = tiny_batch();
+        for _ in 0..5 {
+            t.step(&batch).unwrap();
+        }
+        let etl = crate::etl::dag::EtlState::default();
+        let ck = t.checkpoint(&etl).unwrap();
+        for _ in 0..3 {
+            t.step(&batch).unwrap();
+        }
+        let loss_at_8 = t.loss().unwrap();
+        t.restore(&ck).unwrap();
+        assert_eq!(t.steps, 5);
+        for _ in 0..3 {
+            t.step(&batch).unwrap();
+        }
+        assert_eq!(t.loss().unwrap(), loss_at_8);
+    }
+
+    #[test]
+    fn param_to_vec_slices_by_name() {
+        let t = Trainer::from_meta(tiny_meta(), 11);
+        let emb = t.param_to_vec("emb").unwrap();
+        assert_eq!(emb.len(), 80);
+        let b1 = t.param_to_vec("b1").unwrap();
+        assert!(b1.iter().all(|&v| v == 0.0));
+        assert!(t.param_to_vec("nope").is_err());
     }
 }

@@ -1,0 +1,151 @@
+//! PJRT-backed trainer (original implementation, `pjrt` feature only):
+//! loads the HLO-text artifacts AOT-compiled by `python/compile/aot.py`,
+//! compiles them on the PJRT CPU client, and drives training with a
+//! **device-resident flat state buffer** — all parameters live in one
+//! `f32[state_len]` array with a trailing loss slot; each step the host
+//! uploads only the packed batch and re-feeds the previous output buffer
+//! (`execute_b`), mirroring the paper's zero-copy ingest discipline. A
+//! second tiny executable slices the loss slot out on-device (the CPU
+//! PJRT plugin lacks CopyRawToHost).
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax≥0.5's
+//! 64-bit-id serialized protos; the text parser reassigns ids).
+//!
+//! Building this module requires vendoring the `xla` crate, which the
+//! offline environment does not ship — hence the feature gate. The
+//! default build's [`super::Trainer`] reproduces the same public API in
+//! pure Rust.
+
+use crate::coordinator::packer::PackedBatch;
+use crate::error::{EtlError, Result};
+use super::artifacts::{ArtifactPaths, ModelMeta};
+use super::init_state;
+
+/// Wrap an `xla::Error` into our error type.
+fn xe(e: xla::Error) -> EtlError {
+    EtlError::Runtime(e.to_string())
+}
+
+/// The PJRT engine: one CPU client shared by all executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu().map_err(xe)? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn compile_hlo(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(xe)
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(xe)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client.buffer_from_host_buffer(data, dims, None).map_err(xe)
+    }
+}
+
+/// A loaded DLRM train step with a device-resident flat state buffer.
+pub struct Trainer {
+    engine: Engine,
+    step_exe: xla::PjRtLoadedExecutable,
+    loss_exe: xla::PjRtLoadedExecutable,
+    pub meta: ModelMeta,
+    state: xla::PjRtBuffer,
+    /// Steps executed.
+    pub steps: u64,
+}
+
+impl Trainer {
+    /// Load artifacts, compile both executables, and initialize the state
+    /// buffer with a deterministic Glorot-ish scheme.
+    pub fn load(paths: &ArtifactPaths, seed: u64) -> Result<Trainer> {
+        if !paths.exist() {
+            return Err(EtlError::Runtime(format!(
+                "artifacts not found in {:?} — run `make artifacts`",
+                paths.dir
+            )));
+        }
+        let engine = Engine::cpu()?;
+        let meta = ModelMeta::load(&paths.meta)?;
+        let step_exe = engine.compile_hlo(&paths.train_hlo)?;
+        let loss_exe = engine.compile_hlo(&paths.loss_hlo)?;
+        let state = engine.upload_f32(&init_state(&meta, seed), &[meta.state_len()])?;
+        Ok(Trainer { engine, step_exe, loss_exe, meta, state, steps: 0 })
+    }
+
+    /// Reset parameters.
+    pub fn init_params(&mut self, seed: u64) -> Result<()> {
+        self.state = self
+            .engine
+            .upload_f32(&init_state(&self.meta, seed), &[self.meta.state_len()])?;
+        self.steps = 0;
+        Ok(())
+    }
+
+    /// Run one training step on a packed batch; the state stays on device.
+    pub fn step(&mut self, batch: &PackedBatch) -> Result<()> {
+        let m = &self.meta;
+        if batch.rows != m.batch || batch.n_dense != m.n_dense || batch.n_sparse != m.n_sparse {
+            return Err(EtlError::Runtime(format!(
+                "batch shape ({}, {}, {}) != artifact shape ({}, {}, {})",
+                batch.rows, batch.n_dense, batch.n_sparse, m.batch, m.n_dense, m.n_sparse
+            )));
+        }
+        // Fold indices into the (possibly smaller) artifact vocabulary.
+        let vocab = m.vocab as i32;
+        let sparse: Vec<i32> = batch.sparse.iter().map(|&v| v % vocab).collect();
+
+        let dense_b = self.engine.upload_f32(&batch.dense, &[batch.rows, m.n_dense])?;
+        let sparse_b = self.engine.upload_i32(&sparse, &[batch.rows, m.n_sparse])?;
+        let labels_b = self.engine.upload_f32(&batch.labels, &[batch.rows])?;
+
+        let mut outs = self
+            .step_exe
+            .execute_b(&[&self.state, &dense_b, &sparse_b, &labels_b])
+            .map_err(xe)?;
+        let mut replica = outs
+            .drain(..)
+            .next()
+            .ok_or_else(|| EtlError::Runtime("no outputs".into()))?;
+        if replica.len() != 1 {
+            return Err(EtlError::Runtime(format!(
+                "expected 1 state output, got {}",
+                replica.len()
+            )));
+        }
+        self.state = replica.remove(0);
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Read the loss slot of the current state (runs the on-device slice
+    /// executable; downloads 4 bytes).
+    pub fn loss(&self) -> Result<f32> {
+        let mut outs = self.loss_exe.execute_b(&[&self.state]).map_err(xe)?;
+        let buf = outs
+            .drain(..)
+            .next()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| EtlError::Runtime("loss executable produced no output".into()))?;
+        let lit = buf.to_literal_sync().map_err(xe)?;
+        lit.get_first_element().map_err(xe)
+    }
+
+    /// Download the full state (tests / checkpoints).
+    pub fn state_to_vec(&self) -> Result<Vec<f32>> {
+        let lit = self.state.to_literal_sync().map_err(xe)?;
+        lit.to_vec::<f32>().map_err(xe)
+    }
+}

@@ -5,7 +5,8 @@
 
 use piperec::coordinator::packer::{pack, PackLayout, PackedBatch};
 use piperec::etl::column::{Batch, ColType, Column};
-use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::dag::{Dag, NodeId, SinkRole};
+use piperec::etl::exec::{ExecConfig, FusedEngine};
 use piperec::etl::ops::vocab::{vocab_gen, vocab_map};
 use piperec::etl::ops::{kernels, OpSpec};
 use piperec::etl::schema::Schema;
@@ -199,6 +200,128 @@ fn prop_dag_random_linear_chains_validate_and_run() {
         let out = dag.apply(&batch, &state).map_err(|e| e.to_string())?;
         if out.rows() != 64 {
             return Err("row count changed".into());
+        }
+        Ok(())
+    });
+}
+
+/// Bitwise comparison of two packed batches (dense may legitimately carry
+/// NaN when a random chain omits FillMissing — compare f32 by bits).
+fn packed_bits_equal(a: &PackedBatch, b: &PackedBatch) -> Result<(), String> {
+    if (a.rows, a.n_dense, a.n_sparse) != (b.rows, b.n_dense, b.n_sparse) {
+        return Err(format!(
+            "shape mismatch: ({}, {}, {}) vs ({}, {}, {})",
+            a.rows, a.n_dense, a.n_sparse, b.rows, b.n_dense, b.n_sparse
+        ));
+    }
+    if a.sparse != b.sparse {
+        return Err("sparse payload differs".into());
+    }
+    if a.dense.len() != b.dense.len() || a.labels.len() != b.labels.len() {
+        return Err("payload length differs".into());
+    }
+    for (i, (x, y)) in a.dense.iter().zip(&b.dense).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("dense[{i}] differs: {x} vs {y}"));
+        }
+    }
+    for (i, (x, y)) in a.labels.iter().zip(&b.labels).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("labels[{i}] differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_fused_engine_bit_identical_to_reference() {
+    // Differential test of the fused tiled engine (`etl::exec`) against
+    // the reference executor (`Dag::apply` + `pack`): randomly generated
+    // pipelines (dense chains, hex→vocab chains, Bucketize type changes,
+    // Cartesian diamonds through the general fallback), random tile sizes
+    // and thread counts, batches with NaN/missing values, and OOV tokens
+    // (fit on a prefix, apply on the full batch).
+    check("fused_vs_reference", 30, |g| {
+        let nd = 1 + g.usize(3);
+        let ns = 1 + g.usize(3);
+        let schema = Schema::tabular("t", nd, ns, 64);
+        let mut dag = Dag::new("prop-fused");
+        let l = dag.source("t_label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+
+        // Dense chains: FillMissing/Clamp/Logarithm, occasionally ending
+        // in Bucketize (f32 → i64 sparse sink).
+        for i in 0..nd {
+            let mut node = dag.source(format!("t_i{i}"), ColType::F32);
+            for _ in 0..g.usize(4) {
+                let op = match g.usize(3) {
+                    0 => OpSpec::FillMissing {
+                        dense_default: g.f32_range(-1.0, 1.0),
+                        sparse_default: 0,
+                    },
+                    1 => OpSpec::Clamp { lo: 0.0, hi: g.f32_range(1.0, 1e6) },
+                    _ => OpSpec::Logarithm,
+                };
+                node = dag.op(op, &[node]);
+            }
+            if g.usize(4) == 0 {
+                let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
+                dag.sink(format!("bucket{i}"), b, SinkRole::SparseIndex);
+            } else {
+                dag.sink(format!("dense{i}"), node, SinkRole::Dense);
+            }
+        }
+
+        // Sparse chains: Hex2Int → Modulus → {VocabGen | SigridHash | id},
+        // occasionally crossed with the previous chain (Cartesian is a
+        // diamond → exercises the general per-tile fallback).
+        let mut prev: Option<NodeId> = None;
+        for i in 0..ns {
+            let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+            let h = dag.op(OpSpec::Hex2Int, &[s]);
+            let m = dag.op(OpSpec::Modulus { m: 1 + g.u64(1 << 20) as i64 }, &[h]);
+            let node = match g.usize(3) {
+                0 => dag.vocab_op(OpSpec::VocabGen { expected: 32 }, m, format!("v{i}")),
+                1 => dag.op(OpSpec::SigridHash { m: 4096 }, &[m]),
+                _ => m,
+            };
+            let node = match prev {
+                Some(p) if g.bool() => dag.op(OpSpec::Cartesian { m: 10_000 }, &[p, node]),
+                _ => node,
+            };
+            prev = Some(m);
+            dag.sink(format!("sparse{i}"), node, SinkRole::SparseIndex);
+        }
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+
+        let rows = 16 + g.usize(400);
+        let batch = piperec::dataio::synth::generate(
+            &schema,
+            rows,
+            g.u64(1 << 32),
+            &piperec::dataio::synth::SynthConfig::default(),
+        );
+        // Fit on a prefix so the tail of the batch exercises OOV replay.
+        let fit_rows = 1 + rows / 2;
+        let state = dag.fit(&batch.slice_rows(0..fit_rows)).map_err(|e| e.to_string())?;
+
+        let layout = PackLayout::of(&dag).map_err(|e| e.to_string())?;
+        let reference = {
+            let out = dag.apply(&batch, &state).map_err(|e| e.to_string())?;
+            pack(&out, &layout).map_err(|e| e.to_string())?
+        };
+
+        for (tile_rows, threads) in [
+            (1 + g.usize(64), 1),
+            (8 + g.usize(1024), 1 + g.usize(4)),
+            (rows + 7, 2),
+        ] {
+            let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows, threads })
+                .map_err(|e| e.to_string())?;
+            let fused = engine.execute(&batch, &state).map_err(|e| e.to_string())?;
+            packed_bits_equal(&reference, &fused).map_err(|e| {
+                format!("tile={tile_rows} threads={threads}: {e}")
+            })?;
         }
         Ok(())
     });

@@ -73,6 +73,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         loss_every: (steps / 20).max(1),
         staging_buffers: 2,
         seed: 42,
+        ..Default::default()
     };
     let report = train(&pipeline, &spec, &mut trainer, &cfg)?;
 

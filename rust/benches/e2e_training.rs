@@ -89,7 +89,9 @@ fn main() {
     live.row(vec!["wall time".into(), secs(report.wall_s)]);
     live.row(vec!["trainer busy".into(), secs(report.train_busy_s)]);
     live.row(vec!["GPU-standin util".into(), format!("{:.0}%", report.util * 100.0)]);
-    live.row(vec!["ETL host time".into(), secs(report.etl_host_s)]);
+    live.row(vec!["ETL exec host time".into(), secs(report.etl_host_s)]);
+    live.row(vec!["ingest wait time".into(), secs(report.ingest_wait_s)]);
+    live.row(vec!["shards ingested".into(), report.shards.to_string()]);
     live.row(vec!["ETL FPGA-sim time".into(), secs(report.etl_sim_s)]);
     live.row(vec!["producer stalls".into(), report.producer_stalls.to_string()]);
     if let Some((first, last)) = report.loss_delta() {

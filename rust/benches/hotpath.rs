@@ -7,6 +7,7 @@
 
 use piperec::bench_harness::{bench, rate, BenchCtx, Table};
 use piperec::coordinator::{pack, PackLayout};
+use piperec::dataio::ingest::{AsyncIngest, DeliveryPolicy, IngestConfig, ShardInput};
 use piperec::dataio::synth::{generate, SynthConfig};
 use piperec::etl::exec::{ExecConfig, FusedEngine};
 use piperec::etl::ops::vocab::{vocab_gen, vocab_map_oov};
@@ -179,13 +180,80 @@ fn main() {
         ref_combined / fnn.min
     );
 
-    let speedups = vec![
+    let mut speedups = vec![
         ("fused-1T vs reference apply+pack".to_string(), ref_combined / f1.min),
         (
             format!("fused-{threads}T vs reference apply+pack"),
             ref_combined / fnn.min,
         ),
     ];
+
+    // ---- ingest-overlap: async shard ingest vs the synchronous producer.
+    // The sync producer generates each shard, then runs fused apply+pack —
+    // strictly serial. The async path overlaps N ingest workers with the
+    // fused executor over a bounded channel (§3.5), which is the live
+    // train loop's producer since the streaming-ingest change.
+    let mut ospec = piperec::dataio::dataset::DatasetSpec::dataset_i(1.0);
+    ospec.rows = ctx.scale(24_000.0, 6_000.0) as usize;
+    ospec.shards = 8;
+    let odag = build(PipelineKind::II, &ospec.schema);
+    // Leave cores free for the ingest workers.
+    let exec_threads = (threads / 2).max(1);
+    let oengine =
+        FusedEngine::compile(&odag, ExecConfig { tile_rows: 8192, threads: exec_threads })
+            .unwrap();
+    let ostate = oengine.fit(&ospec.shard(0, 11)).unwrap();
+    let mut obuf = oengine.execute(&ospec.shard(0, 11), &ostate).unwrap();
+    let ingest_workers = 4usize;
+
+    let sync_s = bench(1, iters, || {
+        for i in 0..ospec.shards {
+            let shard = ospec.shard(i, 11);
+            if shard.rows() == 0 {
+                break;
+            }
+            oengine.execute_into(&shard, &ostate, &mut obuf).unwrap();
+        }
+        std::hint::black_box(obuf.rows);
+    });
+    let async_s = bench(1, iters, || {
+        let cfg = IngestConfig {
+            workers: ingest_workers,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+        };
+        let mut ingest =
+            AsyncIngest::spawn(ShardInput::Synth { spec: ospec.clone(), seed: 11 }, &cfg);
+        while let Some((_, shard)) = ingest.next().unwrap() {
+            oengine.execute_into(&shard, &ostate, &mut obuf).unwrap();
+            ingest.recycle(shard);
+        }
+        std::hint::black_box(obuf.rows);
+    });
+    let orb = ospec.row_bytes() as f64;
+    add("sync producer (gen + fused)", ospec.rows as f64, orb, sync_s.clone());
+    add(
+        &format!("async ingest ({ingest_workers} workers, depth 2)"),
+        ospec.rows as f64,
+        orb,
+        async_s.clone(),
+    );
+    let shards_sync = ospec.shards as f64 / sync_s.min;
+    let shards_async = ospec.shards as f64 / async_s.min;
+    println!(
+        "\ningest-overlap (Pipeline-II, {} shards × {} rows, in-order):",
+        ospec.shards,
+        ospec.rows_per_shard()
+    );
+    println!("  sync producer : {shards_sync:.1} shards/s");
+    println!(
+        "  async ingest  : {shards_async:.1} shards/s  → {:.2}x",
+        shards_async / shards_sync
+    );
+    speedups.push((
+        "async-ingest vs sync producer (shards/s)".to_string(),
+        shards_async / shards_sync,
+    ));
 
     t.print();
     println!("\ntargets (§Perf): packer and stateless ops in GB/s territory so the");

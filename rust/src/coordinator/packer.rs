@@ -8,7 +8,8 @@
 
 use crate::error::{EtlError, Result};
 use crate::etl::column::{Batch, Column};
-use crate::etl::dag::{Dag, SinkRole};
+use crate::etl::dag::{Dag, Node, SinkRole};
+use crate::etl::ops::OpSpec;
 
 /// A training-ready packed batch (the unit streamed over P2P DMA).
 #[derive(Debug, Clone, PartialEq)]
@@ -102,33 +103,70 @@ impl PackedBatchView<'_> {
 }
 
 /// Sink layout extracted from a DAG: which output columns feed which
-/// tensor, in declaration order.
+/// tensor, in declaration order. Dense sinks may be wider than one slot
+/// (OneHot widening); `dense_widths` records the slots per dense sink and
+/// the packed dense tensor is `[rows, n_dense_slots]`.
 #[derive(Debug, Clone)]
 pub struct PackLayout {
     pub dense_cols: Vec<String>,
+    /// Slots per dense sink, parallel to `dense_cols` (1 unless widened).
+    pub dense_widths: Vec<usize>,
     pub sparse_cols: Vec<String>,
     pub label_col: String,
 }
 
 impl PackLayout {
     pub fn of(dag: &Dag) -> Result<PackLayout> {
+        let widths = node_widths(dag);
         let mut dense_cols = Vec::new();
+        let mut dense_widths = Vec::new();
         let mut sparse_cols = Vec::new();
         let mut label_col = None;
-        for (name, _, role) in dag.sinks() {
+        for (name, input, role) in dag.sinks() {
             match role {
-                SinkRole::Dense => dense_cols.push(name.to_string()),
+                SinkRole::Dense => {
+                    dense_cols.push(name.to_string());
+                    dense_widths.push(widths[input.0]);
+                }
                 SinkRole::SparseIndex => sparse_cols.push(name.to_string()),
                 SinkRole::Label => label_col = Some(name.to_string()),
             }
         }
         Ok(PackLayout {
             dense_cols,
+            dense_widths,
             sparse_cols,
             label_col: label_col
                 .ok_or_else(|| EtlError::Coord("DAG has no label sink".into()))?,
         })
     }
+
+    /// Total f32 slots per packed dense row (= sum of dense sink widths).
+    pub fn n_dense_slots(&self) -> usize {
+        self.dense_widths.iter().sum()
+    }
+}
+
+/// Per-node output widths, mirroring the reference executor's `Column`
+/// constructors: OneHot widens to `k`; the f32 elementwise operators
+/// preserve their input width; every integer-producing operator re-emits
+/// width 1.
+fn node_widths(dag: &Dag) -> Vec<usize> {
+    let mut widths = vec![1usize; dag.nodes.len()];
+    for (i, node) in dag.nodes.iter().enumerate() {
+        widths[i] = match node {
+            Node::Source { .. } => 1,
+            Node::Op { spec, inputs, .. } => match spec {
+                OpSpec::OneHot { k } => *k,
+                OpSpec::FillMissing { .. } | OpSpec::Clamp { .. } | OpSpec::Logarithm => {
+                    inputs.first().map(|n| widths[n.0]).unwrap_or(1)
+                }
+                _ => 1,
+            },
+            Node::Sink { input, .. } => widths[input.0],
+        };
+    }
+    widths
 }
 
 /// Pack a transformed batch into the trainer layout.
@@ -137,24 +175,27 @@ impl PackLayout {
 /// indices are range-checked into `i32` (embedding rows fit 2^31).
 pub fn pack(batch: &Batch, layout: &PackLayout) -> Result<PackedBatch> {
     let rows = batch.rows();
-    let n_dense = layout.dense_cols.len();
+    let n_dense = layout.n_dense_slots();
     let n_sparse = layout.sparse_cols.len();
 
     let mut dense = vec![0f32; rows * n_dense];
-    for (ci, name) in layout.dense_cols.iter().enumerate() {
+    let mut off = 0usize;
+    for (name, &w) in layout.dense_cols.iter().zip(&layout.dense_widths) {
         let col = expect_col(batch, name)?;
         let data = col.as_f32()?;
-        if col.width() != 1 {
+        if col.width() != w {
             return Err(EtlError::Coord(format!(
-                "dense sink {name} has width {} (expected 1)",
+                "dense sink {name} has width {} (expected {w})",
                 col.width()
             )));
         }
         // Column-major → row-major scatter; the stride-friendly loop is
         // over rows so the destination writes are sequential per column.
-        for (r, &v) in data.iter().enumerate() {
-            dense[r * n_dense + ci] = v;
+        for r in 0..rows {
+            dense[r * n_dense + off..r * n_dense + off + w]
+                .copy_from_slice(&data[r * w..(r + 1) * w]);
         }
+        off += w;
     }
 
     let mut sparse = vec![0i32; rows * n_sparse];
@@ -288,7 +329,43 @@ mod tests {
     fn layout_orders_match_declaration() {
         let (layout, _) = layout_and_batch();
         assert_eq!(layout.dense_cols, vec!["dense0", "dense1"]);
+        assert_eq!(layout.dense_widths, vec![1, 1]);
+        assert_eq!(layout.n_dense_slots(), 2);
         assert_eq!(layout.sparse_cols, vec!["sparse0", "sparse1"]);
         assert_eq!(layout.label_col, "label");
+    }
+
+    #[test]
+    fn widened_onehot_sink_packs_interleaved() {
+        // label + width-1 dense + OneHot(3) dense: 4 slots per row.
+        let mut dag = Dag::new("wide");
+        let l = dag.source("label", crate::etl::column::ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let d = dag.source("x", crate::etl::column::ColType::F32);
+        dag.sink("dense0", d, SinkRole::Dense);
+        let s = dag.source("b", crate::etl::column::ColType::I64);
+        let oh = dag.op(OpSpec::OneHot { k: 3 }, &[s]);
+        dag.sink("onehot", oh, SinkRole::Dense);
+        let layout = PackLayout::of(&dag).unwrap();
+        assert_eq!(layout.dense_widths, vec![1, 3]);
+        assert_eq!(layout.n_dense_slots(), 4);
+
+        let mut b = Batch::new();
+        b.push("label", Column::f32(vec![1.0, 0.0])).unwrap();
+        b.push("dense0", Column::f32(vec![0.5, 0.25])).unwrap();
+        b.push(
+            "onehot",
+            Column::F32 { data: vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0], width: 3 },
+        )
+        .unwrap();
+        let p = pack(&b, &layout).unwrap();
+        assert_eq!(p.n_dense, 4);
+        assert_eq!(p.dense, vec![0.5, 0.0, 1.0, 0.0, 0.25, 0.0, 0.0, 1.0]);
+        // Wrong width is still rejected.
+        let mut bad = Batch::new();
+        bad.push("label", Column::f32(vec![1.0, 0.0])).unwrap();
+        bad.push("dense0", Column::f32(vec![0.5, 0.25])).unwrap();
+        bad.push("onehot", Column::f32(vec![1.0, 0.0])).unwrap();
+        assert!(pack(&bad, &layout).is_err());
     }
 }

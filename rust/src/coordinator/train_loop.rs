@@ -2,13 +2,21 @@
 //! functional transforms) feeding the PJRT trainer through the credit-
 //! gated staging queue — the end-to-end composition of all three layers.
 //!
-//! The producer thread plays the FPGA role (§3.5): stream shards,
-//! transform, pack, push into staging. The consumer is the GPU stand-in:
-//! pop, train, release the buffer. GPU utilization is measured as
-//! train-busy time over wall time per window, exactly as Fig. 14 reports.
+//! The producer side plays the FPGA role (§3.5) as a fully overlapped
+//! streaming dataflow: N async ingest workers generate shards into
+//! pool-recycled buffers ([`crate::dataio::ingest`]), the fused engine
+//! transforms+packs each shard straight into a recycled trainer-layout
+//! buffer, and the staging queue hands it to the consumer — so shard I/O,
+//! fused apply+pack, and trainer steps all overlap. The consumer is the
+//! GPU stand-in: pop, train, release the buffer. GPU utilization is
+//! measured as train-busy time over wall time per window, exactly as
+//! Fig. 14 reports. Ingest-wait and fused-exec time are attributed
+//! separately in the report so stage imbalance is visible (ROADMAP:
+//! pipeline-stage attribution).
 
 use crate::coordinator::staging::StagingQueue;
 use crate::dataio::dataset::DatasetSpec;
+use crate::dataio::ingest::{AsyncIngest, IngestConfig, ShardInput};
 use crate::error::{EtlError, Result};
 use crate::etl::exec::BufferPool;
 use crate::fpga::Pipeline;
@@ -26,11 +34,22 @@ pub struct TrainConfig {
     pub staging_buffers: usize,
     /// Dataset seed.
     pub seed: u64,
+    /// Async shard-ingest knobs (workers / channel depth / delivery
+    /// policy). The default (2 workers, depth 2, in-order) reproduces the
+    /// synchronous producer's batch sequence bit-for-bit while overlapping
+    /// shard generation with fused execution.
+    pub ingest: IngestConfig,
 }
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { max_steps: 200, loss_every: 10, staging_buffers: 2, seed: 42 }
+        TrainConfig {
+            max_steps: 200,
+            loss_every: 10,
+            staging_buffers: 2,
+            seed: 42,
+            ingest: IngestConfig::default(),
+        }
     }
 }
 
@@ -50,8 +69,14 @@ pub struct TrainReport {
     pub util_trace: TimeSeries,
     /// Producer-side backpressure stalls.
     pub producer_stalls: u64,
-    /// Host seconds the producer spent in functional ETL + packing.
+    /// Host seconds the producer spent in fused apply+pack (exec time,
+    /// excluding ingest wait).
     pub etl_host_s: f64,
+    /// Host seconds the producer spent blocked waiting on shard ingest
+    /// (I/O-wait attribution, disjoint from `etl_host_s`).
+    pub ingest_wait_s: f64,
+    /// Shards transformed by the producer.
+    pub shards: u64,
     /// Simulated FPGA ETL seconds for the same bytes (the paper's clock).
     pub etl_sim_s: f64,
 }
@@ -87,36 +112,44 @@ pub fn run(
     let t0 = std::time::Instant::now();
     let mut etl_host_s = 0.0f64;
     let mut etl_sim_s = 0.0f64;
+    let mut ingest_wait_s = 0.0f64;
+    let mut shards_done = 0u64;
     let mut producer_stalls = 0u64;
     let mut losses = Vec::new();
     let mut train_busy_s = 0.0f64;
     let mut util_trace = TimeSeries::default();
 
     std::thread::scope(|scope| -> Result<()> {
-        // Producer: the FPGA data plane. Fused apply+pack transforms each
-        // shard straight into a recycled trainer-layout buffer. Takes
-        // ownership of the queue so dropping it at the end closes the
-        // channel and wakes the consumer.
+        // Producer: the FPGA data plane. Async ingest workers stream
+        // shards into recycled buffers while the fused engine transforms
+        // each one straight into a recycled trainer-layout buffer; the
+        // queue is moved in so dropping it at the end closes the channel
+        // and wakes the consumer.
         let pool = &pool;
-        let producer = scope.spawn(move || -> Result<(f64, f64, u64)> {
+        let ingest_cfg = cfg.ingest.clone();
+        let ingest_spec = spec.clone();
+        let producer = scope.spawn(move || -> Result<(f64, f64, f64, u64)> {
             let queue = queue;
+            let mut ingest = AsyncIngest::spawn(
+                ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
+                &ingest_cfg,
+            );
             let mut host_s = 0.0;
             let mut sim_s = 0.0;
-            for i in 0..spec.shards {
-                let shard = spec.shard(i, cfg.seed);
-                if shard.rows() == 0 {
-                    break;
-                }
+            let mut shards = 0u64;
+            while let Some((_, shard)) = ingest.next()? {
                 let mut packed = pool.take();
                 let timing = pipeline.process_packed_into(&shard, &mut packed)?;
+                ingest.recycle(shard);
                 host_s += timing.host_s;
                 sim_s += timing.elapsed_s;
+                shards += 1;
                 if !queue.push(packed) {
                     // Consumer hung up (reached max_steps).
-                    return Ok((host_s, sim_s, 0));
+                    break;
                 }
             }
-            Ok((host_s, sim_s, 0))
+            Ok((host_s, sim_s, ingest.wait_seconds(), shards))
         });
 
         // Consumer: the trainer steps on borrowed chunk views (zero-copy;
@@ -156,9 +189,11 @@ pub fn run(
         // Drain/close: dropping the consumer unblocks a blocked producer.
         drop(consumer);
         match producer.join() {
-            Ok(Ok((h, s, _))) => {
+            Ok(Ok((h, s, w, n))) => {
                 etl_host_s = h;
                 etl_sim_s = s;
+                ingest_wait_s = w;
+                shards_done = n;
             }
             Ok(Err(e)) => return Err(e),
             Err(_) => return Err(EtlError::Coord("producer panicked".into())),
@@ -177,6 +212,8 @@ pub fn run(
         util_trace,
         producer_stalls,
         etl_host_s,
+        ingest_wait_s,
+        shards: shards_done,
         etl_sim_s,
     })
 }
@@ -184,11 +221,15 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     // Live-loop tests require compiled artifacts; they run in the
-    // integration suite (rust/tests/integration_runtime.rs).
+    // integration suite (rust/tests/integration_runtime.rs). The
+    // ingest/exec time-attribution split is asserted in
+    // rust/tests/integration_coordinator.rs against the artifact-free
+    // reference trainer.
 
     #[test]
     fn default_config_is_sane() {
         let cfg = super::TrainConfig::default();
         assert!(cfg.max_steps > 0 && cfg.staging_buffers >= 2);
+        assert!(cfg.ingest.workers >= 1 && cfg.ingest.channel_depth >= 1);
     }
 }

@@ -6,7 +6,7 @@
 //! (extrapolated) numbers — ETL cost is linear in rows (streaming), so the
 //! extrapolation is exact modulo constant setup costs.
 
-use crate::dataio::synth::{generate, SynthConfig};
+use crate::dataio::synth::SynthConfig;
 use crate::etl::column::Batch;
 use crate::etl::schema::Schema;
 
@@ -118,9 +118,24 @@ impl DatasetSpec {
 
     /// Generate shard `i` deterministically.
     pub fn shard(&self, i: usize, seed: u64) -> Batch {
+        let mut out = Batch::new();
+        self.shard_into(i, seed, &mut out);
+        out
+    }
+
+    /// Generate shard `i` into a recycled buffer (bit-identical to
+    /// [`shard`](Self::shard); the async ingest pool uses this so the
+    /// steady state allocates nothing per shard).
+    pub fn shard_into(&self, i: usize, seed: u64, out: &mut Batch) {
         let start = i * self.rows_per_shard();
         let n = self.rows_per_shard().min(self.rows.saturating_sub(start));
-        generate(&self.schema, n, seed ^ ((i as u64) << 32), &self.synth)
+        crate::dataio::synth::generate_into(
+            &self.schema,
+            n,
+            seed ^ ((i as u64) << 32),
+            &self.synth,
+            out,
+        );
     }
 }
 

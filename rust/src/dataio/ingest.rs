@@ -1,0 +1,496 @@
+//! Async streaming shard ingest (§3.5): a bounded multi-stage pipeline
+//! that decouples shard I/O from the fused executor so the ETL engine is
+//! never starved waiting on its source.
+//!
+//! N ingest workers generate/read shards ([`ShardInput`]: deterministic
+//! synthesis via [`DatasetSpec::shard_into`], `rcol` files, or Criteo TSV
+//! via `read_tsv_hinted`) into buffers recycled through a [`BatchPool`],
+//! and hand them over a backpressured `sync_channel` to the consumer —
+//! typically the fused engine packing straight into pooled
+//! `PackedBatch`es, so shard I/O, fused apply+pack, and trainer steps all
+//! overlap.
+//!
+//! # Delivery policies (the paper's ordering/freshness semantics)
+//!
+//! * [`DeliveryPolicy::InOrder`] — batches are delivered in ascending
+//!   shard order, exactly the sequence the synchronous producer would
+//!   have seen; out-of-order arrivals wait in a small reorder stash. This
+//!   is the bit-reproducible mode (`rust/tests/prop_streaming.rs` pins
+//!   batch-for-batch identity with the sync path).
+//! * [`DeliveryPolicy::FreshestFirst`] — the most recently generated
+//!   shard available is delivered first (training-aware freshness: the
+//!   trainer prefers the newest interactions). Every shard is still
+//!   delivered exactly once; only the order is recency-biased.
+//!
+//! # Backpressure & memory bound
+//!
+//! The channel holds at most `channel_depth` shards and each worker holds
+//! one in flight, so resident shard buffers are bounded by
+//! `workers + channel_depth` (plus a reorder stash that only grows past
+//! that under pathological per-shard cost skew, since workers drain in
+//! lock-step otherwise). `channel_depth` is the prefetch-distance knob:
+//! 1 = strict double buffering per worker, larger values absorb burstier
+//! shard-cost variance at the price of staleness in `FreshestFirst` mode.
+//! Consumed buffers should be handed back via [`AsyncIngest::recycle`] so
+//! the pool can reuse their allocations. Note the zero-alloc recycling
+//! currently applies to `Synth` shards (via `generate_into`); `Rcol`/`Tsv`
+//! readers still materialize a fresh batch per file (read-into variants
+//! are a ROADMAP follow-up).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::dataio::dataset::DatasetSpec;
+use crate::dataio::{rcol, tsv};
+use crate::error::{EtlError, Result};
+use crate::etl::column::Batch;
+use crate::etl::schema::Schema;
+
+/// Ordering/freshness semantics of batch delivery (the training-aware
+/// ETL abstraction's ordering knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeliveryPolicy {
+    /// Ascending shard order — bit-identical to the synchronous producer.
+    InOrder,
+    /// Most recently produced shard first — freshness over order; every
+    /// shard is still delivered exactly once.
+    FreshestFirst,
+}
+
+/// Knobs of the async ingest pipeline.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Ingest worker threads reading/generating shards.
+    pub workers: usize,
+    /// Bounded channel depth between workers and the consumer (prefetch
+    /// distance; 1 = strict double buffering per worker).
+    pub channel_depth: usize,
+    /// Delivery ordering/freshness policy.
+    pub policy: DeliveryPolicy,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig { workers: 2, channel_depth: 2, policy: DeliveryPolicy::InOrder }
+    }
+}
+
+/// Where shards come from.
+#[derive(Debug, Clone)]
+pub enum ShardInput {
+    /// Deterministic synthetic shards of a [`DatasetSpec`].
+    Synth { spec: DatasetSpec, seed: u64 },
+    /// One `rcol` columnar file per shard.
+    Rcol { paths: Vec<PathBuf> },
+    /// One Criteo-format TSV file per shard, parsed against `schema`.
+    Tsv { paths: Vec<PathBuf>, schema: Schema },
+}
+
+impl ShardInput {
+    /// Total shards this input yields.
+    pub fn shards(&self) -> usize {
+        match self {
+            ShardInput::Synth { spec, .. } => spec.shards,
+            ShardInput::Rcol { paths } => paths.len(),
+            ShardInput::Tsv { paths, .. } => paths.len(),
+        }
+    }
+
+    /// Produce shard `i` into a (possibly recycled) buffer.
+    pub fn load_into(&self, i: usize, out: &mut Batch) -> Result<()> {
+        match self {
+            ShardInput::Synth { spec, seed } => {
+                spec.shard_into(i, *seed, out);
+                Ok(())
+            }
+            ShardInput::Rcol { paths } => {
+                *out = rcol::read_file(&paths[i])?;
+                Ok(())
+            }
+            ShardInput::Tsv { paths, schema } => {
+                let f = std::fs::File::open(&paths[i])?;
+                *out = tsv::read_tsv_hinted(std::io::BufReader::new(f), schema, 0)?;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A recycling pool of shard [`Batch`] buffers (the `Batch` analogue of
+/// `etl::exec::BufferPool`): workers `take`, the consumer `recycle`.
+#[derive(Debug, Default)]
+pub struct BatchPool {
+    free: Mutex<Vec<Batch>>,
+}
+
+impl BatchPool {
+    pub fn new() -> BatchPool {
+        BatchPool::default()
+    }
+
+    /// Pop a recycled buffer (or a fresh empty one).
+    pub fn take(&self) -> Batch {
+        self.free
+            .lock()
+            .expect("batch pool poisoned")
+            .pop()
+            .unwrap_or_default()
+    }
+
+    /// Return a buffer for reuse.
+    pub fn put(&self, batch: Batch) {
+        self.free.lock().expect("batch pool poisoned").push(batch);
+    }
+
+    /// Buffers currently available.
+    pub fn available(&self) -> usize {
+        self.free.lock().expect("batch pool poisoned").len()
+    }
+}
+
+type WorkerMsg = Result<(usize, Batch)>;
+
+/// Handle over a running async ingest pipeline. Dropping it closes the
+/// channel (unblocking any worker stalled on backpressure) and joins the
+/// workers.
+pub struct AsyncIngest {
+    rx: Option<Receiver<WorkerMsg>>,
+    handles: Vec<JoinHandle<()>>,
+    stash: BTreeMap<usize, Batch>,
+    next_expected: usize,
+    policy: DeliveryPolicy,
+    pool: Arc<BatchPool>,
+    /// Shards the input yields; every index must arrive as a message.
+    total: usize,
+    /// Messages received so far (empty shards included) — `< total` at
+    /// disconnect means a worker died without reporting (e.g. panicked).
+    received: usize,
+    wait_s: f64,
+    delivered: u64,
+}
+
+impl AsyncIngest {
+    /// Start `cfg.workers` ingest threads over `input`. Workers claim
+    /// shard indices from a shared counter, fill pool-recycled buffers,
+    /// and push over a channel bounded at `cfg.channel_depth`.
+    pub fn spawn(input: ShardInput, cfg: &IngestConfig) -> AsyncIngest {
+        let input = Arc::new(input);
+        let pool = Arc::new(BatchPool::new());
+        let total = input.shards();
+        let (tx, rx) = sync_channel::<WorkerMsg>(cfg.channel_depth.max(1));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<JoinHandle<()>> = (0..cfg.workers.max(1))
+            .map(|_| {
+                let input = Arc::clone(&input);
+                let pool = Arc::clone(&pool);
+                let counter = Arc::clone(&counter);
+                let tx = tx.clone();
+                std::thread::spawn(move || loop {
+                    let i = counter.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let mut batch = pool.take();
+                    match input.load_into(i, &mut batch) {
+                        // Empty shards are forwarded too — the in-order
+                        // consumer advances its cursor through them.
+                        Ok(()) => {
+                            if tx.send(Ok((i, batch))).is_err() {
+                                break; // consumer hung up
+                            }
+                        }
+                        Err(e) => {
+                            let _ = tx.send(Err(e));
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        AsyncIngest {
+            rx: Some(rx),
+            handles,
+            stash: BTreeMap::new(),
+            next_expected: 0,
+            policy: cfg.policy,
+            pool,
+            total,
+            received: 0,
+            wait_s: 0.0,
+            delivered: 0,
+        }
+    }
+
+    /// Deliver the next non-empty shard under the configured policy (its
+    /// index and data), or `Ok(None)` once every worker finished and all
+    /// shards were delivered. Worker errors surface here. Time spent
+    /// blocked on the channel accumulates into [`wait_seconds`](Self::wait_seconds)
+    /// — the producer-side I/O-wait attribution the train loop reports.
+    pub fn next(&mut self) -> Result<Option<(usize, Batch)>> {
+        loop {
+            // Serve from the stash when the policy allows it.
+            let ready = match self.policy {
+                DeliveryPolicy::InOrder => {
+                    let i = self.next_expected;
+                    self.stash.remove(&i).map(|b| (i, b))
+                }
+                DeliveryPolicy::FreshestFirst => {
+                    self.drain_channel()?;
+                    match self.stash.keys().next_back().copied() {
+                        Some(i) => {
+                            let b = self.stash.remove(&i).expect("key just observed");
+                            Some((i, b))
+                        }
+                        None => None,
+                    }
+                }
+            };
+            if let Some((i, batch)) = ready {
+                if self.policy == DeliveryPolicy::InOrder {
+                    self.next_expected = i + 1;
+                }
+                if batch.rows() == 0 {
+                    self.pool.put(batch);
+                    continue;
+                }
+                self.delivered += 1;
+                return Ok(Some((i, batch)));
+            }
+
+            // Nothing eligible: block on the channel.
+            let Some(rx) = self.rx.as_ref() else { return Ok(None) };
+            let t0 = std::time::Instant::now();
+            let msg = rx.recv();
+            self.wait_s += t0.elapsed().as_secs_f64();
+            match msg {
+                Ok(Ok((i, batch))) => {
+                    self.received += 1;
+                    self.stash.insert(i, batch);
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(_) => {
+                    // All workers exited. Deliver stragglers in ascending
+                    // order (only reachable with gaps after a worker
+                    // error), then finish.
+                    let Some(i) = self.stash.keys().next().copied() else {
+                        // A worker that dies without reporting (panic)
+                        // leaves a gap — surface it instead of pretending
+                        // the stream completed.
+                        if self.received < self.total {
+                            return Err(EtlError::Coord(format!(
+                                "ingest workers exited after producing {}/{} shards \
+                                 (worker panicked?)",
+                                self.received, self.total
+                            )));
+                        }
+                        return Ok(None);
+                    };
+                    let batch = self.stash.remove(&i).expect("key just observed");
+                    self.next_expected = i + 1;
+                    if batch.rows() == 0 {
+                        self.pool.put(batch);
+                        continue;
+                    }
+                    self.delivered += 1;
+                    return Ok(Some((i, batch)));
+                }
+            }
+        }
+    }
+
+    /// Pull everything currently buffered in the channel into the stash
+    /// (freshest-first looks at all available shards before choosing).
+    fn drain_channel(&mut self) -> Result<()> {
+        let Some(rx) = self.rx.as_ref() else { return Ok(()) };
+        loop {
+            match rx.try_recv() {
+                Ok(Ok((i, batch))) => {
+                    self.received += 1;
+                    self.stash.insert(i, batch);
+                }
+                Ok(Err(e)) => return Err(e),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+    }
+
+    /// Hand a consumed shard buffer back for reuse.
+    pub fn recycle(&self, batch: Batch) {
+        self.pool.put(batch);
+    }
+
+    /// Seconds this consumer spent blocked waiting on shard ingest.
+    pub fn wait_seconds(&self) -> f64 {
+        self.wait_s
+    }
+
+    /// Non-empty shards delivered so far.
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+}
+
+impl Drop for AsyncIngest {
+    fn drop(&mut self) {
+        // Close the channel first so senders blocked on backpressure exit.
+        self.rx = None;
+        self.stash.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etl::column::Column;
+
+    fn spec(rows: usize, shards: usize) -> DatasetSpec {
+        let mut s = DatasetSpec::dataset_i(0.001);
+        s.rows = rows;
+        s.shards = shards;
+        s
+    }
+
+    fn collect(input: ShardInput, cfg: &IngestConfig) -> Vec<(usize, Batch)> {
+        let mut ingest = AsyncIngest::spawn(input, cfg);
+        let mut out = Vec::new();
+        while let Some((i, b)) = ingest.next().unwrap() {
+            out.push((i, b));
+        }
+        out
+    }
+
+    /// Bitwise batch comparison (dense columns legitimately carry NaN).
+    fn batch_eq(a: &Batch, b: &Batch) -> bool {
+        a.columns.len() == b.columns.len()
+            && a.columns.iter().zip(&b.columns).all(|((an, ac), (bn, bc))| {
+                an == bn
+                    && match (ac, bc) {
+                        (
+                            Column::F32 { data: x, width: wx },
+                            Column::F32 { data: y, width: wy },
+                        ) => {
+                            wx == wy
+                                && x.len() == y.len()
+                                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                        }
+                        _ => ac == bc,
+                    }
+            })
+    }
+
+    #[test]
+    fn in_order_matches_sync_across_worker_counts() {
+        let spec = spec(500, 5);
+        let sync: Vec<(usize, Batch)> = (0..spec.shards)
+            .map(|i| (i, spec.shard(i, 7)))
+            .filter(|(_, b)| b.rows() > 0)
+            .collect();
+        for workers in [1usize, 3, 8] {
+            for depth in [1usize, 4] {
+                let cfg = IngestConfig {
+                    workers,
+                    channel_depth: depth,
+                    policy: DeliveryPolicy::InOrder,
+                };
+                let got = collect(ShardInput::Synth { spec: spec.clone(), seed: 7 }, &cfg);
+                assert_eq!(got.len(), sync.len(), "workers={workers} depth={depth}");
+                for ((gi, gb), (si, sb)) in got.iter().zip(&sync) {
+                    assert_eq!(gi, si);
+                    assert!(batch_eq(gb, sb), "shard {gi} differs");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn freshest_first_delivers_every_shard_once() {
+        let spec = spec(600, 6);
+        let cfg = IngestConfig {
+            workers: 4,
+            channel_depth: 2,
+            policy: DeliveryPolicy::FreshestFirst,
+        };
+        let mut got = collect(ShardInput::Synth { spec: spec.clone(), seed: 3 }, &cfg);
+        got.sort_by_key(|(i, _)| *i);
+        let idxs: Vec<usize> = got.iter().map(|(i, _)| *i).collect();
+        assert_eq!(idxs, (0..6).collect::<Vec<_>>());
+        for (i, b) in &got {
+            assert!(batch_eq(b, &spec.shard(*i, 3)));
+        }
+    }
+
+    #[test]
+    fn trailing_empty_shards_are_skipped() {
+        // 10 rows over 8 shards → ceil(10/8)=2 rows/shard, shards 5..8 empty.
+        let spec = spec(10, 8);
+        let got = collect(
+            ShardInput::Synth { spec: spec.clone(), seed: 1 },
+            &IngestConfig::default(),
+        );
+        let total: usize = got.iter().map(|(_, b)| b.rows()).sum();
+        assert_eq!(total, spec.rows);
+        assert!(got.iter().all(|(_, b)| b.rows() > 0));
+    }
+
+    #[test]
+    fn early_drop_unblocks_workers() {
+        let spec = spec(4000, 16);
+        let cfg = IngestConfig { workers: 4, channel_depth: 1, ..Default::default() };
+        let mut ingest = AsyncIngest::spawn(ShardInput::Synth { spec, seed: 2 }, &cfg);
+        // Take one batch, then drop with workers mid-stream.
+        let first = ingest.next().unwrap();
+        assert!(first.is_some());
+        drop(ingest); // must not deadlock
+    }
+
+    #[test]
+    fn recycled_buffers_return_to_pool() {
+        let spec = spec(300, 3);
+        let cfg = IngestConfig { workers: 1, ..Default::default() };
+        let mut ingest = AsyncIngest::spawn(ShardInput::Synth { spec, seed: 9 }, &cfg);
+        let mut n = 0u64;
+        while let Some((_, b)) = ingest.next().unwrap() {
+            ingest.recycle(b);
+            n += 1;
+        }
+        assert_eq!(n, 3);
+        assert_eq!(ingest.delivered(), 3);
+        assert!(ingest.wait_seconds() >= 0.0);
+        assert!(ingest.pool.available() >= 1);
+    }
+
+    #[test]
+    fn worker_load_error_surfaces_to_consumer() {
+        let paths = vec![std::path::PathBuf::from("/nonexistent/piperec_missing.rcol")];
+        let mut ingest = AsyncIngest::spawn(ShardInput::Rcol { paths }, &IngestConfig::default());
+        assert!(ingest.next().is_err());
+    }
+
+    #[test]
+    fn rcol_shards_roundtrip_through_ingest() {
+        let dir = std::env::temp_dir().join("piperec_ingest_rcol");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = spec(200, 2);
+        let mut paths = Vec::new();
+        for i in 0..spec.shards {
+            let p = dir.join(format!("s{i}.rcol"));
+            rcol::write_file(&p, &spec.shard(i, 5)).unwrap();
+            paths.push(p);
+        }
+        let got = collect(ShardInput::Rcol { paths: paths.clone() }, &IngestConfig::default());
+        assert_eq!(got.len(), 2);
+        for (i, b) in &got {
+            assert!(batch_eq(b, &spec.shard(*i, 5)));
+        }
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}

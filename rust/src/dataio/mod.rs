@@ -1,7 +1,9 @@
 //! Data ingestion substrate: the `rcol` columnar format, synthetic
-//! Criteo-faithful generators, and the evaluation dataset specifications.
+//! Criteo-faithful generators, the evaluation dataset specifications, and
+//! the async streaming shard-ingest pipeline.
 
 pub mod dataset;
+pub mod ingest;
 pub mod rcol;
 pub mod synth;
 pub mod tsv;

@@ -40,48 +40,83 @@ impl Default for SynthConfig {
 /// Generate `rows` rows of raw (pre-ETL) data for `schema`.
 pub fn generate(schema: &Schema, rows: usize, seed: u64, cfg: &SynthConfig) -> Batch {
     let mut batch = Batch::new();
+    generate_into(schema, rows, seed, cfg, &mut batch);
+    batch
+}
+
+/// Like [`generate`], reusing `out`'s column buffers when its skeleton
+/// already matches `schema` (the recycling path of the async ingest
+/// pipeline: a shard buffer cycles worker → executor → pool and the
+/// steady state allocates nothing per shard). Values are bit-identical to
+/// [`generate`] — the per-column RNG streams are the same.
+pub fn generate_into(schema: &Schema, rows: usize, seed: u64, cfg: &SynthConfig, out: &mut Batch) {
+    let matches = out.columns.len() == schema.fields.len()
+        && out.columns.iter().zip(&schema.fields).all(|((n, c), f)| {
+            n == &f.name
+                && match f.kind {
+                    FeatureKind::Label | FeatureKind::Dense => {
+                        matches!(c, Column::F32 { width: 1, .. })
+                    }
+                    FeatureKind::Sparse => matches!(c, Column::Hex8 { .. }),
+                }
+        });
+    if !matches {
+        out.columns = schema
+            .fields
+            .iter()
+            .map(|f| {
+                let col = match f.kind {
+                    FeatureKind::Label | FeatureKind::Dense => {
+                        Column::F32 { data: Vec::new(), width: 1 }
+                    }
+                    FeatureKind::Sparse => Column::Hex8 { data: Vec::new() },
+                };
+                (f.name.clone(), col)
+            })
+            .collect();
+    }
+
     for (fi, field) in schema.fields.iter().enumerate() {
         // Independent stream per column so column order never changes data.
         let mut rng = Rng::new(seed ^ (fi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let col = match field.kind {
-            FeatureKind::Label => {
+        match (&field.kind, &mut out.columns[fi].1) {
+            (FeatureKind::Label, Column::F32 { data, .. }) => {
+                data.clear();
+                data.reserve(rows);
                 // ~25% positive CTR-style labels.
-                Column::f32((0..rows).map(|_| if rng.next_f64() < 0.25 { 1.0 } else { 0.0 }).collect())
+                data.extend((0..rows).map(|_| if rng.next_f64() < 0.25 { 1.0 } else { 0.0 }));
             }
-            FeatureKind::Dense => {
-                let data = (0..rows)
-                    .map(|_| {
-                        let u = rng.next_f64();
-                        if u < cfg.missing_rate {
-                            f32::NAN
-                        } else if u < cfg.missing_rate + cfg.negative_rate {
-                            -(rng.next_f64() * 10.0) as f32 - 1.0
-                        } else {
-                            // Heavy-tailed count: exp(N(0,2)) rounded.
-                            (rng.normal() * 2.0).exp().floor() as f32
-                        }
-                    })
-                    .collect();
-                Column::f32(data)
+            (FeatureKind::Dense, Column::F32 { data, .. }) => {
+                data.clear();
+                data.reserve(rows);
+                data.extend((0..rows).map(|_| {
+                    let u = rng.next_f64();
+                    if u < cfg.missing_rate {
+                        f32::NAN
+                    } else if u < cfg.missing_rate + cfg.negative_rate {
+                        -(rng.next_f64() * 10.0) as f32 - 1.0
+                    } else {
+                        // Heavy-tailed count: exp(N(0,2)) rounded.
+                        (rng.normal() * 2.0).exp().floor() as f32
+                    }
+                }));
             }
-            FeatureKind::Sparse => {
+            (FeatureKind::Sparse, Column::Hex8 { data }) => {
                 let card = field.cardinality.unwrap_or(cfg.cardinality);
-                let data = (0..rows)
-                    .map(|_| {
-                        let rank = rng.zipf(card, cfg.zipf_s);
-                        // Scramble rank → token so hot tokens are not
-                        // lexicographically adjacent (as in real logs),
-                        // then render as 8 hex chars.
-                        let token = crate::etl::ops::kernels::mix64(rank) & 0xFFFF_FFFF;
-                        pack_hex_u32(token as u32)
-                    })
-                    .collect();
-                Column::hex8(data)
+                data.clear();
+                data.reserve(rows);
+                data.extend((0..rows).map(|_| {
+                    let rank = rng.zipf(card, cfg.zipf_s);
+                    // Scramble rank → token so hot tokens are not
+                    // lexicographically adjacent (as in real logs),
+                    // then render as 8 hex chars.
+                    let token = crate::etl::ops::kernels::mix64(rank) & 0xFFFF_FFFF;
+                    pack_hex_u32(token as u32)
+                }));
             }
-        };
-        batch.push(field.name.clone(), col).expect("generator emits equal row counts");
+            _ => unreachable!("skeleton rebuilt above"),
+        }
     }
-    batch
 }
 
 /// Render a u32 as its 8-char ASCII hex representation packed into a u64
@@ -164,6 +199,29 @@ mod tests {
         // Top token should be far above median — skewed, not uniform.
         assert!(freqs[0] > 50, "top token count {}", freqs[0]);
         assert!(counts.len() > 1000, "distinct {}", counts.len());
+    }
+
+    #[test]
+    fn generate_into_recycles_and_matches_generate() {
+        let schema = Schema::tabular("t", 2, 2, 1000);
+        let cfg = SynthConfig::default();
+        let fresh = generate(&schema, 64, 5, &cfg);
+        // Fill a recycled buffer previously holding another shard.
+        let mut buf = generate(&schema, 128, 99, &cfg);
+        let ptr = buf.get("t_c0").unwrap().as_hex8().unwrap().as_ptr();
+        generate_into(&schema, 64, 5, &cfg, &mut buf);
+        assert_eq!(buf.rows(), 64);
+        assert_eq!(
+            fresh.get("t_c0").unwrap().as_hex8().unwrap(),
+            buf.get("t_c0").unwrap().as_hex8().unwrap()
+        );
+        // Same allocation reused (128-row capacity covers 64 rows).
+        assert_eq!(buf.get("t_c0").unwrap().as_hex8().unwrap().as_ptr(), ptr);
+        // A mismatched skeleton is rebuilt rather than trusted.
+        let other = Schema::tabular("x", 1, 1, 10);
+        generate_into(&other, 8, 5, &cfg, &mut buf);
+        assert_eq!(buf.rows(), 8);
+        assert!(buf.get("x_c0").is_some() && buf.get("t_c0").is_none());
     }
 
     #[test]

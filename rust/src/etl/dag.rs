@@ -53,7 +53,7 @@ pub struct Dag {
 }
 
 /// Fitted state: one vocabulary table per `vocab_key`.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct EtlState {
     pub vocabs: HashMap<String, VocabTable>,
 }

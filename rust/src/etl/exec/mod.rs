@@ -13,10 +13,15 @@
 //!    [`PackLayout`] into per-sink fused chains: a linear sequence of
 //!    [`Step`]s over the scalar kernels in [`crate::etl::ops::kernels`]
 //!    (the single source of operator truth, so results stay bit-identical
-//!    to the reference executor). Sinks whose subgraph is not a linear
-//!    unary chain (Cartesian diamonds, OneHot widening, type errors)
-//!    compile to a *general* plan that evaluates the subgraph per tile
-//!    with the same semantics as `Dag::apply`.
+//!    to the reference executor). Three chain shapes fuse end-to-end:
+//!    * linear unary chains (source → ops → packed slot);
+//!    * the same chain terminated by a widening **OneHot**, which scatters
+//!      `k` indicator slots per row straight into the dense tensor;
+//!    * two i64 chains crossed by one **Cartesian** with a unary i64 tail
+//!      (the binary-operator dataflow of Table 1).
+//!    Any other shape (nested Cartesians, OneHot over a binary op, type
+//!    errors) compiles to a *general* plan that evaluates the subgraph per
+//!    tile with the same semantics as `Dag::apply`.
 //! 2. **Tile** — execution walks the input in row tiles (default 8 K
 //!    rows, i.e. L1/L2-resident working sets, the software stand-in for
 //!    the FPGA's FIFO depth). Each chain runs stage-at-a-time over a
@@ -24,9 +29,9 @@
 //!    no reference counting, nothing shared — the engine is `Send + Sync`.
 //! 3. **Pack** — the final stage of every chain writes the tile's values
 //!    *directly into the row-major [`PackedBatch`] buffers* (dense f32
-//!    `[B, D_d]`, sparse i32 `[B, D_s]`, labels `[B]`), fusing apply and
-//!    pack into one pass exactly as the format-aware packer does in
-//!    hardware (§3.2.3).
+//!    `[B, D_d]` where `D_d` counts slots including OneHot widening,
+//!    sparse i32 `[B, D_s]`, labels `[B]`), fusing apply and pack into one
+//!    pass exactly as the format-aware packer does in hardware (§3.2.3).
 //!
 //! Because tiles write disjoint row ranges, tiles are embarrassingly
 //! parallel: [`ExecConfig::threads`] workers split the tile list and one
@@ -35,6 +40,23 @@
 //! split of §3.1), so the output is bit-identical for every tile size and
 //! thread count; `rust/tests/prop_invariants.rs` proves this against the
 //! reference executor across random pipelines.
+//!
+//! **Fit is fused too** ([`FusedEngine::fit`]): instead of a separate
+//! reference-executor pass, VocabGen tables are built *inside* the tiled
+//! walk — each tile's values stream through the same fused chains and are
+//! inserted in row order, so first-appearance indices are bit-identical to
+//! [`Dag::fit`] (pinned by `prop_fused_fit_bit_identical_to_reference`).
+//! [`FusedEngine::fit_accumulate`] extends the same walk across shards for
+//! streaming/continuous fit, which is how the async ingest pipeline
+//! ([`crate::dataio::ingest`]) keeps the fit phase overlapped with shard
+//! I/O. A VocabGen upstream of another VocabGen is replayed through its
+//! in-progress table; that is exact because indices are assigned once and
+//! a tile's values are always inserted before any downstream VocabGen of
+//! the same tile reads them. The one shape the tiled walk cannot pin — a
+//! `VocabMap` inside another VocabGen's subgraph, whose lookups may go
+//! out-of-vocabulary mid-stream — is detected at compile time and `fit`
+//! falls back to the reference `Dag::fit` automatically (streaming
+//! `fit_accumulate` refuses it with an error).
 //!
 //! [`BufferPool`] recycles `PackedBatch` buffers so the steady-state
 //! train loop allocates nothing per batch ([`FusedEngine::execute_into`]
@@ -47,6 +69,7 @@ use crate::error::{EtlError, Result};
 use crate::etl::column::{Batch, ColType, Column};
 use crate::etl::dag::{Dag, EtlState, Node, NodeId, SinkRole};
 use crate::etl::ops::kernels;
+use crate::etl::ops::vocab::VocabTable;
 use crate::etl::ops::OpSpec;
 
 /// Execution knobs.
@@ -68,8 +91,9 @@ impl Default for ExecConfig {
 }
 
 /// One fused pipeline stage: a scalar kernel with frozen parameters.
-/// Mirrors the operator pool (Table 1) minus the widening/binary
-/// operators, which take the general per-tile path instead.
+/// Mirrors the operator pool (Table 1); the widening OneHot and the
+/// binary Cartesian are represented at the [`SinkPlan`] level instead
+/// (they change the dataflow shape, not just the value stream).
 #[derive(Debug, Clone)]
 enum Step {
     FillMissingF32(f32),
@@ -89,25 +113,69 @@ enum Step {
 /// Where a chain's output lands in the packed batch.
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Dest {
-    Dense(usize),
+    /// Slot offset + slot width in the dense tensor (w > 1 for OneHot).
+    Dense { off: usize, w: usize },
     Sparse(usize),
     Label,
+}
+
+fn role_of(dest: Dest) -> &'static str {
+    match dest {
+        Dest::Dense { .. } => "dense",
+        Dest::Sparse(_) => "sparse",
+        Dest::Label => "label",
+    }
+}
+
+/// One lowered linear segment: a width-1 source column plus the unary
+/// steps applied to it.
+#[derive(Debug, Clone)]
+struct Leaf {
+    source: String,
+    src_type: ColType,
+    steps: Vec<Step>,
 }
 
 /// Compiled plan for one sink.
 #[derive(Debug, Clone)]
 enum SinkPlan {
     /// Linear unary chain fused end-to-end: source → steps → packed slot.
-    Fused {
+    Fused { name: String, leaf: Leaf, dest: Dest },
+    /// Unary i64 chain terminated by a widening OneHot: each row scatters
+    /// `k` indicator slots into its dense slot group.
+    FusedOneHot { name: String, leaf: Leaf, k: usize, dest: Dest },
+    /// Two i64 leaves crossed by one Cartesian, then a unary i64 tail.
+    FusedCartesian {
         name: String,
-        source: String,
-        src_type: ColType,
-        steps: Vec<Step>,
+        left: Leaf,
+        right: Leaf,
+        m: i64,
+        post: Vec<Step>,
         dest: Dest,
     },
     /// Non-linear / unsupported subgraph: evaluated per tile with
     /// reference semantics, then scattered into the packed slot.
     General { name: String, node: usize, dest: Dest },
+}
+
+/// Compiled fit-phase plan for one VocabGen node (§3.1): how to produce
+/// its input values per tile so the table is built inside the streaming
+/// walk instead of a separate reference-executor pass.
+#[derive(Debug, Clone)]
+enum FitPlan {
+    /// Linear unary chain ending in i64 — runs on the fused tile scratch.
+    Chain { key: String, expected: usize, leaf: Leaf },
+    /// Anything else — evaluated per tile with reference semantics.
+    General { key: String, expected: usize, node: usize },
+}
+
+impl FitPlan {
+    fn key_expected(&self) -> (&str, usize) {
+        match self {
+            FitPlan::Chain { key, expected, .. } => (key, *expected),
+            FitPlan::General { key, expected, .. } => (key, *expected),
+        }
+    }
 }
 
 /// A compiled DAG + layout, executable tile-at-a-time straight into
@@ -117,21 +185,35 @@ pub struct FusedEngine {
     dag: Dag,
     layout: PackLayout,
     sinks: Vec<SinkPlan>,
+    fit_plans: Vec<FitPlan>,
+    /// True when some VocabGen's input subgraph contains a VocabMap: its
+    /// lookups can go out-of-vocabulary mid-stream, so the tiled walk
+    /// cannot reproduce `Dag::fit` and [`fit`](Self::fit) falls back to
+    /// the reference executor (detected at compile time).
+    fit_needs_reference: bool,
     pub cfg: ExecConfig,
     n_dense: usize,
     n_sparse: usize,
     fused: usize,
 }
 
-/// Reused per-worker tile scratch.
+/// Reused per-worker tile scratch. The second pair backs the right-hand
+/// leaf of fused Cartesian chains.
 struct TileBufs {
     f: Vec<f32>,
     i: Vec<i64>,
+    f2: Vec<f32>,
+    i2: Vec<i64>,
 }
 
 impl TileBufs {
     fn new(tile: usize) -> TileBufs {
-        TileBufs { f: Vec::with_capacity(tile), i: Vec::with_capacity(tile) }
+        TileBufs {
+            f: Vec::with_capacity(tile),
+            i: Vec::with_capacity(tile),
+            f2: Vec::new(),
+            i2: Vec::new(),
+        }
     }
 }
 
@@ -146,21 +228,24 @@ struct TileJob<'a> {
 
 impl FusedEngine {
     /// Lower `dag` into fused per-sink chains packing into the layout
-    /// derived from its sinks. Fails only if the DAG has no label sink
-    /// (no [`PackLayout`]); every sink shape is executable — unsupported
-    /// shapes fall back to the general per-tile evaluator.
+    /// derived from its sinks, plus per-VocabGen fit plans. Fails only if
+    /// the DAG has no label sink (no [`PackLayout`]); every sink shape is
+    /// executable — unsupported shapes fall back to the general per-tile
+    /// evaluator.
     pub fn compile(dag: &Dag, cfg: ExecConfig) -> Result<FusedEngine> {
         let layout = PackLayout::of(dag)?;
-        let n_dense = layout.dense_cols.len();
+        let n_dense = layout.n_dense_slots();
         let n_sparse = layout.sparse_cols.len();
         let mut sinks = Vec::new();
         let mut fused = 0usize;
-        let (mut di, mut si) = (0usize, 0usize);
+        let (mut di, mut dslot, mut si) = (0usize, 0usize, 0usize);
         for (name, input, role) in dag.sinks() {
             let dest = match role {
                 SinkRole::Dense => {
-                    let d = Dest::Dense(di);
+                    let w = layout.dense_widths[di];
                     di += 1;
+                    let d = Dest::Dense { off: dslot, w };
+                    dslot += w;
                     d
                 }
                 SinkRole::SparseIndex => {
@@ -177,16 +262,10 @@ impl FusedEngine {
                     Dest::Label
                 }
             };
-            match lower_chain(dag, input, dest) {
-                Some((source, src_type, steps)) => {
+            match lower_sink(dag, name, input, dest) {
+                Some(plan) => {
                     fused += 1;
-                    sinks.push(SinkPlan::Fused {
-                        name: name.to_string(),
-                        source,
-                        src_type,
-                        steps,
-                        dest,
-                    });
+                    sinks.push(plan);
                 }
                 None => sinks.push(SinkPlan::General {
                     name: name.to_string(),
@@ -195,10 +274,33 @@ impl FusedEngine {
                 }),
             }
         }
+
+        // Fit plans: one per VocabGen node, in node order — insertion
+        // order is part of the table's first-appearance semantics.
+        let mut fit_plans = Vec::new();
+        let mut fit_needs_reference = false;
+        for node in &dag.nodes {
+            if let Node::Op { spec: OpSpec::VocabGen { expected }, inputs, vocab_key } = node {
+                let key = vocab_key
+                    .clone()
+                    .ok_or_else(|| EtlError::Vocab("VocabGen has no vocab key".into()))?;
+                fit_needs_reference |= subgraph_contains_vocab_map(dag, inputs[0].0);
+                let plan = match lower_leaf(dag, inputs[0]) {
+                    Some((leaf, ColType::I64)) => {
+                        FitPlan::Chain { key, expected: *expected, leaf }
+                    }
+                    _ => FitPlan::General { key, expected: *expected, node: inputs[0].0 },
+                };
+                fit_plans.push(plan);
+            }
+        }
+
         Ok(FusedEngine {
             dag: dag.clone(),
             layout,
             sinks,
+            fit_plans,
+            fit_needs_reference,
             cfg,
             n_dense,
             n_sparse,
@@ -219,6 +321,101 @@ impl FusedEngine {
     /// The pack layout this engine targets.
     pub fn layout(&self) -> &PackLayout {
         &self.layout
+    }
+
+    /// Fit phase fused into the tiled walk (§3.1): stream `input` in row
+    /// tiles — serially, because vocabulary indices are assigned in
+    /// first-appearance order and row order is part of that contract —
+    /// and insert into every VocabGen table as values stream by. The
+    /// result is bit-identical to [`Dag::fit`]; a VocabGen upstream of
+    /// another VocabGen replays through its in-progress table, which is
+    /// exact because indices are assigned once and each tile's values are
+    /// inserted before any downstream VocabGen of the same tile reads
+    /// them.
+    pub fn fit(&self, input: &Batch) -> Result<EtlState> {
+        // A VocabMap inside a fit subgraph can go OOV mid-stream (its
+        // source table is complete only after the full pass); the tiled
+        // walk cannot reproduce that, so such DAGs — detected at compile
+        // time — fit through the reference executor instead.
+        if self.fit_needs_reference {
+            return self.dag.fit(input);
+        }
+        let mut state = EtlState::default();
+        self.fit_accumulate(input, &mut state)?;
+        Ok(state)
+    }
+
+    /// Streaming fit: like [`fit`](Self::fit) but accumulating into an
+    /// existing state, so vocabularies build up across shards as the
+    /// ingest pipeline delivers them (continuous-training fit). Errors
+    /// for DAGs whose fit subgraphs contain a VocabMap (no streaming
+    /// semantics exist for that shape — see [`fit`](Self::fit)).
+    pub fn fit_accumulate(&self, input: &Batch, state: &mut EtlState) -> Result<()> {
+        if self.fit_needs_reference {
+            return Err(EtlError::Vocab(
+                "a VocabGen input subgraph contains a VocabMap; streaming fit cannot \
+                 reproduce the reference pass for this shape — use Dag::fit"
+                    .into(),
+            ));
+        }
+        // Every table exists even for zero-row inputs — the reference fit
+        // emits empty tables too.
+        for plan in &self.fit_plans {
+            let (key, expected) = plan.key_expected();
+            if !state.vocabs.contains_key(key) {
+                state
+                    .vocabs
+                    .insert(key.to_string(), VocabTable::with_capacity(expected));
+            }
+        }
+        let rows = input.rows();
+        if rows == 0 || self.fit_plans.is_empty() {
+            return Ok(());
+        }
+        let tile = self.cfg.tile_rows.max(1);
+        let mut bufs = TileBufs::new(tile);
+        let mut memo: Vec<Option<Column>> = vec![None; self.dag.nodes.len()];
+        let mut start = 0usize;
+        while start < rows {
+            let n = tile.min(rows - start);
+            let range = start..start + n;
+            let mut sub: Option<Batch> = None;
+            for slot in memo.iter_mut() {
+                *slot = None;
+            }
+            for plan in &self.fit_plans {
+                match plan {
+                    FitPlan::Chain { key, leaf, .. } => {
+                        run_leaf_steps(
+                            input, state, &range, key, "fit", leaf, &mut bufs.f, &mut bufs.i,
+                        )?;
+                        let table = state.vocabs.get_mut(key).expect("inserted above");
+                        for &v in &bufs.i {
+                            table.get_or_insert(v);
+                        }
+                    }
+                    FitPlan::General { key, node, .. } => {
+                        if sub.is_none() {
+                            sub = Some(input.slice_rows(range.clone()));
+                        }
+                        let col = eval_owned(
+                            &self.dag,
+                            *node,
+                            sub.as_ref().expect("just set"),
+                            state,
+                            &mut memo,
+                        )?;
+                        let data = col.as_i64()?;
+                        let table = state.vocabs.get_mut(key).expect("inserted above");
+                        for &v in data {
+                            table.get_or_insert(v);
+                        }
+                    }
+                }
+            }
+            start += n;
+        }
+        Ok(())
     }
 
     /// Apply + pack in one pass, allocating a fresh batch.
@@ -333,9 +530,51 @@ impl FusedEngine {
         let mut memo: Vec<Option<Column>> = Vec::new();
         for sink in &self.sinks {
             match sink {
-                SinkPlan::Fused { name, source, src_type, steps, dest } => self.run_fused(
-                    input, state, &range, bufs, name, source, *src_type, steps, *dest, &mut job,
-                )?,
+                SinkPlan::Fused { name, leaf, dest } => {
+                    let is_f32 = run_leaf_steps(
+                        input, state, &range, name, role_of(*dest), leaf, &mut bufs.f,
+                        &mut bufs.i,
+                    )?;
+                    pack_tile(
+                        name, *dest, is_f32, &bufs.f, &bufs.i, &mut job, self.n_dense,
+                        self.n_sparse,
+                    )?;
+                }
+                SinkPlan::FusedOneHot { name, leaf, k, dest } => {
+                    let k = *k;
+                    run_leaf_steps(
+                        input, state, &range, name, role_of(*dest), leaf, &mut bufs.f,
+                        &mut bufs.i,
+                    )?;
+                    let Dest::Dense { off, .. } = *dest else {
+                        return Err(EtlError::Coord(format!(
+                            "OneHot sink {name} compiled to a non-dense destination"
+                        )));
+                    };
+                    let nd = self.n_dense;
+                    for (r, &v) in bufs.i.iter().enumerate() {
+                        let base = r * nd + off;
+                        kernels::one_hot_into(v, k, &mut job.dense[base..base + k]);
+                    }
+                }
+                SinkPlan::FusedCartesian { name, left, right, m, post, dest } => {
+                    run_leaf_steps(
+                        input, state, &range, name, role_of(*dest), left, &mut bufs.f,
+                        &mut bufs.i,
+                    )?;
+                    run_leaf_steps(
+                        input, state, &range, name, role_of(*dest), right, &mut bufs.f2,
+                        &mut bufs.i2,
+                    )?;
+                    for (a, &b) in bufs.i.iter_mut().zip(bufs.i2.iter()) {
+                        *a = kernels::cartesian(*a, b, *m);
+                    }
+                    let is_f32 = apply_steps(post, state, &mut bufs.f, &mut bufs.i, false)?;
+                    pack_tile(
+                        name, *dest, is_f32, &bufs.f, &bufs.i, &mut job, self.n_dense,
+                        self.n_sparse,
+                    )?;
+                }
                 SinkPlan::General { name, node, dest } => {
                     if sub.is_none() {
                         sub = Some(input.slice_rows(range.clone()));
@@ -354,168 +593,183 @@ impl FusedEngine {
         }
         Ok(())
     }
+}
 
-    /// Run one fused chain over a tile and scatter into the packed slot.
-    #[allow(clippy::too_many_arguments)]
-    fn run_fused(
-        &self,
-        input: &Batch,
-        state: &EtlState,
-        range: &std::ops::Range<usize>,
-        bufs: &mut TileBufs,
-        name: &str,
-        source: &str,
-        src_type: ColType,
-        steps: &[Step],
-        dest: Dest,
-        job: &mut TileJob<'_>,
-    ) -> Result<()> {
-        let col = input
-            .get(source)
-            .ok_or_else(|| EtlError::Dag(format!("input batch missing column {source:?}")))?;
-        if col.coltype() != src_type {
-            return Err(EtlError::TypeMismatch { expected: src_type, got: col.coltype() });
-        }
-        if col.width() != 1 {
-            let role = match dest {
-                Dest::Dense(_) => "dense",
-                Dest::Sparse(_) => "sparse",
-                Dest::Label => "label",
-            };
-            return Err(EtlError::Coord(format!(
-                "{role} sink {name} has width {} (expected 1)",
-                col.width()
-            )));
-        }
-
-        // Load the source tile (hex sources fuse straight through the
-        // leading Hex2Int — no staging copy of the raw tokens).
-        let mut next_step = 0usize;
-        let mut is_f32 = match col {
-            Column::F32 { data, .. } => {
-                bufs.f.clear();
-                bufs.f.extend_from_slice(&data[range.clone()]);
-                true
-            }
-            Column::I64 { data, .. } => {
-                bufs.i.clear();
-                bufs.i.extend_from_slice(&data[range.clone()]);
-                false
-            }
-            Column::Hex8 { data } => {
-                debug_assert!(matches!(steps.first(), Some(Step::Hex2Int)));
-                bufs.i.clear();
-                bufs.i.extend(data[range.clone()].iter().map(|&v| kernels::hex2int(v)));
-                next_step = 1;
-                false
-            }
-        };
-
-        // Stage-at-a-time over the cache-resident tile buffer.
-        for step in &steps[next_step..] {
-            match step {
-                Step::FillMissingF32(d) => {
-                    for v in bufs.f.iter_mut() {
-                        *v = kernels::fill_missing_f32(*v, *d);
-                    }
-                }
-                Step::Clamp { lo, hi } => {
-                    for v in bufs.f.iter_mut() {
-                        *v = kernels::clamp(*v, *lo, *hi);
-                    }
-                }
-                Step::Logarithm => {
-                    for v in bufs.f.iter_mut() {
-                        *v = kernels::logarithm(*v);
-                    }
-                }
-                Step::Bucketize(borders) => {
-                    bufs.i.clear();
-                    bufs.i.extend(bufs.f.iter().map(|&x| kernels::bucketize(x, borders)));
-                    is_f32 = false;
-                }
-                Step::Hex2Int => {
-                    return Err(EtlError::Dag(
-                        "fused Hex2Int on a non-source position (compiler bug)".into(),
-                    ));
-                }
-                Step::FillMissingI64(d) => {
-                    for v in bufs.i.iter_mut() {
-                        *v = kernels::fill_missing_i64(*v, *d);
-                    }
-                }
-                Step::Modulus(m) => {
-                    for v in bufs.i.iter_mut() {
-                        *v = kernels::modulus(*v, *m);
-                    }
-                }
-                Step::SigridHash(m) => {
-                    for v in bufs.i.iter_mut() {
-                        *v = kernels::sigrid_hash(*v, *m);
-                    }
-                }
-                Step::VocabReplay(key) => {
-                    let table = state
-                        .vocabs
-                        .get(key)
-                        .ok_or_else(|| EtlError::Vocab(format!("vocab {key:?} not fitted")))?;
-                    let oov = table.len() as i64;
-                    for v in bufs.i.iter_mut() {
-                        *v = table.get(*v).map(|i| i as i64).unwrap_or(oov);
-                    }
-                }
-                Step::VocabMap { key, oov } => {
-                    let table = state.vocabs.get(key).ok_or_else(|| {
-                        EtlError::op("VocabMap", "no fitted vocabulary table provided")
-                    })?;
-                    match oov {
-                        Some(d) => {
-                            for v in bufs.i.iter_mut() {
-                                *v = table.get(*v).map(|i| i as i64).unwrap_or(*d);
-                            }
-                        }
-                        None => {
-                            for v in bufs.i.iter_mut() {
-                                *v = table.get(*v).map(|i| i as i64).ok_or_else(|| {
-                                    EtlError::Vocab(format!(
-                                        "value {v} not present in fitted vocabulary (size {})",
-                                        table.len()
-                                    ))
-                                })?;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        // Pack: scatter the tile into its row-major destination.
-        match dest {
-            Dest::Dense(ci) => {
-                debug_assert!(is_f32);
-                let nd = self.n_dense;
-                for (r, &v) in bufs.f.iter().enumerate() {
-                    job.dense[r * nd + ci] = v;
-                }
-            }
-            Dest::Label => {
-                debug_assert!(is_f32);
-                job.labels.copy_from_slice(&bufs.f);
-            }
-            Dest::Sparse(ci) => {
-                let ns = self.n_sparse;
-                for (r, &v) in bufs.i.iter().enumerate() {
-                    if v < 0 || v > i32::MAX as i64 {
-                        return Err(EtlError::Coord(format!(
-                            "sparse index {v} out of i32 range in {name}"
-                        )));
-                    }
-                    job.sparse[r * ns + ci] = v as i32;
-                }
-            }
-        }
-        Ok(())
+/// Load `leaf.source` rows `range` into the tile scratch and run the
+/// leaf's fused steps stage-at-a-time (hex sources fuse straight through
+/// the leading Hex2Int — no staging copy of the raw tokens). Returns true
+/// when the live buffer is `f` (f32 values), false when it is `i` (i64).
+#[allow(clippy::too_many_arguments)]
+fn run_leaf_steps(
+    input: &Batch,
+    state: &EtlState,
+    range: &std::ops::Range<usize>,
+    name: &str,
+    role: &'static str,
+    leaf: &Leaf,
+    f: &mut Vec<f32>,
+    i: &mut Vec<i64>,
+) -> Result<bool> {
+    let col = input
+        .get(&leaf.source)
+        .ok_or_else(|| EtlError::Dag(format!("input batch missing column {:?}", leaf.source)))?;
+    if col.coltype() != leaf.src_type {
+        return Err(EtlError::TypeMismatch { expected: leaf.src_type, got: col.coltype() });
     }
+    if col.width() != 1 {
+        return Err(EtlError::Coord(format!(
+            "{role} sink {name} has width {} (expected 1)",
+            col.width()
+        )));
+    }
+
+    let mut next_step = 0usize;
+    let is_f32 = match col {
+        Column::F32 { data, .. } => {
+            f.clear();
+            f.extend_from_slice(&data[range.clone()]);
+            true
+        }
+        Column::I64 { data, .. } => {
+            i.clear();
+            i.extend_from_slice(&data[range.clone()]);
+            false
+        }
+        Column::Hex8 { data } => {
+            debug_assert!(matches!(leaf.steps.first(), Some(Step::Hex2Int)));
+            i.clear();
+            i.extend(data[range.clone()].iter().map(|&v| kernels::hex2int(v)));
+            next_step = 1;
+            false
+        }
+    };
+    apply_steps(&leaf.steps[next_step..], state, f, i, is_f32)
+}
+
+/// Run fused steps stage-at-a-time over the cache-resident tile buffers.
+/// `is_f32` names the buffer currently holding live values; the updated
+/// flag is returned (Bucketize moves values from `f` to `i`).
+fn apply_steps(
+    steps: &[Step],
+    state: &EtlState,
+    f: &mut Vec<f32>,
+    i: &mut Vec<i64>,
+    mut is_f32: bool,
+) -> Result<bool> {
+    for step in steps {
+        match step {
+            Step::FillMissingF32(d) => {
+                for v in f.iter_mut() {
+                    *v = kernels::fill_missing_f32(*v, *d);
+                }
+            }
+            Step::Clamp { lo, hi } => {
+                for v in f.iter_mut() {
+                    *v = kernels::clamp(*v, *lo, *hi);
+                }
+            }
+            Step::Logarithm => {
+                for v in f.iter_mut() {
+                    *v = kernels::logarithm(*v);
+                }
+            }
+            Step::Bucketize(borders) => {
+                i.clear();
+                i.extend(f.iter().map(|&x| kernels::bucketize(x, borders)));
+                is_f32 = false;
+            }
+            Step::Hex2Int => {
+                return Err(EtlError::Dag(
+                    "fused Hex2Int on a non-source position (compiler bug)".into(),
+                ));
+            }
+            Step::FillMissingI64(d) => {
+                for v in i.iter_mut() {
+                    *v = kernels::fill_missing_i64(*v, *d);
+                }
+            }
+            Step::Modulus(m) => {
+                for v in i.iter_mut() {
+                    *v = kernels::modulus(*v, *m);
+                }
+            }
+            Step::SigridHash(m) => {
+                for v in i.iter_mut() {
+                    *v = kernels::sigrid_hash(*v, *m);
+                }
+            }
+            Step::VocabReplay(key) => {
+                let table = state
+                    .vocabs
+                    .get(key)
+                    .ok_or_else(|| EtlError::Vocab(format!("vocab {key:?} not fitted")))?;
+                let oov = table.len() as i64;
+                for v in i.iter_mut() {
+                    *v = table.get(*v).map(|x| x as i64).unwrap_or(oov);
+                }
+            }
+            Step::VocabMap { key, oov } => {
+                let table = state.vocabs.get(key).ok_or_else(|| {
+                    EtlError::op("VocabMap", "no fitted vocabulary table provided")
+                })?;
+                match oov {
+                    Some(d) => {
+                        for v in i.iter_mut() {
+                            *v = table.get(*v).map(|x| x as i64).unwrap_or(*d);
+                        }
+                    }
+                    None => {
+                        for v in i.iter_mut() {
+                            *v = table.get(*v).map(|x| x as i64).ok_or_else(|| {
+                                EtlError::Vocab(format!(
+                                    "value {v} not present in fitted vocabulary (size {})",
+                                    table.len()
+                                ))
+                            })?;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(is_f32)
+}
+
+/// Scatter a finished width-1 tile into its packed destination slot.
+fn pack_tile(
+    name: &str,
+    dest: Dest,
+    is_f32: bool,
+    f: &[f32],
+    i: &[i64],
+    job: &mut TileJob<'_>,
+    n_dense: usize,
+    n_sparse: usize,
+) -> Result<()> {
+    match dest {
+        Dest::Dense { off, w } => {
+            debug_assert!(is_f32 && w == 1);
+            for (r, &v) in f.iter().enumerate() {
+                job.dense[r * n_dense + off] = v;
+            }
+        }
+        Dest::Label => {
+            debug_assert!(is_f32);
+            job.labels.copy_from_slice(f);
+        }
+        Dest::Sparse(ci) => {
+            debug_assert!(!is_f32);
+            for (r, &v) in i.iter().enumerate() {
+                if v < 0 || v > i32::MAX as i64 {
+                    return Err(EtlError::Coord(format!(
+                        "sparse index {v} out of i32 range in {name}"
+                    )));
+                }
+                job.sparse[r * n_sparse + ci] = v as i32;
+            }
+        }
+    }
+    Ok(())
 }
 
 fn empty_batch() -> PackedBatch {
@@ -529,32 +783,36 @@ fn empty_batch() -> PackedBatch {
     }
 }
 
-/// Walk back from a sink input to its source; `Some` iff the subgraph is
-/// a linear unary chain of fusable operators whose types check out for
-/// `dest` (the same checks `Dag::validate` performs, re-derived here so
-/// compilation works without a schema).
-fn lower_chain(dag: &Dag, from: NodeId, dest: Dest) -> Option<(String, ColType, Vec<Step>)> {
-    // Collect (spec, vocab_key) back-to-front.
+/// Walk back from `from` through sinks and unary ops, collecting
+/// `(spec, vocab_key)` in sink-to-source order. Returns the collected ops
+/// plus the index of the node where the walk stopped (a source or a
+/// non-unary op).
+fn walk_unary(dag: &Dag, from: NodeId) -> (Vec<(&OpSpec, Option<&String>)>, usize) {
     let mut rev: Vec<(&OpSpec, Option<&String>)> = Vec::new();
     let mut cur = from;
-    let (source, src_type) = loop {
-        match dag.nodes.get(cur.0)? {
-            Node::Source { field, coltype } => break (field.clone(), *coltype),
+    loop {
+        match &dag.nodes[cur.0] {
             Node::Sink { input, .. } => cur = *input,
-            Node::Op { spec, inputs, vocab_key } => {
-                if inputs.len() != 1 {
-                    return None; // Cartesian et al. → general path
-                }
+            Node::Op { spec, inputs, vocab_key } if inputs.len() == 1 => {
                 rev.push((spec, vocab_key.as_ref()));
                 cur = inputs[0];
             }
+            _ => return (rev, cur.0),
         }
-    };
+    }
+}
 
-    // Forward type-checked lowering.
+/// Forward type-checked lowering of collected unary ops (sink-to-source
+/// order) into fused [`Step`]s; returns the steps plus the chain's output
+/// type. The widening OneHot never lowers here — it changes the dataflow
+/// shape and is handled at the [`SinkPlan`] level by the caller.
+fn lower_steps(
+    rev: &[(&OpSpec, Option<&String>)],
+    src_type: ColType,
+) -> Option<(Vec<Step>, ColType)> {
     let mut ty = src_type;
     let mut steps = Vec::with_capacity(rev.len());
-    for (spec, key) in rev.into_iter().rev() {
+    for &(spec, key) in rev.iter().rev() {
         let step = match (spec, ty) {
             (OpSpec::FillMissing { dense_default, .. }, ColType::F32) => {
                 Step::FillMissingF32(*dense_default)
@@ -578,25 +836,115 @@ fn lower_chain(dag: &Dag, from: NodeId, dest: Dest) -> Option<(String, ColType, 
             (OpSpec::VocabMap { oov }, ColType::I64) => {
                 Step::VocabMap { key: key?.clone(), oov: *oov }
             }
-            // OneHot (widening), type mismatches → general path.
+            // OneHot (widening), type mismatches → not lowerable here.
             _ => return None,
         };
         steps.push(step);
     }
+    Some((steps, ty))
+}
 
-    // Hex sources are only fusable through a leading Hex2Int.
-    if src_type == ColType::Hex8 && !matches!(steps.first(), Some(Step::Hex2Int)) {
+/// Lower a strictly-unary subgraph rooted at `from` into a [`Leaf`];
+/// `None` if the walk hits anything but a source (nested binary op,
+/// OneHot, …) or a step fails to type-check.
+fn lower_leaf(dag: &Dag, from: NodeId) -> Option<(Leaf, ColType)> {
+    let (rev, stop) = walk_unary(dag, from);
+    let Node::Source { field, coltype } = &dag.nodes[stop] else {
         return None;
-    }
-    // Final type must match the destination tensor.
-    let ok = match dest {
-        Dest::Dense(_) | Dest::Label => ty == ColType::F32,
-        Dest::Sparse(_) => ty == ColType::I64,
     };
-    if !ok {
+    let (steps, ty) = lower_steps(&rev, *coltype)?;
+    // Hex sources are only fusable through a leading Hex2Int.
+    if *coltype == ColType::Hex8 && !matches!(steps.first(), Some(Step::Hex2Int)) {
         return None;
     }
-    Some((source, src_type, steps))
+    Some((Leaf { source: field.clone(), src_type: *coltype, steps }, ty))
+}
+
+fn dest_accepts(dest: Dest, ty: ColType) -> bool {
+    match dest {
+        Dest::Dense { w, .. } => ty == ColType::F32 && w == 1,
+        Dest::Label => ty == ColType::F32,
+        Dest::Sparse(_) => ty == ColType::I64,
+    }
+}
+
+/// Does any node reachable from `root` apply a VocabMap? (Fit subgraphs
+/// containing one cannot stream — see [`FusedEngine::fit`].)
+fn subgraph_contains_vocab_map(dag: &Dag, root: usize) -> bool {
+    let mut seen = vec![false; dag.nodes.len()];
+    let mut stack = vec![root];
+    while let Some(i) = stack.pop() {
+        if seen[i] {
+            continue;
+        }
+        seen[i] = true;
+        match &dag.nodes[i] {
+            Node::Op { spec, inputs, .. } => {
+                if matches!(spec, OpSpec::VocabMap { .. }) {
+                    return true;
+                }
+                stack.extend(inputs.iter().map(|n| n.0));
+            }
+            Node::Sink { input, .. } => stack.push(input.0),
+            Node::Source { .. } => {}
+        }
+    }
+    false
+}
+
+/// Lower one sink subgraph into a fused plan, or `None` for the general
+/// per-tile fallback. Fusable shapes: a linear unary chain; the same
+/// chain terminated by a widening OneHot into the sink's dense slot
+/// group; or two linear i64 chains crossed by exactly one Cartesian with
+/// a unary i64 tail.
+fn lower_sink(dag: &Dag, name: &str, from: NodeId, dest: Dest) -> Option<SinkPlan> {
+    // Resolve sink aliasing to the first computational node.
+    let mut cur = from;
+    while let Node::Sink { input, .. } = &dag.nodes[cur.0] {
+        cur = *input;
+    }
+
+    // Terminal widening OneHot: the rest must be a unary i64 leaf filling
+    // the sink's whole slot group. (OneHot over a binary op falls through
+    // to the general path via lower_leaf's walk stopping short.)
+    if let Node::Op { spec: OpSpec::OneHot { k }, inputs, .. } = &dag.nodes[cur.0] {
+        let (leaf, ty) = lower_leaf(dag, inputs[0])?;
+        if ty != ColType::I64 || !matches!(dest, Dest::Dense { w, .. } if w == *k) {
+            return None;
+        }
+        return Some(SinkPlan::FusedOneHot { name: name.to_string(), leaf, k: *k, dest });
+    }
+
+    // Linear unary chain straight from a source.
+    if let Some((leaf, ty)) = lower_leaf(dag, cur) {
+        if !dest_accepts(dest, ty) {
+            return None;
+        }
+        return Some(SinkPlan::Fused { name: name.to_string(), leaf, dest });
+    }
+
+    // Not purely unary: exactly one Cartesian with a unary i64 tail?
+    let (rev, stop) = walk_unary(dag, cur);
+    let Node::Op { spec: OpSpec::Cartesian { m }, inputs, .. } = &dag.nodes[stop] else {
+        return None;
+    };
+    let (left, lt) = lower_leaf(dag, inputs[0])?;
+    let (right, rt) = lower_leaf(dag, inputs[1])?;
+    if lt != ColType::I64 || rt != ColType::I64 {
+        return None;
+    }
+    let (post, ty) = lower_steps(&rev, ColType::I64)?;
+    if !dest_accepts(dest, ty) {
+        return None;
+    }
+    Some(SinkPlan::FusedCartesian {
+        name: name.to_string(),
+        left,
+        right,
+        m: *m,
+        post,
+        dest,
+    })
 }
 
 /// Reference-semantics evaluation of one node over a (tile) batch, memoized
@@ -651,7 +999,7 @@ fn eval_owned(
 }
 
 /// Scatter a general sink's tile column into the packed destination, with
-/// the packer's exact shape/range checks.
+/// the packer's exact shape/range checks (width-aware for dense sinks).
 fn write_general(
     name: &str,
     col: &Column,
@@ -661,16 +1009,17 @@ fn write_general(
     n_sparse: usize,
 ) -> Result<()> {
     match dest {
-        Dest::Dense(ci) => {
+        Dest::Dense { off, w } => {
             let data = col.as_f32()?;
-            if col.width() != 1 {
+            if col.width() != w {
                 return Err(EtlError::Coord(format!(
-                    "dense sink {name} has width {} (expected 1)",
+                    "dense sink {name} has width {} (expected {w})",
                     col.width()
                 )));
             }
-            for (r, &v) in data.iter().enumerate() {
-                job.dense[r * n_dense + ci] = v;
+            for r in 0..job.rows {
+                job.dense[r * n_dense + off..r * n_dense + off + w]
+                    .copy_from_slice(&data[r * w..(r + 1) * w]);
             }
         }
         Dest::Label => {
@@ -742,6 +1091,7 @@ mod tests {
     use super::*;
     use crate::coordinator::packer::pack;
     use crate::dataio::dataset::DatasetSpec;
+    use crate::etl::column::pack_hex;
     use crate::etl::pipelines::{build, PipelineKind};
 
     fn assert_packed_eq(a: &PackedBatch, b: &PackedBatch) {
@@ -791,8 +1141,95 @@ mod tests {
     }
 
     #[test]
-    fn general_fallback_handles_cartesian_and_bucketize() {
-        use crate::etl::column::pack_hex;
+    fn fused_fit_matches_reference_on_all_canned_pipelines() {
+        let mut spec = DatasetSpec::dataset_i(0.002);
+        spec.shards = 1;
+        let shard = spec.shard(0, 9);
+        for kind in PipelineKind::all() {
+            let dag = build(kind, &spec.schema);
+            let want = dag.fit(&shard).unwrap();
+            for tile in [1, 97, shard.rows() + 1] {
+                let engine =
+                    FusedEngine::compile(&dag, ExecConfig { tile_rows: tile, threads: 2 })
+                        .unwrap();
+                let got = engine.fit(&shard).unwrap();
+                assert_eq!(want, got, "{} tile={tile}", kind.label());
+            }
+        }
+    }
+
+    #[test]
+    fn fit_with_vocab_map_in_fit_subgraph_falls_back_to_reference() {
+        // VocabGen "kj" consumes VocabMap("ky") over a DIFFERENT column:
+        // the reference fit resolves every lookup through ky's complete
+        // table, but a tiled walk would see x-values before y has supplied
+        // them (x is y reversed). The engine must detect the shape and
+        // fall back, staying bit-identical; streaming fit refuses it.
+        let mut dag = Dag::new("map-in-fit");
+        let l = dag.source("label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let y = dag.source("y", ColType::I64);
+        let gy = dag.vocab_op(OpSpec::VocabGen { expected: 8 }, y, "ky");
+        dag.sink("sparse0", gy, SinkRole::SparseIndex);
+        let x = dag.source("x", ColType::I64);
+        let mx = dag.vocab_op(OpSpec::VocabMap { oov: None }, x, "ky");
+        let gj = dag.vocab_op(OpSpec::VocabGen { expected: 8 }, mx, "kj");
+        dag.sink("sparse1", gj, SinkRole::SparseIndex);
+
+        let mut batch = Batch::new();
+        batch.push("label", Column::f32(vec![0.0; 4])).unwrap();
+        batch.push("y", Column::i64(vec![10, 20, 30, 40])).unwrap();
+        batch.push("x", Column::i64(vec![40, 30, 20, 10])).unwrap();
+
+        let want = dag.fit(&batch).unwrap();
+        // Single-row tiles would hit the OOV without the fallback.
+        let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows: 1, threads: 1 }).unwrap();
+        assert_eq!(engine.fit(&batch).unwrap(), want);
+        let mut acc = EtlState::default();
+        assert!(engine.fit_accumulate(&batch, &mut acc).is_err());
+    }
+
+    #[test]
+    fn fit_accumulate_streams_across_shards() {
+        // Fitting shard-by-shard through the tiled walk equals fitting the
+        // concatenated stream in one pass (the reference `Dag::fit`).
+        let mut spec = DatasetSpec::dataset_i(0.002);
+        spec.shards = 3;
+        let dag = build(PipelineKind::II, &spec.schema);
+        let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows: 128, threads: 1 }).unwrap();
+        let mut streamed = EtlState::default();
+        let mut concat = Batch::new();
+        for i in 0..spec.shards {
+            let shard = spec.shard(i, 4);
+            engine.fit_accumulate(&shard, &mut streamed).unwrap();
+            if concat.columns.is_empty() {
+                concat = shard;
+            } else {
+                for ((_, dst), (_, src)) in concat.columns.iter_mut().zip(&shard.columns) {
+                    match (dst, src) {
+                        (Column::F32 { data: d, .. }, Column::F32 { data: s, .. }) => {
+                            d.extend_from_slice(s)
+                        }
+                        (Column::Hex8 { data: d }, Column::Hex8 { data: s }) => {
+                            d.extend_from_slice(s)
+                        }
+                        (Column::I64 { data: d, .. }, Column::I64 { data: s, .. }) => {
+                            d.extend_from_slice(s)
+                        }
+                        _ => panic!("shard column types diverged"),
+                    }
+                }
+            }
+        }
+        let whole = dag.fit(&concat).unwrap();
+        assert_eq!(streamed, whole);
+        // And the accumulated state is usable for apply.
+        let packed = engine.execute(&spec.shard(0, 4), &streamed).unwrap();
+        assert!(packed.rows > 0);
+    }
+
+    #[test]
+    fn cartesian_diamond_fuses_and_matches_reference() {
         let mut dag = Dag::new("diamond");
         let l = dag.source("label", ColType::F32);
         dag.sink("label", l, SinkRole::Label);
@@ -819,8 +1256,136 @@ mod tests {
         let state = EtlState::default();
         let want = reference(&dag, &batch, &state);
         let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows: 2, threads: 2 }).unwrap();
-        // Bucketize chain fuses; the Cartesian diamond takes the general path.
-        assert!(engine.fused_sink_count() >= 2);
+        // The Cartesian diamond now fuses as a two-leaf chain.
+        assert_eq!(engine.fused_sink_count(), engine.sink_count());
+        let got = engine.execute(&batch, &state).unwrap();
+        assert_packed_eq(&want, &got);
+    }
+
+    fn cartesian_post_dag() -> Dag {
+        // hex ⊗ hex → Cartesian → SigridHash → Modulus → sparse sink,
+        // plus a vocab-replayed left leaf to exercise stateful leaves.
+        let mut dag = Dag::new("cart-post");
+        let l = dag.source("label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let c0 = dag.source("c0", ColType::Hex8);
+        let c1 = dag.source("c1", ColType::Hex8);
+        let h0 = dag.op(OpSpec::Hex2Int, &[c0]);
+        let m0 = dag.op(OpSpec::Modulus { m: 64 }, &[h0]);
+        let g0 = dag.vocab_op(OpSpec::VocabGen { expected: 8 }, m0, "left");
+        let h1 = dag.op(OpSpec::Hex2Int, &[c1]);
+        let cross = dag.op(OpSpec::Cartesian { m: 100_000 }, &[g0, h1]);
+        let sh = dag.op(OpSpec::SigridHash { m: 4096 }, &[cross]);
+        let md = dag.op(OpSpec::Modulus { m: 1000 }, &[sh]);
+        dag.sink("cross", md, SinkRole::SparseIndex);
+        dag
+    }
+
+    fn cartesian_post_batch(rows: usize) -> Batch {
+        let mut batch = Batch::new();
+        batch
+            .push("label", Column::f32((0..rows).map(|r| (r % 2) as f32).collect()))
+            .unwrap();
+        let toks: Vec<u64> = (0..rows)
+            .map(|r| crate::dataio::synth::pack_hex_u32((r * 2654435761) as u32))
+            .collect();
+        batch.push("c0", Column::hex8(toks.clone())).unwrap();
+        batch.push("c1", Column::hex8(toks.into_iter().rev().collect())).unwrap();
+        batch
+    }
+
+    #[test]
+    fn cartesian_with_post_ops_fuses_across_tile_shapes() {
+        let dag = cartesian_post_dag();
+        let batch = cartesian_post_batch(37);
+        let state = dag.fit(&batch).unwrap();
+        let want = reference(&dag, &batch, &state);
+        // Single-row tiles, odd tiles, one big tile.
+        for (tile, threads) in [(1, 1), (1, 3), (5, 2), (64, 1)] {
+            let engine =
+                FusedEngine::compile(&dag, ExecConfig { tile_rows: tile, threads }).unwrap();
+            assert_eq!(engine.fused_sink_count(), engine.sink_count());
+            let got = engine.execute(&batch, &state).unwrap();
+            assert_packed_eq(&want, &got);
+        }
+        // Zero-row input (columns present, empty tiles): both sides agree.
+        let empty = cartesian_post_batch(0);
+        let engine = FusedEngine::compile(&dag, ExecConfig::default()).unwrap();
+        let got = engine.execute(&empty, &state).unwrap();
+        assert_eq!(got.rows, 0);
+        assert_packed_eq(&reference(&dag, &empty, &state), &got);
+    }
+
+    #[test]
+    fn onehot_fused_chain_matches_reference() {
+        // x → Bucketize → OneHot(4) widening into the dense tensor, next
+        // to an ordinary width-1 dense chain (interleaving check).
+        let mut dag = Dag::new("onehot");
+        let l = dag.source("label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let x = dag.source("x", ColType::F32);
+        let bk = dag.op(OpSpec::Bucketize { borders: vec![0.0, 1.0, 5.0] }, &[x]);
+        let oh = dag.op(OpSpec::OneHot { k: 4 }, &[bk]);
+        dag.sink("onehot", oh, SinkRole::Dense);
+        let y = dag.source("y", ColType::F32);
+        let cl = dag.op(OpSpec::Clamp { lo: 0.0, hi: 1.0 }, &[y]);
+        dag.sink("dense1", cl, SinkRole::Dense);
+
+        let mut batch = Batch::new();
+        batch
+            .push("label", Column::f32(vec![1.0, 0.0, 1.0, 0.0, 1.0]))
+            .unwrap();
+        batch
+            .push("x", Column::f32(vec![-1.0, 0.5, 3.0, 9.0, f32::NAN]))
+            .unwrap();
+        batch
+            .push("y", Column::f32(vec![0.1, 0.2, 0.3, 0.4, 2.5]))
+            .unwrap();
+
+        let state = EtlState::default();
+        let want = reference(&dag, &batch, &state);
+        assert_eq!(want.n_dense, 5); // 4 OneHot slots + 1 plain dense
+        // Single-row tiles, a tile split mid-batch, and one big tile.
+        for (tile, threads) in [(1, 1), (2, 2), (64, 1)] {
+            let engine =
+                FusedEngine::compile(&dag, ExecConfig { tile_rows: tile, threads }).unwrap();
+            assert_eq!(engine.fused_sink_count(), engine.sink_count());
+            let got = engine.execute(&batch, &state).unwrap();
+            assert_packed_eq(&want, &got);
+        }
+        // Empty-tile edge: zero rows with the right columns.
+        let mut empty = Batch::new();
+        empty.push("label", Column::f32(vec![])).unwrap();
+        empty.push("x", Column::f32(vec![])).unwrap();
+        empty.push("y", Column::f32(vec![])).unwrap();
+        let engine = FusedEngine::compile(&dag, ExecConfig::default()).unwrap();
+        let got = engine.execute(&empty, &state).unwrap();
+        assert_eq!((got.rows, got.n_dense), (0, 5));
+    }
+
+    #[test]
+    fn nested_cartesian_takes_general_path() {
+        // (a ⊗ b) ⊗ c is not a fusable shape — general fallback, still
+        // bit-identical to the reference executor.
+        let mut dag = Dag::new("nested");
+        let l = dag.source("label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let a = dag.source("a", ColType::I64);
+        let b = dag.source("b", ColType::I64);
+        let c = dag.source("c", ColType::I64);
+        let x = dag.op(OpSpec::Cartesian { m: 1000 }, &[a, b]);
+        let y = dag.op(OpSpec::Cartesian { m: 1000 }, &[x, c]);
+        dag.sink("cross", y, SinkRole::SparseIndex);
+
+        let mut batch = Batch::new();
+        batch.push("label", Column::f32(vec![0.0, 1.0, 1.0])).unwrap();
+        batch.push("a", Column::i64(vec![1, 2, 3])).unwrap();
+        batch.push("b", Column::i64(vec![4, 5, 6])).unwrap();
+        batch.push("c", Column::i64(vec![7, 8, 9])).unwrap();
+
+        let state = EtlState::default();
+        let want = reference(&dag, &batch, &state);
+        let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows: 2, threads: 2 }).unwrap();
         assert!(engine.fused_sink_count() < engine.sink_count());
         let got = engine.execute(&batch, &state).unwrap();
         assert_packed_eq(&want, &got);

@@ -13,7 +13,12 @@ use crate::etl::ops::kernels::mix64;
 const EMPTY: i64 = i64::MIN + 1;
 
 /// Insertion-ordered `i64 → u32` vocabulary table.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares the full structure (capacity, probe layout and
+/// insertion order), so two tables are equal iff they were built by the
+/// same insertion sequence from the same expected capacity — exactly the
+/// contract the fused-fit differential tests pin.
+#[derive(Debug, Clone, PartialEq)]
 pub struct VocabTable {
     keys: Vec<i64>,
     vals: Vec<u32>,

@@ -78,9 +78,17 @@ impl Pipeline {
 
     /// Fit phase (§3.1): stream a sample through the stateful operators to
     /// build vocabulary tables. Returns the simulated fit time.
+    ///
+    /// When the fused engine compiled, the fit runs through its tiled walk
+    /// (VocabGen insertion fused into the stream — no separate reference-
+    /// executor pass); `Dag::fit` remains the fallback and the semantic
+    /// reference, pinned bit-identical by `prop_invariants`.
     pub fn fit(&mut self, sample: &Batch) -> Result<ShardTiming> {
         let t0 = std::time::Instant::now();
-        self.state = self.plan.dag.fit(sample)?;
+        self.state = match &self.engine {
+            Some(engine) => engine.fit(sample)?,
+            None => self.plan.dag.fit(sample)?,
+        };
         self.fitted = true;
         // The fit pass streams only the sparse columns (§3.1 fit/apply).
         let profile = StreamProfile::from_batch(sample);
@@ -249,6 +257,16 @@ mod tests {
         let rate = bytes as f64 / secs;
         let line = p.plan.line_rate();
         assert!((rate - line).abs() / line < 0.05, "rate={rate} line={line}");
+    }
+
+    #[test]
+    fn fused_fit_in_pipeline_matches_reference_fit() {
+        let (mut p, spec) = deployed(PipelineKind::III);
+        let shard = spec.shard(0, 42);
+        assert!(p.engine().is_some());
+        p.fit(&shard).unwrap();
+        // The tiled fused fit produced exactly the reference tables.
+        assert_eq!(p.state, p.plan.dag.fit(&shard).unwrap());
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub mod util;
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::dataio::dataset::{DatasetKind, DatasetSpec, ShardSource};
+    pub use crate::dataio::ingest::{AsyncIngest, BatchPool, DeliveryPolicy, IngestConfig, ShardInput};
     pub use crate::error::{EtlError, Result};
     pub use crate::etl::column::{Batch, ColType, Column};
     pub use crate::etl::dag::{Dag, EtlState, SinkRole};

@@ -264,11 +264,19 @@ fn prop_fused_engine_bit_identical_to_reference() {
                 };
                 node = dag.op(op, &[node]);
             }
-            if g.usize(4) == 0 {
-                let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
-                dag.sink(format!("bucket{i}"), b, SinkRole::SparseIndex);
-            } else {
-                dag.sink(format!("dense{i}"), node, SinkRole::Dense);
+            match g.usize(8) {
+                0 | 1 => {
+                    let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
+                    dag.sink(format!("bucket{i}"), b, SinkRole::SparseIndex);
+                }
+                2 => {
+                    // Widening OneHot into the dense tensor (multi-column
+                    // fused chain support).
+                    let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
+                    let oh = dag.op(OpSpec::OneHot { k: 4 }, &[b]);
+                    dag.sink(format!("onehot{i}"), oh, SinkRole::Dense);
+                }
+                _ => dag.sink(format!("dense{i}"), node, SinkRole::Dense),
             }
         }
 
@@ -322,6 +330,111 @@ fn prop_fused_engine_bit_identical_to_reference() {
             packed_bits_equal(&reference, &fused).map_err(|e| {
                 format!("tile={tile_rows} threads={threads}: {e}")
             })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fused_fit_bit_identical_to_reference() {
+    // Differential test of the fused tiled *fit* (`FusedEngine::fit`)
+    // against the reference `Dag::fit`: random vocab topologies — plain
+    // chains, VocabGen chained through another VocabGen (replay through an
+    // in-progress table), Cartesian-fed VocabGen (the general per-tile fit
+    // path) — with small expected capacities (mid-stream growth) and
+    // OOV-shaped inputs, across tile sizes. Tables must match exactly,
+    // including capacity/probe structure (`VocabTable: PartialEq`).
+    check("fused_fit_vs_reference", 30, |g| {
+        let ns = 1 + g.usize(3);
+        let schema = Schema::tabular("t", 1, ns, 64);
+        let mut dag = Dag::new("prop-fit");
+        let l = dag.source("t_label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let d = dag.source("t_i0", ColType::F32);
+        dag.sink("dense0", d, SinkRole::Dense);
+
+        let mut prev: Option<NodeId> = None;
+        let mut vkey = 0usize;
+        for i in 0..ns {
+            let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+            let h = dag.op(OpSpec::Hex2Int, &[s]);
+            let m = dag.op(OpSpec::Modulus { m: 1 + g.u64(1 << 12) as i64 }, &[h]);
+            // Tiny expected capacities force growth during the walk.
+            let expected = 1 + g.usize(24);
+            let node = match g.usize(4) {
+                // VocabGen chained through another VocabGen: the second
+                // table's input replays the first mid-fit.
+                0 => {
+                    let a = dag.vocab_op(
+                        OpSpec::VocabGen { expected },
+                        m,
+                        format!("v{vkey}"),
+                    );
+                    vkey += 1;
+                    let b = dag.vocab_op(
+                        OpSpec::VocabGen { expected: 1 + g.usize(8) },
+                        a,
+                        format!("v{vkey}"),
+                    );
+                    vkey += 1;
+                    b
+                }
+                // Cartesian-fed VocabGen → general per-tile fit path.
+                1 if prev.is_some() => {
+                    let c = dag.op(
+                        OpSpec::Cartesian { m: 10_000 },
+                        &[prev.expect("checked"), m],
+                    );
+                    let v = dag.vocab_op(
+                        OpSpec::VocabGen { expected },
+                        c,
+                        format!("v{vkey}"),
+                    );
+                    vkey += 1;
+                    v
+                }
+                _ => {
+                    let v = dag.vocab_op(
+                        OpSpec::VocabGen { expected },
+                        m,
+                        format!("v{vkey}"),
+                    );
+                    vkey += 1;
+                    v
+                }
+            };
+            prev = Some(m);
+            dag.sink(format!("sparse{i}"), node, SinkRole::SparseIndex);
+        }
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+
+        let rows = 8 + g.usize(500);
+        let batch = piperec::dataio::synth::generate(
+            &schema,
+            rows,
+            g.u64(1 << 32),
+            &piperec::dataio::synth::SynthConfig::default(),
+        );
+        let want = dag.fit(&batch).map_err(|e| e.to_string())?;
+        for tile_rows in [1 + g.usize(7), 8 + g.usize(256), rows + 3] {
+            let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows, threads: 1 })
+                .map_err(|e| e.to_string())?;
+            let got = engine.fit(&batch).map_err(|e| e.to_string())?;
+            if got != want {
+                let keys: Vec<&String> = want.vocabs.keys().collect();
+                return Err(format!(
+                    "fit state differs at tile={tile_rows} (keys {keys:?})"
+                ));
+            }
+            // The fitted state must drive the fused apply identically too.
+            let ref_packed = {
+                let out = dag.apply(&batch, &want).map_err(|e| e.to_string())?;
+                let layout = PackLayout::of(&dag).map_err(|e| e.to_string())?;
+                pack(&out, &layout).map_err(|e| e.to_string())?
+            };
+            let fused_packed = engine.execute(&batch, &got).map_err(|e| e.to_string())?;
+            packed_bits_equal(&ref_packed, &fused_packed)
+                .map_err(|e| format!("apply after fused fit, tile={tile_rows}: {e}"))?;
         }
         Ok(())
     });

@@ -1,0 +1,262 @@
+//! Property tests for the async streaming ingest pipeline
+//! (`dataio::ingest`): across random pipelines × worker counts × channel
+//! depths × delivery policies, the overlapped path must deliver exactly
+//! the shards the synchronous producer would have produced, and in
+//! in-order mode the packed output must be batch-for-batch bit-identical
+//! (extending `prop_fused_engine_bit_identical_to_reference` from the
+//! engine to the whole producer pipeline).
+//!
+//! CI reruns this suite under `--test-threads 1` and `--test-threads 8`
+//! so scheduling nondeterminism between ingest workers is exercised.
+
+use piperec::coordinator::packer::PackedBatch;
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{AsyncIngest, DeliveryPolicy, IngestConfig, ShardInput};
+use piperec::dataio::synth::SynthConfig;
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, NodeId, SinkRole};
+use piperec::etl::exec::{ExecConfig, FusedEngine};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::util::prop::{check, Gen};
+
+/// Bitwise comparison of two packed batches (dense may legitimately carry
+/// NaN when a random chain omits FillMissing — compare f32 by bits).
+fn packed_bits_equal(a: &PackedBatch, b: &PackedBatch) -> Result<(), String> {
+    if (a.rows, a.n_dense, a.n_sparse) != (b.rows, b.n_dense, b.n_sparse) {
+        return Err(format!(
+            "shape mismatch: ({}, {}, {}) vs ({}, {}, {})",
+            a.rows, a.n_dense, a.n_sparse, b.rows, b.n_dense, b.n_sparse
+        ));
+    }
+    if a.sparse != b.sparse {
+        return Err("sparse payload differs".into());
+    }
+    if a.dense.len() != b.dense.len() || a.labels.len() != b.labels.len() {
+        return Err("payload length differs".into());
+    }
+    for (i, (x, y)) in a.dense.iter().zip(&b.dense).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("dense[{i}] differs: {x} vs {y}"));
+        }
+    }
+    for (i, (x, y)) in a.labels.iter().zip(&b.labels).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("labels[{i}] differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// A random mixed pipeline over `Schema::tabular("t", nd, ns, _)`: dense
+/// chains (sometimes ending in Bucketize or OneHot), sparse hex chains
+/// with optional VocabGen / SigridHash, occasionally Cartesian-crossed
+/// (the same generator family as prop_invariants).
+fn random_dag(g: &mut Gen, nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-stream");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+
+    for i in 0..nd {
+        let mut node = dag.source(format!("t_i{i}"), ColType::F32);
+        for _ in 0..g.usize(3) {
+            let op = match g.usize(3) {
+                0 => OpSpec::FillMissing {
+                    dense_default: g.f32_range(-1.0, 1.0),
+                    sparse_default: 0,
+                },
+                1 => OpSpec::Clamp { lo: 0.0, hi: g.f32_range(1.0, 1e6) },
+                _ => OpSpec::Logarithm,
+            };
+            node = dag.op(op, &[node]);
+        }
+        match g.usize(5) {
+            0 => {
+                let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
+                dag.sink(format!("bucket{i}"), b, SinkRole::SparseIndex);
+            }
+            1 => {
+                // Widening OneHot into the dense tensor.
+                let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
+                let oh = dag.op(OpSpec::OneHot { k: 4 }, &[b]);
+                dag.sink(format!("onehot{i}"), oh, SinkRole::Dense);
+            }
+            _ => dag.sink(format!("dense{i}"), node, SinkRole::Dense),
+        }
+    }
+
+    let mut prev: Option<NodeId> = None;
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 + g.u64(1 << 20) as i64 }, &[h]);
+        let node = match g.usize(3) {
+            0 => dag.vocab_op(OpSpec::VocabGen { expected: 32 }, m, format!("v{i}")),
+            1 => dag.op(OpSpec::SigridHash { m: 4096 }, &[m]),
+            _ => m,
+        };
+        let node = match prev {
+            Some(p) if g.bool() => dag.op(OpSpec::Cartesian { m: 10_000 }, &[p, node]),
+            _ => node,
+        };
+        prev = Some(m);
+        dag.sink(format!("sparse{i}"), node, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn custom_spec(schema: Schema, rows: usize, shards: usize) -> DatasetSpec {
+    DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-stream",
+        schema,
+        rows,
+        paper_rows: rows as u64,
+        shards,
+        synth: SynthConfig::default(),
+        ssd_bound: false,
+    }
+}
+
+#[test]
+fn prop_streaming_ingest_bit_identical_to_sync_producer() {
+    // Worker counts {1, 2, 8} × channel depths {1, 4} × both delivery
+    // policies are exercised for EVERY random case (they are the
+    // acceptance matrix, not a sampled dimension).
+    check("streaming_vs_sync", 10, |g| {
+        let nd = 1 + g.usize(2);
+        let ns = 1 + g.usize(2);
+        let schema = Schema::tabular("t", nd, ns, 64);
+        let dag = random_dag(g, nd, ns);
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+
+        let rows = 64 + g.usize(400);
+        let shards = 1 + g.usize(6);
+        let spec = custom_spec(schema, rows, shards);
+        let seed = g.u64(1 << 32);
+        let engine = FusedEngine::compile(
+            &dag,
+            ExecConfig { tile_rows: 1 + g.usize(256), threads: 1 + g.usize(3) },
+        )
+        .map_err(|e| e.to_string())?;
+        // Fit on shard 0 (tiled fused fit); later shards exercise OOV.
+        let state = engine.fit(&spec.shard(0, seed)).map_err(|e| e.to_string())?;
+
+        // Synchronous reference: the producer loop the async path replaces.
+        let mut sync: Vec<(usize, PackedBatch)> = Vec::new();
+        for i in 0..spec.shards {
+            let shard = spec.shard(i, seed);
+            if shard.rows() == 0 {
+                continue;
+            }
+            sync.push((i, engine.execute(&shard, &state).map_err(|e| e.to_string())?));
+        }
+
+        for &workers in &[1usize, 2, 8] {
+            for &depth in &[1usize, 4] {
+                for &policy in &[DeliveryPolicy::InOrder, DeliveryPolicy::FreshestFirst] {
+                    let label = format!("workers={workers} depth={depth} policy={policy:?}");
+                    let cfg = IngestConfig { workers, channel_depth: depth, policy };
+                    let mut ingest =
+                        AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed }, &cfg);
+                    let mut got: Vec<(usize, PackedBatch)> = Vec::new();
+                    loop {
+                        let item = ingest.next().map_err(|e| e.to_string())?;
+                        let Some((i, shard)) = item else { break };
+                        got.push((
+                            i,
+                            engine.execute(&shard, &state).map_err(|e| e.to_string())?,
+                        ));
+                        ingest.recycle(shard);
+                    }
+                    if policy == DeliveryPolicy::FreshestFirst {
+                        // Freshness reorders delivery but never loses,
+                        // duplicates, or corrupts a shard.
+                        got.sort_by_key(|(i, _)| *i);
+                    }
+                    if got.len() != sync.len() {
+                        return Err(format!(
+                            "{label}: delivered {} batches, sync produced {}",
+                            got.len(),
+                            sync.len()
+                        ));
+                    }
+                    for ((gi, gp), (si, sp)) in got.iter().zip(&sync) {
+                        if gi != si {
+                            return Err(format!("{label}: shard {gi} where {si} expected"));
+                        }
+                        packed_bits_equal(sp, gp).map_err(|e| format!("{label}: shard {gi}: {e}"))?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_streaming_fit_on_ingested_shards_matches_sync_fit() {
+    // Accumulated fused fit over async-ingested shards (in-order) equals
+    // the same accumulation over the synchronous shard sequence.
+    check("streaming_fit", 10, |g| {
+        let ns = 1 + g.usize(3);
+        let schema = Schema::tabular("t", 1, ns, 48);
+        let mut dag = Dag::new("fit-stream");
+        let l = dag.source("t_label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let d = dag.source("t_i0", ColType::F32);
+        dag.sink("dense0", d, SinkRole::Dense);
+        for i in 0..ns {
+            let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+            let h = dag.op(OpSpec::Hex2Int, &[s]);
+            let m = dag.op(OpSpec::Modulus { m: 1 + g.u64(1 << 16) as i64 }, &[h]);
+            // Small expected capacities force mid-stream table growth.
+            let v = dag.vocab_op(
+                OpSpec::VocabGen { expected: 1 + g.usize(16) },
+                m,
+                format!("v{i}"),
+            );
+            dag.sink(format!("sparse{i}"), v, SinkRole::SparseIndex);
+        }
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+
+        let spec = custom_spec(schema, 64 + g.usize(300), 1 + g.usize(5));
+        let seed = g.u64(1 << 32);
+        let engine = FusedEngine::compile(
+            &dag,
+            ExecConfig { tile_rows: 1 + g.usize(128), threads: 1 },
+        )
+        .map_err(|e| e.to_string())?;
+
+        let mut sync_state = piperec::etl::dag::EtlState::default();
+        for i in 0..spec.shards {
+            let shard = spec.shard(i, seed);
+            if shard.rows() == 0 {
+                continue;
+            }
+            engine
+                .fit_accumulate(&shard, &mut sync_state)
+                .map_err(|e| e.to_string())?;
+        }
+
+        let cfg = IngestConfig {
+            workers: 1 + g.usize(4),
+            channel_depth: 1 + g.usize(3),
+            policy: DeliveryPolicy::InOrder,
+        };
+        let mut ingest = AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed }, &cfg);
+        let mut streamed = piperec::etl::dag::EtlState::default();
+        loop {
+            let item = ingest.next().map_err(|e| e.to_string())?;
+            let Some((_, shard)) = item else { break };
+            engine
+                .fit_accumulate(&shard, &mut streamed)
+                .map_err(|e| e.to_string())?;
+            ingest.recycle(shard);
+        }
+        if streamed != sync_state {
+            return Err("streamed fit state differs from synchronous fit".into());
+        }
+        Ok(())
+    });
+}

@@ -15,4 +15,4 @@ pub use scheduler::{cpu_gpu_config, piperec_config, simulate_overlap, OverlapCon
 pub use online::{classify_psi, DriftDetector, DriftVerdict, FreshnessTracker, OnlineVocab};
 pub use sharding::{provision, route, ShardingPlan};
 pub use staging::{StagingConsumer, StagingQueue, StagingSim};
-pub use train_loop::{run as train, TrainConfig, TrainReport};
+pub use train_loop::{run as train, DataPath, TrainConfig, TrainReport};

@@ -12,7 +12,7 @@ use crate::etl::dag::{Dag, Node, SinkRole};
 use crate::etl::ops::OpSpec;
 
 /// A training-ready packed batch (the unit streamed over P2P DMA).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct PackedBatch {
     pub rows: usize,
     pub n_dense: usize,

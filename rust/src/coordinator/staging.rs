@@ -81,18 +81,23 @@ impl StagingSim {
 /// Live bounded staging queue: capacity = number of staging buffers.
 /// `try_push` mirrors the credit semantics (non-blocking producer side for
 /// backpressure accounting); `push` blocks like a stalled DMA engine.
-pub struct StagingQueue {
-    tx: SyncSender<PackedBatch>,
+///
+/// Generic over the staged unit: the heap channel path stages owned
+/// [`PackedBatch`]es (the default), the zero-copy path stages
+/// [`crate::devmem::StagingSlot`]s whose payload the trainer consumes in
+/// place.
+pub struct StagingQueue<T = PackedBatch> {
+    tx: SyncSender<T>,
     stalls: Arc<AtomicU64>,
 }
 
 /// Consumer half of the staging queue.
-pub struct StagingConsumer {
-    rx: Receiver<PackedBatch>,
+pub struct StagingConsumer<T = PackedBatch> {
+    rx: Receiver<T>,
 }
 
-impl StagingQueue {
-    pub fn with_buffers(buffers: usize) -> (StagingQueue, StagingConsumer) {
+impl<T> StagingQueue<T> {
+    pub fn with_buffers(buffers: usize) -> (StagingQueue<T>, StagingConsumer<T>) {
         let (tx, rx) = sync_channel(buffers.max(1));
         (
             StagingQueue { tx, stalls: Arc::new(AtomicU64::new(0)) },
@@ -113,7 +118,7 @@ impl StagingQueue {
     }
 
     /// Non-blocking push; returns the batch back when all buffers are full.
-    pub fn try_push(&self, batch: PackedBatch) -> Option<PackedBatch> {
+    pub fn try_push(&self, batch: T) -> Option<T> {
         match self.tx.try_send(batch) {
             Ok(()) => None,
             Err(TrySendError::Full(b)) => {
@@ -125,7 +130,7 @@ impl StagingQueue {
     }
 
     /// Blocking push (the DMA engine waits for a credit).
-    pub fn push(&self, batch: PackedBatch) -> bool {
+    pub fn push(&self, batch: T) -> bool {
         if let Some(b) = self.try_push(batch) {
             return self.tx.send(b).is_ok();
         }
@@ -133,9 +138,9 @@ impl StagingQueue {
     }
 }
 
-impl StagingConsumer {
+impl<T> StagingConsumer<T> {
     /// Blocking pop; `None` once the producer hung up and the queue drained.
-    pub fn pop(&self) -> Option<PackedBatch> {
+    pub fn pop(&self) -> Option<T> {
         self.rx.recv().ok()
     }
 }

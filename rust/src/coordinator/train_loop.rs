@@ -1,27 +1,55 @@
 //! The live training loop: ETL (simulated FPGA data plane, real
-//! functional transforms) feeding the PJRT trainer through the credit-
-//! gated staging queue — the end-to-end composition of all three layers.
+//! functional transforms) feeding the trainer through credit-gated
+//! device staging — the end-to-end composition of all layers.
 //!
 //! The producer side plays the FPGA role (§3.5) as a fully overlapped
 //! streaming dataflow: N async ingest workers generate shards into
 //! pool-recycled buffers ([`crate::dataio::ingest`]), the fused engine
-//! transforms+packs each shard straight into a recycled trainer-layout
-//! buffer, and the staging queue hands it to the consumer — so shard I/O,
-//! fused apply+pack, and trainer steps all overlap. The consumer is the
-//! GPU stand-in: pop, train, release the buffer. GPU utilization is
-//! measured as train-busy time over wall time per window, exactly as
-//! Fig. 14 reports. Ingest-wait and fused-exec time are attributed
+//! transforms+packs each shard, and the staging queue hands it to the
+//! consumer — so shard I/O, fused apply+pack, P2P transfer and trainer
+//! steps all overlap. The consumer is the GPU stand-in: pop, train,
+//! return the credit. GPU utilization is measured as train-busy time over
+//! wall time per window, exactly as Fig. 14 reports.
+//!
+//! Two data paths share the protocol ([`DataPath`]):
+//!
+//! * [`DataPath::Arena`] (default) — the **zero-copy** path of
+//!   [`crate::devmem`]: the fused engine packs each shard once, directly
+//!   into a [`crate::devmem::StagingSlot`] of the pinned device arena;
+//!   the [`crate::devmem::TransferEngine`] accounts the chunked P2P DMA
+//!   that makes the slot resident; the trainer steps **in place** on
+//!   [`crate::devmem::DeviceBatchView`]s and releases the slot's credit.
+//!   Zero per-shard `PackedBatch` heap allocations in the steady state,
+//!   zero host-side copies between pack and training.
+//! * [`DataPath::Channel`] — the legacy heap path: pool-recycled owned
+//!   [`crate::coordinator::packer::PackedBatch`]es travel the staging
+//!   queue by value (one logical host copy per packed byte). Kept as the
+//!   differential baseline (`rust/tests/prop_devmem.rs` pins the two
+//!   paths bit-identical) and for the `zero-copy` hotpath bench section.
+//!
+//! Ingest-wait, fused-exec and transfer-wait time are attributed
 //! separately in the report so stage imbalance is visible (ROADMAP:
 //! pipeline-stage attribution).
 
 use crate::coordinator::staging::StagingQueue;
 use crate::dataio::dataset::DatasetSpec;
 use crate::dataio::ingest::{AsyncIngest, IngestConfig, ShardInput};
+use crate::devmem::{ArenaConfig, DeviceArena, StagingSlot, TransferConfig, TransferEngine};
 use crate::error::{EtlError, Result};
 use crate::etl::exec::BufferPool;
 use crate::fpga::Pipeline;
 use crate::metrics::TimeSeries;
 use crate::runtime::Trainer;
+
+/// Which staging dataflow the loop runs (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataPath {
+    /// Zero-copy device staging: pack into pinned arena slots, simulated
+    /// P2P DMA, in-place training, credit return.
+    Arena,
+    /// Heap `PackedBatch`es over the staging channel (legacy baseline).
+    Channel,
+}
 
 /// Configuration of a live training run.
 #[derive(Debug, Clone)]
@@ -39,6 +67,12 @@ pub struct TrainConfig {
     /// synchronous producer's batch sequence bit-for-bit while overlapping
     /// shard generation with fused execution.
     pub ingest: IngestConfig,
+    /// Staging dataflow (default: the zero-copy arena path).
+    pub path: DataPath,
+    /// Device-arena sizing for [`DataPath::Arena`].
+    pub arena: ArenaConfig,
+    /// P2P DMA engine knobs for [`DataPath::Arena`].
+    pub transfer: TransferConfig,
 }
 
 impl Default for TrainConfig {
@@ -49,6 +83,9 @@ impl Default for TrainConfig {
             staging_buffers: 2,
             seed: 42,
             ingest: IngestConfig::default(),
+            path: DataPath::Arena,
+            arena: ArenaConfig::default(),
+            transfer: TransferConfig::default(),
         }
     }
 }
@@ -75,10 +112,28 @@ pub struct TrainReport {
     /// Host seconds the producer spent blocked waiting on shard ingest
     /// (I/O-wait attribution, disjoint from `etl_host_s`).
     pub ingest_wait_s: f64,
+    /// Host seconds the producer spent blocked on device staging —
+    /// waiting for a free arena slot (credit) or for staging-queue space;
+    /// disjoint from `etl_host_s` and `ingest_wait_s`. 0 on the channel
+    /// path (its queue blocking folds into `producer_stalls` only).
+    pub transfer_wait_s: f64,
     /// Shards transformed by the producer.
     pub shards: u64,
     /// Simulated FPGA ETL seconds for the same bytes (the paper's clock).
     pub etl_sim_s: f64,
+    /// Simulated seconds the P2P DMA engine spent moving packed bytes
+    /// (arena path; 0 on the channel path).
+    pub dma_sim_s: f64,
+    /// Packed bytes staged toward the trainer.
+    pub staged_bytes: u64,
+    /// Host-side bytes logically copied between pack and training: the
+    /// channel path pays one copy per packed byte (batches travel by
+    /// value); the arena path pins this to 0 — the zero-copy acceptance
+    /// counter.
+    pub host_copy_bytes: u64,
+    /// Per-shard slot-buffer allocations after each slot's first pack
+    /// (arena path; must be 0 in the steady state).
+    pub steady_allocs: u64,
 }
 
 impl TrainReport {
@@ -102,17 +157,32 @@ pub fn run(
     if !pipeline.is_fitted() && pipeline.plan.dag.stateful_count() > 0 {
         return Err(EtlError::Coord("pipeline must be fitted before training".into()));
     }
+    match cfg.path {
+        DataPath::Arena => run_arena(pipeline, spec, trainer, cfg),
+        DataPath::Channel => run_channel(pipeline, spec, trainer, cfg),
+    }
+}
+
+/// Zero-copy path: ingest → fused pack into arena slots → simulated P2P
+/// DMA → in-place training → credit return.
+fn run_arena(
+    pipeline: &Pipeline,
+    spec: &DatasetSpec,
+    trainer: &mut Trainer,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
     let step_rows = trainer.meta.batch;
-    let (queue, consumer) = StagingQueue::with_buffers(cfg.staging_buffers);
+    let (queue, consumer) = StagingQueue::<StagingSlot>::with_buffers(cfg.staging_buffers);
     let stall_counter = queue.stall_counter();
-    // Packed-batch buffers cycle producer → staging → trainer → pool, so
-    // the steady state allocates nothing per shard.
-    let pool = BufferPool::new();
+    let arena = DeviceArena::new(cfg.arena.clone());
 
     let t0 = std::time::Instant::now();
     let mut etl_host_s = 0.0f64;
     let mut etl_sim_s = 0.0f64;
     let mut ingest_wait_s = 0.0f64;
+    let mut transfer_wait_s = 0.0f64;
+    let mut dma_sim_s = 0.0f64;
+    let mut staged_bytes = 0u64;
     let mut shards_done = 0u64;
     let mut producer_stalls = 0u64;
     let mut losses = Vec::new();
@@ -120,15 +190,183 @@ pub fn run(
     let mut util_trace = TimeSeries::default();
 
     std::thread::scope(|scope| -> Result<()> {
-        // Producer: the FPGA data plane. Async ingest workers stream
-        // shards into recycled buffers while the fused engine transforms
-        // each one straight into a recycled trainer-layout buffer; the
-        // queue is moved in so dropping it at the end closes the channel
-        // and wakes the consumer.
+        // Producer: the FPGA data plane. Each shard is packed once,
+        // directly into an acquired arena slot, then the DMA engine
+        // schedules its chunked P2P transfer and the slot rides the queue
+        // to the consumer. The queue is moved in so dropping it at the end
+        // closes the channel and wakes the consumer.
+        let arena = &arena;
+        let ingest_cfg = cfg.ingest.clone();
+        let ingest_spec = spec.clone();
+        let transfer_cfg = cfg.transfer.clone();
+        let producer = scope.spawn(move || -> Result<(f64, f64, f64, f64, f64, u64, u64)> {
+            let queue = queue;
+            let mut ingest = AsyncIngest::spawn(
+                ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
+                &ingest_cfg,
+            );
+            let mut dma = TransferEngine::new(transfer_cfg);
+            let mut host_s = 0.0;
+            let mut sim_s = 0.0;
+            let mut wait_s = 0.0;
+            let mut shards = 0u64;
+            while let Some((_, shard)) = ingest.next()? {
+                // Credit wait: a free slot is the DMA engine's permission
+                // to start (§3 backpressure).
+                let t_acq = std::time::Instant::now();
+                let Some(mut slot) = arena.acquire() else {
+                    // Consumer closed the arena (reached max_steps).
+                    break;
+                };
+                wait_s += t_acq.elapsed().as_secs_f64();
+
+                let timing = pipeline.process_into_slot(&shard, &mut slot)?;
+                ingest.recycle(shard);
+                host_s += timing.host_s;
+                sim_s += timing.elapsed_s;
+                shards += 1;
+
+                // Schedule the slot's chunked P2P write at the current
+                // simulated ETL clock; it overlaps the next shard's exec.
+                dma.submit(sim_s, slot.packed_bytes());
+
+                let t_push = std::time::Instant::now();
+                let pushed = queue.push(slot);
+                wait_s += t_push.elapsed().as_secs_f64();
+                if !pushed {
+                    // Consumer hung up (reached max_steps).
+                    break;
+                }
+            }
+            Ok((
+                host_s,
+                sim_s,
+                ingest.wait_seconds(),
+                wait_s,
+                dma.busy_s(),
+                dma.total_bytes(),
+                shards,
+            ))
+        });
+
+        // Consumer: the trainer steps in place on device-addressed views
+        // of each staged slot, then returns the slot's credit. Errors are
+        // collected (not early-returned) so shutdown below always runs —
+        // a producer blocked on a credit is only woken by `arena.close()`.
+        let mut consume = || -> Result<()> {
+            let mut window_busy = 0.0f64;
+            let mut window_start = 0.0f64;
+            const WINDOW_STEPS: u64 = 20;
+            'consume: while trainer.steps < cfg.max_steps as u64 {
+                let Some(slot) = consumer.pop() else { break };
+                for view in slot.chunk_views(step_rows) {
+                    if trainer.steps >= cfg.max_steps as u64 {
+                        break;
+                    }
+                    let ts = std::time::Instant::now();
+                    trainer.step_device(&view)?;
+                    let dt = ts.elapsed().as_secs_f64();
+                    train_busy_s += dt;
+                    window_busy += dt;
+                    if trainer.steps % (cfg.loss_every as u64).max(1) == 0 {
+                        losses.push((trainer.steps, trainer.loss()?));
+                    }
+                    if trainer.steps % WINDOW_STEPS == 0 {
+                        let now = t0.elapsed().as_secs_f64();
+                        let span = (now - window_start).max(1e-9);
+                        util_trace.push(now, (window_busy / span).min(1.0));
+                        window_busy = 0.0;
+                        window_start = now;
+                    }
+                }
+                // Credit return: the slot is reclaimable (epoch bump).
+                arena.release(slot)?;
+                if trainer.steps >= cfg.max_steps as u64 {
+                    break 'consume;
+                }
+            }
+            Ok(())
+        };
+        let consumed = consume();
+        // Shutdown: close the arena first so a producer blocked on a
+        // credit wakes, then drop the consumer so a blocked push fails.
+        arena.close();
+        drop(consumer);
+        let joined = producer.join();
+        consumed?;
+        match joined {
+            Ok(Ok((h, s, iw, tw, db, bytes, n))) => {
+                etl_host_s = h;
+                etl_sim_s = s;
+                ingest_wait_s = iw;
+                transfer_wait_s = tw;
+                dma_sim_s = db;
+                staged_bytes = bytes;
+                shards_done = n;
+            }
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(EtlError::Coord("producer panicked".into())),
+        }
+        producer_stalls = stall_counter.load(std::sync::atomic::Ordering::Relaxed)
+            + arena.stats().stalls;
+        Ok(())
+    })?;
+
+    let arena_stats = arena.stats();
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(TrainReport {
+        steps: trainer.steps,
+        losses,
+        wall_s,
+        train_busy_s,
+        util: train_busy_s / wall_s.max(1e-9),
+        util_trace,
+        producer_stalls,
+        etl_host_s,
+        ingest_wait_s,
+        transfer_wait_s,
+        shards: shards_done,
+        etl_sim_s,
+        dma_sim_s,
+        staged_bytes,
+        host_copy_bytes: 0,
+        steady_allocs: arena_stats.steady_allocs,
+    })
+}
+
+/// Legacy heap path: pool-recycled `PackedBatch`es travel the staging
+/// queue by value (the differential baseline for the zero-copy path).
+fn run_channel(
+    pipeline: &Pipeline,
+    spec: &DatasetSpec,
+    trainer: &mut Trainer,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let step_rows = trainer.meta.batch;
+    let (queue, consumer) = StagingQueue::with_buffers(cfg.staging_buffers);
+    let stall_counter = queue.stall_counter();
+    // Packed-batch buffers cycle producer → staging → trainer → pool, so
+    // the steady state allocates nothing per shard — but each batch still
+    // crosses the queue by value (one logical host copy per byte).
+    let pool = BufferPool::new();
+
+    let t0 = std::time::Instant::now();
+    let mut etl_host_s = 0.0f64;
+    let mut etl_sim_s = 0.0f64;
+    let mut ingest_wait_s = 0.0f64;
+    let mut staged_bytes = 0u64;
+    let mut shards_done = 0u64;
+    let mut producer_stalls = 0u64;
+    let mut losses = Vec::new();
+    let mut train_busy_s = 0.0f64;
+    let mut host_copy_bytes = 0u64;
+    let mut util_trace = TimeSeries::default();
+
+    std::thread::scope(|scope| -> Result<()> {
         let pool = &pool;
         let ingest_cfg = cfg.ingest.clone();
         let ingest_spec = spec.clone();
-        let producer = scope.spawn(move || -> Result<(f64, f64, f64, u64)> {
+        let producer = scope.spawn(move || -> Result<(f64, f64, f64, u64, u64)> {
             let queue = queue;
             let mut ingest = AsyncIngest::spawn(
                 ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
@@ -136,6 +374,7 @@ pub fn run(
             );
             let mut host_s = 0.0;
             let mut sim_s = 0.0;
+            let mut bytes = 0u64;
             let mut shards = 0u64;
             while let Some((_, shard)) = ingest.next()? {
                 let mut packed = pool.take();
@@ -143,23 +382,25 @@ pub fn run(
                 ingest.recycle(shard);
                 host_s += timing.host_s;
                 sim_s += timing.elapsed_s;
+                bytes += packed.bytes();
                 shards += 1;
                 if !queue.push(packed) {
                     // Consumer hung up (reached max_steps).
                     break;
                 }
             }
-            Ok((host_s, sim_s, ingest.wait_seconds(), shards))
+            Ok((host_s, sim_s, ingest.wait_seconds(), bytes, shards))
         });
 
-        // Consumer: the trainer steps on borrowed chunk views (zero-copy;
-        // the incomplete tail of each staged batch is dropped, matching
+        // Consumer: the trainer steps on borrowed chunk views (the
+        // incomplete tail of each staged batch is dropped, matching
         // DLRM's fixed batch shapes).
         let mut window_busy = 0.0f64;
         let mut window_start = 0.0f64;
         const WINDOW_STEPS: u64 = 20;
         'consume: while trainer.steps < cfg.max_steps as u64 {
             let Some(batch) = consumer.pop() else { break };
+            host_copy_bytes += batch.bytes();
             for view in batch.chunk_views(step_rows) {
                 if trainer.steps >= cfg.max_steps as u64 {
                     break;
@@ -189,10 +430,11 @@ pub fn run(
         // Drain/close: dropping the consumer unblocks a blocked producer.
         drop(consumer);
         match producer.join() {
-            Ok(Ok((h, s, w, n))) => {
+            Ok(Ok((h, s, w, bytes, n))) => {
                 etl_host_s = h;
                 etl_sim_s = s;
                 ingest_wait_s = w;
+                staged_bytes = bytes;
                 shards_done = n;
             }
             Ok(Err(e)) => return Err(e),
@@ -213,8 +455,13 @@ pub fn run(
         producer_stalls,
         etl_host_s,
         ingest_wait_s,
+        transfer_wait_s: 0.0,
         shards: shards_done,
         etl_sim_s,
+        dma_sim_s: 0.0,
+        staged_bytes,
+        host_copy_bytes,
+        steady_allocs: 0,
     })
 }
 
@@ -222,7 +469,8 @@ pub fn run(
 mod tests {
     // Live-loop tests require compiled artifacts; they run in the
     // integration suite (rust/tests/integration_runtime.rs). The
-    // ingest/exec time-attribution split is asserted in
+    // ingest/exec/transfer time-attribution split and the arena-vs-
+    // channel bit-identity are asserted in
     // rust/tests/integration_coordinator.rs against the artifact-free
     // reference trainer.
 
@@ -231,5 +479,10 @@ mod tests {
         let cfg = super::TrainConfig::default();
         assert!(cfg.max_steps > 0 && cfg.staging_buffers >= 2);
         assert!(cfg.ingest.workers >= 1 && cfg.ingest.channel_depth >= 1);
+        // The zero-copy arena path is the shipping default, with enough
+        // slots for double buffering on both sides of the queue.
+        assert_eq!(cfg.path, super::DataPath::Arena);
+        assert!(cfg.arena.slots >= cfg.staging_buffers + 2);
+        assert!(cfg.transfer.chunk_bytes >= 1 << 20, "MiB-scale DMA chunks");
     }
 }

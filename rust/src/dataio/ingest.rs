@@ -3,28 +3,45 @@
 //! never starved waiting on its source.
 //!
 //! N ingest workers generate/read shards ([`ShardInput`]: deterministic
-//! synthesis via [`DatasetSpec::shard_into`], `rcol` files, or Criteo TSV
-//! via `read_tsv_hinted`) into buffers recycled through a [`BatchPool`],
-//! and hand them over a backpressured `sync_channel` to the consumer —
-//! typically the fused engine packing straight into pooled
-//! `PackedBatch`es, so shard I/O, fused apply+pack, and trainer steps all
-//! overlap.
+//! synthesis via [`DatasetSpec::shard_into`], `rcol` files, or Criteo TSV)
+//! into buffers recycled through a [`BatchPool`], and hand them over a
+//! backpressured `sync_channel` to the consumer — typically the fused
+//! engine packing straight into pooled `PackedBatch`es or arena staging
+//! slots, so shard I/O, fused apply+pack, and trainer steps all overlap.
+//!
+//! # Chunked file ingest
+//!
+//! With [`IngestConfig::chunk_rows`] > 0, file-backed shards (`Rcol` via
+//! [`crate::dataio::rcol::ChunkReader`], `Tsv` via
+//! [`crate::dataio::tsv::read_tsv_chunk`]) are delivered in fixed-size
+//! row chunks, so a **single shard's I/O overlaps its own transform**:
+//! the consumer processes chunk `c` while the worker reads chunk `c+1`.
+//! Synth shards are always delivered whole (chunk-splitting would change
+//! their per-shard RNG streams and break bit-reproducibility). Each
+//! file-backed chunk is also costed against the SSD channel model
+//! ([`crate::memsys::Path::SsdRead`]) — the Dataset-III ingest-bound
+//! accounting surfaced as [`IngestReport::ssd_sim_s`].
 //!
 //! # Delivery policies (the paper's ordering/freshness semantics)
 //!
 //! * [`DeliveryPolicy::InOrder`] — batches are delivered in ascending
-//!   shard order, exactly the sequence the synchronous producer would
-//!   have seen; out-of-order arrivals wait in a small reorder stash. This
-//!   is the bit-reproducible mode (`rust/tests/prop_streaming.rs` pins
-//!   batch-for-batch identity with the sync path).
+//!   (shard, chunk) order, exactly the sequence the synchronous producer
+//!   would have seen; out-of-order arrivals wait in a small reorder
+//!   stash. This is the bit-reproducible mode
+//!   (`rust/tests/prop_streaming.rs` pins batch-for-batch identity with
+//!   the sync path).
 //! * [`DeliveryPolicy::FreshestFirst`] — the most recently generated
-//!   shard available is delivered first (training-aware freshness: the
-//!   trainer prefers the newest interactions). Every shard is still
-//!   delivered exactly once; only the order is recency-biased.
+//!   batch available is delivered first (training-aware freshness: the
+//!   trainer prefers the newest interactions). With
+//!   [`IngestConfig::max_staleness`] = 0 every batch is still delivered
+//!   exactly once; a non-zero bound additionally **drops** stashed
+//!   batches once they have been passed over by more than that many
+//!   deliveries (bounded staleness for the online/continuous path), with
+//!   the drop count reported in [`IngestReport::dropped`].
 //!
 //! # Backpressure & memory bound
 //!
-//! The channel holds at most `channel_depth` shards and each worker holds
+//! The channel holds at most `channel_depth` batches and each worker holds
 //! one in flight, so resident shard buffers are bounded by
 //! `workers + channel_depth` (plus a reorder stash that only grows past
 //! that under pathological per-shard cost skew, since workers drain in
@@ -32,15 +49,13 @@
 //! 1 = strict double buffering per worker, larger values absorb burstier
 //! shard-cost variance at the price of staleness in `FreshestFirst` mode.
 //! Consumed buffers should be handed back via [`AsyncIngest::recycle`] so
-//! the pool can reuse their allocations. Note the zero-alloc recycling
-//! currently applies to `Synth` shards (via `generate_into`); `Rcol`/`Tsv`
-//! readers still materialize a fresh batch per file (read-into variants
-//! are a ROADMAP follow-up).
+//! the pool can reuse their allocations — with chunked readers the
+//! recycling covers `Rcol`/`Tsv` chunks too, not just `Synth` shards.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -49,15 +64,17 @@ use crate::dataio::{rcol, tsv};
 use crate::error::{EtlError, Result};
 use crate::etl::column::Batch;
 use crate::etl::schema::Schema;
+use crate::memsys::{ChannelModel, Path};
 
 /// Ordering/freshness semantics of batch delivery (the training-aware
 /// ETL abstraction's ordering knob).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DeliveryPolicy {
-    /// Ascending shard order — bit-identical to the synchronous producer.
+    /// Ascending (shard, chunk) order — bit-identical to the synchronous
+    /// producer.
     InOrder,
-    /// Most recently produced shard first — freshness over order; every
-    /// shard is still delivered exactly once.
+    /// Most recently produced batch first — freshness over order; every
+    /// batch is delivered exactly once unless `max_staleness` drops it.
     FreshestFirst,
 }
 
@@ -71,11 +88,24 @@ pub struct IngestConfig {
     pub channel_depth: usize,
     /// Delivery ordering/freshness policy.
     pub policy: DeliveryPolicy,
+    /// Rows per delivered chunk for file-backed shards (`Rcol`/`Tsv`);
+    /// 0 delivers whole shards. `Synth` shards are always whole.
+    pub chunk_rows: usize,
+    /// `FreshestFirst` bounded staleness: drop a stashed batch once it
+    /// has been passed over by more than this many deliveries
+    /// (0 = unbounded, never drop).
+    pub max_staleness: usize,
 }
 
 impl Default for IngestConfig {
     fn default() -> Self {
-        IngestConfig { workers: 2, channel_depth: 2, policy: DeliveryPolicy::InOrder }
+        IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            chunk_rows: 0,
+            max_staleness: 0,
+        }
     }
 }
 
@@ -100,7 +130,7 @@ impl ShardInput {
         }
     }
 
-    /// Produce shard `i` into a (possibly recycled) buffer.
+    /// Produce shard `i` whole into a (possibly recycled) buffer.
     pub fn load_into(&self, i: usize, out: &mut Batch) -> Result<()> {
         match self {
             ShardInput::Synth { spec, seed } => {
@@ -152,7 +182,124 @@ impl BatchPool {
     }
 }
 
-type WorkerMsg = Result<(usize, Batch)>;
+/// Summary of an ingest run's delivery accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IngestReport {
+    /// Non-empty batches delivered to the consumer.
+    pub delivered: u64,
+    /// Batches dropped by the `max_staleness` bound (freshest-first).
+    pub dropped: u64,
+    /// Seconds the consumer spent blocked waiting on the channel.
+    pub wait_s: f64,
+    /// Simulated SSD-read seconds for file-backed chunks (the
+    /// Dataset-III ingest-bound channel coupling; 0 for synth inputs).
+    pub ssd_sim_s: f64,
+}
+
+/// One worker→consumer message: chunk `chunk` of shard `shard` (`chunk`
+/// is 0 and `last` true for whole-shard delivery).
+struct ChunkMsg {
+    shard: usize,
+    chunk: usize,
+    last: bool,
+    ssd_s: f64,
+    batch: Batch,
+}
+
+type WorkerMsg = Result<ChunkMsg>;
+
+/// A stashed out-of-order arrival.
+struct StashEntry {
+    batch: Batch,
+    last: bool,
+    /// Delivery count when this entry arrived (staleness stamp).
+    stamp: u64,
+}
+
+/// Simulated SSD-read cost of a file-backed chunk (Dataset-III, §4.4).
+/// Zero-row bookkeeping chunks carry no data and cost nothing — charging
+/// them the per-read setup latency would overstate `ssd_sim_s`.
+fn ssd_seconds(batch: &Batch) -> f64 {
+    if batch.rows() == 0 {
+        return 0.0;
+    }
+    ChannelModel::of(Path::SsdRead).time(batch.total_bytes() as u64)
+}
+
+/// Produce every chunk of shard `i` into the channel. Returns `Ok(false)`
+/// when the consumer hung up (stop quietly), `Ok(true)` when all chunks
+/// were sent.
+fn produce_shard(
+    input: &ShardInput,
+    i: usize,
+    chunk_rows: usize,
+    pool: &BatchPool,
+    tx: &SyncSender<WorkerMsg>,
+) -> Result<bool> {
+    match input {
+        ShardInput::Synth { spec, seed } => {
+            // Always whole: chunk-splitting synthesis would change the
+            // per-shard RNG streams (bit-reproducibility contract).
+            let mut batch = pool.take();
+            spec.shard_into(i, *seed, &mut batch);
+            let msg = ChunkMsg { shard: i, chunk: 0, last: true, ssd_s: 0.0, batch };
+            Ok(tx.send(Ok(msg)).is_ok())
+        }
+        ShardInput::Rcol { paths } if chunk_rows > 0 => {
+            let mut reader = rcol::ChunkReader::open(&paths[i])?;
+            let rows = reader.rows();
+            let n_chunks = rows.div_ceil(chunk_rows).max(1);
+            for c in 0..n_chunks {
+                let start = c * chunk_rows;
+                let n = chunk_rows.min(rows - start);
+                let mut batch = pool.take();
+                reader.read_rows(start, n, &mut batch)?;
+                let msg = ChunkMsg {
+                    shard: i,
+                    chunk: c,
+                    last: c + 1 == n_chunks,
+                    ssd_s: ssd_seconds(&batch),
+                    batch,
+                };
+                if tx.send(Ok(msg)).is_err() {
+                    return Ok(false);
+                }
+            }
+            Ok(true)
+        }
+        ShardInput::Rcol { paths } => {
+            let batch = rcol::read_file(&paths[i])?;
+            let ssd_s = ssd_seconds(&batch);
+            let msg = ChunkMsg { shard: i, chunk: 0, last: true, ssd_s, batch };
+            Ok(tx.send(Ok(msg)).is_ok())
+        }
+        ShardInput::Tsv { paths, schema } if chunk_rows > 0 => {
+            let f = std::fs::File::open(&paths[i])?;
+            let mut rdr = std::io::BufReader::new(f);
+            let mut c = 0usize;
+            loop {
+                let mut batch = pool.take();
+                let n = tsv::read_tsv_chunk(&mut rdr, schema, chunk_rows, &mut batch)?;
+                let last = n < chunk_rows;
+                let msg = ChunkMsg { shard: i, chunk: c, last, ssd_s: ssd_seconds(&batch), batch };
+                if tx.send(Ok(msg)).is_err() {
+                    return Ok(false);
+                }
+                if last {
+                    return Ok(true);
+                }
+                c += 1;
+            }
+        }
+        ShardInput::Tsv { paths, schema } => {
+            let f = std::fs::File::open(&paths[i])?;
+            let batch = tsv::read_tsv_hinted(std::io::BufReader::new(f), schema, 0)?;
+            let ssd_s = ssd_seconds(&batch);
+            let msg = ChunkMsg { shard: i, chunk: 0, last: true, ssd_s, batch };
+            Ok(tx.send(Ok(msg)).is_ok())
+        }
+    }
+}
 
 /// Handle over a running async ingest pipeline. Dropping it closes the
 /// channel (unblocking any worker stalled on backpressure) and joins the
@@ -160,29 +307,34 @@ type WorkerMsg = Result<(usize, Batch)>;
 pub struct AsyncIngest {
     rx: Option<Receiver<WorkerMsg>>,
     handles: Vec<JoinHandle<()>>,
-    stash: BTreeMap<usize, Batch>,
-    next_expected: usize,
+    stash: BTreeMap<(usize, usize), StashEntry>,
+    next_expected: (usize, usize),
     policy: DeliveryPolicy,
+    max_staleness: usize,
     pool: Arc<BatchPool>,
-    /// Shards the input yields; every index must arrive as a message.
+    /// Shards the input yields; every one must finish (last chunk arrive).
     total: usize,
-    /// Messages received so far (empty shards included) — `< total` at
-    /// disconnect means a worker died without reporting (e.g. panicked).
-    received: usize,
+    /// Shards whose last chunk has arrived — `< total` at disconnect
+    /// means a worker died without reporting (e.g. panicked).
+    finished: usize,
     wait_s: f64,
+    ssd_sim_s: f64,
     delivered: u64,
+    dropped: u64,
 }
 
 impl AsyncIngest {
     /// Start `cfg.workers` ingest threads over `input`. Workers claim
-    /// shard indices from a shared counter, fill pool-recycled buffers,
-    /// and push over a channel bounded at `cfg.channel_depth`.
+    /// shard indices from a shared counter, fill pool-recycled buffers
+    /// (whole shards, or `cfg.chunk_rows`-row chunks for file-backed
+    /// inputs), and push over a channel bounded at `cfg.channel_depth`.
     pub fn spawn(input: ShardInput, cfg: &IngestConfig) -> AsyncIngest {
         let input = Arc::new(input);
         let pool = Arc::new(BatchPool::new());
         let total = input.shards();
         let (tx, rx) = sync_channel::<WorkerMsg>(cfg.channel_depth.max(1));
         let counter = Arc::new(AtomicUsize::new(0));
+        let chunk_rows = cfg.chunk_rows;
         let handles: Vec<JoinHandle<()>> = (0..cfg.workers.max(1))
             .map(|_| {
                 let input = Arc::clone(&input);
@@ -194,15 +346,9 @@ impl AsyncIngest {
                     if i >= total {
                         break;
                     }
-                    let mut batch = pool.take();
-                    match input.load_into(i, &mut batch) {
-                        // Empty shards are forwarded too — the in-order
-                        // consumer advances its cursor through them.
-                        Ok(()) => {
-                            if tx.send(Ok((i, batch))).is_err() {
-                                break; // consumer hung up
-                            }
-                        }
+                    match produce_shard(&input, i, chunk_rows, &pool, &tx) {
+                        Ok(true) => {}
+                        Ok(false) => break, // consumer hung up
                         Err(e) => {
                             let _ = tx.send(Err(e));
                             break;
@@ -215,50 +361,58 @@ impl AsyncIngest {
             rx: Some(rx),
             handles,
             stash: BTreeMap::new(),
-            next_expected: 0,
+            next_expected: (0, 0),
             policy: cfg.policy,
+            max_staleness: cfg.max_staleness,
             pool,
             total,
-            received: 0,
+            finished: 0,
             wait_s: 0.0,
+            ssd_sim_s: 0.0,
             delivered: 0,
+            dropped: 0,
         }
     }
 
-    /// Deliver the next non-empty shard under the configured policy (its
-    /// index and data), or `Ok(None)` once every worker finished and all
-    /// shards were delivered. Worker errors surface here. Time spent
-    /// blocked on the channel accumulates into [`wait_seconds`](Self::wait_seconds)
-    /// — the producer-side I/O-wait attribution the train loop reports.
+    /// Deliver the next non-empty batch under the configured policy (its
+    /// shard index and data), or `Ok(None)` once every worker finished and
+    /// everything was delivered. With chunked file ingest a shard index
+    /// repeats across its chunks. Worker errors surface here. Time spent
+    /// blocked on the channel accumulates into
+    /// [`wait_seconds`](Self::wait_seconds) — the producer-side I/O-wait
+    /// attribution the train loop reports.
     pub fn next(&mut self) -> Result<Option<(usize, Batch)>> {
         loop {
             // Serve from the stash when the policy allows it.
             let ready = match self.policy {
                 DeliveryPolicy::InOrder => {
-                    let i = self.next_expected;
-                    self.stash.remove(&i).map(|b| (i, b))
+                    let key = self.next_expected;
+                    self.stash.remove(&key).map(|e| (key, e))
                 }
                 DeliveryPolicy::FreshestFirst => {
                     self.drain_channel()?;
                     match self.stash.keys().next_back().copied() {
-                        Some(i) => {
-                            let b = self.stash.remove(&i).expect("key just observed");
-                            Some((i, b))
+                        Some(k) => {
+                            let e = self.stash.remove(&k).expect("key just observed");
+                            Some((k, e))
                         }
                         None => None,
                     }
                 }
             };
-            if let Some((i, batch)) = ready {
+            if let Some(((shard, chunk), entry)) = ready {
                 if self.policy == DeliveryPolicy::InOrder {
-                    self.next_expected = i + 1;
+                    self.next_expected =
+                        if entry.last { (shard + 1, 0) } else { (shard, chunk + 1) };
                 }
-                if batch.rows() == 0 {
-                    self.pool.put(batch);
+                if entry.batch.rows() == 0 {
+                    // Empty (trailing) chunks still advance the cursor.
+                    self.pool.put(entry.batch);
                     continue;
                 }
                 self.delivered += 1;
-                return Ok(Some((i, batch)));
+                self.sweep_stale();
+                return Ok(Some((shard, entry.batch)));
             }
 
             // Nothing eligible: block on the channel.
@@ -267,51 +421,83 @@ impl AsyncIngest {
             let msg = rx.recv();
             self.wait_s += t0.elapsed().as_secs_f64();
             match msg {
-                Ok(Ok((i, batch))) => {
-                    self.received += 1;
-                    self.stash.insert(i, batch);
-                }
+                Ok(Ok(m)) => self.note_arrival(m),
                 Ok(Err(e)) => return Err(e),
                 Err(_) => {
                     // All workers exited. Deliver stragglers in ascending
                     // order (only reachable with gaps after a worker
                     // error), then finish.
-                    let Some(i) = self.stash.keys().next().copied() else {
+                    let Some(k) = self.stash.keys().next().copied() else {
                         // A worker that dies without reporting (panic)
                         // leaves a gap — surface it instead of pretending
                         // the stream completed.
-                        if self.received < self.total {
+                        if self.finished < self.total {
                             return Err(EtlError::Coord(format!(
-                                "ingest workers exited after producing {}/{} shards \
+                                "ingest workers exited after finishing {}/{} shards \
                                  (worker panicked?)",
-                                self.received, self.total
+                                self.finished, self.total
                             )));
                         }
                         return Ok(None);
                     };
-                    let batch = self.stash.remove(&i).expect("key just observed");
-                    self.next_expected = i + 1;
-                    if batch.rows() == 0 {
-                        self.pool.put(batch);
+                    let e = self.stash.remove(&k).expect("key just observed");
+                    self.next_expected = if e.last { (k.0 + 1, 0) } else { (k.0, k.1 + 1) };
+                    if e.batch.rows() == 0 {
+                        self.pool.put(e.batch);
                         continue;
                     }
                     self.delivered += 1;
-                    return Ok(Some((i, batch)));
+                    return Ok(Some((k.0, e.batch)));
                 }
             }
         }
     }
 
+    /// Record one worker message into the stash.
+    fn note_arrival(&mut self, m: ChunkMsg) {
+        if m.last {
+            self.finished += 1;
+        }
+        self.ssd_sim_s += m.ssd_s;
+        self.stash.insert(
+            (m.shard, m.chunk),
+            StashEntry { batch: m.batch, last: m.last, stamp: self.delivered },
+        );
+    }
+
+    /// Drop stashed batches that the freshest-first policy has passed
+    /// over more than `max_staleness` deliveries ago (bounded staleness;
+    /// no-op when the bound is 0 or the policy is in-order).
+    fn sweep_stale(&mut self) {
+        if self.policy != DeliveryPolicy::FreshestFirst || self.max_staleness == 0 {
+            return;
+        }
+        let cutoff = self.delivered.saturating_sub(self.max_staleness as u64);
+        let stale: Vec<(usize, usize)> = self
+            .stash
+            .iter()
+            .filter(|(_, e)| e.stamp < cutoff)
+            .map(|(k, _)| *k)
+            .collect();
+        for k in stale {
+            let e = self.stash.remove(&k).expect("key collected above");
+            // Zero-row trailing chunks are bookkeeping, not batches: they
+            // are skipped silently on delivery, so they must not count as
+            // drops either (delivered + dropped = non-empty batches).
+            if e.batch.rows() > 0 {
+                self.dropped += 1;
+            }
+            self.pool.put(e.batch);
+        }
+    }
+
     /// Pull everything currently buffered in the channel into the stash
-    /// (freshest-first looks at all available shards before choosing).
+    /// (freshest-first looks at all available batches before choosing).
     fn drain_channel(&mut self) -> Result<()> {
         let Some(rx) = self.rx.as_ref() else { return Ok(()) };
         loop {
             match rx.try_recv() {
-                Ok(Ok((i, batch))) => {
-                    self.received += 1;
-                    self.stash.insert(i, batch);
-                }
+                Ok(Ok(m)) => self.note_arrival(m),
                 Ok(Err(e)) => return Err(e),
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return Ok(()),
             }
@@ -328,9 +514,24 @@ impl AsyncIngest {
         self.wait_s
     }
 
-    /// Non-empty shards delivered so far.
+    /// Non-empty batches delivered so far.
     pub fn delivered(&self) -> u64 {
         self.delivered
+    }
+
+    /// Batches dropped by the staleness bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Delivery accounting snapshot.
+    pub fn report(&self) -> IngestReport {
+        IngestReport {
+            delivered: self.delivered,
+            dropped: self.dropped,
+            wait_s: self.wait_s,
+            ssd_sim_s: self.ssd_sim_s,
+        }
     }
 }
 
@@ -398,6 +599,7 @@ mod tests {
                     workers,
                     channel_depth: depth,
                     policy: DeliveryPolicy::InOrder,
+                    ..IngestConfig::default()
                 };
                 let got = collect(ShardInput::Synth { spec: spec.clone(), seed: 7 }, &cfg);
                 assert_eq!(got.len(), sync.len(), "workers={workers} depth={depth}");
@@ -416,6 +618,7 @@ mod tests {
             workers: 4,
             channel_depth: 2,
             policy: DeliveryPolicy::FreshestFirst,
+            ..IngestConfig::default()
         };
         let mut got = collect(ShardInput::Synth { spec: spec.clone(), seed: 3 }, &cfg);
         got.sort_by_key(|(i, _)| *i);
@@ -424,6 +627,44 @@ mod tests {
         for (i, b) in &got {
             assert!(batch_eq(b, &spec.shard(*i, 3)));
         }
+    }
+
+    #[test]
+    fn freshest_first_bounded_staleness_drops_and_accounts() {
+        // A slow consumer with many producers and a tight staleness bound
+        // must drop passed-over shards — and every shard is then either
+        // delivered or counted dropped, never lost.
+        let spec = spec(3200, 32);
+        let cfg = IngestConfig {
+            workers: 4,
+            channel_depth: 8,
+            policy: DeliveryPolicy::FreshestFirst,
+            max_staleness: 1,
+            ..IngestConfig::default()
+        };
+        let mut ingest =
+            AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed: 5 }, &cfg);
+        let mut seen = Vec::new();
+        while let Some((i, b)) = ingest.next().unwrap() {
+            // Give workers time to pile shards into the stash so the
+            // staleness sweep has something to age out.
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            seen.push(i);
+            ingest.recycle(b);
+        }
+        let report = ingest.report();
+        assert_eq!(report.delivered as usize, seen.len());
+        assert_eq!(
+            report.delivered + report.dropped,
+            spec.shards as u64,
+            "{report:?}"
+        );
+        // No duplicates ever.
+        let mut uniq = seen.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seen.len());
+        assert_eq!(ingest.dropped(), report.dropped);
     }
 
     #[test]
@@ -464,6 +705,8 @@ mod tests {
         assert_eq!(ingest.delivered(), 3);
         assert!(ingest.wait_seconds() >= 0.0);
         assert!(ingest.pool.available() >= 1);
+        // Synth inputs never touch the SSD model.
+        assert_eq!(ingest.report().ssd_sim_s, 0.0);
     }
 
     #[test]
@@ -492,5 +735,84 @@ mod tests {
         for p in paths {
             std::fs::remove_file(p).ok();
         }
+    }
+
+    #[test]
+    fn chunked_rcol_ingest_is_bit_identical_to_whole_shard() {
+        let dir = std::env::temp_dir().join("piperec_ingest_rcol_chunked");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = spec(300, 3);
+        let mut paths = Vec::new();
+        for i in 0..spec.shards {
+            let p = dir.join(format!("c{i}.rcol"));
+            rcol::write_file(&p, &spec.shard(i, 6)).unwrap();
+            paths.push(p);
+        }
+        // In-order chunked delivery must concatenate back to the whole
+        // shard sequence, for chunk sizes that do and don't divide evenly.
+        for chunk_rows in [32usize, 100, 1000] {
+            let cfg = IngestConfig { chunk_rows, ..IngestConfig::default() };
+            let got = collect(ShardInput::Rcol { paths: paths.clone() }, &cfg);
+            // Chunks of one shard arrive contiguously, shard order ascends.
+            let mut at = 0usize;
+            for i in 0..spec.shards {
+                let whole = spec.shard(i, 6);
+                let mut row = 0usize;
+                while row < whole.rows() {
+                    let (gi, gb) = &got[at];
+                    assert_eq!(*gi, i, "chunk_rows={chunk_rows}");
+                    let n = gb.rows();
+                    assert!(n > 0);
+                    assert!(
+                        batch_eq(gb, &whole.slice_rows(row..row + n)),
+                        "chunk_rows={chunk_rows} shard={i} rows [{row}, {})",
+                        row + n
+                    );
+                    row += n;
+                    at += 1;
+                }
+            }
+            assert_eq!(at, got.len());
+        }
+        // Chunked file reads are costed against the SSD channel.
+        let cfg = IngestConfig { chunk_rows: 64, ..IngestConfig::default() };
+        let mut ingest = AsyncIngest::spawn(ShardInput::Rcol { paths: paths.clone() }, &cfg);
+        while let Some((_, b)) = ingest.next().unwrap() {
+            ingest.recycle(b);
+        }
+        assert!(ingest.report().ssd_sim_s > 0.0);
+        for p in paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn chunked_tsv_ingest_concatenates_to_whole_file() {
+        let dir = std::env::temp_dir().join("piperec_ingest_tsv_chunked");
+        std::fs::create_dir_all(&dir).unwrap();
+        let schema = Schema::tabular("c", 2, 2, 100);
+        let path = dir.join("shard0.tsv");
+        let mut body = String::new();
+        for r in 0..37 {
+            body.push_str(&format!("{}\t{}.5\t\t{:04x}\tff\n", r % 2, r, r + 1));
+        }
+        std::fs::write(&path, &body).unwrap();
+        let whole = tsv::read_tsv(body.as_bytes(), &schema).unwrap();
+
+        let cfg = IngestConfig { chunk_rows: 10, ..IngestConfig::default() };
+        let got = collect(
+            ShardInput::Tsv { paths: vec![path.clone()], schema: schema.clone() },
+            &cfg,
+        );
+        // 37 rows in chunks of 10 → 10/10/10/7.
+        assert_eq!(got.iter().map(|(_, b)| b.rows()).collect::<Vec<_>>(), vec![10, 10, 10, 7]);
+        let mut row = 0usize;
+        for (i, b) in &got {
+            assert_eq!(*i, 0);
+            assert!(batch_eq(b, &whole.slice_rows(row..row + b.rows())));
+            row += b.rows();
+        }
+        assert_eq!(row, 37);
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -9,7 +9,7 @@
 //! per column: u16 name_len | name | u8 type_tag | u32 width | payload
 //! ```
 
-use std::io::{Read, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use crate::error::{EtlError, Result};
@@ -124,6 +124,148 @@ pub fn read_batch<R: Read>(r: &mut R) -> Result<Batch> {
     Ok(batch)
 }
 
+fn elem_bytes(t: ColType) -> usize {
+    match t {
+        ColType::F32 => 4,
+        ColType::Hex8 | ColType::I64 => 8,
+    }
+}
+
+/// Column descriptor of an open [`ChunkReader`] file.
+#[derive(Debug, Clone)]
+struct ChunkCol {
+    name: String,
+    ty: ColType,
+    width: usize,
+    /// Byte offset of the column payload within the file.
+    offset: u64,
+}
+
+/// Random-access rcol reader delivering row ranges — the chunked shard
+/// reader of the streaming ingest pipeline. The column-major layout makes
+/// a row-range read one contiguous `seek + read` per column, so a single
+/// shard's I/O overlaps its own downstream transform chunk by chunk
+/// (coupled to the SSD channel model for Dataset-III ingest accounting).
+pub struct ChunkReader {
+    file: std::fs::File,
+    rows: usize,
+    cols: Vec<ChunkCol>,
+    /// Reused raw-byte scratch for column reads (no per-chunk allocation
+    /// once its capacity covers the chunk).
+    scratch: Vec<u8>,
+}
+
+impl ChunkReader {
+    /// Open an rcol file and index its column payload offsets.
+    pub fn open(path: &Path) -> Result<ChunkReader> {
+        let mut file = std::fs::File::open(path)?;
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(EtlError::Format("bad rcol magic".into()));
+        }
+        let rows = read_u64(&mut file)? as usize;
+        let ncols = read_u32(&mut file)? as usize;
+        let mut pos = 8u64 + 8 + 4;
+        let mut cols = Vec::with_capacity(ncols);
+        for _ in 0..ncols {
+            let name_len = read_u16(&mut file)? as usize;
+            let mut name = vec![0u8; name_len];
+            file.read_exact(&mut name)?;
+            let name = String::from_utf8(name)
+                .map_err(|e| EtlError::Format(format!("bad column name: {e}")))?;
+            let mut tag = [0u8; 1];
+            file.read_exact(&mut tag)?;
+            let ty = tag_type(tag[0])?;
+            let width = read_u32(&mut file)? as usize;
+            pos += 2 + name_len as u64 + 1 + 4;
+            let payload = (rows * width.max(1) * elem_bytes(ty)) as u64;
+            cols.push(ChunkCol { name, ty, width, offset: pos });
+            pos += payload;
+            file.seek(SeekFrom::Start(pos))?;
+        }
+        Ok(ChunkReader { file, rows, cols, scratch: Vec::new() })
+    }
+
+    /// Total rows in the file.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Read rows `[start, start + n)` of every column into `out` — a
+    /// recycled buffer whose skeleton is reused when it matches the file
+    /// (zero steady-state allocation once capacities cover the chunk) and
+    /// rebuilt otherwise. Bit-identical to slicing [`read_file`]'s batch.
+    pub fn read_rows(&mut self, start: usize, n: usize, out: &mut Batch) -> Result<()> {
+        if start + n > self.rows {
+            return Err(EtlError::Format(format!(
+                "rcol chunk [{start}, {}) out of range ({} rows)",
+                start + n,
+                self.rows
+            )));
+        }
+        let matches = out.columns.len() == self.cols.len()
+            && out.columns.iter().zip(&self.cols).all(|((bn, bc), c)| {
+                bn == &c.name && bc.coltype() == c.ty
+            });
+        if !matches {
+            out.columns = self
+                .cols
+                .iter()
+                .map(|c| {
+                    let col = match c.ty {
+                        ColType::F32 => Column::F32 { data: Vec::new(), width: c.width },
+                        ColType::Hex8 => Column::Hex8 { data: Vec::new() },
+                        ColType::I64 => Column::I64 { data: Vec::new(), width: c.width },
+                    };
+                    (c.name.clone(), col)
+                })
+                .collect();
+        }
+        for ci in 0..self.cols.len() {
+            let c = &self.cols[ci];
+            let w = c.width.max(1);
+            let elems = n * w;
+            let eb = elem_bytes(c.ty);
+            self.file
+                .seek(SeekFrom::Start(c.offset + (start * w * eb) as u64))?;
+            self.scratch.clear();
+            self.scratch.resize(elems * eb, 0);
+            self.file.read_exact(&mut self.scratch)?;
+            let buf = &self.scratch;
+            match &mut out.columns[ci].1 {
+                Column::F32 { data, width } => {
+                    *width = c.width;
+                    data.clear();
+                    data.reserve(elems);
+                    data.extend(
+                        buf.chunks_exact(4)
+                            .map(|b| f32::from_le_bytes(b.try_into().unwrap())),
+                    );
+                }
+                Column::Hex8 { data } => {
+                    data.clear();
+                    data.reserve(elems);
+                    data.extend(
+                        buf.chunks_exact(8)
+                            .map(|b| u64::from_le_bytes(b.try_into().unwrap())),
+                    );
+                }
+                Column::I64 { data, width } => {
+                    *width = c.width;
+                    data.clear();
+                    data.reserve(elems);
+                    data.extend(
+                        buf.chunks_exact(8)
+                            .map(|b| i64::from_le_bytes(b.try_into().unwrap())),
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Write a batch to a file path.
 pub fn write_file(path: &Path, batch: &Batch) -> Result<()> {
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
@@ -198,6 +340,54 @@ mod tests {
         let got = read_file(&path).unwrap();
         assert_eq!(got.rows(), 3);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn chunk_reader_slices_match_whole_file() {
+        let dir = std::env::temp_dir().join("piperec_rcol_chunk_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chunk.rcol");
+        // 5 rows including a width-2 I64 column and NaN dense values.
+        let mut b = Batch::new();
+        b.push("dense", Column::f32(vec![1.5, -2.0, f32::NAN, 0.0, 9.5])).unwrap();
+        b.push("hex", Column::hex8(vec![10, 20, 30, 40, 50])).unwrap();
+        b.push(
+            "idx",
+            Column::I64 { data: (0..10).collect(), width: 2 },
+        )
+        .unwrap();
+        write_file(&path, &b).unwrap();
+
+        let mut r = ChunkReader::open(&path).unwrap();
+        assert_eq!(r.rows(), 5);
+        let mut chunk = Batch::new();
+        // Read in chunks of 2 and compare each slice bit-for-bit.
+        for (start, n) in [(0usize, 2usize), (2, 2), (4, 1)] {
+            r.read_rows(start, n, &mut chunk).unwrap();
+            assert_eq!(chunk.rows(), n);
+            let want = b.slice_rows(start..start + n);
+            assert_eq!(
+                chunk.get("hex").unwrap().as_hex8().unwrap(),
+                want.get("hex").unwrap().as_hex8().unwrap()
+            );
+            assert_eq!(
+                chunk.get("idx").unwrap().as_i64().unwrap(),
+                want.get("idx").unwrap().as_i64().unwrap()
+            );
+            assert_eq!(chunk.get("idx").unwrap().width(), 2);
+            let a = chunk.get("dense").unwrap().as_f32().unwrap();
+            let w = want.get("dense").unwrap().as_f32().unwrap();
+            assert!(a.iter().zip(w).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        // Recycled buffer reuses its allocation across chunks.
+        let ptr = chunk.get("hex").unwrap().as_hex8().unwrap().as_ptr();
+        r.read_rows(0, 2, &mut chunk).unwrap();
+        assert_eq!(chunk.get("hex").unwrap().as_hex8().unwrap().as_ptr(), ptr);
+        // Zero-row and out-of-range chunks.
+        r.read_rows(5, 0, &mut chunk).unwrap();
+        assert_eq!(chunk.rows(), 0);
+        assert!(r.read_rows(4, 2, &mut chunk).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -21,27 +21,88 @@ pub fn read_tsv<R: BufRead>(reader: R, schema: &Schema) -> Result<Batch> {
 /// Like [`read_tsv`], pre-sizing every per-field column from `rows_hint`
 /// (e.g. the shard's known row count). The line buffer is reused across
 /// rows (§Perf: `reader.lines()` allocated a fresh `String` per line —
-/// one heap allocation per row on the converter hot path).
-pub fn read_tsv_hinted<R: BufRead>(mut reader: R, schema: &Schema, rows_hint: usize) -> Result<Batch> {
+/// one heap allocation per row on the converter hot path). One parser
+/// serves both whole-file and chunked reads: this is a single
+/// [`read_tsv_chunk`] call with an unbounded row budget.
+pub fn read_tsv_hinted<R: BufRead>(
+    mut reader: R,
+    schema: &Schema,
+    rows_hint: usize,
+) -> Result<Batch> {
+    let mut out = Batch::new();
+    // Pre-size the skeleton; the chunk reader reuses it as-is.
+    out.columns = schema
+        .fields
+        .iter()
+        .map(|f| {
+            let col = match f.kind {
+                FeatureKind::Label | FeatureKind::Dense => {
+                    Column::F32 { data: Vec::with_capacity(rows_hint), width: 1 }
+                }
+                FeatureKind::Sparse => Column::Hex8 { data: Vec::with_capacity(rows_hint) },
+            };
+            (f.name.clone(), col)
+        })
+        .collect();
+    read_tsv_chunk(&mut reader, schema, usize::MAX, &mut out)?;
+    Ok(out)
+}
+
+/// Parse up to `max_rows` Criteo TSV lines from `reader` into `out` — the
+/// chunked shard reader of the streaming ingest pipeline: a shard's I/O
+/// overlaps its own downstream transform because each chunk is delivered
+/// as soon as it parses. Returns the rows parsed; fewer than `max_rows`
+/// only at end of input, so a short (possibly zero-row) chunk marks the
+/// shard's last chunk.
+///
+/// `out` is a recycled buffer: its skeleton is reused when it matches
+/// `schema` (zero steady-state allocation once column capacities cover
+/// `max_rows`) and rebuilt otherwise. Values are bit-identical to
+/// [`read_tsv`] over the same lines.
+pub fn read_tsv_chunk<R: BufRead>(
+    reader: &mut R,
+    schema: &Schema,
+    max_rows: usize,
+    out: &mut Batch,
+) -> Result<usize> {
     let n_fields = schema.fields.len();
-    let mut dense: Vec<Vec<f32>> = Vec::with_capacity(n_fields);
-    let mut sparse: Vec<Vec<u64>> = Vec::with_capacity(n_fields);
-    for spec in &schema.fields {
-        match spec.kind {
-            FeatureKind::Label | FeatureKind::Dense => {
-                dense.push(Vec::with_capacity(rows_hint));
-                sparse.push(Vec::new());
-            }
-            FeatureKind::Sparse => {
-                dense.push(Vec::new());
-                sparse.push(Vec::with_capacity(rows_hint));
-            }
+    let matches = out.columns.len() == n_fields
+        && out.columns.iter().zip(&schema.fields).all(|((n, c), f)| {
+            n == &f.name
+                && match f.kind {
+                    FeatureKind::Label | FeatureKind::Dense => {
+                        matches!(c, Column::F32 { width: 1, .. })
+                    }
+                    FeatureKind::Sparse => matches!(c, Column::Hex8 { .. }),
+                }
+        });
+    if !matches {
+        out.columns = schema
+            .fields
+            .iter()
+            .map(|f| {
+                let col = match f.kind {
+                    FeatureKind::Label | FeatureKind::Dense => {
+                        Column::F32 { data: Vec::new(), width: 1 }
+                    }
+                    FeatureKind::Sparse => Column::Hex8 { data: Vec::new() },
+                };
+                (f.name.clone(), col)
+            })
+            .collect();
+    }
+    for (_, col) in out.columns.iter_mut() {
+        match col {
+            Column::F32 { data, .. } => data.clear(),
+            Column::Hex8 { data } => data.clear(),
+            Column::I64 { data, .. } => data.clear(),
         }
     }
 
     let mut line = String::new();
+    let mut rows = 0usize;
     let mut lineno = 0usize;
-    loop {
+    while rows < max_rows {
         line.clear();
         if reader.read_line(&mut line)? == 0 {
             break;
@@ -64,8 +125,8 @@ pub fn read_tsv_hinted<R: BufRead>(mut reader: R, schema: &Schema, rows_hint: us
                     "line {lineno}: expected {n_fields} fields, got {fi}"
                 ))
             })?;
-            match spec.kind {
-                FeatureKind::Label | FeatureKind::Dense => {
+            match (&spec.kind, &mut out.columns[fi].1) {
+                (FeatureKind::Label | FeatureKind::Dense, Column::F32 { data, .. }) => {
                     let v = if raw.is_empty() {
                         f32::NAN
                     } else {
@@ -75,16 +136,17 @@ pub fn read_tsv_hinted<R: BufRead>(mut reader: R, schema: &Schema, rows_hint: us
                             ))
                         })?
                     };
-                    dense[fi].push(v);
+                    data.push(v);
                 }
-                FeatureKind::Sparse => {
+                (FeatureKind::Sparse, Column::Hex8 { data }) => {
                     let v = if raw.is_empty() {
                         pack_hex("0").expect("constant")
                     } else {
                         pack_hex(raw)?
                     };
-                    sparse[fi].push(v);
+                    data.push(v);
                 }
+                _ => unreachable!("skeleton rebuilt above"),
             }
         }
         if fields.next().is_some() {
@@ -92,19 +154,9 @@ pub fn read_tsv_hinted<R: BufRead>(mut reader: R, schema: &Schema, rows_hint: us
                 "line {lineno}: more than {n_fields} fields"
             )));
         }
+        rows += 1;
     }
-
-    let mut batch = Batch::new();
-    for (fi, spec) in schema.fields.iter().enumerate() {
-        let col = match spec.kind {
-            FeatureKind::Label | FeatureKind::Dense => {
-                Column::f32(std::mem::take(&mut dense[fi]))
-            }
-            FeatureKind::Sparse => Column::hex8(std::mem::take(&mut sparse[fi])),
-        };
-        batch.push(spec.name.clone(), col)?;
-    }
-    Ok(batch)
+    Ok(rows)
 }
 
 /// Export a raw batch back to Criteo TSV (testing / interchange).
@@ -196,6 +248,52 @@ mod tests {
         // Hint pre-sizes the kept columns.
         let big = read_tsv_hinted(tsv.as_bytes(), &schema, 1000).unwrap();
         assert_eq!(big.rows(), 2);
+    }
+
+    #[test]
+    fn chunked_reader_concatenates_to_whole_file() {
+        let schema = tiny_schema();
+        let tsv = "1\t3.5\t\t1a3f\tdeadbeef\n0\t\t-2\t00ff\t0\n1\t7\t8\tff\tff\n";
+        let whole = read_tsv(tsv.as_bytes(), &schema).unwrap();
+
+        let mut rdr = std::io::BufReader::new(tsv.as_bytes());
+        let mut chunk = Batch::new();
+        let mut rows = Vec::new();
+        let mut got: Vec<Vec<u64>> = vec![Vec::new()];
+        let mut labels: Vec<f32> = Vec::new();
+        loop {
+            let n = read_tsv_chunk(&mut rdr, &schema, 2, &mut chunk).unwrap();
+            rows.push(n);
+            labels.extend_from_slice(chunk.get("c_label").unwrap().as_f32().unwrap());
+            got[0].extend_from_slice(chunk.get("c_c0").unwrap().as_hex8().unwrap());
+            if n < 2 {
+                break;
+            }
+        }
+        assert_eq!(rows, vec![2, 1]);
+        assert_eq!(labels, whole.get("c_label").unwrap().as_f32().unwrap());
+        assert_eq!(&got[0], whole.get("c_c0").unwrap().as_hex8().unwrap());
+        // A drained reader yields a zero-row (last) chunk.
+        assert_eq!(read_tsv_chunk(&mut rdr, &schema, 2, &mut chunk).unwrap(), 0);
+    }
+
+    #[test]
+    fn chunked_reader_recycles_buffers() {
+        let schema = tiny_schema();
+        let tsv = "1\t3.5\t2\t1a3f\tff\n0\t1\t-2\t00ff\t0\n";
+        let mut chunk = Batch::new();
+        let mut rdr = std::io::BufReader::new(tsv.as_bytes());
+        read_tsv_chunk(&mut rdr, &schema, 8, &mut chunk).unwrap();
+        assert_eq!(chunk.rows(), 2);
+        let ptr = chunk.get("c_c0").unwrap().as_hex8().unwrap().as_ptr();
+        // Re-read into the same buffer: skeleton and capacity reused.
+        let mut rdr = std::io::BufReader::new(tsv.as_bytes());
+        read_tsv_chunk(&mut rdr, &schema, 2, &mut chunk).unwrap();
+        assert_eq!(chunk.rows(), 2);
+        assert_eq!(chunk.get("c_c0").unwrap().as_hex8().unwrap().as_ptr(), ptr);
+        // Chunk errors surface like the whole-file reader's.
+        let mut bad = std::io::BufReader::new("1\t2\n".as_bytes());
+        assert!(read_tsv_chunk(&mut bad, &schema, 4, &mut chunk).is_err());
     }
 
     #[test]

@@ -1,0 +1,570 @@
+//! Pinned staging arena: a slab allocator over a fixed simulated GPU
+//! memory region (paper §3, Fig. 3 — the FPGA's P2P staging buffers live
+//! in GPU memory and are recycled under trainer credits).
+//!
+//! The arena carves its region into fixed-size [`StagingSlot`]s. A slot is
+//! `acquire`d by the producer (blocking while every slot is in flight —
+//! the credit-gated backpressure of the staging protocol), packed **in
+//! place** by the fused engine, staged to the trainer, and `release`d when
+//! the trainer finishes stepping on it. Each release bumps the slot's
+//! epoch — the epoch-based reclamation that invalidates stale handles and
+//! lets the simulation check that no view outlives its credit.
+//!
+//! The region is registered in the [`Mmu`]'s unified virtual address space
+//! as [`MemClass::Gpu`] pages, so slot addresses translate like any other
+//! device buffer descriptor the dataflow engine uses.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::coordinator::packer::{PackedBatch, PackedBatchView};
+use crate::error::{EtlError, Result};
+use crate::memsys::{MemClass, Mmu};
+
+/// Next unique arena identity (catches cross-arena slot release).
+static NEXT_ARENA_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Sizing of the staging arena.
+#[derive(Debug, Clone)]
+pub struct ArenaConfig {
+    /// Number of staging slots (credits). 4 = double buffering on both the
+    /// producer and consumer side of the staging queue.
+    pub slots: usize,
+    /// Bytes reserved per slot in the simulated GPU region; packing a
+    /// batch larger than this is an arena-exhaustion error.
+    pub slot_bytes: u64,
+}
+
+impl Default for ArenaConfig {
+    fn default() -> Self {
+        ArenaConfig { slots: 4, slot_bytes: 64 << 20 }
+    }
+}
+
+/// Counters of the arena's zero-copy contract (see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ArenaStats {
+    /// Slots handed out.
+    pub acquires: u64,
+    /// Credits returned.
+    pub releases: u64,
+    /// Acquires that had to block on a credit (producer stalls).
+    pub stalls: u64,
+    /// Seconds spent blocked in `acquire`.
+    pub acquire_wait_s: f64,
+    /// Packed bytes that flowed through released slots (each written
+    /// exactly once by the fused packer).
+    pub packed_bytes: u64,
+    /// Slot-buffer allocations on a slot's *first* pack (expected: the
+    /// slots size themselves to the workload once).
+    pub warmup_allocs: u64,
+    /// Slot-buffer allocations on any later pack — must stay 0 in the
+    /// steady state (the zero-copy acceptance counter).
+    pub steady_allocs: u64,
+}
+
+/// One staging slot: a fixed region of simulated GPU memory holding a
+/// training-ready [`PackedBatch`] packed in place by the fused engine.
+///
+/// Slots are linear handles: they cannot be cloned, so Rust ownership
+/// already rules out use-after-release; the epoch stamp additionally lets
+/// the arena detect a handle from a previous incarnation of the slot.
+#[derive(Debug)]
+pub struct StagingSlot {
+    index: usize,
+    epoch: u64,
+    vaddr: u64,
+    capacity_bytes: u64,
+    arena_id: u64,
+    /// Packs performed on this slot over its lifetime.
+    packs: u64,
+    /// Did the last pack grow the slot's buffers?
+    grew: bool,
+    /// Payload bytes of the last pack.
+    packed_bytes: u64,
+    batch: PackedBatch,
+}
+
+impl StagingSlot {
+    /// Slot index within its arena.
+    pub fn index(&self) -> usize {
+        self.index
+    }
+
+    /// Reclamation epoch this handle belongs to.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Device virtual address of the slot's first byte.
+    pub fn vaddr(&self) -> u64 {
+        self.vaddr
+    }
+
+    /// Bytes reserved for this slot in the simulated GPU region.
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// Payload bytes of the batch currently packed into the slot.
+    pub fn packed_bytes(&self) -> u64 {
+        self.packed_bytes
+    }
+
+    /// The staged batch, in place.
+    pub fn batch(&self) -> &PackedBatch {
+        &self.batch
+    }
+
+    /// Mutable access for pack paths that track their own accounting.
+    /// Prefer [`pack_into`](Self::pack_into), which maintains the arena's
+    /// allocation/copy counters.
+    pub fn batch_mut(&mut self) -> &mut PackedBatch {
+        &mut self.batch
+    }
+
+    /// Pack into the slot through `f` (typically the fused engine's
+    /// `execute_into`), enforcing the slot's byte reservation and
+    /// recording whether the pack had to grow the slot's buffers —
+    /// the counters behind [`ArenaStats::steady_allocs`].
+    pub fn pack_into<F>(&mut self, required_bytes: u64, f: F) -> Result<()>
+    where
+        F: FnOnce(&mut PackedBatch) -> Result<()>,
+    {
+        if required_bytes > self.capacity_bytes {
+            return Err(EtlError::Mem(format!(
+                "staging slot {} overflow: batch needs {required_bytes} B but the slot \
+                 reserves {} B (grow ArenaConfig::slot_bytes or shrink the shard)",
+                self.index, self.capacity_bytes
+            )));
+        }
+        self.grew = false;
+        let before = (
+            self.batch.dense.capacity(),
+            self.batch.sparse.capacity(),
+            self.batch.labels.capacity(),
+        );
+        f(&mut self.batch)?;
+        let after = (
+            self.batch.dense.capacity(),
+            self.batch.sparse.capacity(),
+            self.batch.labels.capacity(),
+        );
+        self.grew = after != before;
+        self.packs += 1;
+        self.packed_bytes = self.batch.bytes();
+        // `required_bytes` may be a caller estimate (the no-engine
+        // fallback passes the slot capacity); re-check the actual payload
+        // so an oversized pack can never silently overlap the next slot.
+        if self.packed_bytes > self.capacity_bytes {
+            return Err(EtlError::Mem(format!(
+                "staging slot {} overflow: packed {} B into a {} B reservation \
+                 (grow ArenaConfig::slot_bytes or shrink the shard)",
+                self.index, self.packed_bytes, self.capacity_bytes
+            )));
+        }
+        Ok(())
+    }
+
+    /// Borrowed device-addressed view of the whole staged batch.
+    pub fn view(&self) -> DeviceBatchView<'_> {
+        DeviceBatchView {
+            data: self.batch.view(),
+            vaddr: self.vaddr,
+            slot: self.index,
+            epoch: self.epoch,
+        }
+    }
+
+    /// Per-training-step views of `step_rows` rows each (the incomplete
+    /// tail is dropped, matching DLRM's fixed batch shapes). The trainer
+    /// steps on these in place — no copy leaves the slot.
+    pub fn chunk_views(&self, step_rows: usize) -> Vec<DeviceBatchView<'_>> {
+        self.batch
+            .chunk_views(step_rows)
+            .into_iter()
+            .map(|data| DeviceBatchView {
+                data,
+                vaddr: self.vaddr,
+                slot: self.index,
+                epoch: self.epoch,
+            })
+            .collect()
+    }
+}
+
+/// A borrowed view of a staged batch living in device memory: the payload
+/// slices plus the device address it is resident at. What the trainer
+/// consumes in place (see [`crate::runtime::Trainer::step_device`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceBatchView<'a> {
+    /// The packed payload, borrowed straight from the slot.
+    pub data: PackedBatchView<'a>,
+    /// Device virtual address of the backing slot.
+    pub vaddr: u64,
+    /// Backing slot index.
+    pub slot: usize,
+    /// Slot epoch this view belongs to.
+    pub epoch: u64,
+}
+
+impl DeviceBatchView<'_> {
+    /// Payload bytes of this view.
+    pub fn bytes(&self) -> u64 {
+        self.data.bytes()
+    }
+}
+
+struct ArenaInner {
+    /// Slots currently owned by the arena (credits available).
+    free: Vec<StagingSlot>,
+    /// Current epoch per slot index; a released slot must match.
+    epochs: Vec<u64>,
+    /// No further acquires (consumer exited); wakes blocked producers.
+    closed: bool,
+    stats: ArenaStats,
+    /// The unified address space the region is registered in.
+    mmu: Mmu,
+}
+
+/// The staging arena. See module docs for the protocol; thread-safe — the
+/// producer and consumer sides share it by reference across threads.
+pub struct DeviceArena {
+    inner: Mutex<ArenaInner>,
+    avail: Condvar,
+    cfg: ArenaConfig,
+    base_vaddr: u64,
+    id: u64,
+}
+
+impl DeviceArena {
+    /// Build an arena of `cfg.slots` slots, registering the whole region
+    /// as GPU pages in a fresh MMU address space.
+    pub fn new(cfg: ArenaConfig) -> DeviceArena {
+        assert!(cfg.slots >= 1, "arena needs at least one slot");
+        assert!(cfg.slot_bytes >= 1, "slot_bytes must be positive");
+        let id = NEXT_ARENA_ID.fetch_add(1, Ordering::Relaxed);
+        let mut mmu = Mmu::default();
+        let base_vaddr = mmu.map(MemClass::Gpu, cfg.slots as u64 * cfg.slot_bytes, 0);
+        // Reverse index order: `acquire` pops from the back, so the first
+        // credits hand out slot 0, 1, … in address order.
+        let free = (0..cfg.slots)
+            .rev()
+            .map(|i| StagingSlot {
+                index: i,
+                epoch: 0,
+                vaddr: base_vaddr + i as u64 * cfg.slot_bytes,
+                capacity_bytes: cfg.slot_bytes,
+                arena_id: id,
+                packs: 0,
+                grew: false,
+                packed_bytes: 0,
+                batch: PackedBatch::default(),
+            })
+            .collect();
+        DeviceArena {
+            inner: Mutex::new(ArenaInner {
+                free,
+                epochs: vec![0; cfg.slots],
+                closed: false,
+                stats: ArenaStats::default(),
+                mmu,
+            }),
+            avail: Condvar::new(),
+            cfg,
+            base_vaddr,
+            id,
+        }
+    }
+
+    /// Convenience: `slots` slots at the default per-slot reservation.
+    pub fn with_slots(slots: usize) -> DeviceArena {
+        DeviceArena::new(ArenaConfig { slots, ..ArenaConfig::default() })
+    }
+
+    /// The arena's sizing.
+    pub fn config(&self) -> &ArenaConfig {
+        &self.cfg
+    }
+
+    /// Base virtual address of the region in the MMU address space.
+    pub fn base_vaddr(&self) -> u64 {
+        self.base_vaddr
+    }
+
+    /// Blocking acquire: waits for a credit (free slot). Returns `None`
+    /// once the arena is [`close`](Self::close)d — the consumer exited, so
+    /// producers must stop rather than wait for credits that will never
+    /// return.
+    pub fn acquire(&self) -> Option<StagingSlot> {
+        let mut inner = self.inner.lock().expect("arena poisoned");
+        let mut waited: Option<std::time::Instant> = None;
+        loop {
+            if inner.closed {
+                return None;
+            }
+            if let Some(slot) = inner.free.pop() {
+                inner.stats.acquires += 1;
+                if let Some(t0) = waited {
+                    inner.stats.acquire_wait_s += t0.elapsed().as_secs_f64();
+                }
+                return Some(slot);
+            }
+            if waited.is_none() {
+                waited = Some(std::time::Instant::now());
+                inner.stats.stalls += 1;
+            }
+            inner = self.avail.wait(inner).expect("arena poisoned");
+        }
+    }
+
+    /// Non-blocking acquire: `None` when every slot is in flight (or the
+    /// arena is closed) — the backpressure signal.
+    pub fn try_acquire(&self) -> Option<StagingSlot> {
+        let mut inner = self.inner.lock().expect("arena poisoned");
+        if inner.closed {
+            return None;
+        }
+        let slot = inner.free.pop();
+        if slot.is_some() {
+            inner.stats.acquires += 1;
+        }
+        slot
+    }
+
+    /// Return a slot's credit: validates the handle, bumps the slot epoch
+    /// (reclamation), folds the slot's pack accounting into the arena
+    /// stats, and wakes one blocked producer.
+    pub fn release(&self, mut slot: StagingSlot) -> Result<()> {
+        let mut inner = self.inner.lock().expect("arena poisoned");
+        if slot.arena_id != self.id {
+            return Err(EtlError::Mem(format!(
+                "slot released to a foreign arena (slot arena {}, this arena {})",
+                slot.arena_id, self.id
+            )));
+        }
+        if slot.epoch != inner.epochs[slot.index] {
+            return Err(EtlError::Mem(format!(
+                "stale slot {}: handle epoch {} but the arena is at epoch {}",
+                slot.index, slot.epoch, inner.epochs[slot.index]
+            )));
+        }
+        inner.epochs[slot.index] += 1;
+        inner.stats.releases += 1;
+        inner.stats.packed_bytes += slot.packed_bytes;
+        if slot.grew {
+            if slot.packs > 1 {
+                inner.stats.steady_allocs += 1;
+            } else {
+                inner.stats.warmup_allocs += 1;
+            }
+        }
+        slot.epoch = inner.epochs[slot.index];
+        slot.grew = false;
+        slot.packed_bytes = 0;
+        inner.free.push(slot);
+        drop(inner);
+        self.avail.notify_one();
+        Ok(())
+    }
+
+    /// Close the arena: blocked and future `acquire`s return `None`.
+    /// Credits may still be released afterwards.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().expect("arena poisoned");
+        inner.closed = true;
+        drop(inner);
+        self.avail.notify_all();
+    }
+
+    /// Credits currently available.
+    pub fn available(&self) -> usize {
+        self.inner.lock().expect("arena poisoned").free.len()
+    }
+
+    /// Slots currently in flight (acquired, not yet released).
+    pub fn outstanding(&self) -> usize {
+        let inner = self.inner.lock().expect("arena poisoned");
+        self.cfg.slots - inner.free.len()
+    }
+
+    /// Snapshot of the zero-copy counters.
+    pub fn stats(&self) -> ArenaStats {
+        self.inner.lock().expect("arena poisoned").stats
+    }
+
+    /// Translate a device virtual address through the arena's MMU entry
+    /// (tests / buffer-descriptor plumbing).
+    pub fn translate(&self, vaddr: u64) -> Result<(MemClass, u64)> {
+        let mut inner = self.inner.lock().expect("arena poisoned");
+        let (class, paddr, _cycles) = inner.mmu.translate(vaddr)?;
+        Ok((class, paddr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_arena(slots: usize, slot_bytes: u64) -> DeviceArena {
+        DeviceArena::new(ArenaConfig { slots, slot_bytes })
+    }
+
+    fn pack_rows(slot: &mut StagingSlot, rows: usize) -> Result<()> {
+        let need = (rows * 3 * 4) as u64; // 1 dense + 1 sparse + label
+        slot.pack_into(need, |out| {
+            out.rows = rows;
+            out.n_dense = 1;
+            out.n_sparse = 1;
+            out.dense.clear();
+            out.dense.resize(rows, 1.0);
+            out.sparse.clear();
+            out.sparse.resize(rows, 2);
+            out.labels.clear();
+            out.labels.resize(rows, 0.0);
+            Ok(())
+        })
+    }
+
+    #[test]
+    fn arena_region_is_gpu_mapped() {
+        let a = small_arena(3, 1 << 20);
+        let s = a.try_acquire().unwrap();
+        assert_eq!(s.vaddr(), a.base_vaddr());
+        let (class, _) = a.translate(s.vaddr()).unwrap();
+        assert_eq!(class, MemClass::Gpu);
+        // Last byte of the last slot still translates.
+        let last = a.base_vaddr() + 3 * (1 << 20) - 1;
+        assert_eq!(a.translate(last).unwrap().0, MemClass::Gpu);
+        a.release(s).unwrap();
+    }
+
+    #[test]
+    fn exhaustion_backpressures_and_release_unblocks() {
+        let a = small_arena(2, 1 << 16);
+        let s1 = a.try_acquire().unwrap();
+        let s2 = a.try_acquire().unwrap();
+        assert!(a.try_acquire().is_none(), "third credit must bounce");
+        assert_eq!(a.outstanding(), 2);
+
+        // A blocked acquire resumes once another thread releases.
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| a.acquire());
+            // The stall counter ticks exactly when the waiter blocks.
+            while a.stats().stalls == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            a.release(s1).unwrap();
+            let got = waiter.join().unwrap();
+            assert!(got.is_some());
+            a.release(got.unwrap()).unwrap();
+        });
+        a.release(s2).unwrap();
+        let st = a.stats();
+        assert_eq!(st.acquires, 3);
+        assert_eq!(st.releases, 3);
+        assert!(st.stalls >= 1);
+        assert!(st.acquire_wait_s > 0.0);
+    }
+
+    #[test]
+    fn close_wakes_blocked_acquire() {
+        let a = small_arena(1, 1 << 16);
+        let s = a.try_acquire().unwrap();
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| a.acquire());
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            a.close();
+            assert!(waiter.join().unwrap().is_none());
+        });
+        // Releasing after close is still legal (consumer drains last).
+        a.release(s).unwrap();
+        assert!(a.try_acquire().is_none(), "closed arena hands out nothing");
+    }
+
+    #[test]
+    fn epoch_reclamation_rejects_stale_handles() {
+        let a = small_arena(1, 1 << 16);
+        let s = a.try_acquire().unwrap();
+        assert_eq!(s.epoch(), 0);
+        a.release(s).unwrap();
+        let mut s = a.try_acquire().unwrap();
+        assert_eq!(s.epoch(), 1);
+        // Forge a stale handle (same-module test access).
+        s.epoch = 0;
+        let err = a.release(s).unwrap_err();
+        assert!(err.to_string().contains("stale slot"), "{err}");
+    }
+
+    #[test]
+    fn foreign_slot_is_rejected() {
+        let a = small_arena(1, 1 << 16);
+        let b = small_arena(1, 1 << 16);
+        let s = a.try_acquire().unwrap();
+        let err = b.release(s).unwrap_err();
+        assert!(err.to_string().contains("foreign arena"), "{err}");
+    }
+
+    #[test]
+    fn pack_into_tracks_warmup_then_steady_state() {
+        let a = small_arena(1, 1 << 16);
+        for _round in 0..4 {
+            let mut s = a.acquire().unwrap();
+            pack_rows(&mut s, 100).unwrap();
+            assert_eq!(s.packed_bytes(), 100 * 3 * 4);
+            a.release(s).unwrap();
+        }
+        let st = a.stats();
+        // First pack allocates (warmup); reuse packs must not.
+        assert_eq!(st.warmup_allocs, 1, "{st:?}");
+        assert_eq!(st.steady_allocs, 0, "{st:?}");
+        assert_eq!(st.packed_bytes, 4 * 100 * 3 * 4);
+    }
+
+    #[test]
+    fn slot_overflow_is_an_arena_exhaustion_error() {
+        let a = small_arena(1, 64); // 64-byte slot
+        let mut s = a.acquire().unwrap();
+        let err = pack_rows(&mut s, 1000).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        a.release(s).unwrap();
+
+        // The post-pack check fires even when the caller's estimate was
+        // too low (the no-engine fallback passes the slot capacity).
+        let mut s = a.acquire().unwrap();
+        let err = s
+            .pack_into(0, |out| {
+                out.rows = 100;
+                out.n_dense = 0;
+                out.n_sparse = 0;
+                out.dense.clear();
+                out.sparse.clear();
+                out.labels.clear();
+                out.labels.resize(100, 0.0);
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        a.release(s).unwrap();
+    }
+
+    #[test]
+    fn views_carry_device_addresses() {
+        let a = small_arena(2, 1 << 16);
+        let s0 = a.acquire().unwrap();
+        let mut s1 = a.acquire().unwrap();
+        pack_rows(&mut s1, 10).unwrap();
+        assert_eq!(s1.vaddr(), a.base_vaddr() + (1 << 16));
+        let v = s1.view();
+        assert_eq!(v.vaddr, s1.vaddr());
+        assert_eq!(v.data.rows, 10);
+        assert_eq!(v.bytes(), s1.packed_bytes());
+        let chunks = s1.chunk_views(4);
+        assert_eq!(chunks.len(), 2); // 10 rows → two full 4-row steps
+        assert!(chunks.iter().all(|c| c.slot == 1 && c.vaddr == s1.vaddr()));
+        // Views borrow the slot payload in place (no copy).
+        assert!(std::ptr::eq(v.data.dense.as_ptr(), s1.batch().dense.as_ptr()));
+        a.release(s0).unwrap();
+        a.release(s1).unwrap();
+    }
+}

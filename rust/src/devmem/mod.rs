@@ -1,0 +1,60 @@
+//! Zero-copy device-memory subsystem (paper §3, Fig. 3): a pinned staging
+//! arena over a simulated GPU memory region plus a P2P DMA transfer
+//! engine, completing the producer→trainer path as a true zero-copy
+//! dataflow.
+//!
+//! The paper's headline ingest claim is that the format-aware packer
+//! "streams training-ready batches directly into GPU memory via P2P DMA
+//! transfers, enabling zero-copy ingest". Before this subsystem the live
+//! train loop handed heap-allocated `PackedBatch`es over a channel — every
+//! shard was packed into fresh host memory and then logically copied to
+//! the trainer. Now the fused engine packs each tile **once, directly into
+//! an arena-backed staging slot**, the transfer engine accounts the
+//! chunked P2P DMA that makes the slot resident in GPU memory, and the
+//! trainer steps **in place** on borrowed [`DeviceBatchView`]s, returning
+//! the slot's credit when done.
+//!
+//! # End-to-end data path
+//!
+//! ```text
+//!   ingest workers          producer thread                consumer thread
+//!  ┌──────────────┐   ┌──────────────────────────┐   ┌─────────────────────┐
+//!  │ shard I/O    │   │  DeviceArena::acquire    │   │  pop DeviceBatch    │
+//!  │ (synth/rcol/ │──▶│  fused exec ──▶ pack     │──▶│  trainer.step_device│
+//!  │  tsv chunks) │   │  straight into the slot  │   │  (in-place views)   │
+//!  └──────────────┘   │  TransferEngine::submit  │   │  arena.release      │
+//!        ▲            │  (chunked P2P DMA sim)   │   │  (credit returns)   │
+//!        │            └──────────────────────────┘   └─────────────────────┘
+//!        │                        │                            │
+//!        └── recycled Batch ──────┘        StagingSlot credits ◀┘
+//! ```
+//!
+//! * [`DeviceArena`] — a slab allocator over a fixed simulated GPU region
+//!   (registered in the [`crate::memsys::Mmu`] address space as
+//!   [`crate::memsys::MemClass::Gpu`] pages) handing out [`StagingSlot`]s
+//!   with epoch-based reclamation and credit-gated backpressure: `acquire`
+//!   blocks while every slot is in flight, exactly like the DMA engine
+//!   waiting for a staging credit (§3, Fig. 3).
+//! * [`TransferEngine`] — schedules chunked P2P DMA writes through the
+//!   calibrated [`crate::memsys::ChannelModel`] (Fig. 11), serializing
+//!   transfers on one engine clock so a slot's transfer overlaps the next
+//!   shard's fused exec, with per-transfer latency/bandwidth records.
+//! * [`DeviceBatchView`] — a borrowed, device-addressed view of a staged
+//!   batch; the trainer consumes it in place (no copy, no allocation).
+//!
+//! # Zero-copy invariants (pinned by `rust/tests/prop_devmem.rs`)
+//!
+//! * each packed byte is written exactly once, by the fused packer,
+//!   directly into arena-backed slot memory ([`ArenaStats::packed_bytes`]
+//!   equals the byte volume the trainer consumed);
+//! * after each slot's first pack (warmup), the steady-state loop performs
+//!   **zero** per-shard `PackedBatch` heap allocations
+//!   ([`ArenaStats::steady_allocs`] stays 0);
+//! * arena-backed delivery is bit-identical to the heap `PackedBatch`
+//!   channel path across worker counts × slot counts × arena sizes.
+
+pub mod arena;
+pub mod transfer;
+
+pub use arena::{ArenaConfig, ArenaStats, DeviceArena, DeviceBatchView, StagingSlot};
+pub use transfer::{TransferConfig, TransferEngine, TransferRecord};

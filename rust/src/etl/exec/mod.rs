@@ -504,6 +504,28 @@ impl FusedEngine {
         Ok(())
     }
 
+    /// Packed payload bytes this engine's layout produces for `rows` rows
+    /// (dense f32 slots + sparse i32 indices + f32 labels).
+    pub fn packed_bytes_for(&self, rows: usize) -> u64 {
+        (rows * (self.n_dense + self.n_sparse + 1) * 4) as u64
+    }
+
+    /// Apply + pack in one pass **directly into an arena staging slot**
+    /// (the zero-copy path of [`crate::devmem`]): tiles land in
+    /// arena-backed device staging memory, each packed byte written
+    /// exactly once, with the slot's byte reservation enforced and its
+    /// allocation counters maintained. In the steady state the slot's
+    /// buffers are already sized, so this allocates nothing.
+    pub fn execute_into_slot(
+        &self,
+        input: &Batch,
+        state: &EtlState,
+        slot: &mut crate::devmem::StagingSlot,
+    ) -> Result<()> {
+        let need = self.packed_bytes_for(input.rows());
+        slot.pack_into(need, |out| self.execute_into(input, state, out))
+    }
+
     /// Execute with a recycled destination buffer from `pool`.
     pub fn execute_pooled(
         &self,
@@ -773,14 +795,7 @@ fn pack_tile(
 }
 
 fn empty_batch() -> PackedBatch {
-    PackedBatch {
-        rows: 0,
-        n_dense: 0,
-        n_sparse: 0,
-        dense: Vec::new(),
-        sparse: Vec::new(),
-        labels: Vec::new(),
-    }
+    PackedBatch::default()
 }
 
 /// Walk back from `from` through sinks and unary ops, collecting
@@ -1434,6 +1449,40 @@ mod tests {
         let engine = FusedEngine::compile(&dag, ExecConfig::default()).unwrap();
         let err = engine.execute(&batch, &EtlState::default()).unwrap_err();
         assert!(err.to_string().contains("out of i32 range"), "{err}");
+    }
+
+    #[test]
+    fn execute_into_slot_is_bit_identical_and_reuses_slot_memory() {
+        use crate::devmem::DeviceArena;
+
+        let mut spec = DatasetSpec::dataset_i(0.001);
+        spec.shards = 1;
+        let shard = spec.shard(0, 3);
+        let dag = build(PipelineKind::II, &spec.schema);
+        let engine = FusedEngine::compile(&dag, ExecConfig::default()).unwrap();
+        let state = engine.fit(&shard).unwrap();
+        let want = engine.execute(&shard, &state).unwrap();
+        assert_eq!(engine.packed_bytes_for(shard.rows()), want.bytes());
+
+        let arena = DeviceArena::with_slots(1);
+        let mut ptr = std::ptr::null();
+        for round in 0..3 {
+            let mut slot = arena.acquire().unwrap();
+            engine.execute_into_slot(&shard, &state, &mut slot).unwrap();
+            assert_packed_eq(&want, slot.batch());
+            assert_eq!(slot.packed_bytes(), want.bytes());
+            if round == 0 {
+                ptr = slot.batch().dense.as_ptr();
+            } else {
+                // Same allocation every round: packed in place, zero
+                // steady-state allocation.
+                assert_eq!(slot.batch().dense.as_ptr(), ptr);
+            }
+            arena.release(slot).unwrap();
+        }
+        let stats = arena.stats();
+        assert_eq!(stats.steady_allocs, 0, "{stats:?}");
+        assert_eq!(stats.packed_bytes, 3 * want.bytes());
     }
 
     #[test]

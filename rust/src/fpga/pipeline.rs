@@ -140,14 +140,7 @@ impl Pipeline {
     /// is the producer hot path of the live train loop; `process` remains
     /// the reference (columnar) executor.
     pub fn process_packed(&self, shard: &Batch) -> Result<(PackedBatch, ShardTiming)> {
-        let mut out = PackedBatch {
-            rows: 0,
-            n_dense: 0,
-            n_sparse: 0,
-            dense: Vec::new(),
-            sparse: Vec::new(),
-            labels: Vec::new(),
-        };
+        let mut out = PackedBatch::default();
         let timing = self.process_packed_into(shard, &mut out)?;
         Ok((out, timing))
     }
@@ -181,6 +174,52 @@ impl Pipeline {
             elapsed_s: ingest_s.max(compute_s),
             host_s,
         })
+    }
+
+    /// Apply + pack fused in one pass **into an arena staging slot** —
+    /// the zero-copy producer hot path ([`crate::devmem`]): the fused
+    /// engine writes each tile once, directly into arena-backed device
+    /// staging memory, and the slot's byte reservation and allocation
+    /// counters are enforced on the way. Falls back to the reference
+    /// executor + packer (which allocates) when no engine compiled.
+    pub fn process_into_slot(
+        &self,
+        shard: &Batch,
+        slot: &mut crate::devmem::StagingSlot,
+    ) -> Result<ShardTiming> {
+        match &self.engine {
+            Some(engine) => {
+                let t0 = std::time::Instant::now();
+                engine.execute_into_slot(shard, &self.state, slot)?;
+                let host_s = t0.elapsed().as_secs_f64();
+
+                let profile = StreamProfile::from_batch(shard);
+                let ingest_bytes = profile.total();
+                let egress_bytes = (slot.batch().rows as u64) * self.plan.runtime.packed_row_bytes;
+                let ingest_s = ingest_bytes as f64 / self.plan.runtime.source.stream_bandwidth();
+                let compute_s = self.plan.apply_seconds(profile);
+                Ok(ShardTiming {
+                    ingest_bytes,
+                    egress_bytes,
+                    ingest_s,
+                    compute_s,
+                    elapsed_s: ingest_s.max(compute_s),
+                    host_s,
+                })
+            }
+            None => {
+                // Reference fallback: pack on the heap, then account the
+                // move into the slot (not zero-copy — engines without a
+                // pack layout cannot pin the in-place path).
+                let mut timing = ShardTiming::default();
+                let capacity = slot.capacity_bytes();
+                slot.pack_into(capacity, |out| {
+                    timing = self.process_packed_into(shard, out)?;
+                    Ok(())
+                })?;
+                Ok(timing)
+            }
+        }
     }
 
     /// Simulated seconds to ETL an entire dataset of `bytes` raw input
@@ -281,6 +320,23 @@ mod tests {
         let (got, t) = p.process_packed(&shard).unwrap();
         assert_eq!(want, got);
         assert!(t.egress_bytes > 0 && t.host_s >= 0.0);
+    }
+
+    #[test]
+    fn process_into_slot_matches_process_packed() {
+        let (mut p, spec) = deployed(PipelineKind::II);
+        let shard = spec.shard(0, 42);
+        p.fit(&shard).unwrap();
+        let (want, want_t) = p.process_packed(&shard).unwrap();
+
+        let arena = crate::devmem::DeviceArena::with_slots(2);
+        let mut slot = arena.acquire().unwrap();
+        let t = p.process_into_slot(&shard, &mut slot).unwrap();
+        assert_eq!(&want, slot.batch());
+        assert_eq!(t.egress_bytes, want_t.egress_bytes);
+        assert_eq!(t.ingest_bytes, want_t.ingest_bytes);
+        assert_eq!(slot.packed_bytes(), want.bytes());
+        arena.release(slot).unwrap();
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //!   channel models, MMU, crossbars, credit-based backpressure.
 //! * [`coordinator`] — the co-scheduling runtime: format-aware packer,
 //!   double-buffered GPU staging, ETL/training overlap.
+//! * [`devmem`] — the zero-copy device-memory subsystem: pinned staging
+//!   arena over a simulated GPU region + P2P DMA transfer engine; the
+//!   trainer consumes staged batches in place.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
 //! * [`baselines`] — CPU (pandas-like, Beam-like) and GPU (NVTabular-like)
 //!   comparison systems.
@@ -30,6 +33,7 @@ pub mod baselines;
 pub mod bench_harness;
 pub mod coordinator;
 pub mod dataio;
+pub mod devmem;
 pub mod error;
 pub mod etl;
 pub mod fpga;
@@ -44,6 +48,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::dataio::dataset::{DatasetKind, DatasetSpec, ShardSource};
     pub use crate::dataio::ingest::{AsyncIngest, BatchPool, DeliveryPolicy, IngestConfig, ShardInput};
+    pub use crate::devmem::{ArenaConfig, DeviceArena, StagingSlot, TransferConfig, TransferEngine};
     pub use crate::error::{EtlError, Result};
     pub use crate::etl::column::{Batch, ColType, Column};
     pub use crate::etl::dag::{Dag, EtlState, SinkRole};

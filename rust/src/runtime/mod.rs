@@ -20,6 +20,7 @@ pub mod checkpoint;
 pub mod pjrt;
 
 use crate::coordinator::packer::{PackedBatch, PackedBatchView};
+use crate::devmem::DeviceBatchView;
 use crate::error::{EtlError, Result};
 use crate::util::prng::Rng;
 use artifacts::{ArtifactPaths, ModelMeta};
@@ -166,6 +167,14 @@ impl Trainer {
         self.state[last] = loss;
         self.steps += 1;
         Ok(())
+    }
+
+    /// Run one training step **in place** on a batch staged in device
+    /// memory ([`crate::devmem`]): the payload is borrowed straight from
+    /// the arena slot the DMA engine made resident — the zero-copy
+    /// consumption end of the paper's P2P ingest path (§3, Fig. 3).
+    pub fn step_device(&mut self, batch: &DeviceBatchView<'_>) -> Result<()> {
+        self.step_view(&batch.data)
     }
 
     /// Read the loss slot of the current state.
@@ -331,6 +340,28 @@ mod tests {
         a.step(&batch).unwrap();
         b.step_view(&batch.view()).unwrap();
         assert_eq!(a.state_to_vec().unwrap(), b.state_to_vec().unwrap());
+    }
+
+    #[test]
+    fn step_device_matches_step_on_arena_staged_batch() {
+        let mut a = Trainer::from_meta(tiny_meta(), 5);
+        let mut b = Trainer::from_meta(tiny_meta(), 5);
+        let batch = tiny_batch();
+        let arena = crate::devmem::DeviceArena::with_slots(1);
+        let mut slot = arena.acquire().unwrap();
+        slot.pack_into(batch.bytes(), |out| {
+            *out = batch.clone();
+            Ok(())
+        })
+        .unwrap();
+
+        a.step(&batch).unwrap();
+        for view in slot.chunk_views(4) {
+            b.step_device(&view).unwrap();
+        }
+        assert_eq!(b.steps, 1);
+        assert_eq!(a.state_to_vec().unwrap(), b.state_to_vec().unwrap());
+        arena.release(slot).unwrap();
     }
 
     #[test]

@@ -3,8 +3,8 @@
 
 use piperec::baselines::{TrainerModel, CPU_ETL_BW_12CORE};
 use piperec::coordinator::{
-    cpu_gpu_config, pack, piperec_config, simulate_overlap, train, PackLayout, StagingQueue,
-    TrainConfig,
+    cpu_gpu_config, pack, piperec_config, simulate_overlap, train, DataPath, PackLayout,
+    StagingQueue, TrainConfig,
 };
 use piperec::dataio::dataset::DatasetSpec;
 use piperec::dataio::ingest::{DeliveryPolicy, IngestConfig};
@@ -149,24 +149,81 @@ fn train_loop_reports_ingest_vs_exec_time_split() {
     let cfg = TrainConfig {
         max_steps: 50,
         loss_every: 2,
-        ingest: IngestConfig { workers: 2, channel_depth: 2, policy: DeliveryPolicy::InOrder },
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
+        },
         ..Default::default()
     };
     let report = train(&pipe, &spec, &mut trainer, &cfg).unwrap();
 
     assert!(report.steps > 0, "no steps ran");
     assert_eq!(report.shards, 3, "every shard flows through the producer");
-    // The split is reported separately and is self-consistent: both legs
-    // are non-negative, the exec leg is real work (> 0), and the producer
-    // thread cannot have spent more than the run's wall time in the two
+    // The split is reported separately and is self-consistent: every leg
+    // is non-negative, the exec leg is real work (> 0), and the producer
+    // thread cannot have spent more than the run's wall time in the
     // legs combined.
     assert!(report.etl_host_s > 0.0, "{report:?}");
     assert!(report.ingest_wait_s >= 0.0, "{report:?}");
+    assert!(report.transfer_wait_s >= 0.0, "{report:?}");
     assert!(
-        report.ingest_wait_s + report.etl_host_s <= report.wall_s + 0.05,
+        report.ingest_wait_s + report.etl_host_s + report.transfer_wait_s
+            <= report.wall_s + 0.05,
         "split exceeds wall time: {report:?}"
     );
     assert!(report.etl_sim_s > 0.0);
+    // Default path is the zero-copy arena: the DMA engine moved every
+    // packed byte, nothing was copied on the host, and the steady state
+    // allocated nothing per shard.
+    assert!(report.dma_sim_s > 0.0, "{report:?}");
+    assert!(report.staged_bytes > 0, "{report:?}");
+    assert_eq!(report.host_copy_bytes, 0, "zero-copy path copied bytes: {report:?}");
+    assert_eq!(report.steady_allocs, 0, "{report:?}");
+}
+
+#[test]
+fn arena_and_channel_paths_train_bit_identically() {
+    // The zero-copy arena path must be a pure transport change: same
+    // batches, same order, same losses as the heap channel path.
+    let mut spec = DatasetSpec::dataset_i(0.004);
+    spec.shards = 3;
+    let dag = build(PipelineKind::II, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+    let mut pipe = Pipeline::new(plan);
+    pipe.fit(&spec.shard(0, 42)).unwrap();
+
+    let run_path = |pipe: &Pipeline, path: DataPath| {
+        let mut trainer = Trainer::from_meta(criteo_meta(256), 7);
+        let cfg = TrainConfig {
+            max_steps: 60,
+            loss_every: 1,
+            path,
+            ingest: IngestConfig {
+                workers: 2,
+                channel_depth: 2,
+                policy: DeliveryPolicy::InOrder,
+                ..IngestConfig::default()
+            },
+            ..Default::default()
+        };
+        train(pipe, &spec, &mut trainer, &cfg).unwrap()
+    };
+    let arena = run_path(&pipe, DataPath::Arena);
+    let channel = run_path(&pipe, DataPath::Channel);
+
+    assert_eq!(arena.steps, channel.steps);
+    assert_eq!(arena.shards, channel.shards);
+    assert_eq!(arena.losses.len(), channel.losses.len());
+    for ((sa, la), (sc, lc)) in arena.losses.iter().zip(&channel.losses) {
+        assert_eq!(sa, sc);
+        assert_eq!(la.to_bits(), lc.to_bits(), "loss diverged at step {sa}");
+    }
+    // Same packed bytes staged; only the channel path copies them.
+    assert_eq!(arena.staged_bytes, channel.staged_bytes);
+    assert_eq!(arena.host_copy_bytes, 0);
+    assert!(channel.host_copy_bytes > 0);
 }
 
 #[test]
@@ -188,6 +245,7 @@ fn train_loop_freshest_first_still_trains() {
             workers: 4,
             channel_depth: 1,
             policy: DeliveryPolicy::FreshestFirst,
+            ..IngestConfig::default()
         },
         ..Default::default()
     };

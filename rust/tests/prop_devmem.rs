@@ -1,0 +1,275 @@
+//! Property tests for the zero-copy device-memory subsystem
+//! (`piperec::devmem`): across random pipelines × ingest worker counts ×
+//! arena slot counts × arena sizes, packing into arena-backed staging
+//! slots must be bit-identical to the heap `PackedBatch` path, with zero
+//! per-shard heap allocations after warmup and every packed byte written
+//! exactly once (pinned by the arena's counters).
+//!
+//! CI reruns this suite under `--test-threads 1` and `--test-threads 8`
+//! so scheduling nondeterminism between ingest workers and the arena's
+//! credit protocol is exercised.
+
+use piperec::coordinator::packer::PackedBatch;
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{AsyncIngest, DeliveryPolicy, IngestConfig, ShardInput};
+use piperec::dataio::synth::SynthConfig;
+use piperec::devmem::{ArenaConfig, DeviceArena, TransferEngine};
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::exec::{ExecConfig, FusedEngine};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::util::prop::{check, Gen};
+
+/// Bitwise comparison of two packed batches (dense may legitimately carry
+/// NaN when a random chain omits FillMissing — compare f32 by bits).
+fn packed_bits_equal(a: &PackedBatch, b: &PackedBatch) -> Result<(), String> {
+    if (a.rows, a.n_dense, a.n_sparse) != (b.rows, b.n_dense, b.n_sparse) {
+        return Err(format!(
+            "shape mismatch: ({}, {}, {}) vs ({}, {}, {})",
+            a.rows, a.n_dense, a.n_sparse, b.rows, b.n_dense, b.n_sparse
+        ));
+    }
+    if a.sparse != b.sparse {
+        return Err("sparse payload differs".into());
+    }
+    if a.dense.len() != b.dense.len() || a.labels.len() != b.labels.len() {
+        return Err("payload length differs".into());
+    }
+    for (i, (x, y)) in a.dense.iter().zip(&b.dense).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("dense[{i}] differs: {x} vs {y}"));
+        }
+    }
+    for (i, (x, y)) in a.labels.iter().zip(&b.labels).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("labels[{i}] differs: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+/// A random mixed pipeline over `Schema::tabular("t", nd, ns, _)` — the
+/// same generator family as prop_streaming: dense chains (sometimes
+/// Bucketize/OneHot-terminated), sparse hex chains with optional
+/// VocabGen/SigridHash.
+fn random_dag(g: &mut Gen, nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-devmem");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+
+    for i in 0..nd {
+        let mut node = dag.source(format!("t_i{i}"), ColType::F32);
+        for _ in 0..g.usize(3) {
+            let op = match g.usize(3) {
+                0 => OpSpec::FillMissing {
+                    dense_default: g.f32_range(-1.0, 1.0),
+                    sparse_default: 0,
+                },
+                1 => OpSpec::Clamp { lo: 0.0, hi: g.f32_range(1.0, 1e6) },
+                _ => OpSpec::Logarithm,
+            };
+            node = dag.op(op, &[node]);
+        }
+        match g.usize(4) {
+            0 => {
+                let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
+                dag.sink(format!("bucket{i}"), b, SinkRole::SparseIndex);
+            }
+            1 => {
+                let b = dag.op(OpSpec::Bucketize { borders: vec![0.5, 2.0, 8.0] }, &[node]);
+                let oh = dag.op(OpSpec::OneHot { k: 4 }, &[b]);
+                dag.sink(format!("onehot{i}"), oh, SinkRole::Dense);
+            }
+            _ => dag.sink(format!("dense{i}"), node, SinkRole::Dense),
+        }
+    }
+
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 + g.u64(1 << 20) as i64 }, &[h]);
+        let node = match g.usize(3) {
+            0 => dag.vocab_op(OpSpec::VocabGen { expected: 32 }, m, format!("v{i}")),
+            1 => dag.op(OpSpec::SigridHash { m: 4096 }, &[m]),
+            _ => m,
+        };
+        dag.sink(format!("sparse{i}"), node, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn custom_spec(schema: Schema, rows: usize, shards: usize) -> DatasetSpec {
+    DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-devmem",
+        schema,
+        rows,
+        paper_rows: rows as u64,
+        shards,
+        synth: SynthConfig::default(),
+        ssd_bound: false,
+    }
+}
+
+#[test]
+fn prop_arena_path_bit_identical_to_heap_path() {
+    // Worker counts × slot counts × arena sizes are the acceptance
+    // matrix, exercised for EVERY random case.
+    check("arena_vs_heap", 8, |g| {
+        let nd = 1 + g.usize(2);
+        let ns = 1 + g.usize(2);
+        let schema = Schema::tabular("t", nd, ns, 64);
+        let dag = random_dag(g, nd, ns);
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+
+        let rows = 64 + g.usize(400);
+        let shards = 1 + g.usize(6);
+        let spec = custom_spec(schema, rows, shards);
+        let seed = g.u64(1 << 32);
+        let engine = FusedEngine::compile(
+            &dag,
+            ExecConfig { tile_rows: 1 + g.usize(256), threads: 1 + g.usize(3) },
+        )
+        .map_err(|e| e.to_string())?;
+        let state = engine.fit(&spec.shard(0, seed)).map_err(|e| e.to_string())?;
+
+        // Heap reference: the PackedBatch-by-value path the arena replaces.
+        let mut heap: Vec<(usize, PackedBatch)> = Vec::new();
+        for i in 0..spec.shards {
+            let shard = spec.shard(i, seed);
+            if shard.rows() == 0 {
+                continue;
+            }
+            heap.push((i, engine.execute(&shard, &state).map_err(|e| e.to_string())?));
+        }
+        let heap_bytes: u64 = heap.iter().map(|(_, p)| p.bytes()).sum();
+
+        for &workers in &[1usize, 2, 8] {
+            for &slots in &[2usize, 3, 5] {
+                // Arena sized exactly, generously, and at page scale.
+                let max_shard_bytes = engine.packed_bytes_for(spec.rows_per_shard());
+                for &slot_bytes in &[max_shard_bytes, 4 * max_shard_bytes, 2 << 20] {
+                    let slot_bytes = slot_bytes.max(max_shard_bytes);
+                    let label =
+                        format!("workers={workers} slots={slots} slot_bytes={slot_bytes}");
+                    let arena = DeviceArena::new(ArenaConfig { slots, slot_bytes });
+                    let mut dma = TransferEngine::p2p();
+                    let cfg = IngestConfig {
+                        workers,
+                        channel_depth: 2,
+                        policy: DeliveryPolicy::InOrder,
+                        ..IngestConfig::default()
+                    };
+                    let mut ingest =
+                        AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed }, &cfg);
+                    let mut got: Vec<(usize, PackedBatch)> = Vec::new();
+                    loop {
+                        let item = ingest.next().map_err(|e| e.to_string())?;
+                        let Some((i, shard)) = item else { break };
+                        let mut slot = arena
+                            .acquire()
+                            .ok_or_else(|| format!("{label}: arena closed unexpectedly"))?;
+                        engine
+                            .execute_into_slot(&shard, &state, &mut slot)
+                            .map_err(|e| format!("{label}: {e}"))?;
+                        ingest.recycle(shard);
+                        let t = dma.free_at_s();
+                        dma.submit(t, slot.packed_bytes());
+                        // The trainer would consume the slot in place here;
+                        // clone only to compare against the reference.
+                        got.push((i, slot.batch().clone()));
+                        arena.release(slot).map_err(|e| format!("{label}: {e}"))?;
+                    }
+                    if got.len() != heap.len() {
+                        return Err(format!(
+                            "{label}: staged {} batches, heap path produced {}",
+                            got.len(),
+                            heap.len()
+                        ));
+                    }
+                    for ((gi, gp), (hi, hp)) in got.iter().zip(&heap) {
+                        if gi != hi {
+                            return Err(format!("{label}: shard {gi} where {hi} expected"));
+                        }
+                        packed_bits_equal(hp, gp)
+                            .map_err(|e| format!("{label}: shard {gi}: {e}"))?;
+                    }
+                    let stats = arena.stats();
+                    // Every packed byte written exactly once, straight into
+                    // the arena: the released byte volume equals the heap
+                    // path's, and so does the DMA engine's.
+                    if stats.packed_bytes != heap_bytes {
+                        return Err(format!(
+                            "{label}: arena packed {} B, heap path packed {heap_bytes} B",
+                            stats.packed_bytes
+                        ));
+                    }
+                    if dma.total_bytes() != heap_bytes {
+                        return Err(format!(
+                            "{label}: DMA moved {} B, expected {heap_bytes} B",
+                            dma.total_bytes()
+                        ));
+                    }
+                    // Zero per-shard allocations after warmup: only a
+                    // slot's first pack may size its buffers.
+                    if stats.steady_allocs != 0 {
+                        return Err(format!(
+                            "{label}: {} steady-state allocations (warmup {})",
+                            stats.steady_allocs, stats.warmup_allocs
+                        ));
+                    }
+                    if stats.warmup_allocs > slots as u64 {
+                        return Err(format!(
+                            "{label}: {} warmup allocations for {slots} slots",
+                            stats.warmup_allocs
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_backpressure_bounds_outstanding_slots() {
+    // A producer that outruns the consumer can never hold more slots than
+    // the arena owns: try_acquire bounces once credits run out, and every
+    // credit comes back exactly once.
+    let spec = custom_spec(Schema::tabular("t", 1, 1, 64), 256, 4);
+    let dag = {
+        let mut dag = Dag::new("bp");
+        let l = dag.source("t_label", ColType::F32);
+        dag.sink("label", l, SinkRole::Label);
+        let d = dag.source("t_i0", ColType::F32);
+        dag.sink("dense0", d, SinkRole::Dense);
+        let c = dag.source("t_c0", ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[c]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink("sparse0", m, SinkRole::SparseIndex);
+        dag
+    };
+    let engine = FusedEngine::compile(&dag, ExecConfig { tile_rows: 64, threads: 1 }).unwrap();
+    let state = piperec::etl::dag::EtlState::default();
+
+    let arena = DeviceArena::new(ArenaConfig { slots: 2, slot_bytes: 1 << 20 });
+    let mut held = Vec::new();
+    for i in 0..2 {
+        let mut slot = arena.try_acquire().expect("credit available");
+        let shard = spec.shard(i, 9);
+        engine.execute_into_slot(&shard, &state, &mut slot).unwrap();
+        held.push(slot);
+    }
+    // Exhausted: the third acquire must backpressure, not allocate.
+    assert!(arena.try_acquire().is_none());
+    assert_eq!(arena.outstanding(), 2);
+    assert_eq!(arena.available(), 0);
+    for slot in held.drain(..) {
+        arena.release(slot).unwrap();
+    }
+    assert_eq!(arena.available(), 2);
+    let stats = arena.stats();
+    assert_eq!(stats.acquires, 2);
+    assert_eq!(stats.releases, 2);
+}

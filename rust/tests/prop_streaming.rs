@@ -156,7 +156,12 @@ fn prop_streaming_ingest_bit_identical_to_sync_producer() {
             for &depth in &[1usize, 4] {
                 for &policy in &[DeliveryPolicy::InOrder, DeliveryPolicy::FreshestFirst] {
                     let label = format!("workers={workers} depth={depth} policy={policy:?}");
-                    let cfg = IngestConfig { workers, channel_depth: depth, policy };
+                    let cfg = IngestConfig {
+                        workers,
+                        channel_depth: depth,
+                        policy,
+                        ..IngestConfig::default()
+                    };
                     let mut ingest =
                         AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed }, &cfg);
                     let mut got: Vec<(usize, PackedBatch)> = Vec::new();
@@ -243,6 +248,7 @@ fn prop_streaming_fit_on_ingested_shards_matches_sync_fit() {
             workers: 1 + g.usize(4),
             channel_depth: 1 + g.usize(3),
             policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
         };
         let mut ingest = AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed }, &cfg);
         let mut streamed = piperec::etl::dag::EtlState::default();

@@ -1,7 +1,11 @@
 //! L3 co-scheduling runtime (the paper's system contribution, §3): the
 //! format-aware packer, credit-gated P2P staging with double buffering,
-//! the ETL/training overlap scheduler, and the live training loop that
-//! composes the FPGA data plane with the PJRT trainer.
+//! the ETL/training overlap scheduler with its multi-device routing layer
+//! ([`RoutePolicy`]: round-robin for bit-reproducibility, least-loaded
+//! for throughput), and the live training loop that composes the FPGA
+//! data plane with the trainer — across one simulated GPU or a routed
+//! fleet of them ([`TrainConfig::devices`], per-device breakdowns in
+//! [`TrainReport::per_device`]).
 
 pub mod online;
 pub mod packer;
@@ -11,8 +15,11 @@ pub mod staging;
 pub mod train_loop;
 
 pub use packer::{pack, PackLayout, PackedBatch, PackedBatchView};
-pub use scheduler::{cpu_gpu_config, piperec_config, simulate_overlap, OverlapConfig, OverlapResult};
+pub use scheduler::{
+    cpu_gpu_config, piperec_config, simulate_overlap, utilization_trace, DeviceRouter,
+    LoadTracker, OverlapConfig, OverlapResult, RoutePolicy,
+};
 pub use online::{classify_psi, DriftDetector, DriftVerdict, FreshnessTracker, OnlineVocab};
 pub use sharding::{provision, route, ShardingPlan};
 pub use staging::{StagingConsumer, StagingQueue, StagingSim};
-pub use train_loop::{run as train, DataPath, TrainConfig, TrainReport};
+pub use train_loop::{run as train, DataPath, DeviceReport, TrainConfig, TrainReport};

@@ -3,6 +3,16 @@
 //! per-window GPU utilization, and reproduces the end-to-end contrast
 //! between the CPU–GPU pipeline (irregular delivery, fluctuating
 //! utilization) and the FPGA–GPU pipeline (stable, near-saturated).
+//!
+//! The scheduler also owns the fleet's **routing layer**
+//! ([`DeviceRouter`]): when the staging dataflow feeds N simulated GPUs
+//! (`devmem::ArenaSet`), every ingested shard is assigned a device lane
+//! under a [`RoutePolicy`] — round-robin pins a bit-reproducible
+//! assignment, least-loaded follows the per-device outstanding-byte
+//! ledger ([`LoadTracker`]) for throughput under skewed shard costs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::coordinator::staging::StagingSim;
 use crate::memsys::channel::ChannelModel;
@@ -48,6 +58,18 @@ pub struct OverlapResult {
 
 /// Simulate the pipelined execution and produce the utilization trace.
 pub fn simulate_overlap(cfg: &OverlapConfig) -> OverlapResult {
+    if cfg.batches == 0 {
+        // Degenerate run: nothing executed, nothing traced. Guarding here
+        // keeps `mean_util` finite (0/0 would be NaN, which poisons any
+        // downstream Fig. 14 aggregation).
+        return OverlapResult {
+            total_s: 0.0,
+            busy_s: 0.0,
+            mean_util: 0.0,
+            trace: TimeSeries::default(),
+            producer_blocked_s: 0.0,
+        };
+    }
     let mut rng = Rng::new(cfg.seed);
     let mut staging = StagingSim::new(cfg.staging_buffers, cfg.channel);
 
@@ -86,11 +108,44 @@ pub fn simulate_overlap(cfg: &OverlapConfig) -> OverlapResult {
 
     // Utilization trace over fixed windows (~100 windows).
     let window = (total_s / 100.0).max(1e-9);
+    let trace = utilization_trace(&busy_intervals, total_s, window);
+
+    OverlapResult {
+        total_s,
+        busy_s,
+        mean_util: if total_s > 0.0 { busy_s / total_s } else { 0.0 },
+        trace,
+        producer_blocked_s: staging.blocked_s,
+    }
+}
+
+/// Per-window utilization trace over `[0, total_s)` (Fig. 14): each point
+/// is (window center, busy fraction). The trace covers **all** of
+/// `total_s` — the trailing window may be shorter than `window` and is
+/// normalized by its actual width, so busy time after the last full
+/// window is never silently dropped (it always counted toward the mean;
+/// now it shows in the trace too).
+///
+/// `busy_intervals` must be sorted by start time and non-overlapping (the
+/// single-GPU step sequence of `simulate_overlap` satisfies both).
+pub fn utilization_trace(
+    busy_intervals: &[(f64, f64)],
+    total_s: f64,
+    window: f64,
+) -> TimeSeries {
     let mut trace = TimeSeries::default();
-    let mut w_start = 0.0;
+    if total_s <= 0.0 || window <= 0.0 {
+        return trace;
+    }
+    let mut w_start = 0.0f64;
     let mut i = 0usize;
-    while w_start + window <= total_s + 1e-12 {
-        let w_end = w_start + window;
+    // The epsilon absorbs the float drift of repeated `w_start = w_end`
+    // accumulation: a genuine partial window is emitted, a sliver of pure
+    // rounding noise (≪ one window wide) is not.
+    let eps = window * 1e-6;
+    while w_start < total_s - eps {
+        let w_end = (w_start + window).min(total_s);
+        let width = w_end - w_start;
         let mut busy = 0.0;
         // Sum overlap of busy intervals with this window.
         for (s, e) in busy_intervals[i..].iter() {
@@ -103,16 +158,133 @@ pub fn simulate_overlap(cfg: &OverlapConfig) -> OverlapResult {
         while i < busy_intervals.len() && busy_intervals[i].1 <= w_end {
             i += 1;
         }
-        trace.push(w_start + window / 2.0, (busy / window).min(1.0));
+        trace.push(w_start + width / 2.0, (busy / width).min(1.0));
         w_start = w_end;
     }
+    trace
+}
 
-    OverlapResult {
-        total_s,
-        busy_s,
-        mean_util: busy_s / total_s,
-        trace,
-        producer_blocked_s: staging.blocked_s,
+/// How the fleet's routing layer assigns ingested shards to devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Device `k mod N` for the `k`-th routed shard — a bit-reproducible
+    /// assignment (the differential-testing and replay mode).
+    RoundRobin,
+    /// The device with the fewest outstanding routed bytes (ties break to
+    /// the lowest index) — throughput mode under skewed shard costs.
+    LeastLoaded,
+}
+
+/// Shared per-device outstanding-byte ledger: the router charges a device
+/// when a shard is routed to it, the consumer credits it back when the
+/// device finishes the batch. Lock-free so the routing thread and the
+/// consumer thread never contend.
+#[derive(Debug)]
+pub struct LoadTracker {
+    loads: Vec<AtomicU64>,
+}
+
+impl LoadTracker {
+    fn new(devices: usize) -> LoadTracker {
+        LoadTracker { loads: (0..devices).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Outstanding routed bytes on `device`.
+    pub fn load(&self, device: usize) -> u64 {
+        self.loads[device].load(Ordering::Relaxed)
+    }
+
+    fn charge(&self, device: usize, bytes: u64) {
+        self.loads[device].fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Credit `bytes` back once `device` finished the routed work.
+    pub fn complete(&self, device: usize, bytes: u64) {
+        // Saturating: a double-complete must not wrap the ledger.
+        let mut cur = self.loads[device].load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match self.loads[device].compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Snapshot of every device's outstanding bytes.
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// The shard→device routing layer of the multi-device train loop: the
+/// producer asks `route(bytes)` for each ingested shard, the consumer
+/// calls [`LoadTracker::complete`] when the device finishes it.
+#[derive(Debug)]
+pub struct DeviceRouter {
+    policy: RoutePolicy,
+    next: usize,
+    routed: u64,
+    tracker: Arc<LoadTracker>,
+}
+
+impl DeviceRouter {
+    pub fn new(devices: usize, policy: RoutePolicy) -> DeviceRouter {
+        assert!(devices >= 1, "router needs at least one device");
+        DeviceRouter {
+            policy,
+            next: 0,
+            routed: 0,
+            tracker: Arc::new(LoadTracker::new(devices)),
+        }
+    }
+
+    /// Number of device lanes.
+    pub fn devices(&self) -> usize {
+        self.tracker.loads.len()
+    }
+
+    /// Shards routed so far.
+    pub fn routed(&self) -> u64 {
+        self.routed
+    }
+
+    /// Shared handle to the outstanding-load ledger (hand it to the
+    /// consumer side).
+    pub fn tracker(&self) -> Arc<LoadTracker> {
+        Arc::clone(&self.tracker)
+    }
+
+    /// Pick the device for the next shard of `bytes` and charge its lane.
+    pub fn route(&mut self, bytes: u64) -> usize {
+        let n = self.devices();
+        let d = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let d = self.next;
+                self.next = (self.next + 1) % n;
+                d
+            }
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0usize;
+                let mut best_load = self.tracker.load(0);
+                for d in 1..n {
+                    let l = self.tracker.load(d);
+                    if l < best_load {
+                        best = d;
+                        best_load = l;
+                    }
+                }
+                best
+            }
+        };
+        self.tracker.charge(d, bytes);
+        self.routed += 1;
+        d
     }
 }
 
@@ -194,5 +366,97 @@ mod tests {
         let r = simulate_overlap(&cfg);
         assert!((r.busy_s - 100.0 * 2e-3).abs() < 1e-9);
         assert!(r.total_s >= r.busy_s);
+    }
+
+    #[test]
+    fn zero_batches_returns_finite_zeroed_stats() {
+        // batches == 0 used to produce mean_util = 0.0/0.0 = NaN, which
+        // poisons any Fig. 14 aggregation it flows into.
+        let cfg = piperec_config(0, 1e-3, 2e-3, 1 << 20);
+        let r = simulate_overlap(&cfg);
+        assert_eq!(r.total_s, 0.0);
+        assert_eq!(r.busy_s, 0.0);
+        assert!(r.mean_util.is_finite(), "util must not be NaN");
+        assert_eq!(r.mean_util, 0.0);
+        assert!(r.trace.points.is_empty());
+        assert_eq!(r.producer_blocked_s, 0.0);
+    }
+
+    #[test]
+    fn trace_emits_trailing_partial_window() {
+        // One busy interval covering all of [0, 1.0); a 0.3 s window
+        // leaves a 0.1 s tail that the old loop silently dropped.
+        let intervals = [(0.0, 1.0)];
+        let trace = utilization_trace(&intervals, 1.0, 0.3);
+        assert_eq!(trace.points.len(), 4, "3 full windows + 1 partial");
+        // The partial window is centered in its actual width …
+        let (t_last, u_last) = *trace.points.last().unwrap();
+        assert!((t_last - 0.95).abs() < 1e-12, "center {t_last}");
+        // … and normalized by it: fully busy, not 1/3 busy.
+        assert!((u_last - 1.0).abs() < 1e-12, "util {u_last}");
+    }
+
+    #[test]
+    fn trace_covers_total_and_conserves_busy_time() {
+        // Busy time after the last full window must appear in the trace:
+        // Σ util_i × width_i == busy_s, and the windows tile [0, total).
+        let intervals = [(0.1, 0.4), (0.75, 1.1), (1.15, 1.2)];
+        let busy: f64 = intervals.iter().map(|(s, e)| e - s).sum();
+        let total = 1.2;
+        let window = 0.5; // 2 full windows + a 0.2 partial
+        let trace = utilization_trace(&intervals, total, window);
+        assert_eq!(trace.points.len(), 3);
+        let mut covered = 0.0;
+        let mut weighted = 0.0;
+        for &(center, util) in &trace.points {
+            let width = 2.0 * (center - covered);
+            covered += width;
+            weighted += util * width;
+        }
+        assert!((covered - total).abs() < 1e-9, "covered {covered} of {total}");
+        assert!((weighted - busy).abs() < 1e-9, "trace busy {weighted} vs {busy}");
+    }
+
+    #[test]
+    fn simulate_overlap_trace_covers_all_of_total() {
+        // End-to-end: the last window's right edge reaches total_s.
+        let r = simulate_overlap(&piperec_config(37, 1.3e-3, 2.1e-3, 1 << 20));
+        assert!(!r.trace.points.is_empty());
+        let mut covered = 0.0;
+        for &(center, _) in &r.trace.points {
+            covered += 2.0 * (center - covered);
+        }
+        assert!(
+            (covered - r.total_s).abs() < 1e-9 * r.total_s.max(1.0),
+            "trace covers {covered} of {}",
+            r.total_s
+        );
+    }
+
+    #[test]
+    fn round_robin_routing_cycles_deterministically() {
+        let mut r = DeviceRouter::new(3, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..7).map(|_| r.route(10)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(r.routed(), 7);
+        assert_eq!(r.tracker().snapshot(), vec![30, 20, 20]);
+    }
+
+    #[test]
+    fn least_loaded_routing_follows_the_ledger() {
+        let mut r = DeviceRouter::new(3, RoutePolicy::LeastLoaded);
+        let t = r.tracker();
+        // Empty ledger: ties break to the lowest index.
+        assert_eq!(r.route(100), 0);
+        assert_eq!(r.route(10), 1);
+        assert_eq!(r.route(10), 2);
+        // Device 0 carries the most outstanding bytes → avoided.
+        assert_eq!(r.route(10), 1);
+        // Completing device 0's big shard makes it least loaded again.
+        t.complete(0, 100);
+        assert_eq!(r.route(10), 0);
+        // Over-completion saturates at zero instead of wrapping.
+        t.complete(2, 1 << 40);
+        assert_eq!(t.load(2), 0);
     }
 }

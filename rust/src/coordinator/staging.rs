@@ -91,6 +91,15 @@ pub struct StagingQueue<T = PackedBatch> {
     stalls: Arc<AtomicU64>,
 }
 
+/// Producer handles clone (the multi-device loop gives each per-device
+/// pack worker one); the consumer sees the channel closed only once
+/// **every** clone is dropped. All clones share one stall counter.
+impl<T> Clone for StagingQueue<T> {
+    fn clone(&self) -> Self {
+        StagingQueue { tx: self.tx.clone(), stalls: Arc::clone(&self.stalls) }
+    }
+}
+
 /// Consumer half of the staging queue.
 pub struct StagingConsumer<T = PackedBatch> {
     rx: Receiver<T>,

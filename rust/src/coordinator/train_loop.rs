@@ -30,14 +30,42 @@
 //! Ingest-wait, fused-exec and transfer-wait time are attributed
 //! separately in the report so stage imbalance is visible (ROADMAP:
 //! pipeline-stage attribution).
+//!
+//! # Multi-device (N simulated GPUs)
+//!
+//! With [`TrainConfig::devices`] > 1 the arena path becomes a routed
+//! fleet: a [`crate::devmem::ArenaSet`] holds one staging region per
+//! device in a shared MMU address space, each device lane has its own
+//! pack worker and DMA clock, and the scheduler's
+//! [`crate::coordinator::scheduler::DeviceRouter`] assigns every ingested
+//! shard to a lane ([`crate::coordinator::scheduler::RoutePolicy`]:
+//! round-robin pins a bit-reproducible schedule, least-loaded follows the
+//! outstanding-byte ledger). One [`Trainer`] replica steps per device;
+//! every [`TrainConfig::allreduce_every`] global steps the replicas'
+//! parameters are combined by a deterministic tree reduction (per-device
+//! deltas summed in f64 in device order) and broadcast, with the
+//! reduction costed against the calibrated P2P channel
+//! ([`TrainReport::allreduce_sim_s`]). The default period of 1 syncs
+//! after every step, so a round-robin fleet replays the single-device
+//! trajectory **bitwise** (pinned by `rust/tests/prop_devmem.rs`);
+//! larger periods trade that exactness for local-SGD-style divergence
+//! between syncs. [`TrainReport::per_device`] breaks transfer-wait, DMA,
+//! staged bytes and steps down per device.
 
+use std::collections::BTreeMap;
+
+use crate::coordinator::scheduler::{DeviceRouter, RoutePolicy};
 use crate::coordinator::staging::StagingQueue;
 use crate::dataio::dataset::DatasetSpec;
 use crate::dataio::ingest::{AsyncIngest, IngestConfig, ShardInput};
-use crate::devmem::{ArenaConfig, DeviceArena, StagingSlot, TransferConfig, TransferEngine};
+use crate::devmem::{
+    ArenaConfig, ArenaSet, DeviceArena, StagingSlot, TransferConfig, TransferEngine, TransferSet,
+};
 use crate::error::{EtlError, Result};
+use crate::etl::column::Batch;
 use crate::etl::exec::BufferPool;
 use crate::fpga::Pipeline;
+use crate::memsys::{ChannelModel, Path};
 use crate::metrics::TimeSeries;
 use crate::runtime::Trainer;
 
@@ -69,10 +97,23 @@ pub struct TrainConfig {
     pub ingest: IngestConfig,
     /// Staging dataflow (default: the zero-copy arena path).
     pub path: DataPath,
-    /// Device-arena sizing for [`DataPath::Arena`].
+    /// Device-arena sizing for [`DataPath::Arena`] (per device when
+    /// `devices` > 1).
     pub arena: ArenaConfig,
-    /// P2P DMA engine knobs for [`DataPath::Arena`].
+    /// P2P DMA engine knobs for [`DataPath::Arena`] (one engine clock per
+    /// device when `devices` > 1).
     pub transfer: TransferConfig,
+    /// Simulated GPUs fed by the staging dataflow. 1 = the single-device
+    /// arena path; > 1 routes shards across an [`ArenaSet`] (arena path
+    /// only).
+    pub devices: usize,
+    /// Shard→device routing policy for `devices` > 1.
+    pub route: RoutePolicy,
+    /// All-reduce period in global steps for `devices` > 1. 1 (default)
+    /// syncs replicas after every step — the bit-reproducible schedule;
+    /// larger periods run local SGD between syncs; 0 syncs only at stream
+    /// end.
+    pub allreduce_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -86,8 +127,32 @@ impl Default for TrainConfig {
             path: DataPath::Arena,
             arena: ArenaConfig::default(),
             transfer: TransferConfig::default(),
+            devices: 1,
+            route: RoutePolicy::RoundRobin,
+            allreduce_every: 1,
         }
     }
+}
+
+/// Per-device breakdown of a training run (one entry per simulated GPU;
+/// the single-device paths report exactly one).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DeviceReport {
+    /// Device index.
+    pub device: usize,
+    /// Shards routed to and packed on this device's lane.
+    pub shards: u64,
+    /// Training steps this device's replica executed.
+    pub steps: u64,
+    /// Host seconds this lane's pack worker spent blocked on device
+    /// staging (credit + queue waits).
+    pub transfer_wait_s: f64,
+    /// Simulated seconds this device's DMA engine spent on the wire.
+    pub dma_sim_s: f64,
+    /// Packed bytes staged into this device's arena.
+    pub staged_bytes: u64,
+    /// Host seconds spent stepping this device's replica.
+    pub train_busy_s: f64,
 }
 
 /// Result of a live training run.
@@ -134,6 +199,18 @@ pub struct TrainReport {
     /// Per-shard slot-buffer allocations after each slot's first pack
     /// (arena path; must be 0 in the steady state).
     pub steady_allocs: u64,
+    /// Per-device breakdowns, in device order. Each entry covers **this
+    /// run only**: the time/byte/shard aggregates above are the sums
+    /// across these, and the per-device `steps` sum to the steps this
+    /// run executed — `self.steps` is the trainer's *absolute* counter,
+    /// so on a warm (resumed) trainer it exceeds that sum by the steps
+    /// taken before the run. `util` is the fleet-aggregate figure.
+    pub per_device: Vec<DeviceReport>,
+    /// Simulated seconds spent in parameter all-reduces (deterministic
+    /// tree reduction over the calibrated P2P channel; 0 when devices=1).
+    pub allreduce_sim_s: f64,
+    /// All-reduce rounds performed.
+    pub allreduces: u64,
 }
 
 impl TrainReport {
@@ -157,9 +234,17 @@ pub fn run(
     if !pipeline.is_fitted() && pipeline.plan.dag.stateful_count() > 0 {
         return Err(EtlError::Coord("pipeline must be fitted before training".into()));
     }
-    match cfg.path {
-        DataPath::Arena => run_arena(pipeline, spec, trainer, cfg),
-        DataPath::Channel => run_channel(pipeline, spec, trainer, cfg),
+    match (cfg.path, cfg.devices) {
+        (_, 0) => Err(EtlError::Coord(
+            "TrainConfig::devices must be >= 1 (0 is a config bug, not single-device)".into(),
+        )),
+        (DataPath::Channel, d) if d > 1 => Err(EtlError::Coord(
+            "multi-device training requires DataPath::Arena (per-device staging regions)"
+                .into(),
+        )),
+        (DataPath::Arena, d) if d > 1 => run_multi(pipeline, spec, trainer, cfg),
+        (DataPath::Arena, _) => run_arena(pipeline, spec, trainer, cfg),
+        (DataPath::Channel, _) => run_channel(pipeline, spec, trainer, cfg),
     }
 }
 
@@ -172,6 +257,7 @@ fn run_arena(
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
     let step_rows = trainer.meta.batch;
+    let steps_at_start = trainer.steps;
     let (queue, consumer) = StagingQueue::<StagingSlot>::with_buffers(cfg.staging_buffers);
     let stall_counter = queue.stall_counter();
     let arena = DeviceArena::new(cfg.arena.clone());
@@ -331,6 +417,389 @@ fn run_arena(
         staged_bytes,
         host_copy_bytes: 0,
         steady_allocs: arena_stats.steady_allocs,
+        per_device: vec![DeviceReport {
+            device: 0,
+            shards: shards_done,
+            steps: trainer.steps - steps_at_start,
+            transfer_wait_s,
+            dma_sim_s,
+            staged_bytes,
+            train_busy_s,
+        }],
+        allreduce_sim_s: 0.0,
+        allreduces: 0,
+    })
+}
+
+/// A staged slot annotated with its routing decision: the device lane it
+/// rode, the raw shard bytes charged to that lane's load ledger, and its
+/// global routing sequence number (round-robin consumption reorders on
+/// `seq` so pack-worker races cannot perturb the schedule).
+struct RoutedSlot {
+    seq: u64,
+    device: usize,
+    raw_bytes: u64,
+    slot: StagingSlot,
+}
+
+/// Per-lane producer accounting returned by each pack worker.
+#[derive(Default)]
+struct LaneOut {
+    host_s: f64,
+    sim_s: f64,
+    wait_s: f64,
+    shards: u64,
+    dma_busy_s: f64,
+    dma_bytes: u64,
+}
+
+/// Combine the replicas' parameters since the last sync and broadcast the
+/// result: per-device deltas are summed onto the synced base in f64 with
+/// a fixed device-ascending association (deterministic tree), so the
+/// reduction is bit-stable across runs. The trailing loss slot is not a
+/// parameter — the reduction covers only the parameter prefix and sets
+/// the slot to the contributors' mean batch loss. When exactly one
+/// replica stepped since the last sync the reduction degenerates to
+/// broadcasting that replica's state verbatim (loss slot included) — the
+/// fast path that makes round-robin with `allreduce_every = 1` replay the
+/// single-device trajectory bitwise. Returns false (and does nothing)
+/// when no replica stepped.
+fn allreduce_params(
+    replicas: &mut [Trainer],
+    synced: &mut Vec<f32>,
+    steps_at_sync: &mut [u64],
+) -> Result<bool> {
+    let stepped: Vec<usize> = replicas
+        .iter()
+        .enumerate()
+        .filter(|(d, r)| r.steps > steps_at_sync[*d])
+        .map(|(d, _)| d)
+        .collect();
+    if stepped.is_empty() {
+        return Ok(false);
+    }
+    if stepped.len() == 1 {
+        // Single contributor: broadcast verbatim, reusing the synced
+        // buffer as scratch and skipping the contributor's self-load —
+        // the sync-every-step default stays allocation-free per step.
+        let src = stepped[0];
+        synced.copy_from_slice(replicas[src].state());
+        for (d, r) in replicas.iter_mut().enumerate() {
+            if d != src {
+                r.load_state(synced)?;
+            }
+            steps_at_sync[d] = r.steps;
+        }
+        return Ok(true);
+    }
+    // Reduce only the parameter prefix: the trailing loss slot is a
+    // per-step observable, not a parameter — delta-summing it would
+    // broadcast a meaningless value into every replica (and into the
+    // caller's trainer at the final sync).
+    let p = synced.len() - 1;
+    let mut acc: Vec<f64> = synced[..p].iter().map(|&v| v as f64).collect();
+    for &d in &stepped {
+        let sd = &replicas[d].state()[..p];
+        for (a, (s, base)) in acc.iter_mut().zip(sd.iter().zip(synced[..p].iter())) {
+            *a += (*s as f64) - (*base as f64);
+        }
+    }
+    let mut next: Vec<f32> = acc.into_iter().map(|v| v as f32).collect();
+    // Loss slot: the deterministic mean of the contributors' batch
+    // losses (device-ascending order) — what the fleet reports.
+    let mean_loss = stepped
+        .iter()
+        .map(|&d| replicas[d].state()[p] as f64)
+        .sum::<f64>()
+        / stepped.len() as f64;
+    next.push(mean_loss as f32);
+    for (d, r) in replicas.iter_mut().enumerate() {
+        r.load_state(&next)?;
+        steps_at_sync[d] = r.steps;
+    }
+    *synced = next;
+    Ok(true)
+}
+
+/// Multi-device arena path: one staging region, DMA clock and pack worker
+/// per simulated GPU; the router assigns each ingested shard a lane; one
+/// trainer replica steps per device with periodic all-reduce (see module
+/// docs).
+fn run_multi(
+    pipeline: &Pipeline,
+    spec: &DatasetSpec,
+    trainer: &mut Trainer,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let devices = cfg.devices;
+    let step_rows = trainer.meta.batch;
+    let steps_at_start = trainer.steps;
+    let max_steps = cfg.max_steps as u64;
+    let loss_every = (cfg.loss_every as u64).max(1);
+
+    let arenas = ArenaSet::new(devices, cfg.arena.clone());
+    // The fleet queue carries routed slots from every lane; size it so
+    // each device keeps a slot in flight toward the consumer.
+    let (queue, consumer) =
+        StagingQueue::<RoutedSlot>::with_buffers(cfg.staging_buffers.max(devices));
+    let stall_counter = queue.stall_counter();
+    let router = DeviceRouter::new(devices, cfg.route);
+    let tracker = router.tracker();
+
+    // Per-device raw-shard lanes into the pack workers (depth 1: the
+    // router hands a lane its next shard while it packs the current one).
+    let mut shard_txs = Vec::with_capacity(devices);
+    let mut shard_rxs = Vec::with_capacity(devices);
+    for _ in 0..devices {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<(u64, Batch)>(1);
+        shard_txs.push(tx);
+        shard_rxs.push(rx);
+    }
+    // Consumed shard buffers flow back to the router for pool recycling.
+    let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Batch>();
+
+    // One replica per device, forked from the caller's current params.
+    let mut replicas: Vec<Trainer> = (0..devices).map(|_| trainer.replica()).collect();
+    let mut synced: Vec<f32> = trainer.state_to_vec()?;
+    let mut steps_at_sync: Vec<u64> = vec![0; devices];
+    // All-reduce cost model: a deterministic tree needs ceil(log2 N)
+    // rounds of reduce plus as many of broadcast, each moving the flat
+    // state over the calibrated P2P channel.
+    let allreduce_chan = ChannelModel::of(Path::P2pToGpu);
+    let reduce_rounds = (usize::BITS - (devices - 1).leading_zeros()) as f64;
+    let state_bytes = (trainer.meta.state_len() * std::mem::size_of::<f32>()) as u64;
+    let allreduce_cost_s = 2.0 * reduce_rounds * allreduce_chan.time(state_bytes);
+    let mut allreduces = 0u64;
+    let mut allreduce_sim_s = 0.0f64;
+
+    let t0 = std::time::Instant::now();
+    let mut global_steps = steps_at_start;
+    let mut losses = Vec::new();
+    let mut train_busy_s = 0.0f64;
+    let mut util_trace = TimeSeries::default();
+    let mut dev_busy = vec![0.0f64; devices];
+    let mut lanes: Vec<LaneOut> = Vec::with_capacity(devices);
+    let mut ingest_wait_s = 0.0f64;
+    let mut producer_stalls = 0u64;
+
+    std::thread::scope(|scope| -> Result<()> {
+        // Pack workers: one per device lane, each owning its device's DMA
+        // engine clock (split off the TransferSet) and blocking only on
+        // its own arena's credits.
+        let arenas = &arenas;
+        let dma_engines = TransferSet::new(devices, cfg.transfer.clone()).into_engines();
+        let mut workers = Vec::with_capacity(devices);
+        for ((d, rx), mut dma) in shard_rxs.into_iter().enumerate().zip(dma_engines) {
+            let queue = queue.clone();
+            let recycle_tx = recycle_tx.clone();
+            workers.push(scope.spawn(move || -> Result<LaneOut> {
+                let arena = arenas.device(d);
+                let mut out = LaneOut::default();
+                while let Ok((seq, shard)) = rx.recv() {
+                    let raw_bytes = shard.total_bytes() as u64;
+                    let t_acq = std::time::Instant::now();
+                    let Some(mut slot) = arena.acquire() else {
+                        break; // consumer closed the fleet (max_steps)
+                    };
+                    out.wait_s += t_acq.elapsed().as_secs_f64();
+                    let timing = pipeline.process_into_slot(&shard, &mut slot)?;
+                    let _ = recycle_tx.send(shard);
+                    out.host_s += timing.host_s;
+                    out.sim_s += timing.elapsed_s;
+                    out.shards += 1;
+                    // This lane's chunked P2P write, on this device's own
+                    // engine clock.
+                    dma.submit(out.sim_s, slot.packed_bytes());
+                    let t_push = std::time::Instant::now();
+                    let pushed = queue.push(RoutedSlot { seq, device: d, raw_bytes, slot });
+                    out.wait_s += t_push.elapsed().as_secs_f64();
+                    if !pushed {
+                        break; // consumer hung up
+                    }
+                }
+                out.dma_busy_s = dma.busy_s();
+                out.dma_bytes = dma.total_bytes();
+                Ok(out)
+            }));
+        }
+        // Workers now hold the only queue/recycle producer handles.
+        drop(queue);
+        drop(recycle_tx);
+
+        // Router: the producer front-end — ingest in delivery order,
+        // assign each shard a device lane, recycle consumed buffers.
+        let ingest_cfg = cfg.ingest.clone();
+        let ingest_spec = spec.clone();
+        let router_thread = scope.spawn(move || -> Result<f64> {
+            let shard_txs = shard_txs;
+            let mut router = router;
+            let mut ingest = AsyncIngest::spawn(
+                ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
+                &ingest_cfg,
+            );
+            let mut seq = 0u64;
+            while let Some((_, shard)) = ingest.next()? {
+                while let Ok(b) = recycle_rx.try_recv() {
+                    ingest.recycle(b);
+                }
+                let d = router.route(shard.total_bytes() as u64);
+                if shard_txs[d].send((seq, shard)).is_err() {
+                    break; // lane worker exited (fleet shut down)
+                }
+                seq += 1;
+            }
+            Ok(ingest.wait_seconds())
+        });
+
+        // Consumer: steps the routed device's replica in place on each
+        // staged slot, returns the credit, and keeps the replicas
+        // consistent via the periodic all-reduce. Errors are collected so
+        // the shutdown below always runs.
+        let mut consume = |replicas: &mut [Trainer]| -> Result<()> {
+            let mut window_busy = 0.0f64;
+            let mut window_start = 0.0f64;
+            const WINDOW_STEPS: u64 = 20;
+            let mut expected = 0u64;
+            let mut stash: BTreeMap<u64, RoutedSlot> = BTreeMap::new();
+            'consume: while global_steps < max_steps {
+                // Next slot: arrival order for least-loaded, global
+                // routing order for round-robin (the stash reorders
+                // pack-worker races back into the pinned schedule).
+                let routed = if cfg.route == RoutePolicy::RoundRobin {
+                    loop {
+                        if let Some(r) = stash.remove(&expected) {
+                            break Some(r);
+                        }
+                        match consumer.pop() {
+                            Some(r) => {
+                                if r.seq == expected {
+                                    break Some(r);
+                                }
+                                stash.insert(r.seq, r);
+                            }
+                            None => {
+                                // Queue closed: drain stragglers in
+                                // ascending order.
+                                let k = stash.keys().next().copied();
+                                break k.and_then(|k| stash.remove(&k));
+                            }
+                        }
+                    }
+                } else {
+                    consumer.pop()
+                };
+                let Some(RoutedSlot { seq, device: d, raw_bytes, slot }) = routed else {
+                    break;
+                };
+                expected = seq + 1;
+                for view in slot.chunk_views(step_rows) {
+                    if global_steps >= max_steps {
+                        break;
+                    }
+                    let ts = std::time::Instant::now();
+                    replicas[d].step_device(&view)?;
+                    let dt = ts.elapsed().as_secs_f64();
+                    train_busy_s += dt;
+                    dev_busy[d] += dt;
+                    window_busy += dt;
+                    global_steps += 1;
+                    if global_steps % loss_every == 0 {
+                        losses.push((global_steps, replicas[d].loss()?));
+                    }
+                    if cfg.allreduce_every > 0
+                        && global_steps % cfg.allreduce_every as u64 == 0
+                        && allreduce_params(replicas, &mut synced, &mut steps_at_sync)?
+                    {
+                        allreduces += 1;
+                        allreduce_sim_s += allreduce_cost_s;
+                    }
+                    if global_steps % WINDOW_STEPS == 0 {
+                        let now = t0.elapsed().as_secs_f64();
+                        let span = (now - window_start).max(1e-9);
+                        util_trace.push(now, (window_busy / span).min(1.0));
+                        window_busy = 0.0;
+                        window_start = now;
+                    }
+                }
+                tracker.complete(d, raw_bytes);
+                arenas.device(d).release(slot)?;
+                if global_steps >= max_steps {
+                    break 'consume;
+                }
+            }
+            // Return any stashed credits so the arena accounting stays
+            // exactly-once even on an early max_steps cutoff.
+            for (_, r) in std::mem::take(&mut stash) {
+                tracker.complete(r.device, r.raw_bytes);
+                arenas.device(r.device).release(r.slot)?;
+            }
+            Ok(())
+        };
+        let consumed = consume(&mut replicas);
+        // Shutdown: close every arena first so lane workers blocked on a
+        // credit wake, then drop the consumer so blocked pushes fail; the
+        // router unwinds once its lane sends start failing.
+        arenas.close_all();
+        drop(consumer);
+        for handle in workers {
+            match handle.join() {
+                Ok(Ok(out)) => lanes.push(out),
+                Ok(Err(e)) => return Err(e),
+                Err(_) => return Err(EtlError::Coord("pack worker panicked".into())),
+            }
+        }
+        match router_thread.join() {
+            Ok(Ok(w)) => ingest_wait_s = w,
+            Ok(Err(e)) => return Err(e),
+            Err(_) => return Err(EtlError::Coord("router panicked".into())),
+        }
+        consumed?;
+        producer_stalls = stall_counter.load(std::sync::atomic::Ordering::Relaxed)
+            + arenas.total_stats().stalls;
+        Ok(())
+    })?;
+
+    // Final sync folds any steps since the last periodic all-reduce, then
+    // the fleet parameters land back in the caller's trainer.
+    if allreduce_params(&mut replicas, &mut synced, &mut steps_at_sync)? {
+        allreduces += 1;
+        allreduce_sim_s += allreduce_cost_s;
+    }
+    trainer.load_state(&synced)?;
+    trainer.steps = global_steps;
+
+    let per_device: Vec<DeviceReport> = (0..devices)
+        .map(|d| DeviceReport {
+            device: d,
+            shards: lanes[d].shards,
+            steps: replicas[d].steps,
+            transfer_wait_s: lanes[d].wait_s,
+            dma_sim_s: lanes[d].dma_busy_s,
+            staged_bytes: lanes[d].dma_bytes,
+            train_busy_s: dev_busy[d],
+        })
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(TrainReport {
+        steps: global_steps,
+        losses,
+        wall_s,
+        train_busy_s,
+        util: train_busy_s / wall_s.max(1e-9),
+        util_trace,
+        producer_stalls,
+        etl_host_s: lanes.iter().map(|l| l.host_s).sum(),
+        ingest_wait_s,
+        transfer_wait_s: lanes.iter().map(|l| l.wait_s).sum(),
+        shards: lanes.iter().map(|l| l.shards).sum(),
+        etl_sim_s: lanes.iter().map(|l| l.sim_s).sum(),
+        dma_sim_s: lanes.iter().map(|l| l.dma_busy_s).sum(),
+        staged_bytes: lanes.iter().map(|l| l.dma_bytes).sum(),
+        host_copy_bytes: 0,
+        steady_allocs: arenas.total_stats().steady_allocs,
+        per_device,
+        allreduce_sim_s,
+        allreduces,
     })
 }
 
@@ -343,6 +812,7 @@ fn run_channel(
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
     let step_rows = trainer.meta.batch;
+    let steps_at_start = trainer.steps;
     let (queue, consumer) = StagingQueue::with_buffers(cfg.staging_buffers);
     let stall_counter = queue.stall_counter();
     // Packed-batch buffers cycle producer → staging → trainer → pool, so
@@ -462,6 +932,17 @@ fn run_channel(
         staged_bytes,
         host_copy_bytes,
         steady_allocs: 0,
+        per_device: vec![DeviceReport {
+            device: 0,
+            shards: shards_done,
+            steps: trainer.steps - steps_at_start,
+            transfer_wait_s: 0.0,
+            dma_sim_s: 0.0,
+            staged_bytes,
+            train_busy_s,
+        }],
+        allreduce_sim_s: 0.0,
+        allreduces: 0,
     })
 }
 
@@ -484,5 +965,50 @@ mod tests {
         assert_eq!(cfg.path, super::DataPath::Arena);
         assert!(cfg.arena.slots >= cfg.staging_buffers + 2);
         assert!(cfg.transfer.chunk_bytes >= 1 << 20, "MiB-scale DMA chunks");
+        // Multi-device defaults: single GPU, bit-reproducible routing,
+        // sync-every-step all-reduce.
+        assert_eq!(cfg.devices, 1);
+        assert_eq!(cfg.route, crate::coordinator::scheduler::RoutePolicy::RoundRobin);
+        assert_eq!(cfg.allreduce_every, 1);
+    }
+
+    #[test]
+    fn multi_device_rejects_channel_path() {
+        use crate::dataio::dataset::DatasetSpec;
+        use crate::etl::pipelines::{build, PipelineKind};
+        use crate::planner::{compile, PlannerConfig};
+        use crate::runtime::artifacts::{ModelMeta, ParamSpec};
+
+        let spec = DatasetSpec::dataset_i(0.001);
+        let dag = build(PipelineKind::I, &spec.schema);
+        let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+        let mut pipe = crate::fpga::Pipeline::new(plan);
+        pipe.fit(&spec.shard(0, 1)).unwrap();
+        let meta = ModelMeta {
+            batch: 64,
+            n_dense: 13,
+            n_sparse: 26,
+            vocab: 64,
+            embed_dim: 1,
+            params: vec![
+                ParamSpec { name: "w_dense".into(), dims: vec![13] },
+                ParamSpec { name: "b".into(), dims: vec![1] },
+                ParamSpec { name: "emb".into(), dims: vec![26 * 8] },
+            ],
+            extra: Default::default(),
+        };
+        let mut trainer = crate::runtime::Trainer::from_meta(meta, 1);
+        let cfg = super::TrainConfig {
+            devices: 2,
+            path: super::DataPath::Channel,
+            ..Default::default()
+        };
+        let err = super::run(&pipe, &spec, &mut trainer, &cfg).unwrap_err();
+        assert!(err.to_string().contains("DataPath::Arena"), "{err}");
+
+        // devices == 0 is a config bug, not an implicit single device.
+        let cfg = super::TrainConfig { devices: 0, ..Default::default() };
+        let err = super::run(&pipe, &spec, &mut trainer, &cfg).unwrap_err();
+        assert!(err.to_string().contains("devices must be >= 1"), "{err}");
     }
 }

@@ -116,6 +116,13 @@ impl DatasetSpec {
         self.rows.div_ceil(self.shards)
     }
 
+    /// Rows actually present in shard `i` (the trailing shards of an
+    /// uneven split are short or empty).
+    pub fn rows_in_shard(&self, i: usize) -> usize {
+        let start = i * self.rows_per_shard();
+        self.rows_per_shard().min(self.rows.saturating_sub(start))
+    }
+
     /// Generate shard `i` deterministically.
     pub fn shard(&self, i: usize, seed: u64) -> Batch {
         let mut out = Batch::new();
@@ -127,10 +134,42 @@ impl DatasetSpec {
     /// [`shard`](Self::shard); the async ingest pool uses this so the
     /// steady state allocates nothing per shard).
     pub fn shard_into(&self, i: usize, seed: u64, out: &mut Batch) {
-        let start = i * self.rows_per_shard();
-        let n = self.rows_per_shard().min(self.rows.saturating_sub(start));
+        let n = self.rows_in_shard(i);
         crate::dataio::synth::generate_into(
             &self.schema,
+            n,
+            seed ^ ((i as u64) << 32),
+            &self.synth,
+            out,
+        );
+    }
+
+    /// Generate rows `[row_start, row_start + n)` of shard `i` into a
+    /// recycled buffer. Chunk-stable: the synth streams are per-row
+    /// (`dataio::synth::generate_range_into`), so any chunking of a shard
+    /// concatenates bit-identically to [`shard_into`](Self::shard_into) —
+    /// the contract `IngestConfig::chunk_rows` relies on for synthetic
+    /// inputs.
+    pub fn shard_chunk_into(
+        &self,
+        i: usize,
+        seed: u64,
+        row_start: usize,
+        n: usize,
+        out: &mut Batch,
+    ) {
+        // Hard assert (release builds too): an out-of-range chunk would
+        // silently fabricate rows that belong to no shard — the synth
+        // analogue of a file reader's out-of-range read error.
+        assert!(
+            row_start + n <= self.rows_in_shard(i),
+            "chunk [{row_start}, {}) exceeds shard {i}'s {} rows",
+            row_start + n,
+            self.rows_in_shard(i)
+        );
+        crate::dataio::synth::generate_range_into(
+            &self.schema,
+            row_start,
             n,
             seed ^ ((i as u64) << 32),
             &self.synth,
@@ -201,6 +240,33 @@ mod tests {
             a.get("wide_c0").unwrap().as_hex8().unwrap(),
             b.get("wide_c0").unwrap().as_hex8().unwrap()
         );
+    }
+
+    #[test]
+    fn shard_chunks_concatenate_to_whole_shard() {
+        let mut d = DatasetSpec::dataset_i(0.002);
+        d.shards = 3;
+        let whole = d.shard(1, 9);
+        let rows = d.rows_in_shard(1);
+        assert_eq!(whole.rows(), rows);
+        let mut row = 0usize;
+        let mut chunk = Batch::new();
+        while row < rows {
+            let n = 37.min(rows - row);
+            d.shard_chunk_into(1, 9, row, n, &mut chunk);
+            let want = whole.slice_rows(row..row + n);
+            // Hex columns compare exactly; dense may carry NaN — compare
+            // the hex token stream as the witness of bit-stability plus
+            // row counts (synth's own tests pin dense bit-stability).
+            assert_eq!(chunk.rows(), n);
+            for ((an, ac), (bn, bc)) in chunk.columns.iter().zip(&want.columns) {
+                assert_eq!(an, bn);
+                if let (Ok(a), Ok(b)) = (ac.as_hex8(), bc.as_hex8()) {
+                    assert_eq!(a, b, "col {an} rows [{row}, {})", row + n);
+                }
+            }
+            row += n;
+        }
     }
 
     #[test]

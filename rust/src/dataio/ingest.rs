@@ -11,16 +11,19 @@
 //!
 //! # Chunked file ingest
 //!
-//! With [`IngestConfig::chunk_rows`] > 0, file-backed shards (`Rcol` via
-//! [`crate::dataio::rcol::ChunkReader`], `Tsv` via
-//! [`crate::dataio::tsv::read_tsv_chunk`]) are delivered in fixed-size
-//! row chunks, so a **single shard's I/O overlaps its own transform**:
-//! the consumer processes chunk `c` while the worker reads chunk `c+1`.
-//! Synth shards are always delivered whole (chunk-splitting would change
-//! their per-shard RNG streams and break bit-reproducibility). Each
-//! file-backed chunk is also costed against the SSD channel model
+//! With [`IngestConfig::chunk_rows`] > 0, shards are delivered in
+//! fixed-size row chunks, so a **single shard's I/O overlaps its own
+//! transform**: the consumer processes chunk `c` while the worker reads
+//! chunk `c+1`. File-backed inputs chunk through seek-based readers
+//! (`Rcol` via [`crate::dataio::rcol::ChunkReader`], `Tsv` via
+//! [`crate::dataio::tsv::read_tsv_chunk`]); `Synth` inputs chunk through
+//! the chunk-stable generator ([`DatasetSpec::shard_chunk_into`], per-row
+//! RNG streams), so chunked synthetic delivery is **bit-identical** to
+//! whole-shard delivery (pinned by `prop_streaming.rs`). Each file-backed
+//! chunk is also costed against the SSD channel model
 //! ([`crate::memsys::Path::SsdRead`]) — the Dataset-III ingest-bound
-//! accounting surfaced as [`IngestReport::ssd_sim_s`].
+//! accounting surfaced as [`IngestReport::ssd_sim_s`]; synthetic chunks
+//! carry no SSD cost.
 //!
 //! # Delivery policies (the paper's ordering/freshness semantics)
 //!
@@ -88,8 +91,10 @@ pub struct IngestConfig {
     pub channel_depth: usize,
     /// Delivery ordering/freshness policy.
     pub policy: DeliveryPolicy,
-    /// Rows per delivered chunk for file-backed shards (`Rcol`/`Tsv`);
-    /// 0 delivers whole shards. `Synth` shards are always whole.
+    /// Rows per delivered chunk; 0 delivers whole shards. Applies to
+    /// file-backed shards (`Rcol`/`Tsv`, seek-based readers) and to
+    /// `Synth` shards (chunk-stable per-row RNG streams — bit-identical
+    /// to whole-shard delivery).
     pub chunk_rows: usize,
     /// `FreshestFirst` bounded staleness: drop a stashed batch once it
     /// has been passed over by more than this many deliveries
@@ -237,9 +242,33 @@ fn produce_shard(
     tx: &SyncSender<WorkerMsg>,
 ) -> Result<bool> {
     match input {
+        ShardInput::Synth { spec, seed } if chunk_rows > 0 => {
+            // Chunk-stable synthesis: the per-row RNG streams of
+            // `DatasetSpec::shard_chunk_into` make any chunking
+            // bit-identical to whole-shard delivery (pinned by
+            // `prop_streaming.rs`). No SSD cost — synthetic rows never
+            // touch a file.
+            let rows = spec.rows_in_shard(i);
+            let n_chunks = rows.div_ceil(chunk_rows).max(1);
+            for c in 0..n_chunks {
+                let start = c * chunk_rows;
+                let n = chunk_rows.min(rows - start);
+                let mut batch = pool.take();
+                spec.shard_chunk_into(i, *seed, start, n, &mut batch);
+                let msg = ChunkMsg {
+                    shard: i,
+                    chunk: c,
+                    last: c + 1 == n_chunks,
+                    ssd_s: 0.0,
+                    batch,
+                };
+                if tx.send(Ok(msg)).is_err() {
+                    return Ok(false);
+                }
+            }
+            Ok(true)
+        }
         ShardInput::Synth { spec, seed } => {
-            // Always whole: chunk-splitting synthesis would change the
-            // per-shard RNG streams (bit-reproducibility contract).
             let mut batch = pool.take();
             spec.shard_into(i, *seed, &mut batch);
             let msg = ChunkMsg { shard: i, chunk: 0, last: true, ssd_s: 0.0, batch };
@@ -678,6 +707,47 @@ mod tests {
         let total: usize = got.iter().map(|(_, b)| b.rows()).sum();
         assert_eq!(total, spec.rows);
         assert!(got.iter().all(|(_, b)| b.rows() > 0));
+    }
+
+    #[test]
+    fn chunked_synth_ingest_is_bit_identical_to_whole_shard() {
+        // Synth chunking rides the chunk-stable generator: in-order
+        // chunked delivery concatenates back to exactly the whole-shard
+        // sequence, for chunk sizes that do and don't divide evenly.
+        let spec = spec(250, 3);
+        let whole = collect(
+            ShardInput::Synth { spec: spec.clone(), seed: 13 },
+            &IngestConfig::default(),
+        );
+        for chunk_rows in [17usize, 50, 1000] {
+            let cfg = IngestConfig { chunk_rows, workers: 2, ..IngestConfig::default() };
+            let got = collect(ShardInput::Synth { spec: spec.clone(), seed: 13 }, &cfg);
+            let mut at = 0usize;
+            for (i, shard) in &whole {
+                let mut row = 0usize;
+                while row < shard.rows() {
+                    let (gi, gb) = &got[at];
+                    assert_eq!(gi, i, "chunk_rows={chunk_rows}");
+                    let n = gb.rows();
+                    assert!(n > 0 && n <= chunk_rows);
+                    assert!(
+                        batch_eq(gb, &shard.slice_rows(row..row + n)),
+                        "chunk_rows={chunk_rows} shard={i} rows [{row}, {})",
+                        row + n
+                    );
+                    row += n;
+                    at += 1;
+                }
+            }
+            assert_eq!(at, got.len());
+        }
+        // Synthetic chunks never touch the SSD model.
+        let cfg = IngestConfig { chunk_rows: 32, ..IngestConfig::default() };
+        let mut ingest = AsyncIngest::spawn(ShardInput::Synth { spec, seed: 13 }, &cfg);
+        while let Some((_, b)) = ingest.next().unwrap() {
+            ingest.recycle(b);
+        }
+        assert_eq!(ingest.report().ssd_sim_s, 0.0);
     }
 
     #[test]

@@ -6,7 +6,11 @@
 //! occasional negatives (exercising FillMissing/Clamp/Logarithm); sparse
 //! features are 8-hex-char tokens drawn from a Zipf distribution over a
 //! configurable cardinality (exercising Hex2Int/Modulus and vocabulary
-//! skew). Generation is deterministic per (seed, shard).
+//! skew). Generation is deterministic per (seed, shard) and
+//! **chunk-stable**: every (seed, column, row) triple has its own RNG
+//! stream ([`generate_range_into`]), so producing a shard in row-range
+//! chunks is bit-identical to producing it whole — the contract that lets
+//! the streaming ingest chunk synthetic shards too.
 
 use crate::etl::column::{Batch, Column};
 use crate::etl::schema::{FeatureKind, Schema};
@@ -48,8 +52,35 @@ pub fn generate(schema: &Schema, rows: usize, seed: u64, cfg: &SynthConfig) -> B
 /// already matches `schema` (the recycling path of the async ingest
 /// pipeline: a shard buffer cycles worker → executor → pool and the
 /// steady state allocates nothing per shard). Values are bit-identical to
-/// [`generate`] — the per-column RNG streams are the same.
+/// [`generate`] — both are row range `[0, rows)` of the same per-row
+/// streams.
 pub fn generate_into(schema: &Schema, rows: usize, seed: u64, cfg: &SynthConfig, out: &mut Batch) {
+    generate_range_into(schema, 0, rows, seed, cfg, out);
+}
+
+/// Per-row RNG stream: every (seed, column, absolute row) triple gets its
+/// own generator, so any row range can be produced without replaying the
+/// rows before it — the **chunk-stable** property the streaming ingest's
+/// synth chunking relies on (any chunking of a shard concatenates
+/// bit-identically to whole-shard generation).
+#[inline]
+fn row_rng(col_seed: u64, row: usize) -> Rng {
+    // row+1 so row 0 does not degenerate to the bare column seed.
+    Rng::new(col_seed ^ (row as u64 + 1).wrapping_mul(0xA24B_AED4_963E_E407))
+}
+
+/// Generate rows `[row_start, row_start + rows)` of the shard stream into
+/// a (possibly recycled) buffer. Chunk-stable: concatenating consecutive
+/// ranges is bit-identical to generating the union in one call (each row
+/// draws from its own RNG stream; see [`row_rng`]).
+pub fn generate_range_into(
+    schema: &Schema,
+    row_start: usize,
+    rows: usize,
+    seed: u64,
+    cfg: &SynthConfig,
+    out: &mut Batch,
+) {
     let matches = out.columns.len() == schema.fields.len()
         && out.columns.iter().zip(&schema.fields).all(|((n, c), f)| {
             n == &f.name
@@ -77,19 +108,29 @@ pub fn generate_into(schema: &Schema, rows: usize, seed: u64, cfg: &SynthConfig,
     }
 
     for (fi, field) in schema.fields.iter().enumerate() {
-        // Independent stream per column so column order never changes data.
-        let mut rng = Rng::new(seed ^ (fi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // Independent stream family per column so column order never
+        // changes data; independent stream per row so chunk boundaries
+        // never change data.
+        let col_seed = seed ^ (fi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
         match (&field.kind, &mut out.columns[fi].1) {
             (FeatureKind::Label, Column::F32 { data, .. }) => {
                 data.clear();
                 data.reserve(rows);
                 // ~25% positive CTR-style labels.
-                data.extend((0..rows).map(|_| if rng.next_f64() < 0.25 { 1.0 } else { 0.0 }));
+                data.extend((0..rows).map(|k| {
+                    let mut rng = row_rng(col_seed, row_start + k);
+                    if rng.next_f64() < 0.25 {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }));
             }
             (FeatureKind::Dense, Column::F32 { data, .. }) => {
                 data.clear();
                 data.reserve(rows);
-                data.extend((0..rows).map(|_| {
+                data.extend((0..rows).map(|k| {
+                    let mut rng = row_rng(col_seed, row_start + k);
                     let u = rng.next_f64();
                     if u < cfg.missing_rate {
                         f32::NAN
@@ -105,7 +146,8 @@ pub fn generate_into(schema: &Schema, rows: usize, seed: u64, cfg: &SynthConfig,
                 let card = field.cardinality.unwrap_or(cfg.cardinality);
                 data.clear();
                 data.reserve(rows);
-                data.extend((0..rows).map(|_| {
+                data.extend((0..rows).map(|k| {
+                    let mut rng = row_rng(col_seed, row_start + k);
                     let rank = rng.zipf(card, cfg.zipf_s);
                     // Scramble rank → token so hot tokens are not
                     // lexicographically adjacent (as in real logs),
@@ -222,6 +264,47 @@ mod tests {
         generate_into(&other, 8, 5, &cfg, &mut buf);
         assert_eq!(buf.rows(), 8);
         assert!(buf.get("x_c0").is_some() && buf.get("t_c0").is_none());
+    }
+
+    #[test]
+    fn range_generation_is_chunk_stable() {
+        // Concatenating arbitrary row ranges must reproduce the whole
+        // batch bit-for-bit — including NaNs, so compare f32 by bits.
+        let schema = Schema::tabular("t", 2, 2, 5000);
+        let cfg = SynthConfig::default();
+        let whole = generate(&schema, 257, 21, &cfg);
+        for splits in [vec![0usize, 257], vec![0, 100, 257], vec![0, 1, 64, 200, 256, 257]] {
+            let mut parts: Vec<Batch> = Vec::new();
+            for w in splits.windows(2) {
+                let mut b = Batch::new();
+                generate_range_into(&schema, w[0], w[1] - w[0], 21, &cfg, &mut b);
+                parts.push(b);
+            }
+            let mut row = 0usize;
+            for p in &parts {
+                for (ci, (name, col)) in p.columns.iter().enumerate() {
+                    assert_eq!(name, &whole.columns[ci].0);
+                    match (col, &whole.columns[ci].1) {
+                        (Column::F32 { data: a, .. }, Column::F32 { data: b, .. }) => {
+                            for (i, v) in a.iter().enumerate() {
+                                assert_eq!(
+                                    v.to_bits(),
+                                    b[row + i].to_bits(),
+                                    "row {} col {name}",
+                                    row + i
+                                );
+                            }
+                        }
+                        (Column::Hex8 { data: a }, Column::Hex8 { data: b }) => {
+                            assert_eq!(a.as_slice(), &b[row..row + a.len()], "col {name}");
+                        }
+                        _ => panic!("column type mismatch"),
+                    }
+                }
+                row += p.rows();
+            }
+            assert_eq!(row, 257);
+        }
     }
 
     #[test]

@@ -1,21 +1,27 @@
-//! Pinned staging arena: a slab allocator over a fixed simulated GPU
-//! memory region (paper §3, Fig. 3 — the FPGA's P2P staging buffers live
+//! Pinned staging arenas: slab allocators over fixed simulated GPU
+//! memory regions (paper §3, Fig. 3 — the FPGA's P2P staging buffers live
 //! in GPU memory and are recycled under trainer credits).
 //!
-//! The arena carves its region into fixed-size [`StagingSlot`]s. A slot is
-//! `acquire`d by the producer (blocking while every slot is in flight —
-//! the credit-gated backpressure of the staging protocol), packed **in
-//! place** by the fused engine, staged to the trainer, and `release`d when
-//! the trainer finishes stepping on it. Each release bumps the slot's
-//! epoch — the epoch-based reclamation that invalidates stale handles and
-//! lets the simulation check that no view outlives its credit.
+//! Each [`DeviceArena`] carves its region into fixed-size
+//! [`StagingSlot`]s. A slot is `acquire`d by the producer (blocking while
+//! every slot is in flight — the credit-gated backpressure of the staging
+//! protocol), packed **in place** by the fused engine, staged to the
+//! trainer, and `release`d when the trainer finishes stepping on it. Each
+//! release bumps the slot's epoch — the epoch-based reclamation that
+//! invalidates stale handles and lets the simulation check that no view
+//! outlives its credit.
 //!
-//! The region is registered in the [`Mmu`]'s unified virtual address space
-//! as [`MemClass::Gpu`] pages, so slot addresses translate like any other
-//! device buffer descriptor the dataflow engine uses.
+//! [`ArenaSet`] scales the same protocol to a fleet: one arena **per
+//! simulated GPU**, every region registered as a disjoint
+//! [`MemClass::Gpu`] range in one **shared** [`Mmu`] address space — the
+//! unified virtual address space the FPGA dataflow engine routes buffer
+//! descriptors through. Credits, epochs and stats stay strictly
+//! per-device, so one stalled GPU backpressures only its own producer
+//! lane (the scheduler's routing layer decides which lane each shard
+//! takes; see `coordinator::scheduler`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::packer::{PackedBatch, PackedBatchView};
 use crate::error::{EtlError, Result};
@@ -44,6 +50,8 @@ impl Default for ArenaConfig {
 /// Counters of the arena's zero-copy contract (see module docs).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ArenaStats {
+    /// Device index the counters belong to (0 for a standalone arena).
+    pub device: usize,
     /// Slots handed out.
     pub acquires: u64,
     /// Credits returned.
@@ -76,6 +84,8 @@ pub struct StagingSlot {
     vaddr: u64,
     capacity_bytes: u64,
     arena_id: u64,
+    /// Simulated GPU this slot's region belongs to.
+    device: usize,
     /// Packs performed on this slot over its lifetime.
     packs: u64,
     /// Did the last pack grow the slot's buffers?
@@ -89,6 +99,11 @@ impl StagingSlot {
     /// Slot index within its arena.
     pub fn index(&self) -> usize {
         self.index
+    }
+
+    /// Simulated GPU this slot stages into.
+    pub fn device(&self) -> usize {
+        self.device
     }
 
     /// Reclamation epoch this handle belongs to.
@@ -173,6 +188,7 @@ impl StagingSlot {
             vaddr: self.vaddr,
             slot: self.index,
             epoch: self.epoch,
+            device: self.device,
         }
     }
 
@@ -188,6 +204,7 @@ impl StagingSlot {
                 vaddr: self.vaddr,
                 slot: self.index,
                 epoch: self.epoch,
+                device: self.device,
             })
             .collect()
     }
@@ -206,6 +223,8 @@ pub struct DeviceBatchView<'a> {
     pub slot: usize,
     /// Slot epoch this view belongs to.
     pub epoch: u64,
+    /// Simulated GPU the staged batch is resident on.
+    pub device: usize,
 }
 
 impl DeviceBatchView<'_> {
@@ -223,29 +242,43 @@ struct ArenaInner {
     /// No further acquires (consumer exited); wakes blocked producers.
     closed: bool,
     stats: ArenaStats,
-    /// The unified address space the region is registered in.
-    mmu: Mmu,
 }
 
-/// The staging arena. See module docs for the protocol; thread-safe — the
-/// producer and consumer sides share it by reference across threads.
+/// The staging arena of one simulated GPU. See module docs for the
+/// protocol; thread-safe — the producer and consumer sides share it by
+/// reference across threads. Standalone arenas own their MMU address
+/// space; arenas inside an [`ArenaSet`] share one (one disjoint
+/// `MemClass::Gpu` range per device).
 pub struct DeviceArena {
     inner: Mutex<ArenaInner>,
     avail: Condvar,
     cfg: ArenaConfig,
     base_vaddr: u64,
     id: u64,
+    device: usize,
+    /// The unified address space the region is registered in (shared
+    /// across every arena of an [`ArenaSet`]).
+    mmu: Arc<Mutex<Mmu>>,
 }
 
 impl DeviceArena {
     /// Build an arena of `cfg.slots` slots, registering the whole region
-    /// as GPU pages in a fresh MMU address space.
+    /// as GPU pages in a fresh MMU address space (device index 0).
     pub fn new(cfg: ArenaConfig) -> DeviceArena {
+        DeviceArena::with_mmu(cfg, 0, Arc::new(Mutex::new(Mmu::default())))
+    }
+
+    /// Build the arena of simulated GPU `device`, mapping its region as
+    /// the next free `MemClass::Gpu` range of the shared address space —
+    /// the [`ArenaSet`] constructor path.
+    fn with_mmu(cfg: ArenaConfig, device: usize, mmu: Arc<Mutex<Mmu>>) -> DeviceArena {
         assert!(cfg.slots >= 1, "arena needs at least one slot");
         assert!(cfg.slot_bytes >= 1, "slot_bytes must be positive");
         let id = NEXT_ARENA_ID.fetch_add(1, Ordering::Relaxed);
-        let mut mmu = Mmu::default();
-        let base_vaddr = mmu.map(MemClass::Gpu, cfg.slots as u64 * cfg.slot_bytes, 0);
+        let base_vaddr = mmu
+            .lock()
+            .expect("mmu poisoned")
+            .map(MemClass::Gpu, cfg.slots as u64 * cfg.slot_bytes, 0);
         // Reverse index order: `acquire` pops from the back, so the first
         // credits hand out slot 0, 1, … in address order.
         let free = (0..cfg.slots)
@@ -256,6 +289,7 @@ impl DeviceArena {
                 vaddr: base_vaddr + i as u64 * cfg.slot_bytes,
                 capacity_bytes: cfg.slot_bytes,
                 arena_id: id,
+                device,
                 packs: 0,
                 grew: false,
                 packed_bytes: 0,
@@ -267,13 +301,14 @@ impl DeviceArena {
                 free,
                 epochs: vec![0; cfg.slots],
                 closed: false,
-                stats: ArenaStats::default(),
-                mmu,
+                stats: ArenaStats { device, ..ArenaStats::default() },
             }),
             avail: Condvar::new(),
             cfg,
             base_vaddr,
             id,
+            device,
+            mmu,
         }
     }
 
@@ -290,6 +325,11 @@ impl DeviceArena {
     /// Base virtual address of the region in the MMU address space.
     pub fn base_vaddr(&self) -> u64 {
         self.base_vaddr
+    }
+
+    /// Simulated GPU this arena stages into.
+    pub fn device(&self) -> usize {
+        self.device
     }
 
     /// Blocking acquire: waits for a credit (free slot). Returns `None`
@@ -393,11 +433,94 @@ impl DeviceArena {
         self.inner.lock().expect("arena poisoned").stats
     }
 
-    /// Translate a device virtual address through the arena's MMU entry
-    /// (tests / buffer-descriptor plumbing).
+    /// Translate a device virtual address through the (possibly shared)
+    /// MMU (tests / buffer-descriptor plumbing).
     pub fn translate(&self, vaddr: u64) -> Result<(MemClass, u64)> {
-        let mut inner = self.inner.lock().expect("arena poisoned");
-        let (class, paddr, _cycles) = inner.mmu.translate(vaddr)?;
+        let mut mmu = self.mmu.lock().expect("mmu poisoned");
+        let (class, paddr, _cycles) = mmu.translate(vaddr)?;
+        Ok((class, paddr))
+    }
+}
+
+/// One staging arena **per simulated GPU**, all regions registered as
+/// disjoint [`MemClass::Gpu`] ranges in one shared [`Mmu`] address space —
+/// the multi-device topology the scheduler's routing layer feeds
+/// (ROADMAP: "multi-device arenas, one region per GPU, scheduler-routed").
+///
+/// ```text
+///          shared Mmu virtual address space
+///   ┌────────────┬────────────┬────────────┬───────┐
+///   │ GPU0 slots │ GPU1 slots │ GPU2 slots │  ...  │   (MemClass::Gpu)
+///   └────────────┴────────────┴────────────┴───────┘
+///      arena 0       arena 1      arena 2
+///    credits/epochs/stats per device — a stalled GPU
+///    backpressures only its own producer lane
+/// ```
+pub struct ArenaSet {
+    arenas: Vec<DeviceArena>,
+    mmu: Arc<Mutex<Mmu>>,
+}
+
+impl ArenaSet {
+    /// Build `devices` arenas of identical sizing over one shared address
+    /// space.
+    pub fn new(devices: usize, cfg: ArenaConfig) -> ArenaSet {
+        assert!(devices >= 1, "arena set needs at least one device");
+        let mmu = Arc::new(Mutex::new(Mmu::default()));
+        let arenas = (0..devices)
+            .map(|d| DeviceArena::with_mmu(cfg.clone(), d, Arc::clone(&mmu)))
+            .collect();
+        ArenaSet { arenas, mmu }
+    }
+
+    /// Number of simulated GPUs.
+    pub fn devices(&self) -> usize {
+        self.arenas.len()
+    }
+
+    /// The arena of simulated GPU `device`.
+    pub fn device(&self, device: usize) -> &DeviceArena {
+        &self.arenas[device]
+    }
+
+    /// Iterate the per-device arenas in device order.
+    pub fn iter(&self) -> impl Iterator<Item = &DeviceArena> {
+        self.arenas.iter()
+    }
+
+    /// Close every arena (wakes all blocked producers, fleet shutdown).
+    pub fn close_all(&self) {
+        for a in &self.arenas {
+            a.close();
+        }
+    }
+
+    /// Per-device counter snapshots, in device order.
+    pub fn per_device_stats(&self) -> Vec<ArenaStats> {
+        self.arenas.iter().map(|a| a.stats()).collect()
+    }
+
+    /// Fleet-aggregate counters (the exactly-once accounting across every
+    /// device; `device` is meaningless on the sum and reported as 0).
+    pub fn total_stats(&self) -> ArenaStats {
+        let mut total = ArenaStats::default();
+        for s in self.per_device_stats() {
+            total.acquires += s.acquires;
+            total.releases += s.releases;
+            total.stalls += s.stalls;
+            total.acquire_wait_s += s.acquire_wait_s;
+            total.packed_bytes += s.packed_bytes;
+            total.warmup_allocs += s.warmup_allocs;
+            total.steady_allocs += s.steady_allocs;
+        }
+        total
+    }
+
+    /// Translate a device virtual address through the shared MMU: any
+    /// device's slot addresses resolve in the one unified address space.
+    pub fn translate(&self, vaddr: u64) -> Result<(MemClass, u64)> {
+        let mut mmu = self.mmu.lock().expect("mmu poisoned");
+        let (class, paddr, _cycles) = mmu.translate(vaddr)?;
         Ok((class, paddr))
     }
 }
@@ -546,6 +669,61 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("overflow"), "{err}");
         a.release(s).unwrap();
+    }
+
+    #[test]
+    fn arena_set_maps_disjoint_regions_in_one_address_space() {
+        let set = ArenaSet::new(3, ArenaConfig { slots: 2, slot_bytes: 1 << 20 });
+        assert_eq!(set.devices(), 3);
+        // Regions are disjoint and every device's addresses translate as
+        // GPU pages through the one shared MMU.
+        let mut bases: Vec<u64> = set.iter().map(|a| a.base_vaddr()).collect();
+        bases.sort_unstable();
+        bases.dedup();
+        assert_eq!(bases.len(), 3, "per-device regions must be disjoint");
+        for d in 0..3 {
+            let a = set.device(d);
+            assert_eq!(a.device(), d);
+            let s = a.try_acquire().unwrap();
+            assert_eq!(s.device(), d);
+            assert_eq!(set.translate(s.vaddr()).unwrap().0, MemClass::Gpu);
+            assert_eq!(a.translate(s.vaddr()).unwrap().0, MemClass::Gpu);
+            // Views are stamped with the device they are resident on.
+            assert_eq!(s.view().device, d);
+            a.release(s).unwrap();
+        }
+        // A slot released to a sibling device of the same set is foreign.
+        let s0 = set.device(0).try_acquire().unwrap();
+        let err = set.device(1).release(s0).unwrap_err();
+        assert!(err.to_string().contains("foreign arena"), "{err}");
+    }
+
+    #[test]
+    fn arena_set_credits_and_stats_stay_per_device() {
+        let set = ArenaSet::new(2, ArenaConfig { slots: 1, slot_bytes: 1 << 16 });
+        // Exhaust device 0 — device 1 is unaffected.
+        let held = set.device(0).try_acquire().unwrap();
+        assert!(set.device(0).try_acquire().is_none());
+        let mut other = set.device(1).try_acquire().unwrap();
+        pack_rows(&mut other, 16).unwrap();
+        set.device(1).release(other).unwrap();
+        set.device(0).release(held).unwrap();
+
+        let per = set.per_device_stats();
+        assert_eq!(per[0].device, 0);
+        assert_eq!(per[1].device, 1);
+        assert_eq!(per[0].packed_bytes, 0);
+        assert_eq!(per[1].packed_bytes, 16 * 3 * 4);
+        // A bounced try_acquire is not an acquire: one credit each.
+        assert_eq!(per[0].acquires, 1);
+        assert_eq!(per[1].acquires, 1);
+        let total = set.total_stats();
+        assert_eq!(total.acquires, 2);
+        assert_eq!(total.packed_bytes, 16 * 3 * 4);
+        // close_all wakes every device's producers.
+        set.close_all();
+        assert!(set.device(0).try_acquire().is_none());
+        assert!(set.device(1).try_acquire().is_none());
     }
 
     #[test]

@@ -42,6 +42,30 @@
 //! * [`DeviceBatchView`] — a borrowed, device-addressed view of a staged
 //!   batch; the trainer consumes it in place (no copy, no allocation).
 //!
+//! # Multi-device topology (N simulated GPUs)
+//!
+//! [`ArenaSet`] and [`TransferSet`] scale the same protocol to a fleet:
+//! one arena region and one DMA queue **per device**, the arenas' regions
+//! disjoint `MemClass::Gpu` ranges of one shared [`crate::memsys::Mmu`]
+//! address space, the DMA queues on independent engine clocks. The
+//! scheduler's routing layer
+//! ([`crate::coordinator::scheduler::DeviceRouter`]) assigns each
+//! ingested shard a device lane — round-robin for bit-reproducibility,
+//! least-loaded for throughput — and the multi-device train loop steps
+//! one `Trainer` replica per device, periodically all-reducing parameters
+//! (deterministic tree reduction costed against the calibrated channels).
+//!
+//! ```text
+//!                     ┌─ route ─▶ arena 0 ── DMA 0 ─▶ replica 0 ─┐
+//!   ingest ─ shards ──┤          arena 1 ── DMA 1 ─▶ replica 1 ──┼─ all-reduce
+//!                     └─ ... ──▶ arena N ── DMA N ─▶ replica N ──┘   (tree)
+//! ```
+//!
+//! Credits, epochs and stats stay per-device: a stalled GPU
+//! backpressures only its own lane — the per-device staging discipline
+//! multi-device recommender training needs (BagPipe; the heterogeneous
+//! acceleration pipeline of Adnan et al.).
+//!
 //! # Zero-copy invariants (pinned by `rust/tests/prop_devmem.rs`)
 //!
 //! * each packed byte is written exactly once, by the fused packer,
@@ -56,5 +80,5 @@
 pub mod arena;
 pub mod transfer;
 
-pub use arena::{ArenaConfig, ArenaStats, DeviceArena, DeviceBatchView, StagingSlot};
-pub use transfer::{TransferConfig, TransferEngine, TransferRecord};
+pub use arena::{ArenaConfig, ArenaSet, ArenaStats, DeviceArena, DeviceBatchView, StagingSlot};
+pub use transfer::{TransferConfig, TransferEngine, TransferRecord, TransferSet};

@@ -176,6 +176,65 @@ impl TransferEngine {
     }
 }
 
+/// Per-device DMA queues: one [`TransferEngine`] per simulated GPU, each
+/// on its **own engine clock** — device 0's transfer never queues behind
+/// device 1's (the fleet analogue of the single-engine serialization
+/// above). The multi-device train loop and the `multi-device` hotpath
+/// bench section build their per-lane clocks here and split them across
+/// the lane workers via [`into_engines`](Self::into_engines); shared-set
+/// accounting stays available through the aggregate accessors.
+#[derive(Debug)]
+pub struct TransferSet {
+    engines: Vec<TransferEngine>,
+}
+
+impl TransferSet {
+    /// One engine per device, identical channel/chunking configuration.
+    pub fn new(devices: usize, cfg: TransferConfig) -> TransferSet {
+        assert!(devices >= 1, "transfer set needs at least one device");
+        TransferSet {
+            engines: (0..devices).map(|_| TransferEngine::new(cfg.clone())).collect(),
+        }
+    }
+
+    /// Number of per-device DMA queues.
+    pub fn devices(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// The engine of simulated GPU `device`.
+    pub fn engine(&self, device: usize) -> &TransferEngine {
+        &self.engines[device]
+    }
+
+    /// Mutable engine access (a pack worker owns its device's clock).
+    pub fn engine_mut(&mut self, device: usize) -> &mut TransferEngine {
+        &mut self.engines[device]
+    }
+
+    /// Schedule a transfer on `device`'s queue at simulated time `now_s`.
+    pub fn submit(&mut self, device: usize, now_s: f64, bytes: u64) -> TransferRecord {
+        self.engines[device].submit(now_s, bytes)
+    }
+
+    /// Total payload bytes moved across every device.
+    pub fn total_bytes(&self) -> u64 {
+        self.engines.iter().map(|e| e.total_bytes()).sum()
+    }
+
+    /// Sum of per-device wire seconds (the engines run in parallel, so
+    /// this is aggregate DMA work, not wall time).
+    pub fn busy_s_total(&self) -> f64 {
+        self.engines.iter().map(|e| e.busy_s()).sum()
+    }
+
+    /// Split into the per-device engines (each worker thread takes its
+    /// own clock).
+    pub fn into_engines(self) -> Vec<TransferEngine> {
+        self.engines
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +304,29 @@ mod tests {
         assert_eq!(rec.start_s, 3.5);
         assert_eq!(rec.done_s, 3.5);
         assert_eq!(rec.effective_bw(), 0.0);
+    }
+
+    #[test]
+    fn transfer_set_clocks_are_independent_per_device() {
+        let mut set = TransferSet::new(2, TransferConfig {
+            path: Path::P2pToGpu,
+            chunk_bytes: MIB,
+            depth: 2,
+            record_cap: 8,
+        });
+        // Load device 0's queue; device 1 must start at submit time.
+        let a = set.submit(0, 0.0, 64 * MIB);
+        let b = set.submit(0, 0.0, 64 * MIB);
+        assert_eq!(b.start_s, a.done_s, "same device serializes");
+        let c = set.submit(1, 0.0, 64 * MIB);
+        assert_eq!(c.start_s, 0.0, "sibling device has its own clock");
+        assert_eq!(set.total_bytes(), 192 * MIB);
+        assert!(set.busy_s_total() > set.engine(0).busy_s());
+        assert_eq!(set.devices(), 2);
+        let engines = set.into_engines();
+        assert_eq!(engines.len(), 2);
+        assert_eq!(engines[0].transfers(), 2);
+        assert_eq!(engines[1].transfers(), 1);
     }
 
     #[test]

@@ -18,8 +18,9 @@
 //! * [`coordinator`] — the co-scheduling runtime: format-aware packer,
 //!   double-buffered GPU staging, ETL/training overlap.
 //! * [`devmem`] — the zero-copy device-memory subsystem: pinned staging
-//!   arena over a simulated GPU region + P2P DMA transfer engine; the
-//!   trainer consumes staged batches in place.
+//!   arenas over simulated GPU regions (one per device, shared MMU
+//!   address space) + per-device P2P DMA transfer engines; the trainer
+//!   consumes staged batches in place, scheduler-routed across N devices.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas artifacts.
 //! * [`baselines`] — CPU (pandas-like, Beam-like) and GPU (NVTabular-like)
 //!   comparison systems.

@@ -83,6 +83,35 @@ impl Trainer {
         Ok(())
     }
 
+    /// Fork a data-parallel replica: same artifact metadata, a bitwise
+    /// copy of the **current** parameters, a fresh step counter. The
+    /// multi-device train loop steps one replica per simulated GPU and
+    /// keeps them consistent via all-reduce.
+    pub fn replica(&self) -> Trainer {
+        Trainer {
+            meta: self.meta.clone(),
+            state: self.state.clone(),
+            steps: 0,
+            lr: self.lr,
+        }
+    }
+
+    /// Overwrite the flat state in place — the all-reduce broadcast path
+    /// (and the write-back of the reduced fleet parameters into the
+    /// caller's trainer). Fails if the length does not match the
+    /// artifact's `state_len`.
+    pub fn load_state(&mut self, state: &[f32]) -> Result<()> {
+        if state.len() != self.meta.state_len() {
+            return Err(EtlError::Runtime(format!(
+                "state length {} != artifact state_len {}",
+                state.len(),
+                self.meta.state_len()
+            )));
+        }
+        self.state.copy_from_slice(state);
+        Ok(())
+    }
+
     /// Run one training step on a packed batch.
     pub fn step(&mut self, batch: &PackedBatch) -> Result<()> {
         self.step_view(&batch.view())
@@ -186,6 +215,12 @@ impl Trainer {
     pub fn step_with_loss(&mut self, batch: &PackedBatch) -> Result<f32> {
         self.step(batch)?;
         self.loss()
+    }
+
+    /// Borrow the full flat state (the copy-free read the all-reduce
+    /// fast path uses; [`state_to_vec`](Self::state_to_vec) clones).
+    pub fn state(&self) -> &[f32] {
+        &self.state
     }
 
     /// Download the full state (tests / checkpoints).
@@ -330,6 +365,26 @@ mod tests {
         batch.dense.truncate(batch.rows * batch.n_dense);
         batch.sparse.truncate(batch.rows * batch.n_sparse);
         assert!(t.step(&batch).is_err());
+    }
+
+    #[test]
+    fn replica_forks_params_and_load_state_broadcasts() {
+        let mut t = Trainer::from_meta(tiny_meta(), 3);
+        let batch = tiny_batch();
+        t.step(&batch).unwrap();
+        let mut r = t.replica();
+        assert_eq!(r.steps, 0, "replicas start their own step counter");
+        assert_eq!(r.state_to_vec().unwrap(), t.state_to_vec().unwrap());
+        // Stepping the replica matches stepping the original (bitwise).
+        t.step(&batch).unwrap();
+        r.step(&batch).unwrap();
+        assert_eq!(r.state_to_vec().unwrap(), t.state_to_vec().unwrap());
+        // Broadcast: load_state overwrites verbatim; bad lengths bounce.
+        let s = t.state_to_vec().unwrap();
+        let mut other = Trainer::from_meta(tiny_meta(), 99);
+        other.load_state(&s).unwrap();
+        assert_eq!(other.state_to_vec().unwrap(), s);
+        assert!(other.load_state(&s[1..]).is_err());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! credit protocol is exercised.
 
 use piperec::coordinator::packer::PackedBatch;
+use piperec::coordinator::{train, DataPath, RoutePolicy, TrainConfig, TrainReport};
 use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
 use piperec::dataio::ingest::{AsyncIngest, DeliveryPolicy, IngestConfig, ShardInput};
 use piperec::dataio::synth::SynthConfig;
@@ -19,6 +20,10 @@ use piperec::etl::dag::{Dag, SinkRole};
 use piperec::etl::exec::{ExecConfig, FusedEngine};
 use piperec::etl::ops::OpSpec;
 use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
+use piperec::runtime::Trainer;
 use piperec::util::prop::{check, Gen};
 
 /// Bitwise comparison of two packed batches (dense may legitimately carry
@@ -230,6 +235,218 @@ fn prop_arena_path_bit_identical_to_heap_path() {
         }
         Ok(())
     });
+}
+
+/// A stateless packing dag over `Schema::tabular("t", nd, ns, _)`: every
+/// dense column a Dense sink, every sparse column hashed to a
+/// SparseIndex sink — the packed shape matches a reference-trainer meta
+/// of (nd, ns) exactly, and no fit is needed.
+fn passthrough_dag(nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-multidev");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    for i in 0..nd {
+        let d = dag.source(format!("t_i{i}"), ColType::F32);
+        let f = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[d],
+        );
+        dag.sink(format!("dense{i}"), f, SinkRole::Dense);
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink(format!("sparse{i}"), m, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn trainer_meta(batch: usize, nd: usize, ns: usize) -> ModelMeta {
+    ModelMeta {
+        batch,
+        n_dense: nd,
+        n_sparse: ns,
+        vocab: 128,
+        embed_dim: 1,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![nd] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![ns * 32] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+#[test]
+fn prop_multi_device_round_robin_bit_identical_to_single_device() {
+    // The acceptance matrix — devices {1, 2, 4} × slots-per-device
+    // {2, 3} — is exercised for EVERY random case: a round-robin-routed
+    // fleet with sync-every-step all-reduce must replay the single-device
+    // arena trajectory bitwise (losses AND final parameters), with the
+    // per-device packed-byte / DMA / shard counters summing to the
+    // single-device totals exactly once.
+    check("multi_device_vs_single", 4, |g| {
+        let nd = 1 + g.usize(2);
+        let ns = 1 + g.usize(2);
+        let schema = Schema::tabular("t", nd, ns, 64);
+        let dag = passthrough_dag(nd, ns);
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+        let rows = 64 + g.usize(300);
+        let shards = 1 + g.usize(5);
+        let spec = custom_spec(schema.clone(), rows, shards);
+        let seed = g.u64(1 << 32);
+        let step_rows = 16 + g.usize(48);
+
+        let plan = compile(&dag, &schema, &PlannerConfig::default())
+            .map_err(|e| e.to_string())?;
+        let pipe = Pipeline::new(plan);
+
+        let run_with = |devices: usize, slots: usize| -> Result<(TrainReport, Vec<f32>), String> {
+            let mut trainer = Trainer::from_meta(trainer_meta(step_rows, nd, ns), 7);
+            let cfg = TrainConfig {
+                max_steps: usize::MAX / 2,
+                loss_every: 1,
+                staging_buffers: 2,
+                seed,
+                ingest: IngestConfig {
+                    workers: 2,
+                    channel_depth: 2,
+                    policy: DeliveryPolicy::InOrder,
+                    ..IngestConfig::default()
+                },
+                path: DataPath::Arena,
+                arena: ArenaConfig { slots, slot_bytes: 16 << 20 },
+                devices,
+                route: RoutePolicy::RoundRobin,
+                allreduce_every: 1,
+                ..TrainConfig::default()
+            };
+            let report = train(&pipe, &spec, &mut trainer, &cfg).map_err(|e| e.to_string())?;
+            let state = trainer.state_to_vec().map_err(|e| e.to_string())?;
+            Ok((report, state))
+        };
+
+        let (single, single_state) = run_with(1, 3)?;
+        for &devices in &[2usize, 4] {
+            for &slots in &[2usize, 3] {
+                let label = format!("devices={devices} slots={slots}");
+                let (multi, multi_state) = run_with(devices, slots)?;
+
+                // Loss-bitwise identity with the single-device path.
+                if multi.steps != single.steps {
+                    return Err(format!(
+                        "{label}: {} steps vs single-device {}",
+                        multi.steps, single.steps
+                    ));
+                }
+                if multi.losses.len() != single.losses.len() {
+                    return Err(format!("{label}: loss sample counts differ"));
+                }
+                for ((ms, ml), (ss, sl)) in multi.losses.iter().zip(&single.losses) {
+                    if ms != ss || ml.to_bits() != sl.to_bits() {
+                        return Err(format!(
+                            "{label}: loss diverged at step {ms}: {ml} vs {sl}"
+                        ));
+                    }
+                }
+                // Final parameters bit-identical.
+                if multi_state.len() != single_state.len() {
+                    return Err(format!("{label}: state lengths differ"));
+                }
+                for (i, (a, b)) in multi_state.iter().zip(&single_state).enumerate() {
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("{label}: param[{i}] differs: {a} vs {b}"));
+                    }
+                }
+
+                // Per-device counters sum exactly once.
+                if multi.per_device.len() != devices {
+                    return Err(format!(
+                        "{label}: {} device reports",
+                        multi.per_device.len()
+                    ));
+                }
+                let staged: u64 = multi.per_device.iter().map(|d| d.staged_bytes).sum();
+                if staged != multi.staged_bytes || staged != single.staged_bytes {
+                    return Err(format!(
+                        "{label}: per-device staged {} vs aggregate {} vs single {}",
+                        staged, multi.staged_bytes, single.staged_bytes
+                    ));
+                }
+                let shard_sum: u64 = multi.per_device.iter().map(|d| d.shards).sum();
+                if shard_sum != multi.shards || shard_sum != single.shards {
+                    return Err(format!("{label}: shard counters double/under-counted"));
+                }
+                // Round-robin lane assignment is exact: lane d packs the
+                // shards whose delivery index ≡ d (mod devices).
+                for (d, rep) in multi.per_device.iter().enumerate() {
+                    let want = (multi.shards as usize).saturating_sub(d).div_ceil(devices);
+                    if rep.shards != want as u64 {
+                        return Err(format!(
+                            "{label}: lane {d} packed {} shards, round-robin says {want}",
+                            rep.shards
+                        ));
+                    }
+                }
+                let step_sum: u64 = multi.per_device.iter().map(|d| d.steps).sum();
+                if step_sum != multi.steps {
+                    return Err(format!(
+                        "{label}: per-device steps sum {} vs total {}",
+                        step_sum, multi.steps
+                    ));
+                }
+                let dma_sum: f64 = multi.per_device.iter().map(|d| d.dma_sim_s).sum();
+                if (dma_sum - multi.dma_sim_s).abs() > 1e-12 {
+                    return Err(format!("{label}: DMA seconds double-counted"));
+                }
+                if multi.steps > 0 && multi.allreduces == 0 {
+                    return Err(format!("{label}: no all-reduce ran"));
+                }
+                if multi.host_copy_bytes != 0 || multi.steady_allocs != 0 {
+                    return Err(format!("{label}: zero-copy invariants broken"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn least_loaded_routing_trains_every_shard_once() {
+    // Throughput mode: arrival-order consumption, ledger-driven routing —
+    // no bitwise claim, but nothing is lost or duplicated and the fleet
+    // counters still sum exactly once.
+    let nd = 2;
+    let ns = 2;
+    let schema = Schema::tabular("t", nd, ns, 64);
+    let dag = passthrough_dag(nd, ns);
+    dag.validate(&schema).unwrap();
+    let spec = custom_spec(schema.clone(), 320, 5);
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    let pipe = Pipeline::new(plan);
+    let mut trainer = Trainer::from_meta(trainer_meta(32, nd, ns), 11);
+    let cfg = TrainConfig {
+        max_steps: usize::MAX / 2,
+        loss_every: 1,
+        seed: 5,
+        arena: ArenaConfig { slots: 2, slot_bytes: 16 << 20 },
+        devices: 3,
+        route: RoutePolicy::LeastLoaded,
+        allreduce_every: 4,
+        ..TrainConfig::default()
+    };
+    let report = train(&pipe, &spec, &mut trainer, &cfg).unwrap();
+    assert_eq!(report.shards, 5, "every shard exactly once");
+    let shard_sum: u64 = report.per_device.iter().map(|d| d.shards).sum();
+    assert_eq!(shard_sum, report.shards);
+    let staged: u64 = report.per_device.iter().map(|d| d.staged_bytes).sum();
+    assert_eq!(staged, report.staged_bytes);
+    assert!(report.steps > 0);
+    assert!(report.losses.iter().all(|(_, l)| l.is_finite()));
+    assert!(report.allreduces > 0);
+    assert!(report.allreduce_sim_s > 0.0);
+    assert_eq!(trainer.steps, report.steps);
 }
 
 #[test]

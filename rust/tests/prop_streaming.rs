@@ -200,6 +200,101 @@ fn prop_streaming_ingest_bit_identical_to_sync_producer() {
 }
 
 #[test]
+fn prop_chunked_synth_ingest_bit_identical_to_whole_shard() {
+    // `IngestConfig::chunk_rows` on a Synth input rides the chunk-stable
+    // generator (per-row RNG streams): across random specs × chunk sizes
+    // × worker counts, in-order chunked delivery must concatenate back to
+    // exactly the whole-shard sequence, bit for bit (dense NaNs included
+    // — `Batch` rows are compared through the packed-bits helper after a
+    // row slice).
+    use piperec::etl::column::{Batch, Column};
+
+    fn batch_bits_equal(a: &Batch, b: &Batch) -> bool {
+        a.columns.len() == b.columns.len()
+            && a.columns.iter().zip(&b.columns).all(|((an, ac), (bn, bc))| {
+                an == bn
+                    && match (ac, bc) {
+                        (
+                            Column::F32 { data: x, width: wx },
+                            Column::F32 { data: y, width: wy },
+                        ) => {
+                            wx == wy
+                                && x.len() == y.len()
+                                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                        }
+                        _ => ac == bc,
+                    }
+            })
+    }
+
+    check("chunked_synth_vs_whole", 10, |g| {
+        let nd = 1 + g.usize(2);
+        let ns = 1 + g.usize(2);
+        let schema = Schema::tabular("t", nd, ns, 64);
+        let rows = 32 + g.usize(300);
+        let shards = 1 + g.usize(5);
+        let spec = custom_spec(schema, rows, shards);
+        let seed = g.u64(1 << 32);
+
+        // Whole-shard reference (the synchronous producer's sequence).
+        let whole: Vec<(usize, Batch)> = (0..spec.shards)
+            .map(|i| (i, spec.shard(i, seed)))
+            .filter(|(_, b)| b.rows() > 0)
+            .collect();
+
+        for &chunk_rows in &[1usize + g.usize(24), 64, 4096] {
+            for &workers in &[1usize, 4] {
+                let label = format!("chunk_rows={chunk_rows} workers={workers}");
+                let cfg = IngestConfig {
+                    workers,
+                    channel_depth: 2,
+                    policy: DeliveryPolicy::InOrder,
+                    chunk_rows,
+                    ..IngestConfig::default()
+                };
+                let mut ingest =
+                    AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed }, &cfg);
+                let mut got: Vec<(usize, Batch)> = Vec::new();
+                loop {
+                    let item = ingest.next().map_err(|e| e.to_string())?;
+                    let Some((i, b)) = item else { break };
+                    got.push((i, b));
+                }
+                let mut at = 0usize;
+                for (i, shard) in &whole {
+                    let mut row = 0usize;
+                    while row < shard.rows() {
+                        if at >= got.len() {
+                            return Err(format!("{label}: ran out of chunks at shard {i}"));
+                        }
+                        let (gi, gb) = &got[at];
+                        if gi != i {
+                            return Err(format!("{label}: chunk of shard {gi}, expected {i}"));
+                        }
+                        let n = gb.rows();
+                        if n == 0 || n > chunk_rows {
+                            return Err(format!("{label}: bad chunk size {n}"));
+                        }
+                        if !batch_bits_equal(gb, &shard.slice_rows(row..row + n)) {
+                            return Err(format!(
+                                "{label}: shard {i} rows [{row}, {}) differ",
+                                row + n
+                            ));
+                        }
+                        row += n;
+                        at += 1;
+                    }
+                }
+                if at != got.len() {
+                    return Err(format!("{label}: {} surplus chunks", got.len() - at));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_streaming_fit_on_ingested_shards_matches_sync_fit() {
     // Accumulated fused fit over async-ingested shards (in-order) equals
     // the same accumulation over the synchronous shard sequence.

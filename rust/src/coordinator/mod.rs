@@ -2,10 +2,16 @@
 //! format-aware packer, credit-gated P2P staging with double buffering,
 //! the ETL/training overlap scheduler with its multi-device routing layer
 //! ([`RoutePolicy`]: round-robin for bit-reproducibility, least-loaded
-//! for throughput), and the live training loop that composes the FPGA
-//! data plane with the trainer — across one simulated GPU or a routed
-//! fleet of them ([`TrainConfig::devices`], per-device breakdowns in
-//! [`TrainReport::per_device`]).
+//! for throughput, byte ties to the lowest device index) and barrier-free
+//! gradient all-reduce bus ([`ReduceBus`]: epoch-tagged f64 gradient
+//! contributions, replicas block only on the epoch their next step
+//! depends on), and the live training loop that composes the FPGA data
+//! plane with the trainer — across one simulated GPU or a routed fleet of
+//! **truly concurrent** per-device consumer threads
+//! ([`TrainConfig::devices`], per-device breakdowns in
+//! [`TrainReport::per_device`]; see `train_loop`'s module docs for the
+//! concurrency model and the reproducibility matrix of knob
+//! combinations).
 
 pub mod online;
 pub mod packer;
@@ -17,7 +23,8 @@ pub mod train_loop;
 pub use packer::{pack, PackLayout, PackedBatch, PackedBatchView};
 pub use scheduler::{
     cpu_gpu_config, piperec_config, simulate_overlap, utilization_trace, DeviceRouter,
-    LoadTracker, OverlapConfig, OverlapResult, RoutePolicy,
+    EpochContrib, EpochWait, LoadTracker, OverlapConfig, OverlapResult, ReduceBus, ReducedEpoch,
+    RoutePolicy,
 };
 pub use online::{classify_psi, DriftDetector, DriftVerdict, FreshnessTracker, OnlineVocab};
 pub use sharding::{provision, route, ShardingPlan};

@@ -9,15 +9,23 @@
 //! (`devmem::ArenaSet`), every ingested shard is assigned a device lane
 //! under a [`RoutePolicy`] — round-robin pins a bit-reproducible
 //! assignment, least-loaded follows the per-device outstanding-byte
-//! ledger ([`LoadTracker`]) for throughput under skewed shard costs.
+//! ledger ([`LoadTracker`]) for throughput under skewed shard costs —
+//! and the fleet's **barrier-free gradient all-reduce** ([`ReduceBus`]):
+//! concurrent per-device trainer replicas post epoch-tagged f64
+//! gradient-level contributions and block only on the resolution of the
+//! epoch their next step depends on, never on a rendezvous barrier (see
+//! the `ReduceBus` docs for the epoch protocol).
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::staging::StagingSim;
 use crate::memsys::channel::ChannelModel;
 use crate::metrics::TimeSeries;
+use crate::runtime::GradStep;
 use crate::util::prng::Rng;
+use crate::util::sched::{self, site};
 
 /// Configuration of one overlap simulation.
 #[derive(Debug, Clone)]
@@ -270,21 +278,319 @@ impl DeviceRouter {
                 d
             }
             RoutePolicy::LeastLoaded => {
-                let mut best = 0usize;
-                let mut best_load = self.tracker.load(0);
-                for d in 1..n {
-                    let l = self.tracker.load(d);
-                    if l < best_load {
-                        best = d;
-                        best_load = l;
-                    }
-                }
-                best
+                // One coherent snapshot, then min by (load, index): the
+                // decision is a pure function of the snapshot, and
+                // outstanding-byte ties break to the **lowest device
+                // index** — previously the scan re-read each atomic while
+                // the consumer side concurrently completed work, so two
+                // routers over identical ledgers could break a tie
+                // differently. Pinned by
+                // `least_loaded_ties_break_to_lowest_index`.
+                let snap = self.tracker.snapshot();
+                snap.iter()
+                    .enumerate()
+                    .min_by_key(|(d, l)| (**l, *d))
+                    .map(|(d, _)| d)
+                    .expect("router has >= 1 device")
             }
         };
         self.tracker.charge(d, bytes);
         self.routed += 1;
         d
+    }
+}
+
+/// One device's contribution to a resolved reduce epoch: the
+/// gradient-level payloads of the local-SGD steps it executed inside the
+/// epoch's window, in its local (ascending global step) order.
+#[derive(Debug, Clone)]
+pub struct EpochContrib {
+    /// Contributing device index.
+    pub device: usize,
+    /// The device's steps in the window, local order.
+    pub steps: Vec<GradStep>,
+}
+
+/// A resolved reduce epoch: every contribution of the epoch's global-step
+/// window, **device-ascending** — the fixed association order that makes
+/// the reduction bit-stable across runs and schedules. Replicas replay it
+/// onto their last synced base via `Trainer::apply_reduced`; identical
+/// `(base, epoch)` inputs land on bitwise identical parameters on every
+/// replica, so no state broadcast is needed.
+#[derive(Debug, Clone)]
+pub struct ReducedEpoch {
+    /// Epoch index (0-based within the run).
+    pub epoch: u64,
+    /// First run-relative global step of the window (inclusive).
+    pub start: u64,
+    /// One past the last run-relative global step of the window.
+    pub end: u64,
+    /// Per-device contributions, device-ascending; devices that took no
+    /// step in the window are absent.
+    pub contribs: Vec<EpochContrib>,
+}
+
+impl ReducedEpoch {
+    /// Steps folded into this epoch.
+    pub fn steps(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// Outcome of waiting on an epoch.
+#[derive(Debug)]
+pub enum EpochWait {
+    /// The epoch resolved; replay it onto the synced base.
+    Resolved(Arc<ReducedEpoch>),
+    /// The stream ended and every epoch that will ever exist has already
+    /// been handed out — the waiter is fully synced.
+    Finished,
+    /// The run aborted (a peer errored); stop stepping and unwind.
+    Aborted,
+}
+
+struct BusInner {
+    /// Posted steps not yet folded into an epoch, keyed by run-relative
+    /// global step index.
+    pending: BTreeMap<u64, (usize, GradStep)>,
+    /// Lowest run-relative step index not yet seen contiguously from 0
+    /// (epochs fold only over gap-free windows).
+    contig: u64,
+    /// Resolved epochs, in order. A slot is dropped (`None`) once every
+    /// replica has fetched it, so bus memory is bounded by the epochs
+    /// still in flight, not the whole run's gradient history.
+    resolved: Vec<Option<Arc<ReducedEpoch>>>,
+    /// Fetches served per resolved epoch (an epoch is fully served after
+    /// `devices` fetches — each replica applies it exactly once).
+    served: Vec<usize>,
+    /// One past the last folded run-relative step.
+    resolved_end: u64,
+    /// Total run-relative steps, once the stream end is known; resolves
+    /// the trailing partial epoch.
+    total: Option<u64>,
+    aborted: bool,
+}
+
+/// The **barrier-free gradient all-reduce bus** of the concurrent
+/// multi-device train loop (paper §3's overlap discipline applied to the
+/// consumption side; BagPipe-style lookahead consumer independence).
+///
+/// # Epoch protocol
+///
+/// Global steps are numbered in **delivery order** (the router stamps
+/// every staged slot with the global index of its first trainer step, so
+/// the numbering is schedule-independent). With an all-reduce period of
+/// `K = allreduce_every`, epoch `e` covers the global steps whose
+/// absolute index lies in window `e` of width `K` (windows are aligned to
+/// absolute step counts, so a warm-started trainer keeps its sync phase);
+/// `allreduce_every = 0` makes the whole run one epoch (sync only at
+/// stream end).
+///
+/// Each consumer thread steps its own replica through its routed chunks
+/// **locally** (local SGD inside the window) and [`post`](Self::post)s
+/// one f64 gradient-level [`GradStep`] per step. An epoch **resolves**
+/// when every step of its window has been posted — there is no barrier:
+/// nobody waits for *threads*, only for the *data* of the window, and a
+/// device with many chunks in the window keeps stepping while others are
+/// already blocked on [`wait_epoch`](Self::wait_epoch) for it. Before
+/// stepping a chunk of the next window, a replica must have applied every
+/// earlier epoch (`Trainer::apply_reduced` onto its synced base) — with
+/// `K = 1` that serializes steps into exactly the single-device
+/// trajectory (bitwise, since a one-contributor epoch replays the very
+/// f32 update the single device would apply); larger `K` buys real
+/// consumer concurrency at the price of bounded, deterministic local-SGD
+/// divergence between syncs.
+///
+/// Note the memory bound: contributions buffer in the bus until their
+/// window completes — so `allreduce_every = 0` holds every step's
+/// gradients until stream end — and a resolved epoch is dropped as soon
+/// as every replica has fetched it, so steady-state bus memory is the
+/// epochs still in flight, not the run's gradient history.
+pub struct ReduceBus {
+    devices: usize,
+    /// Effective period (`allreduce_every`, with 0 mapped to `u64::MAX`).
+    every: u64,
+    /// Absolute steps already taken before this run (warm-start phase).
+    start: u64,
+    inner: Mutex<BusInner>,
+    cv: Condvar,
+}
+
+impl ReduceBus {
+    /// Bus for `devices` replicas syncing every `allreduce_every` global
+    /// steps (0 = only at stream end), with `steps_at_start` absolute
+    /// steps already on the trainer's counter (epoch windows align to
+    /// absolute counts).
+    pub fn new(devices: usize, allreduce_every: usize, steps_at_start: u64) -> ReduceBus {
+        assert!(devices >= 1, "reduce bus needs at least one device");
+        let every = if allreduce_every == 0 { u64::MAX } else { allreduce_every as u64 };
+        ReduceBus {
+            devices,
+            every,
+            start: steps_at_start,
+            inner: Mutex::new(BusInner {
+                pending: BTreeMap::new(),
+                contig: 0,
+                resolved: Vec::new(),
+                served: Vec::new(),
+                resolved_end: 0,
+                total: None,
+                aborted: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Replica count the bus serves.
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Number of epochs a replica must have applied before executing the
+    /// step with **absolute** index `step_abs` (= the index of the epoch
+    /// that step belongs to).
+    pub fn epochs_before(&self, step_abs: u64) -> u64 {
+        debug_assert!(step_abs >= self.start);
+        step_abs / self.every - self.start / self.every
+    }
+
+    /// One past the last run-relative step of epoch `e` (unclamped by the
+    /// stream total).
+    fn end_rel(&self, e: u64) -> u64 {
+        let first_window = self.start / self.every;
+        (first_window + e + 1)
+            .saturating_mul(self.every)
+            .saturating_sub(self.start)
+    }
+
+    /// Post the gradient contribution of run-relative global step `step`
+    /// executed on `device`. Each step is posted exactly once; windows
+    /// fold as soon as they are gap-free.
+    pub fn post(&self, step: u64, device: usize, grad: GradStep) {
+        sched::point(site::REDUCE_POST);
+        assert!(device < self.devices, "device {device} out of range");
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        let prev = inner.pending.insert(step, (device, grad));
+        assert!(prev.is_none(), "global step {step} posted twice");
+        while inner.pending.contains_key(&inner.contig) {
+            inner.contig += 1;
+        }
+        self.try_resolve(&mut inner);
+    }
+
+    /// Declare the stream's total run-relative step count: resolves the
+    /// trailing partial epoch and lets fully-synced waiters observe
+    /// [`EpochWait::Finished`].
+    pub fn close(&self, total: u64) {
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        debug_assert!(
+            inner.total.is_none() || inner.total == Some(total),
+            "bus closed twice with different totals"
+        );
+        inner.total = Some(total);
+        self.try_resolve(&mut inner);
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Abort the run (a participant errored): every current and future
+    /// waiter observes [`EpochWait::Aborted`] and unwinds.
+    pub fn abort(&self) {
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        inner.aborted = true;
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Has the bus been aborted?
+    pub fn is_aborted(&self) -> bool {
+        self.inner.lock().expect("reduce bus poisoned").aborted
+    }
+
+    /// Epochs resolved so far.
+    pub fn resolved_count(&self) -> u64 {
+        self.inner.lock().expect("reduce bus poisoned").resolved.len() as u64
+    }
+
+    /// Block until epoch `e` resolves (epochs resolve in ascending order,
+    /// so waiting on `applied_so_far` walks the sequence without skips).
+    /// Each replica fetches each epoch exactly once: after `devices`
+    /// fetches the epoch's gradients are dropped from the bus, bounding
+    /// its memory to the epochs still in flight.
+    pub fn wait_epoch(&self, e: u64) -> EpochWait {
+        sched::point(site::REDUCE_WAIT);
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        loop {
+            if (e as usize) < inner.resolved.len() {
+                let idx = e as usize;
+                let ep = Arc::clone(
+                    inner.resolved[idx]
+                        .as_ref()
+                        .expect("epoch fetched more than `devices` times"),
+                );
+                inner.served[idx] += 1;
+                if inner.served[idx] >= self.devices {
+                    inner.resolved[idx] = None;
+                }
+                return EpochWait::Resolved(ep);
+            }
+            if inner.aborted {
+                return EpochWait::Aborted;
+            }
+            if let Some(total) = inner.total {
+                if inner.resolved_end >= total {
+                    return EpochWait::Finished;
+                }
+            }
+            inner = self.cv.wait(inner).expect("reduce bus poisoned");
+        }
+    }
+
+    /// Fold every gap-free, fully-posted window into a resolved epoch
+    /// (ascending), waking waiters when anything resolved.
+    fn try_resolve(&self, inner: &mut BusInner) {
+        let mut resolved_any = false;
+        loop {
+            let e = inner.resolved.len() as u64;
+            let prev_end = inner.resolved_end;
+            let mut end = self.end_rel(e);
+            if let Some(total) = inner.total {
+                end = end.min(total);
+            }
+            if end <= prev_end {
+                break; // stream ended exactly on the last boundary
+            }
+            if inner.contig < end {
+                break; // window still has unposted steps
+            }
+            let mut per_dev: Vec<Vec<GradStep>> =
+                (0..self.devices).map(|_| Vec::new()).collect();
+            for r in prev_end..end {
+                let (d, g) = inner
+                    .pending
+                    .remove(&r)
+                    .expect("contiguous step missing from pending set");
+                per_dev[d].push(g);
+            }
+            let contribs = per_dev
+                .into_iter()
+                .enumerate()
+                .filter(|(_, steps)| !steps.is_empty())
+                .map(|(device, steps)| EpochContrib { device, steps })
+                .collect();
+            inner.resolved.push(Some(Arc::new(ReducedEpoch {
+                epoch: e,
+                start: prev_end,
+                end,
+                contribs,
+            })));
+            inner.served.push(0);
+            inner.resolved_end = end;
+            resolved_any = true;
+        }
+        if resolved_any {
+            self.cv.notify_all();
+        }
     }
 }
 
@@ -458,5 +764,175 @@ mod tests {
         // Over-completion saturates at zero instead of wrapping.
         t.complete(2, 1 << 40);
         assert_eq!(t.load(2), 0);
+    }
+
+    #[test]
+    fn least_loaded_ties_break_to_lowest_index() {
+        // Exact-assignment pin: with equal-byte shards the ledger passes
+        // through repeated all-equal states, and every tie must go to the
+        // lowest device index — the full pick sequence is deterministic.
+        let mut r = DeviceRouter::new(4, RoutePolicy::LeastLoaded);
+        let picks: Vec<usize> = (0..9).map(|_| r.route(10)).collect();
+        // Loads cycle 0→1→2→3 (each pick charges 10, re-tying every 4).
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3, 0]);
+
+        // Engineered partial tie: loads now [30, 20, 20, 20]; complete
+        // work so devices 1 and 3 tie at the minimum — lowest wins.
+        let t = r.tracker();
+        t.complete(1, 20);
+        t.complete(3, 20);
+        assert_eq!(t.snapshot(), vec![30, 0, 20, 0]);
+        assert_eq!(r.route(5), 1, "tie {{1, 3}} must break to device 1");
+        assert_eq!(r.route(1), 3, "device 3 is now the unique minimum");
+    }
+
+    fn grad(loss: f64) -> crate::runtime::GradStep {
+        crate::runtime::GradStep { loss, ..Default::default() }
+    }
+
+    #[test]
+    fn reduce_bus_resolves_per_step_epochs_in_order() {
+        // K = 1: every step is its own epoch with exactly one contributor.
+        let bus = ReduceBus::new(2, 1, 0);
+        assert_eq!(bus.epochs_before(0), 0);
+        assert_eq!(bus.epochs_before(3), 3);
+        for g in 0..4u64 {
+            bus.post(g, (g % 2) as usize, grad(g as f64));
+            assert_eq!(bus.resolved_count(), g + 1);
+        }
+        for e in 0..4u64 {
+            match bus.wait_epoch(e) {
+                EpochWait::Resolved(ep) => {
+                    assert_eq!(ep.epoch, e);
+                    assert_eq!((ep.start, ep.end), (e, e + 1));
+                    assert_eq!(ep.contribs.len(), 1);
+                    assert_eq!(ep.contribs[0].device, (e % 2) as usize);
+                    assert_eq!(ep.contribs[0].steps[0].loss, e as f64);
+                }
+                other => panic!("epoch {e}: {other:?}"),
+            }
+        }
+        bus.close(4);
+        assert!(matches!(bus.wait_epoch(4), EpochWait::Finished));
+    }
+
+    #[test]
+    fn reduce_bus_folds_windows_device_ascending_with_partial_tail() {
+        // K = 3 over 2 devices, steps posted out of order: the window
+        // folds only when gap-free, contributions sort device-ascending,
+        // and close() resolves the trailing partial window.
+        let bus = ReduceBus::new(2, 3, 0);
+        bus.post(1, 1, grad(1.0));
+        bus.post(2, 0, grad(2.0));
+        assert_eq!(bus.resolved_count(), 0, "window [0,3) still has a gap");
+        bus.post(0, 0, grad(0.0));
+        assert_eq!(bus.resolved_count(), 1);
+        let EpochWait::Resolved(ep) = bus.wait_epoch(0) else { panic!() };
+        assert_eq!((ep.start, ep.end, ep.steps()), (0, 3, 3));
+        assert_eq!(ep.contribs.len(), 2);
+        assert_eq!(ep.contribs[0].device, 0);
+        // Device 0's steps stay in its local (ascending step) order.
+        let l0: Vec<f64> = ep.contribs[0].steps.iter().map(|s| s.loss).collect();
+        assert_eq!(l0, vec![0.0, 2.0]);
+        assert_eq!(ep.contribs[1].device, 1);
+
+        // Steps 3..5 then stream end at 5: a 2-step partial epoch.
+        bus.post(4, 1, grad(4.0));
+        bus.post(3, 1, grad(3.0));
+        assert_eq!(bus.resolved_count(), 1, "partial window waits for close");
+        bus.close(5);
+        assert_eq!(bus.resolved_count(), 2);
+        let EpochWait::Resolved(ep) = bus.wait_epoch(1) else { panic!() };
+        assert_eq!((ep.start, ep.end), (3, 5));
+        assert_eq!(ep.contribs.len(), 1, "only device 1 stepped");
+        assert!(matches!(bus.wait_epoch(2), EpochWait::Finished));
+    }
+
+    #[test]
+    fn reduce_bus_stream_end_only_period_makes_one_epoch() {
+        // allreduce_every = 0: nothing resolves until close, then the
+        // whole run is one epoch.
+        let bus = ReduceBus::new(3, 0, 0);
+        for g in 0..7u64 {
+            bus.post(g, (g % 3) as usize, grad(g as f64));
+            assert_eq!(bus.epochs_before(g), 0, "no step depends on a sync");
+        }
+        assert_eq!(bus.resolved_count(), 0);
+        bus.close(7);
+        assert_eq!(bus.resolved_count(), 1);
+        let EpochWait::Resolved(ep) = bus.wait_epoch(0) else { panic!() };
+        assert_eq!((ep.start, ep.end), (0, 7));
+        assert_eq!(ep.contribs.len(), 3);
+        // Empty stream: close(0) resolves nothing and finishes everyone.
+        let empty = ReduceBus::new(2, 0, 0);
+        empty.close(0);
+        assert_eq!(empty.resolved_count(), 0);
+        assert!(matches!(empty.wait_epoch(0), EpochWait::Finished));
+    }
+
+    #[test]
+    fn reduce_bus_warm_start_aligns_windows_to_absolute_counts() {
+        // A trainer resuming at absolute step 5 with K = 4 must sync at
+        // absolute boundaries 8, 12, … — the first epoch window is the
+        // 3-step remainder [5, 8).
+        let bus = ReduceBus::new(2, 4, 5);
+        assert_eq!(bus.epochs_before(5), 0);
+        assert_eq!(bus.epochs_before(7), 0);
+        assert_eq!(bus.epochs_before(8), 1);
+        assert_eq!(bus.epochs_before(12), 2);
+        for r in 0..3u64 {
+            bus.post(r, 0, grad(r as f64));
+        }
+        assert_eq!(bus.resolved_count(), 1, "partial first window [5, 8)");
+        let EpochWait::Resolved(ep) = bus.wait_epoch(0) else { panic!() };
+        assert_eq!((ep.start, ep.end), (0, 3));
+        bus.post(3, 1, grad(3.0));
+        assert_eq!(bus.resolved_count(), 1, "window [8, 12) incomplete");
+        bus.close(4);
+        assert_eq!(bus.resolved_count(), 2);
+    }
+
+    #[test]
+    fn reduce_bus_abort_wakes_blocked_waiters() {
+        let bus = ReduceBus::new(2, 1, 0);
+        std::thread::scope(|scope| {
+            let waiter = scope.spawn(|| bus.wait_epoch(0));
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            bus.abort();
+            assert!(matches!(waiter.join().unwrap(), EpochWait::Aborted));
+        });
+        assert!(bus.is_aborted());
+    }
+
+    #[test]
+    fn reduce_bus_concurrent_posters_resolve_deterministically() {
+        // 4 threads post their round-robin share of 64 steps in parallel;
+        // the resolved epoch sequence must be the same every time.
+        for _ in 0..8 {
+            let bus = ReduceBus::new(4, 8, 0);
+            std::thread::scope(|scope| {
+                for d in 0..4usize {
+                    let bus = &bus;
+                    scope.spawn(move || {
+                        for g in (d as u64..64).step_by(4) {
+                            bus.post(g, d, grad(g as f64));
+                        }
+                    });
+                }
+            });
+            bus.close(64);
+            assert_eq!(bus.resolved_count(), 8);
+            for e in 0..8u64 {
+                let EpochWait::Resolved(ep) = bus.wait_epoch(e) else { panic!() };
+                assert_eq!((ep.start, ep.end), (e * 8, (e + 1) * 8));
+                assert_eq!(ep.contribs.len(), 4);
+                for (d, c) in ep.contribs.iter().enumerate() {
+                    assert_eq!(c.device, d);
+                    assert_eq!(c.steps.len(), 2, "each device owns 2 of 8 steps");
+                    let losses: Vec<f64> = c.steps.iter().map(|s| s.loss).collect();
+                    assert_eq!(losses, vec![(e * 8 + d as u64) as f64, (e * 8 + 4 + d as u64) as f64]);
+                }
+            }
+        }
     }
 }

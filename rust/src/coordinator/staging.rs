@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use crate::coordinator::packer::PackedBatch;
 use crate::memsys::channel::ChannelModel;
+use crate::util::sched::{self, site};
 
 /// Simulated-time staging: tracks *when* each buffer becomes free, not
 /// just how many credits exist — a credit returned at `t` cannot start a
@@ -128,6 +129,7 @@ impl<T> StagingQueue<T> {
 
     /// Non-blocking push; returns the batch back when all buffers are full.
     pub fn try_push(&self, batch: T) -> Option<T> {
+        sched::point(site::STAGING_PUSH);
         match self.tx.try_send(batch) {
             Ok(()) => None,
             Err(TrySendError::Full(b)) => {
@@ -150,6 +152,7 @@ impl<T> StagingQueue<T> {
 impl<T> StagingConsumer<T> {
     /// Blocking pop; `None` once the producer hung up and the queue drained.
     pub fn pop(&self) -> Option<T> {
+        sched::point(site::STAGING_POP);
         self.rx.recv().ok()
     }
 }

@@ -31,30 +31,73 @@
 //! separately in the report so stage imbalance is visible (ROADMAP:
 //! pipeline-stage attribution).
 //!
-//! # Multi-device (N simulated GPUs)
+//! # Multi-device (N simulated GPUs, truly concurrent consumers)
 //!
 //! With [`TrainConfig::devices`] > 1 the arena path becomes a routed
-//! fleet: a [`crate::devmem::ArenaSet`] holds one staging region per
-//! device in a shared MMU address space, each device lane has its own
-//! pack worker and DMA clock, and the scheduler's
+//! fleet with **one consumer thread per device**: a
+//! [`crate::devmem::ArenaSet`] holds one staging region per device in a
+//! shared MMU address space, each device lane has its own pack worker,
+//! DMA clock, staged-slot queue and trainer replica, and the scheduler's
 //! [`crate::coordinator::scheduler::DeviceRouter`] assigns every ingested
 //! shard to a lane ([`crate::coordinator::scheduler::RoutePolicy`]:
 //! round-robin pins a bit-reproducible schedule, least-loaded follows the
-//! outstanding-byte ledger). One [`Trainer`] replica steps per device;
-//! every [`TrainConfig::allreduce_every`] global steps the replicas'
-//! parameters are combined by a deterministic tree reduction (per-device
-//! deltas summed in f64 in device order) and broadcast, with the
-//! reduction costed against the calibrated P2P channel
-//! ([`TrainReport::allreduce_sim_s`]). The default period of 1 syncs
-//! after every step, so a round-robin fleet replays the single-device
-//! trajectory **bitwise** (pinned by `rust/tests/prop_devmem.rs`);
-//! larger periods trade that exactness for local-SGD-style divergence
-//! between syncs. [`TrainReport::per_device`] breaks transfer-wait, DMA,
-//! staged bytes and steps down per device.
+//! outstanding-byte ledger with byte ties broken to the lowest device
+//! index).
+//!
+//! ```text
+//!             router (delivery order, stamps global step ranges)
+//!                │ shard+start_g        │                 │
+//!         ┌──────▼──────┐       ┌───────▼─────┐    ┌──────▼──────┐
+//!  lane 0 │ pack worker │       │ pack worker │ …  │ pack worker │ lane N-1
+//!         │ arena 0+DMA0│       │ arena 1+DMA1│    │ arena N-1   │
+//!         └──────┬──────┘       └───────┬─────┘    └──────┬──────┘
+//!          slot queue 0           slot queue 1       slot queue N-1
+//!         ┌──────▼──────┐       ┌───────▼─────┐    ┌──────▼──────┐
+//!         │ consumer 0  │       │ consumer 1  │ …  │ consumer N-1│   one thread
+//!         │ replica 0   │       │ replica 1   │    │ replica N-1 │   per device
+//!         └──────┬──────┘       └───────┬─────┘    └──────┬──────┘
+//!                └── grad posts ─┴─ ReduceBus ─┴─ epoch waits ──┘
+//!                    (barrier-free epoch-tagged all-reduce)
+//! ```
+//!
+//! Replicas are kept consistent by the **barrier-free gradient
+//! all-reduce** of [`crate::coordinator::scheduler::ReduceBus`]: each
+//! consumer steps its replica locally (`Trainer::grad_step`) and posts an
+//! f64 gradient-level contribution per step; an epoch (a window of
+//! [`TrainConfig::allreduce_every`] global steps in delivery order)
+//! resolves as soon as all of its steps are posted, and each replica
+//! independently replays the resolved epoch's contributions —
+//! device-ascending — onto its last synced base
+//! (`Trainer::apply_reduced`), landing every replica on bitwise identical
+//! parameters with no rendezvous barrier and no state broadcast. The
+//! reduction is costed per epoch against the calibrated P2P channel as a
+//! deterministic tree ([`TrainReport::allreduce_sim_s`]); consumer time
+//! blocked on epoch resolution is attributed to
+//! [`TrainReport::reduce_wait_s`].
+//!
+//! **Reproducibility matrix** (pinned by `rust/tests/prop_devmem.rs` and
+//! the schedule-fuzzing harness `rust/tests/prop_concurrent.rs`):
+//!
+//! * round-robin + `allreduce_every = 1` + in-order ingest — **bitwise
+//!   identical** to the single-device trajectory (losses and final
+//!   parameters), under every schedule: each epoch has exactly one
+//!   contributed step, so the replay is the exact single-device f32
+//!   update, serialized by the epoch dependency chain.
+//! * round-robin + `allreduce_every > 1` (or `= 0`, sync at stream end
+//!   only) — **deterministic** (schedule-independent losses and
+//!   parameters) but not single-device-identical: replicas run local SGD
+//!   inside each window and the window reduction replays contributions
+//!   from the shared base. This is the throughput mode: consumers overlap
+//!   within each window.
+//! * least-loaded — exactly-once, not deterministic (routing follows the
+//!   live byte ledger).
+//!
+//! [`TrainReport::per_device`] breaks transfer-wait, DMA, staged bytes,
+//! steps, train-busy and reduce-wait down per device.
 
-use std::collections::BTreeMap;
+use std::sync::Arc;
 
-use crate::coordinator::scheduler::{DeviceRouter, RoutePolicy};
+use crate::coordinator::scheduler::{DeviceRouter, EpochWait, ReduceBus, RoutePolicy};
 use crate::coordinator::staging::StagingQueue;
 use crate::dataio::dataset::DatasetSpec;
 use crate::dataio::ingest::{AsyncIngest, IngestConfig, ShardInput};
@@ -68,6 +111,7 @@ use crate::fpga::Pipeline;
 use crate::memsys::{ChannelModel, Path};
 use crate::metrics::TimeSeries;
 use crate::runtime::Trainer;
+use crate::util::sched::{self, site};
 
 /// Which staging dataflow the loop runs (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -153,6 +197,9 @@ pub struct DeviceReport {
     pub staged_bytes: u64,
     /// Host seconds spent stepping this device's replica.
     pub train_busy_s: f64,
+    /// Host seconds this device's consumer thread spent blocked on
+    /// reduce-epoch resolution (waiting for peers' contributions).
+    pub reduce_wait_s: f64,
 }
 
 /// Result of a live training run.
@@ -206,11 +253,14 @@ pub struct TrainReport {
     /// so on a warm (resumed) trainer it exceeds that sum by the steps
     /// taken before the run. `util` is the fleet-aggregate figure.
     pub per_device: Vec<DeviceReport>,
-    /// Simulated seconds spent in parameter all-reduces (deterministic
+    /// Simulated seconds spent in gradient all-reduces (deterministic
     /// tree reduction over the calibrated P2P channel; 0 when devices=1).
     pub allreduce_sim_s: f64,
-    /// All-reduce rounds performed.
+    /// All-reduce rounds (resolved reduce epochs) performed.
     pub allreduces: u64,
+    /// Host seconds consumer threads spent blocked on reduce-epoch
+    /// resolution, summed across devices (0 on the single-device paths).
+    pub reduce_wait_s: f64,
 }
 
 impl TrainReport {
@@ -425,19 +475,27 @@ fn run_arena(
             dma_sim_s,
             staged_bytes,
             train_busy_s,
+            reduce_wait_s: 0.0,
         }],
         allreduce_sim_s: 0.0,
         allreduces: 0,
+        reduce_wait_s: 0.0,
     })
 }
 
-/// A staged slot annotated with its routing decision: the device lane it
-/// rode, the raw shard bytes charged to that lane's load ledger, and its
-/// global routing sequence number (round-robin consumption reorders on
-/// `seq` so pack-worker races cannot perturb the schedule).
+/// A staged slot annotated with its schedule position: the raw shard
+/// bytes charged to its lane's load ledger and the **run-relative global
+/// step index of its first trainer chunk** (the router stamps every slot
+/// in delivery order, so reduce epochs are schedule-independent — no
+/// consumer-side reordering stash is needed; each lane's queue is already
+/// FIFO in delivery order).
 struct RoutedSlot {
-    seq: u64,
-    device: usize,
+    start_rel: u64,
+    /// Trainer chunks the router predicted for this slot (from the raw
+    /// shard's rows). The consumer verifies the packed batch yields
+    /// exactly this many — a mismatch would corrupt the global step
+    /// numbering and deadlock the bus, so it aborts loudly instead.
+    chunks: u64,
     raw_bytes: u64,
     slot: StagingSlot,
 }
@@ -453,78 +511,86 @@ struct LaneOut {
     dma_bytes: u64,
 }
 
-/// Combine the replicas' parameters since the last sync and broadcast the
-/// result: per-device deltas are summed onto the synced base in f64 with
-/// a fixed device-ascending association (deterministic tree), so the
-/// reduction is bit-stable across runs. The trailing loss slot is not a
-/// parameter — the reduction covers only the parameter prefix and sets
-/// the slot to the contributors' mean batch loss. When exactly one
-/// replica stepped since the last sync the reduction degenerates to
-/// broadcasting that replica's state verbatim (loss slot included) — the
-/// fast path that makes round-robin with `allreduce_every = 1` replay the
-/// single-device trajectory bitwise. Returns false (and does nothing)
-/// when no replica stepped.
-fn allreduce_params(
-    replicas: &mut [Trainer],
-    synced: &mut Vec<f32>,
-    steps_at_sync: &mut [u64],
-) -> Result<bool> {
-    let stepped: Vec<usize> = replicas
-        .iter()
-        .enumerate()
-        .filter(|(d, r)| r.steps > steps_at_sync[*d])
-        .map(|(d, _)| d)
-        .collect();
-    if stepped.is_empty() {
-        return Ok(false);
-    }
-    if stepped.len() == 1 {
-        // Single contributor: broadcast verbatim, reusing the synced
-        // buffer as scratch and skipping the contributor's self-load —
-        // the sync-every-step default stays allocation-free per step.
-        let src = stepped[0];
-        synced.copy_from_slice(replicas[src].state());
-        for (d, r) in replicas.iter_mut().enumerate() {
-            if d != src {
-                r.load_state(synced)?;
-            }
-            steps_at_sync[d] = r.steps;
-        }
-        return Ok(true);
-    }
-    // Reduce only the parameter prefix: the trailing loss slot is a
-    // per-step observable, not a parameter — delta-summing it would
-    // broadcast a meaningless value into every replica (and into the
-    // caller's trainer at the final sync).
-    let p = synced.len() - 1;
-    let mut acc: Vec<f64> = synced[..p].iter().map(|&v| v as f64).collect();
-    for &d in &stepped {
-        let sd = &replicas[d].state()[..p];
-        for (a, (s, base)) in acc.iter_mut().zip(sd.iter().zip(synced[..p].iter())) {
-            *a += (*s as f64) - (*base as f64);
-        }
-    }
-    let mut next: Vec<f32> = acc.into_iter().map(|v| v as f32).collect();
-    // Loss slot: the deterministic mean of the contributors' batch
-    // losses (device-ascending order) — what the fleet reports.
-    let mean_loss = stepped
-        .iter()
-        .map(|&d| replicas[d].state()[p] as f64)
-        .sum::<f64>()
-        / stepped.len() as f64;
-    next.push(mean_loss as f32);
-    for (d, r) in replicas.iter_mut().enumerate() {
-        r.load_state(&next)?;
-        steps_at_sync[d] = r.steps;
-    }
-    *synced = next;
-    Ok(true)
+/// One executed step's record kept by a consumer thread: merged across
+/// devices (in global-step order) into the fleet's losses, utilization
+/// trace and busy-time attribution.
+struct StepRec {
+    /// Absolute global step index (delivery order, warm-start offset).
+    g_abs: u64,
+    /// Wall-clock seconds since run start when the step finished.
+    end_s: f64,
+    /// Host seconds the step took.
+    busy_s: f64,
+    /// The step's batch loss (the loss-slot observable).
+    loss: f32,
 }
 
-/// Multi-device arena path: one staging region, DMA clock and pack worker
-/// per simulated GPU; the router assigns each ingested shard a lane; one
-/// trainer replica steps per device with periodic all-reduce (see module
-/// docs).
+/// Per-device consumer accounting returned by each consumer thread.
+#[derive(Default)]
+struct ConsumerOut {
+    recs: Vec<StepRec>,
+    reduce_wait_s: f64,
+}
+
+/// Aborts the reduce bus if the owning thread unwinds by panic, so
+/// sibling consumers blocked on an epoch observe the failure instead of
+/// waiting forever.
+struct BusAbortOnPanic<'a>(&'a ReduceBus);
+
+impl Drop for BusAbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        }
+    }
+}
+
+/// Outcome of folding one reduce epoch into a replica.
+enum Fold {
+    /// An epoch was applied; the replica's synced base advanced.
+    Applied,
+    /// No further epochs will arrive (stream finished or run aborted).
+    Done,
+}
+
+/// Wait for `device`'s next reduce epoch and replay it onto the synced
+/// `base` (device-ascending contributions; see `Trainer::apply_reduced`).
+/// Fast path: when this device was the epoch's **sole** contributor, its
+/// replica already holds exactly `base` + its own steps — bitwise what
+/// the replay would rebuild (pinned by the grad/apply differential
+/// tests) — so only the base refresh is needed; the sync-every-step
+/// default takes this path on every contributing device. Time blocked on
+/// resolution is charged to `reduce_wait_s`. Shared by the consumer's
+/// mid-step dependency fold and its end-of-lane drain.
+fn fold_next_epoch(
+    bus: &ReduceBus,
+    device: usize,
+    replica: &mut Trainer,
+    base: &mut [f32],
+    applied: &mut u64,
+    reduce_wait_s: &mut f64,
+) -> Result<Fold> {
+    let t_wait = std::time::Instant::now();
+    match bus.wait_epoch(*applied) {
+        EpochWait::Resolved(ep) => {
+            *reduce_wait_s += t_wait.elapsed().as_secs_f64();
+            let self_only = ep.contribs.len() == 1 && ep.contribs[0].device == device;
+            if !self_only {
+                replica.apply_reduced(base, ep.contribs.iter().map(|c| c.steps.as_slice()))?;
+            }
+            base.copy_from_slice(replica.state());
+            *applied += 1;
+            Ok(Fold::Applied)
+        }
+        EpochWait::Finished | EpochWait::Aborted => Ok(Fold::Done),
+    }
+}
+
+/// Multi-device arena path: one staging region, DMA clock, pack worker
+/// **and consumer thread** per simulated GPU; the router assigns each
+/// ingested shard a lane and stamps its global step range; replicas step
+/// concurrently and stay consistent through the barrier-free
+/// gradient-level [`ReduceBus`] (see module docs).
 fn run_multi(
     pipeline: &Pipeline,
     spec: &DatasetSpec,
@@ -538,13 +604,9 @@ fn run_multi(
     let loss_every = (cfg.loss_every as u64).max(1);
 
     let arenas = ArenaSet::new(devices, cfg.arena.clone());
-    // The fleet queue carries routed slots from every lane; size it so
-    // each device keeps a slot in flight toward the consumer.
-    let (queue, consumer) =
-        StagingQueue::<RoutedSlot>::with_buffers(cfg.staging_buffers.max(devices));
-    let stall_counter = queue.stall_counter();
     let router = DeviceRouter::new(devices, cfg.route);
     let tracker = router.tracker();
+    let bus = ReduceBus::new(devices, cfg.allreduce_every, steps_at_start);
 
     // Per-device raw-shard lanes into the pack workers (depth 1: the
     // router hands a lane its next shard while it packs the current one).
@@ -558,51 +620,74 @@ fn run_multi(
     // Consumed shard buffers flow back to the router for pool recycling.
     let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Batch>();
 
+    // Per-device staged-slot queues: each lane's worker feeds its own
+    // consumer thread in FIFO (= delivery) order, so no reorder stash is
+    // needed and a slow device backpressures only its own lane.
+    let mut slot_queues = Vec::with_capacity(devices);
+    let mut slot_rxs = Vec::with_capacity(devices);
+    let mut stall_counters = Vec::with_capacity(devices);
+    for _ in 0..devices {
+        let (q, c) = StagingQueue::<RoutedSlot>::with_buffers(cfg.staging_buffers);
+        stall_counters.push(q.stall_counter());
+        slot_queues.push(q);
+        slot_rxs.push(c);
+    }
+
     // One replica per device, forked from the caller's current params.
-    let mut replicas: Vec<Trainer> = (0..devices).map(|_| trainer.replica()).collect();
-    let mut synced: Vec<f32> = trainer.state_to_vec()?;
-    let mut steps_at_sync: Vec<u64> = vec![0; devices];
+    let replicas: Vec<Trainer> = (0..devices).map(|_| trainer.replica()).collect();
+
     // All-reduce cost model: a deterministic tree needs ceil(log2 N)
     // rounds of reduce plus as many of broadcast, each moving the flat
-    // state over the calibrated P2P channel.
+    // state over the calibrated P2P channel, charged once per epoch.
     let allreduce_chan = ChannelModel::of(Path::P2pToGpu);
     let reduce_rounds = (usize::BITS - (devices - 1).leading_zeros()) as f64;
     let state_bytes = (trainer.meta.state_len() * std::mem::size_of::<f32>()) as u64;
     let allreduce_cost_s = 2.0 * reduce_rounds * allreduce_chan.time(state_bytes);
-    let mut allreduces = 0u64;
-    let mut allreduce_sim_s = 0.0f64;
 
     let t0 = std::time::Instant::now();
-    let mut global_steps = steps_at_start;
-    let mut losses = Vec::new();
-    let mut train_busy_s = 0.0f64;
-    let mut util_trace = TimeSeries::default();
-    let mut dev_busy = vec![0.0f64; devices];
     let mut lanes: Vec<LaneOut> = Vec::with_capacity(devices);
+    let mut cons: Vec<(Trainer, ConsumerOut)> = Vec::with_capacity(devices);
     let mut ingest_wait_s = 0.0f64;
-    let mut producer_stalls = 0u64;
 
     std::thread::scope(|scope| -> Result<()> {
-        // Pack workers: one per device lane, each owning its device's DMA
-        // engine clock (split off the TransferSet) and blocking only on
-        // its own arena's credits.
         let arenas = &arenas;
+        let bus = &bus;
+        let mut first_err: Option<EtlError> = None;
+
+        // Pack workers: one per device lane, each owning its device's DMA
+        // engine clock and blocking only on its own arena's credits.
         let dma_engines = TransferSet::new(devices, cfg.transfer.clone()).into_engines();
         let mut workers = Vec::with_capacity(devices);
-        for ((d, rx), mut dma) in shard_rxs.into_iter().enumerate().zip(dma_engines) {
-            let queue = queue.clone();
+        for (d, ((rx, queue), mut dma)) in shard_rxs
+            .into_iter()
+            .zip(slot_queues)
+            .zip(dma_engines)
+            .enumerate()
+        {
             let recycle_tx = recycle_tx.clone();
             workers.push(scope.spawn(move || -> Result<LaneOut> {
+                let _abort_on_panic = BusAbortOnPanic(bus);
                 let arena = arenas.device(d);
                 let mut out = LaneOut::default();
-                while let Ok((seq, shard)) = rx.recv() {
+                let mut failure: Option<EtlError> = None;
+                while let Ok((start_rel, shard)) = rx.recv() {
                     let raw_bytes = shard.total_bytes() as u64;
+                    // Same formula the router stamped the schedule with;
+                    // the consumer verifies the packed batch agrees.
+                    let chunks = (shard.rows() / step_rows) as u64;
                     let t_acq = std::time::Instant::now();
                     let Some(mut slot) = arena.acquire() else {
-                        break; // consumer closed the fleet (max_steps)
+                        break; // fleet shut down (arena closed)
                     };
                     out.wait_s += t_acq.elapsed().as_secs_f64();
-                    let timing = pipeline.process_into_slot(&shard, &mut slot)?;
+                    let timing = match pipeline.process_into_slot(&shard, &mut slot) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            failure = Some(e);
+                            let _ = arena.release(slot);
+                            break;
+                        }
+                    };
                     let _ = recycle_tx.send(shard);
                     out.host_s += timing.host_s;
                     out.sim_s += timing.elapsed_s;
@@ -611,7 +696,7 @@ fn run_multi(
                     // engine clock.
                     dma.submit(out.sim_s, slot.packed_bytes());
                     let t_push = std::time::Instant::now();
-                    let pushed = queue.push(RoutedSlot { seq, device: d, raw_bytes, slot });
+                    let pushed = queue.push(RoutedSlot { start_rel, chunks, raw_bytes, slot });
                     out.wait_s += t_push.elapsed().as_secs_f64();
                     if !pushed {
                         break; // consumer hung up
@@ -619,173 +704,288 @@ fn run_multi(
                 }
                 out.dma_busy_s = dma.busy_s();
                 out.dma_bytes = dma.total_bytes();
-                Ok(out)
+                match failure {
+                    Some(e) => {
+                        // Unblock peers waiting on this lane's steps.
+                        bus.abort();
+                        Err(e)
+                    }
+                    None => Ok(out),
+                }
             }));
         }
-        // Workers now hold the only queue/recycle producer handles.
-        drop(queue);
+        // Workers now hold the only recycle producer handles.
         drop(recycle_tx);
 
         // Router: the producer front-end — ingest in delivery order,
-        // assign each shard a device lane, recycle consumed buffers.
+        // assign each shard a device lane, stamp it with the global step
+        // index of its first chunk (epochs are defined over this
+        // delivery-order numbering, independent of thread schedules),
+        // recycle consumed buffers, and close the bus with the stream's
+        // total step count on the way out.
         let ingest_cfg = cfg.ingest.clone();
         let ingest_spec = spec.clone();
+        let seed = cfg.seed;
         let router_thread = scope.spawn(move || -> Result<f64> {
+            let _abort_on_panic = BusAbortOnPanic(bus);
             let shard_txs = shard_txs;
             let mut router = router;
-            let mut ingest = AsyncIngest::spawn(
-                ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
-                &ingest_cfg,
-            );
-            let mut seq = 0u64;
-            while let Some((_, shard)) = ingest.next()? {
-                while let Ok(b) = recycle_rx.try_recv() {
-                    ingest.recycle(b);
-                }
-                let d = router.route(shard.total_bytes() as u64);
-                if shard_txs[d].send((seq, shard)).is_err() {
-                    break; // lane worker exited (fleet shut down)
-                }
-                seq += 1;
-            }
-            Ok(ingest.wait_seconds())
-        });
-
-        // Consumer: steps the routed device's replica in place on each
-        // staged slot, returns the credit, and keeps the replicas
-        // consistent via the periodic all-reduce. Errors are collected so
-        // the shutdown below always runs.
-        let mut consume = |replicas: &mut [Trainer]| -> Result<()> {
-            let mut window_busy = 0.0f64;
-            let mut window_start = 0.0f64;
-            const WINDOW_STEPS: u64 = 20;
-            let mut expected = 0u64;
-            let mut stash: BTreeMap<u64, RoutedSlot> = BTreeMap::new();
-            'consume: while global_steps < max_steps {
-                // Next slot: arrival order for least-loaded, global
-                // routing order for round-robin (the stash reorders
-                // pack-worker races back into the pinned schedule).
-                let routed = if cfg.route == RoutePolicy::RoundRobin {
-                    loop {
-                        if let Some(r) = stash.remove(&expected) {
-                            break Some(r);
-                        }
-                        match consumer.pop() {
-                            Some(r) => {
-                                if r.seq == expected {
-                                    break Some(r);
-                                }
-                                stash.insert(r.seq, r);
-                            }
-                            None => {
-                                // Queue closed: drain stragglers in
-                                // ascending order.
-                                let k = stash.keys().next().copied();
-                                break k.and_then(|k| stash.remove(&k));
-                            }
-                        }
+            let mut ingest =
+                AsyncIngest::spawn(ShardInput::Synth { spec: ingest_spec, seed }, &ingest_cfg);
+            let mut cum = 0u64; // run-relative global steps scheduled so far
+            let routed = (|| -> Result<()> {
+                while let Some((_, shard)) = ingest.next()? {
+                    while let Ok(b) = recycle_rx.try_recv() {
+                        ingest.recycle(b);
                     }
-                } else {
-                    consumer.pop()
-                };
-                let Some(RoutedSlot { seq, device: d, raw_bytes, slot }) = routed else {
-                    break;
-                };
-                expected = seq + 1;
-                for view in slot.chunk_views(step_rows) {
-                    if global_steps >= max_steps {
+                    if steps_at_start + cum >= max_steps || bus.is_aborted() {
+                        // Nothing past the cap (or past an abort) will
+                        // ever be stepped; stop routing instead of
+                        // packing dead shards.
+                        ingest.recycle(shard);
                         break;
                     }
-                    let ts = std::time::Instant::now();
-                    replicas[d].step_device(&view)?;
-                    let dt = ts.elapsed().as_secs_f64();
-                    train_busy_s += dt;
-                    dev_busy[d] += dt;
-                    window_busy += dt;
-                    global_steps += 1;
-                    if global_steps % loss_every == 0 {
-                        losses.push((global_steps, replicas[d].loss()?));
+                    let chunks = (shard.rows() / step_rows) as u64;
+                    let d = router.route(shard.total_bytes() as u64);
+                    if shard_txs[d].send((cum, shard)).is_err() {
+                        break; // lane worker exited (fleet shut down)
                     }
-                    if cfg.allreduce_every > 0
-                        && global_steps % cfg.allreduce_every as u64 == 0
-                        && allreduce_params(replicas, &mut synced, &mut steps_at_sync)?
-                    {
-                        allreduces += 1;
-                        allreduce_sim_s += allreduce_cost_s;
-                    }
-                    if global_steps % WINDOW_STEPS == 0 {
-                        let now = t0.elapsed().as_secs_f64();
-                        let span = (now - window_start).max(1e-9);
-                        util_trace.push(now, (window_busy / span).min(1.0));
-                        window_busy = 0.0;
-                        window_start = now;
-                    }
+                    cum += chunks;
                 }
-                tracker.complete(d, raw_bytes);
-                arenas.device(d).release(slot)?;
-                if global_steps >= max_steps {
-                    break 'consume;
+                Ok(())
+            })();
+            match routed {
+                Ok(()) => {
+                    // The last routed slot may cross the cap; consumers
+                    // skip its excess chunks, so the stream total is the
+                    // capped count.
+                    bus.close(cum.min(max_steps.saturating_sub(steps_at_start)));
+                    Ok(ingest.wait_seconds())
+                }
+                Err(e) => {
+                    bus.abort();
+                    Err(e)
                 }
             }
-            // Return any stashed credits so the arena accounting stays
-            // exactly-once even on an early max_steps cutoff.
-            for (_, r) in std::mem::take(&mut stash) {
-                tracker.complete(r.device, r.raw_bytes);
-                arenas.device(r.device).release(r.slot)?;
+        });
+
+        // Consumer threads: one per device. Each steps its own replica in
+        // place on its lane's staged slots (local SGD), posts one
+        // gradient contribution per step, and applies resolved reduce
+        // epochs onto its synced base before stepping into the next
+        // window — the only cross-device synchronization is the bus.
+        let mut consumers = Vec::with_capacity(devices);
+        for (d, (rx, mut replica)) in slot_rxs.into_iter().zip(replicas).enumerate() {
+            let tracker = Arc::clone(&tracker);
+            consumers.push(scope.spawn(move || -> Result<(Trainer, ConsumerOut)> {
+                let _abort_on_panic = BusAbortOnPanic(bus);
+                let mut out = ConsumerOut::default();
+                let mut base = replica.state_to_vec()?;
+                let mut applied = 0u64; // reduce epochs folded so far
+                let mut stepping = true;
+                let mut failure: Option<EtlError> = None;
+                while let Some(RoutedSlot { start_rel, chunks, raw_bytes, slot }) = rx.pop() {
+                    sched::point(site::LANE_HANDOFF);
+                    if stepping && failure.is_none() {
+                        let views = slot.chunk_views(step_rows);
+                        if views.len() as u64 != chunks {
+                            // A row-dropping pipeline would corrupt the
+                            // schedule's step numbering and deadlock the
+                            // bus — fail loudly instead.
+                            bus.abort();
+                            failure = Some(EtlError::Coord(format!(
+                                "packed slot yields {} chunks but the router scheduled {} \
+                                 (pipeline did not preserve rows)",
+                                views.len(),
+                                chunks
+                            )));
+                        }
+                        for (c, view) in views.iter().enumerate() {
+                            if failure.is_some() {
+                                break;
+                            }
+                            let rel = start_rel + c as u64;
+                            let g_abs = steps_at_start + rel;
+                            if g_abs >= max_steps {
+                                break;
+                            }
+                            // Fold every epoch this step depends on.
+                            let need = bus.epochs_before(g_abs);
+                            while applied < need && failure.is_none() {
+                                match fold_next_epoch(
+                                    bus,
+                                    d,
+                                    &mut replica,
+                                    &mut base,
+                                    &mut applied,
+                                    &mut out.reduce_wait_s,
+                                ) {
+                                    Ok(Fold::Applied) => {}
+                                    Ok(Fold::Done) => {
+                                        stepping = false;
+                                        break;
+                                    }
+                                    Err(e) => {
+                                        bus.abort();
+                                        failure = Some(e);
+                                    }
+                                }
+                            }
+                            if !stepping || failure.is_some() {
+                                break;
+                            }
+                            let ts = std::time::Instant::now();
+                            match replica.grad_step(view) {
+                                Ok(grad) => {
+                                    out.recs.push(StepRec {
+                                        g_abs,
+                                        end_s: t0.elapsed().as_secs_f64(),
+                                        busy_s: ts.elapsed().as_secs_f64(),
+                                        loss: grad.loss as f32,
+                                    });
+                                    bus.post(rel, d, grad);
+                                }
+                                Err(e) => {
+                                    bus.abort();
+                                    failure = Some(e);
+                                }
+                            }
+                        }
+                    }
+                    // Credit + ledger return happen on the consumer
+                    // thread even when the slot's chunks were skipped
+                    // (max_steps cut or failure drain) — exactly once.
+                    tracker.complete(d, raw_bytes);
+                    if let Err(e) = arenas.device(d).release(slot) {
+                        if failure.is_none() {
+                            bus.abort();
+                            failure = Some(e);
+                        }
+                    }
+                }
+                // Lane closed: fold the remaining epochs so this replica
+                // lands on the final reduced state even though peers may
+                // still be stepping.
+                while failure.is_none() {
+                    match fold_next_epoch(
+                        bus,
+                        d,
+                        &mut replica,
+                        &mut base,
+                        &mut applied,
+                        &mut out.reduce_wait_s,
+                    ) {
+                        Ok(Fold::Applied) => {}
+                        Ok(Fold::Done) => break,
+                        Err(e) => {
+                            bus.abort();
+                            failure = Some(e);
+                        }
+                    }
+                }
+                match failure {
+                    Some(e) => Err(e),
+                    None => Ok((replica, out)),
+                }
+            }));
+        }
+
+        // Join consumers first: they exit once the router closed the bus
+        // and their lanes drained. Only then close the arenas (waking any
+        // worker still blocked on a credit after an abnormal consumer
+        // exit) and collect the producer side.
+        for handle in consumers {
+            match handle.join() {
+                Ok(Ok(pair)) => cons.push(pair),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(EtlError::Coord("consumer panicked".into())))
+                }
             }
-            Ok(())
-        };
-        let consumed = consume(&mut replicas);
-        // Shutdown: close every arena first so lane workers blocked on a
-        // credit wake, then drop the consumer so blocked pushes fail; the
-        // router unwinds once its lane sends start failing.
+        }
         arenas.close_all();
-        drop(consumer);
         for handle in workers {
             match handle.join() {
                 Ok(Ok(out)) => lanes.push(out),
-                Ok(Err(e)) => return Err(e),
-                Err(_) => return Err(EtlError::Coord("pack worker panicked".into())),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(EtlError::Coord("pack worker panicked".into())))
+                }
             }
         }
         match router_thread.join() {
             Ok(Ok(w)) => ingest_wait_s = w,
-            Ok(Err(e)) => return Err(e),
-            Err(_) => return Err(EtlError::Coord("router panicked".into())),
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err = first_err.or_else(|| Some(EtlError::Coord("router panicked".into())))
+            }
         }
-        consumed?;
-        producer_stalls = stall_counter.load(std::sync::atomic::Ordering::Relaxed)
-            + arenas.total_stats().stalls;
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     })?;
 
-    // Final sync folds any steps since the last periodic all-reduce, then
-    // the fleet parameters land back in the caller's trainer.
-    if allreduce_params(&mut replicas, &mut synced, &mut steps_at_sync)? {
-        allreduces += 1;
-        allreduce_sim_s += allreduce_cost_s;
+    // Every replica drained the bus to the last resolved epoch, so they
+    // are bitwise identical; the fleet parameters land back in the
+    // caller's trainer from replica 0.
+    let total_steps: u64 = cons.iter().map(|(_, o)| o.recs.len() as u64).sum();
+    trainer.load_state(cons[0].0.state())?;
+    trainer.steps = steps_at_start + total_steps;
+    let allreduces = bus.resolved_count();
+    let allreduce_sim_s = allreduces as f64 * allreduce_cost_s;
+
+    // Merge the per-consumer step records into the fleet's observables,
+    // in global-step (delivery) order.
+    let mut dev_busy = vec![0.0f64; devices];
+    let mut merged: Vec<(u64, f64, f64, f32)> = Vec::with_capacity(total_steps as usize);
+    for (d, (_, out)) in cons.iter().enumerate() {
+        for r in &out.recs {
+            dev_busy[d] += r.busy_s;
+            merged.push((r.g_abs, r.end_s, r.busy_s, r.loss));
+        }
     }
-    trainer.load_state(&synced)?;
-    trainer.steps = global_steps;
+    merged.sort_unstable_by_key(|r| r.0);
+    let mut losses = Vec::new();
+    for &(g, _, _, loss) in &merged {
+        if (g + 1) % loss_every == 0 {
+            losses.push((g + 1, loss));
+        }
+    }
+    // The trace wants execution (wall-clock completion) order — with
+    // concurrent consumers that is not global-step order.
+    let mut step_records: Vec<(f64, f64)> = merged.iter().map(|r| (r.1, r.2)).collect();
+    step_records.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    let util_trace = TimeSeries::from_step_records(&step_records, 20);
+    let train_busy_s: f64 = dev_busy.iter().sum();
+    let reduce_wait_s: f64 = cons.iter().map(|(_, o)| o.reduce_wait_s).sum();
+    let producer_stalls = stall_counters
+        .iter()
+        .map(|c| c.load(std::sync::atomic::Ordering::Relaxed))
+        .sum::<u64>()
+        + arenas.total_stats().stalls;
 
     let per_device: Vec<DeviceReport> = (0..devices)
         .map(|d| DeviceReport {
             device: d,
             shards: lanes[d].shards,
-            steps: replicas[d].steps,
+            steps: cons[d].0.steps,
             transfer_wait_s: lanes[d].wait_s,
             dma_sim_s: lanes[d].dma_busy_s,
             staged_bytes: lanes[d].dma_bytes,
             train_busy_s: dev_busy[d],
+            reduce_wait_s: cons[d].1.reduce_wait_s,
         })
         .collect();
     let wall_s = t0.elapsed().as_secs_f64();
     Ok(TrainReport {
-        steps: global_steps,
+        steps: steps_at_start + total_steps,
         losses,
         wall_s,
         train_busy_s,
-        util: train_busy_s / wall_s.max(1e-9),
+        util: (train_busy_s / wall_s.max(1e-9)).min(1.0),
         util_trace,
         producer_stalls,
         etl_host_s: lanes.iter().map(|l| l.host_s).sum(),
@@ -800,6 +1000,7 @@ fn run_multi(
         per_device,
         allreduce_sim_s,
         allreduces,
+        reduce_wait_s,
     })
 }
 
@@ -940,9 +1141,11 @@ fn run_channel(
             dma_sim_s: 0.0,
             staged_bytes,
             train_busy_s,
+            reduce_wait_s: 0.0,
         }],
         allreduce_sim_s: 0.0,
         allreduces: 0,
+        reduce_wait_s: 0.0,
     })
 }
 

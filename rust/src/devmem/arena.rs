@@ -26,6 +26,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use crate::coordinator::packer::{PackedBatch, PackedBatchView};
 use crate::error::{EtlError, Result};
 use crate::memsys::{MemClass, Mmu};
+use crate::util::sched::{self, site};
 
 /// Next unique arena identity (catches cross-arena slot release).
 static NEXT_ARENA_ID: AtomicU64 = AtomicU64::new(1);
@@ -337,6 +338,7 @@ impl DeviceArena {
     /// producers must stop rather than wait for credits that will never
     /// return.
     pub fn acquire(&self) -> Option<StagingSlot> {
+        sched::point(site::ARENA_ACQUIRE);
         let mut inner = self.inner.lock().expect("arena poisoned");
         let mut waited: Option<std::time::Instant> = None;
         loop {
@@ -376,6 +378,7 @@ impl DeviceArena {
     /// (reclamation), folds the slot's pack accounting into the arena
     /// stats, and wakes one blocked producer.
     pub fn release(&self, mut slot: StagingSlot) -> Result<()> {
+        sched::point(site::ARENA_RELEASE);
         let mut inner = self.inner.lock().expect("arena poisoned");
         if slot.arena_id != self.id {
             return Err(EtlError::Mem(format!(

@@ -112,6 +112,33 @@ impl TimeSeries {
         var.sqrt() / m
     }
 
+    /// Build a windowed busy-fraction trace from per-step
+    /// `(wall_clock_end_s, busy_s)` records in execution order: one point
+    /// per `window_steps` steps, at the wall time the window closed, with
+    /// value `window busy / window span` (capped at 1.0 — with several
+    /// concurrent steppers the summed busy time can exceed the span).
+    /// The multi-device train loop merges the per-consumer step records
+    /// and builds its Fig. 14-style utilization trace here; a trailing
+    /// partial window is dropped (it always counts toward the mean).
+    pub fn from_step_records(records: &[(f64, f64)], window_steps: usize) -> TimeSeries {
+        let mut ts = TimeSeries::default();
+        if window_steps == 0 {
+            return ts;
+        }
+        let mut window_busy = 0.0f64;
+        let mut window_start = 0.0f64;
+        for (i, &(end_s, busy_s)) in records.iter().enumerate() {
+            window_busy += busy_s;
+            if (i + 1) % window_steps == 0 {
+                let span = (end_s - window_start).max(1e-9);
+                ts.push(end_s, (window_busy / span).min(1.0));
+                window_busy = 0.0;
+                window_start = end_s;
+            }
+        }
+        ts
+    }
+
     /// Render a compact sparkline for terminal output.
     pub fn sparkline(&self, width: usize) -> String {
         const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
@@ -186,6 +213,27 @@ mod tests {
         let ts = TimeSeries { points: (0..100).map(|i| (i as f64, i as f64)).collect() };
         let s = ts.sparkline(20);
         assert_eq!(s.chars().count(), 20);
+    }
+
+    #[test]
+    fn from_step_records_windows_busy_over_span() {
+        // 4 steps, window of 2: each step busy 0.5 s, steps end at 1,2,3,4.
+        let recs = [(1.0, 0.5), (2.0, 0.5), (3.0, 0.5), (4.0, 0.5)];
+        let ts = TimeSeries::from_step_records(&recs, 2);
+        assert_eq!(ts.points.len(), 2);
+        // Window 1 spans [0, 2): 1.0 busy / 2.0 span.
+        assert!((ts.points[0].0 - 2.0).abs() < 1e-12);
+        assert!((ts.points[0].1 - 0.5).abs() < 1e-12);
+        // Window 2 spans [2, 4).
+        assert!((ts.points[1].1 - 0.5).abs() < 1e-12);
+        // Concurrent steppers can over-fill a window: capped at 1.
+        let hot = [(1.0, 3.0), (2.0, 3.0)];
+        let ts = TimeSeries::from_step_records(&hot, 2);
+        assert_eq!(ts.points.len(), 1);
+        assert_eq!(ts.points[0].1, 1.0);
+        // Trailing partial window (and window_steps == 0) emit nothing.
+        assert!(TimeSeries::from_step_records(&recs[..3], 2).points.len() == 1);
+        assert!(TimeSeries::from_step_records(&recs, 0).points.is_empty());
     }
 
     #[test]

@@ -35,6 +35,31 @@ impl ModelMeta {
 /// Default SGD learning rate of the reference trainer.
 const DEFAULT_LR: f32 = 0.05;
 
+/// One training step's **gradient-level contribution**: what a
+/// data-parallel replica posts to the reduce bus
+/// ([`crate::coordinator::scheduler::ReduceBus`]) instead of shipping
+/// whole parameter states. Gradients are carried in f64 (exact images of
+/// the f32 values the step computed, so a round-trip through the bus is
+/// lossless) and applied back in f32 by [`Trainer::apply_grad`] with
+/// exactly the arithmetic of a local SGD step — which is what makes a
+/// single-contributor reduction bitwise identical to stepping in place.
+///
+/// `emb` keeps the per-row `(flat state index, grad)` pairs **in
+/// application order**: the local step applies repeated indices
+/// sequentially (not pre-summed), and bitwise replay must preserve that
+/// f32 rounding order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GradStep {
+    /// Dense-weight gradients, length `n_dense`.
+    pub dense: Vec<f64>,
+    /// Bias gradient.
+    pub bias: f64,
+    /// Embedding-pool gradients as (flat state index, grad), row order.
+    pub emb: Vec<(usize, f64)>,
+    /// Pre-update mean batch loss of the step (the loss-slot observable).
+    pub loss: f64,
+}
+
 /// A loaded DLRM train step with a flat state buffer (reference
 /// implementation: logistic regression over dense features plus one
 /// embedded scalar per sparse feature, SGD, bit-deterministic).
@@ -121,6 +146,19 @@ impl Trainer {
     /// copy-free path the train loop uses with
     /// [`PackedBatch::chunk_views`].
     pub fn step_view(&mut self, batch: &PackedBatchView<'_>) -> Result<()> {
+        let grad = self.forward_backward(batch)?;
+        self.apply_grad(&grad)?;
+        self.steps += 1;
+        Ok(())
+    }
+
+    /// Forward + backward pass on the current parameters **without**
+    /// applying the update: the gradient-computation half of a step. The
+    /// accumulation arithmetic is exactly the local step's (f32 sums, row
+    /// order), with the finished values widened to f64 for the bus — so
+    /// `forward_backward` + [`apply_grad`](Self::apply_grad) is bitwise
+    /// identical to [`step_view`](Self::step_view).
+    fn forward_backward(&self, batch: &PackedBatchView<'_>) -> Result<GradStep> {
         let m = &self.meta;
         if batch.rows != m.batch || batch.n_dense != m.n_dense || batch.n_sparse != m.n_sparse {
             return Err(EtlError::Runtime(format!(
@@ -144,7 +182,7 @@ impl Trainer {
 
         let mut gw = vec![0f32; nd];
         let mut gb = 0f32;
-        let mut gemb: Vec<(usize, f32)> = Vec::with_capacity(rows * ns.min(8));
+        let mut gemb: Vec<(usize, f64)> = Vec::with_capacity(rows * ns.min(8));
         let mut loss = 0f32;
 
         for r in 0..rows {
@@ -176,25 +214,94 @@ impl Trainer {
                 for s in 0..ns {
                     let v = batch.sparse[r * ns + s].rem_euclid(vocab as i32) as usize;
                     let e = nd + 1 + (s * vocab + v) % emb_len;
-                    gemb.push((e, g));
+                    gemb.push((e, g as f64));
                 }
             }
         }
         loss *= inv_rows;
 
-        // SGD update.
-        for d in 0..nd {
-            self.state[d] -= self.lr * gw[d];
+        Ok(GradStep {
+            dense: gw.into_iter().map(|g| g as f64).collect(),
+            bias: gb as f64,
+            emb: gemb,
+            loss: loss as f64,
+        })
+    }
+
+    /// Apply one step's gradients to the current parameters — the
+    /// parameter-application half of a step, shared by the local step and
+    /// the reduce-bus replay. Narrowing each f64 back to the f32 it was
+    /// widened from is exact, and the update order (dense, bias, then the
+    /// embedding pairs sequentially) matches the local step, so replay is
+    /// bitwise. The loss slot is set to the payload's batch loss. Does
+    /// **not** advance the step counter.
+    pub fn apply_grad(&mut self, grad: &GradStep) -> Result<()> {
+        let nd = self.meta.n_dense;
+        let p = self.meta.param_count();
+        if grad.dense.len() != nd {
+            return Err(EtlError::Runtime(format!(
+                "gradient has {} dense entries; artifact has {nd}",
+                grad.dense.len()
+            )));
         }
-        self.state[nd] -= self.lr * gb;
-        for (e, g) in gemb {
-            self.state[e] -= self.lr * g;
+        for (d, g) in grad.dense.iter().enumerate() {
+            self.state[d] -= self.lr * (*g as f32);
+        }
+        self.state[nd] -= self.lr * (grad.bias as f32);
+        for &(e, g) in &grad.emb {
+            if e < nd + 1 || e >= p {
+                return Err(EtlError::Runtime(format!(
+                    "embedding gradient index {e} outside pool [{}, {p})",
+                    nd + 1
+                )));
+            }
+            self.state[e] -= self.lr * (g as f32);
         }
         // Loss slot holds the (pre-update) batch loss, like the PJRT
         // train step's fused loss output.
         let last = self.state.len() - 1;
-        self.state[last] = loss;
+        self.state[last] = grad.loss as f32;
+        Ok(())
+    }
+
+    /// Run one training step on a device-staged batch and return its
+    /// gradient-level contribution for the reduce bus. The replica's own
+    /// parameters advance exactly as [`step_device`](Self::step_device)
+    /// would (the local-SGD leg of barrier-free data parallelism); the
+    /// returned [`GradStep`] is the f64 image of the applied gradients.
+    pub fn grad_step(&mut self, batch: &DeviceBatchView<'_>) -> Result<GradStep> {
+        self.grad_step_view(&batch.data)
+    }
+
+    /// [`grad_step`](Self::grad_step) on a borrowed packed-batch view.
+    pub fn grad_step_view(&mut self, batch: &PackedBatchView<'_>) -> Result<GradStep> {
+        let grad = self.forward_backward(batch)?;
+        self.apply_grad(&grad)?;
         self.steps += 1;
+        Ok(grad)
+    }
+
+    /// Rebuild this replica's parameters from the last synced `base` by
+    /// replaying a resolved reduce epoch's gradient contributions:
+    /// contributions are applied **device-ascending** (the caller passes
+    /// them in that order), each device's steps in its local order. Every
+    /// replica replaying the same `(base, contribs)` lands on bitwise
+    /// identical parameters — the broadcast of the barrier-free
+    /// all-reduce without any state shipping. With a single contributed
+    /// step this is exactly the single-device update applied to `base`.
+    /// Does not advance the step counter (local steps were counted by
+    /// [`grad_step`](Self::grad_step)).
+    pub fn apply_reduced<'a>(
+        &mut self,
+        base: &[f32],
+        contribs: impl IntoIterator<Item = &'a [GradStep]>,
+    ) -> Result<()> {
+        self.load_state(base)?;
+        for steps in contribs {
+            for grad in steps {
+                self.apply_grad(grad)?;
+            }
+        }
         Ok(())
     }
 
@@ -417,6 +524,91 @@ mod tests {
         assert_eq!(b.steps, 1);
         assert_eq!(a.state_to_vec().unwrap(), b.state_to_vec().unwrap());
         arena.release(slot).unwrap();
+    }
+
+    #[test]
+    fn grad_step_view_matches_step_view_bitwise() {
+        // The gradient-computation/application split must be a pure
+        // refactor of the fused step: same params, same loss, same bits.
+        let mut a = Trainer::from_meta(tiny_meta(), 13);
+        let mut b = Trainer::from_meta(tiny_meta(), 13);
+        let batch = tiny_batch();
+        for _ in 0..7 {
+            a.step_view(&batch.view()).unwrap();
+            let grad = b.grad_step_view(&batch.view()).unwrap();
+            assert_eq!(grad.dense.len(), 2);
+            assert!(grad.loss.is_finite());
+            assert_eq!(grad.loss as f32, b.loss().unwrap());
+        }
+        assert_eq!(a.steps, b.steps);
+        let (sa, sb) = (a.state_to_vec().unwrap(), b.state_to_vec().unwrap());
+        for (x, y) in sa.iter().zip(&sb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn apply_reduced_single_contributor_replays_verbatim() {
+        // One contributed step applied to the synced base must equal the
+        // contributor's own local SGD result — the bitwise fast path of
+        // the barrier-free all-reduce.
+        let mut contributor = Trainer::from_meta(tiny_meta(), 21);
+        let mut follower = contributor.replica();
+        let base = contributor.state_to_vec().unwrap();
+        let batch = tiny_batch();
+        let grad = contributor.grad_step_view(&batch.view()).unwrap();
+
+        let contrib = [grad.clone()];
+        follower.apply_reduced(&base, [contrib.as_slice()]).unwrap();
+        let (sc, sf) = (
+            contributor.state_to_vec().unwrap(),
+            follower.state_to_vec().unwrap(),
+        );
+        for (i, (x, y)) in sc.iter().zip(&sf).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "state[{i}]: {x} vs {y}");
+        }
+        // apply_reduced does not advance the follower's step counter.
+        assert_eq!(contributor.steps, 1);
+        assert_eq!(follower.steps, 0);
+
+        // Multi-contribution replay is deterministic: two followers
+        // replaying the same (base, contribs) agree bitwise.
+        let grad2 = contributor.grad_step_view(&batch.view()).unwrap();
+        let both = [grad, grad2];
+        let mut f1 = Trainer::from_meta(tiny_meta(), 21);
+        let mut f2 = Trainer::from_meta(tiny_meta(), 21);
+        f1.apply_reduced(&base, [both.as_slice()]).unwrap();
+        f2.apply_reduced(&base, [both.as_slice()]).unwrap();
+        assert_eq!(f1.state_to_vec().unwrap(), f2.state_to_vec().unwrap());
+    }
+
+    #[test]
+    fn apply_grad_rejects_malformed_payloads() {
+        let mut t = Trainer::from_meta(tiny_meta(), 5);
+        // Wrong dense arity.
+        let bad = GradStep { dense: vec![0.0; 3], ..GradStep::default() };
+        assert!(t.apply_grad(&bad).is_err());
+        // Embedding index outside the pool (>= param_count).
+        let bad = GradStep {
+            dense: vec![0.0; 2],
+            emb: vec![(t.param_count(), 0.1)],
+            ..GradStep::default()
+        };
+        assert!(t.apply_grad(&bad).is_err());
+        // Embedding index inside the dense/bias prefix.
+        let bad = GradStep {
+            dense: vec![0.0; 2],
+            emb: vec![(0, 0.1)],
+            ..GradStep::default()
+        };
+        assert!(t.apply_grad(&bad).is_err());
+        // Well-formed payload lands.
+        let ok = GradStep {
+            dense: vec![0.0; 2],
+            emb: vec![(t.meta.n_dense + 1, 0.1)],
+            ..GradStep::default()
+        };
+        assert!(t.apply_grad(&ok).is_ok());
     }
 
     #[test]

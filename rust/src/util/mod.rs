@@ -1,12 +1,14 @@
 //! Infrastructure substrates built in-repo because the offline environment
-//! lacks the usual crates (clap/rayon/criterion/proptest): a deterministic
-//! PRNG, a CLI argument parser, a scoped thread pool, timing helpers,
-//! summary statistics and a property-testing mini-framework.
+//! lacks the usual crates (clap/rayon/criterion/proptest/loom): a
+//! deterministic PRNG, a CLI argument parser, a scoped thread pool, timing
+//! helpers, summary statistics, a property-testing mini-framework and a
+//! schedule-fuzzing harness for the concurrent dataflow.
 
 pub mod cli;
 pub mod pool;
 pub mod prng;
 pub mod prop;
+pub mod sched;
 pub mod stats;
 pub mod timer;
 

@@ -162,6 +162,25 @@ pub fn assert_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
     Ok(())
 }
 
+/// Assert two f32 slices are **bitwise** equal (NaNs compare by payload,
+/// `0.0` ≠ `-0.0`) — the comparison the concurrency/differential suites
+/// use for "replays the reference trajectory exactly".
+pub fn assert_bits_equal(a: &[f32], b: &[f32]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!(
+                "bit mismatch at {i}: {x} ({:#010x}) vs {y} ({:#010x})",
+                x.to_bits(),
+                y.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +239,14 @@ mod tests {
         assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
         assert!(assert_close(&[1.0], &[1.1], 1e-6).is_err());
         assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+
+    #[test]
+    fn assert_bits_equal_is_exact() {
+        assert!(assert_bits_equal(&[1.0, f32::NAN], &[1.0, f32::NAN]).is_ok());
+        // Same value, different bits: -0.0 vs 0.0 must be caught.
+        assert!(assert_bits_equal(&[0.0], &[-0.0]).is_err());
+        assert!(assert_bits_equal(&[1.0], &[1.0 + f32::EPSILON]).is_err());
+        assert!(assert_bits_equal(&[1.0], &[1.0, 2.0]).is_err());
     }
 }

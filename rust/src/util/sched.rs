@@ -1,0 +1,216 @@
+//! Schedule-fuzzing hooks for the concurrent dataflow (the offline
+//! registry has no loom): instrumented **yield points** on the hot
+//! cross-thread operations — staging-queue push/pop, arena credit
+//! acquire/release, reduce-bus post/wait — that, when a [`SchedFuzzer`]
+//! seed is installed, inject seed-derived perturbations (yields, bounded
+//! spins, micro-sleeps) to drive the thread scheduler through
+//! interleavings it would rarely pick on its own.
+//!
+//! The concurrency suite (`rust/tests/prop_concurrent.rs`) replays the
+//! multi-device train loop under hundreds of perturbed schedules and
+//! asserts the results stay **bitwise identical** to the deterministic
+//! reference — the claim is schedule-independence, so the harness only
+//! needs interleaving *diversity*, not exact replay; the seed makes a
+//! failing perturbation pattern approximately reproducible.
+//!
+//! When no fuzzer is installed, [`point`] is a single relaxed atomic
+//! load — cheap enough to leave in production paths permanently.
+//!
+//! Installation is process-global; [`install`] serializes installers on a
+//! mutex (held by the returned guard) so concurrently running tests
+//! cannot interleave two different seeds.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Well-known instrumentation sites, mixed into the perturbation draw so
+/// the same seed perturbs different operations differently.
+pub mod site {
+    /// Staging-queue producer side (`StagingQueue::push`).
+    pub const STAGING_PUSH: u64 = 1;
+    /// Staging-queue consumer side (`StagingConsumer::pop`).
+    pub const STAGING_POP: u64 = 2;
+    /// Arena credit acquire (`DeviceArena::acquire`).
+    pub const ARENA_ACQUIRE: u64 = 3;
+    /// Arena credit return (`DeviceArena::release`).
+    pub const ARENA_RELEASE: u64 = 4;
+    /// Gradient contribution post (`ReduceBus::post`).
+    pub const REDUCE_POST: u64 = 5;
+    /// Epoch resolution wait (`ReduceBus::wait_epoch`).
+    pub const REDUCE_WAIT: u64 = 6;
+    /// Consumer-lane slot handoff in the multi-device train loop.
+    pub const LANE_HANDOFF: u64 = 7;
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static SEED: AtomicU64 = AtomicU64::new(0);
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII handle for an installed fuzz schedule: dropping it deactivates
+/// the perturbations and releases the global installer lock.
+pub struct FuzzGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for FuzzGuard {
+    fn drop(&mut self) {
+        ACTIVE.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Activate schedule perturbations derived from `seed` until the guard
+/// drops. Blocks while another fuzz schedule is installed (tests running
+/// in parallel serialize here instead of mixing seeds).
+pub fn install(seed: u64) -> FuzzGuard {
+    let serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    SEED.store(seed, Ordering::SeqCst);
+    COUNTER.store(0, Ordering::SeqCst);
+    ACTIVE.store(true, Ordering::SeqCst);
+    FuzzGuard { _serial: serial }
+}
+
+/// Is a fuzz schedule currently installed?
+pub fn is_active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// A schedule-perturbation point. No-op (one relaxed load) unless a
+/// fuzzer is installed; otherwise draws a deterministic function of
+/// (seed, site, global arrival index) and maybe yields/spins/sleeps.
+#[inline]
+pub fn point(site: u64) {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    perturb(site);
+}
+
+#[cold]
+fn perturb(site: u64) {
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let mut x = SEED.load(Ordering::Relaxed)
+        ^ site.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ n.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    // splitmix64 finalizer: decorrelate consecutive arrival indices.
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    match x & 7 {
+        0 | 1 => std::thread::yield_now(),
+        2 => {
+            // Bounded spin: stretches the race window without descheduling.
+            let spins = (x >> 8) & 127;
+            for _ in 0..spins {
+                std::hint::spin_loop();
+            }
+        }
+        3 => {
+            // Micro-sleep: forces a real deschedule (≤ ~40 µs).
+            std::thread::sleep(std::time::Duration::from_micros((x >> 16) % 40));
+        }
+        _ => {} // run straight through
+    }
+}
+
+/// Seed source for a fuzzing campaign: hands out a deterministic seed
+/// sequence and runs closures under each installed schedule.
+pub struct SchedFuzzer {
+    rng: super::prng::Rng,
+}
+
+impl SchedFuzzer {
+    /// A campaign rooted at `base_seed` (each campaign seed yields a
+    /// deterministic sequence of schedule seeds).
+    pub fn new(base_seed: u64) -> SchedFuzzer {
+        SchedFuzzer { rng: super::prng::Rng::new(base_seed) }
+    }
+
+    /// Next schedule seed of the campaign.
+    pub fn next_seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Run `f` under the campaign's next perturbed schedule; returns the
+    /// schedule seed (for failure reports) alongside the result.
+    pub fn with_schedule<T>(&mut self, f: impl FnOnce() -> T) -> (u64, T) {
+        let seed = self.next_seed();
+        let _guard = install(seed);
+        (seed, f())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_points_are_noops() {
+        // Hold the installer lock so no parallel test can activate a
+        // schedule while we assert the inactive fast path (a FuzzGuard
+        // clears ACTIVE before it releases this lock).
+        let _serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!is_active());
+        // Must not panic, block, or activate anything.
+        for s in 0..8 {
+            point(s);
+        }
+        assert!(!is_active());
+    }
+
+    #[test]
+    fn install_activates_and_guard_deactivates() {
+        {
+            let _g = install(42);
+            assert!(is_active());
+            for _ in 0..100 {
+                point(site::STAGING_PUSH);
+            }
+            assert!(is_active());
+        }
+        // Re-acquiring the installer lock proves the guard cleared the
+        // flag (no other installer can hold it while we check).
+        let _serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!is_active());
+    }
+
+    #[test]
+    fn fuzzer_seed_sequence_is_deterministic() {
+        let mut a = SchedFuzzer::new(7);
+        let mut b = SchedFuzzer::new(7);
+        let sa: Vec<u64> = (0..5).map(|_| a.next_seed()).collect();
+        let sb: Vec<u64> = (0..5).map(|_| b.next_seed()).collect();
+        assert_eq!(sa, sb);
+        let mut c = SchedFuzzer::new(8);
+        assert_ne!(sa[0], c.next_seed());
+    }
+
+    #[test]
+    fn with_schedule_installs_for_the_closure_only() {
+        let mut f = SchedFuzzer::new(3);
+        let (seed, was_active) = f.with_schedule(|| {
+            point(site::REDUCE_POST);
+            is_active()
+        });
+        assert!(was_active);
+        let _serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!is_active());
+        let _ = seed;
+    }
+
+    #[test]
+    fn concurrent_points_under_install_do_not_wedge() {
+        let _g = install(0xF00D);
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                scope.spawn(move || {
+                    for i in 0..200u64 {
+                        point((t + i) & 7);
+                    }
+                });
+            }
+        });
+    }
+}

@@ -4,14 +4,16 @@
 //!
 //! Requires `make artifacts` (skipped with a clear message otherwise).
 
-use piperec::coordinator::{pack, train, PackLayout, TrainConfig};
+use piperec::coordinator::{pack, train, PackLayout, RoutePolicy, TrainConfig};
 use piperec::dataio::dataset::DatasetSpec;
+use piperec::dataio::ingest::{DeliveryPolicy, IngestConfig};
 use piperec::etl::pipelines::{build, PipelineKind};
 use piperec::fpga::Pipeline;
 use piperec::planner::{compile, PlannerConfig};
-use piperec::runtime::artifacts::ArtifactPaths;
+use piperec::runtime::artifacts::{ArtifactPaths, ModelMeta, ParamSpec};
 use piperec::runtime::Trainer;
 use piperec::util::prng::Rng;
+use piperec::util::prop::assert_bits_equal;
 
 fn artifacts() -> Option<ArtifactPaths> {
     let paths = ArtifactPaths::default_dir();
@@ -132,6 +134,97 @@ fn packed_batches_from_pipeline_fit_trainer_shapes() {
         assert_eq!(c.n_dense, trainer.meta.n_dense);
         assert_eq!(c.n_sparse, trainer.meta.n_sparse);
     }
+}
+
+/// A reference-trainer DLRM meta matching the Criteo-Kaggle schema
+/// (13 dense + 26 sparse) — no compiled artifacts required.
+fn criteo_meta(batch: usize) -> ModelMeta {
+    ModelMeta {
+        batch,
+        n_dense: 13,
+        n_sparse: 26,
+        vocab: 8192,
+        embed_dim: 1,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![13] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![26 * 512] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+#[test]
+fn mid_stream_checkpoint_restore_resumes_multi_device_run_bitwise() {
+    // Mid-stream checkpoint under a concurrent multi-device run: leg 1
+    // stops at a max_steps cut (mid-shard), so the checkpointed state is
+    // the fleet's reconciliation via the **last resolved reduce epoch**;
+    // a restored trainer replaying leg 2 — warm-started at an arbitrary
+    // step count, with a sync period that does not divide it — must
+    // reproduce the original leg 2 bitwise (losses and parameters).
+    // Artifact-free: runs on the reference trainer.
+    let mut spec = DatasetSpec::dataset_i(0.004);
+    spec.shards = 4;
+    let dag = build(PipelineKind::II, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+    let mut pipe = Pipeline::new(plan);
+    pipe.fit(&spec.shard(0, 42)).unwrap();
+
+    let cfg = |max_steps: usize, every: usize| TrainConfig {
+        max_steps,
+        loss_every: 1,
+        devices: 2,
+        route: RoutePolicy::RoundRobin,
+        allreduce_every: every,
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
+        },
+        ..Default::default()
+    };
+
+    // Leg 1: cut mid-stream at 10 steps, sync every step.
+    let mut trainer = Trainer::from_meta(criteo_meta(128), 7);
+    let leg1 = train(&pipe, &spec, &mut trainer, &cfg(10, 1)).unwrap();
+    assert_eq!(leg1.steps, 10, "leg 1 must cut mid-stream");
+    assert_eq!(trainer.steps, 10);
+    let etl = pipe.state.clone();
+    let ck = trainer.checkpoint(&etl).unwrap();
+    assert_eq!(ck.step, 10);
+
+    // Leg 2 on the original trainer: warm start at step 10 with a sync
+    // period of 3 (10 % 3 != 0 — the first reduce window is the phase
+    // remainder), capped at 22 absolute steps.
+    let leg2 = train(&pipe, &spec, &mut trainer, &cfg(22, 3)).unwrap();
+    assert_eq!(trainer.steps, 22);
+    assert_eq!(leg2.steps, 22, "report carries the absolute counter");
+    let final_state = trainer.state_to_vec().unwrap();
+    // Warm-start loss samples continue the absolute numbering.
+    assert!(leg2.losses.first().unwrap().0 == 11);
+    assert!(leg2.losses.last().unwrap().0 == 22);
+    assert!(leg2.allreduces > 0);
+
+    // Restore the checkpoint into a differently-seeded trainer and
+    // replay leg 2: bitwise identical.
+    let mut restored = Trainer::from_meta(criteo_meta(128), 999);
+    restored.restore(&ck).unwrap();
+    assert_eq!(restored.steps, 10);
+    let replay = train(&pipe, &spec, &mut restored, &cfg(22, 3)).unwrap();
+    assert_eq!(replay.steps, leg2.steps);
+    assert_eq!(replay.losses.len(), leg2.losses.len());
+    for ((rs, rl), (ls, ll)) in replay.losses.iter().zip(&leg2.losses) {
+        assert_eq!(rs, ls);
+        assert_eq!(rl.to_bits(), ll.to_bits(), "loss diverged at step {rs}");
+    }
+    let replay_state = restored.state_to_vec().unwrap();
+    assert_bits_equal(&replay_state, &final_state)
+        .unwrap_or_else(|e| panic!("params diverged after restore: {e}"));
+
+    // And the leg-2 per-device breakdown accounts the resumed steps only.
+    let steps: u64 = leg2.per_device.iter().map(|d| d.steps).sum();
+    assert_eq!(steps, 12, "leg 2 executed 22 - 10 = 12 steps");
 }
 
 #[test]

@@ -1,0 +1,317 @@
+//! Schedule-fuzzing differential harness for the truly concurrent
+//! multi-device train loop (`coordinator::train_loop::run_multi`).
+//!
+//! The loop runs one consumer thread per simulated GPU, synchronized only
+//! by the barrier-free gradient `ReduceBus` — so its correctness claim is
+//! **schedule independence**: round-robin + `allreduce_every = 1` must
+//! replay the single-device trajectory bitwise (losses AND final
+//! parameters) under *every* thread interleaving, and the larger-period
+//! local-SGD modes must be deterministic (schedule-independent) even
+//! though not single-device-identical.
+//!
+//! The harness (`util::sched`) injects seed-derived perturbations —
+//! yields, bounded spins, micro-sleeps — at the instrumented channel,
+//! arena-credit and reduce-bus operations, and replays the loop under
+//! hundreds of perturbed schedules per run. CI runs this suite under
+//! `--test-threads {1, 8}`, across three fuzzer seed ranges
+//! (`PIPEREC_FUZZ_SEED_BASE`), repeated ×5 — flaky interleavings have
+//! nowhere to hide.
+
+use piperec::coordinator::{train, DataPath, RoutePolicy, TrainConfig, TrainReport};
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{DeliveryPolicy, IngestConfig};
+use piperec::dataio::synth::SynthConfig;
+use piperec::devmem::ArenaConfig;
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
+use piperec::runtime::Trainer;
+use piperec::util::prop::assert_bits_equal;
+use piperec::util::sched::SchedFuzzer;
+
+/// Base seed of the fuzzing campaign. CI runs three distinct ranges by
+/// exporting `PIPEREC_FUZZ_SEED_BASE`; locally the default range runs.
+fn campaign_base() -> u64 {
+    std::env::var("PIPEREC_FUZZ_SEED_BASE")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED_F422)
+}
+
+/// A stateless packing dag over `Schema::tabular("t", nd, ns, _)`: every
+/// dense column a Dense sink, every sparse column hashed to a SparseIndex
+/// sink — the packed shape matches the reference-trainer meta exactly and
+/// no fit is needed (same generator family as prop_devmem).
+fn passthrough_dag(nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-concurrent");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    for i in 0..nd {
+        let d = dag.source(format!("t_i{i}"), ColType::F32);
+        let f = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[d],
+        );
+        dag.sink(format!("dense{i}"), f, SinkRole::Dense);
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink(format!("sparse{i}"), m, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn custom_spec(schema: Schema, rows: usize, shards: usize) -> DatasetSpec {
+    DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-concurrent",
+        schema,
+        rows,
+        paper_rows: rows as u64,
+        shards,
+        synth: SynthConfig::default(),
+        ssd_bound: false,
+    }
+}
+
+fn trainer_meta(batch: usize, nd: usize, ns: usize) -> ModelMeta {
+    ModelMeta {
+        batch,
+        n_dense: nd,
+        n_sparse: ns,
+        vocab: 128,
+        embed_dim: 1,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![nd] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![ns * 32] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+const ND: usize = 2;
+const NS: usize = 2;
+const STEP_ROWS: usize = 16;
+
+fn fixture() -> (Pipeline, DatasetSpec) {
+    let schema = Schema::tabular("t", ND, NS, 64);
+    let dag = passthrough_dag(ND, NS);
+    dag.validate(&schema).unwrap();
+    // 3 shards × 40 rows → 2 full 16-row steps per shard, 6 global steps.
+    let spec = custom_spec(schema.clone(), 120, 3);
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    (Pipeline::new(plan), spec)
+}
+
+fn run_fleet(
+    pipe: &Pipeline,
+    spec: &DatasetSpec,
+    devices: usize,
+    route: RoutePolicy,
+    allreduce_every: usize,
+) -> (TrainReport, Vec<f32>) {
+    let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+    let cfg = TrainConfig {
+        max_steps: usize::MAX / 2,
+        loss_every: 1,
+        staging_buffers: 2,
+        seed: 99,
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
+        },
+        path: DataPath::Arena,
+        arena: ArenaConfig { slots: 3, slot_bytes: 16 << 20 },
+        devices,
+        route,
+        allreduce_every,
+        ..TrainConfig::default()
+    };
+    let report = train(pipe, spec, &mut trainer, &cfg).unwrap();
+    let state = trainer.state_to_vec().unwrap();
+    (report, state)
+}
+
+fn assert_same_trajectory(
+    label: &str,
+    got: &(TrainReport, Vec<f32>),
+    want: &(TrainReport, Vec<f32>),
+) {
+    assert_eq!(got.0.steps, want.0.steps, "{label}: step counts differ");
+    assert_eq!(
+        got.0.losses.len(),
+        want.0.losses.len(),
+        "{label}: loss sample counts differ"
+    );
+    for ((gs, gl), (ws, wl)) in got.0.losses.iter().zip(&want.0.losses) {
+        assert_eq!(gs, ws, "{label}: loss sampled at different steps");
+        assert_eq!(
+            gl.to_bits(),
+            wl.to_bits(),
+            "{label}: loss diverged at step {gs}: {gl} vs {wl}"
+        );
+    }
+    assert_bits_equal(&got.1, &want.1).unwrap_or_else(|e| {
+        panic!("{label}: final parameters diverged: {e}");
+    });
+}
+
+#[test]
+fn fuzzed_schedules_replay_single_device_bitwise() {
+    // THE acceptance bar: ≥ 200 perturbed schedules, each bitwise equal
+    // to the single-device trajectory (round-robin, sync every step).
+    let (pipe, spec) = fixture();
+    let reference = run_fleet(&pipe, &spec, 1, RoutePolicy::RoundRobin, 1);
+    assert!(reference.0.steps >= 6, "fixture must actually train");
+    assert_eq!(reference.0.losses.len() as u64, reference.0.steps);
+
+    let mut fuzzer = SchedFuzzer::new(campaign_base());
+    const SCHEDULES: usize = 200;
+    for i in 0..SCHEDULES {
+        // Alternate fleet widths so both topologies see every seed range.
+        let devices = if i % 2 == 0 { 2 } else { 4 };
+        let (seed, got) = fuzzer.with_schedule(|| {
+            run_fleet(&pipe, &spec, devices, RoutePolicy::RoundRobin, 1)
+        });
+        let label = format!("schedule {i} (seed {seed:#x}, devices {devices})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert!(got.0.allreduces == got.0.steps, "{label}: K=1 syncs per step");
+        assert_eq!(got.0.host_copy_bytes, 0, "{label}: zero-copy broken");
+        assert_eq!(got.0.steady_allocs, 0, "{label}: steady allocs");
+    }
+}
+
+#[test]
+fn fuzzed_local_sgd_periods_are_schedule_independent() {
+    // allreduce_every > 1 (and 0 = stream-end sync) run the consumers
+    // truly concurrently inside each window — the trajectory differs from
+    // single-device, but it must be a pure function of the config, not of
+    // the thread schedule.
+    let (pipe, spec) = fixture();
+    for &(devices, every) in &[(2usize, 3usize), (4, 3), (2, 0), (4, 0)] {
+        let reference = run_fleet(&pipe, &spec, devices, RoutePolicy::RoundRobin, every);
+        let want_epochs = match every {
+            0 => 1,
+            k => (reference.0.steps as usize).div_ceil(k) as u64,
+        };
+        assert_eq!(
+            reference.0.allreduces, want_epochs,
+            "devices {devices} every {every}: epoch count"
+        );
+        let mut fuzzer = SchedFuzzer::new(campaign_base() ^ (devices as u64) << 8 ^ every as u64);
+        for i in 0..25 {
+            let (seed, got) = fuzzer.with_schedule(|| {
+                run_fleet(&pipe, &spec, devices, RoutePolicy::RoundRobin, every)
+            });
+            let label = format!(
+                "devices {devices}, every {every}, schedule {i} (seed {seed:#x})"
+            );
+            assert_same_trajectory(&label, &got, &reference);
+            assert_eq!(got.0.allreduces, want_epochs, "{label}: epoch count");
+        }
+    }
+}
+
+#[test]
+fn fuzzed_least_loaded_keeps_exactly_once_invariants() {
+    // Throughput mode makes no determinism claim, but no schedule may
+    // lose or duplicate work: every shard packs exactly once, every
+    // chunk steps exactly once, counters sum per device.
+    let (pipe, spec) = fixture();
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0x11ee);
+    for i in 0..30 {
+        let (seed, (report, state)) = fuzzer.with_schedule(|| {
+            run_fleet(&pipe, &spec, 3, RoutePolicy::LeastLoaded, 4)
+        });
+        let label = format!("least-loaded schedule {i} (seed {seed:#x})");
+        assert_eq!(report.shards, 3, "{label}: every shard exactly once");
+        assert_eq!(report.steps, 6, "{label}: every chunk exactly once");
+        let shard_sum: u64 = report.per_device.iter().map(|d| d.shards).sum();
+        assert_eq!(shard_sum, report.shards, "{label}");
+        let step_sum: u64 = report.per_device.iter().map(|d| d.steps).sum();
+        assert_eq!(step_sum, report.steps, "{label}");
+        let staged: u64 = report.per_device.iter().map(|d| d.staged_bytes).sum();
+        assert_eq!(staged, report.staged_bytes, "{label}");
+        assert!(report.losses.iter().all(|(_, l)| l.is_finite()), "{label}");
+        assert!(state.iter().all(|v| v.is_finite()), "{label}");
+        assert!(report.allreduces > 0, "{label}");
+        assert_eq!(report.host_copy_bytes, 0, "{label}");
+    }
+}
+
+#[test]
+fn fuzzed_reduce_bus_is_schedule_independent() {
+    // Bus-level fuzz: concurrent posters under perturbed schedules must
+    // resolve the exact same epoch sequence every time.
+    use piperec::coordinator::{EpochWait, ReduceBus};
+    use piperec::runtime::GradStep;
+
+    let collect = || -> Vec<(u64, u64, Vec<(usize, usize)>)> {
+        let bus = ReduceBus::new(3, 5, 0);
+        std::thread::scope(|scope| {
+            for d in 0..3usize {
+                let bus = &bus;
+                scope.spawn(move || {
+                    for g in (d as u64..33).step_by(3) {
+                        bus.post(g, d, GradStep { loss: g as f64, ..Default::default() });
+                    }
+                });
+            }
+        });
+        bus.close(33);
+        let mut out = Vec::new();
+        let mut e = 0u64;
+        loop {
+            match bus.wait_epoch(e) {
+                EpochWait::Resolved(ep) => {
+                    out.push((
+                        ep.start,
+                        ep.end,
+                        ep.contribs
+                            .iter()
+                            .map(|c| (c.device, c.steps.len()))
+                            .collect(),
+                    ));
+                    e += 1;
+                }
+                _ => break,
+            }
+        }
+        out
+    };
+
+    let reference = collect();
+    assert_eq!(reference.len(), 7, "33 steps / K=5 → 6 full + 1 partial");
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0xb05);
+    for i in 0..20 {
+        let (seed, got) = fuzzer.with_schedule(collect);
+        assert_eq!(got, reference, "bus schedule {i} (seed {seed:#x}) diverged");
+    }
+}
+
+#[test]
+fn fuzzed_run_reports_consistent_reduce_accounting() {
+    // The new reduce-wait attribution must stay self-consistent under
+    // fuzzing: per-device reduce waits sum to the aggregate, and the
+    // all-reduce sim cost scales with resolved epochs.
+    let (pipe, spec) = fixture();
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0xacc7);
+    let (_, (report, _)) =
+        fuzzer.with_schedule(|| run_fleet(&pipe, &spec, 2, RoutePolicy::RoundRobin, 1));
+    let dev_sum: f64 = report.per_device.iter().map(|d| d.reduce_wait_s).sum();
+    assert!((dev_sum - report.reduce_wait_s).abs() < 1e-12);
+    assert!(report.reduce_wait_s >= 0.0);
+    assert!(report.allreduces == report.steps);
+    assert!(report.allreduce_sim_s > 0.0);
+    let per_epoch = report.allreduce_sim_s / report.allreduces as f64;
+    assert!(per_epoch > 0.0 && per_epoch.is_finite());
+}

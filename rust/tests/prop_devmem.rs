@@ -5,6 +5,12 @@
 //! per-shard heap allocations after warmup and every packed byte written
 //! exactly once (pinned by the arena's counters).
 //!
+//! Since the concurrent-consumer refactor the suite also pins the
+//! **reduction semantics**: gradient-level ReduceBus reduction ≡
+//! parameter-delta reduction for `allreduce_every = 1` across devices
+//! {1, 2, 4}, and the local-SGD periods (> 1) are deterministic with
+//! bounded drift from the sync-every-step trajectory.
+//!
 //! CI reruns this suite under `--test-threads 1` and `--test-threads 8`
 //! so scheduling nondeterminism between ingest workers and the arena's
 //! credit protocol is exercised.
@@ -24,7 +30,7 @@ use piperec::fpga::Pipeline;
 use piperec::planner::{compile, PlannerConfig};
 use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
 use piperec::runtime::Trainer;
-use piperec::util::prop::{check, Gen};
+use piperec::util::prop::{assert_bits_equal, check, Gen};
 
 /// Bitwise comparison of two packed batches (dense may legitimately carry
 /// NaN when a random chain omits FillMissing — compare f32 by bits).
@@ -410,6 +416,190 @@ fn prop_multi_device_round_robin_bit_identical_to_single_device() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_gradient_reduction_equals_parameter_delta_reduction() {
+    // Differential pin for the gradient-level ReduceBus: with
+    // `allreduce_every = 1` + round-robin, the concurrent loop's
+    // gradient-level reduction must be **bitwise identical** to PR 4's
+    // parameter-delta reduction — replayed here as its single-contributor
+    // fast path (step one replica, broadcast its state verbatim) over the
+    // exact packed chunk sequence — across devices {1, 2, 4}.
+    check("grad_vs_delta_reduction", 4, |g| {
+        let nd = 1 + g.usize(2);
+        let ns = 1 + g.usize(2);
+        let schema = Schema::tabular("t", nd, ns, 64);
+        let dag = passthrough_dag(nd, ns);
+        dag.validate(&schema).map_err(|e| e.to_string())?;
+        let rows = 64 + g.usize(260);
+        let shards = 1 + g.usize(4);
+        let spec = custom_spec(schema.clone(), rows, shards);
+        let seed = g.u64(1 << 32);
+        let step_rows = 16 + g.usize(48);
+
+        let plan = compile(&dag, &schema, &PlannerConfig::default())
+            .map_err(|e| e.to_string())?;
+        let pipe = Pipeline::new(plan);
+
+        // Parameter-delta reference: the packed chunks in delivery order,
+        // each stepped on its round-robin lane's replica, followed by the
+        // delta all-reduce (K = 1 ⇒ one contributor ⇒ verbatim
+        // broadcast of the stepped replica's state).
+        let delta_run = |devices: usize| -> Result<(Vec<(u64, f32)>, Vec<f32>), String> {
+            let trainer = Trainer::from_meta(trainer_meta(step_rows, nd, ns), 7);
+            let mut replicas: Vec<Trainer> =
+                (0..devices).map(|_| trainer.replica()).collect();
+            let mut synced = trainer.state_to_vec().map_err(|e| e.to_string())?;
+            let mut losses = Vec::new();
+            let mut gstep = 0u64;
+            for i in 0..spec.shards {
+                let shard = spec.shard(i, seed);
+                if shard.rows() == 0 {
+                    continue;
+                }
+                let mut packed = PackedBatch::default();
+                pipe.process_packed_into(&shard, &mut packed)
+                    .map_err(|e| e.to_string())?;
+                let d = i % devices;
+                for chunk in packed.chunk_views(step_rows) {
+                    replicas[d].step_view(&chunk).map_err(|e| e.to_string())?;
+                    gstep += 1;
+                    losses.push((gstep, replicas[d].loss().map_err(|e| e.to_string())?));
+                    // PR 4 delta reduction, single-contributor fast path.
+                    synced.copy_from_slice(replicas[d].state());
+                    for (rd, r) in replicas.iter_mut().enumerate() {
+                        if rd != d {
+                            r.load_state(&synced).map_err(|e| e.to_string())?;
+                        }
+                    }
+                }
+            }
+            Ok((losses, synced))
+        };
+
+        // Gradient-level path: the live concurrent loop.
+        let grad_run = |devices: usize| -> Result<(Vec<(u64, f32)>, Vec<f32>), String> {
+            let mut trainer = Trainer::from_meta(trainer_meta(step_rows, nd, ns), 7);
+            let cfg = TrainConfig {
+                max_steps: usize::MAX / 2,
+                loss_every: 1,
+                staging_buffers: 2,
+                seed,
+                ingest: IngestConfig {
+                    workers: 2,
+                    channel_depth: 2,
+                    policy: DeliveryPolicy::InOrder,
+                    ..IngestConfig::default()
+                },
+                path: DataPath::Arena,
+                arena: ArenaConfig { slots: 3, slot_bytes: 16 << 20 },
+                devices,
+                route: RoutePolicy::RoundRobin,
+                allreduce_every: 1,
+                ..TrainConfig::default()
+            };
+            let report = train(&pipe, &spec, &mut trainer, &cfg).map_err(|e| e.to_string())?;
+            Ok((report.losses, trainer.state_to_vec().map_err(|e| e.to_string())?))
+        };
+
+        for &devices in &[1usize, 2, 4] {
+            let label = format!("devices={devices}");
+            let (dl, ds) = delta_run(devices)?;
+            let (gl, gs) = grad_run(devices)?;
+            if dl.len() != gl.len() {
+                return Err(format!(
+                    "{label}: {} delta losses vs {} gradient losses",
+                    dl.len(),
+                    gl.len()
+                ));
+            }
+            for ((a_s, a_l), (b_s, b_l)) in dl.iter().zip(&gl) {
+                if a_s != b_s || a_l.to_bits() != b_l.to_bits() {
+                    return Err(format!(
+                        "{label}: loss diverged at step {a_s}: {a_l} vs {b_l}"
+                    ));
+                }
+            }
+            assert_bits_equal(&ds, &gs).map_err(|e| format!("{label}: params: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn local_sgd_periods_are_deterministic_and_bounded() {
+    // allreduce_every > 1 trades single-device identity for concurrency:
+    // the divergence must be (a) deterministic — two identical runs agree
+    // bitwise — and (b) bounded — the synced result stays within a loose
+    // envelope of the sync-every-step trajectory.
+    let nd = 2;
+    let ns = 2;
+    let schema = Schema::tabular("t", nd, ns, 64);
+    let dag = passthrough_dag(nd, ns);
+    dag.validate(&schema).unwrap();
+    let spec = custom_spec(schema.clone(), 256, 4);
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    let pipe = Pipeline::new(plan);
+
+    let run = |devices: usize, every: usize| -> (TrainReport, Vec<f32>) {
+        let mut trainer = Trainer::from_meta(trainer_meta(32, nd, ns), 7);
+        let cfg = TrainConfig {
+            max_steps: usize::MAX / 2,
+            loss_every: 1,
+            seed: 13,
+            ingest: IngestConfig {
+                workers: 2,
+                channel_depth: 2,
+                policy: DeliveryPolicy::InOrder,
+                ..IngestConfig::default()
+            },
+            arena: ArenaConfig { slots: 3, slot_bytes: 16 << 20 },
+            devices,
+            route: RoutePolicy::RoundRobin,
+            allreduce_every: every,
+            ..TrainConfig::default()
+        };
+        let report = train(&pipe, &spec, &mut trainer, &cfg).unwrap();
+        (report, trainer.state_to_vec().unwrap())
+    };
+
+    let (sync_report, sync_state) = run(2, 1);
+    assert!(sync_report.steps > 0);
+    for &(devices, every) in &[(2usize, 2usize), (2, 5), (4, 2), (4, 5)] {
+        let (ra, sa) = run(devices, every);
+        let (rb, sb) = run(devices, every);
+        // Deterministic: bitwise replay across runs (losses + params).
+        assert_eq!(ra.steps, rb.steps, "devices {devices} every {every}");
+        assert_eq!(ra.losses.len(), rb.losses.len());
+        for ((x, a), (y, b)) in ra.losses.iter().zip(&rb.losses) {
+            assert_eq!(x, y);
+            assert_eq!(a.to_bits(), b.to_bits(), "devices {devices} every {every}");
+        }
+        assert_bits_equal(&sa, &sb)
+            .unwrap_or_else(|e| panic!("devices {devices} every {every}: {e}"));
+        // Epoch accounting matches the period.
+        assert_eq!(
+            ra.allreduces,
+            (ra.steps as usize).div_ceil(every) as u64,
+            "devices {devices} every {every}"
+        );
+        // Bounded: local-SGD drift from the sync-every-step trajectory is
+        // a second-order (step-reordering) effect — it must stay well
+        // inside the parameter scale, not blow up (same data, same init,
+        // a handful of windows).
+        assert_eq!(ra.steps, sync_report.steps);
+        let scale = sync_state.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let max_diff = sa
+            .iter()
+            .zip(&sync_state)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_diff.is_finite() && max_diff <= 0.5 * (1.0 + scale),
+            "devices {devices} every {every}: divergence {max_diff} vs scale {scale}"
+        );
+    }
 }
 
 #[test]

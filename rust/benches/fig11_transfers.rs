@@ -22,8 +22,9 @@ fn raw_transfer(path: Path, bytes: u64) -> piperec::devmem::TransferRecord {
         chunk_bytes: bytes.max(1),
         depth: 1,
         record_cap: 4,
+        ..TransferConfig::default()
     });
-    engine.submit(0.0, bytes)
+    engine.submit(0.0, bytes).expect("fault-free bench submit")
 }
 
 fn main() {
@@ -95,18 +96,20 @@ fn main() {
         chunk_bytes: 64 * 1024,
         depth: 1,
         record_cap: 4,
+        ..TransferConfig::default()
     });
     for _ in 0..4096 {
         let t = serial.free_at_s();
-        serial.submit(t, 64 * 1024);
+        serial.submit(t, 64 * 1024).expect("fault-free bench submit");
     }
     let mut chunked = TransferEngine::new(TransferConfig {
         path: Path::RdmaRead,
         chunk_bytes: 4 << 20,
         depth: 2,
         record_cap: 4,
+        ..TransferConfig::default()
     });
-    let rec = chunked.submit(0.0, 256 << 20);
+    let rec = chunked.submit(0.0, 256 << 20).expect("fault-free bench submit");
     println!(
         "  256 MiB serial 64K-chunks: {}  vs chunked 4MiB depth-2: {}",
         secs(serial.free_at_s()),

@@ -17,6 +17,7 @@ use piperec::etl::pipelines::{build, PipelineKind};
 use piperec::etl::schema::Schema;
 use piperec::fpga::Pipeline;
 use piperec::planner::{compile, PlannerConfig};
+use piperec::util::fault::{self, site as fsite};
 
 /// One recorded throughput row for the JSON trajectory file.
 struct JsonRow {
@@ -33,6 +34,7 @@ fn write_json(
     zero_copy: &[(String, f64)],
     multi_device: &[(usize, f64, f64)],
     concurrent_consumers: &[(usize, f64, f64)],
+    fault_overhead: &[(String, f64)],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -78,6 +80,15 @@ fn write_json(
         s.push_str(&format!(
             "    {{\"lanes\": {lanes}, \"agg_shards_per_s\": {shards_per_s:.2}, \"speedup_vs_1\": {speedup:.3}}}{}\n",
             if i + 1 < concurrent_consumers.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"fault_overhead\": [\n");
+    for (i, (name, x)) in fault_overhead.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": {:?}, \"value\": {:.3}}}{}\n",
+            name,
+            x,
+            if i + 1 < fault_overhead.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -332,7 +343,7 @@ fn main() {
             let mut slot = arena.acquire().unwrap();
             oengine.execute_into_slot(&shard, &ostate, &mut slot).unwrap();
             let t = dma.free_at_s();
-            dma.submit(t, slot.packed_bytes());
+            dma.submit(t, slot.packed_bytes()).unwrap();
             std::hint::black_box(slot.batch().rows);
             arena.release(slot).unwrap();
         }
@@ -420,7 +431,7 @@ fn main() {
                                 let mut slot = arena.acquire().unwrap();
                                 mengine.execute_into_slot(&buf, ostate, &mut slot).unwrap();
                                 let t = dma.free_at_s();
-                                dma.submit(t, slot.packed_bytes());
+                                dma.submit(t, slot.packed_bytes()).unwrap();
                                 std::hint::black_box(slot.batch().rows);
                                 arena.release(slot).unwrap();
                             }
@@ -517,11 +528,50 @@ fn main() {
         concurrent_consumers[2].2,
     ));
 
+    // ---- fault-injection probe overhead: the chaos layer
+    // (`util::fault`, exercised by rust/tests/prop_faults.rs) probes the
+    // shard-read, DMA-submit and lane hot paths on every attempt, so its
+    // cost with **no plan installed** — every production run — must stay
+    // ≈ 0: one relaxed atomic load per probe. The armed-miss row is what
+    // chaos tests pay when a plan is installed but the probed site/key is
+    // clean (enrollment check + global draw); it never taxes real runs.
+    let n_probes = ctx.scale(4_000_000.0, 200_000.0) as usize;
+    let probe_loop = || {
+        let mut hits = 0u64;
+        for k in 0..n_probes as u64 {
+            hits += fault::inject(fsite::DMA, k) as u64;
+        }
+        std::hint::black_box(hits);
+    };
+    let disabled = bench(1, iters, probe_loop);
+    let armed = {
+        let _guard = fault::FaultPlan::new(0xbeef).with(fsite::SHARD_READ, 1, 1).install();
+        bench(1, iters, probe_loop)
+    };
+    let ns_off = disabled.min * 1e9 / n_probes as f64;
+    let ns_armed = armed.min * 1e9 / n_probes as f64;
+    println!("\nfault-injection probe overhead ({n_probes} probes):");
+    println!("  no plan installed      : {ns_off:.2} ns/probe  (hot-path cost; must stay ~0)");
+    println!("  plan armed, clean site : {ns_armed:.2} ns/probe  (chaos-test-only path)");
+    let fault_overhead = vec![
+        ("probes".to_string(), n_probes as f64),
+        ("probe_ns_disabled".to_string(), ns_off),
+        ("probe_ns_armed_miss".to_string(), ns_armed),
+    ];
+
     t.print();
     println!("\ntargets (§Perf): packer and stateless ops in GB/s territory so the");
     println!("host functional emulation is never the bottleneck vs the simulated line rate;");
     println!("fused apply+pack ≥ 3x the reference executor (single thread already ahead);");
     println!("multi-device aggregate ≥ 1.8x at 2 devices on the ingest-bound config;");
     println!("concurrent consumers ≥ 1.5x at 4 lanes over the single-consumer loop.");
-    write_json(iters, &json, &speedups, &zero_copy, &multi_device, &concurrent_consumers);
+    write_json(
+        iters,
+        &json,
+        &speedups,
+        &zero_copy,
+        &multi_device,
+        &concurrent_consumers,
+        &fault_overhead,
+    );
 }

@@ -12,6 +12,33 @@
 //! [`TrainReport::per_device`]; see `train_loop`'s module docs for the
 //! concurrency model and the reproducibility matrix of knob
 //! combinations).
+//!
+//! # Failure domains
+//!
+//! Every stage of the ingest→pack→DMA→train pipeline has a bounded
+//! failure domain with a typed error, a recovery action, and an exact
+//! accounting counter. Faults are injected deterministically by
+//! [`crate::util::fault`] (a pure function of plan seed × site × stable
+//! key, so tests predict the afflicted set in advance) and every
+//! recovery path below is exercised by `rust/tests/prop_faults.rs`
+//! under fuzzed thread schedules:
+//!
+//! | site (`util::fault::site`) | where it strikes | recovery | accounting |
+//! |---|---|---|---|
+//! | `SHARD_READ` | shard production I/O ([`crate::dataio::ingest`]) | bounded per-shard retry with exponential backoff ([`crate::dataio::ingest::IngestConfig::max_retries`] / `backoff`), resume from the last delivered chunk | [`crate::dataio::ingest::IngestReport::retries`] |
+//! | `ROW_DECODE` | per-chunk decode after read | same retry ladder; a shard that exhausts it is quarantined (skipped, stream continues) when `quarantine` is set, else a typed error | [`crate::dataio::ingest::IngestReport::quarantined`] |
+//! | `SLOW_SHARD` | straggling producer | none needed — stalls are benign; delivery policy masks or exposes reordering | latency only |
+//! | `WORKER_DEATH` | ingest worker thread panic | positive death signal (`catch_unwind` → `Died` token, never a hang), bounded respawn, then quarantine or [`crate::error::EtlError::WorkerDied`] | [`crate::dataio::ingest::IngestReport::worker_deaths`] |
+//! | `DMA` | a device transfer attempt ([`crate::devmem::TransferEngine`]) | per-transfer re-issue on the same engine clock (failed attempts still occupy the wire), per-transfer timeout cut, up to [`crate::devmem::TransferConfig::max_retries`]; past budget → [`crate::error::EtlError::Fault`], which on a multi-device fleet demotes to a lane loss | [`TrainReport::retried_transfers`] / [`TrainReport::failed_transfers`] |
+//! | `LANE_LOSS` | a device consumer mid-run | lane drains: consumer leaves the reduce group ([`ReduceBus::leave`]), queued step ranges are tombstoned ([`ReduceBus::forfeit`]) so epochs still resolve, the router re-routes remaining shards to survivors; no survivor → [`crate::error::EtlError::LaneLost`] | [`TrainReport::lanes_lost`] / [`TrainReport::forfeited_steps`] |
+//!
+//! Cross-cutting guarantees: a fault-free run is bit-identical with the
+//! fault layer compiled in (injection disabled is a branch on a relaxed
+//! atomic — see the `fault_overhead` hotpath bench section); retried-
+//! but-delivered runs reproduce the fault-free trajectory bitwise
+//! (in-order, sync-every-step); and `delivered + quarantined = total`
+//! holds exactly. [`crate::error::EtlError::is_fault`] classifies which errors the
+//! recovery ladder may absorb; everything else aborts loudly.
 
 pub mod online;
 pub mod packer;

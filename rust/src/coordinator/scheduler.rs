@@ -16,11 +16,12 @@
 //! epoch their next step depends on, never on a rendezvous barrier (see
 //! the `ReduceBus` docs for the epoch protocol).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::coordinator::staging::StagingSim;
+use crate::error::{EtlError, Result};
 use crate::memsys::channel::ChannelModel;
 use crate::metrics::TimeSeries;
 use crate::runtime::GradStep;
@@ -238,6 +239,9 @@ pub struct DeviceRouter {
     policy: RoutePolicy,
     next: usize,
     routed: u64,
+    /// Lane liveness mask — [`mark_dead`](Self::mark_dead) retires a lane
+    /// and the router stops assigning shards to it.
+    alive: Vec<bool>,
     tracker: Arc<LoadTracker>,
 }
 
@@ -248,6 +252,7 @@ impl DeviceRouter {
             policy,
             next: 0,
             routed: 0,
+            alive: vec![true; devices],
             tracker: Arc::new(LoadTracker::new(devices)),
         }
     }
@@ -255,6 +260,24 @@ impl DeviceRouter {
     /// Number of device lanes.
     pub fn devices(&self) -> usize {
         self.tracker.loads.len()
+    }
+
+    /// Lanes still accepting work.
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Retire a lost lane: subsequent [`route`](Self::route) calls never
+    /// pick it (round-robin skips it, least-loaded masks its ledger
+    /// entry). The lane-loss recovery of `train_loop::run_multi` calls
+    /// this so a dead device's remaining shards re-route to survivors.
+    pub fn mark_dead(&mut self, device: usize) {
+        self.alive[device] = false;
+    }
+
+    /// Is `device` still routable?
+    pub fn is_alive(&self, device: usize) -> bool {
+        self.alive[device]
     }
 
     /// Shards routed so far.
@@ -269,13 +292,21 @@ impl DeviceRouter {
     }
 
     /// Pick the device for the next shard of `bytes` and charge its lane.
+    /// Panics if every lane has been marked dead (the caller must treat
+    /// all-lanes-lost as a terminal [`EtlError::LaneLost`] before routing).
     pub fn route(&mut self, bytes: u64) -> usize {
         let n = self.devices();
+        assert!(self.alive_count() > 0, "route with every lane dead");
         let d = match self.policy {
             RoutePolicy::RoundRobin => {
-                let d = self.next;
-                self.next = (self.next + 1) % n;
-                d
+                // Skip retired lanes; survivors keep the cyclic order.
+                loop {
+                    let d = self.next;
+                    self.next = (self.next + 1) % n;
+                    if self.alive[d] {
+                        break d;
+                    }
+                }
             }
             RoutePolicy::LeastLoaded => {
                 // One coherent snapshot, then min by (load, index): the
@@ -289,9 +320,10 @@ impl DeviceRouter {
                 let snap = self.tracker.snapshot();
                 snap.iter()
                     .enumerate()
+                    .filter(|(d, _)| self.alive[*d])
                     .min_by_key(|(d, l)| (**l, *d))
                     .map(|(d, _)| d)
-                    .expect("router has >= 1 device")
+                    .expect("router has >= 1 live device")
             }
         };
         self.tracker.charge(d, bytes);
@@ -353,6 +385,15 @@ struct BusInner {
     /// Posted steps not yet folded into an epoch, keyed by run-relative
     /// global step index.
     pending: BTreeMap<u64, (usize, GradStep)>,
+    /// Steps forfeited by a lost lane: they count toward window
+    /// completeness but contribute no gradient (tombstones, not data).
+    forfeited: BTreeSet<u64>,
+    /// Steps forfeited so far (accounting; tombstones are consumed as
+    /// their windows fold).
+    forfeited_total: u64,
+    /// Replicas that left the bus ([`ReduceBus::leave`]); every epoch they
+    /// will never fetch counts them as implicitly served.
+    leavers: usize,
     /// Lowest run-relative step index not yet seen contiguously from 0
     /// (epochs fold only over gap-free windows).
     contig: u64,
@@ -361,7 +402,8 @@ struct BusInner {
     /// still in flight, not the whole run's gradient history.
     resolved: Vec<Option<Arc<ReducedEpoch>>>,
     /// Fetches served per resolved epoch (an epoch is fully served after
-    /// `devices` fetches — each replica applies it exactly once).
+    /// `devices` fetches — each replica applies it exactly once, and a
+    /// departed replica counts as served from the moment it left).
     served: Vec<usize>,
     /// One past the last folded run-relative step.
     resolved_end: u64,
@@ -405,16 +447,37 @@ struct BusInner {
 /// window completes — so `allreduce_every = 0` holds every step's
 /// gradients until stream end — and a resolved epoch is dropped as soon
 /// as every replica has fetched it, so steady-state bus memory is the
-/// epochs still in flight, not the run's gradient history.
+/// epochs still in flight, not the run's gradient history. Because the
+/// `allreduce_every = 0` mode buffers without bound, [`post`](Self::post)
+/// enforces a hard pending-step cap ([`Self::with_pending_cap`], default
+/// [`DEFAULT_PENDING_CAP`]) and surfaces a typed error instead of letting
+/// the footgun OOM the process.
+///
+/// # Failure domain: membership shrink
+///
+/// A lost lane must not wedge its peers. The recovery protocol is:
+/// the dying consumer [`forfeit`](Self::forfeit)s the steps it will never
+/// post (tombstones that complete windows without contributing data) and
+/// then [`leave`](Self::leave)s, telling the bus how many epochs it
+/// already applied — every later epoch counts the leaver as implicitly
+/// served, so survivors' fetches still release epoch memory and no waiter
+/// deadlocks on a fetch that will never come.
 pub struct ReduceBus {
     devices: usize,
     /// Effective period (`allreduce_every`, with 0 mapped to `u64::MAX`).
     every: u64,
     /// Absolute steps already taken before this run (warm-start phase).
     start: u64,
+    /// Hard bound on buffered (posted, unresolved) steps.
+    pending_cap: usize,
     inner: Mutex<BusInner>,
     cv: Condvar,
 }
+
+/// Default hard bound on buffered pending steps — generous enough for any
+/// realistic window, small enough to fail loudly long before the
+/// `allreduce_every = 0` gradient history exhausts memory.
+pub const DEFAULT_PENDING_CAP: usize = 1 << 20;
 
 impl ReduceBus {
     /// Bus for `devices` replicas syncing every `allreduce_every` global
@@ -428,8 +491,12 @@ impl ReduceBus {
             devices,
             every,
             start: steps_at_start,
+            pending_cap: DEFAULT_PENDING_CAP,
             inner: Mutex::new(BusInner {
                 pending: BTreeMap::new(),
+                forfeited: BTreeSet::new(),
+                forfeited_total: 0,
+                leavers: 0,
                 contig: 0,
                 resolved: Vec::new(),
                 served: Vec::new(),
@@ -439,6 +506,14 @@ impl ReduceBus {
             }),
             cv: Condvar::new(),
         }
+    }
+
+    /// Override the hard bound on buffered pending steps (see
+    /// [`DEFAULT_PENDING_CAP`]).
+    pub fn with_pending_cap(mut self, cap: usize) -> ReduceBus {
+        assert!(cap >= 1, "pending cap must admit at least one step");
+        self.pending_cap = cap;
+        self
     }
 
     /// Replica count the bus serves.
@@ -465,17 +540,86 @@ impl ReduceBus {
 
     /// Post the gradient contribution of run-relative global step `step`
     /// executed on `device`. Each step is posted exactly once; windows
-    /// fold as soon as they are gap-free.
-    pub fn post(&self, step: u64, device: usize, grad: GradStep) {
+    /// fold as soon as they are gap-free. Errors (typed, before buffering)
+    /// once the pending buffer hits the hard cap — the
+    /// `allreduce_every = 0` mode buffers every gradient until stream
+    /// end, and the cap turns that silent OOM footgun into a diagnosis.
+    pub fn post(&self, step: u64, device: usize, grad: GradStep) -> Result<()> {
         sched::point(site::REDUCE_POST);
         assert!(device < self.devices, "device {device} out of range");
         let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        if inner.pending.len() >= self.pending_cap {
+            return Err(EtlError::Mem(format!(
+                "reduce bus pending buffer hit its cap ({} steps) at step {step}: \
+                 allreduce_every=0 buffers every gradient until stream end — \
+                 use a nonzero allreduce_every or raise the cap",
+                self.pending_cap
+            )));
+        }
         let prev = inner.pending.insert(step, (device, grad));
         assert!(prev.is_none(), "global step {step} posted twice");
-        while inner.pending.contains_key(&inner.contig) {
+        self.advance_contig(&mut inner);
+        self.try_resolve(&mut inner);
+        Ok(())
+    }
+
+    /// Forfeit run-relative steps a lost lane will never execute: they
+    /// count toward window completeness (so peers' epochs still resolve)
+    /// but contribute no gradient. Idempotent per step.
+    pub fn forfeit(&self, range: std::ops::Range<u64>) {
+        sched::point(site::REDUCE_POST);
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        for r in range {
+            debug_assert!(
+                !inner.pending.contains_key(&r),
+                "step {r} both posted and forfeited"
+            );
+            if inner.forfeited.insert(r) {
+                inner.forfeited_total += 1;
+            }
+        }
+        self.advance_contig(&mut inner);
+        self.try_resolve(&mut inner);
+    }
+
+    /// A replica leaves the bus after having applied `applied` epochs:
+    /// every resolved-or-future epoch from `applied` on counts it as
+    /// implicitly served, so the survivors' fetches still release epoch
+    /// memory and nothing waits on a fetch that will never come. The
+    /// leaver must have forfeited (or posted) all steps it was routed.
+    pub fn leave(&self, applied: u64) {
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        inner.leavers += 1;
+        for idx in (applied as usize)..inner.resolved.len() {
+            if inner.resolved[idx].is_some() {
+                inner.served[idx] += 1;
+                if inner.served[idx] >= self.devices {
+                    inner.resolved[idx] = None;
+                }
+            }
+        }
+        drop(inner);
+        self.cv.notify_all();
+    }
+
+    /// Steps forfeited so far (lane-loss accounting).
+    pub fn forfeited_count(&self) -> u64 {
+        self.inner.lock().expect("reduce bus poisoned").forfeited_total
+    }
+
+    /// Replicas that have left the bus.
+    pub fn leavers(&self) -> usize {
+        self.inner.lock().expect("reduce bus poisoned").leavers
+    }
+
+    /// Advance the contiguity cursor over posted steps and forfeit
+    /// tombstones alike.
+    fn advance_contig(&self, inner: &mut BusInner) {
+        while inner.pending.contains_key(&inner.contig)
+            || inner.forfeited.contains(&inner.contig)
+        {
             inner.contig += 1;
         }
-        self.try_resolve(&mut inner);
     }
 
     /// Declare the stream's total run-relative step count: resolves the
@@ -566,6 +710,9 @@ impl ReduceBus {
             let mut per_dev: Vec<Vec<GradStep>> =
                 (0..self.devices).map(|_| Vec::new()).collect();
             for r in prev_end..end {
+                if inner.forfeited.remove(&r) {
+                    continue; // tombstone: completes the window, no data
+                }
                 let (d, g) = inner
                     .pending
                     .remove(&r)
@@ -578,13 +725,14 @@ impl ReduceBus {
                 .filter(|(_, steps)| !steps.is_empty())
                 .map(|(device, steps)| EpochContrib { device, steps })
                 .collect();
-            inner.resolved.push(Some(Arc::new(ReducedEpoch {
-                epoch: e,
-                start: prev_end,
-                end,
-                contribs,
-            })));
-            inner.served.push(0);
+            // A departed replica never fetches: it is served from birth.
+            let pre_served = inner.leavers;
+            inner.resolved.push(if pre_served >= self.devices {
+                None // everyone left; resolve for accounting, hold no data
+            } else {
+                Some(Arc::new(ReducedEpoch { epoch: e, start: prev_end, end, contribs }))
+            });
+            inner.served.push(pre_served);
             inner.resolved_end = end;
             resolved_any = true;
         }
@@ -797,7 +945,7 @@ mod tests {
         assert_eq!(bus.epochs_before(0), 0);
         assert_eq!(bus.epochs_before(3), 3);
         for g in 0..4u64 {
-            bus.post(g, (g % 2) as usize, grad(g as f64));
+            bus.post(g, (g % 2) as usize, grad(g as f64)).unwrap();
             assert_eq!(bus.resolved_count(), g + 1);
         }
         for e in 0..4u64 {
@@ -822,10 +970,10 @@ mod tests {
         // folds only when gap-free, contributions sort device-ascending,
         // and close() resolves the trailing partial window.
         let bus = ReduceBus::new(2, 3, 0);
-        bus.post(1, 1, grad(1.0));
-        bus.post(2, 0, grad(2.0));
+        bus.post(1, 1, grad(1.0)).unwrap();
+        bus.post(2, 0, grad(2.0)).unwrap();
         assert_eq!(bus.resolved_count(), 0, "window [0,3) still has a gap");
-        bus.post(0, 0, grad(0.0));
+        bus.post(0, 0, grad(0.0)).unwrap();
         assert_eq!(bus.resolved_count(), 1);
         let EpochWait::Resolved(ep) = bus.wait_epoch(0) else { panic!() };
         assert_eq!((ep.start, ep.end, ep.steps()), (0, 3, 3));
@@ -837,8 +985,8 @@ mod tests {
         assert_eq!(ep.contribs[1].device, 1);
 
         // Steps 3..5 then stream end at 5: a 2-step partial epoch.
-        bus.post(4, 1, grad(4.0));
-        bus.post(3, 1, grad(3.0));
+        bus.post(4, 1, grad(4.0)).unwrap();
+        bus.post(3, 1, grad(3.0)).unwrap();
         assert_eq!(bus.resolved_count(), 1, "partial window waits for close");
         bus.close(5);
         assert_eq!(bus.resolved_count(), 2);
@@ -854,7 +1002,7 @@ mod tests {
         // whole run is one epoch.
         let bus = ReduceBus::new(3, 0, 0);
         for g in 0..7u64 {
-            bus.post(g, (g % 3) as usize, grad(g as f64));
+            bus.post(g, (g % 3) as usize, grad(g as f64)).unwrap();
             assert_eq!(bus.epochs_before(g), 0, "no step depends on a sync");
         }
         assert_eq!(bus.resolved_count(), 0);
@@ -881,12 +1029,12 @@ mod tests {
         assert_eq!(bus.epochs_before(8), 1);
         assert_eq!(bus.epochs_before(12), 2);
         for r in 0..3u64 {
-            bus.post(r, 0, grad(r as f64));
+            bus.post(r, 0, grad(r as f64)).unwrap();
         }
         assert_eq!(bus.resolved_count(), 1, "partial first window [5, 8)");
         let EpochWait::Resolved(ep) = bus.wait_epoch(0) else { panic!() };
         assert_eq!((ep.start, ep.end), (0, 3));
-        bus.post(3, 1, grad(3.0));
+        bus.post(3, 1, grad(3.0)).unwrap();
         assert_eq!(bus.resolved_count(), 1, "window [8, 12) incomplete");
         bus.close(4);
         assert_eq!(bus.resolved_count(), 2);
@@ -915,7 +1063,7 @@ mod tests {
                     let bus = &bus;
                     scope.spawn(move || {
                         for g in (d as u64..64).step_by(4) {
-                            bus.post(g, d, grad(g as f64));
+                            bus.post(g, d, grad(g as f64)).unwrap();
                         }
                     });
                 }
@@ -934,5 +1082,94 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn router_skips_dead_lanes_under_both_policies() {
+        let mut r = DeviceRouter::new(3, RoutePolicy::RoundRobin);
+        r.mark_dead(1);
+        assert_eq!(r.alive_count(), 2);
+        assert!(!r.is_alive(1));
+        let picks: Vec<usize> = (0..5).map(|_| r.route(10)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2, 0], "round-robin skips the dead lane");
+
+        let mut ll = DeviceRouter::new(3, RoutePolicy::LeastLoaded);
+        // Lane 0 would win every empty-ledger tie; kill it.
+        ll.mark_dead(0);
+        assert_eq!(ll.route(10), 1);
+        assert_eq!(ll.route(10), 2);
+        assert_eq!(ll.route(10), 1);
+        assert_eq!(ll.tracker().load(0), 0, "dead lane never charged");
+    }
+
+    #[test]
+    fn forfeited_steps_complete_windows_without_contributing() {
+        // K = 3 over 2 devices; device 1 dies owning steps 1 and 2.
+        let bus = ReduceBus::new(2, 3, 0);
+        bus.post(0, 0, grad(0.0)).unwrap();
+        assert_eq!(bus.resolved_count(), 0);
+        bus.forfeit(1..3);
+        assert_eq!(bus.resolved_count(), 1, "tombstones complete the window");
+        assert_eq!(bus.forfeited_count(), 2);
+        let EpochWait::Resolved(ep) = bus.wait_epoch(0) else { panic!() };
+        assert_eq!((ep.start, ep.end), (0, 3));
+        assert_eq!(ep.contribs.len(), 1, "only the survivor contributed");
+        assert_eq!(ep.contribs[0].device, 0);
+        // Forfeiting is idempotent.
+        bus.forfeit(1..3);
+        assert_eq!(bus.forfeited_count(), 2);
+    }
+
+    #[test]
+    fn leaver_counts_as_served_so_survivors_release_epochs() {
+        // 2 devices, K = 1. Epoch 0 resolves; the doomed device applied it
+        // (fetched once), then leaves. The survivor's fetch must still
+        // drop the epoch, and later epochs need only the survivor.
+        let bus = ReduceBus::new(2, 1, 0);
+        bus.post(0, 0, grad(0.0)).unwrap();
+        let EpochWait::Resolved(_) = bus.wait_epoch(0) else { panic!() };
+        bus.leave(1); // applied epoch 0 already — do not double-serve it
+        assert_eq!(bus.leavers(), 1);
+        let EpochWait::Resolved(_) = bus.wait_epoch(0) else { panic!() };
+        // Epoch 1 resolves after the departure: pre-served by the leaver,
+        // a single survivor fetch must release it (no deadlocked waiter).
+        bus.post(1, 0, grad(1.0)).unwrap();
+        let EpochWait::Resolved(ep) = bus.wait_epoch(1) else { panic!() };
+        assert_eq!(ep.epoch, 1);
+        bus.close(2);
+        assert!(matches!(bus.wait_epoch(2), EpochWait::Finished));
+    }
+
+    #[test]
+    fn leave_before_survivor_fetch_does_not_drop_the_epoch() {
+        // The regression the membership math must avoid: an epoch the
+        // leaver never applied is pre-served by its departure, but the
+        // survivor's copy must stay alive until the survivor fetches it.
+        let bus = ReduceBus::new(2, 1, 0);
+        bus.post(0, 1, grad(0.5)).unwrap();
+        bus.leave(0); // died before applying epoch 0
+        let EpochWait::Resolved(ep) = bus.wait_epoch(0) else {
+            panic!("survivor must still get epoch 0")
+        };
+        assert_eq!(ep.contribs[0].device, 1);
+    }
+
+    #[test]
+    fn pending_cap_errors_instead_of_buffering_forever() {
+        // allreduce_every = 0 buffers every step until close; a tight cap
+        // must surface a typed error, not grow without bound.
+        let bus = ReduceBus::new(1, 0, 0).with_pending_cap(4);
+        for g in 0..4u64 {
+            bus.post(g, 0, grad(g as f64)).unwrap();
+        }
+        let err = bus.post(4, 0, grad(4.0)).unwrap_err();
+        assert!(matches!(err, EtlError::Mem(_)), "got: {err}");
+        assert!(err.to_string().contains("allreduce_every"));
+        // A folding window never hits the cap: same cap, K = 2.
+        let windowed = ReduceBus::new(1, 2, 0).with_pending_cap(4);
+        for g in 0..32u64 {
+            windowed.post(g, 0, grad(g as f64)).unwrap();
+        }
+        assert_eq!(windowed.resolved_count(), 16);
     }
 }

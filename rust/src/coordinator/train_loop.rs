@@ -94,7 +94,27 @@
 //!
 //! [`TrainReport::per_device`] breaks transfer-wait, DMA, staged bytes,
 //! steps, train-busy and reduce-wait down per device.
+//!
+//! # Failure domains (lane loss)
+//!
+//! On the multi-device path a device lane can be **lost mid-run** — an
+//! injected [`crate::util::fault::site::LANE_LOSS`] at the consumer, or
+//! this lane's DMA engine hard-failing past its retry budget
+//! ([`TransferConfig::max_retries`]) at the pack worker — without taking
+//! down the fleet. The dying side marks the lane dead (the router stops
+//! assigning it shards and re-routes the remainder to survivors), the
+//! consumer leaves the reduce group ([`ReduceBus::leave`]) so peers stop
+//! waiting on its fetches, and every step range still queued on the dead
+//! lane is forfeited ([`ReduceBus::forfeit`]) so reduce epochs keep
+//! resolving — survivors converge on the reduced state of the steps that
+//! actually ran. Only when **no** lane survives does the run fail, with
+//! [`EtlError::LaneLost`]. [`TrainReport::lanes_lost`],
+//! [`TrainReport::forfeited_steps`], [`TrainReport::retried_transfers`]
+//! and [`TrainReport::failed_transfers`] account the damage; the full
+//! site-by-site fault matrix lives in [`crate::coordinator`]'s module
+//! docs.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::coordinator::scheduler::{DeviceRouter, EpochWait, ReduceBus, RoutePolicy};
@@ -111,6 +131,7 @@ use crate::fpga::Pipeline;
 use crate::memsys::{ChannelModel, Path};
 use crate::metrics::TimeSeries;
 use crate::runtime::Trainer;
+use crate::util::fault::{self, site as fsite};
 use crate::util::sched::{self, site};
 
 /// Which staging dataflow the loop runs (see module docs).
@@ -261,6 +282,19 @@ pub struct TrainReport {
     /// Host seconds consumer threads spent blocked on reduce-epoch
     /// resolution, summed across devices (0 on the single-device paths).
     pub reduce_wait_s: f64,
+    /// Device lanes lost mid-run and recovered by the fleet (consumer
+    /// lane-loss or a lane's DMA engine hard-failing); the run only
+    /// errors when no lane survives.
+    pub lanes_lost: u64,
+    /// DMA transfer attempts that failed and were re-issued on the same
+    /// engine clock (summed across devices).
+    pub retried_transfers: u64,
+    /// DMA transfers abandoned after exhausting
+    /// [`TransferConfig::max_retries`] (each one costs its lane).
+    pub failed_transfers: u64,
+    /// Scheduled global steps forfeited by lost lanes (tombstoned in the
+    /// reduce bus so epochs still resolved); 0 on a fault-free run.
+    pub forfeited_steps: u64,
 }
 
 impl TrainReport {
@@ -324,6 +358,9 @@ fn run_arena(
     let mut losses = Vec::new();
     let mut train_busy_s = 0.0f64;
     let mut util_trace = TimeSeries::default();
+    let mut dma_retried = 0u64;
+    let mut dma_failed = 0u64;
+    let fault_token = fault::enroll_token();
 
     std::thread::scope(|scope| -> Result<()> {
         // Producer: the FPGA data plane. Each shard is packed once,
@@ -335,7 +372,8 @@ fn run_arena(
         let ingest_cfg = cfg.ingest.clone();
         let ingest_spec = spec.clone();
         let transfer_cfg = cfg.transfer.clone();
-        let producer = scope.spawn(move || -> Result<(f64, f64, f64, f64, f64, u64, u64)> {
+        let producer = scope.spawn(move || -> Result<(f64, f64, f64, f64, f64, u64, u64, u64, u64)> {
+            fault::enroll(fault_token);
             let queue = queue;
             let mut ingest = AsyncIngest::spawn(
                 ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
@@ -364,7 +402,9 @@ fn run_arena(
 
                 // Schedule the slot's chunked P2P write at the current
                 // simulated ETL clock; it overlaps the next shard's exec.
-                dma.submit(sim_s, slot.packed_bytes());
+                // A hard DMA failure (past the retry budget) with no
+                // sibling lane to absorb the work fails the run.
+                dma.submit(sim_s, slot.packed_bytes())?;
 
                 let t_push = std::time::Instant::now();
                 let pushed = queue.push(slot);
@@ -382,6 +422,8 @@ fn run_arena(
                 dma.busy_s(),
                 dma.total_bytes(),
                 shards,
+                dma.retried_transfers(),
+                dma.failed_transfers(),
             ))
         });
 
@@ -431,7 +473,7 @@ fn run_arena(
         let joined = producer.join();
         consumed?;
         match joined {
-            Ok(Ok((h, s, iw, tw, db, bytes, n))) => {
+            Ok(Ok((h, s, iw, tw, db, bytes, n, rt, fl))) => {
                 etl_host_s = h;
                 etl_sim_s = s;
                 ingest_wait_s = iw;
@@ -439,6 +481,8 @@ fn run_arena(
                 dma_sim_s = db;
                 staged_bytes = bytes;
                 shards_done = n;
+                dma_retried = rt;
+                dma_failed = fl;
             }
             Ok(Err(e)) => return Err(e),
             Err(_) => return Err(EtlError::Coord("producer panicked".into())),
@@ -480,6 +524,10 @@ fn run_arena(
         allreduce_sim_s: 0.0,
         allreduces: 0,
         reduce_wait_s: 0.0,
+        lanes_lost: 0,
+        retried_transfers: dma_retried,
+        failed_transfers: dma_failed,
+        forfeited_steps: 0,
     })
 }
 
@@ -509,6 +557,8 @@ struct LaneOut {
     shards: u64,
     dma_busy_s: f64,
     dma_bytes: u64,
+    dma_retried: u64,
+    dma_failed: u64,
 }
 
 /// One executed step's record kept by a consumer thread: merged across
@@ -530,6 +580,9 @@ struct StepRec {
 struct ConsumerOut {
     recs: Vec<StepRec>,
     reduce_wait_s: f64,
+    /// This lane was lost mid-run (its replica's state is stale — the
+    /// fleet's final parameters come from a surviving lane).
+    lost: bool,
 }
 
 /// Aborts the reduce bus if the owning thread unwinds by panic, so
@@ -649,9 +702,23 @@ fn run_multi(
     let mut cons: Vec<(Trainer, ConsumerOut)> = Vec::with_capacity(devices);
     let mut ingest_wait_s = 0.0f64;
 
+    // Lane liveness, shared across the router, pack workers and
+    // consumers: a dying side flips its lane's flag (the swap makes the
+    // loss counted exactly once even if both ends of a lane fail) and
+    // the router re-routes every not-yet-assigned shard to survivors.
+    let lane_alive: Vec<AtomicBool> = (0..devices).map(|_| AtomicBool::new(true)).collect();
+    let lanes_lost = AtomicU64::new(0);
+    // Run-relative step cap: forfeited ranges are clamped to it, exactly
+    // as consumers skip chunks past it, so the bus's closed total is the
+    // same set of steps whether a lane lived or died.
+    let cap_rel = max_steps.saturating_sub(steps_at_start);
+    let fault_token = fault::enroll_token();
+
     std::thread::scope(|scope| -> Result<()> {
         let arenas = &arenas;
         let bus = &bus;
+        let lane_alive = &lane_alive;
+        let lanes_lost = &lanes_lost;
         let mut first_err: Option<EtlError> = None;
 
         // Pack workers: one per device lane, each owning its device's DMA
@@ -665,16 +732,34 @@ fn run_multi(
             .enumerate()
         {
             let recycle_tx = recycle_tx.clone();
+            let worker_tracker = Arc::clone(&tracker);
             workers.push(scope.spawn(move || -> Result<LaneOut> {
+                fault::enroll(fault_token);
                 let _abort_on_panic = BusAbortOnPanic(bus);
                 let arena = arenas.device(d);
                 let mut out = LaneOut::default();
                 let mut failure: Option<EtlError> = None;
+                let mut dead = false;
                 while let Ok((start_rel, shard)) = rx.recv() {
                     let raw_bytes = shard.total_bytes() as u64;
                     // Same formula the router stamped the schedule with;
                     // the consumer verifies the packed batch agrees.
                     let chunks = (shard.rows() / step_rows) as u64;
+                    if dead {
+                        // Lane lost: these shards can no longer reach a
+                        // trainer. Forfeit their scheduled steps so reduce
+                        // epochs still resolve, settle the load ledger,
+                        // recycle the buffer, and keep draining until the
+                        // router (which re-routes to survivors) stops.
+                        let lo = start_rel.min(cap_rel);
+                        let hi = (start_rel + chunks).min(cap_rel);
+                        if lo < hi {
+                            bus.forfeit(lo..hi);
+                        }
+                        worker_tracker.complete(d, raw_bytes);
+                        let _ = recycle_tx.send(shard);
+                        continue;
+                    }
                     let t_acq = std::time::Instant::now();
                     let Some(mut slot) = arena.acquire() else {
                         break; // fleet shut down (arena closed)
@@ -693,8 +778,31 @@ fn run_multi(
                     out.sim_s += timing.elapsed_s;
                     out.shards += 1;
                     // This lane's chunked P2P write, on this device's own
-                    // engine clock.
-                    dma.submit(out.sim_s, slot.packed_bytes());
+                    // engine clock. A hard failure (past the retry budget)
+                    // costs the lane, not the fleet: forfeit this slot's
+                    // steps, return its credit, and fall into drain mode.
+                    match dma.submit(out.sim_s, slot.packed_bytes()) {
+                        Ok(_) => {}
+                        Err(e) if e.is_fault() => {
+                            if lane_alive[d].swap(false, Ordering::SeqCst) {
+                                lanes_lost.fetch_add(1, Ordering::SeqCst);
+                            }
+                            let lo = start_rel.min(cap_rel);
+                            let hi = (start_rel + chunks).min(cap_rel);
+                            if lo < hi {
+                                bus.forfeit(lo..hi);
+                            }
+                            worker_tracker.complete(d, raw_bytes);
+                            let _ = arena.release(slot);
+                            dead = true;
+                            continue;
+                        }
+                        Err(e) => {
+                            failure = Some(e);
+                            let _ = arena.release(slot);
+                            break;
+                        }
+                    }
                     let t_push = std::time::Instant::now();
                     let pushed = queue.push(RoutedSlot { start_rel, chunks, raw_bytes, slot });
                     out.wait_s += t_push.elapsed().as_secs_f64();
@@ -704,6 +812,8 @@ fn run_multi(
                 }
                 out.dma_busy_s = dma.busy_s();
                 out.dma_bytes = dma.total_bytes();
+                out.dma_retried = dma.retried_transfers();
+                out.dma_failed = dma.failed_transfers();
                 match failure {
                     Some(e) => {
                         // Unblock peers waiting on this lane's steps.
@@ -727,12 +837,14 @@ fn run_multi(
         let ingest_spec = spec.clone();
         let seed = cfg.seed;
         let router_thread = scope.spawn(move || -> Result<f64> {
+            fault::enroll(fault_token);
             let _abort_on_panic = BusAbortOnPanic(bus);
             let shard_txs = shard_txs;
             let mut router = router;
             let mut ingest =
                 AsyncIngest::spawn(ShardInput::Synth { spec: ingest_spec, seed }, &ingest_cfg);
             let mut cum = 0u64; // run-relative global steps scheduled so far
+            let mut last_dead = 0usize;
             let routed = (|| -> Result<()> {
                 while let Some((_, shard)) = ingest.next()? {
                     while let Ok(b) = recycle_rx.try_recv() {
@@ -744,6 +856,20 @@ fn run_multi(
                         // packing dead shards.
                         ingest.recycle(shard);
                         break;
+                    }
+                    // Sync lane losses into the routing mask: the dead
+                    // lane's remaining shards land on survivors instead.
+                    for dd in 0..shard_txs.len() {
+                        if router.is_alive(dd) && !lane_alive[dd].load(Ordering::SeqCst) {
+                            router.mark_dead(dd);
+                            last_dead = dd;
+                        }
+                    }
+                    if router.alive_count() == 0 {
+                        // No lane left to absorb the stream: this is the
+                        // unrecoverable failure domain.
+                        ingest.recycle(shard);
+                        return Err(EtlError::LaneLost { device: last_dead, survivors: 0 });
                     }
                     let chunks = (shard.rows() / step_rows) as u64;
                     let d = router.route(shard.total_bytes() as u64);
@@ -778,6 +904,7 @@ fn run_multi(
         for (d, (rx, mut replica)) in slot_rxs.into_iter().zip(replicas).enumerate() {
             let tracker = Arc::clone(&tracker);
             consumers.push(scope.spawn(move || -> Result<(Trainer, ConsumerOut)> {
+                fault::enroll(fault_token);
                 let _abort_on_panic = BusAbortOnPanic(bus);
                 let mut out = ConsumerOut::default();
                 let mut base = replica.state_to_vec()?;
@@ -786,7 +913,29 @@ fn run_multi(
                 let mut failure: Option<EtlError> = None;
                 while let Some(RoutedSlot { start_rel, chunks, raw_bytes, slot }) = rx.pop() {
                     sched::point(site::LANE_HANDOFF);
-                    if stepping && failure.is_none() {
+                    if !out.lost && failure.is_none() && fault::inject(fsite::LANE_LOSS, d as u64)
+                    {
+                        // Injected lane loss: this device is gone. Leave
+                        // the reduce group so peers stop waiting on this
+                        // replica's fetches, mark the lane dead for the
+                        // router, and fall into drain mode — every
+                        // remaining slot's steps are forfeited below so
+                        // reduce epochs still resolve for survivors.
+                        out.lost = true;
+                        if lane_alive[d].swap(false, Ordering::SeqCst) {
+                            lanes_lost.fetch_add(1, Ordering::SeqCst);
+                        }
+                        bus.leave(applied);
+                    }
+                    if out.lost {
+                        if failure.is_none() {
+                            let lo = start_rel.min(cap_rel);
+                            let hi = (start_rel + chunks).min(cap_rel);
+                            if lo < hi {
+                                bus.forfeit(lo..hi);
+                            }
+                        }
+                    } else if stepping && failure.is_none() {
                         let views = slot.chunk_views(step_rows);
                         if views.len() as u64 != chunks {
                             // A row-dropping pipeline would corrupt the
@@ -843,7 +992,14 @@ fn run_multi(
                                         busy_s: ts.elapsed().as_secs_f64(),
                                         loss: grad.loss as f32,
                                     });
-                                    bus.post(rel, d, grad);
+                                    if let Err(e) = bus.post(rel, d, grad) {
+                                        // Pending-window cap blown (the
+                                        // allreduce_every=0 footgun):
+                                        // abort rather than buffer
+                                        // gradients without bound.
+                                        bus.abort();
+                                        failure = Some(e);
+                                    }
                                 }
                                 Err(e) => {
                                     bus.abort();
@@ -865,8 +1021,10 @@ fn run_multi(
                 }
                 // Lane closed: fold the remaining epochs so this replica
                 // lands on the final reduced state even though peers may
-                // still be stepping.
-                while failure.is_none() {
+                // still be stepping. A lost lane already left the reduce
+                // group — fetching again would double-count its serves —
+                // so it skips the drain and exits with stale state.
+                while !out.lost && failure.is_none() {
                     match fold_next_epoch(
                         bus,
                         d,
@@ -928,11 +1086,25 @@ fn run_multi(
         }
     })?;
 
-    // Every replica drained the bus to the last resolved epoch, so they
-    // are bitwise identical; the fleet parameters land back in the
-    // caller's trainer from replica 0.
+    // Every surviving replica drained the bus to the last resolved
+    // epoch, so the survivors are bitwise identical; the fleet
+    // parameters land back in the caller's trainer from the first one.
+    // Lost lanes' replicas are stale (they left the reduce group) and
+    // never source the final state; a fleet with no survivor at all is
+    // the unrecoverable outcome.
     let total_steps: u64 = cons.iter().map(|(_, o)| o.recs.len() as u64).sum();
-    trainer.load_state(cons[0].0.state())?;
+    if lanes_lost.load(Ordering::SeqCst) >= devices as u64 {
+        let device = (0..devices)
+            .rev()
+            .find(|&dd| !lane_alive[dd].load(Ordering::SeqCst))
+            .unwrap_or(0);
+        return Err(EtlError::LaneLost { device, survivors: 0 });
+    }
+    let survivor = cons
+        .iter()
+        .position(|(_, o)| !o.lost)
+        .expect("a lane neither worker- nor consumer-lost has a live replica");
+    trainer.load_state(cons[survivor].0.state())?;
     trainer.steps = steps_at_start + total_steps;
     let allreduces = bus.resolved_count();
     let allreduce_sim_s = allreduces as f64 * allreduce_cost_s;
@@ -1001,6 +1173,10 @@ fn run_multi(
         allreduce_sim_s,
         allreduces,
         reduce_wait_s,
+        lanes_lost: lanes_lost.load(Ordering::SeqCst),
+        retried_transfers: lanes.iter().map(|l| l.dma_retried).sum(),
+        failed_transfers: lanes.iter().map(|l| l.dma_failed).sum(),
+        forfeited_steps: bus.forfeited_count(),
     })
 }
 
@@ -1033,11 +1209,13 @@ fn run_channel(
     let mut host_copy_bytes = 0u64;
     let mut util_trace = TimeSeries::default();
 
+    let fault_token = fault::enroll_token();
     std::thread::scope(|scope| -> Result<()> {
         let pool = &pool;
         let ingest_cfg = cfg.ingest.clone();
         let ingest_spec = spec.clone();
         let producer = scope.spawn(move || -> Result<(f64, f64, f64, u64, u64)> {
+            fault::enroll(fault_token);
             let queue = queue;
             let mut ingest = AsyncIngest::spawn(
                 ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
@@ -1146,6 +1324,10 @@ fn run_channel(
         allreduce_sim_s: 0.0,
         allreduces: 0,
         reduce_wait_s: 0.0,
+        lanes_lost: 0,
+        retried_transfers: 0,
+        failed_transfers: 0,
+        forfeited_steps: 0,
     })
 }
 

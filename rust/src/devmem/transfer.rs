@@ -9,10 +9,28 @@
 //! [`ChannelModel::time_chunked`] for its byte count: the paper's
 //! conclusion that MiB-scale chunks with depth-2 double buffering hide the
 //! per-chunk setup cost is the default configuration.
+//!
+//! # Failure domain: DMA re-issue
+//!
+//! Submission is fallible. An attempt fails when the deterministic
+//! fault plan afflicts site [`dma`](crate::util::fault::site::DMA) —
+//! keyed by the engine's transfer ordinal, so the afflicted set is a
+//! pure function of the fault seed, not of thread schedule — or when
+//! its wire time exceeds [`TransferConfig::timeout_s`]. A failed
+//! attempt still occupies the engine for the time it burned (the wire
+//! was busy; the payload just never became resident), then the engine
+//! re-issues up to [`TransferConfig::max_retries`] times before
+//! surfacing [`EtlError::Fault`]. Successful-after-retry transfers
+//! carry their attempt count in [`TransferRecord::retries`] and the
+//! engine tallies [`retried_transfers`](TransferEngine::retried_transfers)
+//! / [`failed_transfers`](TransferEngine::failed_transfers) so the
+//! train loop's `TrainReport` can account for every re-issue exactly.
 
 use std::collections::VecDeque;
 
+use crate::error::{EtlError, Result};
 use crate::memsys::{ChannelModel, Path};
+use crate::util::fault::{self, site as fsite};
 
 /// Knobs of the DMA engine.
 #[derive(Debug, Clone)]
@@ -25,6 +43,14 @@ pub struct TransferConfig {
     pub depth: u32,
     /// Retained per-transfer records (ring buffer; totals keep counting).
     pub record_cap: usize,
+    /// Re-issues allowed per transfer before the engine gives up and
+    /// surfaces [`EtlError::Fault`] (failed attempts still charge wire
+    /// time).
+    pub max_retries: u32,
+    /// Per-attempt deadline in simulated seconds; an attempt whose wire
+    /// time exceeds it is cut off at the deadline and re-issued.
+    /// Default: infinite (no timeout).
+    pub timeout_s: f64,
 }
 
 impl Default for TransferConfig {
@@ -34,6 +60,8 @@ impl Default for TransferConfig {
             chunk_bytes: 4 << 20,
             depth: 2,
             record_cap: 4096,
+            max_retries: 3,
+            timeout_s: f64::INFINITY,
         }
     }
 }
@@ -50,15 +78,19 @@ pub struct TransferRecord {
     pub start_s: f64,
     /// When the last chunk landed in device memory.
     pub done_s: f64,
+    /// Failed attempts this transfer survived before landing (0 = clean).
+    pub retries: u32,
 }
 
 impl TransferRecord {
-    /// Submit-to-resident latency (includes engine queueing).
+    /// Submit-to-resident latency (includes engine queueing and any
+    /// re-issued attempts).
     pub fn latency_s(&self) -> f64 {
         self.done_s - self.submit_s
     }
 
-    /// Pure wire time of this transfer.
+    /// Wire time of this transfer, including failed attempts — a
+    /// retried transfer's effective bandwidth degrades accordingly.
     pub fn transfer_s(&self) -> f64 {
         self.done_s - self.start_s
     }
@@ -87,6 +119,13 @@ pub struct TransferEngine {
     busy_s: f64,
     /// Simulated seconds transfers waited behind the engine.
     queued_s: f64,
+    /// Transfer ordinals handed out so far — the fault-injection key, so
+    /// an afflicted transfer is the same one on every schedule.
+    issued: u64,
+    /// Failed attempts that were re-issued.
+    retried: u64,
+    /// Transfers abandoned after exhausting `max_retries`.
+    failed: u64,
 }
 
 impl TransferEngine {
@@ -101,6 +140,9 @@ impl TransferEngine {
             bytes: 0,
             busy_s: 0.0,
             queued_s: 0.0,
+            issued: 0,
+            retried: 0,
+            failed: 0,
         }
     }
 
@@ -118,27 +160,72 @@ impl TransferEngine {
     /// Schedule a transfer of `bytes` submitted at simulated time
     /// `now_s`; returns its timing record. The engine serializes
     /// transfers: this one starts when the previous one is done.
-    pub fn submit(&mut self, now_s: f64, bytes: u64) -> TransferRecord {
-        let start_s = self.free_at_s.max(now_s);
+    ///
+    /// Fallible: attempts afflicted by the installed fault plan (site
+    /// `dma`, keyed by this engine's transfer ordinal) or cut off by
+    /// [`TransferConfig::timeout_s`] are re-issued up to
+    /// [`TransferConfig::max_retries`] times — each failed attempt
+    /// still advances the engine clock for the wire time it burned —
+    /// before surfacing [`EtlError::Fault`]. Without an installed plan
+    /// and with the default infinite timeout this never errors.
+    pub fn submit(&mut self, now_s: f64, bytes: u64) -> Result<TransferRecord> {
+        let key = self.issued;
+        self.issued += 1;
         let wire_s = self
             .channel
             .time_chunked(bytes, self.cfg.chunk_bytes, self.cfg.depth);
-        let rec = TransferRecord { bytes, submit_s: now_s, start_s, done_s: start_s + wire_s };
-        self.free_at_s = rec.done_s;
-        self.transfers += 1;
-        self.bytes += bytes;
-        self.busy_s += wire_s;
-        self.queued_s += start_s - now_s;
-        if self.records.len() == self.cfg.record_cap.max(1) {
-            self.records.pop_front();
+        let first_start_s = self.free_at_s.max(now_s);
+        let mut start_s = first_start_s;
+        let mut retries = 0u32;
+        loop {
+            let timed_out = wire_s > self.cfg.timeout_s;
+            let attempt_s = if timed_out { self.cfg.timeout_s } else { wire_s };
+            if timed_out || fault::inject(fsite::DMA, key) {
+                // The attempt occupied the wire before dying; charge it.
+                self.free_at_s = start_s + attempt_s;
+                self.busy_s += attempt_s;
+                if retries == self.cfg.max_retries {
+                    self.failed += 1;
+                    return Err(EtlError::Fault { site: fsite::name(fsite::DMA), key });
+                }
+                retries += 1;
+                self.retried += 1;
+                start_s = self.free_at_s;
+                continue;
+            }
+            let rec = TransferRecord {
+                bytes,
+                submit_s: now_s,
+                start_s: first_start_s,
+                done_s: start_s + wire_s,
+                retries,
+            };
+            self.free_at_s = rec.done_s;
+            self.transfers += 1;
+            self.bytes += bytes;
+            self.busy_s += wire_s;
+            self.queued_s += first_start_s - now_s;
+            if self.records.len() == self.cfg.record_cap.max(1) {
+                self.records.pop_front();
+            }
+            self.records.push_back(rec);
+            return Ok(rec);
         }
-        self.records.push_back(rec);
-        rec
     }
 
-    /// Transfers scheduled so far.
+    /// Transfers that landed so far (failed ones are not counted here).
     pub fn transfers(&self) -> u64 {
         self.transfers
+    }
+
+    /// Failed attempts the engine re-issued.
+    pub fn retried_transfers(&self) -> u64 {
+        self.retried
+    }
+
+    /// Transfers abandoned after exhausting the retry budget.
+    pub fn failed_transfers(&self) -> u64 {
+        self.failed
     }
 
     /// Total payload bytes moved.
@@ -213,13 +300,23 @@ impl TransferSet {
     }
 
     /// Schedule a transfer on `device`'s queue at simulated time `now_s`.
-    pub fn submit(&mut self, device: usize, now_s: f64, bytes: u64) -> TransferRecord {
+    pub fn submit(&mut self, device: usize, now_s: f64, bytes: u64) -> Result<TransferRecord> {
         self.engines[device].submit(now_s, bytes)
     }
 
     /// Total payload bytes moved across every device.
     pub fn total_bytes(&self) -> u64 {
         self.engines.iter().map(|e| e.total_bytes()).sum()
+    }
+
+    /// Re-issued attempts summed across every device's engine.
+    pub fn retried_total(&self) -> u64 {
+        self.engines.iter().map(|e| e.retried_transfers()).sum()
+    }
+
+    /// Abandoned transfers summed across every device's engine.
+    pub fn failed_total(&self) -> u64 {
+        self.engines.iter().map(|e| e.failed_transfers()).sum()
     }
 
     /// Sum of per-device wire seconds (the engines run in parallel, so
@@ -247,6 +344,7 @@ mod tests {
             chunk_bytes: chunk,
             depth,
             record_cap: 8,
+            ..TransferConfig::default()
         })
     }
 
@@ -254,18 +352,19 @@ mod tests {
     fn single_chunk_transfer_matches_channel_time() {
         // chunk ≥ payload and depth 1 degenerate to the raw channel model.
         let mut e = engine(64 * MIB, 1);
-        let rec = e.submit(0.0, MIB);
+        let rec = e.submit(0.0, MIB).unwrap();
         let want = ChannelModel::of(Path::P2pToGpu).time(MIB);
         assert!((rec.done_s - want).abs() < 1e-12, "{} vs {want}", rec.done_s);
         assert_eq!(rec.start_s, 0.0);
         assert_eq!(rec.bytes, MIB);
+        assert_eq!(rec.retries, 0);
     }
 
     #[test]
     fn engine_serializes_back_to_back_submissions() {
         let mut e = engine(MIB, 2);
-        let a = e.submit(0.0, 8 * MIB);
-        let b = e.submit(0.0, 8 * MIB);
+        let a = e.submit(0.0, 8 * MIB).unwrap();
+        let b = e.submit(0.0, 8 * MIB).unwrap();
         assert_eq!(b.start_s, a.done_s, "second transfer queues behind the first");
         assert!(b.latency_s() > b.transfer_s());
         assert!(e.queued_s() > 0.0);
@@ -276,9 +375,9 @@ mod tests {
     #[test]
     fn idle_engine_starts_at_submit_time() {
         let mut e = engine(MIB, 2);
-        let _ = e.submit(0.0, MIB);
+        let _ = e.submit(0.0, MIB).unwrap();
         // Submitted well after the first finished: no queueing.
-        let rec = e.submit(1.0, MIB);
+        let rec = e.submit(1.0, MIB).unwrap();
         assert_eq!(rec.start_s, 1.0);
         assert!((rec.latency_s() - rec.transfer_s()).abs() < 1e-15);
     }
@@ -288,19 +387,19 @@ mod tests {
         // 256 MiB in 4 MiB depth-2 chunks must be close to pure payload
         // time — the paper's "batch into MiB chunks" conclusion.
         let mut e = engine(4 * MIB, 2);
-        let rec = e.submit(0.0, 256 * MIB);
+        let rec = e.submit(0.0, 256 * MIB).unwrap();
         let plateau = e.channel().bandwidth;
         assert!(rec.effective_bw() > 0.95 * plateau, "{}", rec.effective_bw());
         // And strictly worse with tiny serial chunks.
         let mut tiny = engine(64 * 1024, 1);
-        let slow = tiny.submit(0.0, 256 * MIB);
+        let slow = tiny.submit(0.0, 256 * MIB).unwrap();
         assert!(slow.transfer_s() > rec.transfer_s());
     }
 
     #[test]
     fn empty_transfer_is_free() {
         let mut e = engine(MIB, 2);
-        let rec = e.submit(3.5, 0);
+        let rec = e.submit(3.5, 0).unwrap();
         assert_eq!(rec.start_s, 3.5);
         assert_eq!(rec.done_s, 3.5);
         assert_eq!(rec.effective_bw(), 0.0);
@@ -313,16 +412,19 @@ mod tests {
             chunk_bytes: MIB,
             depth: 2,
             record_cap: 8,
+            ..TransferConfig::default()
         });
         // Load device 0's queue; device 1 must start at submit time.
-        let a = set.submit(0, 0.0, 64 * MIB);
-        let b = set.submit(0, 0.0, 64 * MIB);
+        let a = set.submit(0, 0.0, 64 * MIB).unwrap();
+        let b = set.submit(0, 0.0, 64 * MIB).unwrap();
         assert_eq!(b.start_s, a.done_s, "same device serializes");
-        let c = set.submit(1, 0.0, 64 * MIB);
+        let c = set.submit(1, 0.0, 64 * MIB).unwrap();
         assert_eq!(c.start_s, 0.0, "sibling device has its own clock");
         assert_eq!(set.total_bytes(), 192 * MIB);
         assert!(set.busy_s_total() > set.engine(0).busy_s());
         assert_eq!(set.devices(), 2);
+        assert_eq!(set.retried_total(), 0);
+        assert_eq!(set.failed_total(), 0);
         let engines = set.into_engines();
         assert_eq!(engines.len(), 2);
         assert_eq!(engines[0].transfers(), 2);
@@ -333,11 +435,89 @@ mod tests {
     fn record_ring_is_bounded_but_totals_keep_counting() {
         let mut e = engine(MIB, 2);
         for _ in 0..20 {
-            e.submit(0.0, MIB);
+            e.submit(0.0, MIB).unwrap();
         }
         assert_eq!(e.records().len(), 8);
         assert_eq!(e.transfers(), 20);
         assert_eq!(e.total_bytes(), 20 * MIB);
         assert!(e.mean_bw() > 0.0);
+    }
+
+    #[test]
+    fn injected_dma_fault_is_retried_and_charged() {
+        // Every transfer fails its first 2 attempts, then lands.
+        let plan = fault::FaultPlan::new(9).always(fsite::DMA, 2);
+        let _g = plan.install();
+        let mut e = engine(MIB, 2);
+        let rec = e.submit(0.0, 8 * MIB).unwrap();
+        assert_eq!(rec.retries, 2);
+        assert_eq!(e.retried_transfers(), 2);
+        assert_eq!(e.failed_transfers(), 0);
+        assert_eq!(e.transfers(), 1);
+        // The two dead attempts burned wire time: latency is three
+        // attempts long, and the clean wire time is one third of busy.
+        let clean = e.channel().time_chunked(8 * MIB, MIB, 2);
+        assert!((rec.latency_s() - 3.0 * clean).abs() < 1e-12);
+        assert!((e.busy_s() - 3.0 * clean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dma_fault_past_retry_budget_is_a_typed_error() {
+        let plan = fault::FaultPlan::new(9).always(fsite::DMA, fault::PERMANENT);
+        let _g = plan.install();
+        let mut e = TransferEngine::new(TransferConfig {
+            chunk_bytes: MIB,
+            depth: 2,
+            record_cap: 8,
+            max_retries: 2,
+            ..TransferConfig::default()
+        });
+        let before = e.free_at_s();
+        let err = e.submit(0.0, 8 * MIB).unwrap_err();
+        assert!(matches!(err, EtlError::Fault { site: "dma", key: 0 }));
+        assert_eq!(e.failed_transfers(), 1);
+        assert_eq!(e.retried_transfers(), 2);
+        assert_eq!(e.transfers(), 0, "abandoned transfers never land");
+        assert!(e.free_at_s() > before, "dead attempts still occupied the engine");
+        // The next ordinal is still afflicted (always-plan), but the
+        // engine keeps issuing fresh keys: ordinal 1, not a replay of 0.
+        let err2 = e.submit(0.0, MIB).unwrap_err();
+        assert!(matches!(err2, EtlError::Fault { key: 1, .. }));
+    }
+
+    #[test]
+    fn per_transfer_timeout_cuts_off_and_reissues() {
+        // No fault plan: the deadline alone kills every attempt of a
+        // transfer whose wire time exceeds it.
+        let wire = ChannelModel::of(Path::P2pToGpu).time_chunked(64 * MIB, MIB, 2);
+        let mut e = TransferEngine::new(TransferConfig {
+            chunk_bytes: MIB,
+            depth: 2,
+            record_cap: 8,
+            max_retries: 1,
+            timeout_s: wire / 2.0,
+            ..TransferConfig::default()
+        });
+        let err = e.submit(0.0, 64 * MIB).unwrap_err();
+        assert!(matches!(err, EtlError::Fault { site: "dma", .. }));
+        // Two attempts, each cut at the deadline.
+        assert!((e.busy_s() - wire).abs() < 1e-12);
+        assert_eq!(e.retried_transfers(), 1);
+        assert_eq!(e.failed_transfers(), 1);
+        // A payload under the deadline still lands untouched.
+        let ok = e.submit(0.0, MIB).unwrap();
+        assert_eq!(ok.retries, 0);
+    }
+
+    #[test]
+    fn fault_free_submission_is_byte_identical_to_preplan_behavior() {
+        // With no installed plan the Result wrapper is the only change:
+        // timings and accounting match the historical engine exactly.
+        let mut e = engine(MIB, 2);
+        let a = e.submit(0.0, 8 * MIB).unwrap();
+        assert_eq!(a.retries, 0);
+        assert_eq!(e.retried_transfers(), 0);
+        assert_eq!(e.failed_transfers(), 0);
+        assert!((e.busy_s() - a.transfer_s()).abs() < 1e-15);
     }
 }

@@ -24,6 +24,17 @@ pub enum EtlError {
     Coord(String),
     Runtime(String),
     Io(std::io::Error),
+    /// A (possibly injected) transient device/pipeline fault at a named
+    /// fault-injection site — see `util::fault::site`. Recovery layers
+    /// (ingest retry, DMA re-issue, lane drain) treat this variant as
+    /// retryable; anything else is a programming/config error and aborts.
+    Fault { site: &'static str, key: u64 },
+    /// An ingest worker thread died (panicked) instead of exiting cleanly.
+    WorkerDied { worker: usize, msg: String },
+    /// A device lane was lost mid-run and no survivors remain to absorb
+    /// its work (single-lane loss with survivors is *recovered*, not
+    /// errored — see `coordinator::train_loop`).
+    LaneLost { device: usize, survivors: usize },
 }
 
 impl std::fmt::Display for EtlError {
@@ -46,6 +57,15 @@ impl std::fmt::Display for EtlError {
             EtlError::Coord(s) => write!(f, "coordinator error: {s}"),
             EtlError::Runtime(s) => write!(f, "runtime error: {s}"),
             EtlError::Io(e) => write!(f, "io error: {e}"),
+            EtlError::Fault { site, key } => {
+                write!(f, "fault at site {site} (key {key})")
+            }
+            EtlError::WorkerDied { worker, msg } => {
+                write!(f, "ingest worker {worker} died: {msg}")
+            }
+            EtlError::LaneLost { device, survivors } => {
+                write!(f, "device lane {device} lost ({survivors} survivors)")
+            }
         }
     }
 }
@@ -69,6 +89,19 @@ impl EtlError {
     pub fn op(op: &'static str, msg: impl Into<String>) -> EtlError {
         EtlError::Op { op, msg: msg.into() }
     }
+
+    /// Is this error a (possibly injected) transient fault that recovery
+    /// layers may retry / quarantine / drain, rather than a programming or
+    /// configuration error?
+    pub fn is_fault(&self) -> bool {
+        matches!(
+            self,
+            EtlError::Fault { .. }
+                | EtlError::WorkerDied { .. }
+                | EtlError::LaneLost { .. }
+                | EtlError::Io(_)
+        )
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +117,20 @@ mod tests {
             "operator VocabMap: no table"
         );
         assert_eq!(EtlError::Dag("x".into()).to_string(), "DAG validation error: x");
+    }
+
+    #[test]
+    fn fault_variants_display_and_classify() {
+        let e = EtlError::Fault { site: "dma", key: 3 };
+        assert_eq!(e.to_string(), "fault at site dma (key 3)");
+        assert!(e.is_fault());
+        let w = EtlError::WorkerDied { worker: 2, msg: "boom".into() };
+        assert_eq!(w.to_string(), "ingest worker 2 died: boom");
+        assert!(w.is_fault());
+        let l = EtlError::LaneLost { device: 1, survivors: 0 };
+        assert_eq!(l.to_string(), "device lane 1 lost (0 survivors)");
+        assert!(l.is_fault());
+        assert!(!EtlError::Coord("x".into()).is_fault());
     }
 
     #[test]

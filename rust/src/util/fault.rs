@@ -1,0 +1,467 @@
+//! Deterministic fault injection for the ingest→pack→DMA→train pipeline
+//! (style of the `util/sched.rs` schedule fuzzer): a process-installable
+//! [`FaultPlan`] that decides, as a pure function of **(seed, site, key)**,
+//! whether a given operation attempt fails — shard read I/O errors, corrupt
+//! rows in TSV/rcol decode, slow-shard stragglers, DMA transfer failures,
+//! ingest-worker death, and whole-lane (device) loss.
+//!
+//! Keys are *stable identities* (shard index, transfer ordinal, device
+//! index), **not** arrival order, so the set of afflicted keys is
+//! schedule-independent: the fault suite (`rust/tests/prop_faults.rs`) can
+//! replay the same plan under hundreds of fuzzed schedules and assert the
+//! recovery outcome (bitwise-identical delivery, exact quarantine sets,
+//! surviving-lane accounting) never varies.
+//!
+//! Each afflicted key fails a bounded number of *attempts* ([`SiteRule::
+//! failures`]) and then succeeds — that is what makes retry paths testable:
+//! `failures < max_retries` exercises retried-but-delivered, while
+//! [`PERMANENT`] exercises quarantine / lane loss. When no plan is
+//! installed, [`inject`] is a single relaxed atomic load — cheap enough to
+//! leave in production paths permanently (pinned by the `fault_overhead`
+//! section of the hotpath bench).
+//!
+//! Installation is process-global; [`FaultPlan::install`] serializes
+//! installers on a mutex (held by the returned guard) so concurrently
+//! running tests cannot interleave two different plans. Injection is
+//! additionally **enrollment-scoped**: each install opens a fresh epoch,
+//! enrolls the installing thread, and only afflicts threads carrying that
+//! epoch's token — library thread-spawn points propagate the spawner's
+//! token ([`enroll_token`]/[`enroll`]) so a plan reaches its own worker
+//! fleet, while unrelated tests running in parallel on other threads stay
+//! untouched.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Well-known injection sites. Each has a stable key domain, documented
+/// per constant, so plans and assertions agree on what an affliction hits.
+pub mod site {
+    /// Shard read I/O error in an ingest worker (key = shard index).
+    pub const SHARD_READ: u64 = 1;
+    /// Corrupt rows surfacing from TSV/rcol decode (key = shard index).
+    pub const ROW_DECODE: u64 = 2;
+    /// Slow-shard straggler: a bounded stall before the read (key = shard).
+    pub const SLOW_SHARD: u64 = 3;
+    /// DMA transfer failure in `TransferEngine::submit` (key = transfer
+    /// ordinal within the engine).
+    pub const DMA: u64 = 4;
+    /// Ingest-worker death: the worker thread panics while producing the
+    /// keyed shard (key = shard index).
+    pub const WORKER_DEATH: u64 = 5;
+    /// Whole-lane loss in the multi-device train loop (key = device index).
+    pub const LANE_LOSS: u64 = 6;
+
+    /// Human-readable site name for error surfaces and reports.
+    pub fn name(site: u64) -> &'static str {
+        match site {
+            SHARD_READ => "shard_read",
+            ROW_DECODE => "row_decode",
+            SLOW_SHARD => "slow_shard",
+            DMA => "dma",
+            WORKER_DEATH => "worker_death",
+            LANE_LOSS => "lane_loss",
+            _ => "unknown",
+        }
+    }
+}
+
+/// Affliction rate denominator: rates are expressed per 65 536 keys.
+pub const RATE_FULL: u32 = 1 << 16;
+
+/// Marker prefix for panics raised *by injection* (worker-death faults).
+/// [`quiet_injected_panics`] suppresses their default-hook noise so fault
+/// campaigns don't spray hundreds of expected backtraces into test logs.
+pub const INJECTED_PANIC: &str = "piperec-injected-fault";
+
+/// Install (once per process) a panic hook that silences panics whose
+/// payload carries [`INJECTED_PANIC`] and forwards everything else to the
+/// previous hook. Real panics keep their diagnostics.
+pub fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let injected = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.contains(INJECTED_PANIC))
+                .or_else(|| {
+                    payload.downcast_ref::<String>().map(|s| s.contains(INJECTED_PANIC))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// `failures` value meaning "never succeeds" (poison / permanent loss).
+pub const PERMANENT: u32 = u32::MAX;
+
+const MAX_SITE: usize = 8;
+
+/// Per-site injection rule: which fraction of the key space is afflicted,
+/// and how many attempts each afflicted key fails before succeeding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SiteRule {
+    /// Probability an individual key is afflicted, in units of
+    /// 1/[`RATE_FULL`]. [`RATE_FULL`] afflicts every key.
+    pub rate: u32,
+    /// Number of attempts an afflicted key fails before it starts
+    /// succeeding; [`PERMANENT`] never succeeds.
+    pub failures: u32,
+}
+
+/// A deterministic fault schedule: seed plus per-site rules. Pure data —
+/// build one with the fluent constructors, then [`install`](Self::install)
+/// it to activate injection process-wide.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    rules: [Option<SiteRule>; MAX_SITE],
+}
+
+impl FaultPlan {
+    /// An empty plan rooted at `seed` (injects nothing until rules are
+    /// added).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, rules: [None; MAX_SITE] }
+    }
+
+    /// The plan's seed (for failure reports).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Add a rule: afflict `rate`/65 536 of `site`'s keys, each failing
+    /// `failures` attempts before succeeding.
+    pub fn with(mut self, site: u64, rate: u32, failures: u32) -> FaultPlan {
+        assert!((site as usize) < MAX_SITE, "unknown fault site {site}");
+        self.rules[site as usize] = Some(SiteRule { rate: rate.min(RATE_FULL), failures });
+        self
+    }
+
+    /// Add a rule afflicting **every** key of `site`.
+    pub fn always(self, site: u64, failures: u32) -> FaultPlan {
+        self.with(site, RATE_FULL, failures)
+    }
+
+    /// Pure affliction query: how many attempts does `key` fail at `site`
+    /// under this plan? `None` if the key is healthy. Does **not** consume
+    /// an attempt — tests use this to predict exact quarantine sets.
+    pub fn afflicts(&self, site: u64, key: u64) -> Option<u32> {
+        let rule = self.rules.get(site as usize).copied().flatten()?;
+        if rule.rate == 0 {
+            return None;
+        }
+        if (mix(self.seed, site, key) & (RATE_FULL as u64 - 1)) < rule.rate as u64 {
+            Some(rule.failures)
+        } else {
+            None
+        }
+    }
+
+    /// Activate this plan until the guard drops. Blocks while another plan
+    /// is installed (tests running in parallel serialize here instead of
+    /// mixing plans). The installing thread is enrolled in the plan's
+    /// epoch; threads it spawns through the library's spawn points inherit
+    /// enrollment, everything else stays unafflicted.
+    pub fn install(self) -> FaultGuard {
+        let serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let epoch = EPOCH.fetch_add(1, Ordering::SeqCst) + 1;
+        {
+            let mut st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+            *st = Some(PlanState { plan: self, epoch, attempts: HashMap::new() });
+        }
+        ENROLLED.with(|c| c.set(epoch));
+        INJECTED.store(0, Ordering::SeqCst);
+        ACTIVE.store(true, Ordering::SeqCst);
+        FaultGuard { _serial: serial }
+    }
+}
+
+/// The calling thread's enrollment token — capture it before spawning a
+/// worker thread and hand it to [`enroll`] inside, so the fault plan that
+/// covers the spawner also covers the fleet it spawns. Returns a dead
+/// token when the thread is not enrolled (enrolling with it is a no-op
+/// match, which is exactly right).
+pub fn enroll_token() -> u64 {
+    ENROLLED.with(|c| c.get())
+}
+
+/// Adopt a spawner's enrollment token on this thread. Tokens from an
+/// earlier plan's epoch are stale and never match the active plan.
+pub fn enroll(token: u64) {
+    ENROLLED.with(|c| c.set(token));
+}
+
+/// Deterministic draw for (seed, site, key): splitmix64 finalizer over the
+/// same mixing constants as `sched.rs`, so different sites/keys decorrelate.
+fn mix(seed: u64, site: u64, key: u64) -> u64 {
+    let mut x = seed
+        ^ site.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ key.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+struct PlanState {
+    plan: FaultPlan,
+    /// Install epoch this plan opened; only threads enrolled with a
+    /// matching token are afflicted.
+    epoch: u64,
+    /// Attempt counts per (site, key) — injection fails the first
+    /// `failures` attempts of an afflicted key, then lets it through.
+    attempts: HashMap<(u64, u64), u32>,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+static EPOCH: AtomicU64 = AtomicU64::new(0);
+static STATE: Mutex<Option<PlanState>> = Mutex::new(None);
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+thread_local! {
+    /// Epoch token this thread is enrolled under (0 = never enrolled).
+    static ENROLLED: Cell<u64> = Cell::new(0);
+}
+
+/// RAII handle for an installed fault plan: dropping it deactivates
+/// injection and releases the global installer lock.
+pub struct FaultGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        ACTIVE.store(false, Ordering::SeqCst);
+        let mut st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+        *st = None;
+    }
+}
+
+/// Is a fault plan currently installed?
+pub fn is_active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Should this attempt of (`site`, `key`) fail? One relaxed atomic load
+/// when no plan is installed; under a plan, a deterministic draw plus an
+/// attempt-count bump for afflicted keys.
+#[inline]
+pub fn inject(site: u64, key: u64) -> bool {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    inject_slow(site, key)
+}
+
+#[cold]
+fn inject_slow(site: u64, key: u64) -> bool {
+    let token = ENROLLED.with(|c| c.get());
+    if token == 0 {
+        return false;
+    }
+    let mut st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(st) = st.as_mut() else { return false };
+    if st.epoch != token {
+        return false;
+    }
+    let Some(failures) = st.plan.afflicts(site, key) else { return false };
+    let a = st.attempts.entry((site, key)).or_insert(0);
+    if *a < failures {
+        *a = a.saturating_add(1);
+        INJECTED.fetch_add(1, Ordering::Relaxed);
+        true
+    } else {
+        false
+    }
+}
+
+/// Straggler hook: if (`site`, `key`) is afflicted, stall this thread for
+/// a deterministic bounded micro-sleep (≤ ~200 µs) — enough to invert
+/// arrival orders without slowing a campaign down. Counts an attempt like
+/// [`inject`], so `failures` bounds how often a key straggles.
+pub fn stall(site: u64, key: u64) {
+    if !inject(site, key) {
+        return;
+    }
+    let seed = {
+        let st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+        st.as_ref().map(|s| s.plan.seed).unwrap_or(0)
+    };
+    let micros = mix(seed, site ^ 0xACE, key) % 200;
+    std::thread::sleep(std::time::Duration::from_micros(micros));
+}
+
+/// Total injections performed since the current plan was installed.
+pub fn injected_count() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Seed source for a fault-fuzzing campaign: hands out a deterministic
+/// seed sequence (mirror of `sched::SchedFuzzer`), so CI can shard
+/// campaigns by base seed (`PIPEREC_FAULT_SEED_BASE`).
+pub struct FaultFuzzer {
+    rng: super::prng::Rng,
+}
+
+impl FaultFuzzer {
+    /// A campaign rooted at `base_seed`.
+    pub fn new(base_seed: u64) -> FaultFuzzer {
+        FaultFuzzer { rng: super::prng::Rng::new(base_seed) }
+    }
+
+    /// Next fault seed of the campaign.
+    pub fn next_seed(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inactive_injects_nothing() {
+        let _serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!is_active());
+        for s in 0..MAX_SITE as u64 {
+            assert!(!inject(s, 0));
+        }
+        assert!(!is_active());
+    }
+
+    #[test]
+    fn afflicted_keys_fail_exactly_failures_attempts() {
+        let plan = FaultPlan::new(11).always(site::SHARD_READ, 2);
+        let _g = plan.install();
+        // Every key afflicted; first two attempts fail, third succeeds.
+        assert!(inject(site::SHARD_READ, 7));
+        assert!(inject(site::SHARD_READ, 7));
+        assert!(!inject(site::SHARD_READ, 7));
+        assert!(!inject(site::SHARD_READ, 7));
+        // Independent attempt counters per key.
+        assert!(inject(site::SHARD_READ, 8));
+        assert_eq!(injected_count(), 3);
+    }
+
+    #[test]
+    fn affliction_is_a_pure_function_of_seed_site_key() {
+        let a = FaultPlan::new(99).with(site::DMA, RATE_FULL / 2, 1);
+        let b = FaultPlan::new(99).with(site::DMA, RATE_FULL / 2, 1);
+        for k in 0..256 {
+            assert_eq!(a.afflicts(site::DMA, k), b.afflicts(site::DMA, k));
+        }
+        // A half rate should hit a plausible fraction of 256 keys.
+        let hits = (0..256).filter(|&k| a.afflicts(site::DMA, k).is_some()).count();
+        assert!((64..=192).contains(&hits), "rate=1/2 hit {hits}/256 keys");
+        // Different seeds pick different key sets (with overwhelming odds).
+        let c = FaultPlan::new(100).with(site::DMA, RATE_FULL / 2, 1);
+        assert!((0..256).any(|k| a.afflicts(site::DMA, k) != c.afflicts(site::DMA, k)));
+    }
+
+    #[test]
+    fn sites_decorrelate_under_one_seed() {
+        let p = FaultPlan::new(5)
+            .with(site::SHARD_READ, RATE_FULL / 2, 1)
+            .with(site::ROW_DECODE, RATE_FULL / 2, 1);
+        let differs = (0..256).any(|k| {
+            p.afflicts(site::SHARD_READ, k).is_some() != p.afflicts(site::ROW_DECODE, k).is_some()
+        });
+        assert!(differs);
+    }
+
+    #[test]
+    fn permanent_faults_never_succeed() {
+        let _g = FaultPlan::new(3).always(site::LANE_LOSS, PERMANENT).install();
+        for _ in 0..64 {
+            assert!(inject(site::LANE_LOSS, 1));
+        }
+    }
+
+    #[test]
+    fn guard_drop_deactivates_and_clears_state() {
+        {
+            let _g = FaultPlan::new(1).always(site::SHARD_READ, 1).install();
+            assert!(is_active());
+            assert!(inject(site::SHARD_READ, 0));
+        }
+        let _serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!is_active());
+        assert!(STATE.lock().unwrap_or_else(|p| p.into_inner()).is_none());
+    }
+
+    #[test]
+    fn empty_rule_or_zero_rate_injects_nothing() {
+        let _g = FaultPlan::new(4).with(site::DMA, 0, 5).install();
+        for k in 0..64 {
+            assert!(!inject(site::DMA, k));
+            assert!(!inject(site::SHARD_READ, k)); // no rule at all
+        }
+        assert_eq!(injected_count(), 0);
+    }
+
+    #[test]
+    fn stall_is_bounded_and_counts_attempts() {
+        let _g = FaultPlan::new(6).always(site::SLOW_SHARD, 1).install();
+        let t0 = std::time::Instant::now();
+        stall(site::SLOW_SHARD, 9);
+        assert!(t0.elapsed() < std::time::Duration::from_millis(100));
+        // Attempt consumed: the same key no longer straggles.
+        assert!(!inject(site::SLOW_SHARD, 9));
+    }
+
+    #[test]
+    fn fuzzer_seed_sequence_is_deterministic() {
+        let mut a = FaultFuzzer::new(7);
+        let mut b = FaultFuzzer::new(7);
+        let sa: Vec<u64> = (0..5).map(|_| a.next_seed()).collect();
+        let sb: Vec<u64> = (0..5).map(|_| b.next_seed()).collect();
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn concurrent_injects_under_install_do_not_wedge() {
+        let _g = FaultPlan::new(0xF001).always(site::SHARD_READ, 3).install();
+        let tok = enroll_token();
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                scope.spawn(move || {
+                    enroll(tok);
+                    for i in 0..200u64 {
+                        inject(site::SHARD_READ, (t + i) & 15);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn unenrolled_threads_are_never_afflicted() {
+        let _g = FaultPlan::new(0xF002).always(site::DMA, PERMANENT).install();
+        // The installing thread is afflicted…
+        assert!(inject(site::DMA, 0));
+        // …but a thread that never enrolled (a parallel unrelated test)
+        // sails through, and a stale token from a previous epoch is dead.
+        std::thread::scope(|scope| {
+            let clean = scope.spawn(|| inject(site::DMA, 0)).join().unwrap();
+            assert!(!clean);
+            let stale = scope
+                .spawn(|| {
+                    enroll(enroll_token().wrapping_sub(1));
+                    inject(site::DMA, 0)
+                })
+                .join()
+                .unwrap();
+            assert!(!stale);
+        });
+    }
+}

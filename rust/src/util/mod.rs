@@ -1,10 +1,12 @@
 //! Infrastructure substrates built in-repo because the offline environment
 //! lacks the usual crates (clap/rayon/criterion/proptest/loom): a
 //! deterministic PRNG, a CLI argument parser, a scoped thread pool, timing
-//! helpers, summary statistics, a property-testing mini-framework and a
-//! schedule-fuzzing harness for the concurrent dataflow.
+//! helpers, summary statistics, a property-testing mini-framework, a
+//! schedule-fuzzing harness for the concurrent dataflow, and a
+//! deterministic fault-injection harness for the recovery paths.
 
 pub mod cli;
+pub mod fault;
 pub mod pool;
 pub mod prng;
 pub mod prop;

@@ -292,6 +292,45 @@ fn multi_device_train_reports_per_device_breakdown() {
 }
 
 #[test]
+fn fault_counters_read_zero_on_a_healthy_run() {
+    // The fault-recovery ledger (PR 6) must be inert when nothing goes
+    // wrong: no lanes lost, no DMA retries or failures, no forfeited
+    // steps — on both the single-device producer path and the routed
+    // fleet. Exact non-zero accounting under injected faults lives in
+    // rust/tests/prop_faults.rs.
+    let mut spec = DatasetSpec::dataset_i(0.004);
+    spec.shards = 3;
+    let dag = build(PipelineKind::II, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+    let mut pipe = Pipeline::new(plan);
+    pipe.fit(&spec.shard(0, 42)).unwrap();
+
+    for devices in [1usize, 2] {
+        let mut trainer = Trainer::from_meta(criteo_meta(128), 7);
+        let cfg = TrainConfig {
+            max_steps: 24,
+            loss_every: 4,
+            devices,
+            route: RoutePolicy::RoundRobin,
+            allreduce_every: 1,
+            ingest: IngestConfig {
+                workers: 2,
+                channel_depth: 2,
+                policy: DeliveryPolicy::InOrder,
+                ..IngestConfig::default()
+            },
+            ..Default::default()
+        };
+        let report = train(&pipe, &spec, &mut trainer, &cfg).unwrap();
+        assert!(report.steps > 0, "devices={devices}: no steps ran");
+        assert_eq!(report.lanes_lost, 0, "devices={devices}: {report:?}");
+        assert_eq!(report.retried_transfers, 0, "devices={devices}: {report:?}");
+        assert_eq!(report.failed_transfers, 0, "devices={devices}: {report:?}");
+        assert_eq!(report.forfeited_steps, 0, "devices={devices}: {report:?}");
+    }
+}
+
+#[test]
 fn train_loop_freshest_first_still_trains() {
     // Freshness-biased delivery changes batch order, not batch contents:
     // the loop still runs every shard through training.

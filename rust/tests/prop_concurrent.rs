@@ -262,7 +262,8 @@ fn fuzzed_reduce_bus_is_schedule_independent() {
                 let bus = &bus;
                 scope.spawn(move || {
                     for g in (d as u64..33).step_by(3) {
-                        bus.post(g, d, GradStep { loss: g as f64, ..Default::default() });
+                        bus.post(g, d, GradStep { loss: g as f64, ..Default::default() })
+                            .unwrap();
                     }
                 });
             }

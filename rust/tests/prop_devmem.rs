@@ -186,7 +186,8 @@ fn prop_arena_path_bit_identical_to_heap_path() {
                             .map_err(|e| format!("{label}: {e}"))?;
                         ingest.recycle(shard);
                         let t = dma.free_at_s();
-                        dma.submit(t, slot.packed_bytes());
+                        dma.submit(t, slot.packed_bytes())
+                            .map_err(|e| format!("{label}: {e}"))?;
                         // The trainer would consume the slot in place here;
                         // clone only to compare against the reference.
                         got.push((i, slot.batch().clone()));

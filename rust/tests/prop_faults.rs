@@ -1,0 +1,452 @@
+//! Chaos harness: deterministic fault injection × schedule fuzzing over
+//! the ingest→pack→DMA→train pipeline (`util::fault` driving the
+//! recovery ladders of `dataio::ingest`, `devmem::transfer` and
+//! `coordinator::train_loop::run_multi`).
+//!
+//! The robustness claims pinned here:
+//!
+//! 1. **Transient faults are invisible** — a run whose shard reads,
+//!    decodes, ingest workers and DMA transfers all fail-then-recover
+//!    inside their retry budgets delivers the *bitwise identical*
+//!    trajectory (losses AND final parameters) of the fault-free run,
+//!    in-order + sync-every-step, under hundreds of fuzzed thread
+//!    schedules × fault seeds.
+//! 2. **Poison is quarantined with exact accounting** — permanently
+//!    failing shards are skipped, the stream finishes, and
+//!    `delivered + quarantined = total` with the quarantine set
+//!    predicted in advance from the pure affliction function.
+//! 3. **Lane loss degrades, never deadlocks** — killing a device lane
+//!    mid-run leaves survivors to finish every remaining shard exactly
+//!    once (dead lane's queued steps forfeited, router re-routed); only
+//!    a fleet with zero survivors errors, with `EtlError::LaneLost`.
+//!
+//! CI runs this suite across three `PIPEREC_FAULT_SEED_BASE` ranges ×
+//! `--test-threads {1, 8}` (the `chaos-fuzz` job); enrollment scoping in
+//! `util::fault` keeps concurrently running fault-free tests unafflicted.
+
+use std::time::Duration;
+
+use piperec::coordinator::{train, DataPath, RoutePolicy, TrainConfig, TrainReport};
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{AsyncIngest, DeliveryPolicy, IngestConfig, ShardInput};
+use piperec::dataio::synth::SynthConfig;
+use piperec::devmem::ArenaConfig;
+use piperec::error::EtlError;
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
+use piperec::runtime::Trainer;
+use piperec::util::fault::{
+    self, quiet_injected_panics, site as fsite, FaultFuzzer, FaultPlan, PERMANENT, RATE_FULL,
+};
+use piperec::util::prop::assert_bits_equal;
+use piperec::util::sched::SchedFuzzer;
+
+/// Base seed of the fault campaign. CI shards three distinct ranges via
+/// `PIPEREC_FAULT_SEED_BASE`; locally the default range runs.
+fn campaign_base() -> u64 {
+    std::env::var("PIPEREC_FAULT_SEED_BASE")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xFA_17_5EED)
+}
+
+/// Same stateless packing dag family as prop_concurrent/prop_devmem: no
+/// fit needed, packed shape matches the reference-trainer meta exactly.
+fn passthrough_dag(nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-faults");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    for i in 0..nd {
+        let d = dag.source(format!("t_i{i}"), ColType::F32);
+        let f = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[d],
+        );
+        dag.sink(format!("dense{i}"), f, SinkRole::Dense);
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink(format!("sparse{i}"), m, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn custom_spec(schema: Schema, rows: usize, shards: usize) -> DatasetSpec {
+    DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-faults",
+        schema,
+        rows,
+        paper_rows: rows as u64,
+        shards,
+        synth: SynthConfig::default(),
+        ssd_bound: false,
+    }
+}
+
+fn trainer_meta(batch: usize, nd: usize, ns: usize) -> ModelMeta {
+    ModelMeta {
+        batch,
+        n_dense: nd,
+        n_sparse: ns,
+        vocab: 128,
+        embed_dim: 1,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![nd] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![ns * 32] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+const ND: usize = 2;
+const NS: usize = 2;
+const STEP_ROWS: usize = 16;
+
+/// 3 shards × 40 rows → 2 full 16-row chunks per shard, 6 global steps.
+fn fixture() -> (Pipeline, DatasetSpec) {
+    let schema = Schema::tabular("t", ND, NS, 64);
+    let dag = passthrough_dag(ND, NS);
+    dag.validate(&schema).unwrap();
+    let spec = custom_spec(schema.clone(), 120, 3);
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    (Pipeline::new(plan), spec)
+}
+
+/// One live run: in-order ingest with a generous retry budget, default
+/// retryable DMA, round-robin + sync-every-step (the bit-reproducible
+/// mode) so recovered transient faults must be invisible.
+fn run_fleet(
+    pipe: &Pipeline,
+    spec: &DatasetSpec,
+    devices: usize,
+) -> Result<(TrainReport, Vec<f32>), EtlError> {
+    let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+    let cfg = TrainConfig {
+        max_steps: usize::MAX / 2,
+        loss_every: 1,
+        staging_buffers: 2,
+        seed: 99,
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            max_retries: 3,
+            backoff: Duration::from_micros(20),
+            ..IngestConfig::default()
+        },
+        path: DataPath::Arena,
+        arena: ArenaConfig { slots: 3, slot_bytes: 16 << 20 },
+        devices,
+        route: RoutePolicy::RoundRobin,
+        allreduce_every: 1,
+        ..TrainConfig::default()
+    };
+    let report = train(pipe, spec, &mut trainer, &cfg)?;
+    let state = trainer.state_to_vec()?;
+    Ok((report, state))
+}
+
+fn assert_same_trajectory(
+    label: &str,
+    got: &(TrainReport, Vec<f32>),
+    want: &(TrainReport, Vec<f32>),
+) {
+    assert_eq!(got.0.steps, want.0.steps, "{label}: step counts differ");
+    assert_eq!(
+        got.0.losses.len(),
+        want.0.losses.len(),
+        "{label}: loss sample counts differ"
+    );
+    for ((gs, gl), (ws, wl)) in got.0.losses.iter().zip(&want.0.losses) {
+        assert_eq!(gs, ws, "{label}: loss sampled at different steps");
+        assert_eq!(
+            gl.to_bits(),
+            wl.to_bits(),
+            "{label}: loss diverged at step {gs}: {gl} vs {wl}"
+        );
+    }
+    assert_bits_equal(&got.1, &want.1).unwrap_or_else(|e| {
+        panic!("{label}: final parameters diverged: {e}");
+    });
+}
+
+/// The transient-fault cocktail: every site fails within its recovery
+/// budget (ingest max_retries 3, DMA max_retries 3), so every run must
+/// deliver everything.
+fn transient_plan(seed: u64) -> FaultPlan {
+    FaultPlan::new(seed)
+        .with(fsite::SHARD_READ, RATE_FULL / 2, 2)
+        .with(fsite::ROW_DECODE, RATE_FULL / 4, 1)
+        .with(fsite::SLOW_SHARD, RATE_FULL / 2, 3)
+        .with(fsite::WORKER_DEATH, RATE_FULL / 8, 1)
+        .with(fsite::DMA, RATE_FULL / 4, 1)
+}
+
+#[test]
+fn transient_faults_recover_bitwise_under_fuzzed_schedules() {
+    // THE acceptance bar: ≥ 100 (fault seed × thread schedule) replays,
+    // each retried-but-delivered and bitwise equal to the fault-free
+    // trajectory.
+    quiet_injected_panics();
+    let (pipe, spec) = fixture();
+    let reference = run_fleet(&pipe, &spec, 1).unwrap();
+    assert!(reference.0.steps >= 6, "fixture must actually train");
+    assert_eq!(reference.0.lanes_lost, 0);
+    assert_eq!(reference.0.retried_transfers, 0);
+    assert_eq!(reference.0.failed_transfers, 0);
+    assert_eq!(reference.0.forfeited_steps, 0);
+
+    let mut faults = FaultFuzzer::new(campaign_base());
+    let mut sched = SchedFuzzer::new(campaign_base() ^ 0x5c4ed);
+    let mut campaign_injected = 0u64;
+    const REPLAYS: usize = 100;
+    for i in 0..REPLAYS {
+        let devices = [1usize, 2, 3][i % 3];
+        let fseed = faults.next_seed();
+        let guard = transient_plan(fseed).install();
+        let (sseed, got) =
+            sched.with_schedule(|| run_fleet(&pipe, &spec, devices).unwrap());
+        campaign_injected += fault::injected_count();
+        drop(guard);
+        let label =
+            format!("replay {i} (fault seed {fseed:#x}, sched {sseed:#x}, devices {devices})");
+        assert_same_trajectory(&label, &got, &reference);
+        // Recovered means recovered: nothing was lost or left behind.
+        assert_eq!(got.0.lanes_lost, 0, "{label}");
+        assert_eq!(got.0.failed_transfers, 0, "{label}");
+        assert_eq!(got.0.forfeited_steps, 0, "{label}");
+        assert_eq!(got.0.shards, 3, "{label}: every shard delivered");
+    }
+    // The campaign must have actually exercised the recovery ladders —
+    // a plan that never fires proves nothing.
+    assert!(
+        campaign_injected > REPLAYS as u64,
+        "campaign injected only {campaign_injected} faults across {REPLAYS} replays"
+    );
+}
+
+#[test]
+fn transient_dma_retries_account_exactly() {
+    // Every transfer fails exactly once then succeeds on re-issue: the
+    // trajectory is untouched and the retry ledger is exact.
+    let (pipe, spec) = fixture();
+    let reference = run_fleet(&pipe, &spec, 1).unwrap();
+    let guard = FaultPlan::new(campaign_base()).always(fsite::DMA, 1).install();
+    let got = run_fleet(&pipe, &spec, 1).unwrap();
+    drop(guard);
+    assert_same_trajectory("always-retry DMA", &got, &reference);
+    assert_eq!(got.0.retried_transfers, got.0.shards, "one re-issue per staged shard");
+    assert_eq!(got.0.failed_transfers, 0);
+    assert_eq!(got.0.lanes_lost, 0);
+    // The failed attempts occupied the simulated wire: DMA busy time
+    // doubles against the fault-free run (1 failed + 1 clean per shard).
+    assert!(
+        got.0.dma_sim_s > reference.0.dma_sim_s * 1.99,
+        "retries must charge the wire: {} vs {}",
+        got.0.dma_sim_s,
+        reference.0.dma_sim_s
+    );
+}
+
+#[test]
+fn poison_shards_quarantine_with_exact_accounting() {
+    // Permanently failing shards under quarantine: the stream finishes,
+    // the poison set is predicted in advance, delivered + quarantined =
+    // total, and the retry ledger is exact — under fuzzed schedules.
+    let schema = Schema::tabular("t", ND, NS, 64);
+    const SHARDS: usize = 8;
+    let spec = custom_spec(schema, SHARDS * 40, SHARDS);
+    const MAX_RETRIES: u32 = 2;
+
+    let mut faults = FaultFuzzer::new(campaign_base() ^ 0x9015);
+    let mut sched = SchedFuzzer::new(campaign_base() ^ 0xdead);
+    for i in 0..20 {
+        let fseed = faults.next_seed();
+        let plan = FaultPlan::new(fseed)
+            .with(fsite::SHARD_READ, RATE_FULL / 2, PERMANENT)
+            .with(fsite::ROW_DECODE, RATE_FULL / 4, 1);
+        // Predict the outcome from the pure affliction function before
+        // anything runs.
+        let poison: Vec<usize> = (0..SHARDS)
+            .filter(|&s| plan.afflicts(fsite::SHARD_READ, s as u64).is_some())
+            .collect();
+        let transient: Vec<usize> = (0..SHARDS)
+            .filter(|&s| {
+                plan.afflicts(fsite::SHARD_READ, s as u64).is_none()
+                    && plan.afflicts(fsite::ROW_DECODE, s as u64).is_some()
+            })
+            .collect();
+        let expect_delivered: Vec<usize> =
+            (0..SHARDS).filter(|s| !poison.contains(s)).collect();
+
+        let guard = plan.install();
+        let (sseed, (delivered, report)) = sched.with_schedule(|| {
+            let cfg = IngestConfig {
+                workers: 2,
+                channel_depth: 2,
+                policy: DeliveryPolicy::InOrder,
+                max_retries: MAX_RETRIES,
+                quarantine: true,
+                ..IngestConfig::default()
+            };
+            let mut ingest =
+                AsyncIngest::spawn(ShardInput::Synth { spec: spec.clone(), seed: 5 }, &cfg);
+            let mut delivered = Vec::new();
+            while let Some((s, batch)) = ingest.next().unwrap() {
+                delivered.push(s);
+                ingest.recycle(batch);
+            }
+            (delivered, ingest.report())
+        });
+        drop(guard);
+
+        let label = format!("campaign {i} (fault seed {fseed:#x}, sched {sseed:#x})");
+        assert_eq!(delivered, expect_delivered, "{label}: delivered set");
+        assert_eq!(report.quarantined, poison.len() as u64, "{label}");
+        assert_eq!(
+            report.delivered + report.quarantined,
+            SHARDS as u64,
+            "{label}: delivered + quarantined = total"
+        );
+        assert_eq!(
+            report.retries,
+            poison.len() as u64 * MAX_RETRIES as u64 + transient.len() as u64,
+            "{label}: exact retry ledger"
+        );
+        assert_eq!(report.worker_deaths, 0, "{label}");
+        assert_eq!(report.dropped, 0, "{label}: in-order never drops");
+    }
+}
+
+/// Search the seed space for a plan that kills **exactly** device lane 1
+/// of a 3-lane fleet — affliction is a pure function of (seed, site,
+/// key), so the test picks its victim before the fleet exists.
+fn plan_killing_exactly_lane_1() -> FaultPlan {
+    let mut seed = campaign_base() ^ 0x1a9e;
+    loop {
+        let p = FaultPlan::new(seed).with(fsite::LANE_LOSS, RATE_FULL / 4, PERMANENT);
+        let hit = |d: u64| p.afflicts(fsite::LANE_LOSS, d).is_some();
+        if hit(1) && !hit(0) && !hit(2) {
+            return p;
+        }
+        seed = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    }
+}
+
+#[test]
+fn lane_loss_drains_and_survivors_finish_every_remaining_shard() {
+    // Deterministic single-lane loss on a 3-device fleet: round-robin
+    // gives lane 1 exactly shard 1 (steps 2..4); its consumer dies on
+    // first handoff, forfeits both steps, and the survivors finish the
+    // rest exactly once — under fuzzed schedules, bitwise reproducibly.
+    quiet_injected_panics();
+    let (pipe, spec) = fixture();
+    let plan = plan_killing_exactly_lane_1();
+
+    let run_lossy = || {
+        let guard = plan.clone().install();
+        let out = run_fleet(&pipe, &spec, 3).unwrap();
+        drop(guard);
+        out
+    };
+    let reference = run_lossy();
+    assert_eq!(reference.0.lanes_lost, 1, "exactly one lane lost");
+    assert_eq!(reference.0.forfeited_steps, 2, "lane 1's two steps forfeited");
+    assert_eq!(reference.0.steps, 4, "survivors' steps all executed");
+    // The dead lane's worker still packed its shard — the consumer
+    // forfeited it on arrival; packing accounting is unaffected.
+    assert_eq!(reference.0.shards, 3, "every routed shard packed");
+    assert_eq!(reference.0.per_device[1].steps, 0, "lane 1 died before stepping");
+    assert_eq!(reference.0.losses.len(), 4);
+    assert!(reference.0.losses.iter().all(|(_, l)| l.is_finite()));
+    assert!(reference.1.iter().all(|v| v.is_finite()));
+    // Surviving global steps are 0,1 (shard 0) and 4,5 (shard 2).
+    let stepped: Vec<u64> = reference.0.losses.iter().map(|&(g, _)| g).collect();
+    assert_eq!(stepped, vec![1, 2, 5, 6], "loss samples at surviving steps");
+
+    let mut sched = SchedFuzzer::new(campaign_base() ^ 0x10_55);
+    for i in 0..30 {
+        let (sseed, got) = sched.with_schedule(run_lossy);
+        let label = format!("lane-loss schedule {i} (seed {sseed:#x})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_eq!(got.0.lanes_lost, 1, "{label}");
+        assert_eq!(got.0.forfeited_steps, 2, "{label}");
+        assert_eq!(
+            got.0.steps + got.0.forfeited_steps,
+            6,
+            "{label}: every scheduled step stepped or forfeited"
+        );
+    }
+
+    // The fault layer uninstalled cleanly: a fresh fault-free fleet run
+    // replays the full 6-step trajectory again (nothing leaked).
+    let clean = run_fleet(&pipe, &spec, 3).unwrap();
+    assert_eq!(clean.0.steps, 6);
+    assert_eq!(clean.0.lanes_lost, 0);
+    assert_eq!(clean.0.forfeited_steps, 0);
+}
+
+#[test]
+fn losing_every_lane_is_a_typed_error() {
+    quiet_injected_panics();
+    let (pipe, spec) = fixture();
+
+    // Consumer-side: every lane's consumer dies on first handoff.
+    let guard = FaultPlan::new(campaign_base())
+        .always(fsite::LANE_LOSS, PERMANENT)
+        .install();
+    let err = run_fleet(&pipe, &spec, 2).unwrap_err();
+    drop(guard);
+    match err {
+        EtlError::LaneLost { survivors, .. } => assert_eq!(survivors, 0),
+        other => panic!("expected LaneLost with no survivors, got {other}"),
+    }
+
+    // Producer-side: every lane's DMA engine hard-fails past its retry
+    // budget — same terminal outcome through a different failure domain.
+    let guard = FaultPlan::new(campaign_base())
+        .always(fsite::DMA, PERMANENT)
+        .install();
+    let err = run_fleet(&pipe, &spec, 2).unwrap_err();
+    drop(guard);
+    match err {
+        EtlError::LaneLost { survivors, .. } => assert_eq!(survivors, 0),
+        other => panic!("expected LaneLost with no survivors, got {other}"),
+    }
+
+    // Single-device DMA loss has no lane to absorb it: the typed fault
+    // surfaces directly.
+    let guard = FaultPlan::new(campaign_base())
+        .always(fsite::DMA, PERMANENT)
+        .install();
+    let err = run_fleet(&pipe, &spec, 1).unwrap_err();
+    drop(guard);
+    assert!(err.is_fault(), "single-device DMA loss is a typed fault: {err}");
+}
+
+#[test]
+fn installed_but_empty_plan_changes_nothing() {
+    // The injection layer itself must be invisible when its rules never
+    // fire: an installed empty plan replays the fault-free trajectory
+    // bitwise with every counter at zero.
+    let (pipe, spec) = fixture();
+    let reference = run_fleet(&pipe, &spec, 2).unwrap();
+    let guard = FaultPlan::new(campaign_base()).install();
+    let got = run_fleet(&pipe, &spec, 2).unwrap();
+    let injected = fault::injected_count();
+    drop(guard);
+    assert_same_trajectory("empty plan", &got, &reference);
+    assert_eq!(injected, 0);
+    assert_eq!(got.0.retried_transfers, 0);
+    assert_eq!(got.0.lanes_lost, 0);
+    assert_eq!(got.0.forfeited_steps, 0);
+}

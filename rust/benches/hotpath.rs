@@ -34,6 +34,7 @@ fn write_json(
     zero_copy: &[(String, f64)],
     multi_device: &[(usize, f64, f64)],
     concurrent_consumers: &[(usize, f64, f64)],
+    embedding_cache: &[(usize, f64, f64)],
     fault_overhead: &[(String, f64)],
 ) {
     let mut s = String::new();
@@ -80,6 +81,13 @@ fn write_json(
         s.push_str(&format!(
             "    {{\"lanes\": {lanes}, \"agg_shards_per_s\": {shards_per_s:.2}, \"speedup_vs_1\": {speedup:.3}}}{}\n",
             if i + 1 < concurrent_consumers.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"embedding_cache\": [\n");
+    for (i, (lookahead, hit_rate, shards_per_s)) in embedding_cache.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"lookahead\": {lookahead}, \"hit_rate\": {hit_rate:.4}, \"agg_shards_per_s\": {shards_per_s:.2}}}{}\n",
+            if i + 1 < embedding_cache.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n  \"fault_overhead\": [\n");
@@ -528,6 +536,62 @@ fn main() {
         concurrent_consumers[2].2,
     ));
 
+    // ---- embedding-cache: the sharded embedding table's hot tier inside
+    // the live train loop (devices = 2, round-robin). Lookahead 0 commits
+    // each batch's rows on the consumer clock — every demand miss pays its
+    // promotion latency in `prefetch_wait_s` — while deeper windows hide
+    // that latency behind the pack+DMA of the following shards. Hit rate
+    // is a cache property (placement is deterministic, so it does not
+    // move with lookahead); shards/s and wait time are what the window
+    // buys.
+    let emb_cache_rows = 2048usize;
+    let mut embedding_cache: Vec<(usize, f64, f64)> = Vec::new();
+    println!(
+        "\nembedding-cache (sharded table, 2 devices, {emb_cache_rows}-row hot tier):"
+    );
+    for lookahead in [0usize, 2, 8] {
+        let mk_cfg = || piperec::coordinator::TrainConfig {
+            max_steps: usize::MAX / 2,
+            loss_every: usize::MAX / 2,
+            staging_buffers: 2,
+            seed: 11,
+            ingest: IngestConfig {
+                workers: ingest_workers,
+                channel_depth: 2,
+                policy: DeliveryPolicy::InOrder,
+                ..IngestConfig::default()
+            },
+            devices: 2,
+            route: piperec::coordinator::RoutePolicy::RoundRobin,
+            allreduce_every: 0,
+            embedding: Some(piperec::runtime::embedding::EmbeddingConfig {
+                cache_rows: emb_cache_rows,
+                lookahead,
+                ..piperec::runtime::embedding::EmbeddingConfig::default()
+            }),
+            ..piperec::coordinator::TrainConfig::default()
+        };
+        // One instrumented run for the cache counters…
+        let mut trainer = piperec::runtime::Trainer::from_meta(cc_meta.clone(), 7);
+        let report = piperec::coordinator::train(&cpipe, &ospec, &mut trainer, &mk_cfg()).unwrap();
+        let lookups = report.cache_hits + report.cache_misses;
+        let hit_rate =
+            if lookups > 0 { report.cache_hits as f64 / lookups as f64 } else { 0.0 };
+        // …then the timed loop.
+        let eb = bench(1, iters, || {
+            let mut trainer = piperec::runtime::Trainer::from_meta(cc_meta.clone(), 7);
+            let r = piperec::coordinator::train(&cpipe, &ospec, &mut trainer, &mk_cfg()).unwrap();
+            std::hint::black_box(r.steps);
+        });
+        let agg = ospec.shards as f64 / eb.min;
+        println!(
+            "  lookahead {lookahead}: {:.1}% hit rate, {agg:.1} shards/s, {:.2} ms prefetch wait",
+            hit_rate * 100.0,
+            report.prefetch_wait_s * 1e3,
+        );
+        embedding_cache.push((lookahead, hit_rate, agg));
+    }
+
     // ---- fault-injection probe overhead: the chaos layer
     // (`util::fault`, exercised by rust/tests/prop_faults.rs) probes the
     // shard-read, DMA-submit and lane hot paths on every attempt, so its
@@ -572,6 +636,7 @@ fn main() {
         &zero_copy,
         &multi_device,
         &concurrent_consumers,
+        &embedding_cache,
         &fault_overhead,
     );
 }

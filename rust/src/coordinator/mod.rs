@@ -31,6 +31,7 @@
 //! | `WORKER_DEATH` | ingest worker thread panic | positive death signal (`catch_unwind` → `Died` token, never a hang), bounded respawn, then quarantine or [`crate::error::EtlError::WorkerDied`] | [`crate::dataio::ingest::IngestReport::worker_deaths`] |
 //! | `DMA` | a device transfer attempt ([`crate::devmem::TransferEngine`]) | per-transfer re-issue on the same engine clock (failed attempts still occupy the wire), per-transfer timeout cut, up to [`crate::devmem::TransferConfig::max_retries`]; past budget → [`crate::error::EtlError::Fault`], which on a multi-device fleet demotes to a lane loss | [`TrainReport::retried_transfers`] / [`TrainReport::failed_transfers`] |
 //! | `LANE_LOSS` | a device consumer mid-run | lane drains: consumer leaves the reduce group ([`ReduceBus::leave`]), queued step ranges are tombstoned ([`ReduceBus::forfeit`]) so epochs still resolve, the router re-routes remaining shards to survivors; no survivor → [`crate::error::EtlError::LaneLost`] | [`TrainReport::lanes_lost`] / [`TrainReport::forfeited_steps`] |
+//! | `PREFETCH` | an embedding-cache promotion transfer ([`crate::runtime::embedding::EmbShardCache::promote`]) | bounded re-issue on the lane's promotion clock (each failed attempt burns the wire time); past budget the batch is abandoned — rows stay cold and surface as later demand misses, never as corrupt lookups; a dead *owner* lane re-homes its rows from the host cold tier | [`crate::runtime::embedding::EmbCacheStats::retried_prefetches`] / `failed_prefetches` / `rehomed_rows` |
 //!
 //! Cross-cutting guarantees: a fault-free run is bit-identical with the
 //! fault layer compiled in (injection disabled is a branch on a relaxed
@@ -50,8 +51,8 @@ pub mod train_loop;
 pub use packer::{pack, PackLayout, PackedBatch, PackedBatchView};
 pub use scheduler::{
     cpu_gpu_config, piperec_config, simulate_overlap, utilization_trace, DeviceRouter,
-    EpochContrib, EpochWait, LoadTracker, OverlapConfig, OverlapResult, ReduceBus, ReducedEpoch,
-    RoutePolicy,
+    EpochContrib, EpochWait, LoadTracker, OverlapConfig, OverlapResult, PrefetchPipeline,
+    ReduceBus, ReducedEpoch, RoutePolicy,
 };
 pub use online::{classify_psi, DriftDetector, DriftVerdict, FreshnessTracker, OnlineVocab};
 pub use sharding::{provision, route, ShardingPlan};

@@ -23,11 +23,11 @@ use crate::etl::ops::vocab::VocabTable;
 pub struct OnlineVocab {
     table: VocabTable,
     capacity: usize,
-    /// Tokens admitted since construction.
+    /// Tokens admitted since the last [`reset_stats`](Self::reset_stats).
     pub admitted: u64,
-    /// Lookups that hit an existing entry.
+    /// Lookups that hit an existing entry since the last reset.
     pub hits: u64,
-    /// Lookups rejected to OOV because the table is full.
+    /// Lookups rejected to OOV (table full) since the last reset.
     pub oov: u64,
 }
 
@@ -75,6 +75,26 @@ impl OnlineVocab {
 
     pub fn is_empty(&self) -> bool {
         self.table.is_empty()
+    }
+
+    /// Zero the admission/hit/OOV counters without touching the table
+    /// contents. Call this at each fit-round boundary: the counters are a
+    /// *windowed* hotness signal (rates since the last reset), not lifetime
+    /// totals — the embedding prefetcher and the table-sizing control plane
+    /// both read per-round rates, and lifetime counters would dilute a hot
+    /// recent window under a long cold history.
+    pub fn reset_stats(&mut self) {
+        self.admitted = 0;
+        self.hits = 0;
+        self.oov = 0;
+    }
+
+    /// Tokens currently admitted, in first-appearance order — the hotness
+    /// ranking used to seed the embedding hot cache (earliest-admitted
+    /// tokens are the head of the popularity distribution under the
+    /// first-appearance admission policy).
+    pub fn hot_tokens(&self) -> &[i64] {
+        self.table.keys_in_order()
     }
 
     /// Fraction of recent lookups that fell to OOV — the control-plane
@@ -236,6 +256,40 @@ mod tests {
         assert_eq!(v.map(77), 0);
         let frozen = v.freeze();
         assert_eq!(frozen.keys_in_order(), &[77, 33]);
+    }
+
+    #[test]
+    fn reset_stats_pins_windowed_hotness_semantics() {
+        let mut v = OnlineVocab::new(2);
+        // Round 1: two admissions, one hit, two OOVs → oov_rate 2/5.
+        for t in [1, 2, 1, 3, 4] {
+            v.map(t);
+        }
+        assert_eq!((v.admitted, v.hits, v.oov), (2, 1, 2));
+        assert!((v.oov_rate() - 0.4).abs() < 1e-12);
+
+        // Round boundary: the stats window closes, the table survives.
+        v.reset_stats();
+        assert_eq!((v.admitted, v.hits, v.oov), (0, 0, 0));
+        assert_eq!(v.oov_rate(), 0.0);
+        assert_eq!(v.len(), 2, "reset must not evict admitted tokens");
+        assert_eq!(v.hot_tokens(), &[1, 2]);
+
+        // Round 2: all in-vocab traffic → windowed oov_rate is 0, not the
+        // lifetime 2/9 a non-reset counter would report.
+        for t in [1, 2, 1, 2] {
+            v.map(t);
+        }
+        assert_eq!((v.admitted, v.hits, v.oov), (0, 4, 0));
+        assert_eq!(v.oov_rate(), 0.0);
+
+        // Round 3: pure-OOV traffic is visible at full strength in its own
+        // window (lifetime counters would report 3/12 instead of 1.0).
+        v.reset_stats();
+        for t in [7, 8, 9] {
+            v.map(t);
+        }
+        assert_eq!(v.oov_rate(), 1.0);
     }
 
     #[test]

@@ -332,6 +332,83 @@ impl DeviceRouter {
     }
 }
 
+/// Lookahead-driven embedding prefetcher of one device lane (BagPipe's
+/// core idea on our topology): the router stamps and routes every shard
+/// **before** its consumer runs, so by the time slot `k` is committed the
+/// lane's pack worker has already staged — and prefetched for — slots
+/// `k+1 … k+lookahead`. The pipeline is a sliding window of that depth:
+///
+/// * [`on_packed`](Self::on_packed) — called by the pack worker right
+///   after staging a slot: extracts the embedding-row trace from the
+///   packed sparse ids, issues the promotion batch at the slot's
+///   stage-completion time (when `lookahead > 0`), and pushes the slot
+///   into the window. Once the window exceeds the lookahead depth the
+///   oldest slot is committed (hit/miss walk) with the *current* stage
+///   clock as the consumer clock — the pipelined overlap that hides
+///   promotion latency.
+/// * [`flush`](Self::flush) — lane drain: commits whatever the window
+///   still holds.
+///
+/// With `lookahead = 0` every slot commits immediately and all promotion
+/// traffic is demand misses with fully exposed transfer time. Owned by a
+/// single lane thread; all state advances in delivery order, so the
+/// cache accounting is schedule-independent (see
+/// `runtime::embedding`'s determinism notes).
+#[derive(Debug)]
+pub struct PrefetchPipeline {
+    cache: crate::runtime::embedding::EmbShardCache,
+    lookahead: usize,
+    /// Staged-but-uncommitted slots: (row trace, prefetch done time).
+    window: std::collections::VecDeque<(Vec<u32>, f64)>,
+}
+
+impl PrefetchPipeline {
+    pub fn new(cache: crate::runtime::embedding::EmbShardCache, lookahead: usize) -> PrefetchPipeline {
+        PrefetchPipeline { cache, lookahead, window: std::collections::VecDeque::new() }
+    }
+
+    /// The shard cache being driven (tests / introspection).
+    pub fn cache(&self) -> &crate::runtime::embedding::EmbShardCache {
+        &self.cache
+    }
+
+    /// Account a freshly staged slot: `sparse`/`rows` are the packed
+    /// batch's sparse ids and the number of rows the consumer will
+    /// actually step (full chunks within the step budget), `stage_done_s`
+    /// the slot's DMA completion on this lane's engine clock.
+    pub fn on_packed<F: Fn(usize) -> bool>(
+        &mut self,
+        sparse: &[i32],
+        rows: usize,
+        stage_done_s: f64,
+        alive: &F,
+    ) {
+        let trace = self.cache.table().trace(sparse, rows);
+        let pf_done = if self.lookahead > 0 {
+            self.cache.promote(&trace, stage_done_s, alive)
+        } else {
+            stage_done_s
+        };
+        self.window.push_back((trace, pf_done));
+        while self.window.len() > self.lookahead {
+            let (trace, pf_done) = self.window.pop_front().expect("window non-empty");
+            self.cache.commit(&trace, pf_done, stage_done_s, alive);
+        }
+    }
+
+    /// Drain the window at lane end (consumer clock `now_s`).
+    pub fn flush<F: Fn(usize) -> bool>(&mut self, now_s: f64, alive: &F) {
+        while let Some((trace, pf_done)) = self.window.pop_front() {
+            self.cache.commit(&trace, pf_done, now_s, alive);
+        }
+    }
+
+    /// Final per-lane cache stats.
+    pub fn into_stats(self) -> crate::runtime::embedding::EmbCacheStats {
+        self.cache.into_stats()
+    }
+}
+
 /// One device's contribution to a resolved reduce epoch: the
 /// gradient-level payloads of the local-SGD steps it executed inside the
 /// epoch's window, in its local (ascending global step) order.
@@ -932,6 +1009,81 @@ mod tests {
         assert_eq!(t.snapshot(), vec![30, 0, 20, 0]);
         assert_eq!(r.route(5), 1, "tie {{1, 3}} must break to device 1");
         assert_eq!(r.route(1), 3, "device 3 is now the unique minimum");
+    }
+
+    fn pipeline(lookahead: usize, cache_rows: usize) -> PrefetchPipeline {
+        use crate::devmem::{ArenaConfig, DeviceArena};
+        use crate::runtime::artifacts::{ModelMeta, ParamSpec};
+        use crate::runtime::embedding::{EmbShardCache, EmbeddingTable, ShardPolicy};
+        let meta = ModelMeta {
+            batch: 2,
+            n_dense: 1,
+            n_sparse: 1,
+            vocab: 8,
+            embed_dim: 1,
+            params: vec![
+                ParamSpec { name: "emb".into(), dims: vec![8] },
+                ParamSpec { name: "w1".into(), dims: vec![1] },
+                ParamSpec { name: "b1".into(), dims: vec![1] },
+            ],
+            extra: Default::default(),
+        };
+        let table = EmbeddingTable::from_meta(&meta, 1, ShardPolicy::HashMod).unwrap();
+        let arena = DeviceArena::new(ArenaConfig { slots: 2, slot_bytes: 1 << 16 });
+        let region = arena.reserve_cache(cache_rows as u64 * table.row_bytes()).unwrap();
+        PrefetchPipeline::new(EmbShardCache::new(table, cache_rows, region).unwrap(), lookahead)
+    }
+
+    #[test]
+    fn prefetch_pipeline_hides_promotion_behind_lookahead() {
+        // Full-size cache, lookahead 1: slot k's rows are promoted when
+        // slot k is staged but committed one slot later — zero misses
+        // after the pipeline fills, zero exposed wait once the stage
+        // clock outruns the promotion clock.
+        let alive = |_: usize| true;
+        let mut pf = pipeline(1, 8);
+        for k in 0..6i32 {
+            let sparse = vec![k % 4, (k + 1) % 4];
+            pf.on_packed(&sparse, 2, 1.0 + k as f64, &alive);
+        }
+        pf.flush(10.0, &alive);
+        let st = pf.into_stats();
+        assert_eq!(st.lookups, 12);
+        assert_eq!(st.misses, 0, "{st:?}");
+        assert_eq!(st.hits, 12);
+        assert_eq!(st.prefetch_wait_s, 0.0, "lookahead must hide the transfers");
+    }
+
+    #[test]
+    fn prefetch_pipeline_lookahead_zero_exposes_demand_misses() {
+        let alive = |_: usize| true;
+        let mut pf = pipeline(0, 8);
+        pf.on_packed(&[0, 1], 2, 1.0, &alive);
+        pf.on_packed(&[0, 1], 2, 2.0, &alive);
+        pf.flush(3.0, &alive);
+        let st = pf.into_stats();
+        assert_eq!(st.lookups, 4);
+        assert_eq!(st.misses, 2, "first touches demand-miss at lookahead 0");
+        assert_eq!(st.hits, 2, "second slot hits the warmed rows");
+        assert!(st.prefetch_wait_s > 0.0, "demand transfer time is exposed");
+    }
+
+    #[test]
+    fn prefetch_pipeline_flush_commits_every_staged_slot() {
+        // Exactly-once accounting survives a drain with a deep window.
+        let alive = |_: usize| true;
+        let mut pf = pipeline(8, 4);
+        for k in 0..5i32 {
+            pf.on_packed(&[k % 8, (k + 2) % 8], 2, k as f64, &alive);
+        }
+        // Nothing committed yet: window (5) never exceeded lookahead (8),
+        // but prefetches landed (bounded by the 4-row capacity).
+        assert!(pf.cache().resident_rows() > 0 && pf.cache().resident_rows() <= 4);
+        pf.flush(5.0, &alive);
+        let st = pf.into_stats();
+        assert_eq!(st.lookups, 10);
+        assert_eq!(st.hits + st.misses, st.lookups);
+        assert_eq!(st.promoted_bytes, st.demoted_bytes + st.resident_bytes);
     }
 
     fn grad(loss: f64) -> crate::runtime::GradStep {

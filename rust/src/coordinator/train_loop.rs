@@ -95,6 +95,27 @@
 //! [`TrainReport::per_device`] breaks transfer-wait, DMA, staged bytes,
 //! steps, train-busy and reduce-wait down per device.
 //!
+//! # Sharded embedding tables (model parallelism)
+//!
+//! [`TrainConfig::embedding`] layers the sharded embedding cache of
+//! [`crate::runtime::embedding`] over the routed fleet: the trainer's
+//! embedding pool is hash-sharded across the devices, each lane pins a
+//! bounded hot set in its arena ([`crate::devmem::DeviceArena::reserve_cache`])
+//! and spills the rest to the simulated host cold tier. The lane's pack
+//! worker drives a [`crate::coordinator::scheduler::PrefetchPipeline`]:
+//! right after staging a slot it promotes that slot's embedding rows, and
+//! commits the hit/miss walk `lookahead` slots later — the router's
+//! head-start is what hides the promotion latency. Sparse embedding
+//! gradients ride the existing [`ReduceBus`] epochs (every step's f64
+//! gradient image already carries the touched embedding slots); rows owned
+//! by peer shards charge [`TrainReport::exchange_bytes`] both for the row
+//! fetch and the gradient routed back. Because the authoritative values
+//! stay in each replica's flat state, enabling the cache **never changes
+//! the training arithmetic** — `rust/tests/prop_embedding.rs` pins the
+//! cached run bitwise identical to the uncached reference across device
+//! counts × cache sizes × lookahead depths, including tables that exceed
+//! any single arena's budget (the memory wall the layer exists for).
+//!
 //! # Failure domains (lane loss)
 //!
 //! On the multi-device path a device lane can be **lost mid-run** — an
@@ -179,6 +200,13 @@ pub struct TrainConfig {
     /// larger periods run local SGD between syncs; 0 syncs only at stream
     /// end.
     pub allreduce_every: usize,
+    /// Sharded embedding-table layer (model parallelism; arena path
+    /// only). `Some` shards the trainer's embedding pool across the
+    /// device fleet with a lookahead-prefetched hot/cold cache per lane
+    /// (see [`crate::runtime::embedding`]); the cached execution stays
+    /// bitwise identical to the uncached reference. `None` (default)
+    /// keeps the whole pool implicit in each replica's flat state.
+    pub embedding: Option<crate::runtime::embedding::EmbeddingConfig>,
 }
 
 impl Default for TrainConfig {
@@ -195,6 +223,7 @@ impl Default for TrainConfig {
             devices: 1,
             route: RoutePolicy::RoundRobin,
             allreduce_every: 1,
+            embedding: None,
         }
     }
 }
@@ -295,6 +324,21 @@ pub struct TrainReport {
     /// Scheduled global steps forfeited by lost lanes (tombstoned in the
     /// reduce bus so epochs still resolved); 0 on a fault-free run.
     pub forfeited_steps: u64,
+    /// Embedding lookups served from the hot caches (summed across
+    /// lanes; 0 when [`TrainConfig::embedding`] is `None`).
+    pub cache_hits: u64,
+    /// Embedding lookups that demand-promoted from the cold tier.
+    pub cache_misses: u64,
+    /// Cross-device embedding traffic: peer-owned row fetches over the
+    /// P2P fabric plus embedding-row gradients routed to their owning
+    /// shard.
+    pub exchange_bytes: u64,
+    /// Simulated consumer seconds exposed waiting on embedding
+    /// promotions (0 when every prefetch completed in time).
+    pub prefetch_wait_s: f64,
+    /// Per-lane embedding-cache breakdowns, in device order (empty when
+    /// the embedding layer is disabled).
+    pub emb: Vec<crate::runtime::embedding::EmbCacheStats>,
 }
 
 impl TrainReport {
@@ -326,7 +370,17 @@ pub fn run(
             "multi-device training requires DataPath::Arena (per-device staging regions)"
                 .into(),
         )),
-        (DataPath::Arena, d) if d > 1 => run_multi(pipeline, spec, trainer, cfg),
+        (DataPath::Channel, _) if cfg.embedding.is_some() => Err(EtlError::Coord(
+            "the sharded embedding layer requires DataPath::Arena (its hot tier is pinned \
+             in the device arena)"
+                .into(),
+        )),
+        // The embedding layer rides the routed-fleet topology even at
+        // devices = 1 (one lane, one shard) — pinned bitwise identical to
+        // the plain arena path by the reproducibility matrix.
+        (DataPath::Arena, d) if d > 1 || cfg.embedding.is_some() => {
+            run_multi(pipeline, spec, trainer, cfg)
+        }
         (DataPath::Arena, _) => run_arena(pipeline, spec, trainer, cfg),
         (DataPath::Channel, _) => run_channel(pipeline, spec, trainer, cfg),
     }
@@ -528,6 +582,11 @@ fn run_arena(
         retried_transfers: dma_retried,
         failed_transfers: dma_failed,
         forfeited_steps: 0,
+        cache_hits: 0,
+        cache_misses: 0,
+        exchange_bytes: 0,
+        prefetch_wait_s: 0.0,
+        emb: Vec::new(),
     })
 }
 
@@ -559,6 +618,9 @@ struct LaneOut {
     dma_bytes: u64,
     dma_retried: u64,
     dma_failed: u64,
+    /// This lane's embedding-cache observables (None when the embedding
+    /// layer is disabled).
+    emb: Option<crate::runtime::embedding::EmbCacheStats>,
 }
 
 /// One executed step's record kept by a consumer thread: merged across
@@ -661,6 +723,34 @@ fn run_multi(
     let tracker = router.tracker();
     let bus = ReduceBus::new(devices, cfg.allreduce_every, steps_at_start);
 
+    // Sharded embedding layer: one shard cache per lane, its hot tier
+    // pinned in that lane's arena (the reservation errors if the hot set
+    // cannot fit the device's memory budget — shrink `cache_rows`), its
+    // prefetcher driven by the lane's own delivery order. Built before
+    // the fleet spawns so a sizing error fails the run cleanly.
+    let prefetchers: Vec<Option<crate::coordinator::scheduler::PrefetchPipeline>> =
+        match &cfg.embedding {
+            Some(ecfg) => {
+                use crate::runtime::embedding::{EmbShardCache, EmbeddingTable};
+                let table = EmbeddingTable::from_meta(&trainer.meta, devices, ecfg.policy)?;
+                let cache_rows = ecfg.cache_rows.min(table.rows()).max(1);
+                (0..devices)
+                    .map(|d| {
+                        let region = arenas
+                            .device(d)
+                            .reserve_cache(cache_rows as u64 * table.row_bytes())?;
+                        let mut cache = EmbShardCache::new(table.clone(), cache_rows, region)?;
+                        cache.seed(&ecfg.hot_seed, &|_| true);
+                        Ok(Some(crate::coordinator::scheduler::PrefetchPipeline::new(
+                            cache,
+                            ecfg.lookahead,
+                        )))
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => (0..devices).map(|_| None).collect(),
+        };
+
     // Per-device raw-shard lanes into the pack workers (depth 1: the
     // router hands a lane its next shard while it packs the current one).
     let mut shard_txs = Vec::with_capacity(devices);
@@ -725,10 +815,11 @@ fn run_multi(
         // engine clock and blocking only on its own arena's credits.
         let dma_engines = TransferSet::new(devices, cfg.transfer.clone()).into_engines();
         let mut workers = Vec::with_capacity(devices);
-        for (d, ((rx, queue), mut dma)) in shard_rxs
+        for (d, (((rx, queue), mut dma), mut prefetch)) in shard_rxs
             .into_iter()
             .zip(slot_queues)
             .zip(dma_engines)
+            .zip(prefetchers)
             .enumerate()
         {
             let recycle_tx = recycle_tx.clone();
@@ -740,6 +831,7 @@ fn run_multi(
                 let mut out = LaneOut::default();
                 let mut failure: Option<EtlError> = None;
                 let mut dead = false;
+                let mut last_stage_s = 0.0f64;
                 while let Ok((start_rel, shard)) = rx.recv() {
                     let raw_bytes = shard.total_bytes() as u64;
                     // Same formula the router stamped the schedule with;
@@ -782,7 +874,27 @@ fn run_multi(
                     // costs the lane, not the fleet: forfeit this slot's
                     // steps, return its credit, and fall into drain mode.
                     match dma.submit(out.sim_s, slot.packed_bytes()) {
-                        Ok(_) => {}
+                        Ok(rec) => {
+                            // Prefetch planning: the router saw this shard
+                            // before its consumer will, so the lane can
+                            // promote the slot's embedding rows `lookahead`
+                            // slots ahead of its commit. Only the chunks
+                            // the consumer will actually step are traced;
+                            // a lane whose consumer died forfeits its
+                            // slots, so planning stops with it.
+                            if let Some(pf) = prefetch.as_mut() {
+                                let stepped = chunks.min(cap_rel.saturating_sub(start_rel));
+                                if stepped > 0 && lane_alive[d].load(Ordering::SeqCst) {
+                                    pf.on_packed(
+                                        &slot.batch().sparse,
+                                        stepped as usize * step_rows,
+                                        rec.done_s,
+                                        &|o: usize| lane_alive[o].load(Ordering::SeqCst),
+                                    );
+                                }
+                                last_stage_s = rec.done_s;
+                            }
+                        }
                         Err(e) if e.is_fault() => {
                             if lane_alive[d].swap(false, Ordering::SeqCst) {
                                 lanes_lost.fetch_add(1, Ordering::SeqCst);
@@ -814,6 +926,14 @@ fn run_multi(
                 out.dma_bytes = dma.total_bytes();
                 out.dma_retried = dma.retried_transfers();
                 out.dma_failed = dma.failed_transfers();
+                if let Some(mut pf) = prefetch.take() {
+                    // Drain the lookahead window: every slot that was
+                    // prefetch-planned commits exactly once, so the
+                    // hit/miss ledger covers every lookup the consumer
+                    // performed (exactly-once accounting).
+                    pf.flush(last_stage_s, &|o: usize| lane_alive[o].load(Ordering::SeqCst));
+                    out.emb = Some(pf.into_stats());
+                }
                 match failure {
                     Some(e) => {
                         // Unblock peers waiting on this lane's steps.
@@ -1152,6 +1272,10 @@ fn run_multi(
         })
         .collect();
     let wall_s = t0.elapsed().as_secs_f64();
+    // Per-lane cache stats roll up into the fleet-level counters; the
+    // per-shard vector keeps device attribution for the bench/report.
+    let emb: Vec<crate::runtime::embedding::EmbCacheStats> =
+        lanes.iter().filter_map(|l| l.emb).collect();
     Ok(TrainReport {
         steps: steps_at_start + total_steps,
         losses,
@@ -1177,6 +1301,11 @@ fn run_multi(
         retried_transfers: lanes.iter().map(|l| l.dma_retried).sum(),
         failed_transfers: lanes.iter().map(|l| l.dma_failed).sum(),
         forfeited_steps: bus.forfeited_count(),
+        cache_hits: emb.iter().map(|e| e.hits).sum(),
+        cache_misses: emb.iter().map(|e| e.misses).sum(),
+        exchange_bytes: emb.iter().map(|e| e.exchange_bytes).sum(),
+        prefetch_wait_s: emb.iter().map(|e| e.prefetch_wait_s).sum(),
+        emb,
     })
 }
 
@@ -1328,6 +1457,11 @@ fn run_channel(
         retried_transfers: 0,
         failed_transfers: 0,
         forfeited_steps: 0,
+        cache_hits: 0,
+        cache_misses: 0,
+        exchange_bytes: 0,
+        prefetch_wait_s: 0.0,
+        emb: Vec::new(),
     })
 }
 

@@ -443,6 +443,45 @@ impl DeviceArena {
         let (class, paddr, _cycles) = mmu.translate(vaddr)?;
         Ok((class, paddr))
     }
+
+    /// Carve an additional fixed [`MemClass::Gpu`] region out of this
+    /// device's memory for a resident cache (the embedding hot tier). The
+    /// region is mapped once, lives for the process, and is *not* part of
+    /// the staging credit protocol — it models state pinned in device
+    /// memory alongside the staging slots.
+    ///
+    /// The reservation is bounded by the arena's own footprint
+    /// (`slots * slot_bytes`): the hot tier must not be allowed to grow
+    /// past the device memory the simulation budgets per GPU — that is the
+    /// memory wall the cold tier exists to absorb.
+    pub fn reserve_cache(&self, bytes: u64) -> Result<CacheRegion> {
+        if bytes == 0 {
+            return Err(EtlError::Mem("cache reservation must be positive".into()));
+        }
+        let budget = self.cfg.slots as u64 * self.cfg.slot_bytes;
+        if bytes > budget {
+            return Err(EtlError::Mem(format!(
+                "cache reservation of {bytes} B exceeds device {}'s memory budget \
+                 ({budget} B): shrink cache_rows or oversubscribe into the cold tier",
+                self.device
+            )));
+        }
+        let vaddr = self.mmu.lock().expect("mmu poisoned").map(MemClass::Gpu, bytes, 0);
+        Ok(CacheRegion { vaddr, bytes, device: self.device })
+    }
+}
+
+/// A pinned device-memory region backing a resident cache (see
+/// [`DeviceArena::reserve_cache`]). Plain data: the simulation addresses
+/// cached rows relative to `vaddr` and sizes eviction off `bytes`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheRegion {
+    /// Device virtual address of the region's first byte.
+    pub vaddr: u64,
+    /// Bytes pinned for the cache.
+    pub bytes: u64,
+    /// Simulated GPU the region is resident on.
+    pub device: usize,
 }
 
 /// One staging arena **per simulated GPU**, all regions registered as
@@ -727,6 +766,24 @@ mod tests {
         set.close_all();
         assert!(set.device(0).try_acquire().is_none());
         assert!(set.device(1).try_acquire().is_none());
+    }
+
+    #[test]
+    fn reserve_cache_maps_gpu_region_within_budget() {
+        let a = small_arena(2, 1 << 16);
+        let region = a.reserve_cache(1 << 12).unwrap();
+        assert_eq!(region.bytes, 1 << 12);
+        assert_eq!(region.device, a.device());
+        assert_eq!(a.translate(region.vaddr).unwrap().0, MemClass::Gpu);
+        assert_eq!(a.translate(region.vaddr + region.bytes - 1).unwrap().0, MemClass::Gpu);
+        // The cache region must not alias the staging slots.
+        let slots_end = a.base_vaddr() + 2 * (1 << 16);
+        assert!(region.vaddr >= slots_end || region.vaddr + region.bytes <= a.base_vaddr());
+
+        // Zero-byte and over-budget reservations are rejected.
+        assert!(a.reserve_cache(0).is_err());
+        let err = a.reserve_cache((2 << 16) + 1).unwrap_err();
+        assert!(err.to_string().contains("memory budget"), "{err}");
     }
 
     #[test]

@@ -76,9 +76,21 @@
 //!   ([`ArenaStats::steady_allocs`] stays 0);
 //! * arena-backed delivery is bit-identical to the heap `PackedBatch`
 //!   channel path across worker counts × slot counts × arena sizes.
+//!
+//! # Resident caches (embedding hot tier)
+//!
+//! Beyond the staging slots, an arena can pin an extra fixed
+//! [`CacheRegion`] of its device's memory via
+//! [`DeviceArena::reserve_cache`] — the hot tier of the sharded embedding
+//! cache (`crate::runtime::embedding`). The reservation is bounded by the
+//! device's staging budget, so a table that exceeds it **must**
+//! oversubscribe into the simulated host cold tier, with
+//! promotion/demotion traffic costed against the channel models.
 
 pub mod arena;
 pub mod transfer;
 
-pub use arena::{ArenaConfig, ArenaSet, ArenaStats, DeviceArena, DeviceBatchView, StagingSlot};
+pub use arena::{
+    ArenaConfig, ArenaSet, ArenaStats, CacheRegion, DeviceArena, DeviceBatchView, StagingSlot,
+};
 pub use transfer::{TransferConfig, TransferEngine, TransferRecord, TransferSet};

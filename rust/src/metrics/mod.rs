@@ -179,6 +179,38 @@ impl Counters {
     }
 }
 
+/// Two-sided byte ledger for a tiered cache: every byte promoted into the
+/// hot tier is either later demoted back out or still resident, so
+/// `promoted == demoted + resident` holds at any quiescent point. The
+/// embedding cache (`runtime::embedding`) keeps one per shard and the
+/// property suite asserts the balance after every run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ByteLedger {
+    pub promoted: u64,
+    pub demoted: u64,
+}
+
+impl ByteLedger {
+    pub fn promote(&mut self, bytes: u64) {
+        self.promoted += bytes;
+    }
+
+    pub fn demote(&mut self, bytes: u64) {
+        self.demoted += bytes;
+    }
+
+    /// Bytes currently resident in the hot tier implied by the ledger.
+    pub fn resident(&self) -> u64 {
+        self.promoted - self.demoted
+    }
+
+    /// True iff the ledger accounts exactly for `resident_bytes` of live
+    /// hot-tier state (exactly-once promotion/demotion accounting).
+    pub fn balances(&self, resident_bytes: u64) -> bool {
+        self.promoted == self.demoted + resident_bytes
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -234,6 +266,20 @@ mod tests {
         // Trailing partial window (and window_steps == 0) emit nothing.
         assert!(TimeSeries::from_step_records(&recs[..3], 2).points.len() == 1);
         assert!(TimeSeries::from_step_records(&recs, 0).points.is_empty());
+    }
+
+    #[test]
+    fn byte_ledger_balances_exactly() {
+        let mut l = ByteLedger::default();
+        l.promote(100);
+        l.promote(40);
+        l.demote(60);
+        assert_eq!(l.resident(), 80);
+        assert!(l.balances(80));
+        assert!(!l.balances(79));
+        l.demote(80);
+        assert!(l.balances(0));
+        assert_eq!(l.resident(), 0);
     }
 
     #[test]

@@ -1,0 +1,731 @@
+//! Sharded embedding tables with a hot/cold memory hierarchy — the DLRM
+//! memory wall (ROADMAP item 1; BagPipe, and the heterogeneous
+//! acceleration pipeline of Adnan et al. in PAPERS.md).
+//!
+//! Production recommender models are dominated by embedding tables that
+//! exceed any single device's memory. This module adds **model
+//! parallelism alongside the existing data parallelism**: the embedding
+//! pool's rows are sharded across the device fleet by a [`ShardPolicy`],
+//! and each lane keeps only a bounded **hot cache** of rows resident in
+//! its [`DeviceArena`](crate::devmem::DeviceArena) (a pinned
+//! [`CacheRegion`]), spilling everything else to a simulated **host cold
+//! tier**. Promotion/demotion traffic is costed against the calibrated
+//! channel models — first-touch promotions stream from SSD, re-promotions
+//! come from host memory, peer-owned rows cross the P2P fabric, and
+//! evictions write back to host.
+//!
+//! ```text
+//!                 row ownership (ShardPolicy::HashMod, 3 devices)
+//!   flat emb pool  [ r0 r1 r2 r3 r4 r5 r6 r7 ... ]
+//!                     │  │  │  │  │  │  │  │
+//!                    d2 d0 d1 d0 d2 d1 d0 d2      owner = mix64(row) % devices
+//!
+//!          device d's view of its shard
+//!   ┌───────────────────────────── device d ────────────────────────────┐
+//!   │  hot cache (CacheRegion in the DeviceArena, ≤ cache_rows rows)    │
+//!   │  [ r3 r6 r1 ... ]   LRU; ByteLedger: promoted = demoted+resident  │
+//!   └───────▲────────────────────────────┬────────────────────────────--┘
+//!      promote (SsdRead first touch,     │ demote on eviction
+//!      P2pToGpu re-promote / peer row)   ▼ (HostDmaWrite)
+//!   ┌────────────────────── simulated host cold tier ──────────────────┐
+//!   │            every row not currently resident on a device          │
+//!   └──────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! # Prefetch timeline vs consumer timeline
+//!
+//! The router stamps and routes every shard **before** its consumer runs,
+//! so the producer side of a lane sees each batch's categorical-id set
+//! `lookahead` shards early (BagPipe's core observation). The lane's pack
+//! worker extracts the id trace from the packed batch it just staged and
+//! issues the promotion batch immediately; the commit (hit/miss walk) of
+//! a slot happens `lookahead` slots later, by which time the prefetch has
+//! usually completed and the consumer observes zero wait:
+//!
+//! ```text
+//!   producer:  stage k     stage k+1    stage k+2    stage k+3
+//!              prefetch k  prefetch k+1 prefetch k+2 prefetch k+3
+//!   consumer:                           commit k     commit k+1   (lookahead=2)
+//!                                       wait = max(0, pf_done(k) − now)
+//! ```
+//!
+//! With `lookahead = 0` every miss is a demand fetch whose transfer time
+//! is fully exposed to the consumer (`prefetch_wait_s`).
+//!
+//! # Determinism
+//!
+//! The authoritative embedding **values** stay in each replica's flat
+//! `f32` state — the cache is a deterministic placement/cost simulation
+//! (hit/miss counters, byte ledgers, simulated clocks) layered over the
+//! unchanged training arithmetic. That is what makes the cached, sharded
+//! execution **bitwise identical** to the uncached reference across every
+//! device count × cache size × lookahead depth
+//! (`rust/tests/prop_embedding.rs`), exactly like the rest of the
+//! simulation (channel models cost the zero-copy path without perturbing
+//! it). Cache state is per-lane and advanced only by that lane's pack
+//! worker in delivery order, so hit/miss accounting is
+//! schedule-independent too.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::coordinator::online::OnlineVocab;
+use crate::devmem::CacheRegion;
+use crate::error::{EtlError, Result};
+use crate::etl::ops::kernels::mix64;
+use crate::memsys::{ChannelModel, Path};
+use crate::metrics::ByteLedger;
+use crate::runtime::artifacts::ModelMeta;
+use crate::util::fault::{self, site as fsite};
+
+/// Wire bytes per embedding-row gradient shipped to the owning shard
+/// (u32 row id + f64 gradient).
+pub const GRAD_WIRE_BYTES: u64 = 12;
+
+/// Bounded retry budget for a faulted prefetch transfer (mirrors the DMA
+/// engine's transient-retry ladder).
+const PREFETCH_MAX_ATTEMPTS: u32 = 4;
+
+/// How embedding rows are assigned an owning device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// `owner = mix64(row) % devices` — load-balanced, the default.
+    HashMod,
+    /// Contiguous row blocks: device `d` owns rows
+    /// `[d*ceil(rows/devices), (d+1)*ceil(rows/devices))`.
+    Block,
+}
+
+/// Knobs of the sharded embedding layer, carried on
+/// [`TrainConfig`](crate::coordinator::train_loop::TrainConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EmbeddingConfig {
+    /// Hot rows resident per device (clamped to `[1, table rows]`;
+    /// the byte reservation must fit the arena's memory budget).
+    pub cache_rows: usize,
+    /// Shards of router lookahead between prefetch issue and commit.
+    pub lookahead: usize,
+    /// Row → owning-device assignment.
+    pub policy: ShardPolicy,
+    /// Rows to pre-promote before the first batch (typically from
+    /// [`hot_rows_from_vocab`] — `OnlineVocab`'s admission order is the
+    /// hotness signal).
+    pub hot_seed: Vec<u32>,
+}
+
+impl Default for EmbeddingConfig {
+    fn default() -> Self {
+        EmbeddingConfig {
+            cache_rows: 4096,
+            lookahead: 2,
+            policy: ShardPolicy::HashMod,
+            hot_seed: Vec::new(),
+        }
+    }
+}
+
+/// The sharded embedding table's *geometry*: how many rows exist, how
+/// wide each row is on the wire, and which device owns each row. The row
+/// values themselves stay in the trainer's flat state (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EmbeddingTable {
+    rows: usize,
+    row_bytes: u64,
+    devices: usize,
+    policy: ShardPolicy,
+    vocab: usize,
+    n_sparse: usize,
+}
+
+impl EmbeddingTable {
+    /// Derive the table from artifact metadata: one row per flat
+    /// embedding-pool slot (`param_count - n_dense - 1`), each modeled at
+    /// the artifact's `embed_dim × f32` wire width (what a production
+    /// DLRM actually moves per lookup).
+    pub fn from_meta(meta: &ModelMeta, devices: usize, policy: ShardPolicy) -> Result<EmbeddingTable> {
+        if devices == 0 {
+            return Err(EtlError::Runtime("embedding table needs at least one device".into()));
+        }
+        let p = meta.param_count();
+        let nd = meta.n_dense;
+        if p < nd + 2 {
+            return Err(EtlError::Runtime(
+                "artifact has no embedding pool: nothing to shard".into(),
+            ));
+        }
+        Ok(EmbeddingTable {
+            rows: p - nd - 1,
+            row_bytes: 4 * meta.embed_dim.max(1) as u64,
+            devices,
+            policy,
+            vocab: meta.vocab.max(1),
+            n_sparse: meta.n_sparse,
+        })
+    }
+
+    /// Total rows in the pool.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Modeled wire bytes per row.
+    pub fn row_bytes(&self) -> u64 {
+        self.row_bytes
+    }
+
+    /// Devices the rows are sharded over.
+    pub fn devices(&self) -> usize {
+        self.devices
+    }
+
+    /// Total modeled table footprint — compare against a single arena's
+    /// budget to see the memory wall.
+    pub fn total_bytes(&self) -> u64 {
+        self.rows as u64 * self.row_bytes
+    }
+
+    /// Owning device of `row`.
+    pub fn owner(&self, row: u32) -> usize {
+        match self.policy {
+            ShardPolicy::HashMod => (mix64(row as u64) % self.devices as u64) as usize,
+            ShardPolicy::Block => {
+                let per = self.rows.div_ceil(self.devices).max(1);
+                ((row as usize) / per).min(self.devices - 1)
+            }
+        }
+    }
+
+    /// The embedding-row id trace of a packed batch's first `rows` rows,
+    /// in lookup order — exactly the rows the trainer's forward pass will
+    /// read, derived with the trainer's own index arithmetic
+    /// (`(s·vocab + v mod vocab) mod pool`).
+    pub fn trace(&self, sparse: &[i32], rows: usize) -> Vec<u32> {
+        let ns = self.n_sparse;
+        let mut out = Vec::with_capacity(rows * ns);
+        for r in 0..rows {
+            for s in 0..ns {
+                let v = sparse[r * ns + s].rem_euclid(self.vocab as i32) as usize;
+                out.push(((s * self.vocab + v) % self.rows) as u32);
+            }
+        }
+        out
+    }
+}
+
+/// Cache/exchange observables of one lane's embedding shard, rolled up
+/// into [`TrainReport`](crate::coordinator::train_loop::TrainReport).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EmbCacheStats {
+    /// Lane (device index) the shard cache belongs to.
+    pub device: usize,
+    /// Embedding-row lookups committed (`rows × n_sparse` per step).
+    pub lookups: u64,
+    /// Lookups served from the hot cache.
+    pub hits: u64,
+    /// Lookups that demand-promoted from the cold tier.
+    pub misses: u64,
+    /// Bytes promoted into the hot tier (seed + prefetch + demand).
+    pub promoted_bytes: u64,
+    /// Bytes demoted back to the cold tier on eviction.
+    pub demoted_bytes: u64,
+    /// Bytes still resident in the hot tier at drain.
+    pub resident_bytes: u64,
+    /// Cross-device traffic: peer-owned row fetches plus embedding-row
+    /// gradients routed to their owning shard.
+    pub exchange_bytes: u64,
+    /// Consumer seconds exposed waiting on promotions (simulated).
+    pub prefetch_wait_s: f64,
+    /// Rows re-homed from the cold tier because their owner lane died.
+    pub rehomed_rows: u64,
+    /// Prefetch transfer attempts retried after an injected fault.
+    pub retried_prefetches: u64,
+    /// Promotion batches abandoned after the retry budget (rows stay
+    /// cold and surface as later misses — graceful degradation).
+    pub failed_prefetches: u64,
+}
+
+/// One device's shard of the embedding table: the LRU hot-row set pinned
+/// in its [`CacheRegion`], the promotion/demotion cost model, and the
+/// exactly-once byte ledger. Owned and advanced by a single lane thread
+/// in delivery order (see module docs on determinism).
+#[derive(Debug)]
+pub struct EmbShardCache {
+    table: EmbeddingTable,
+    cap_rows: usize,
+    region: CacheRegion,
+    /// Resident row → LRU tick.
+    resident: HashMap<u32, u64>,
+    /// LRU tick → row (ordered eviction scan).
+    lru: BTreeMap<u64, u32>,
+    tick: u64,
+    /// Rows ever promoted on this device: a first touch streams from SSD,
+    /// a re-promotion comes from the host cold tier.
+    touched: HashSet<u32>,
+    ledger: ByteLedger,
+    stats: EmbCacheStats,
+    /// Simulated completion clock of this lane's promotion engine.
+    pf_clock: f64,
+    promo_ordinal: u64,
+    chan_peer: ChannelModel,
+    chan_ssd: ChannelModel,
+    chan_host_rd: ChannelModel,
+    chan_host_wr: ChannelModel,
+}
+
+impl EmbShardCache {
+    /// Build device `region.device`'s shard cache holding at most
+    /// `cache_rows` hot rows. The region must fit them.
+    pub fn new(table: EmbeddingTable, cache_rows: usize, region: CacheRegion) -> Result<EmbShardCache> {
+        let cap_rows = cache_rows.min(table.rows()).max(1);
+        if cap_rows as u64 * table.row_bytes() > region.bytes {
+            return Err(EtlError::Mem(format!(
+                "cache region of {} B on device {} cannot hold {cap_rows} rows of {} B",
+                region.bytes,
+                region.device,
+                table.row_bytes()
+            )));
+        }
+        Ok(EmbShardCache {
+            stats: EmbCacheStats { device: region.device, ..EmbCacheStats::default() },
+            table,
+            cap_rows,
+            region,
+            resident: HashMap::new(),
+            lru: BTreeMap::new(),
+            tick: 0,
+            touched: HashSet::new(),
+            ledger: ByteLedger::default(),
+            pf_clock: 0.0,
+            promo_ordinal: 0,
+            chan_peer: ChannelModel::of(Path::P2pToGpu),
+            chan_ssd: ChannelModel::of(Path::SsdRead),
+            chan_host_rd: ChannelModel::of(Path::HostDmaRead),
+            chan_host_wr: ChannelModel::of(Path::HostDmaWrite),
+        })
+    }
+
+    /// Lane (device index) this shard belongs to.
+    pub fn device(&self) -> usize {
+        self.region.device
+    }
+
+    /// The table geometry this shard caches rows of.
+    pub fn table(&self) -> &EmbeddingTable {
+        &self.table
+    }
+
+    /// Hot-row capacity after clamping.
+    pub fn cap_rows(&self) -> usize {
+        self.cap_rows
+    }
+
+    /// Rows currently resident.
+    pub fn resident_rows(&self) -> usize {
+        self.resident.len()
+    }
+
+    /// The exactly-once promotion/demotion ledger.
+    pub fn ledger(&self) -> ByteLedger {
+        self.ledger
+    }
+
+    /// Pre-promote the seed hot set (truncated to capacity) at simulated
+    /// time zero — warmup traffic, costed like any other promotion.
+    pub fn seed<F: Fn(usize) -> bool>(&mut self, rows: &[u32], alive: &F) {
+        let mut seen = HashSet::new();
+        let uniq: Vec<u32> = rows
+            .iter()
+            .copied()
+            .filter(|r| (*r as usize) < self.table.rows() && seen.insert(*r))
+            .take(self.cap_rows)
+            .collect();
+        self.promote(&uniq, 0.0, alive);
+    }
+
+    /// Promote `rows` (deduplicated, possibly already-resident entries are
+    /// skipped) as one batched transfer issued at `issue_s`. Returns the
+    /// simulated completion time of the batch. `alive(owner)` gates which
+    /// peer shards can serve their rows: a dead owner's rows are re-homed
+    /// from the host cold tier instead of silently corrupting lookups.
+    pub fn promote<F: Fn(usize) -> bool>(&mut self, rows: &[u32], issue_s: f64, alive: &F) -> f64 {
+        let start = self.pf_clock.max(issue_s);
+        // Classify the batch by transfer source and total the bytes.
+        let rb = self.table.row_bytes();
+        let mut ssd_bytes = 0u64;
+        let mut host_bytes = 0u64;
+        let mut peer_bytes = 0u64;
+        let mut to_insert: Vec<u32> = Vec::new();
+        let mut batch_seen = HashSet::new();
+        let mut rehomed = 0u64;
+        let mut exchange = 0u64;
+        for &row in rows {
+            if self.resident.contains_key(&row) || !batch_seen.insert(row) {
+                continue;
+            }
+            let owner = self.table.owner(row);
+            if owner != self.device() {
+                if alive(owner) {
+                    // Fetched across the P2P fabric from the owning shard.
+                    peer_bytes += rb;
+                    exchange += rb;
+                } else {
+                    // Owner lane is gone: re-home from the cold tier.
+                    host_bytes += rb;
+                    rehomed += 1;
+                }
+            } else if self.touched.contains(&row) {
+                host_bytes += rb;
+            } else {
+                ssd_bytes += rb;
+            }
+            to_insert.push(row);
+        }
+        if to_insert.is_empty() {
+            return start;
+        }
+        let cost = self.chan_ssd.time(ssd_bytes)
+            + self.chan_host_rd.time(host_bytes)
+            + self.chan_peer.time(peer_bytes);
+
+        // Transient fault ladder on the prefetch transfer (site PREFETCH,
+        // key = device<<48 | promotion ordinal): each failed attempt burns
+        // the wire time; past the budget the batch is abandoned and the
+        // rows stay cold (they surface as later misses).
+        let key = ((self.device() as u64) << 48) | self.promo_ordinal;
+        self.promo_ordinal += 1;
+        let mut attempts = 0u32;
+        let mut done = start;
+        while fault::inject(fsite::PREFETCH, key) {
+            attempts += 1;
+            done += cost;
+            self.stats.retried_prefetches += 1;
+            if attempts >= PREFETCH_MAX_ATTEMPTS {
+                self.stats.failed_prefetches += 1;
+                self.pf_clock = done;
+                return done;
+            }
+        }
+        done += cost;
+        self.pf_clock = done;
+
+        self.stats.exchange_bytes += exchange;
+        self.stats.rehomed_rows += rehomed;
+        for row in to_insert {
+            self.insert_resident(row);
+        }
+        done
+    }
+
+    /// Make `row` resident, evicting the LRU row (a demotion write-back
+    /// to the host cold tier) when the cache is full.
+    fn insert_resident(&mut self, row: u32) {
+        let rb = self.table.row_bytes();
+        if self.resident.len() >= self.cap_rows {
+            if let Some((&old_tick, &victim)) = self.lru.iter().next() {
+                self.lru.remove(&old_tick);
+                self.resident.remove(&victim);
+                self.ledger.demote(rb);
+                self.stats.demoted_bytes += rb;
+                // Demotion cost rides the host write channel on the same
+                // promotion engine clock.
+                self.pf_clock += self.chan_host_wr.time(rb);
+            }
+        }
+        self.tick += 1;
+        self.resident.insert(row, self.tick);
+        self.lru.insert(self.tick, row);
+        self.touched.insert(row);
+        self.ledger.promote(rb);
+        self.stats.promoted_bytes += rb;
+    }
+
+    /// Commit one staged slot's lookups at consumer time `now_s`:
+    /// `pf_done_s` is the completion time of the prefetch issued for this
+    /// slot (its exposure, if any, is charged to `prefetch_wait_s`), then
+    /// the trace is walked in lookup order — hits touch the LRU, misses
+    /// demand-promote with their transfer fully exposed. Embedding-row
+    /// gradients for peer-owned rows are charged to `exchange_bytes`.
+    pub fn commit<F: Fn(usize) -> bool>(
+        &mut self,
+        trace: &[u32],
+        pf_done_s: f64,
+        now_s: f64,
+        alive: &F,
+    ) {
+        self.stats.prefetch_wait_s += (pf_done_s - now_s).max(0.0);
+        let mut now = now_s.max(pf_done_s);
+        for &row in trace {
+            self.stats.lookups += 1;
+            if let Some(tick) = self.resident.get(&row).copied() {
+                self.stats.hits += 1;
+                self.lru.remove(&tick);
+                self.tick += 1;
+                self.resident.insert(row, self.tick);
+                self.lru.insert(self.tick, row);
+            } else {
+                self.stats.misses += 1;
+                let done = self.promote(&[row], now, alive);
+                self.stats.prefetch_wait_s += (done - now).max(0.0);
+                now = now.max(done);
+            }
+            let owner = self.table.owner(row);
+            if owner != self.device() && alive(owner) {
+                self.stats.exchange_bytes += GRAD_WIRE_BYTES;
+            }
+        }
+    }
+
+    /// Drain into the final per-lane stats (resident bytes snapshotted;
+    /// the ledger is guaranteed to balance against them).
+    pub fn into_stats(mut self) -> EmbCacheStats {
+        self.stats.resident_bytes = self.resident.len() as u64 * self.table.row_bytes();
+        debug_assert!(self.ledger.balances(self.stats.resident_bytes));
+        self.stats
+    }
+}
+
+/// Derive the initial hot set from `OnlineVocab`'s admission stats: the
+/// first-appearance admission order *is* the hotness ranking (head of the
+/// popularity distribution), so the earliest-admitted vocabulary slots
+/// map to the rows worth pre-promoting. Returns deduplicated rows in
+/// hotness order, truncated to `limit`.
+pub fn hot_rows_from_vocab(vocab: &OnlineVocab, table: &EmbeddingTable, limit: usize) -> Vec<u32> {
+    let mut seen = HashSet::new();
+    let mut out = Vec::new();
+    'outer: for slot in 0..vocab.len() {
+        for s in 0..table.n_sparse {
+            let row = ((s * table.vocab + slot % table.vocab) % table.rows) as u32;
+            if seen.insert(row) {
+                out.push(row);
+                if out.len() >= limit {
+                    break 'outer;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devmem::{ArenaConfig, DeviceArena};
+    use crate::runtime::artifacts::ParamSpec;
+
+    fn meta(vocab: usize, n_sparse: usize, embed_dim: usize, pool: usize) -> ModelMeta {
+        ModelMeta {
+            batch: 4,
+            n_dense: 2,
+            n_sparse,
+            vocab,
+            embed_dim,
+            params: vec![
+                ParamSpec { name: "emb".into(), dims: vec![pool] },
+                ParamSpec { name: "w1".into(), dims: vec![2] },
+                ParamSpec { name: "b1".into(), dims: vec![1] },
+            ],
+            extra: Default::default(),
+        }
+    }
+
+    fn table(devices: usize) -> EmbeddingTable {
+        EmbeddingTable::from_meta(&meta(10, 2, 4, 40), devices, ShardPolicy::HashMod).unwrap()
+    }
+
+    fn region(rows: usize, t: &EmbeddingTable) -> CacheRegion {
+        let arena = DeviceArena::new(ArenaConfig { slots: 2, slot_bytes: 1 << 20 });
+        arena.reserve_cache(rows as u64 * t.row_bytes()).unwrap()
+    }
+
+    const ALL_ALIVE: fn(usize) -> bool = |_| true;
+
+    #[test]
+    fn table_geometry_matches_trainer_layout() {
+        let t = table(2);
+        assert_eq!(t.rows(), 40); // pool + w1 + b1 = 43 params, minus nd+1
+        assert_eq!(t.row_bytes(), 16);
+        assert_eq!(t.total_bytes(), 640);
+        // Every row has exactly one owner in range.
+        for r in 0..t.rows() as u32 {
+            assert!(t.owner(r) < 2);
+        }
+        // Block policy assigns contiguous halves.
+        let b = EmbeddingTable::from_meta(&meta(10, 2, 4, 40), 2, ShardPolicy::Block).unwrap();
+        assert_eq!(b.owner(0), 0);
+        assert_eq!(b.owner(19), 0);
+        assert_eq!(b.owner(20), 1);
+        assert_eq!(b.owner(39), 1);
+        // Dense-only artifacts have nothing to shard.
+        let dense_only = ModelMeta {
+            batch: 1,
+            n_dense: 2,
+            n_sparse: 0,
+            vocab: 1,
+            embed_dim: 1,
+            params: vec![
+                ParamSpec { name: "w1".into(), dims: vec![2] },
+                ParamSpec { name: "b1".into(), dims: vec![1] },
+            ],
+            extra: Default::default(),
+        };
+        assert!(EmbeddingTable::from_meta(&dense_only, 1, ShardPolicy::HashMod).is_err());
+    }
+
+    #[test]
+    fn trace_mirrors_trainer_index_arithmetic() {
+        let t = table(1);
+        // vocab=10, ns=2, pool=40: row = (s*10 + v%10) % 40.
+        let sparse = vec![3, 17, -1, 42];
+        let trace = t.trace(&sparse, 2);
+        assert_eq!(trace, vec![3, 17, 9, 12]);
+        // Truncated row count limits the trace.
+        assert_eq!(t.trace(&sparse, 1), vec![3, 17]);
+    }
+
+    #[test]
+    fn cache_hits_after_promotion_and_counts_exactly_once() {
+        let t = table(1);
+        let mut c = EmbShardCache::new(t.clone(), 4, region(4, &t)).unwrap();
+        let done = c.promote(&[1, 2, 3], 0.0, &ALL_ALIVE);
+        assert!(done > 0.0, "promotion must cost simulated time");
+        c.commit(&[1, 2, 3, 9, 1], done, done, &ALL_ALIVE);
+        let st = c.into_stats();
+        assert_eq!(st.lookups, 5);
+        assert_eq!(st.hits, 4); // 1,2,3 prefetched; second 1 hits; 9 missed
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.hits + st.misses, st.lookups);
+        assert_eq!(st.promoted_bytes, 4 * 16);
+        assert_eq!(st.resident_bytes, 4 * 16);
+        assert_eq!(st.demoted_bytes, 0);
+    }
+
+    #[test]
+    fn eviction_demotes_and_ledger_balances() {
+        let t = table(1);
+        let mut c = EmbShardCache::new(t.clone(), 2, region(2, &t)).unwrap();
+        c.promote(&[1, 2], 0.0, &ALL_ALIVE);
+        // LRU order: touch 1 so 2 is the victim.
+        c.commit(&[1], 0.0, 0.0, &ALL_ALIVE);
+        c.promote(&[3], 0.0, &ALL_ALIVE);
+        assert_eq!(c.resident_rows(), 2);
+        let ledger = c.ledger();
+        assert!(ledger.balances(2 * 16));
+        let st = c.into_stats();
+        assert_eq!(st.promoted_bytes, 3 * 16);
+        assert_eq!(st.demoted_bytes, 16);
+        assert_eq!(st.resident_bytes, 2 * 16);
+        assert_eq!(st.promoted_bytes, st.demoted_bytes + st.resident_bytes);
+    }
+
+    #[test]
+    fn lru_touch_on_hit_protects_hot_rows() {
+        let t = table(1);
+        let mut c = EmbShardCache::new(t.clone(), 2, region(2, &t)).unwrap();
+        c.promote(&[7, 8], 0.0, &ALL_ALIVE);
+        c.commit(&[7], 1.0, 1.0, &ALL_ALIVE); // 7 is now MRU
+        c.promote(&[9], 1.0, &ALL_ALIVE); // evicts 8, not 7
+        c.commit(&[7, 9], 2.0, 2.0, &ALL_ALIVE);
+        let st = c.into_stats();
+        assert_eq!(st.misses, 0);
+        assert_eq!(st.hits, 3);
+    }
+
+    #[test]
+    fn demand_miss_exposes_wait_and_prefetch_hides_it() {
+        let t = table(1);
+        // Demand path: commit with nothing prefetched.
+        let mut c = EmbShardCache::new(t.clone(), 4, region(4, &t)).unwrap();
+        c.commit(&[1, 2], 0.0, 0.0, &ALL_ALIVE);
+        let demand = c.into_stats();
+        assert_eq!(demand.misses, 2);
+        assert!(demand.prefetch_wait_s > 0.0, "demand misses must expose wait");
+
+        // Prefetch path: same rows promoted long before the commit time.
+        let mut c = EmbShardCache::new(t.clone(), 4, region(4, &t)).unwrap();
+        let done = c.promote(&[1, 2], 0.0, &ALL_ALIVE);
+        c.commit(&[1, 2], done, done + 1.0, &ALL_ALIVE);
+        let pf = c.into_stats();
+        assert_eq!(pf.misses, 0);
+        assert_eq!(pf.prefetch_wait_s, 0.0, "completed prefetch hides the transfer");
+    }
+
+    #[test]
+    fn peer_rows_cost_exchange_and_dead_owner_rehomes() {
+        let t = table(4);
+        let my = t
+            .clone();
+        // Build the cache on device 0 and promote rows owned elsewhere.
+        let arena = DeviceArena::new(ArenaConfig { slots: 2, slot_bytes: 1 << 20 });
+        let region = arena.reserve_cache(8 * my.row_bytes()).unwrap();
+        let mut c = EmbShardCache::new(my.clone(), 8, region).unwrap();
+        let peer_row = (0..my.rows() as u32).find(|r| my.owner(*r) == 1).unwrap();
+        let dead_row = (0..my.rows() as u32).find(|r| my.owner(*r) == 2).unwrap();
+        let alive = |o: usize| o != 2;
+        c.promote(&[peer_row, dead_row], 0.0, &alive);
+        c.commit(&[peer_row, dead_row], 1.0, 1.0, &alive);
+        let st = c.into_stats();
+        assert_eq!(st.rehomed_rows, 1);
+        // Peer row: fetched over P2P + its gradient routed back.
+        assert_eq!(st.exchange_bytes, my.row_bytes() + GRAD_WIRE_BYTES);
+        assert_eq!(st.misses, 0);
+    }
+
+    #[test]
+    fn prefetch_faults_retry_then_abandon() {
+        let t = table(1);
+        let mut c = EmbShardCache::new(t.clone(), 4, region(4, &t)).unwrap();
+        // Transient: 2 failures then success — rows land, retries counted.
+        let plan = crate::util::fault::FaultPlan::new(9).with(fsite::PREFETCH, crate::util::fault::RATE_FULL, 2);
+        {
+            let _g = plan.install();
+            let done = c.promote(&[1, 2], 0.0, &ALL_ALIVE);
+            assert!(done > 0.0);
+        }
+        assert_eq!(c.resident_rows(), 2);
+
+        // Permanent: budget exhausts, batch abandoned, rows stay cold.
+        let plan = crate::util::fault::FaultPlan::new(9)
+            .with(fsite::PREFETCH, crate::util::fault::RATE_FULL, crate::util::fault::PERMANENT);
+        {
+            let _g = plan.install();
+            c.promote(&[5, 6], 0.0, &ALL_ALIVE);
+        }
+        assert_eq!(c.resident_rows(), 2, "abandoned batch must not insert rows");
+        let st = c.into_stats();
+        assert_eq!(st.retried_prefetches as u32, 2 + PREFETCH_MAX_ATTEMPTS);
+        assert_eq!(st.failed_prefetches, 1);
+        assert!(st.promoted_bytes >= st.demoted_bytes + st.resident_bytes);
+    }
+
+    #[test]
+    fn seed_truncates_to_capacity_and_dedups() {
+        let t = table(1);
+        let mut c = EmbShardCache::new(t.clone(), 2, region(2, &t)).unwrap();
+        c.seed(&[4, 4, 5, 6, 7], &ALL_ALIVE);
+        assert_eq!(c.resident_rows(), 2);
+        let st = c.into_stats();
+        // No churn: exactly capacity promoted, nothing demoted.
+        assert_eq!(st.promoted_bytes, 2 * 16);
+        assert_eq!(st.demoted_bytes, 0);
+    }
+
+    #[test]
+    fn hot_rows_from_vocab_follow_admission_order() {
+        let t = table(1);
+        let mut v = OnlineVocab::new(8);
+        for tok in [100, 200, 300] {
+            v.map(tok);
+        }
+        // Slots 0,1,2 admitted; ns=2, vocab=10, pool=40:
+        // rows (0,10), (1,11), (2,12) in hotness order.
+        let rows = hot_rows_from_vocab(&v, &t, 16);
+        assert_eq!(rows, vec![0, 10, 1, 11, 2, 12]);
+        assert_eq!(hot_rows_from_vocab(&v, &t, 3), vec![0, 10, 1]);
+    }
+
+    #[test]
+    fn cache_region_must_hold_capacity() {
+        let t = table(1);
+        let small = region(1, &t);
+        assert!(EmbShardCache::new(t.clone(), 4, small).is_err());
+    }
+}

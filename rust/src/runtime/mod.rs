@@ -13,9 +13,24 @@
 //! [`pjrt`](self) behind the `pjrt` cargo feature; enabling it requires
 //! vendoring the `xla` crate, which the offline build environment does
 //! not ship.
+//!
+//! # Sharded embedding tables ([`embedding`])
+//!
+//! The model's embedding pool no longer has to fit one device: rows are
+//! hash-sharded across the fleet (model parallelism alongside the data
+//! parallelism of `train_loop::run_multi`), each lane holding a bounded
+//! **hot cache** pinned in its `DeviceArena` and spilling cold rows to a
+//! simulated host tier, with promotion/demotion costed on the P2P/SSD
+//! channel models and prefetch driven by router lookahead. See
+//! [`embedding`]'s module docs for the ownership and prefetch-timeline
+//! diagrams. The cache layer is a placement/cost simulation over the
+//! unchanged trainer arithmetic, so cached sharded execution stays
+//! **bitwise identical** to the uncached reference
+//! (`rust/tests/prop_embedding.rs`).
 
 pub mod artifacts;
 pub mod checkpoint;
+pub mod embedding;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 

@@ -52,6 +52,9 @@ pub mod site {
     pub const WORKER_DEATH: u64 = 5;
     /// Whole-lane loss in the multi-device train loop (key = device index).
     pub const LANE_LOSS: u64 = 6;
+    /// Embedding-cache prefetch transfer failure (key = `device << 48 |
+    /// promotion ordinal within that lane's cache`).
+    pub const PREFETCH: u64 = 7;
 
     /// Human-readable site name for error surfaces and reports.
     pub fn name(site: u64) -> &'static str {
@@ -62,6 +65,7 @@ pub mod site {
             DMA => "dma",
             WORKER_DEATH => "worker_death",
             LANE_LOSS => "lane_loss",
+            PREFETCH => "prefetch",
             _ => "unknown",
         }
     }

@@ -1,0 +1,457 @@
+//! Property tests for the sharded embedding-table layer
+//! (`piperec::runtime::embedding` + `TrainConfig::embedding`): the cached,
+//! hash-sharded, lookahead-prefetched execution must be **bitwise
+//! identical** to the uncached reference across device counts {1, 2, 4} ×
+//! cache sizes {tiny, half, full} × lookahead depths {0, 2, 8}, with
+//! exactly-once hit/miss accounting (`hits + misses = lookups`), balanced
+//! promotion/demotion byte ledgers per lane, and the memory-wall
+//! acceptance case: a table whose footprint exceeds any single device
+//! arena's budget still trains bitwise identical to the reference.
+//!
+//! CI reruns this suite at `--test-threads {1, 8}` and under one
+//! `chaos-fuzz` fault-seed range (the embedding arm of
+//! `prop_faults.rs` covers the injected-fault side).
+
+use std::time::Duration;
+
+use piperec::coordinator::{train, DataPath, OnlineVocab, RoutePolicy, TrainConfig, TrainReport};
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{DeliveryPolicy, IngestConfig};
+use piperec::dataio::synth::SynthConfig;
+use piperec::devmem::ArenaConfig;
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
+use piperec::runtime::embedding::{
+    hot_rows_from_vocab, EmbeddingConfig, EmbeddingTable, ShardPolicy,
+};
+use piperec::runtime::Trainer;
+use piperec::util::prop::assert_bits_equal;
+use piperec::util::sched::SchedFuzzer;
+
+const ND: usize = 2;
+const NS: usize = 2;
+const STEP_ROWS: usize = 16;
+/// 3 shards × 40 rows → 2 full 16-row chunks per shard, 6 global steps.
+const STEPS: u64 = 6;
+/// Every step looks up `STEP_ROWS × NS` embedding rows.
+const LOOKUPS: u64 = STEPS * (STEP_ROWS * NS) as u64;
+
+/// Same stateless packing dag family as prop_faults/prop_concurrent: no
+/// fit needed, packed shape matches the reference-trainer meta exactly.
+fn passthrough_dag(nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-embedding");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    for i in 0..nd {
+        let d = dag.source(format!("t_i{i}"), ColType::F32);
+        let f = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[d],
+        );
+        dag.sink(format!("dense{i}"), f, SinkRole::Dense);
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink(format!("sparse{i}"), m, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn custom_spec(schema: Schema, rows: usize, shards: usize) -> DatasetSpec {
+    DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-embedding",
+        schema,
+        rows,
+        paper_rows: rows as u64,
+        shards,
+        synth: SynthConfig::default(),
+        ssd_bound: false,
+    }
+}
+
+/// Reference-trainer meta with a `pool`-row embedding table at
+/// `embed_dim`-wide modeled rows.
+fn emb_meta(vocab: usize, embed_dim: usize, pool: usize) -> ModelMeta {
+    ModelMeta {
+        batch: STEP_ROWS,
+        n_dense: ND,
+        n_sparse: NS,
+        vocab,
+        embed_dim,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![ND] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![pool] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+fn fixture() -> (Pipeline, DatasetSpec) {
+    let schema = Schema::tabular("t", ND, NS, 64);
+    let dag = passthrough_dag(ND, NS);
+    dag.validate(&schema).unwrap();
+    let spec = custom_spec(schema, 120, 3);
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    (Pipeline::new(plan), spec)
+}
+
+/// One live run in the bit-reproducible mode (in-order + round-robin +
+/// sync-every-step), with or without the embedding layer.
+fn run_fleet(
+    pipe: &Pipeline,
+    spec: &DatasetSpec,
+    meta: &ModelMeta,
+    devices: usize,
+    arena: ArenaConfig,
+    embedding: Option<EmbeddingConfig>,
+) -> (TrainReport, Vec<f32>) {
+    let mut trainer = Trainer::from_meta(meta.clone(), 7);
+    let cfg = TrainConfig {
+        max_steps: usize::MAX / 2,
+        loss_every: 1,
+        staging_buffers: 2,
+        seed: 99,
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            max_retries: 3,
+            backoff: Duration::from_micros(20),
+            ..IngestConfig::default()
+        },
+        path: DataPath::Arena,
+        arena,
+        devices,
+        route: RoutePolicy::RoundRobin,
+        allreduce_every: 1,
+        embedding,
+        ..TrainConfig::default()
+    };
+    let report = train(pipe, spec, &mut trainer, &cfg).unwrap();
+    let state = trainer.state_to_vec().unwrap();
+    (report, state)
+}
+
+fn big_arena() -> ArenaConfig {
+    ArenaConfig { slots: 3, slot_bytes: 16 << 20 }
+}
+
+fn assert_same_trajectory(
+    label: &str,
+    got: &(TrainReport, Vec<f32>),
+    want: &(TrainReport, Vec<f32>),
+) {
+    assert_eq!(got.0.steps, want.0.steps, "{label}: step counts differ");
+    assert_eq!(got.0.losses.len(), want.0.losses.len(), "{label}: loss samples");
+    for ((gs, gl), (ws, wl)) in got.0.losses.iter().zip(&want.0.losses) {
+        assert_eq!(gs, ws, "{label}: loss sampled at different steps");
+        assert_eq!(
+            gl.to_bits(),
+            wl.to_bits(),
+            "{label}: loss diverged at step {gs}: {gl} vs {wl}"
+        );
+    }
+    assert_bits_equal(&got.1, &want.1)
+        .unwrap_or_else(|e| panic!("{label}: final parameters diverged: {e}"));
+}
+
+/// Exactly-once cache accounting + balanced per-lane byte ledgers, shared
+/// by every cached run below.
+fn assert_cache_invariants(label: &str, report: &TrainReport, devices: usize) {
+    assert_eq!(report.emb.len(), devices, "{label}: one cache stat per lane");
+    let lookups: u64 = report.emb.iter().map(|e| e.lookups).sum();
+    assert_eq!(lookups, LOOKUPS, "{label}: every stepped lookup accounted");
+    assert_eq!(
+        report.cache_hits + report.cache_misses,
+        lookups,
+        "{label}: hits + misses = lookups (exactly once)"
+    );
+    for e in &report.emb {
+        assert_eq!(e.hits + e.misses, e.lookups, "{label}: lane {} exactly-once", e.device);
+        assert_eq!(
+            e.promoted_bytes,
+            e.demoted_bytes + e.resident_bytes,
+            "{label}: lane {} ledger must balance (promoted = demoted + resident)",
+            e.device
+        );
+    }
+}
+
+#[test]
+fn prop_cached_sharded_run_bitwise_identical_to_uncached_reference() {
+    // THE acceptance matrix: devices × cache sizes × lookahead depths,
+    // every cell bitwise equal to the uncached single-device reference.
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(128, 4, 256);
+    let table = EmbeddingTable::from_meta(&meta, 1, ShardPolicy::HashMod).unwrap();
+    let reference = run_fleet(&pipe, &spec, &meta, 1, big_arena(), None);
+    assert_eq!(reference.0.steps, STEPS, "fixture must actually train");
+    assert_eq!(reference.0.cache_hits + reference.0.cache_misses, 0);
+    assert!(reference.0.emb.is_empty(), "uncached run reports no cache lanes");
+
+    let full = table.rows();
+    for devices in [1usize, 2, 4] {
+        for (cname, cache_rows) in [("tiny", 8usize), ("half", full / 2), ("full", full)] {
+            for lookahead in [0usize, 2, 8] {
+                let ecfg = EmbeddingConfig {
+                    cache_rows,
+                    lookahead,
+                    policy: ShardPolicy::HashMod,
+                    hot_seed: Vec::new(),
+                };
+                let got = run_fleet(&pipe, &spec, &meta, devices, big_arena(), Some(ecfg));
+                let label = format!("devices {devices} × cache {cname} × lookahead {lookahead}");
+                assert_same_trajectory(&label, &got, &reference);
+                assert_cache_invariants(&label, &got.0, devices);
+                if cache_rows == full && lookahead > 0 {
+                    assert_eq!(
+                        got.0.cache_misses, 0,
+                        "{label}: full cache + lookahead must never miss"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn tiny_cache_hit_rate_is_positive_on_skewed_ids() {
+    // A head-heavy id distribution (vocab 2 → a 4-row working set inside
+    // a 256-row table) is the regime the hot tier is built for: a tiny
+    // cache that covers the working set turns almost every lookup into a
+    // hit, even though it holds < 2% of the table.
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(2, 4, 256);
+    let reference = run_fleet(&pipe, &spec, &meta, 1, big_arena(), None);
+    for devices in [1usize, 2] {
+        let ecfg = EmbeddingConfig {
+            cache_rows: 8, // tiny vs the 256-row table, ≥ the working set
+            lookahead: 2,
+            policy: ShardPolicy::HashMod,
+            hot_seed: Vec::new(),
+        };
+        let got = run_fleet(&pipe, &spec, &meta, devices, big_arena(), Some(ecfg));
+        let label = format!("tiny cache, devices {devices}");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_cache_invariants(&label, &got.0, devices);
+        // vocab 2 × 2 sparse slots → at most 4 distinct rows per lane;
+        // with no eviction pressure each row misses at most once.
+        assert!(
+            got.0.cache_misses <= 4 * devices as u64,
+            "{label}: working set misses at most once per lane"
+        );
+        assert!(
+            got.0.cache_hits >= LOOKUPS - 4 * devices as u64,
+            "{label}: skewed ids must hit the tiny cache (got {} of {})",
+            got.0.cache_hits,
+            LOOKUPS
+        );
+    }
+}
+
+#[test]
+fn full_hot_seed_warmup_eliminates_misses_even_without_lookahead() {
+    // "Zero misses after warmup": pre-promoting the whole table (the
+    // warmup) leaves nothing to demand-miss even at lookahead 0, and the
+    // prefetch-wait exposure drops to the seed batch only.
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(128, 4, 256);
+    let table = EmbeddingTable::from_meta(&meta, 1, ShardPolicy::HashMod).unwrap();
+
+    let cold = EmbeddingConfig {
+        cache_rows: table.rows(),
+        lookahead: 0,
+        policy: ShardPolicy::HashMod,
+        hot_seed: Vec::new(),
+    };
+    let cold_run = run_fleet(&pipe, &spec, &meta, 1, big_arena(), Some(cold));
+    assert!(cold_run.0.cache_misses > 0, "cold full cache demand-misses on first touch");
+    assert!(cold_run.0.prefetch_wait_s > 0.0, "demand misses expose transfer time");
+
+    let warm = EmbeddingConfig {
+        cache_rows: table.rows(),
+        lookahead: 0,
+        policy: ShardPolicy::HashMod,
+        hot_seed: (0..table.rows() as u32).collect(),
+    };
+    let warm_run = run_fleet(&pipe, &spec, &meta, 1, big_arena(), Some(warm));
+    assert_eq!(warm_run.0.cache_misses, 0, "warmed full cache never misses");
+    assert_eq!(warm_run.0.cache_hits, LOOKUPS);
+    assert_eq!(warm_run.0.prefetch_wait_s, 0.0, "nothing left to wait on");
+    assert_same_trajectory("warm vs cold", &warm_run, &cold_run);
+}
+
+#[test]
+fn online_vocab_admission_order_seeds_a_useful_hot_set() {
+    // The OnlineVocab bridge: rows derived from the admission order are a
+    // valid hot seed (the run accepts them and stays bitwise identical);
+    // seeding can only reduce demand misses.
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(128, 4, 256);
+    let table = EmbeddingTable::from_meta(&meta, 1, ShardPolicy::HashMod).unwrap();
+    let mut vocab = OnlineVocab::new(64);
+    for tok in 0..48i64 {
+        vocab.map(tok * 7);
+    }
+    let seed_rows = hot_rows_from_vocab(&vocab, &table, 64);
+    assert!(!seed_rows.is_empty(), "admitted vocab must map to seed rows");
+
+    let unseeded = EmbeddingConfig {
+        cache_rows: 64,
+        lookahead: 2,
+        policy: ShardPolicy::HashMod,
+        hot_seed: Vec::new(),
+    };
+    let base = run_fleet(&pipe, &spec, &meta, 1, big_arena(), Some(unseeded));
+    let seeded = EmbeddingConfig {
+        cache_rows: 64,
+        lookahead: 2,
+        policy: ShardPolicy::HashMod,
+        hot_seed: seed_rows,
+    };
+    let got = run_fleet(&pipe, &spec, &meta, 1, big_arena(), Some(seeded));
+    assert_same_trajectory("vocab-seeded vs unseeded", &got, &base);
+    assert_cache_invariants("vocab-seeded", &got.0, 1);
+}
+
+#[test]
+fn block_policy_shards_and_exchanges_across_the_fleet() {
+    // Block sharding on a 2-device fleet: still bitwise identical, and
+    // peer-owned rows actually cross the fabric (row fetches + routed
+    // gradients show up in exchange_bytes).
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(128, 4, 256);
+    let reference = run_fleet(&pipe, &spec, &meta, 1, big_arena(), None);
+    for policy in [ShardPolicy::Block, ShardPolicy::HashMod] {
+        let ecfg = EmbeddingConfig {
+            cache_rows: 128,
+            lookahead: 2,
+            policy,
+            hot_seed: Vec::new(),
+        };
+        let got = run_fleet(&pipe, &spec, &meta, 2, big_arena(), Some(ecfg));
+        let label = format!("{policy:?} sharding, devices 2");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_cache_invariants(&label, &got.0, 2);
+        assert!(
+            got.0.exchange_bytes > 0,
+            "{label}: a 2-way shard must move peer rows/gradients"
+        );
+    }
+}
+
+#[test]
+fn memory_wall_table_exceeding_arena_budget_trains_bitwise() {
+    // The acceptance case the layer exists for: the modeled table is ~16×
+    // a device's whole staging budget, so the hot tier can only ever hold
+    // a sliver — and training is still bitwise the uncached reference.
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(4096, 64, 8192);
+    let arena = ArenaConfig { slots: 2, slot_bytes: 64 << 10 };
+    let budget = arena.slots as u64 * arena.slot_bytes;
+    let table = EmbeddingTable::from_meta(&meta, 1, ShardPolicy::HashMod).unwrap();
+    assert!(
+        table.total_bytes() > budget,
+        "fixture must oversubscribe: table {} B vs arena budget {} B",
+        table.total_bytes(),
+        budget
+    );
+
+    let reference = run_fleet(&pipe, &spec, &meta, 1, arena.clone(), None);
+    assert_eq!(reference.0.steps, STEPS);
+    for devices in [1usize, 2] {
+        let ecfg = EmbeddingConfig {
+            cache_rows: 128,
+            lookahead: 2,
+            policy: ShardPolicy::HashMod,
+            hot_seed: Vec::new(),
+        };
+        let got = run_fleet(&pipe, &spec, &meta, devices, arena.clone(), Some(ecfg));
+        let label = format!("memory wall, devices {devices}");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_cache_invariants(&label, &got.0, devices);
+        assert!(got.0.cache_misses > 0, "{label}: the cold tier must actually serve");
+        for e in &got.0.emb {
+            assert!(
+                e.resident_bytes <= 128 * table.row_bytes(),
+                "{label}: lane {} hot tier stays within its reservation",
+                e.device
+            );
+        }
+    }
+}
+
+#[test]
+fn oversized_cache_reservation_is_a_typed_config_error() {
+    // Asking for a hot set bigger than the device's memory budget must
+    // fail the run cleanly before any thread spawns.
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(4096, 64, 8192);
+    let arena = ArenaConfig { slots: 2, slot_bytes: 64 << 10 };
+    let mut trainer = Trainer::from_meta(meta.clone(), 7);
+    let cfg = TrainConfig {
+        arena,
+        embedding: Some(EmbeddingConfig {
+            cache_rows: 8192, // 8192 × 256 B = 2 MiB ≫ 128 KiB budget
+            lookahead: 2,
+            policy: ShardPolicy::HashMod,
+            hot_seed: Vec::new(),
+        }),
+        ..TrainConfig::default()
+    };
+    let err = train(&pipe, &spec, &mut trainer, &cfg).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains("memory budget"),
+        "expected a cache-reservation sizing error, got: {msg}"
+    );
+}
+
+#[test]
+fn cache_accounting_is_schedule_independent() {
+    // Per-lane cache state advances only on that lane's pack worker in
+    // delivery order, so every counter — not just the trajectory — must
+    // replay exactly under fuzzed thread schedules.
+    let (pipe, spec) = fixture();
+    let meta = emb_meta(128, 4, 256);
+    let ecfg = EmbeddingConfig {
+        cache_rows: 64,
+        lookahead: 2,
+        policy: ShardPolicy::HashMod,
+        hot_seed: Vec::new(),
+    };
+    let reference = run_fleet(&pipe, &spec, &meta, 2, big_arena(), Some(ecfg.clone()));
+    assert_cache_invariants("schedule reference", &reference.0, 2);
+
+    let mut sched = SchedFuzzer::new(0xE3B_5EED);
+    for i in 0..20 {
+        let (sseed, got) = sched.with_schedule(|| {
+            run_fleet(&pipe, &spec, &meta, 2, big_arena(), Some(ecfg.clone()))
+        });
+        let label = format!("schedule {i} (seed {sseed:#x})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_eq!(got.0.cache_hits, reference.0.cache_hits, "{label}: hits");
+        assert_eq!(got.0.cache_misses, reference.0.cache_misses, "{label}: misses");
+        assert_eq!(
+            got.0.exchange_bytes, reference.0.exchange_bytes,
+            "{label}: exchange bytes"
+        );
+        assert_eq!(
+            got.0.prefetch_wait_s.to_bits(),
+            reference.0.prefetch_wait_s.to_bits(),
+            "{label}: simulated wait is a pure function of delivery order"
+        );
+        for (g, w) in got.0.emb.iter().zip(&reference.0.emb) {
+            assert_eq!(g, w, "{label}: lane {} stats replay exactly", w.device);
+        }
+    }
+}

@@ -13,6 +13,8 @@
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end_training -- --steps 300
 //! # Big (~100M-param) model: PIPEREC_PRESET=big make artifacts, then rerun.
+//! # Record + export a Chrome trace of a 2-lane fleet run:
+//! cargo run --release --example end_to_end_training -- --devices 2 --trace trace.json
 //! ```
 
 use piperec::baselines::{PandasModel, CPU_ETL_BW_12CORE};
@@ -30,6 +32,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
     let steps: usize = args.get("steps", 300);
     let scale: f64 = args.get("scale", 0.05);
+    let devices: usize = args.get("devices", 1);
+    let trace_path = args.opt_str("trace");
 
     // Dataset: synthetic Criteo (Dataset-I schema), sharded.
     let mut spec = DatasetSpec::dataset_i(scale);
@@ -73,6 +77,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         loss_every: (steps / 20).max(1),
         staging_buffers: 2,
         seed: 42,
+        devices,
+        trace: trace_path.is_some(),
         ..Default::default()
     };
     let report = train(&pipeline, &spec, &mut trainer, &cfg)?;
@@ -94,6 +100,28 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("  producer stalls  : {} (backpressure credits)", report.producer_stalls);
     println!("  ETL host time    : {}", fmt_secs(report.etl_host_s));
     println!("  ETL FPGA-sim time: {}", fmt_secs(report.etl_sim_s));
+
+    // --trace: export the dual-clock span trace as Chrome trace-event
+    // JSON (self-validated before writing) and print the per-lane stall
+    // ledger the trace closes.
+    if let Some(path) = &trace_path {
+        let trace = report.trace.as_ref().expect("trace was enabled for this run");
+        let json = trace.to_chrome_json();
+        let stats = piperec::trace::chrome::validate_chrome_trace(&json)
+            .map_err(|e| format!("exported trace failed validation: {e}"))?;
+        std::fs::write(path, &json)?;
+        println!(
+            "\ntrace   : wrote {path} — {} spans, {} events, {} tracks \
+             (load in chrome://tracing or ui.perfetto.dev)",
+            trace.span_count(),
+            stats.events,
+            stats.tracks
+        );
+        if let Some(att) = &report.stall_attribution {
+            println!("stall attribution (host seconds; every lane's ledger closes):");
+            print!("{}", att.render());
+        }
+    }
 
     // Paper-frame comparison: what the same byte volume costs each system.
     let bytes = spec.total_bytes();

@@ -2,7 +2,9 @@
 //! (simulated-FPGA ETL → packer → staging → PJRT DLRM) measured on this
 //! machine, plus the paper-scale overlap model for the 10.06× claim.
 //!
-//! Requires `make artifacts`.
+//! Requires `make artifacts`. Pass `--trace <path>` to record the live
+//! run's dual-clock span trace (`crate::trace`) and export it as Chrome
+//! trace-event JSON, with the per-lane stall-attribution table printed.
 
 use piperec::baselines::{TrainerModel, CPU_ETL_BW_12CORE};
 use piperec::bench_harness::{secs, Table};
@@ -10,11 +12,16 @@ use piperec::coordinator::{cpu_gpu_config, piperec_config, simulate_overlap, tra
 use piperec::dataio::dataset::DatasetSpec;
 use piperec::etl::pipelines::{build, PipelineKind};
 use piperec::fpga::Pipeline;
+use piperec::metrics::TimeSeries;
 use piperec::planner::{compile, PlannerConfig};
 use piperec::runtime::artifacts::ArtifactPaths;
 use piperec::runtime::Trainer;
+use piperec::trace::{chrome, kind};
+use piperec::util::cli::Args;
 
 fn main() {
+    let args = Args::from_env();
+    let trace_path = args.opt_str("trace");
     // ---- paper-scale overlap model: the 10.06× end-to-end claim --------
     let trainer_m = TrainerModel::a100_dlrm(160);
     // Production batch sizes (Fig. 1b: 64K–2M rows) — at these sizes the
@@ -78,7 +85,12 @@ fn main() {
         &pipe,
         &spec,
         &mut trainer,
-        &TrainConfig { max_steps: steps, loss_every: steps / 6, ..Default::default() },
+        &TrainConfig {
+            max_steps: steps,
+            loss_every: steps / 6,
+            trace: trace_path.is_some(),
+            ..Default::default()
+        },
     )
     .unwrap();
 
@@ -99,4 +111,31 @@ fn main() {
     }
     live.print();
     println!("\nutil trace: {}", report.util_trace.sparkline(60));
+
+    if let Some(path) = trace_path {
+        let trace = report.trace.as_ref().expect("trace was enabled for this run");
+        let json = trace.to_chrome_json();
+        let stats = chrome::validate_chrome_trace(&json)
+            .unwrap_or_else(|e| panic!("exported trace failed validation: {e}"));
+        std::fs::write(&path, &json).unwrap();
+        println!(
+            "\ntrace: wrote {path} — {} events, {} duration pairs, {} tracks \
+             (load in chrome://tracing or ui.perfetto.dev)",
+            stats.events, stats.duration_pairs, stats.tracks
+        );
+        // Utilization re-derived from the recorded step spans, keeping
+        // the trailing partial window (a quick run rarely fills the last
+        // 20-step window; without it the tail would be dropped).
+        let mut recs: Vec<(f64, f64)> = trace
+            .spans_of_kind(kind::TRAIN_STEP)
+            .map(|s| (s.host_end_s, s.host_dur_s()))
+            .collect();
+        recs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let util = TimeSeries::from_step_records_opts(&recs, 20, true);
+        println!("traced util (incl. partial window): {}", util.sparkline(60));
+        if let Some(att) = &report.stall_attribution {
+            println!("stall attribution (host seconds; ledger closes per lane):");
+            print!("{}", att.render());
+        }
+    }
 }

@@ -17,6 +17,7 @@ use piperec::etl::pipelines::{build, PipelineKind};
 use piperec::etl::schema::Schema;
 use piperec::fpga::Pipeline;
 use piperec::planner::{compile, PlannerConfig};
+use piperec::trace::{self, kind as tkind};
 use piperec::util::fault::{self, site as fsite};
 
 /// One recorded throughput row for the JSON trajectory file.
@@ -36,6 +37,7 @@ fn write_json(
     concurrent_consumers: &[(usize, f64, f64)],
     embedding_cache: &[(usize, f64, f64)],
     fault_overhead: &[(String, f64)],
+    trace_overhead: &[(String, f64)],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
@@ -97,6 +99,15 @@ fn write_json(
             name,
             x,
             if i + 1 < fault_overhead.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"trace_overhead\": [\n");
+    for (i, (name, x)) in trace_overhead.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": {:?}, \"value\": {:.3}}}{}\n",
+            name,
+            x,
+            if i + 1 < trace_overhead.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -623,6 +634,41 @@ fn main() {
         ("probe_ns_armed_miss".to_string(), ns_armed),
     ];
 
+    // ---- trace probe overhead: the span recorder (`crate::trace`,
+    // exercised by rust/tests/prop_trace.rs) probes every stage of the
+    // pipeline, so its disabled cost — every untraced run — must stay one
+    // relaxed atomic load per probe. The armed-miss row is the cost on an
+    // *unenrolled* thread while someone else's trace is installed
+    // (enrollment-token check, no recording); the acceptance bar keeps it
+    // within ~2× of disabled.
+    let t_probe = || {
+        let mut armed = 0u64;
+        for k in 0..n_probes as u64 {
+            let g = trace::begin(tkind::TRAIN_STEP, 0, k);
+            armed += g.is_armed() as u64;
+        }
+        std::hint::black_box(armed);
+    };
+    let t_disabled = bench(1, iters, t_probe);
+    let t_armed = {
+        let _guard = trace::install();
+        // Un-enroll this thread: probes see an installed trace but fail
+        // the token check — the armed-miss path (an enrolled probe would
+        // record 4M spans per iteration, which is a different bench).
+        trace::enroll(0);
+        bench(1, iters, t_probe)
+    };
+    let t_ns_off = t_disabled.min * 1e9 / n_probes as f64;
+    let t_ns_armed = t_armed.min * 1e9 / n_probes as f64;
+    println!("\ntrace probe overhead ({n_probes} probes):");
+    println!("  no trace installed      : {t_ns_off:.2} ns/probe  (hot-path cost; must stay ~0)");
+    println!("  trace armed, unenrolled : {t_ns_armed:.2} ns/probe  (miss path; bar: ≤ 2× disabled)");
+    let trace_overhead = vec![
+        ("probes".to_string(), n_probes as f64),
+        ("probe_ns_disabled".to_string(), t_ns_off),
+        ("probe_ns_armed_miss".to_string(), t_ns_armed),
+    ];
+
     t.print();
     println!("\ntargets (§Perf): packer and stateless ops in GB/s territory so the");
     println!("host functional emulation is never the bottleneck vs the simulated line rate;");
@@ -638,5 +684,6 @@ fn main() {
         &concurrent_consumers,
         &embedding_cache,
         &fault_overhead,
+        &trace_overhead,
     );
 }

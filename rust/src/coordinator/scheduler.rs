@@ -360,11 +360,13 @@ pub struct PrefetchPipeline {
     lookahead: usize,
     /// Staged-but-uncommitted slots: (row trace, prefetch done time).
     window: std::collections::VecDeque<(Vec<u32>, f64)>,
+    /// Slots staged so far — the trace span key on this lane.
+    staged: u64,
 }
 
 impl PrefetchPipeline {
     pub fn new(cache: crate::runtime::embedding::EmbShardCache, lookahead: usize) -> PrefetchPipeline {
-        PrefetchPipeline { cache, lookahead, window: std::collections::VecDeque::new() }
+        PrefetchPipeline { cache, lookahead, window: std::collections::VecDeque::new(), staged: 0 }
     }
 
     /// The shard cache being driven (tests / introspection).
@@ -383,12 +385,19 @@ impl PrefetchPipeline {
         stage_done_s: f64,
         alive: &F,
     ) {
+        let span = crate::trace::begin(
+            crate::trace::kind::PREFETCH_COMMIT,
+            self.cache.device() as u32,
+            self.staged,
+        );
+        self.staged += 1;
         let trace = self.cache.table().trace(sparse, rows);
         let pf_done = if self.lookahead > 0 {
             self.cache.promote(&trace, stage_done_s, alive)
         } else {
             stage_done_s
         };
+        span.end_sim(stage_done_s, pf_done.max(stage_done_s));
         self.window.push_back((trace, pf_done));
         while self.window.len() > self.lookahead {
             let (trace, pf_done) = self.window.pop_front().expect("window non-empty");

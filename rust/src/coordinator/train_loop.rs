@@ -152,6 +152,7 @@ use crate::fpga::Pipeline;
 use crate::memsys::{ChannelModel, Path};
 use crate::metrics::TimeSeries;
 use crate::runtime::Trainer;
+use crate::trace::{self, kind as tkind};
 use crate::util::fault::{self, site as fsite};
 use crate::util::sched::{self, site};
 
@@ -207,6 +208,13 @@ pub struct TrainConfig {
     /// bitwise identical to the uncached reference. `None` (default)
     /// keeps the whole pool implicit in each replica's flat state.
     pub embedding: Option<crate::runtime::embedding::EmbeddingConfig>,
+    /// Record an end-to-end trace of the run (see [`crate::trace`]):
+    /// dual-clock spans from every stage land in
+    /// [`TrainReport::trace`], with the per-lane stall ledger in
+    /// [`TrainReport::stall_attribution`]. Off (default), every probe
+    /// costs one relaxed atomic load; tracing never changes the training
+    /// arithmetic (pinned bitwise by `rust/tests/prop_trace.rs`).
+    pub trace: bool,
 }
 
 impl Default for TrainConfig {
@@ -224,6 +232,7 @@ impl Default for TrainConfig {
             route: RoutePolicy::RoundRobin,
             allreduce_every: 1,
             embedding: None,
+            trace: false,
         }
     }
 }
@@ -339,6 +348,17 @@ pub struct TrainReport {
     /// Per-lane embedding-cache breakdowns, in device order (empty when
     /// the embedding layer is disabled).
     pub emb: Vec<crate::runtime::embedding::EmbCacheStats>,
+    /// The run's full span trace when [`TrainConfig::trace`] was set
+    /// (`None` otherwise): export with
+    /// [`Trace::to_chrome_json`](crate::trace::Trace::to_chrome_json),
+    /// or inspect the raw tracks.
+    pub trace: Option<crate::trace::Trace>,
+    /// Per-lane stall attribution derived from the trace: every second
+    /// of wall time assigned to exactly one cause, with a ledger that
+    /// closes (attributed ≡ wall within tolerance). The observation
+    /// signal for the self-tuning controller (ROADMAP item 3). `None`
+    /// when tracing was off.
+    pub stall_attribution: Option<crate::trace::StallAttribution>,
 }
 
 impl TrainReport {
@@ -363,18 +383,51 @@ pub fn run(
         return Err(EtlError::Coord("pipeline must be fitted before training".into()));
     }
     match (cfg.path, cfg.devices) {
-        (_, 0) => Err(EtlError::Coord(
-            "TrainConfig::devices must be >= 1 (0 is a config bug, not single-device)".into(),
-        )),
-        (DataPath::Channel, d) if d > 1 => Err(EtlError::Coord(
-            "multi-device training requires DataPath::Arena (per-device staging regions)"
-                .into(),
-        )),
-        (DataPath::Channel, _) if cfg.embedding.is_some() => Err(EtlError::Coord(
-            "the sharded embedding layer requires DataPath::Arena (its hot tier is pinned \
-             in the device arena)"
-                .into(),
-        )),
+        (_, 0) => {
+            return Err(EtlError::Coord(
+                "TrainConfig::devices must be >= 1 (0 is a config bug, not single-device)"
+                    .into(),
+            ))
+        }
+        (DataPath::Channel, d) if d > 1 => {
+            return Err(EtlError::Coord(
+                "multi-device training requires DataPath::Arena (per-device staging regions)"
+                    .into(),
+            ))
+        }
+        (DataPath::Channel, _) if cfg.embedding.is_some() => {
+            return Err(EtlError::Coord(
+                "the sharded embedding layer requires DataPath::Arena (its hot tier is pinned \
+                 in the device arena)"
+                    .into(),
+            ))
+        }
+        _ => {}
+    }
+    if !cfg.trace {
+        return dispatch(pipeline, spec, trainer, cfg);
+    }
+    // Traced run: install the recorder around the whole loop (the
+    // installing thread enrolls here; every thread the loop spawns
+    // inherits enrollment at its spawn point), then attach the collected
+    // trace and its closed stall ledger to the report.
+    let guard = trace::install();
+    let result = dispatch(pipeline, spec, trainer, cfg);
+    let recorded = guard.finish();
+    let mut report = result?;
+    report.stall_attribution = Some(recorded.stall_attribution());
+    report.trace = Some(recorded);
+    Ok(report)
+}
+
+/// Route a validated config to its data path.
+fn dispatch(
+    pipeline: &Pipeline,
+    spec: &DatasetSpec,
+    trainer: &mut Trainer,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    match (cfg.path, cfg.devices) {
         // The embedding layer rides the routed-fleet topology even at
         // devices = 1 (one lane, one shard) — pinned bitwise identical to
         // the plain arena path by the reproducibility matrix.
@@ -415,6 +468,7 @@ fn run_arena(
     let mut dma_retried = 0u64;
     let mut dma_failed = 0u64;
     let fault_token = fault::enroll_token();
+    let trace_token = trace::enroll_token();
 
     std::thread::scope(|scope| -> Result<()> {
         // Producer: the FPGA data plane. Each shard is packed once,
@@ -428,6 +482,8 @@ fn run_arena(
         let transfer_cfg = cfg.transfer.clone();
         let producer = scope.spawn(move || -> Result<(f64, f64, f64, f64, f64, u64, u64, u64, u64)> {
             fault::enroll(fault_token);
+            trace::enroll(trace_token);
+            trace::set_thread_label("producer");
             let queue = queue;
             let mut ingest = AsyncIngest::spawn(
                 ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
@@ -442,13 +498,17 @@ fn run_arena(
                 // Credit wait: a free slot is the DMA engine's permission
                 // to start (§3 backpressure).
                 let t_acq = std::time::Instant::now();
+                let acq_span = trace::begin(tkind::SLOT_ACQUIRE, 0, shards);
                 let Some(mut slot) = arena.acquire() else {
                     // Consumer closed the arena (reached max_steps).
                     break;
                 };
+                acq_span.end();
                 wait_s += t_acq.elapsed().as_secs_f64();
 
+                let pack_span = trace::begin(tkind::PACK, 0, shards);
                 let timing = pipeline.process_into_slot(&shard, &mut slot)?;
+                pack_span.end_io(sim_s, sim_s + timing.elapsed_s, slot.packed_bytes(), 0);
                 ingest.recycle(shard);
                 host_s += timing.host_s;
                 sim_s += timing.elapsed_s;
@@ -486,6 +546,7 @@ fn run_arena(
         // collected (not early-returned) so shutdown below always runs —
         // a producer blocked on a credit is only woken by `arena.close()`.
         let mut consume = || -> Result<()> {
+            trace::set_thread_label("consumer-0");
             let mut window_busy = 0.0f64;
             let mut window_start = 0.0f64;
             const WINDOW_STEPS: u64 = 20;
@@ -496,7 +557,9 @@ fn run_arena(
                         break;
                     }
                     let ts = std::time::Instant::now();
+                    let step_span = trace::begin(tkind::TRAIN_STEP, 0, trainer.steps);
                     trainer.step_device(&view)?;
+                    step_span.end();
                     let dt = ts.elapsed().as_secs_f64();
                     train_busy_s += dt;
                     window_busy += dt;
@@ -587,6 +650,8 @@ fn run_arena(
         exchange_bytes: 0,
         prefetch_wait_s: 0.0,
         emb: Vec::new(),
+        trace: None,
+        stall_attribution: None,
     })
 }
 
@@ -686,6 +751,8 @@ fn fold_next_epoch(
     reduce_wait_s: &mut f64,
 ) -> Result<Fold> {
     let t_wait = std::time::Instant::now();
+    // Covers both the wait for resolution and the replay itself.
+    let span = trace::begin(tkind::REDUCE_APPLY, device as u32, *applied);
     match bus.wait_epoch(*applied) {
         EpochWait::Resolved(ep) => {
             *reduce_wait_s += t_wait.elapsed().as_secs_f64();
@@ -695,9 +762,13 @@ fn fold_next_epoch(
             }
             base.copy_from_slice(replica.state());
             *applied += 1;
+            span.end();
             Ok(Fold::Applied)
         }
-        EpochWait::Finished | EpochWait::Aborted => Ok(Fold::Done),
+        EpochWait::Finished | EpochWait::Aborted => {
+            drop(span); // records the terminal wait too
+            Ok(Fold::Done)
+        }
     }
 }
 
@@ -803,6 +874,7 @@ fn run_multi(
     // same set of steps whether a lane lived or died.
     let cap_rel = max_steps.saturating_sub(steps_at_start);
     let fault_token = fault::enroll_token();
+    let trace_token = trace::enroll_token();
 
     std::thread::scope(|scope| -> Result<()> {
         let arenas = &arenas;
@@ -826,6 +898,8 @@ fn run_multi(
             let worker_tracker = Arc::clone(&tracker);
             workers.push(scope.spawn(move || -> Result<LaneOut> {
                 fault::enroll(fault_token);
+                trace::enroll(trace_token);
+                trace::set_thread_label(&format!("pack-{d}"));
                 let _abort_on_panic = BusAbortOnPanic(bus);
                 let arena = arenas.device(d);
                 let mut out = LaneOut::default();
@@ -853,10 +927,13 @@ fn run_multi(
                         continue;
                     }
                     let t_acq = std::time::Instant::now();
+                    let acq_span = trace::begin(tkind::SLOT_ACQUIRE, d as u32, out.shards);
                     let Some(mut slot) = arena.acquire() else {
                         break; // fleet shut down (arena closed)
                     };
+                    acq_span.end();
                     out.wait_s += t_acq.elapsed().as_secs_f64();
+                    let pack_span = trace::begin(tkind::PACK, d as u32, out.shards);
                     let timing = match pipeline.process_into_slot(&shard, &mut slot) {
                         Ok(t) => t,
                         Err(e) => {
@@ -865,6 +942,12 @@ fn run_multi(
                             break;
                         }
                     };
+                    pack_span.end_io(
+                        out.sim_s,
+                        out.sim_s + timing.elapsed_s,
+                        slot.packed_bytes(),
+                        0,
+                    );
                     let _ = recycle_tx.send(shard);
                     out.host_s += timing.host_s;
                     out.sim_s += timing.elapsed_s;
@@ -958,6 +1041,8 @@ fn run_multi(
         let seed = cfg.seed;
         let router_thread = scope.spawn(move || -> Result<f64> {
             fault::enroll(fault_token);
+            trace::enroll(trace_token);
+            trace::set_thread_label("router");
             let _abort_on_panic = BusAbortOnPanic(bus);
             let shard_txs = shard_txs;
             let mut router = router;
@@ -1025,6 +1110,8 @@ fn run_multi(
             let tracker = Arc::clone(&tracker);
             consumers.push(scope.spawn(move || -> Result<(Trainer, ConsumerOut)> {
                 fault::enroll(fault_token);
+                trace::enroll(trace_token);
+                trace::set_thread_label(&format!("consumer-{d}"));
                 let _abort_on_panic = BusAbortOnPanic(bus);
                 let mut out = ConsumerOut::default();
                 let mut base = replica.state_to_vec()?;
@@ -1104,15 +1191,21 @@ fn run_multi(
                                 break;
                             }
                             let ts = std::time::Instant::now();
+                            let step_span = trace::begin(tkind::TRAIN_STEP, d as u32, g_abs);
                             match replica.grad_step(view) {
                                 Ok(grad) => {
+                                    step_span.end();
                                     out.recs.push(StepRec {
                                         g_abs,
                                         end_s: t0.elapsed().as_secs_f64(),
                                         busy_s: ts.elapsed().as_secs_f64(),
                                         loss: grad.loss as f32,
                                     });
-                                    if let Err(e) = bus.post(rel, d, grad) {
+                                    let post_span =
+                                        trace::begin(tkind::REDUCE_POST, d as u32, rel);
+                                    let posted = bus.post(rel, d, grad);
+                                    post_span.end();
+                                    if let Err(e) = posted {
                                         // Pending-window cap blown (the
                                         // allreduce_every=0 footgun):
                                         // abort rather than buffer
@@ -1306,6 +1399,8 @@ fn run_multi(
         exchange_bytes: emb.iter().map(|e| e.exchange_bytes).sum(),
         prefetch_wait_s: emb.iter().map(|e| e.prefetch_wait_s).sum(),
         emb,
+        trace: None,
+        stall_attribution: None,
     })
 }
 
@@ -1339,12 +1434,15 @@ fn run_channel(
     let mut util_trace = TimeSeries::default();
 
     let fault_token = fault::enroll_token();
+    let trace_token = trace::enroll_token();
     std::thread::scope(|scope| -> Result<()> {
         let pool = &pool;
         let ingest_cfg = cfg.ingest.clone();
         let ingest_spec = spec.clone();
         let producer = scope.spawn(move || -> Result<(f64, f64, f64, u64, u64)> {
             fault::enroll(fault_token);
+            trace::enroll(trace_token);
+            trace::set_thread_label("producer");
             let queue = queue;
             let mut ingest = AsyncIngest::spawn(
                 ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
@@ -1356,7 +1454,9 @@ fn run_channel(
             let mut shards = 0u64;
             while let Some((_, shard)) = ingest.next()? {
                 let mut packed = pool.take();
+                let pack_span = trace::begin(tkind::PACK, 0, shards);
                 let timing = pipeline.process_packed_into(&shard, &mut packed)?;
+                pack_span.end_io(sim_s, sim_s + timing.elapsed_s, packed.bytes(), 0);
                 ingest.recycle(shard);
                 host_s += timing.host_s;
                 sim_s += timing.elapsed_s;
@@ -1373,6 +1473,7 @@ fn run_channel(
         // Consumer: the trainer steps on borrowed chunk views (the
         // incomplete tail of each staged batch is dropped, matching
         // DLRM's fixed batch shapes).
+        trace::set_thread_label("consumer-0");
         let mut window_busy = 0.0f64;
         let mut window_start = 0.0f64;
         const WINDOW_STEPS: u64 = 20;
@@ -1384,7 +1485,9 @@ fn run_channel(
                     break;
                 }
                 let ts = std::time::Instant::now();
+                let step_span = trace::begin(tkind::TRAIN_STEP, 0, trainer.steps);
                 trainer.step_view(&view)?;
+                step_span.end();
                 let dt = ts.elapsed().as_secs_f64();
                 train_busy_s += dt;
                 window_busy += dt;
@@ -1462,6 +1565,8 @@ fn run_channel(
         exchange_bytes: 0,
         prefetch_wait_s: 0.0,
         emb: Vec::new(),
+        trace: None,
+        stall_attribution: None,
     })
 }
 

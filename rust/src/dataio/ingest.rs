@@ -95,6 +95,7 @@ use crate::error::{EtlError, Result};
 use crate::etl::column::Batch;
 use crate::etl::schema::Schema;
 use crate::memsys::{ChannelModel, Path};
+use crate::trace::{self, kind as tkind};
 use crate::util::fault::{self, site as fsite};
 
 /// Ordering/freshness semantics of batch delivery (the training-aware
@@ -491,6 +492,9 @@ struct WorkerCtx {
     /// Fault-plan enrollment of the spawning thread, inherited by every
     /// worker (and respawn) so an installed plan covers the whole fleet.
     fault_token: u64,
+    /// Trace enrollment, inherited the same way — an installed trace
+    /// records the ingest fleet's `IngestRead` spans.
+    trace_token: u64,
 }
 
 impl WorkerCtx {
@@ -515,13 +519,13 @@ impl WorkerCtx {
         if fault::inject(fsite::WORKER_DEATH, i as u64) {
             panic!("{}: injected ingest worker death on shard {i}", fault::INJECTED_PANIC);
         }
+        let span = trace::begin(tkind::INGEST_READ, trace::LANE_NONE, i as u64);
         let mut sent = resume;
         let mut attempt = 0u32;
-        loop {
+        let keep_going = loop {
             match produce_shard(&self.input, i, self.chunk_rows, &self.pool, &self.tx, &mut sent)
             {
-                Ok(true) => return true,
-                Ok(false) => return false, // consumer hung up
+                Ok(keep_going) => break keep_going, // false: consumer hung up
                 Err(e) => {
                     if attempt < self.max_retries {
                         attempt += 1;
@@ -534,16 +538,18 @@ impl WorkerCtx {
                         continue;
                     }
                     if self.quarantine {
-                        return self
+                        break self
                             .tx
                             .send(WorkerMsg::Quarantined { shard: i, chunks_sent: sent })
                             .is_ok();
                     }
                     let _ = self.tx.send(WorkerMsg::Fatal(e));
-                    return false;
+                    break false;
                 }
             }
-        }
+        };
+        span.end_retries(attempt);
+        keep_going
     }
 
     /// Spawn worker `w`: claims shards until the input is exhausted, and
@@ -553,6 +559,8 @@ impl WorkerCtx {
         let ctx = Arc::clone(self);
         std::thread::spawn(move || {
             fault::enroll(ctx.fault_token);
+            trace::enroll(ctx.trace_token);
+            trace::set_thread_label(&format!("ingest-w{w}"));
             let current = AtomicUsize::new(usize::MAX);
             let body = std::panic::AssertUnwindSafe(|| loop {
                 let Some((i, resume)) = ctx.claim() else { break };
@@ -653,6 +661,7 @@ impl AsyncIngest {
             backoff: cfg.backoff,
             quarantine: cfg.quarantine,
             fault_token: fault::enroll_token(),
+            trace_token: trace::enroll_token(),
         });
         let handles: Vec<JoinHandle<()>> = (0..workers).map(|w| ctx.spawn_worker(w)).collect();
         AsyncIngest {

@@ -30,6 +30,7 @@ use std::collections::VecDeque;
 
 use crate::error::{EtlError, Result};
 use crate::memsys::{ChannelModel, Path};
+use crate::trace::{self, kind as tkind};
 use crate::util::fault::{self, site as fsite};
 
 /// Knobs of the DMA engine.
@@ -126,6 +127,9 @@ pub struct TransferEngine {
     retried: u64,
     /// Transfers abandoned after exhausting `max_retries`.
     failed: u64,
+    /// Device lane this engine's clock belongs to (trace span lane;
+    /// engines outside a [`TransferSet`] default to 0).
+    device: u32,
 }
 
 impl TransferEngine {
@@ -143,7 +147,14 @@ impl TransferEngine {
             issued: 0,
             retried: 0,
             failed: 0,
+            device: 0,
         }
+    }
+
+    /// Tag this engine's clock with its device lane for trace spans.
+    pub fn with_device(mut self, device: u32) -> TransferEngine {
+        self.device = device;
+        self
     }
 
     /// Engine on the training-ingest path (FPGA → GPU P2P) with the
@@ -171,6 +182,7 @@ impl TransferEngine {
     pub fn submit(&mut self, now_s: f64, bytes: u64) -> Result<TransferRecord> {
         let key = self.issued;
         self.issued += 1;
+        let span = trace::begin(tkind::DMA_TRANSFER, self.device, key);
         let wire_s = self
             .channel
             .time_chunked(bytes, self.cfg.chunk_bytes, self.cfg.depth);
@@ -186,6 +198,7 @@ impl TransferEngine {
                 self.busy_s += attempt_s;
                 if retries == self.cfg.max_retries {
                     self.failed += 1;
+                    span.end_retries(retries + 1);
                     return Err(EtlError::Fault { site: fsite::name(fsite::DMA), key });
                 }
                 retries += 1;
@@ -209,6 +222,7 @@ impl TransferEngine {
                 self.records.pop_front();
             }
             self.records.push_back(rec);
+            span.end_io(rec.start_s, rec.done_s, bytes, retries);
             return Ok(rec);
         }
     }
@@ -280,7 +294,9 @@ impl TransferSet {
     pub fn new(devices: usize, cfg: TransferConfig) -> TransferSet {
         assert!(devices >= 1, "transfer set needs at least one device");
         TransferSet {
-            engines: (0..devices).map(|_| TransferEngine::new(cfg.clone())).collect(),
+            engines: (0..devices)
+                .map(|d| TransferEngine::new(cfg.clone()).with_device(d as u32))
+                .collect(),
         }
     }
 

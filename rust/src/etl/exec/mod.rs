@@ -71,6 +71,7 @@ use crate::etl::dag::{Dag, EtlState, Node, NodeId, SinkRole};
 use crate::etl::ops::kernels;
 use crate::etl::ops::vocab::VocabTable;
 use crate::etl::ops::OpSpec;
+use crate::trace::{self, kind as tkind};
 
 /// Execution knobs.
 #[derive(Debug, Clone)]
@@ -429,6 +430,8 @@ impl FusedEngine {
     /// steady-state allocation when `out` comes from a [`BufferPool`]).
     pub fn execute_into(&self, input: &Batch, state: &EtlState, out: &mut PackedBatch) -> Result<()> {
         let rows = input.rows();
+        // Host-only engine span; records on every exit path via drop.
+        let _span = trace::begin(tkind::FUSED_EXEC, trace::LANE_NONE, rows as u64);
         out.rows = rows;
         out.n_dense = self.n_dense;
         out.n_sparse = self.n_sparse;

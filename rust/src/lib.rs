@@ -26,6 +26,9 @@
 //!   comparison systems.
 //! * [`power`] — platform power and Perf/W models (Table 3).
 //! * [`dataio`] — columnar format + synthetic Criteo-faithful datasets.
+//! * [`trace`] — end-to-end pipeline tracing: install-guarded dual-clock
+//!   span recorder, Chrome `trace_event` export, and stall-attribution
+//!   critical-path analysis whose per-lane ledger provably closes.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -43,6 +46,7 @@ pub mod metrics;
 pub mod planner;
 pub mod power;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 /// Convenience re-exports for examples and downstream users.

@@ -1,5 +1,13 @@
 //! Runtime metrics: counters, histograms, and time-series traces (used for
 //! GPU-utilization plots, Fig. 14).
+//!
+//! These are the *aggregate* observables — end-of-run scalars and
+//! windowed series. The timeline-level view (which stage ran when, on
+//! which clock, and what each lane's stalls are attributable to) lives
+//! in [`crate::trace`]: [`TimeSeries::from_step_records`] here consumes
+//! the same per-step `(end_s, busy_s)` records the train loop derives
+//! from its `TrainStep` span stream, and the trace's stall ledger is the
+//! checked-invariant refinement of the report's disjoint wait counters.
 
 use std::collections::BTreeMap;
 
@@ -47,9 +55,11 @@ impl Histogram {
         if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
     }
 
-    /// Approximate quantile from bucket midpoints.
+    /// Approximate quantile from bucket midpoints. A histogram built
+    /// `with_bounds(vec![])` has a single overflow bucket and no bound
+    /// to name, so every quantile is 0.0 (never a panic).
     pub fn quantile(&self, q: f64) -> f64 {
-        if self.n == 0 {
+        if self.n == 0 || self.bounds.is_empty() {
             return 0.0;
         }
         let target = (q * self.n as f64).ceil() as u64;
@@ -66,6 +76,8 @@ impl Histogram {
                 };
             }
         }
+        // q > 1 (or float round-up) overshoots every bucket: clamp to
+        // the top bound.
         *self.bounds.last().unwrap()
     }
 }
@@ -120,21 +132,47 @@ impl TimeSeries {
     /// The multi-device train loop merges the per-consumer step records
     /// and builds its Fig. 14-style utilization trace here; a trailing
     /// partial window is dropped (it always counts toward the mean).
+    /// Short runs that cannot afford to lose up to `window_steps - 1`
+    /// steps of signal should use [`from_step_records_opts`]
+    /// (Self::from_step_records_opts) with `include_partial = true`.
     pub fn from_step_records(records: &[(f64, f64)], window_steps: usize) -> TimeSeries {
+        TimeSeries::from_step_records_opts(records, window_steps, false)
+    }
+
+    /// [`from_step_records`](Self::from_step_records) with control over
+    /// the trailing partial window: with `include_partial` the leftover
+    /// steps emit one final point at the last step's end time,
+    /// normalized by the partial window's **actual** span — the busy
+    /// fraction stays comparable to the full windows rather than being
+    /// diluted or dropped.
+    pub fn from_step_records_opts(
+        records: &[(f64, f64)],
+        window_steps: usize,
+        include_partial: bool,
+    ) -> TimeSeries {
         let mut ts = TimeSeries::default();
         if window_steps == 0 {
             return ts;
         }
         let mut window_busy = 0.0f64;
         let mut window_start = 0.0f64;
+        let mut in_window = 0usize;
+        let mut last_end = 0.0f64;
         for (i, &(end_s, busy_s)) in records.iter().enumerate() {
             window_busy += busy_s;
+            in_window += 1;
+            last_end = end_s;
             if (i + 1) % window_steps == 0 {
                 let span = (end_s - window_start).max(1e-9);
                 ts.push(end_s, (window_busy / span).min(1.0));
                 window_busy = 0.0;
                 window_start = end_s;
+                in_window = 0;
             }
+        }
+        if include_partial && in_window > 0 {
+            let span = (last_end - window_start).max(1e-9);
+            ts.push(last_end, (window_busy / span).min(1.0));
         }
         ts
     }
@@ -266,6 +304,47 @@ mod tests {
         // Trailing partial window (and window_steps == 0) emit nothing.
         assert!(TimeSeries::from_step_records(&recs[..3], 2).points.len() == 1);
         assert!(TimeSeries::from_step_records(&recs, 0).points.is_empty());
+    }
+
+    #[test]
+    fn empty_bounds_histogram_never_panics() {
+        // with_bounds(vec![]) has only the overflow bucket; record +
+        // quantile used to hit `bounds.last().unwrap()`.
+        let mut h = Histogram::with_bounds(vec![]);
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(42.0);
+        h.record(7.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+        // The q > 1 fallthrough is also safe with and without bounds.
+        assert_eq!(h.quantile(2.0), 0.0);
+        let mut h = Histogram::with_bounds(vec![10.0]);
+        h.record(5.0);
+        assert_eq!(h.quantile(2.0), 10.0);
+    }
+
+    #[test]
+    fn from_step_records_partial_window_is_normalized_by_its_span() {
+        // 3 steps of 0.5 s busy ending at 1, 2, 3; window of 2.
+        let recs = [(1.0, 0.5), (2.0, 0.5), (3.0, 0.5)];
+        let ts = TimeSeries::from_step_records_opts(&recs, 2, true);
+        assert_eq!(ts.points.len(), 2);
+        // Full window [0, 2): 1.0 / 2.0.
+        assert!((ts.points[0].1 - 0.5).abs() < 1e-12);
+        // Partial window [2, 3): 0.5 busy over its ACTUAL 1.0 s span —
+        // not diluted by the nominal 2-step width.
+        assert!((ts.points[1].0 - 3.0).abs() < 1e-12);
+        assert!((ts.points[1].1 - 0.5).abs() < 1e-12);
+        // include_partial = false keeps the historical behavior, and an
+        // exact multiple of the window emits no extra point.
+        assert_eq!(TimeSeries::from_step_records_opts(&recs, 2, false).points.len(), 1);
+        assert_eq!(
+            TimeSeries::from_step_records_opts(&recs[..2], 2, true).points.len(),
+            1
+        );
+        assert!(TimeSeries::from_step_records_opts(&recs, 0, true).points.is_empty());
     }
 
     #[test]

@@ -1,0 +1,565 @@
+//! Chrome `trace_event` JSON export and validation.
+//!
+//! [`to_chrome_json`] renders a [`Trace`] in the Chrome trace-event
+//! format (the JSON-object flavor: `{"traceEvents": [...]}`) loadable in
+//! `chrome://tracing` and <https://ui.perfetto.dev>. Layout:
+//!
+//! * **pid 1, "host"** — one tid per recorded thread track, named by its
+//!   [`set_thread_label`](super::set_thread_label) label; spans are B/E
+//!   duration pairs on the host clock (µs since install).
+//! * **pid 2, "sim"** — one tid per (lane, kind) pair of sim-stamped
+//!   spans (`lane0/pack`, `lane0/dma_transfer`, …). Sim clocks of
+//!   different kinds on a lane are independent (ETL clock vs DMA engine
+//!   clock), so giving each its own track keeps every track's B/E pairs
+//!   properly nested.
+//!
+//! Event `args` carry the span identity (`lane`, `key`) and annotations
+//! (`bytes`, `retries`). The crate is dependency-free, so both the
+//! writer and the validating reader ([`validate_chrome_trace`]) are
+//! hand-rolled; the validator checks exactly what CI's `trace-validate`
+//! step needs — well-formed JSON, required event fields, monotone
+//! per-track timestamps, and balanced name-matched B/E pairs.
+
+use super::{kind, Span, Trace, LANE_NONE};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Render a trace as Chrome trace-event JSON (see module docs).
+pub fn to_chrome_json(trace: &Trace) -> String {
+    let mut out = String::with_capacity(256 + trace.span_count() * 160);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    let mut meta = |out: &mut String, first: &mut bool, name: &str, pid: u32, tid: u32, arg: &str| {
+        sep(out, first);
+        let _ = write!(
+            out,
+            "{{\"name\":\"{name}\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"ts\":0,\"args\":{{\"name\":\"{}\"}}}}",
+            escape(arg)
+        );
+    };
+
+    meta(&mut out, &mut first, "process_name", 1, 0, "host");
+    meta(&mut out, &mut first, "process_name", 2, 0, "sim");
+
+    // Host tracks: one tid per thread.
+    for (i, track) in trace.tracks.iter().enumerate() {
+        let tid = i as u32 + 1;
+        meta(&mut out, &mut first, "thread_name", 1, tid, &track.label);
+        emit_track(&mut out, &mut first, 1, tid, &track.spans, |s| {
+            (s.host_start_s, s.host_end_s)
+        });
+    }
+
+    // Sim tracks: one tid per (lane, kind), deterministic order.
+    let mut sim: BTreeMap<(u32, u16), Vec<Span>> = BTreeMap::new();
+    for s in trace.spans() {
+        if s.has_sim() {
+            sim.entry((s.lane, s.kind)).or_default().push(*s);
+        }
+    }
+    for (i, ((lane, k), spans)) in sim.into_iter().enumerate() {
+        let tid = i as u32 + 1;
+        let label = if lane == LANE_NONE {
+            format!("sim/{}", kind::name(k))
+        } else {
+            format!("lane{lane}/{}", kind::name(k))
+        };
+        meta(&mut out, &mut first, "thread_name", 2, tid, &label);
+        emit_track(&mut out, &mut first, 2, tid, &spans, |s| {
+            (s.sim_start_s, s.sim_end_s)
+        });
+    }
+
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+fn sep(out: &mut String, first: &mut bool) {
+    if *first {
+        *first = false;
+    } else {
+        out.push(',');
+    }
+}
+
+/// Emit one track's spans as properly nested B/E duration pairs with
+/// non-decreasing timestamps.
+///
+/// Spans on a track are either disjoint or nested (they come from
+/// sequential stage code, or from a monotone sim clock), but they arrive
+/// in end-time order. Sort by (start asc, end desc) so parents precede
+/// children, then walk with an explicit stack: before opening the next
+/// span, close every stacked span that ends at or before its start.
+fn emit_track<F>(out: &mut String, first: &mut bool, pid: u32, tid: u32, spans: &[Span], clock: F)
+where
+    F: Fn(&Span) -> (f64, f64),
+{
+    let mut ordered: Vec<(f64, f64, &Span)> = spans
+        .iter()
+        .map(|s| {
+            let (b, e) = clock(s);
+            (b, e, s)
+        })
+        .collect();
+    ordered.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal))
+    });
+    // (end_s, name) of currently open spans.
+    let mut stack: Vec<(f64, &'static str)> = Vec::new();
+    for (b, e, s) in ordered {
+        while let Some(&(open_end, name)) = stack.last() {
+            if open_end <= b {
+                emit_end(out, first, pid, tid, name, open_end);
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        // Overlap without nesting can't come from well-formed stage code,
+        // but clamp defensively so the output still validates: treat the
+        // enclosing open span's end as this span's cap.
+        let e = match stack.last() {
+            Some(&(open_end, _)) => e.min(open_end),
+            None => e,
+        };
+        let name = kind::name(s.kind);
+        sep(out, first);
+        let lane = if s.lane == LANE_NONE { -1i64 } else { s.lane as i64 };
+        let _ = write!(
+            out,
+            "{{\"name\":\"{name}\",\"ph\":\"B\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3},\"args\":{{\"lane\":{lane},\"key\":{},\"bytes\":{},\"retries\":{}}}}}",
+            b * 1e6,
+            s.key,
+            s.bytes,
+            s.retries
+        );
+        stack.push((e.max(b), name));
+    }
+    while let Some((open_end, name)) = stack.pop() {
+        emit_end(out, first, pid, tid, name, open_end);
+    }
+}
+
+fn emit_end(out: &mut String, first: &mut bool, pid: u32, tid: u32, name: &str, end_s: f64) {
+    sep(out, first);
+    let _ = write!(
+        out,
+        "{{\"name\":\"{name}\",\"ph\":\"E\",\"pid\":{pid},\"tid\":{tid},\"ts\":{:.3}}}",
+        end_s * 1e6
+    );
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader (the crate is dependency-free) + trace validator.
+
+/// A parsed JSON value — just enough for validating exported traces.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a JSON document. Strict enough for round-tripping our own
+/// exports and the bench files; not a general-purpose parser.
+pub fn parse_json(text: &str) -> Result<JsonValue, String> {
+    let bytes = text.as_bytes();
+    let mut p = Parser { bytes, pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != bytes.len() {
+        return Err(format!("trailing data at byte {}", p.pos));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied().ok_or_else(|| "unexpected end of input".into())
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek()? != b {
+            return Err(format!("expected '{}' at byte {}", b as char, self.pos));
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<JsonValue, String> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(JsonValue::Str(self.string()?)),
+            b't' => self.lit("true", JsonValue::Bool(true)),
+            b'f' => self.lit("false", JsonValue::Bool(false)),
+            b'n' => self.lit("null", JsonValue::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: JsonValue) -> Result<JsonValue, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue, String> {
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(JsonValue::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = *self
+                .bytes
+                .get(self.pos)
+                .ok_or_else(|| "unterminated string".to_string())?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = *self
+                        .bytes
+                        .get(self.pos)
+                        .ok_or_else(|| "unterminated escape".to_string())?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| "bad \\u escape".to_string())?;
+                            self.pos += 4;
+                            out.push(char::from_u32(hex).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.pos - 1)),
+                    }
+                }
+                _ => {
+                    // Re-sync to char boundary for multi-byte UTF-8.
+                    let rest = &self.bytes[self.pos - 1..];
+                    let s = std::str::from_utf8(rest).map_err(|_| "invalid utf8".to_string())?;
+                    let c = s.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8() - 1;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(JsonValue::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Arr(out));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue, String> {
+        self.expect(b'{')?;
+        let mut out = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(JsonValue::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            out.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Obj(out));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
+/// Summary of a validated trace document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChromeStats {
+    /// Total events, including metadata.
+    pub events: usize,
+    /// Completed B/E duration pairs.
+    pub duration_pairs: usize,
+    /// Distinct (pid, tid) tracks carrying duration events.
+    pub tracks: usize,
+}
+
+/// Validate a Chrome trace-event JSON document against the invariants
+/// the format requires to load cleanly: a `traceEvents` array, each
+/// event carrying `name`/`ph`/`pid`/`tid` (+ numeric `ts` for B/E),
+/// non-decreasing timestamps per (pid, tid) track, and balanced B/E
+/// pairs whose names match LIFO.
+pub fn validate_chrome_trace(text: &str) -> Result<ChromeStats, String> {
+    let doc = parse_json(text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "missing traceEvents array".to_string())?;
+
+    // per-track: (last ts, open B-name stack)
+    let mut tracks: BTreeMap<(i64, i64), (f64, Vec<String>)> = BTreeMap::new();
+    let mut pairs = 0usize;
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing name"))?;
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let pid = ev
+            .get("pid")
+            .and_then(|v| v.as_num())
+            .ok_or_else(|| format!("event {i}: missing pid"))? as i64;
+        let tid = ev
+            .get("tid")
+            .and_then(|v| v.as_num())
+            .ok_or_else(|| format!("event {i}: missing tid"))? as i64;
+        if ph == "M" {
+            continue;
+        }
+        if ph != "B" && ph != "E" {
+            return Err(format!("event {i}: unsupported ph {ph:?}"));
+        }
+        let ts = ev
+            .get("ts")
+            .and_then(|v| v.as_num())
+            .ok_or_else(|| format!("event {i}: missing ts"))?;
+        if !ts.is_finite() {
+            return Err(format!("event {i}: non-finite ts"));
+        }
+        let entry = tracks.entry((pid, tid)).or_insert((f64::NEG_INFINITY, Vec::new()));
+        if ts < entry.0 {
+            return Err(format!(
+                "event {i}: ts {ts} < previous {} on track ({pid},{tid})",
+                entry.0
+            ));
+        }
+        entry.0 = ts;
+        match ph {
+            "B" => entry.1.push(name.to_string()),
+            _ => {
+                let open = entry
+                    .1
+                    .pop()
+                    .ok_or_else(|| format!("event {i}: E without open B on ({pid},{tid})"))?;
+                if open != name {
+                    return Err(format!(
+                        "event {i}: E name {name:?} does not match open B {open:?}"
+                    ));
+                }
+                pairs += 1;
+            }
+        }
+    }
+    for ((pid, tid), (_, stack)) in &tracks {
+        if !stack.is_empty() {
+            return Err(format!(
+                "track ({pid},{tid}): {} unclosed B event(s): {stack:?}",
+                stack.len()
+            ));
+        }
+    }
+    Ok(ChromeStats { events: events.len(), duration_pairs: pairs, tracks: tracks.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ThreadTrack, Trace};
+    use super::*;
+
+    fn span(kind: u16, lane: u32, b: f64, e: f64, sim: Option<(f64, f64)>) -> Span {
+        Span {
+            kind,
+            lane,
+            key: 0,
+            host_start_s: b,
+            host_end_s: e,
+            sim_start_s: sim.map_or(f64::NAN, |s| s.0),
+            sim_end_s: sim.map_or(f64::NAN, |s| s.1),
+            bytes: 0,
+            retries: 0,
+        }
+    }
+
+    fn sample_trace() -> Trace {
+        Trace {
+            tracks: vec![
+                ThreadTrack {
+                    label: "pack-0".into(),
+                    spans: vec![
+                        // fused_exec nested inside pack
+                        span(kind::FUSED_EXEC, LANE_NONE, 0.11, 0.18, None),
+                        span(kind::PACK, 0, 0.1, 0.2, Some((0.0, 0.4))),
+                        span(kind::DMA_TRANSFER, 0, 0.2, 0.25, Some((0.4, 0.9))),
+                    ],
+                },
+                ThreadTrack {
+                    label: "consumer-0".into(),
+                    spans: vec![
+                        span(kind::TRAIN_STEP, 0, 0.3, 0.5, None),
+                        span(kind::TRAIN_STEP, 0, 0.5, 0.7, None),
+                    ],
+                },
+            ],
+            wall_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn export_round_trips_through_validator() {
+        let json = to_chrome_json(&sample_trace());
+        let stats = validate_chrome_trace(&json).expect("export must validate");
+        // 5 spans → 5 duration pairs across host + sim tracks:
+        // host pack-0 (3), host consumer-0 (2), sim lane0/pack (1),
+        // sim lane0/dma_transfer (1) → 7 pairs total.
+        assert_eq!(stats.duration_pairs, 7);
+        assert_eq!(stats.tracks, 4);
+        // Thread names present for Perfetto.
+        assert!(json.contains("\"thread_name\""));
+        assert!(json.contains("lane0/pack"));
+        assert!(json.contains("lane0/dma_transfer"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_traces() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{\"noTraceEvents\":1}").is_err());
+        // E without B
+        let bad = "{\"traceEvents\":[{\"name\":\"x\",\"ph\":\"E\",\"pid\":1,\"tid\":1,\"ts\":1}]}";
+        assert!(validate_chrome_trace(bad).is_err());
+        // non-monotone ts on one track
+        let bad = "{\"traceEvents\":[\
+            {\"name\":\"x\",\"ph\":\"B\",\"pid\":1,\"tid\":1,\"ts\":5},\
+            {\"name\":\"x\",\"ph\":\"E\",\"pid\":1,\"tid\":1,\"ts\":4}]}";
+        assert!(validate_chrome_trace(bad).is_err());
+        // mismatched B/E names
+        let bad = "{\"traceEvents\":[\
+            {\"name\":\"x\",\"ph\":\"B\",\"pid\":1,\"tid\":1,\"ts\":1},\
+            {\"name\":\"y\",\"ph\":\"E\",\"pid\":1,\"tid\":1,\"ts\":2}]}";
+        assert!(validate_chrome_trace(bad).is_err());
+        // unclosed B
+        let bad = "{\"traceEvents\":[{\"name\":\"x\",\"ph\":\"B\",\"pid\":1,\"tid\":1,\"ts\":1}]}";
+        assert!(validate_chrome_trace(bad).is_err());
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_numbers() {
+        let v = parse_json("{\"a\\n\":[1,-2.5e3,true,null,\"\\u0041\"]}").unwrap();
+        let arr = v.get("a\n").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(arr[0].as_num(), Some(1.0));
+        assert_eq!(arr[1].as_num(), Some(-2500.0));
+        assert_eq!(arr[4].as_str(), Some("A"));
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("{\"a\":1} trailing").is_err());
+    }
+}

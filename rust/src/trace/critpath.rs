@@ -1,0 +1,349 @@
+//! Stall-attribution critical-path analysis.
+//!
+//! For each device lane, walk the consumer's span chain backwards over
+//! the traced wall time and attribute **every second to exactly one
+//! cause**:
+//!
+//! * `train_s` — the lane's replica was stepping ([`kind::TRAIN_STEP`]).
+//! * `reduce_s` — posting to or waiting on the reduce bus
+//!   ([`kind::REDUCE_POST`] / [`kind::REDUCE_APPLY`]).
+//! * `backpressure_s` — idle while the lane's producer was blocked on an
+//!   arena credit ([`kind::SLOT_ACQUIRE`]): the consumer starved because
+//!   staging had nowhere to put the next shard.
+//! * `etl_s` — idle while the lane's ETL stage was packing
+//!   ([`kind::PACK`], with its nested [`kind::FUSED_EXEC`]): compute-
+//!   bound ETL on the critical path.
+//! * `ingest_s` — idle while some ingest worker was reading
+//!   ([`kind::INGEST_READ`]) and neither of the above: I/O-bound.
+//! * `other_s` — idle with no traced cause in flight (startup ramp,
+//!   scheduler latency, drain).
+//!
+//! The busy classes come from the consumer thread itself (sequential, so
+//! the intervals are disjoint); its idle gaps are attributed by interval
+//! intersection against the cause classes in the priority order above —
+//! the same backwards walk as the paper's utilization argument, but as a
+//! checked invariant: per lane, the six classes **sum to the traced wall
+//! time** ([`LaneAttribution::closes`], default tolerance 1%).
+//! `prop_trace.rs` pins closure under fuzzed schedules; ROADMAP item 3's
+//! feedback controller reads this breakdown as its observation signal.
+
+use super::{kind, Trace, LANE_NONE};
+
+/// One lane's closed stall ledger (all fields in host seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaneAttribution {
+    pub lane: u32,
+    /// The wall time this ledger partitions.
+    pub wall_s: f64,
+    pub train_s: f64,
+    pub reduce_s: f64,
+    pub etl_s: f64,
+    pub ingest_s: f64,
+    pub backpressure_s: f64,
+    pub other_s: f64,
+}
+
+impl LaneAttribution {
+    /// Sum of all attributed classes.
+    pub fn attributed_s(&self) -> f64 {
+        self.train_s + self.reduce_s + self.etl_s + self.ingest_s + self.backpressure_s
+            + self.other_s
+    }
+
+    /// Does the ledger close: attributed ≡ wall within `tol` (relative)?
+    pub fn closes(&self, tol: f64) -> bool {
+        let wall = self.wall_s.max(1e-12);
+        ((self.attributed_s() - self.wall_s) / wall).abs() <= tol
+    }
+}
+
+/// Per-lane stall attribution for a finished [`Trace`]
+/// (`TrainReport::stall_attribution` when tracing is enabled).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StallAttribution {
+    pub per_lane: Vec<LaneAttribution>,
+}
+
+impl StallAttribution {
+    /// Every lane's ledger closes within `tol`.
+    pub fn closes(&self, tol: f64) -> bool {
+        self.per_lane.iter().all(|l| l.closes(tol))
+    }
+
+    /// The attribution for one lane, if traced.
+    pub fn lane(&self, lane: u32) -> Option<&LaneAttribution> {
+        self.per_lane.iter().find(|l| l.lane == lane)
+    }
+
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let mut s = String::from(
+            "lane     wall_s    train    reduce      etl   ingest  backpr.    other\n",
+        );
+        for l in &self.per_lane {
+            s.push_str(&format!(
+                "{:<4} {:>9.4} {:>8.4} {:>9.4} {:>8.4} {:>8.4} {:>8.4} {:>8.4}\n",
+                l.lane, l.wall_s, l.train_s, l.reduce_s, l.etl_s, l.ingest_s, l.backpressure_s,
+                l.other_s
+            ));
+        }
+        s
+    }
+}
+
+/// Half-open interval set helpers (inputs need not be sorted).
+fn normalize(mut v: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    v.retain(|(b, e)| e > b && b.is_finite() && e.is_finite());
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(v.len());
+    for (b, e) in v {
+        match out.last_mut() {
+            Some(last) if b <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((b, e)),
+        }
+    }
+    out
+}
+
+fn total(v: &[(f64, f64)]) -> f64 {
+    v.iter().map(|(b, e)| e - b).sum()
+}
+
+/// `a \ b`; both normalized.
+fn subtract(a: &[(f64, f64)], b: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    for &(ab, ae) in a {
+        let mut cur = ab;
+        for &(bb, be) in b {
+            if be <= cur {
+                continue;
+            }
+            if bb >= ae {
+                break;
+            }
+            if bb > cur {
+                out.push((cur, bb.min(ae)));
+            }
+            cur = cur.max(be);
+            if cur >= ae {
+                break;
+            }
+        }
+        if cur < ae {
+            out.push((cur, ae));
+        }
+    }
+    out
+}
+
+/// `a ∩ b`; both normalized.
+fn intersect(a: &[(f64, f64)], b: &[(f64, f64)]) -> Vec<(f64, f64)> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            out.push((lo, hi));
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Clip every interval to `[0, wall]`.
+fn clip(v: Vec<(f64, f64)>, wall: f64) -> Vec<(f64, f64)> {
+    v.into_iter()
+        .map(|(b, e)| (b.max(0.0), e.min(wall)))
+        .filter(|(b, e)| e > b)
+        .collect()
+}
+
+/// Compute the per-lane stall attribution for a trace (see module docs).
+pub fn attribute(trace: &Trace) -> StallAttribution {
+    let wall = trace.wall_s.max(0.0);
+    let host = |s: &super::Span| (s.host_start_s, s.host_end_s);
+
+    // Lanes = lanes that stepped (or applied a reduce epoch).
+    let mut lanes: Vec<u32> = trace
+        .spans()
+        .filter(|s| {
+            s.lane != LANE_NONE
+                && matches!(s.kind, kind::TRAIN_STEP | kind::REDUCE_APPLY | kind::REDUCE_POST)
+        })
+        .map(|s| s.lane)
+        .collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+
+    // Cause classes shared across lanes.
+    let ingest_all = normalize(
+        trace.spans_of_kind(kind::INGEST_READ).map(host).collect(),
+    );
+
+    let per_lane = lanes
+        .into_iter()
+        .map(|lane| {
+            let of = |k: u16| -> Vec<(f64, f64)> {
+                trace
+                    .spans_of_kind(k)
+                    .filter(|s| s.lane == lane)
+                    .map(host)
+                    .collect()
+            };
+
+            // Busy classes from the lane's (sequential) consumer thread.
+            let train = clip(normalize(of(kind::TRAIN_STEP)), wall);
+            let reduce = clip(
+                normalize(
+                    of(kind::REDUCE_POST).into_iter().chain(of(kind::REDUCE_APPLY)).collect(),
+                ),
+                wall,
+            );
+            // REDUCE spans may nest around/within step boundaries on the
+            // consumer thread; give TRAIN_STEP priority so busy classes
+            // stay disjoint.
+            let reduce = subtract(&reduce, &train);
+
+            // Idle = wall minus busy.
+            let busy = normalize(train.iter().chain(reduce.iter()).copied().collect());
+            let idle = subtract(&[(0.0, wall)], &busy);
+
+            // Attribute idle by cause, in priority order; each cause
+            // consumes its overlap and passes the remainder on.
+            let backpr = clip(normalize(of(kind::SLOT_ACQUIRE)), wall);
+            let idle_backpr = intersect(&idle, &backpr);
+            let idle = subtract(&idle, &idle_backpr);
+
+            let etl = clip(normalize(of(kind::PACK)), wall);
+            let idle_etl = intersect(&idle, &etl);
+            let idle = subtract(&idle, &idle_etl);
+
+            let idle_ingest = intersect(&idle, &clip(ingest_all.clone(), wall));
+            let idle = subtract(&idle, &idle_ingest);
+
+            LaneAttribution {
+                lane,
+                wall_s: wall,
+                train_s: total(&train),
+                reduce_s: total(&reduce),
+                etl_s: total(&idle_etl),
+                ingest_s: total(&idle_ingest),
+                backpressure_s: total(&idle_backpr),
+                other_s: total(&idle),
+            }
+        })
+        .collect();
+
+    StallAttribution { per_lane }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Span, ThreadTrack};
+    use super::*;
+
+    fn span(kind: u16, lane: u32, b: f64, e: f64) -> Span {
+        Span {
+            kind,
+            lane,
+            key: 0,
+            host_start_s: b,
+            host_end_s: e,
+            sim_start_s: f64::NAN,
+            sim_end_s: f64::NAN,
+            bytes: 0,
+            retries: 0,
+        }
+    }
+
+    fn trace_of(spans: Vec<Span>, wall_s: f64) -> Trace {
+        Trace { tracks: vec![ThreadTrack { label: "t".into(), spans }], wall_s }
+    }
+
+    #[test]
+    fn interval_algebra() {
+        let a = normalize(vec![(3.0, 4.0), (0.0, 2.0), (1.0, 2.5)]);
+        assert_eq!(a, vec![(0.0, 2.5), (3.0, 4.0)]);
+        assert_eq!(subtract(&a, &[(1.0, 3.5)]), vec![(0.0, 1.0), (3.5, 4.0)]);
+        assert_eq!(intersect(&a, &[(2.0, 3.5)]), vec![(2.0, 2.5), (3.0, 3.5)]);
+        assert!(subtract(&a, &a).is_empty());
+        assert!((total(&a) - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_partitions_wall_time_by_priority() {
+        // wall [0,10): train [2,4), reduce [4,5);
+        // idle [0,2) ∪ [5,10). Causes: slot_acquire [5,6),
+        // pack [0,1) ∪ [5.5,8) (pack ∩ remaining idle = [0,1) ∪ [6,8)),
+        // ingest [0,9) picks up [1,2) ∪ [8,9); other = [9,10).
+        let t = trace_of(
+            vec![
+                span(kind::TRAIN_STEP, 0, 2.0, 4.0),
+                span(kind::REDUCE_APPLY, 0, 4.0, 5.0),
+                span(kind::SLOT_ACQUIRE, 0, 5.0, 6.0),
+                span(kind::PACK, 0, 0.0, 1.0),
+                span(kind::PACK, 0, 5.5, 8.0),
+                span(kind::INGEST_READ, LANE_NONE, 0.0, 9.0),
+            ],
+            10.0,
+        );
+        let att = attribute(&t);
+        let l = att.lane(0).unwrap();
+        assert!((l.train_s - 2.0).abs() < 1e-9);
+        assert!((l.reduce_s - 1.0).abs() < 1e-9);
+        assert!((l.backpressure_s - 1.0).abs() < 1e-9);
+        assert!((l.etl_s - 3.0).abs() < 1e-9);
+        assert!((l.ingest_s - 2.0).abs() < 1e-9);
+        assert!((l.other_s - 1.0).abs() < 1e-9);
+        assert!(att.closes(1e-9));
+        assert!(att.render().contains("lane"));
+    }
+
+    #[test]
+    fn overlapping_busy_spans_still_close() {
+        // Reduce span enclosing a train span must not double-count.
+        let t = trace_of(
+            vec![
+                span(kind::TRAIN_STEP, 0, 1.0, 3.0),
+                span(kind::REDUCE_POST, 0, 0.5, 3.5),
+            ],
+            4.0,
+        );
+        let att = attribute(&t);
+        let l = att.lane(0).unwrap();
+        assert!((l.train_s - 2.0).abs() < 1e-9);
+        assert!((l.reduce_s - 1.0).abs() < 1e-9);
+        assert!((l.other_s - 1.0).abs() < 1e-9);
+        assert!(att.closes(1e-9));
+    }
+
+    #[test]
+    fn lanes_are_attributed_independently() {
+        let t = trace_of(
+            vec![
+                span(kind::TRAIN_STEP, 0, 0.0, 1.0),
+                span(kind::TRAIN_STEP, 1, 0.0, 2.0),
+                span(kind::PACK, 1, 2.0, 3.0),
+            ],
+            3.0,
+        );
+        let att = attribute(&t);
+        assert_eq!(att.per_lane.len(), 2);
+        assert!((att.lane(0).unwrap().train_s - 1.0).abs() < 1e-9);
+        assert!((att.lane(0).unwrap().other_s - 2.0).abs() < 1e-9);
+        assert!((att.lane(1).unwrap().etl_s - 1.0).abs() < 1e-9);
+        assert!(att.closes(1e-9));
+    }
+
+    #[test]
+    fn empty_trace_yields_no_lanes() {
+        let att = attribute(&trace_of(vec![], 1.0));
+        assert!(att.per_lane.is_empty());
+        assert!(att.closes(0.01));
+    }
+}

@@ -1,0 +1,704 @@
+//! End-to-end pipeline tracing: deterministic dual-clock spans over every
+//! stage of the ingest → exec → pack → slot → DMA → train → reduce chain.
+//!
+//! The recorder is install-guarded in the style of [`crate::util::sched`]
+//! and [`crate::util::fault`]: a probe ([`begin`]) costs **one relaxed
+//! atomic load** when no trace is installed (pinned by the
+//! `trace-overhead` section of the hotpath bench), and recording is
+//! **enrollment-scoped** — each [`install`] opens a fresh epoch, enrolls
+//! the installing thread, and only threads carrying that epoch's token
+//! ([`enroll_token`]/[`enroll`]) record spans, so concurrently running
+//! untraced tests stay invisible to an installed trace and vice versa.
+//! Spans land in **lock-free per-thread buffers** (a plain thread-local
+//! `Vec` — no synchronization on the record path) that flush into the
+//! global sink when the thread exits or the trace is finished.
+//!
+//! # Span taxonomy
+//!
+//! | kind | stage | sim clock | key |
+//! |------|-------|-----------|-----|
+//! | `IngestRead` | ingest worker producing one shard | — | shard index |
+//! | `FusedExec` | fused engine apply+pack execution | — | rows |
+//! | `Pack` | lane stage: shard → staged arena slot | lane ETL clock | lane shard ordinal |
+//! | `SlotAcquire` | producer blocked on an arena credit | — | lane shard ordinal |
+//! | `DmaTransfer` | chunked P2P write on the lane engine | lane DMA clock | transfer ordinal |
+//! | `PrefetchCommit` | embedding hot-set commit for a slot | lane DMA clock | slot ordinal |
+//! | `TrainStep` | one trainer step on a device replica | — | global step |
+//! | `ReducePost` | posting a gradient contribution | — | run-relative step |
+//! | `ReduceApply` | waiting for + folding a reduce epoch | — | epoch index |
+//!
+//! # The dual-clock convention
+//!
+//! Every span is stamped on the **host wall clock** (seconds since the
+//! trace was installed; `host_start_s`/`host_end_s`). Spans whose stage
+//! runs on a simulated clock — the paper's FPGA ETL clock ([`kind::PACK`],
+//! cumulative per lane) and the per-device DMA engine clock
+//! ([`kind::DMA_TRANSFER`], [`kind::PREFETCH_COMMIT`]) — additionally
+//! carry a **sim interval** (`sim_start_s`/`sim_end_s`); host-native
+//! stages carry `NaN` there. Host stamps vary run to run; the sim
+//! timeline ([`Trace::sim_timeline`]) is a pure function of the config
+//! for deterministic setups (round-robin routing, in-order ingest), so
+//! `rust/tests/prop_trace.rs` replays it bitwise under fuzzed schedules.
+//! Spans also carry fault/retry annotations: `retries` counts re-issued
+//! attempts (DMA re-submits, ingest read retries) behind the span.
+//!
+//! # Reading a 2-lane Chrome trace (worked example)
+//!
+//! Run `cargo run --release --example end_to_end_training -- --devices 2
+//! --trace trace.json` (or pass `--trace` to the `e2e_training` bench)
+//! and load the file in `chrome://tracing` or <https://ui.perfetto.dev>.
+//! Two process groups appear:
+//!
+//! * **host** — one track per thread: `router`, `ingest-w0/1`, `pack-0`,
+//!   `pack-1`, `consumer-0`, `consumer-1`. On `pack-0` each shard shows
+//!   `slot_acquire` (credit wait) → `pack` (with the nested `fused_exec`
+//!   engine span) → `dma_transfer` (submit). On `consumer-0`, rows of
+//!   `train_step` alternate with `reduce_post`/`reduce_apply`; a gap
+//!   between two `train_step`s that lines up with a `pack` on `pack-0` is
+//!   ETL starvation, one that lines up with nothing is ingest/startup.
+//! * **sim** — per-lane simulated-clock tracks (`lane0/pack`,
+//!   `lane0/dma_transfer`, …): the paper's overlap picture. When the DMA
+//!   spans on `lane0/dma_transfer` start later than their `pack` spans
+//!   end, the engine clock (not the ETL clock) is the bottleneck.
+//!
+//! The same gap analysis, automated and summed per lane, is
+//! [`Trace::stall_attribution`] — its ledger **closes**: per lane, the
+//! attributed causes sum to the traced wall time (a checked invariant,
+//! tolerance 1%), which is what turns the report's disjoint wait counters
+//! into an auditable breakdown. `TrainReport::stall_attribution` carries
+//! it when [`crate::coordinator::TrainConfig::trace`] is set, and ROADMAP
+//! item 3's feedback controller consumes it as the observation signal.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+pub mod chrome;
+pub mod critpath;
+
+pub use critpath::{LaneAttribution, StallAttribution};
+
+/// Typed span kinds (`Span::kind`). Stable small integers so per-kind
+/// live counters are a flat array.
+pub mod kind {
+    /// Ingest worker producing one shard (key = shard index).
+    pub const INGEST_READ: u16 = 1;
+    /// Fused engine apply+pack execution (host-side, key = rows).
+    pub const FUSED_EXEC: u16 = 2;
+    /// Stage-level shard → staged slot on a lane, sim-stamped on the
+    /// lane's cumulative ETL clock (key = lane shard ordinal).
+    pub const PACK: u16 = 3;
+    /// Producer blocked acquiring an arena slot credit.
+    pub const SLOT_ACQUIRE: u16 = 4;
+    /// Chunked P2P DMA, sim-stamped on the device engine clock (key =
+    /// engine transfer ordinal; `retries` = re-issued attempts).
+    pub const DMA_TRANSFER: u16 = 5;
+    /// Embedding hot-set promotion/commit for one staged slot.
+    pub const PREFETCH_COMMIT: u16 = 6;
+    /// One trainer step on a device replica (key = absolute global step).
+    pub const TRAIN_STEP: u16 = 7;
+    /// Posting a gradient contribution to the reduce bus.
+    pub const REDUCE_POST: u16 = 8;
+    /// Waiting for and folding a resolved reduce epoch (key = epoch).
+    pub const REDUCE_APPLY: u16 = 9;
+
+    pub(crate) const MAX: usize = 10;
+
+    /// Human-readable kind name (Chrome event names, snapshot rows).
+    pub fn name(k: u16) -> &'static str {
+        match k {
+            INGEST_READ => "ingest_read",
+            FUSED_EXEC => "fused_exec",
+            PACK => "pack",
+            SLOT_ACQUIRE => "slot_acquire",
+            DMA_TRANSFER => "dma_transfer",
+            PREFETCH_COMMIT => "prefetch_commit",
+            TRAIN_STEP => "train_step",
+            REDUCE_POST => "reduce_post",
+            REDUCE_APPLY => "reduce_apply",
+            _ => "unknown",
+        }
+    }
+}
+
+/// `Span::lane` value for spans not owned by a device lane (ingest
+/// workers, the fused engine).
+pub const LANE_NONE: u32 = u32::MAX;
+
+/// One recorded span: a typed stage interval on the host clock, with an
+/// optional simulated-clock interval and I/O annotations (see the module
+/// docs for the taxonomy and the dual-clock convention).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    /// One of the [`kind`] constants.
+    pub kind: u16,
+    /// Device lane the stage ran for, or [`LANE_NONE`].
+    pub lane: u32,
+    /// Stable identity within (lane, kind): shard index, step, ordinal.
+    pub key: u64,
+    /// Host seconds since the trace was installed.
+    pub host_start_s: f64,
+    pub host_end_s: f64,
+    /// Simulated-clock interval; `NaN` for host-native stages.
+    pub sim_start_s: f64,
+    pub sim_end_s: f64,
+    /// Payload bytes behind the span (0 when not applicable).
+    pub bytes: u64,
+    /// Fault/retry annotation: re-issued attempts folded into this span.
+    pub retries: u32,
+}
+
+impl Span {
+    /// Host duration in seconds.
+    pub fn host_dur_s(&self) -> f64 {
+        (self.host_end_s - self.host_start_s).max(0.0)
+    }
+
+    /// Does this span carry a simulated-clock interval?
+    pub fn has_sim(&self) -> bool {
+        self.sim_start_s.is_finite() && self.sim_end_s.is_finite()
+    }
+}
+
+/// All spans recorded by one thread, in record (end-time) order.
+#[derive(Debug, Clone)]
+pub struct ThreadTrack {
+    /// Label set by [`set_thread_label`], or the thread id's debug form.
+    pub label: String,
+    pub spans: Vec<Span>,
+}
+
+// ---------------------------------------------------------------------
+// Global recorder state (install-guarded, mirror of util::fault).
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+/// Epoch token of the installed trace (0 = none).
+static CURRENT: AtomicU64 = AtomicU64::new(0);
+static NEXT_EPOCH: AtomicU64 = AtomicU64::new(0);
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+static STATE: Mutex<Option<TraceState>> = Mutex::new(None);
+static SINK: Mutex<Sink> = Mutex::new(Sink { epoch: 0, tracks: Vec::new() });
+
+/// Live per-kind counters for [`snapshot`]: span counts and host ns.
+static LIVE_COUNT: [AtomicU64; kind::MAX] = [const { AtomicU64::new(0) }; kind::MAX];
+static LIVE_NS: [AtomicU64; kind::MAX] = [const { AtomicU64::new(0) }; kind::MAX];
+
+struct TraceState {
+    epoch: u64,
+    t0: Instant,
+}
+
+struct Sink {
+    epoch: u64,
+    tracks: Vec<ThreadTrack>,
+}
+
+thread_local! {
+    /// Epoch token this thread is enrolled under (0 = never enrolled).
+    static ENROLLED: Cell<u64> = const { Cell::new(0) };
+    static LOCAL: RefCell<LocalBuf> =
+        RefCell::new(LocalBuf { epoch: 0, t0: None, label: None, spans: Vec::new() });
+}
+
+/// Per-thread span buffer. Dropping it (thread exit) flushes whatever the
+/// trace hasn't collected yet into the global sink.
+struct LocalBuf {
+    epoch: u64,
+    t0: Option<Instant>,
+    label: Option<String>,
+    spans: Vec<Span>,
+}
+
+impl LocalBuf {
+    fn flush(&mut self) {
+        if self.spans.is_empty() {
+            return;
+        }
+        let spans = std::mem::take(&mut self.spans);
+        let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+        // Stale buffers (their trace already finished) are discarded.
+        if sink.epoch != 0 && sink.epoch == self.epoch {
+            let label = self
+                .label
+                .clone()
+                .unwrap_or_else(|| format!("{:?}", std::thread::current().id()));
+            sink.tracks.push(ThreadTrack { label, spans });
+        }
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// The calling thread's enrollment token — capture before spawning a
+/// worker and hand to [`enroll`] inside, so the trace covering the
+/// spawner covers its fleet (same protocol as `util::fault`).
+pub fn enroll_token() -> u64 {
+    ENROLLED.with(|c| c.get())
+}
+
+/// Adopt a spawner's enrollment token on this thread (0 un-enrolls).
+pub fn enroll(token: u64) {
+    ENROLLED.with(|c| c.set(token));
+}
+
+/// Name this thread's track in the exported trace ("pack-0", "router").
+/// Cheap and unconditional — call once per thread.
+pub fn set_thread_label(label: &str) {
+    LOCAL.with(|l| l.borrow_mut().label = Some(label.to_string()));
+}
+
+/// Is a trace currently installed?
+pub fn is_active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Install a trace until [`TraceGuard::finish`] (or drop). Serializes on
+/// a process-global lock — concurrently running traced tests queue here
+/// instead of mixing spans. The installing thread is enrolled; threads it
+/// spawns through the library's spawn points inherit enrollment.
+pub fn install() -> TraceGuard {
+    let serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let epoch = NEXT_EPOCH.fetch_add(1, Ordering::SeqCst) + 1;
+    let t0 = Instant::now();
+    {
+        let mut st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+        *st = Some(TraceState { epoch, t0 });
+    }
+    {
+        let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+        sink.epoch = epoch;
+        sink.tracks.clear();
+    }
+    for k in 0..kind::MAX {
+        LIVE_COUNT[k].store(0, Ordering::Relaxed);
+        LIVE_NS[k].store(0, Ordering::Relaxed);
+    }
+    ENROLLED.with(|c| c.set(epoch));
+    CURRENT.store(epoch, Ordering::SeqCst);
+    ACTIVE.store(true, Ordering::SeqCst);
+    TraceGuard { serial: Some(serial), epoch, t0 }
+}
+
+/// RAII handle for an installed trace: [`finish`](Self::finish) collects
+/// the recorded tracks; dropping without finishing discards them.
+pub struct TraceGuard {
+    serial: Option<MutexGuard<'static, ()>>,
+    epoch: u64,
+    t0: Instant,
+}
+
+impl TraceGuard {
+    /// Stop recording and collect every enrolled thread's spans. Threads
+    /// that exited already flushed through their buffer's destructor;
+    /// the calling thread flushes here.
+    pub fn finish(mut self) -> Trace {
+        let wall_s = self.t0.elapsed().as_secs_f64();
+        self.deactivate();
+        LOCAL.with(|l| l.borrow_mut().flush());
+        let tracks = {
+            let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+            let tracks = std::mem::take(&mut sink.tracks);
+            sink.epoch = 0;
+            tracks
+        };
+        self.serial = None;
+        Trace { tracks, wall_s }
+    }
+
+    fn deactivate(&mut self) {
+        ACTIVE.store(false, Ordering::SeqCst);
+        CURRENT.store(0, Ordering::SeqCst);
+        let mut st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+        *st = None;
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        if self.serial.is_some() {
+            // finish() was never called: discard instead of leaking into
+            // the next install's sink.
+            self.deactivate();
+            let mut sink = SINK.lock().unwrap_or_else(|p| p.into_inner());
+            if sink.epoch == self.epoch {
+                sink.epoch = 0;
+                sink.tracks.clear();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Probe API.
+
+/// An open span. Obtained from [`begin`]; closed by one of the `end*`
+/// methods (or by drop, which records a host-only span) — so every probe
+/// records exactly one balanced interval even on error paths.
+pub struct SpanGuard {
+    state: Option<Open>,
+}
+
+struct Open {
+    kind: u16,
+    lane: u32,
+    key: u64,
+    t0: Instant,
+    start_s: f64,
+}
+
+/// Open a span of `kind` for `lane`/`key`. One relaxed atomic load when
+/// no trace is installed; when installed, records only on enrolled
+/// threads.
+#[inline]
+pub fn begin(kind: u16, lane: u32, key: u64) -> SpanGuard {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return SpanGuard { state: None };
+    }
+    begin_slow(kind, lane, key)
+}
+
+#[cold]
+fn begin_slow(kind: u16, lane: u32, key: u64) -> SpanGuard {
+    let token = ENROLLED.with(|c| c.get());
+    if token == 0 || token != CURRENT.load(Ordering::Relaxed) {
+        return SpanGuard { state: None };
+    }
+    // Sync this thread's buffer to the installed epoch (fetches the
+    // trace's time base once per thread per install).
+    let t0 = LOCAL.with(|l| {
+        let mut buf = l.borrow_mut();
+        if buf.epoch != token {
+            buf.flush();
+            let st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+            let Some(st) = st.as_ref() else { return None };
+            if st.epoch != token {
+                return None;
+            }
+            buf.epoch = token;
+            buf.t0 = Some(st.t0);
+        }
+        buf.t0
+    });
+    let Some(t0) = t0 else { return SpanGuard { state: None } };
+    SpanGuard {
+        state: Some(Open { kind, lane, key, t0, start_s: t0.elapsed().as_secs_f64() }),
+    }
+}
+
+impl SpanGuard {
+    /// Is this guard recording (trace installed + thread enrolled)?
+    pub fn is_armed(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Close as a host-only span.
+    #[inline]
+    pub fn end(mut self) {
+        self.close(f64::NAN, f64::NAN, 0, 0);
+    }
+
+    /// Close as a host-only span with a byte annotation.
+    #[inline]
+    pub fn end_bytes(mut self, bytes: u64) {
+        self.close(f64::NAN, f64::NAN, bytes, 0);
+    }
+
+    /// Close with a simulated-clock interval.
+    #[inline]
+    pub fn end_sim(mut self, sim_start_s: f64, sim_end_s: f64) {
+        self.close(sim_start_s, sim_end_s, 0, 0);
+    }
+
+    /// Close with a sim interval plus I/O and retry annotations.
+    #[inline]
+    pub fn end_io(mut self, sim_start_s: f64, sim_end_s: f64, bytes: u64, retries: u32) {
+        self.close(sim_start_s, sim_end_s, bytes, retries);
+    }
+
+    /// Close as host-only with a retry annotation (failed attempts).
+    #[inline]
+    pub fn end_retries(mut self, retries: u32) {
+        self.close(f64::NAN, f64::NAN, 0, retries);
+    }
+
+    fn close(&mut self, sim_start_s: f64, sim_end_s: f64, bytes: u64, retries: u32) {
+        let Some(open) = self.state.take() else { return };
+        let end_s = open.t0.elapsed().as_secs_f64();
+        let span = Span {
+            kind: open.kind,
+            lane: open.lane,
+            key: open.key,
+            host_start_s: open.start_s,
+            host_end_s: end_s,
+            sim_start_s,
+            sim_end_s,
+            bytes,
+            retries,
+        };
+        let k = (open.kind as usize).min(kind::MAX - 1);
+        LIVE_COUNT[k].fetch_add(1, Ordering::Relaxed);
+        LIVE_NS[k].fetch_add(((end_s - open.start_s) * 1e9) as u64, Ordering::Relaxed);
+        LOCAL.with(|l| l.borrow_mut().spans.push(span));
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.state.is_some() {
+            // Guard dropped on an error/early-return path: still record a
+            // balanced host-only span.
+            self.close(f64::NAN, f64::NAN, 0, 0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Live exposition.
+
+/// Point-in-time exposition of the live per-kind counters — readable
+/// mid-run (the long-lived online loop's text endpoint), no allocation on
+/// the record path.
+#[derive(Debug, Clone)]
+pub struct PipelineSnapshot {
+    /// Is a trace currently recording?
+    pub active: bool,
+    /// Per-kind `(name, span count, host seconds)` rows, zero rows
+    /// elided.
+    pub rows: Vec<(&'static str, u64, f64)>,
+}
+
+impl PipelineSnapshot {
+    /// Total spans across all kinds.
+    pub fn total_spans(&self) -> u64 {
+        self.rows.iter().map(|(_, c, _)| c).sum()
+    }
+
+    /// Prometheus-style text rendering.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("piperec_trace_active {}\n", self.active as u8));
+        for (name, count, secs) in &self.rows {
+            s.push_str(&format!("piperec_trace_spans{{kind=\"{name}\"}} {count}\n"));
+            s.push_str(&format!(
+                "piperec_trace_host_seconds{{kind=\"{name}\"}} {secs:.6}\n"
+            ));
+        }
+        s
+    }
+}
+
+/// Read the live counters of the currently (or most recently) installed
+/// trace.
+pub fn snapshot() -> PipelineSnapshot {
+    let rows = (1..kind::MAX as u16)
+        .filter_map(|k| {
+            let count = LIVE_COUNT[k as usize].load(Ordering::Relaxed);
+            if count == 0 {
+                return None;
+            }
+            let secs = LIVE_NS[k as usize].load(Ordering::Relaxed) as f64 / 1e9;
+            Some((kind::name(k), count, secs))
+        })
+        .collect();
+    PipelineSnapshot { active: is_active(), rows }
+}
+
+// ---------------------------------------------------------------------
+// The collected trace.
+
+/// One simulated-clock event of [`Trace::sim_timeline`]: bit-exact
+/// comparable across runs (the schedule-independence invariant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SimEvent {
+    pub lane: u32,
+    pub kind: u16,
+    pub key: u64,
+    pub sim_start_bits: u64,
+    pub sim_end_bits: u64,
+    pub bytes: u64,
+}
+
+/// A finished trace: every enrolled thread's span track plus the traced
+/// wall time.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub tracks: Vec<ThreadTrack>,
+    /// Host seconds from install to finish — the wall the stall ledger
+    /// closes against.
+    pub wall_s: f64,
+}
+
+impl Trace {
+    /// Total recorded spans.
+    pub fn span_count(&self) -> usize {
+        self.tracks.iter().map(|t| t.spans.len()).sum()
+    }
+
+    /// Iterate every span across tracks.
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.tracks.iter().flat_map(|t| t.spans.iter())
+    }
+
+    /// Spans of one kind, across tracks.
+    pub fn spans_of_kind(&self, k: u16) -> impl Iterator<Item = &Span> {
+        self.spans().filter(move |s| s.kind == k)
+    }
+
+    /// The simulated-clock timeline: every sim-stamped span as a
+    /// [`SimEvent`], sorted by (lane, kind, key). For deterministic
+    /// configs (round-robin routing, in-order ingest, fixed seeds) this
+    /// is a pure function of the config — identical bitwise across
+    /// thread schedules (pinned by `prop_trace.rs`) — because every sim
+    /// clock (lane ETL clock, per-device DMA engine clock) advances only
+    /// by modeled costs, never by host timing.
+    pub fn sim_timeline(&self) -> Vec<SimEvent> {
+        let mut v: Vec<SimEvent> = self
+            .spans()
+            .filter(|s| s.has_sim())
+            .map(|s| SimEvent {
+                lane: s.lane,
+                kind: s.kind,
+                key: s.key,
+                sim_start_bits: s.sim_start_s.to_bits(),
+                sim_end_bits: s.sim_end_s.to_bits(),
+                bytes: s.bytes,
+            })
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Export as Chrome `trace_event` JSON (see [`chrome`]).
+    pub fn to_chrome_json(&self) -> String {
+        chrome::to_chrome_json(self)
+    }
+
+    /// Walk the span chains backwards and attribute every second of wall
+    /// time per lane to exactly one cause (see [`critpath`]).
+    pub fn stall_attribution(&self) -> StallAttribution {
+        critpath::attribute(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_probe_records_nothing_and_is_unarmed() {
+        let _serial = INSTALL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        assert!(!is_active());
+        let g = begin(kind::PACK, 0, 0);
+        assert!(!g.is_armed());
+        g.end();
+    }
+
+    #[test]
+    fn install_records_spans_on_enrolled_threads_only() {
+        let guard = install();
+        let g = begin(kind::TRAIN_STEP, 0, 7);
+        assert!(g.is_armed());
+        g.end_bytes(64);
+        let token = enroll_token();
+        std::thread::scope(|scope| {
+            // Enrolled child records; unenrolled child does not.
+            scope.spawn(move || {
+                enroll(token);
+                set_thread_label("child");
+                begin(kind::PACK, 1, 0).end_sim(0.5, 1.5);
+            });
+            scope.spawn(|| {
+                let g = begin(kind::PACK, 9, 9);
+                assert!(!g.is_armed());
+                g.end();
+            });
+        });
+        let trace = guard.finish();
+        assert_eq!(trace.span_count(), 2);
+        assert!(trace.tracks.iter().any(|t| t.label == "child"));
+        let step = trace.spans_of_kind(kind::TRAIN_STEP).next().unwrap();
+        assert_eq!((step.lane, step.key, step.bytes), (0, 7, 64));
+        assert!(!step.has_sim());
+        let pack = trace.spans_of_kind(kind::PACK).next().unwrap();
+        assert!(pack.has_sim());
+        assert_eq!((pack.sim_start_s, pack.sim_end_s), (0.5, 1.5));
+        // Sim timeline carries exactly the sim-stamped span.
+        let tl = trace.sim_timeline();
+        assert_eq!(tl.len(), 1);
+        assert_eq!(tl[0].lane, 1);
+    }
+
+    #[test]
+    fn guard_drop_records_balanced_host_span() {
+        let guard = install();
+        {
+            let _g = begin(kind::SLOT_ACQUIRE, 0, 3);
+            // dropped without an explicit end (error path)
+        }
+        let trace = guard.finish();
+        assert_eq!(trace.span_count(), 1);
+        let s = trace.spans().next().unwrap();
+        assert_eq!(s.kind, kind::SLOT_ACQUIRE);
+        assert!(s.host_end_s >= s.host_start_s);
+    }
+
+    #[test]
+    fn finish_without_spans_is_empty_and_guard_drop_discards() {
+        {
+            let guard = install();
+            let trace = guard.finish();
+            assert_eq!(trace.span_count(), 0);
+            assert!(trace.wall_s >= 0.0);
+        }
+        {
+            let guard = install();
+            begin(kind::PACK, 0, 0).end();
+            drop(guard); // not finished: spans discarded
+        }
+        let guard = install();
+        let trace = guard.finish();
+        assert_eq!(trace.span_count(), 0, "stale spans leaked across installs");
+    }
+
+    #[test]
+    fn snapshot_counts_live_spans_and_renders() {
+        let guard = install();
+        begin(kind::DMA_TRANSFER, 0, 0).end_io(0.0, 1.0, 1024, 2);
+        begin(kind::DMA_TRANSFER, 1, 0).end_io(0.0, 2.0, 2048, 0);
+        let snap = snapshot();
+        assert!(snap.active);
+        assert_eq!(snap.total_spans(), 2);
+        let row = snap.rows.iter().find(|(n, _, _)| *n == "dma_transfer").unwrap();
+        assert_eq!(row.1, 2);
+        let text = snap.render();
+        assert!(text.contains("piperec_trace_active 1"));
+        assert!(text.contains("piperec_trace_spans{kind=\"dma_transfer\"} 2"));
+        let trace = guard.finish();
+        let dma: Vec<_> = trace.spans_of_kind(kind::DMA_TRANSFER).collect();
+        assert_eq!(dma.len(), 2);
+        assert_eq!(dma[0].retries, 2);
+    }
+
+    #[test]
+    fn stale_tokens_from_prior_installs_never_record() {
+        let stale = {
+            let _g = install();
+            enroll_token()
+        };
+        let guard = install();
+        std::thread::scope(|scope| {
+            scope.spawn(move || {
+                enroll(stale);
+                let g = begin(kind::PACK, 0, 0);
+                assert!(!g.is_armed());
+                g.end();
+            });
+        });
+        assert_eq!(guard.finish().span_count(), 0);
+    }
+}

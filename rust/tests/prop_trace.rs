@@ -1,0 +1,366 @@
+//! Schedule-fuzzing properties of the end-to-end pipeline trace
+//! (`crate::trace`): the recorder must be **invisible** to training
+//! (tracing on ≡ tracing off, bitwise, for losses and parameters), the
+//! simulated-clock span timeline must be a **pure function of the
+//! config** (identical across fuzzed thread schedules for deterministic
+//! setups), and the stall-attribution ledger must **close** — per lane,
+//! the attributed causes sum to the traced wall time — on *every*
+//! schedule, because an observability layer whose numbers depend on who
+//! won a race is worse than none.
+//!
+//! Same fixture family and fuzzing harness (`util::sched::SchedFuzzer`)
+//! as `prop_concurrent.rs`; CI runs this suite under
+//! `--test-threads {1, 8}` in the tier-1 `trace-validate` step.
+
+use piperec::coordinator::{train, DataPath, RoutePolicy, TrainConfig, TrainReport};
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{DeliveryPolicy, IngestConfig};
+use piperec::dataio::synth::SynthConfig;
+use piperec::devmem::ArenaConfig;
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
+use piperec::runtime::embedding::{EmbeddingConfig, ShardPolicy};
+use piperec::runtime::Trainer;
+use piperec::trace::chrome::validate_chrome_trace;
+use piperec::trace::{kind, SimEvent};
+use piperec::util::prop::assert_bits_equal;
+use piperec::util::sched::SchedFuzzer;
+
+/// Base seed of the fuzzing campaign (CI varies `PIPEREC_FUZZ_SEED_BASE`).
+fn campaign_base() -> u64 {
+    std::env::var("PIPEREC_FUZZ_SEED_BASE")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED_F422)
+}
+
+/// Stateless packing dag matching the reference-trainer meta (same
+/// generator family as prop_concurrent / prop_devmem).
+fn passthrough_dag(nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-trace");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    for i in 0..nd {
+        let d = dag.source(format!("t_i{i}"), ColType::F32);
+        let f = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[d],
+        );
+        dag.sink(format!("dense{i}"), f, SinkRole::Dense);
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink(format!("sparse{i}"), m, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn custom_spec(schema: Schema, rows: usize, shards: usize) -> DatasetSpec {
+    DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-trace",
+        schema,
+        rows,
+        paper_rows: rows as u64,
+        shards,
+        synth: SynthConfig::default(),
+        ssd_bound: false,
+    }
+}
+
+fn trainer_meta(batch: usize, nd: usize, ns: usize) -> ModelMeta {
+    ModelMeta {
+        batch,
+        n_dense: nd,
+        n_sparse: ns,
+        vocab: 128,
+        embed_dim: 1,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![nd] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![ns * 32] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+const ND: usize = 2;
+const NS: usize = 2;
+const STEP_ROWS: usize = 16;
+
+fn fixture() -> (Pipeline, DatasetSpec) {
+    let schema = Schema::tabular("t", ND, NS, 64);
+    let dag = passthrough_dag(ND, NS);
+    dag.validate(&schema).unwrap();
+    // 3 shards × 40 rows → 2 full 16-row steps per shard, 6 global steps.
+    let spec = custom_spec(schema.clone(), 120, 3);
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    (Pipeline::new(plan), spec)
+}
+
+fn fleet_cfg(devices: usize, traced: bool) -> TrainConfig {
+    TrainConfig {
+        max_steps: usize::MAX / 2,
+        loss_every: 1,
+        staging_buffers: 2,
+        seed: 99,
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
+        },
+        path: DataPath::Arena,
+        arena: ArenaConfig { slots: 3, slot_bytes: 16 << 20 },
+        devices,
+        route: RoutePolicy::RoundRobin,
+        allreduce_every: 1,
+        trace: traced,
+        ..TrainConfig::default()
+    }
+}
+
+fn run_fleet(
+    pipe: &Pipeline,
+    spec: &DatasetSpec,
+    devices: usize,
+    traced: bool,
+) -> (TrainReport, Vec<f32>) {
+    let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+    let cfg = fleet_cfg(devices, traced);
+    let report = train(pipe, spec, &mut trainer, &cfg).unwrap();
+    let state = trainer.state_to_vec().unwrap();
+    (report, state)
+}
+
+fn assert_same_trajectory(
+    label: &str,
+    got: &(TrainReport, Vec<f32>),
+    want: &(TrainReport, Vec<f32>),
+) {
+    assert_eq!(got.0.steps, want.0.steps, "{label}: step counts differ");
+    assert_eq!(
+        got.0.losses.len(),
+        want.0.losses.len(),
+        "{label}: loss sample counts differ"
+    );
+    for ((gs, gl), (ws, wl)) in got.0.losses.iter().zip(&want.0.losses) {
+        assert_eq!(gs, ws, "{label}: loss sampled at different steps");
+        assert_eq!(
+            gl.to_bits(),
+            wl.to_bits(),
+            "{label}: loss diverged at step {gs}: {gl} vs {wl}"
+        );
+    }
+    assert_bits_equal(&got.1, &want.1).unwrap_or_else(|e| {
+        panic!("{label}: final parameters diverged: {e}");
+    });
+}
+
+/// Ledger closure (tolerance 1%) + structural checks for a traced report.
+fn assert_trace_coherent(label: &str, report: &TrainReport, devices: usize) {
+    let trace = report.trace.as_ref().unwrap_or_else(|| panic!("{label}: no trace"));
+    assert!(trace.span_count() > 0, "{label}: empty trace");
+    assert!(trace.wall_s > 0.0, "{label}: zero wall");
+    let att = report
+        .stall_attribution
+        .as_ref()
+        .unwrap_or_else(|| panic!("{label}: no stall attribution"));
+    assert_eq!(att.per_lane.len(), devices, "{label}: lane count");
+    // Some lane trained (a 4-device fleet over 3 shards leaves one lane
+    // with reduce folds only).
+    let total_train: f64 = att.per_lane.iter().map(|l| l.train_s).sum();
+    assert!(total_train > 0.0, "{label}: no lane ever trained");
+    for lane in &att.per_lane {
+        assert!(
+            lane.closes(0.01),
+            "{label}: lane {} ledger does not close: attributed {:.6} vs wall {:.6}\n{}",
+            lane.lane,
+            lane.attributed_s(),
+            lane.wall_s,
+            att.render()
+        );
+        assert!(
+            (lane.wall_s - trace.wall_s).abs() < 1e-12,
+            "{label}: lane wall != trace wall"
+        );
+        for v in [
+            lane.train_s,
+            lane.reduce_s,
+            lane.etl_s,
+            lane.ingest_s,
+            lane.backpressure_s,
+            lane.other_s,
+        ] {
+            assert!(v >= 0.0 && v.is_finite(), "{label}: negative/NaN class");
+        }
+    }
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_to_training() {
+    // The recorder must never perturb arithmetic: traced runs replay the
+    // untraced trajectory bitwise at every fleet width (devices = 1 takes
+    // the plain arena path, > 1 the routed fleet).
+    let (pipe, spec) = fixture();
+    let reference = run_fleet(&pipe, &spec, 1, false);
+    assert!(reference.0.steps >= 6, "fixture must actually train");
+    assert!(reference.0.trace.is_none());
+    assert!(reference.0.stall_attribution.is_none());
+
+    for devices in [1usize, 2, 4] {
+        let traced = run_fleet(&pipe, &spec, devices, true);
+        let label = format!("traced devices={devices}");
+        assert_same_trajectory(&label, &traced, &reference);
+        assert_trace_coherent(&label, &traced.0, devices);
+    }
+}
+
+#[test]
+fn fuzzed_schedules_preserve_sim_timeline_and_close_the_ledger() {
+    // THE acceptance bar: under ≥ 20 perturbed schedules across 2- and
+    // 4-device fleets, (a) the sim-clock span timeline is bitwise
+    // identical to the unfuzzed reference — host timing moved, the
+    // modeled clocks did not — (b) every lane's stall ledger closes
+    // within 1%, and (c) the training trajectory stays bitwise equal to
+    // the untraced run.
+    let (pipe, spec) = fixture();
+    let untraced = run_fleet(&pipe, &spec, 1, false);
+    let mut reference_tl: Vec<Vec<SimEvent>> = Vec::new();
+    for devices in [2usize, 4] {
+        let (report, state) = run_fleet(&pipe, &spec, devices, true);
+        let tl = report.trace.as_ref().unwrap().sim_timeline();
+        assert!(
+            tl.iter().any(|e| e.kind == kind::PACK),
+            "devices={devices}: no sim-stamped pack spans"
+        );
+        assert!(
+            tl.iter().any(|e| e.kind == kind::DMA_TRANSFER),
+            "devices={devices}: no sim-stamped DMA spans"
+        );
+        assert_same_trajectory(
+            &format!("unfuzzed traced devices={devices}"),
+            &(report, state),
+            &untraced,
+        );
+        reference_tl.push(tl);
+    }
+
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0x7ace);
+    const SCHEDULES: usize = 24;
+    for i in 0..SCHEDULES {
+        let devices = if i % 2 == 0 { 2 } else { 4 };
+        let want_tl = &reference_tl[i % 2];
+        let (seed, got) = fuzzer.with_schedule(|| run_fleet(&pipe, &spec, devices, true));
+        let label = format!("schedule {i} (seed {seed:#x}, devices {devices})");
+        assert_same_trajectory(&label, &got, &untraced);
+        assert_trace_coherent(&label, &got.0, devices);
+        let tl = got.0.trace.as_ref().unwrap().sim_timeline();
+        assert_eq!(
+            tl, *want_tl,
+            "{label}: sim timeline is schedule-dependent"
+        );
+    }
+}
+
+#[test]
+fn chrome_export_of_a_fleet_run_validates() {
+    // The exported JSON must satisfy the format's own invariants:
+    // well-formed, every event carrying name/ph/pid/tid, monotone
+    // timestamps per track, balanced name-matched B/E pairs.
+    let (pipe, spec) = fixture();
+    let (report, _) = run_fleet(&pipe, &spec, 2, true);
+    let trace = report.trace.as_ref().unwrap();
+    let json = trace.to_chrome_json();
+    let stats = validate_chrome_trace(&json)
+        .unwrap_or_else(|e| panic!("exported trace does not validate: {e}"));
+    // Every span is one host-track pair; sim-stamped spans add a second
+    // pair on their (lane, kind) sim track.
+    let sim_spans = trace.spans().filter(|s| s.has_sim()).count();
+    assert_eq!(stats.duration_pairs, trace.span_count() + sim_spans);
+    assert!(stats.events > stats.duration_pairs * 2, "metadata events missing");
+    // Threads without spans (e.g. the router, which only routes) produce
+    // no track; every lane's pack worker and consumer must.
+    for label in ["pack-0", "pack-1", "consumer-0", "consumer-1"] {
+        assert!(json.contains(label), "host track {label:?} missing from export");
+    }
+    assert!(json.contains("ingest-w"), "no ingest-worker track in export");
+    assert!(json.contains("lane0/pack") && json.contains("lane1/pack"));
+    assert!(json.contains("lane0/dma_transfer"));
+}
+
+#[test]
+fn single_device_arena_run_traces_the_whole_chain() {
+    // The plain (non-fleet) arena path carries the same span taxonomy:
+    // ingest → fused exec → pack → slot acquire → DMA → train, all on
+    // lane 0, and its one-lane ledger closes.
+    let (pipe, spec) = fixture();
+    let (report, _) = run_fleet(&pipe, &spec, 1, true);
+    let trace = report.trace.as_ref().unwrap();
+    for k in [
+        kind::INGEST_READ,
+        kind::FUSED_EXEC,
+        kind::PACK,
+        kind::SLOT_ACQUIRE,
+        kind::DMA_TRANSFER,
+        kind::TRAIN_STEP,
+    ] {
+        assert!(
+            trace.spans_of_kind(k).next().is_some(),
+            "kind {:?} missing from single-device trace",
+            kind::name(k)
+        );
+    }
+    // 3 shards → 3 pack spans keyed 0..3 on lane 0, with payload bytes.
+    let mut packs: Vec<_> = trace.spans_of_kind(kind::PACK).collect();
+    packs.sort_by_key(|s| s.key);
+    assert_eq!(packs.len(), 3);
+    for (i, p) in packs.iter().enumerate() {
+        assert_eq!((p.lane, p.key), (0, i as u64));
+        assert!(p.bytes > 0 && p.has_sim());
+        assert!(p.sim_end_s > p.sim_start_s);
+    }
+    // 6 train steps keyed by global step.
+    assert_eq!(trace.spans_of_kind(kind::TRAIN_STEP).count(), 6);
+    assert_trace_coherent("single-device", &report, 1);
+    assert!(validate_chrome_trace(&trace.to_chrome_json()).is_ok());
+}
+
+#[test]
+fn embedding_runs_record_prefetch_commits_and_stay_coherent() {
+    // The embedding fleet path adds PREFETCH_COMMIT spans on the lane DMA
+    // clock; tracing must stay invisible (bitwise vs the untraced
+    // embedding run) and the ledger must still close.
+    let (pipe, spec) = fixture();
+    let ecfg = EmbeddingConfig {
+        cache_rows: 32,
+        lookahead: 2,
+        policy: ShardPolicy::HashMod,
+        hot_seed: Vec::new(),
+    };
+    let run = |traced: bool| {
+        let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+        let cfg = TrainConfig { embedding: Some(ecfg.clone()), ..fleet_cfg(2, traced) };
+        let report = train(&pipe, &spec, &mut trainer, &cfg).unwrap();
+        (report, trainer.state_to_vec().unwrap())
+    };
+    let untraced = run(false);
+    let traced = run(true);
+    assert_same_trajectory("traced embedding fleet", &traced, &untraced);
+    assert_trace_coherent("traced embedding fleet", &traced.0, 2);
+    let trace = traced.0.trace.as_ref().unwrap();
+    let commits: Vec<_> = trace.spans_of_kind(kind::PREFETCH_COMMIT).collect();
+    assert!(!commits.is_empty(), "no prefetch-commit spans recorded");
+    for c in &commits {
+        assert!(c.lane < 2, "prefetch span on unknown lane {}", c.lane);
+        assert!(c.has_sim() && c.sim_end_s >= c.sim_start_s);
+    }
+    assert!(validate_chrome_trace(&trace.to_chrome_json()).is_ok());
+}

@@ -36,6 +36,7 @@ fn write_json(
     multi_device: &[(usize, f64, f64)],
     concurrent_consumers: &[(usize, f64, f64)],
     embedding_cache: &[(usize, f64, f64)],
+    elastic: &[(String, f64)],
     fault_overhead: &[(String, f64)],
     trace_overhead: &[(String, f64)],
 ) {
@@ -90,6 +91,15 @@ fn write_json(
         s.push_str(&format!(
             "    {{\"lookahead\": {lookahead}, \"hit_rate\": {hit_rate:.4}, \"agg_shards_per_s\": {shards_per_s:.2}}}{}\n",
             if i + 1 < embedding_cache.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"elastic\": [\n");
+    for (i, (name, shards_per_s)) in elastic.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": {:?}, \"agg_shards_per_s\": {:.2}}}{}\n",
+            name,
+            shards_per_s,
+            if i + 1 < elastic.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n  \"fault_overhead\": [\n");
@@ -603,6 +613,79 @@ fn main() {
         embedding_cache.push((lookahead, hit_rate, agg));
     }
 
+    // ---- elastic: the live control plane's cost and payoff inside the
+    // train loop. Three runs over the same stream: a static 2-lane
+    // fleet, a scripted run that starts at 2 lanes and grows to 4
+    // mid-stream (two AddLanes a third of the way in, plus a route flip
+    // to least-loaded once the fleet is heterogeneous), and a static
+    // 4-lane fleet. The scripted rate should land between the static
+    // endpoints — the reconfiguration itself is a mask flip at a
+    // quiesce point, not a stall.
+    let steps_per_shard = (ospec.rows_per_shard() / cc_meta.batch) as u64;
+    let grow_script = piperec::coordinator::ControlScript {
+        events: vec![
+            piperec::coordinator::ControlEvent {
+                at_step: 2 * steps_per_shard,
+                change: piperec::coordinator::KnobChange::AddLane,
+            },
+            piperec::coordinator::ControlEvent {
+                at_step: 3 * steps_per_shard,
+                change: piperec::coordinator::KnobChange::AddLane,
+            },
+            piperec::coordinator::ControlEvent {
+                at_step: 3 * steps_per_shard,
+                change: piperec::coordinator::KnobChange::Route(
+                    piperec::coordinator::RoutePolicy::LeastLoaded,
+                ),
+            },
+        ],
+    };
+    let mut elastic: Vec<(String, f64)> = Vec::new();
+    println!(
+        "\nelastic (live control plane, {} shards × {} rows, stream-end sync):",
+        ospec.shards,
+        ospec.rows_per_shard()
+    );
+    for (name, devices, script) in [
+        ("static 2-lane", 2usize, piperec::coordinator::ControlScript::default()),
+        ("scripted 2→4 + route flip", 2, grow_script),
+        ("static 4-lane", 4, piperec::coordinator::ControlScript::default()),
+    ] {
+        let want_reconfigs = script.events.len() as u64;
+        let el = bench(1, iters, || {
+            let mut trainer = piperec::runtime::Trainer::from_meta(cc_meta.clone(), 7);
+            let cfg = piperec::coordinator::TrainConfig {
+                max_steps: usize::MAX / 2,
+                loss_every: usize::MAX / 2,
+                staging_buffers: 2,
+                seed: 11,
+                ingest: IngestConfig {
+                    workers: ingest_workers,
+                    channel_depth: 2,
+                    policy: DeliveryPolicy::InOrder,
+                    ..IngestConfig::default()
+                },
+                devices,
+                route: piperec::coordinator::RoutePolicy::RoundRobin,
+                allreduce_every: 0,
+                control: script.clone(),
+                ..piperec::coordinator::TrainConfig::default()
+            };
+            let report =
+                piperec::coordinator::train(&cpipe, &ospec, &mut trainer, &cfg).unwrap();
+            assert_eq!(report.shards, ospec.shards as u64);
+            assert_eq!(report.reconfigs, want_reconfigs);
+            std::hint::black_box(report.steps);
+        });
+        let agg = ospec.shards as f64 / el.min;
+        println!("  {name:<26}: {agg:.1} shards/s aggregate");
+        elastic.push((name.to_string(), agg));
+    }
+    speedups.push((
+        "elastic scripted 2→4 vs static 2-lane (shards/s)".to_string(),
+        elastic[1].1 / elastic[0].1,
+    ));
+
     // ---- fault-injection probe overhead: the chaos layer
     // (`util::fault`, exercised by rust/tests/prop_faults.rs) probes the
     // shard-read, DMA-submit and lane hot paths on every attempt, so its
@@ -683,6 +766,7 @@ fn main() {
         &multi_device,
         &concurrent_consumers,
         &embedding_cache,
+        &elastic,
         &fault_overhead,
         &trace_overhead,
     );

@@ -1,0 +1,1316 @@
+//! Elastic fleet runtime: lane lifecycle plus a live control plane over
+//! the multi-device arena dataflow.
+//!
+//! This module is the **fleet driver** behind every
+//! [`DataPath::Arena`](crate::coordinator::train_loop::DataPath) run —
+//! `devices = 1` is simply a one-lane fleet (pinned bitwise identical to
+//! the legacy single-device path by the reproducibility matrix in
+//! `train_loop`'s docs). It decomposes the old monolithic `run_multi`
+//! into three pieces:
+//!
+//! 1. **[`Lane`]** — the per-device bundle: a raw-shard channel into a
+//!    pack worker, that worker's [`DeviceArena`](crate::devmem::DeviceArena)
+//!    region and private DMA engine clock, the staged-slot queue into the
+//!    lane's consumer thread, and the consumer's trainer replica.
+//! 2. **[`FleetRuntime`]** — assembly: it sizes every shared structure
+//!    (the [`ArenaSet`], [`DeviceRouter`], [`ReduceBus`],
+//!    [`TransferSet`]) to the fleet's **peak** width (initial `devices`
+//!    plus every scripted [`KnobChange::AddLane`]) so a joining lane
+//!    never reallocates shared state mid-run, then hands `run` the lane
+//!    bundles to spawn.
+//! 3. **The control plane** — the router thread doubles as the live
+//!    controller: it applies a deterministic [`ControlScript`] of
+//!    `(global_step, KnobChange)` events at **quiesce points** and logs
+//!    each application in a [`KnobRegistry`].
+//!
+//! # Lane lifecycle
+//!
+//! ```text
+//!            AddLane applied                 RemoveLane applied
+//!  Joining ────────────────────▶ Live ────────────────────────▶ Draining
+//!     │   (router.mark_alive,      │    (sender taken, queued       │
+//!     │    LANE_JOIN span)         │     slots still train)         │
+//!     │                            │ fault (DMA hard-fail /         │
+//!     │                            │ LANE_LOSS injection)           ▼
+//!     └────────── fleet ends ──────┴──────────────────────────▶  Dead
+//! ```
+//!
+//! * **Joining**: assembled but masked from routing. Its worker blocks on
+//!   its shard channel; its consumer blocks on its slot queue. Its
+//!   reduce-bus membership is registered at assembly
+//!   ([`ReduceBus::join`]) so release thresholds are stable for the
+//!   whole run.
+//! * **Live**: routed shards, training, posting gradient contributions.
+//! * **Draining**: gracefully removed — the router took its shard
+//!   sender, so no new work arrives; already-queued slots still train
+//!   (their steps were stamped before the quiesce point), then the
+//!   consumer folds the remaining epochs and exits as a valid survivor.
+//!   Unlike a fault death, nothing is forfeited and `lanes_lost` does
+//!   not move.
+//! * **Dead**: a fault took the lane (its remaining steps were
+//!   forfeited, the router re-routes to survivors) or the run ended.
+//!
+//! # Quiesce points
+//!
+//! Every scripted change applies on the **router thread**, between two
+//! shard routings, at the first routing frontier `cum >= at_step`
+//! (`cum` = run-relative global steps stamped so far):
+//!
+//! ```text
+//!   route(shard k)   ──▶  [apply events with at_step <= cum]  ──▶  route(shard k+1)
+//!                            │
+//!                            ├─ Route(p)          router.set_policy     (next shard on)
+//!                            ├─ AllreduceEvery(n) bus.retune_every      (next epoch boundary on)
+//!                            ├─ AddLane           router.mark_alive     (joiner eligible now)
+//!                            ├─ RemoveLane(d)     sender taken          (lane drains)
+//!                            ├─ Lookahead(n)      pre-dealt to workers  (shards with start_rel >= at_step)
+//!                            └─ IngestWorkers/ChunkRows                 (restart at next shard boundary)
+//! ```
+//!
+//! No shard spans an application, so a script is a pure function of the
+//! delivery-order step numbering — scripted runs stay **bitwise
+//! identical under schedule fuzzing** (`rust/tests/prop_elastic.rs`).
+//! The two ingest knobs are the only deferred ones: the old pipeline
+//! finishes its current shard, its first delivery past that boundary is
+//! discarded (chunk-stable synth regenerates it identically), and a
+//! replacement spawns via [`AsyncIngest::spawn_from`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+
+use crate::coordinator::scheduler::{
+    DeviceRouter, EpochWait, PrefetchPipeline, ReduceBus, RoutePolicy,
+};
+use crate::coordinator::staging::{StagingConsumer, StagingQueue};
+use crate::coordinator::train_loop::{DeviceReport, TrainConfig, TrainReport};
+use crate::dataio::dataset::DatasetSpec;
+use crate::dataio::ingest::{AsyncIngest, DeliveryPolicy, IngestConfig, ShardInput};
+use crate::devmem::{ArenaSet, StagingSlot, TransferEngine, TransferSet};
+use crate::error::{EtlError, Result};
+use crate::etl::column::Batch;
+use crate::fpga::Pipeline;
+use crate::memsys::{ChannelModel, Path};
+use crate::metrics::TimeSeries;
+use crate::runtime::Trainer;
+use crate::trace::{self, kind as tkind};
+use crate::util::fault::{self, site as fsite};
+use crate::util::sched::{self, site};
+
+/// One mid-run control-plane change.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KnobChange {
+    /// Switch the shard→device routing policy.
+    Route(RoutePolicy),
+    /// Retune the all-reduce period ([`ReduceBus::retune_every`]); takes
+    /// effect at the next epoch boundary at or past the frontier.
+    AllreduceEvery(usize),
+    /// Restart the ingest pipeline with this many workers (in-order
+    /// delivery only; applied at the next shard boundary).
+    IngestWorkers(usize),
+    /// Restart the ingest pipeline with this chunking granularity
+    /// (rows per delivered chunk, 0 = whole shards; in-order only).
+    ChunkRows(usize),
+    /// Retune every lane's embedding-prefetch lookahead window
+    /// (no-op when the embedding layer is disabled).
+    Lookahead(usize),
+    /// Admit the next pre-assembled joiner lane to the fleet.
+    AddLane,
+    /// Gracefully drain lane `d` (an initial-fleet lane index).
+    RemoveLane(usize),
+}
+
+impl KnobChange {
+    /// Stable short name (registry/debug output).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KnobChange::Route(_) => "route",
+            KnobChange::AllreduceEvery(_) => "allreduce_every",
+            KnobChange::IngestWorkers(_) => "ingest_workers",
+            KnobChange::ChunkRows(_) => "chunk_rows",
+            KnobChange::Lookahead(_) => "lookahead",
+            KnobChange::AddLane => "add_lane",
+            KnobChange::RemoveLane(_) => "remove_lane",
+        }
+    }
+}
+
+/// A scripted change: applied at the first quiesce point where the
+/// routing frontier has reached `at_step` (run-relative global steps).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ControlEvent {
+    /// Run-relative global step threshold.
+    pub at_step: u64,
+    /// The change to apply.
+    pub change: KnobChange,
+}
+
+/// A deterministic schedule of control-plane changes, sorted by
+/// `at_step`. Empty (the default) means a static fleet — the script adds
+/// zero overhead to an unscripted run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ControlScript {
+    /// The events, sorted ascending by [`ControlEvent::at_step`]
+    /// (ties apply in vector order).
+    pub events: Vec<ControlEvent>,
+}
+
+impl ControlScript {
+    /// No scripted changes?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Scripted lane additions (the fleet's peak width is
+    /// `devices + add_lanes()`).
+    pub fn add_lanes(&self) -> usize {
+        self.events.iter().filter(|e| matches!(e.change, KnobChange::AddLane)).count()
+    }
+
+    /// Typed validation against the run's shape: events must be sorted,
+    /// ingest restarts need in-order delivery, lane removals must target
+    /// the initial fleet.
+    pub fn validate(&self, devices: usize, ingest: &IngestConfig) -> Result<()> {
+        let mut last = 0u64;
+        for (i, ev) in self.events.iter().enumerate() {
+            if ev.at_step < last {
+                return Err(EtlError::Config(format!(
+                    "ControlScript events must be sorted by at_step \
+                     (event {i} at step {} follows step {last})",
+                    ev.at_step
+                )));
+            }
+            last = ev.at_step;
+            match ev.change {
+                KnobChange::IngestWorkers(0) => {
+                    return Err(EtlError::Config(
+                        "ControlScript: IngestWorkers(0) — the ingest pipeline needs at \
+                         least one worker"
+                            .into(),
+                    ))
+                }
+                KnobChange::IngestWorkers(_) | KnobChange::ChunkRows(_)
+                    if ingest.policy != DeliveryPolicy::InOrder =>
+                {
+                    return Err(EtlError::Config(
+                        "ControlScript ingest knobs (IngestWorkers/ChunkRows) require \
+                         DeliveryPolicy::InOrder (the restart cursor is a shard boundary)"
+                            .into(),
+                    ))
+                }
+                KnobChange::RemoveLane(d) if d >= devices => {
+                    return Err(EtlError::Config(format!(
+                        "ControlScript: RemoveLane({d}) targets a lane outside the initial \
+                         fleet (devices = {devices}; scripted joiners cannot be removed)"
+                    )))
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Log of the control-plane changes a run actually applied, in
+/// application order; [`TrainReport::reconfigs`] is its length.
+#[derive(Debug, Default)]
+pub struct KnobRegistry {
+    applied: Vec<(u64, KnobChange)>,
+}
+
+impl KnobRegistry {
+    fn record(&mut self, frontier: u64, change: KnobChange) {
+        self.applied.push((frontier, change));
+    }
+
+    /// Applied changes as `(routing frontier at application, change)`.
+    pub fn applied(&self) -> &[(u64, KnobChange)] {
+        &self.applied
+    }
+
+    /// Number of applied changes.
+    pub fn reconfigs(&self) -> u64 {
+        self.applied.len() as u64
+    }
+}
+
+/// Lifecycle of a fleet lane (see the module-level state machine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum LaneState {
+    /// Assembled, masked from routing, awaiting a scripted `AddLane`.
+    Joining = 0,
+    /// Routed shards, training.
+    Live = 1,
+    /// Gracefully removed: no new shards, queued work still trains.
+    Draining = 2,
+    /// Lost to a fault, or finished draining.
+    Dead = 3,
+}
+
+/// Shared, atomically-updated lane state (router, workers and consumers
+/// all transition it).
+struct LaneStateCell(AtomicU8);
+
+impl LaneStateCell {
+    fn new(s: LaneState) -> LaneStateCell {
+        LaneStateCell(AtomicU8::new(s as u8))
+    }
+
+    fn set(&self, s: LaneState) {
+        self.0.store(s as u8, Ordering::SeqCst);
+    }
+
+    fn get(&self) -> LaneState {
+        match self.0.load(Ordering::SeqCst) {
+            0 => LaneState::Joining,
+            1 => LaneState::Live,
+            2 => LaneState::Draining,
+            _ => LaneState::Dead,
+        }
+    }
+}
+
+/// A staged slot annotated with its schedule position: the raw shard
+/// bytes charged to its lane's load ledger and the **run-relative global
+/// step index of its first trainer chunk** (the router stamps every slot
+/// in delivery order, so reduce epochs are schedule-independent — no
+/// consumer-side reordering stash is needed; each lane's queue is already
+/// FIFO in delivery order).
+struct RoutedSlot {
+    start_rel: u64,
+    /// Trainer chunks the router predicted for this slot (from the raw
+    /// shard's rows). The consumer verifies the packed batch yields
+    /// exactly this many — a mismatch would corrupt the global step
+    /// numbering and deadlock the bus, so it aborts loudly instead.
+    chunks: u64,
+    raw_bytes: u64,
+    slot: StagingSlot,
+}
+
+/// Per-lane producer accounting returned by each pack worker.
+#[derive(Default)]
+struct LaneOut {
+    host_s: f64,
+    sim_s: f64,
+    wait_s: f64,
+    shards: u64,
+    dma_busy_s: f64,
+    dma_bytes: u64,
+    dma_retried: u64,
+    dma_failed: u64,
+    /// This lane's embedding-cache observables (None when the embedding
+    /// layer is disabled).
+    emb: Option<crate::runtime::embedding::EmbCacheStats>,
+}
+
+/// One executed step's record kept by a consumer thread: merged across
+/// devices (in global-step order) into the fleet's losses, utilization
+/// trace and busy-time attribution.
+struct StepRec {
+    /// Absolute global step index (delivery order, warm-start offset).
+    g_abs: u64,
+    /// Wall-clock seconds since run start when the step finished.
+    end_s: f64,
+    /// Host seconds the step took.
+    busy_s: f64,
+    /// The step's batch loss (the loss-slot observable).
+    loss: f32,
+}
+
+/// Per-device consumer accounting returned by each consumer thread.
+#[derive(Default)]
+struct ConsumerOut {
+    recs: Vec<StepRec>,
+    reduce_wait_s: f64,
+    /// This lane was lost mid-run (its replica's state is stale — the
+    /// fleet's final parameters come from a surviving lane).
+    lost: bool,
+}
+
+/// Aborts the reduce bus if the owning thread unwinds by panic, so
+/// sibling consumers blocked on an epoch observe the failure instead of
+/// waiting forever.
+struct BusAbortOnPanic<'a>(&'a ReduceBus);
+
+impl Drop for BusAbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        }
+    }
+}
+
+/// Outcome of folding one reduce epoch into a replica.
+enum Fold {
+    /// An epoch was applied; the replica's synced base advanced.
+    Applied,
+    /// No further epochs will arrive (stream finished or run aborted).
+    Done,
+}
+
+/// Wait for `device`'s next reduce epoch and replay it onto the synced
+/// `base` (device-ascending contributions; see `Trainer::apply_reduced`).
+/// Fast path: when this device was the epoch's **sole** contributor, its
+/// replica already holds exactly `base` + its own steps — bitwise what
+/// the replay would rebuild (pinned by the grad/apply differential
+/// tests) — so only the base refresh is needed; the sync-every-step
+/// default takes this path on every contributing device. Time blocked on
+/// resolution is charged to `reduce_wait_s`. Shared by the consumer's
+/// mid-step dependency fold and its end-of-lane drain.
+fn fold_next_epoch(
+    bus: &ReduceBus,
+    device: usize,
+    replica: &mut Trainer,
+    base: &mut [f32],
+    applied: &mut u64,
+    reduce_wait_s: &mut f64,
+) -> Result<Fold> {
+    let t_wait = std::time::Instant::now();
+    // Covers both the wait for resolution and the replay itself.
+    let span = trace::begin(tkind::REDUCE_APPLY, device as u32, *applied);
+    match bus.wait_epoch(*applied) {
+        EpochWait::Resolved(ep) => {
+            *reduce_wait_s += t_wait.elapsed().as_secs_f64();
+            let self_only = ep.contribs.len() == 1 && ep.contribs[0].device == device;
+            if !self_only {
+                replica.apply_reduced(base, ep.contribs.iter().map(|c| c.steps.as_slice()))?;
+            }
+            base.copy_from_slice(replica.state());
+            *applied += 1;
+            span.end();
+            Ok(Fold::Applied)
+        }
+        EpochWait::Finished | EpochWait::Aborted => {
+            drop(span); // records the terminal wait too
+            Ok(Fold::Done)
+        }
+    }
+}
+
+/// The per-device bundle [`FleetRuntime::assemble`] builds and `run`
+/// splits across the lane's pack-worker and consumer threads.
+struct Lane {
+    device: usize,
+    /// Router → pack worker raw-shard channel (depth 1: the router hands
+    /// a lane its next shard while it packs the current one).
+    shard_rx: Receiver<(u64, Batch)>,
+    /// Pack worker's producer end of the staged-slot queue.
+    slot_queue: StagingQueue<RoutedSlot>,
+    /// Consumer's end of the staged-slot queue.
+    slot_rx: StagingConsumer<RoutedSlot>,
+    stall_counter: Arc<AtomicU64>,
+    /// This lane's private DMA engine clock.
+    dma: TransferEngine,
+    /// This lane's embedding prefetcher (None when disabled).
+    prefetch: Option<PrefetchPipeline>,
+    /// This lane's trainer replica.
+    replica: Trainer,
+    /// Scripted `(at_step, lookahead)` retunes, applied by the worker to
+    /// shards with `start_rel >= at_step`.
+    lookahead_events: Vec<(u64, usize)>,
+}
+
+/// Everything the fleet driver owns before threads spawn: shared
+/// structures sized to the peak lane count, plus the per-lane bundles.
+struct FleetRuntime {
+    peak: usize,
+    arenas: ArenaSet,
+    router: DeviceRouter,
+    bus: ReduceBus,
+    lanes: Vec<Lane>,
+    /// Router → lane senders; `RemoveLane` takes one to drain the lane.
+    shard_txs: Vec<Option<SyncSender<(u64, Batch)>>>,
+    states: Vec<LaneStateCell>,
+    /// Pre-assembled joiner device indices, in `AddLane` event order.
+    joiners: VecDeque<usize>,
+    /// Simulated cost of one all-reduce epoch at peak width.
+    allreduce_cost_s: f64,
+}
+
+impl FleetRuntime {
+    /// Build every shared structure and lane bundle at the fleet's peak
+    /// width. Joiner lanes are fully assembled here — arena region, DMA
+    /// clock, queues, replica, reduce-bus membership — and only their
+    /// routing admission is deferred to the scripted quiesce point, so
+    /// lane-add is a pure mask flip with nothing left to allocate.
+    fn assemble(trainer: &Trainer, cfg: &TrainConfig) -> Result<FleetRuntime> {
+        let devices = cfg.devices;
+        let peak = devices + cfg.control.add_lanes();
+
+        let mut arenas = ArenaSet::new(devices, cfg.arena.clone());
+        for _ in devices..peak {
+            arenas.grow(cfg.arena.clone());
+        }
+
+        let mut router = DeviceRouter::with_capacity(devices, peak, cfg.route);
+        let mut joiners = VecDeque::with_capacity(peak - devices);
+        for _ in devices..peak {
+            joiners.push_back(router.extend());
+        }
+
+        // Reduce-bus membership is peak-wide from step 0: joiners
+        // register at assembly (nothing has resolved yet, so `join(0)`
+        // cannot race a released epoch) and serve their epochs when they
+        // fold — at admission, or in their end-of-lane drain.
+        let bus = ReduceBus::new(devices, cfg.allreduce_every, trainer.steps);
+        for d in devices..peak {
+            let joined = bus.join(0)?;
+            debug_assert_eq!(joined, d);
+        }
+
+        let mut transfers = TransferSet::new(devices, cfg.transfer.clone());
+        for _ in devices..peak {
+            transfers.grow(cfg.transfer.clone());
+        }
+        let engines = transfers.into_engines();
+
+        // Sharded embedding layer: one shard cache per lane (joiners
+        // included — their hot tiers are seeded now and serve peer
+        // fetches from assembly on), its hot tier pinned in that lane's
+        // arena, its prefetcher driven by the lane's own delivery order.
+        // Built before the fleet spawns so a sizing error fails cleanly.
+        let prefetchers: Vec<Option<PrefetchPipeline>> = match &cfg.embedding {
+            Some(ecfg) => {
+                use crate::runtime::embedding::{EmbShardCache, EmbeddingTable};
+                let table = EmbeddingTable::from_meta(&trainer.meta, peak, ecfg.policy)?;
+                let cache_rows = ecfg.cache_rows.min(table.rows()).max(1);
+                (0..peak)
+                    .map(|d| {
+                        let region = arenas
+                            .device(d)
+                            .reserve_cache(cache_rows as u64 * table.row_bytes())?;
+                        let mut cache = EmbShardCache::new(table.clone(), cache_rows, region)?;
+                        cache.seed(&ecfg.hot_seed, &|_| true);
+                        Ok(Some(PrefetchPipeline::new(cache, ecfg.lookahead)))
+                    })
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => (0..peak).map(|_| None).collect(),
+        };
+
+        let lookahead_events: Vec<(u64, usize)> = cfg
+            .control
+            .events
+            .iter()
+            .filter_map(|e| match e.change {
+                KnobChange::Lookahead(n) => Some((e.at_step, n)),
+                _ => None,
+            })
+            .collect();
+
+        // All-reduce cost model: a deterministic tree needs ceil(log2 N)
+        // rounds of reduce plus as many of broadcast, each moving the
+        // flat state over the calibrated P2P channel, once per epoch.
+        let allreduce_chan = ChannelModel::of(Path::P2pToGpu);
+        let reduce_rounds = (usize::BITS - (peak - 1).leading_zeros()) as f64;
+        let state_bytes = (trainer.meta.state_len() * std::mem::size_of::<f32>()) as u64;
+        let allreduce_cost_s = 2.0 * reduce_rounds * allreduce_chan.time(state_bytes);
+
+        let mut shard_txs = Vec::with_capacity(peak);
+        let mut lanes = Vec::with_capacity(peak);
+        for (d, (dma, prefetch)) in engines.into_iter().zip(prefetchers).enumerate() {
+            let (tx, shard_rx) = std::sync::mpsc::sync_channel::<(u64, Batch)>(1);
+            shard_txs.push(Some(tx));
+            let (slot_queue, slot_rx) = StagingQueue::<RoutedSlot>::with_buffers(cfg.staging_buffers);
+            let stall_counter = slot_queue.stall_counter();
+            lanes.push(Lane {
+                device: d,
+                shard_rx,
+                slot_queue,
+                slot_rx,
+                stall_counter,
+                dma,
+                prefetch,
+                replica: trainer.replica(),
+                lookahead_events: lookahead_events.clone(),
+            });
+        }
+
+        let states = (0..peak)
+            .map(|d| {
+                LaneStateCell::new(if d < devices { LaneState::Live } else { LaneState::Joining })
+            })
+            .collect();
+
+        Ok(FleetRuntime {
+            peak,
+            arenas,
+            router,
+            bus,
+            lanes,
+            shard_txs,
+            states,
+            joiners,
+            allreduce_cost_s,
+        })
+    }
+}
+
+/// Fleet driver for every arena-path run: one staging region, DMA clock,
+/// pack worker **and consumer thread** per lane; the router assigns each
+/// ingested shard a lane and stamps its global step range; replicas step
+/// concurrently and stay consistent through the barrier-free
+/// gradient-level [`ReduceBus`]; the scripted control plane reconfigures
+/// the fleet at quiesce points (see module docs).
+pub(crate) fn run(
+    pipeline: &Pipeline,
+    spec: &DatasetSpec,
+    trainer: &mut Trainer,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    cfg.validate()?;
+    let step_rows = trainer.meta.batch;
+    let steps_at_start = trainer.steps;
+    let max_steps = cfg.max_steps as u64;
+    let loss_every = (cfg.loss_every as u64).max(1);
+
+    let FleetRuntime { peak, arenas, router, bus, lanes: lane_bundles, shard_txs, states, joiners, allreduce_cost_s } =
+        FleetRuntime::assemble(trainer, cfg)?;
+    let tracker = router.tracker();
+
+    // Consumed shard buffers flow back to the router for pool recycling.
+    let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Batch>();
+
+    let t0 = std::time::Instant::now();
+    let mut lanes: Vec<LaneOut> = Vec::with_capacity(peak);
+    let mut cons: Vec<(Trainer, ConsumerOut)> = Vec::with_capacity(peak);
+    let mut ingest_wait_s = 0.0f64;
+    let mut registry = KnobRegistry::default();
+    let mut stall_counters = Vec::with_capacity(peak);
+
+    // Lane liveness, shared across the router, pack workers and
+    // consumers: a dying side flips its lane's flag (the swap makes the
+    // loss counted exactly once even if both ends of a lane fail) and
+    // the router re-routes every not-yet-assigned shard to survivors.
+    // Joiners start alive here — the *routing* mask, not this flag, is
+    // what holds them back until admission.
+    let lane_alive: Vec<AtomicBool> = (0..peak).map(|_| AtomicBool::new(true)).collect();
+    let lanes_lost = AtomicU64::new(0);
+    // Run-relative step cap: forfeited ranges are clamped to it, exactly
+    // as consumers skip chunks past it, so the bus's closed total is the
+    // same set of steps whether a lane lived or died.
+    let cap_rel = max_steps.saturating_sub(steps_at_start);
+    let fault_token = fault::enroll_token();
+    let trace_token = trace::enroll_token();
+
+    std::thread::scope(|scope| -> Result<()> {
+        let arenas = &arenas;
+        let bus = &bus;
+        let lane_alive = &lane_alive;
+        let lanes_lost = &lanes_lost;
+        let states = &states;
+        let mut first_err: Option<EtlError> = None;
+
+        // Split each lane bundle into its worker half and consumer half.
+        let mut worker_parts = Vec::with_capacity(peak);
+        let mut consumer_parts = Vec::with_capacity(peak);
+        for lane in lane_bundles {
+            let Lane {
+                device,
+                shard_rx,
+                slot_queue,
+                slot_rx,
+                stall_counter,
+                dma,
+                prefetch,
+                replica,
+                lookahead_events,
+            } = lane;
+            stall_counters.push(stall_counter);
+            worker_parts.push((device, shard_rx, slot_queue, dma, prefetch, lookahead_events));
+            consumer_parts.push((device, slot_rx, replica));
+        }
+
+        // Pack workers: one per lane, each owning its device's DMA
+        // engine clock and blocking only on its own arena's credits.
+        let mut workers = Vec::with_capacity(peak);
+        for (d, rx, queue, mut dma, mut prefetch, la_events) in worker_parts {
+            let recycle_tx = recycle_tx.clone();
+            let worker_tracker = Arc::clone(&tracker);
+            workers.push(scope.spawn(move || -> Result<LaneOut> {
+                fault::enroll(fault_token);
+                trace::enroll(trace_token);
+                trace::set_thread_label(&format!("pack-{d}"));
+                let _abort_on_panic = BusAbortOnPanic(bus);
+                let arena = arenas.device(d);
+                let mut out = LaneOut::default();
+                let mut failure: Option<EtlError> = None;
+                let mut dead = false;
+                let mut last_stage_s = 0.0f64;
+                let mut la_idx = 0usize;
+                while let Ok((start_rel, shard)) = rx.recv() {
+                    // Scripted lookahead retunes: the slot stream is in
+                    // start_rel order per lane, so applying at the first
+                    // shard at/past the threshold is the quiesce point.
+                    while la_idx < la_events.len() && start_rel >= la_events[la_idx].0 {
+                        if let Some(pf) = prefetch.as_mut() {
+                            pf.set_lookahead(la_events[la_idx].1);
+                        }
+                        la_idx += 1;
+                    }
+                    let raw_bytes = shard.total_bytes() as u64;
+                    // Same formula the router stamped the schedule with;
+                    // the consumer verifies the packed batch agrees.
+                    let chunks = (shard.rows() / step_rows) as u64;
+                    if dead {
+                        // Lane lost: these shards can no longer reach a
+                        // trainer. Forfeit their scheduled steps so reduce
+                        // epochs still resolve, settle the load ledger,
+                        // recycle the buffer, and keep draining until the
+                        // router (which re-routes to survivors) stops.
+                        let lo = start_rel.min(cap_rel);
+                        let hi = (start_rel + chunks).min(cap_rel);
+                        if lo < hi {
+                            bus.forfeit(lo..hi);
+                        }
+                        worker_tracker.complete(d, raw_bytes);
+                        let _ = recycle_tx.send(shard);
+                        continue;
+                    }
+                    let t_acq = std::time::Instant::now();
+                    let acq_span = trace::begin(tkind::SLOT_ACQUIRE, d as u32, out.shards);
+                    let Some(mut slot) = arena.acquire() else {
+                        break; // fleet shut down (arena closed)
+                    };
+                    acq_span.end();
+                    out.wait_s += t_acq.elapsed().as_secs_f64();
+                    let pack_span = trace::begin(tkind::PACK, d as u32, out.shards);
+                    let timing = match pipeline.process_into_slot(&shard, &mut slot) {
+                        Ok(t) => t,
+                        Err(e) => {
+                            failure = Some(e);
+                            let _ = arena.release(slot);
+                            break;
+                        }
+                    };
+                    pack_span.end_io(
+                        out.sim_s,
+                        out.sim_s + timing.elapsed_s,
+                        slot.packed_bytes(),
+                        0,
+                    );
+                    let _ = recycle_tx.send(shard);
+                    out.host_s += timing.host_s;
+                    out.sim_s += timing.elapsed_s;
+                    out.shards += 1;
+                    // This lane's chunked P2P write, on this device's own
+                    // engine clock. A hard failure (past the retry budget)
+                    // costs the lane, not the fleet: forfeit this slot's
+                    // steps, return its credit, and fall into drain mode.
+                    match dma.submit(out.sim_s, slot.packed_bytes()) {
+                        Ok(rec) => {
+                            // Prefetch planning: the router saw this shard
+                            // before its consumer will, so the lane can
+                            // promote the slot's embedding rows `lookahead`
+                            // slots ahead of its commit. Only the chunks
+                            // the consumer will actually step are traced;
+                            // a lane whose consumer died forfeits its
+                            // slots, so planning stops with it.
+                            if let Some(pf) = prefetch.as_mut() {
+                                let stepped = chunks.min(cap_rel.saturating_sub(start_rel));
+                                if stepped > 0 && lane_alive[d].load(Ordering::SeqCst) {
+                                    pf.on_packed(
+                                        &slot.batch().sparse,
+                                        stepped as usize * step_rows,
+                                        rec.done_s,
+                                        &|o: usize| lane_alive[o].load(Ordering::SeqCst),
+                                    );
+                                }
+                                last_stage_s = rec.done_s;
+                            }
+                        }
+                        Err(e) if e.is_fault() => {
+                            if lane_alive[d].swap(false, Ordering::SeqCst) {
+                                lanes_lost.fetch_add(1, Ordering::SeqCst);
+                            }
+                            states[d].set(LaneState::Dead);
+                            let lo = start_rel.min(cap_rel);
+                            let hi = (start_rel + chunks).min(cap_rel);
+                            if lo < hi {
+                                bus.forfeit(lo..hi);
+                            }
+                            worker_tracker.complete(d, raw_bytes);
+                            let _ = arena.release(slot);
+                            dead = true;
+                            continue;
+                        }
+                        Err(e) => {
+                            failure = Some(e);
+                            let _ = arena.release(slot);
+                            break;
+                        }
+                    }
+                    let t_push = std::time::Instant::now();
+                    let pushed = queue.push(RoutedSlot { start_rel, chunks, raw_bytes, slot });
+                    out.wait_s += t_push.elapsed().as_secs_f64();
+                    if !pushed {
+                        break; // consumer hung up
+                    }
+                }
+                out.dma_busy_s = dma.busy_s();
+                out.dma_bytes = dma.total_bytes();
+                out.dma_retried = dma.retried_transfers();
+                out.dma_failed = dma.failed_transfers();
+                if let Some(mut pf) = prefetch.take() {
+                    // Drain the lookahead window: every slot that was
+                    // prefetch-planned commits exactly once, so the
+                    // hit/miss ledger covers every lookup the consumer
+                    // performed (exactly-once accounting).
+                    pf.flush(last_stage_s, &|o: usize| lane_alive[o].load(Ordering::SeqCst));
+                    out.emb = Some(pf.into_stats());
+                }
+                match failure {
+                    Some(e) => {
+                        // Unblock peers waiting on this lane's steps.
+                        bus.abort();
+                        Err(e)
+                    }
+                    None => Ok(out),
+                }
+            }));
+        }
+        // Workers now hold the only recycle producer handles.
+        drop(recycle_tx);
+
+        // Router + control plane: the producer front-end — ingest in
+        // delivery order, apply scripted knob changes whose step the
+        // routing frontier has reached, assign each shard a device lane,
+        // stamp it with the global step index of its first chunk (epochs
+        // are defined over this delivery-order numbering, independent of
+        // thread schedules), recycle consumed buffers, and close the bus
+        // with the stream's total step count on the way out.
+        let ingest_cfg = cfg.ingest.clone();
+        let ingest_spec = spec.clone();
+        let seed = cfg.seed;
+        let script = cfg.control.events.clone();
+        let router_thread = scope.spawn(move || -> Result<(f64, KnobRegistry)> {
+            fault::enroll(fault_token);
+            trace::enroll(trace_token);
+            trace::set_thread_label("router");
+            let _abort_on_panic = BusAbortOnPanic(bus);
+            let mut shard_txs = shard_txs;
+            let mut router = router;
+            let mut joiners = joiners;
+            let mut registry = KnobRegistry::default();
+            let mut eff_ingest = ingest_cfg;
+            let mut ingest = AsyncIngest::spawn(
+                ShardInput::Synth { spec: ingest_spec.clone(), seed },
+                &eff_ingest,
+            );
+            let mut wait_s = 0.0f64;
+            let mut cum = 0u64; // run-relative global steps scheduled so far
+            let mut last_dead = 0usize;
+            let mut next_ev = 0usize;
+            // Pending ingest restart: shard index the old pipeline must
+            // finish before the retuned replacement takes over.
+            let mut restart_after: Option<usize> = None;
+            let routed = (|| -> Result<()> {
+                loop {
+                    let Some((idx, shard)) = ingest.next()? else { break };
+                    while let Ok(b) = recycle_rx.try_recv() {
+                        ingest.recycle(b);
+                    }
+                    if let Some(boundary) = restart_after {
+                        if idx > boundary {
+                            // Quiesce point reached: shard `boundary`
+                            // routed fully. This delivery is the retuned
+                            // pipeline's first (chunk-stable synth
+                            // regenerates it bitwise), so discard it and
+                            // swap pipelines.
+                            ingest.recycle(shard);
+                            wait_s += ingest.wait_seconds();
+                            ingest = AsyncIngest::spawn_from(
+                                ShardInput::Synth { spec: ingest_spec.clone(), seed },
+                                &eff_ingest,
+                                idx,
+                            );
+                            restart_after = None;
+                            continue;
+                        }
+                    }
+                    if steps_at_start + cum >= max_steps || bus.is_aborted() {
+                        // Nothing past the cap (or past an abort) will
+                        // ever be stepped; stop routing instead of
+                        // packing dead shards.
+                        ingest.recycle(shard);
+                        break;
+                    }
+                    // Control plane: apply every scripted change whose
+                    // step the routing frontier has reached, between two
+                    // shard routings (the quiesce point).
+                    while next_ev < script.len() && script[next_ev].at_step <= cum {
+                        let ev = script[next_ev];
+                        next_ev += 1;
+                        sched::point(site::KNOB_APPLY);
+                        match ev.change {
+                            KnobChange::Route(p) => router.set_policy(p),
+                            KnobChange::AllreduceEvery(v) => bus.retune_every(cum, v),
+                            // Pre-dealt to the pack workers at assembly.
+                            KnobChange::Lookahead(_) => {}
+                            KnobChange::IngestWorkers(n) => {
+                                eff_ingest.workers = n;
+                                restart_after = Some(idx);
+                            }
+                            KnobChange::ChunkRows(n) => {
+                                eff_ingest.chunk_rows = n;
+                                restart_after = Some(idx);
+                            }
+                            KnobChange::AddLane => {
+                                let d = joiners
+                                    .pop_front()
+                                    .expect("validated: one joiner per AddLane event");
+                                debug_assert_eq!(states[d].get(), LaneState::Joining);
+                                sched::point(site::LANE_JOIN);
+                                let span = trace::begin(tkind::LANE_JOIN, d as u32, cum);
+                                router.mark_alive(d);
+                                states[d].set(LaneState::Live);
+                                span.end();
+                            }
+                            KnobChange::RemoveLane(d) => {
+                                // Taking the sender is the drain trigger:
+                                // the lane's worker exits once its queued
+                                // shards are packed, its consumer trains
+                                // them (all stamped pre-quiesce), then
+                                // folds to the end as a valid survivor.
+                                if shard_txs[d].take().is_some() {
+                                    let span = trace::begin(tkind::LANE_DRAIN, d as u32, cum);
+                                    router.mark_dead(d);
+                                    states[d].set(LaneState::Draining);
+                                    span.end();
+                                }
+                            }
+                        }
+                        registry.record(cum, ev.change);
+                    }
+                    // Sync lane losses into the routing mask: the dead
+                    // lane's remaining shards land on survivors instead.
+                    for dd in 0..shard_txs.len() {
+                        if router.is_alive(dd) && !lane_alive[dd].load(Ordering::SeqCst) {
+                            router.mark_dead(dd);
+                            states[dd].set(LaneState::Dead);
+                            last_dead = dd;
+                        }
+                    }
+                    if router.alive_count() == 0 {
+                        // No lane left to absorb the stream: this is the
+                        // unrecoverable failure domain.
+                        ingest.recycle(shard);
+                        return Err(EtlError::LaneLost { device: last_dead, survivors: 0 });
+                    }
+                    let chunks = (shard.rows() / step_rows) as u64;
+                    let d = router.route(shard.total_bytes() as u64);
+                    let tx = shard_txs[d]
+                        .as_ref()
+                        .expect("router only routes to lanes whose sender it still holds");
+                    if tx.send((cum, shard)).is_err() {
+                        break; // lane worker exited (fleet shut down)
+                    }
+                    cum += chunks;
+                }
+                Ok(())
+            })();
+            match routed {
+                Ok(()) => {
+                    // The last routed slot may cross the cap; consumers
+                    // skip its excess chunks, so the stream total is the
+                    // capped count.
+                    bus.close(cum.min(max_steps.saturating_sub(steps_at_start)));
+                    wait_s += ingest.wait_seconds();
+                    Ok((wait_s, registry))
+                }
+                Err(e) => {
+                    bus.abort();
+                    Err(e)
+                }
+            }
+        });
+
+        // Consumer threads: one per lane. Each steps its own replica in
+        // place on its lane's staged slots (local SGD), posts one
+        // gradient contribution per step, and applies resolved reduce
+        // epochs onto its synced base before stepping into the next
+        // window — the only cross-device synchronization is the bus. A
+        // joiner's consumer simply blocks on its (empty) queue until the
+        // lane is admitted; its first fold syncs the replica through
+        // every epoch its first step depends on.
+        let mut consumers = Vec::with_capacity(peak);
+        for (d, rx, mut replica) in consumer_parts {
+            let tracker = Arc::clone(&tracker);
+            consumers.push(scope.spawn(move || -> Result<(Trainer, ConsumerOut)> {
+                fault::enroll(fault_token);
+                trace::enroll(trace_token);
+                trace::set_thread_label(&format!("consumer-{d}"));
+                let _abort_on_panic = BusAbortOnPanic(bus);
+                let mut out = ConsumerOut::default();
+                let mut base = replica.state_to_vec()?;
+                let mut applied = 0u64; // reduce epochs folded so far
+                let mut stepping = true;
+                let mut failure: Option<EtlError> = None;
+                while let Some(RoutedSlot { start_rel, chunks, raw_bytes, slot }) = rx.pop() {
+                    sched::point(site::LANE_HANDOFF);
+                    if !out.lost && failure.is_none() && fault::inject(fsite::LANE_LOSS, d as u64)
+                    {
+                        // Injected lane loss: this device is gone. Leave
+                        // the reduce group so peers stop waiting on this
+                        // replica's fetches, mark the lane dead for the
+                        // router, and fall into drain mode — every
+                        // remaining slot's steps are forfeited below so
+                        // reduce epochs still resolve for survivors.
+                        out.lost = true;
+                        if lane_alive[d].swap(false, Ordering::SeqCst) {
+                            lanes_lost.fetch_add(1, Ordering::SeqCst);
+                        }
+                        states[d].set(LaneState::Dead);
+                        bus.leave(applied);
+                    }
+                    if out.lost {
+                        if failure.is_none() {
+                            let lo = start_rel.min(cap_rel);
+                            let hi = (start_rel + chunks).min(cap_rel);
+                            if lo < hi {
+                                bus.forfeit(lo..hi);
+                            }
+                        }
+                    } else if stepping && failure.is_none() {
+                        let views = slot.chunk_views(step_rows);
+                        if views.len() as u64 != chunks {
+                            // A row-dropping pipeline would corrupt the
+                            // schedule's step numbering and deadlock the
+                            // bus — fail loudly instead.
+                            bus.abort();
+                            failure = Some(EtlError::Coord(format!(
+                                "packed slot yields {} chunks but the router scheduled {} \
+                                 (pipeline did not preserve rows)",
+                                views.len(),
+                                chunks
+                            )));
+                        }
+                        for (c, view) in views.iter().enumerate() {
+                            if failure.is_some() {
+                                break;
+                            }
+                            let rel = start_rel + c as u64;
+                            let g_abs = steps_at_start + rel;
+                            if g_abs >= max_steps {
+                                break;
+                            }
+                            // Fold every epoch this step depends on.
+                            let need = bus.epochs_before(g_abs);
+                            while applied < need && failure.is_none() {
+                                match fold_next_epoch(
+                                    bus,
+                                    d,
+                                    &mut replica,
+                                    &mut base,
+                                    &mut applied,
+                                    &mut out.reduce_wait_s,
+                                ) {
+                                    Ok(Fold::Applied) => {}
+                                    Ok(Fold::Done) => {
+                                        stepping = false;
+                                        break;
+                                    }
+                                    Err(e) => {
+                                        bus.abort();
+                                        failure = Some(e);
+                                    }
+                                }
+                            }
+                            if !stepping || failure.is_some() {
+                                break;
+                            }
+                            let ts = std::time::Instant::now();
+                            let step_span = trace::begin(tkind::TRAIN_STEP, d as u32, g_abs);
+                            match replica.grad_step(view) {
+                                Ok(grad) => {
+                                    step_span.end();
+                                    out.recs.push(StepRec {
+                                        g_abs,
+                                        end_s: t0.elapsed().as_secs_f64(),
+                                        busy_s: ts.elapsed().as_secs_f64(),
+                                        loss: grad.loss as f32,
+                                    });
+                                    let post_span =
+                                        trace::begin(tkind::REDUCE_POST, d as u32, rel);
+                                    let posted = bus.post(rel, d, grad);
+                                    post_span.end();
+                                    if let Err(e) = posted {
+                                        // Pending-window cap blown (the
+                                        // allreduce_every=0 footgun):
+                                        // abort rather than buffer
+                                        // gradients without bound.
+                                        bus.abort();
+                                        failure = Some(e);
+                                    }
+                                }
+                                Err(e) => {
+                                    bus.abort();
+                                    failure = Some(e);
+                                }
+                            }
+                        }
+                    }
+                    // Credit + ledger return happen on the consumer
+                    // thread even when the slot's chunks were skipped
+                    // (max_steps cut or failure drain) — exactly once.
+                    tracker.complete(d, raw_bytes);
+                    if let Err(e) = arenas.device(d).release(slot) {
+                        if failure.is_none() {
+                            bus.abort();
+                            failure = Some(e);
+                        }
+                    }
+                }
+                // Lane closed: fold the remaining epochs so this replica
+                // lands on the final reduced state even though peers may
+                // still be stepping — this is what makes a drained
+                // (gracefully removed) lane and a never-admitted joiner
+                // valid survivors. A lost lane already left the reduce
+                // group — fetching again would double-count its serves —
+                // so it skips the drain and exits with stale state.
+                while !out.lost && failure.is_none() {
+                    match fold_next_epoch(
+                        bus,
+                        d,
+                        &mut replica,
+                        &mut base,
+                        &mut applied,
+                        &mut out.reduce_wait_s,
+                    ) {
+                        Ok(Fold::Applied) => {}
+                        Ok(Fold::Done) => break,
+                        Err(e) => {
+                            bus.abort();
+                            failure = Some(e);
+                        }
+                    }
+                }
+                if states[d].get() == LaneState::Draining {
+                    states[d].set(LaneState::Dead);
+                }
+                match failure {
+                    Some(e) => Err(e),
+                    None => Ok((replica, out)),
+                }
+            }));
+        }
+
+        // Join consumers first: they exit once the router closed the bus
+        // and their lanes drained. Only then close the arenas (waking any
+        // worker still blocked on a credit after an abnormal consumer
+        // exit) and collect the producer side.
+        for handle in consumers {
+            match handle.join() {
+                Ok(Ok(pair)) => cons.push(pair),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(EtlError::Coord("consumer panicked".into())))
+                }
+            }
+        }
+        arenas.close_all();
+        for handle in workers {
+            match handle.join() {
+                Ok(Ok(out)) => lanes.push(out),
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err =
+                        first_err.or_else(|| Some(EtlError::Coord("pack worker panicked".into())))
+                }
+            }
+        }
+        match router_thread.join() {
+            Ok(Ok((w, reg))) => {
+                ingest_wait_s = w;
+                registry = reg;
+            }
+            Ok(Err(e)) => first_err = first_err.or(Some(e)),
+            Err(_) => {
+                first_err = first_err.or_else(|| Some(EtlError::Coord("router panicked".into())))
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })?;
+
+    // Every surviving replica drained the bus to the last resolved
+    // epoch, so the survivors are bitwise identical; the fleet
+    // parameters land back in the caller's trainer from the first one.
+    // Lost lanes' replicas are stale (they left the reduce group) and
+    // never source the final state; a fleet with no survivor at all is
+    // the unrecoverable outcome.
+    let total_steps: u64 = cons.iter().map(|(_, o)| o.recs.len() as u64).sum();
+    if lanes_lost.load(Ordering::SeqCst) >= peak as u64 {
+        let device = (0..peak)
+            .rev()
+            .find(|&dd| !lane_alive[dd].load(Ordering::SeqCst))
+            .unwrap_or(0);
+        return Err(EtlError::LaneLost { device, survivors: 0 });
+    }
+    let survivor = cons
+        .iter()
+        .position(|(_, o)| !o.lost)
+        .expect("a lane neither worker- nor consumer-lost has a live replica");
+    trainer.load_state(cons[survivor].0.state())?;
+    trainer.steps = steps_at_start + total_steps;
+    let allreduces = bus.resolved_count();
+    let allreduce_sim_s = allreduces as f64 * allreduce_cost_s;
+
+    // Merge the per-consumer step records into the fleet's observables,
+    // in global-step (delivery) order.
+    let mut dev_busy = vec![0.0f64; peak];
+    let mut merged: Vec<(u64, f64, f64, f32)> = Vec::with_capacity(total_steps as usize);
+    for (d, (_, out)) in cons.iter().enumerate() {
+        for r in &out.recs {
+            dev_busy[d] += r.busy_s;
+            merged.push((r.g_abs, r.end_s, r.busy_s, r.loss));
+        }
+    }
+    merged.sort_unstable_by_key(|r| r.0);
+    let mut losses = Vec::new();
+    for &(g, _, _, loss) in &merged {
+        if (g + 1) % loss_every == 0 {
+            losses.push((g + 1, loss));
+        }
+    }
+    // The trace wants execution (wall-clock completion) order — with
+    // concurrent consumers that is not global-step order.
+    let mut step_records: Vec<(f64, f64)> = merged.iter().map(|r| (r.1, r.2)).collect();
+    step_records.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
+    let util_trace = TimeSeries::from_step_records(&step_records, 20);
+    let train_busy_s: f64 = dev_busy.iter().sum();
+    let reduce_wait_s: f64 = cons.iter().map(|(_, o)| o.reduce_wait_s).sum();
+    let producer_stalls = stall_counters
+        .iter()
+        .map(|c| c.load(Ordering::Relaxed))
+        .sum::<u64>()
+        + arenas.total_stats().stalls;
+
+    let per_device: Vec<DeviceReport> = (0..peak)
+        .map(|d| DeviceReport {
+            device: d,
+            shards: lanes[d].shards,
+            steps: cons[d].0.steps,
+            transfer_wait_s: lanes[d].wait_s,
+            dma_sim_s: lanes[d].dma_busy_s,
+            staged_bytes: lanes[d].dma_bytes,
+            train_busy_s: dev_busy[d],
+            reduce_wait_s: cons[d].1.reduce_wait_s,
+        })
+        .collect();
+    let wall_s = t0.elapsed().as_secs_f64();
+    // Per-lane cache stats roll up into the fleet-level counters; the
+    // per-shard vector keeps device attribution for the bench/report.
+    let emb: Vec<crate::runtime::embedding::EmbCacheStats> =
+        lanes.iter().filter_map(|l| l.emb).collect();
+    Ok(TrainReport {
+        steps: steps_at_start + total_steps,
+        losses,
+        wall_s,
+        train_busy_s,
+        util: (train_busy_s / wall_s.max(1e-9)).min(1.0),
+        util_trace,
+        producer_stalls,
+        etl_host_s: lanes.iter().map(|l| l.host_s).sum(),
+        ingest_wait_s,
+        transfer_wait_s: lanes.iter().map(|l| l.wait_s).sum(),
+        shards: lanes.iter().map(|l| l.shards).sum(),
+        etl_sim_s: lanes.iter().map(|l| l.sim_s).sum(),
+        dma_sim_s: lanes.iter().map(|l| l.dma_busy_s).sum(),
+        staged_bytes: lanes.iter().map(|l| l.dma_bytes).sum(),
+        host_copy_bytes: 0,
+        steady_allocs: arenas.total_stats().steady_allocs,
+        per_device,
+        allreduce_sim_s,
+        allreduces,
+        reduce_wait_s,
+        lanes_lost: lanes_lost.load(Ordering::SeqCst),
+        retried_transfers: lanes.iter().map(|l| l.dma_retried).sum(),
+        failed_transfers: lanes.iter().map(|l| l.dma_failed).sum(),
+        forfeited_steps: bus.forfeited_count(),
+        reconfigs: registry.reconfigs(),
+        cache_hits: emb.iter().map(|e| e.hits).sum(),
+        cache_misses: emb.iter().map(|e| e.misses).sum(),
+        exchange_bytes: emb.iter().map(|e| e.exchange_bytes).sum(),
+        prefetch_wait_s: emb.iter().map(|e| e.prefetch_wait_s).sum(),
+        emb,
+        trace: None,
+        stall_attribution: None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn in_order() -> IngestConfig {
+        IngestConfig::default()
+    }
+
+    #[test]
+    fn control_script_validation_catches_shape_bugs() {
+        let ok = ControlScript {
+            events: vec![
+                ControlEvent { at_step: 2, change: KnobChange::AddLane },
+                ControlEvent { at_step: 2, change: KnobChange::Route(RoutePolicy::LeastLoaded) },
+                ControlEvent { at_step: 5, change: KnobChange::RemoveLane(0) },
+            ],
+        };
+        assert!(ok.validate(2, &in_order()).is_ok());
+        assert_eq!(ok.add_lanes(), 1);
+
+        let unsorted = ControlScript {
+            events: vec![
+                ControlEvent { at_step: 5, change: KnobChange::AddLane },
+                ControlEvent { at_step: 2, change: KnobChange::AddLane },
+            ],
+        };
+        let err = unsorted.validate(2, &in_order()).unwrap_err();
+        assert!(err.to_string().contains("sorted"), "{err}");
+
+        let zero_workers = ControlScript {
+            events: vec![ControlEvent { at_step: 1, change: KnobChange::IngestWorkers(0) }],
+        };
+        assert!(zero_workers.validate(2, &in_order()).is_err());
+
+        let mut fresh = in_order();
+        fresh.policy = DeliveryPolicy::FreshestFirst;
+        let ingest_knob = ControlScript {
+            events: vec![ControlEvent { at_step: 1, change: KnobChange::ChunkRows(32) }],
+        };
+        let err = ingest_knob.validate(2, &fresh).unwrap_err();
+        assert!(err.to_string().contains("InOrder"), "{err}");
+
+        let bad_remove = ControlScript {
+            events: vec![ControlEvent { at_step: 1, change: KnobChange::RemoveLane(2) }],
+        };
+        let err = bad_remove.validate(2, &in_order()).unwrap_err();
+        assert!(err.to_string().contains("RemoveLane(2)"), "{err}");
+    }
+
+    #[test]
+    fn knob_registry_counts_applications_in_order() {
+        let mut reg = KnobRegistry::default();
+        assert_eq!(reg.reconfigs(), 0);
+        reg.record(3, KnobChange::AddLane);
+        reg.record(7, KnobChange::Route(RoutePolicy::RoundRobin));
+        assert_eq!(reg.reconfigs(), 2);
+        assert_eq!(reg.applied()[0], (3, KnobChange::AddLane));
+        assert_eq!(reg.applied()[1].1.name(), "route");
+    }
+
+    #[test]
+    fn lane_state_cell_round_trips_every_state() {
+        let cell = LaneStateCell::new(LaneState::Joining);
+        assert_eq!(cell.get(), LaneState::Joining);
+        for s in [LaneState::Live, LaneState::Draining, LaneState::Dead] {
+            cell.set(s);
+            assert_eq!(cell.get(), s);
+        }
+    }
+}

@@ -40,7 +40,44 @@
 //! (in-order, sync-every-step); and `delivered + quarantined = total`
 //! holds exactly. [`crate::error::EtlError::is_fault`] classifies which errors the
 //! recovery ladder may absorb; everything else aborts loudly.
+//!
+//! # Elastic fleet: lane lifecycle and the live control plane
+//!
+//! Every arena-path run is driven by the [`fleet`] runtime: per-device
+//! **lanes** (pack worker + arena region + DMA clock + consumer thread)
+//! assembled up front at the fleet's peak width, with a scripted
+//! [`ControlScript`] of `(global_step, KnobChange)` events the router
+//! applies mid-run. A lane walks one lifecycle:
+//!
+//! ```text
+//!            AddLane applied                 RemoveLane applied
+//!  Joining ────────────────────▶ Live ────────────────────────▶ Draining
+//!     │                            │                               │
+//!     │                            │ fault (DMA hard-fail /        │ queued slots
+//!     │                            │ LANE_LOSS injection)          │ still train
+//!     └────────── fleet ends ──────┴───────────────────────▶    Dead
+//! ```
+//!
+//! Scripted changes land only at **quiesce points** — on the router
+//! thread, between two shard routings, at the first routing frontier
+//! `cum >= at_step`:
+//!
+//! ```text
+//!   route(shard k) ─▶ [apply events with at_step <= cum] ─▶ route(shard k+1)
+//!       Route / AllreduceEvery / Lookahead        retune in place
+//!       AddLane / RemoveLane                      mask flip / sender taken
+//!       IngestWorkers / ChunkRows                 restart at next shard boundary
+//! ```
+//!
+//! Because no shard spans an application, a script is a pure function of
+//! the delivery-order step numbering: scripted runs are **bitwise
+//! identical under schedule fuzzing** (`rust/tests/prop_elastic.rs`).
+//! [`KnobRegistry`] logs each application;
+//! [`TrainReport::reconfigs`] counts them. Full details (deferred ingest
+//! restarts, joiner epoch sync, graceful-drain accounting) in the
+//! [`fleet`] module docs.
 
+pub mod fleet;
 pub mod online;
 pub mod packer;
 pub mod scheduler;
@@ -48,6 +85,7 @@ pub mod sharding;
 pub mod staging;
 pub mod train_loop;
 
+pub use fleet::{ControlEvent, ControlScript, KnobChange, KnobRegistry, LaneState};
 pub use packer::{pack, PackLayout, PackedBatch, PackedBatchView};
 pub use scheduler::{
     cpu_gpu_config, piperec_config, simulate_overlap, utilization_trace, DeviceRouter,

@@ -225,6 +225,14 @@ impl LoadTracker {
         }
     }
 
+    /// Zero `device`'s ledger. Called on lane death and (re)admission: a
+    /// retired lane's outstanding bytes must not linger and skew
+    /// `LeastLoaded` against it when it later rejoins. In-flight
+    /// `complete` calls for slots the lane still drains saturate at 0.
+    pub fn clear(&self, device: usize) {
+        self.loads[device].store(0, Ordering::Relaxed);
+    }
+
     /// Snapshot of every device's outstanding bytes.
     pub fn snapshot(&self) -> Vec<u64> {
         self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
@@ -247,19 +255,55 @@ pub struct DeviceRouter {
 
 impl DeviceRouter {
     pub fn new(devices: usize, policy: RoutePolicy) -> DeviceRouter {
+        DeviceRouter::with_capacity(devices, devices, policy)
+    }
+
+    /// Router over `devices` live lanes with ledger capacity for `peak`
+    /// lanes: scripted lane-adds ([`extend`](Self::extend) +
+    /// [`mark_alive`](Self::mark_alive)) grow into the reserve without
+    /// reallocating the shared lock-free [`LoadTracker`].
+    pub fn with_capacity(devices: usize, peak: usize, policy: RoutePolicy) -> DeviceRouter {
         assert!(devices >= 1, "router needs at least one device");
+        assert!(peak >= devices, "peak lane capacity below the initial fleet");
         DeviceRouter {
             policy,
             next: 0,
             routed: 0,
             alive: vec![true; devices],
-            tracker: Arc::new(LoadTracker::new(devices)),
+            tracker: Arc::new(LoadTracker::new(peak)),
         }
     }
 
-    /// Number of device lanes.
+    /// Number of device lanes (live, dead, or still joining).
     pub fn devices(&self) -> usize {
-        self.tracker.loads.len()
+        self.alive.len()
+    }
+
+    /// Add a lane slot in the joining state (not yet routable): returns
+    /// its device index. The lane starts receiving shards only after
+    /// [`mark_alive`](Self::mark_alive). Panics when extended past the
+    /// ledger capacity given to [`with_capacity`](Self::with_capacity).
+    pub fn extend(&mut self) -> usize {
+        let device = self.alive.len();
+        assert!(
+            device < self.tracker.loads.len(),
+            "router extended past its lane capacity"
+        );
+        self.alive.push(false);
+        device
+    }
+
+    /// Admit lane `device` — a joiner going live, or a retired lane
+    /// rejoining. Its ledger starts from a clean slate.
+    pub fn mark_alive(&mut self, device: usize) {
+        self.alive[device] = true;
+        self.tracker.clear(device);
+    }
+
+    /// Swap the routing policy at a quiesce point (the control plane's
+    /// route knob); the round-robin cursor and the ledger carry over.
+    pub fn set_policy(&mut self, policy: RoutePolicy) {
+        self.policy = policy;
     }
 
     /// Lanes still accepting work.
@@ -271,8 +315,12 @@ impl DeviceRouter {
     /// pick it (round-robin skips it, least-loaded masks its ledger
     /// entry). The lane-loss recovery of `train_loop::run_multi` calls
     /// this so a dead device's remaining shards re-route to survivors.
+    /// The lane's outstanding-byte ledger is cleared — a dead lane's
+    /// routed-but-unfinished bytes would otherwise linger forever and
+    /// skew `LeastLoaded` against it if it later rejoins.
     pub fn mark_dead(&mut self, device: usize) {
         self.alive[device] = false;
+        self.tracker.clear(device);
     }
 
     /// Is `device` still routable?
@@ -320,7 +368,7 @@ impl DeviceRouter {
                 let snap = self.tracker.snapshot();
                 snap.iter()
                     .enumerate()
-                    .filter(|(d, _)| self.alive[*d])
+                    .filter(|(d, _)| self.alive.get(*d).copied().unwrap_or(false))
                     .min_by_key(|(d, l)| (**l, *d))
                     .map(|(d, _)| d)
                     .expect("router has >= 1 live device")
@@ -372,6 +420,14 @@ impl PrefetchPipeline {
     /// The shard cache being driven (tests / introspection).
     pub fn cache(&self) -> &crate::runtime::embedding::EmbShardCache {
         &self.cache
+    }
+
+    /// Retune the lookahead depth at a quiesce point (the control plane's
+    /// `Lookahead` knob). Deepening takes effect as the window refills;
+    /// shrinking drains the excess on the next staged slot (or the lane
+    /// flush), so accounting stays in delivery order.
+    pub fn set_lookahead(&mut self, lookahead: usize) {
+        self.lookahead = lookahead;
     }
 
     /// Account a freshly staged slot: `sparse`/`rows` are the packed
@@ -467,7 +523,28 @@ pub enum EpochWait {
     Aborted,
 }
 
+/// One piece of the epoch-window schedule: from run-relative step
+/// `from_rel` on, windows are `period` wide, the first of them ending at
+/// `first_end` and carrying epoch index `from_epoch`. The launch segment
+/// aligns to absolute step counts (a warm-started trainer keeps its sync
+/// phase); control-plane retunes ([`ReduceBus::retune_every`]) push new
+/// segments at epoch boundaries at or beyond the routing frontier, so the
+/// step → epoch mapping stays a pure function of (config, script).
+#[derive(Debug, Clone, Copy)]
+struct Segment {
+    from_rel: u64,
+    from_epoch: u64,
+    period: u64,
+    first_end: u64,
+}
+
 struct BusInner {
+    /// Current contributor count: [`ReduceBus::join`] grows it, and every
+    /// serve/release threshold reads it live (a joiner raises the fetch
+    /// count an epoch needs before its memory is dropped).
+    members: usize,
+    /// Epoch-window schedule, append-only (see [`Segment`]).
+    segments: Vec<Segment>,
     /// Posted steps not yet folded into an epoch, keyed by run-relative
     /// global step index.
     pending: BTreeMap<u64, (usize, GradStep)>,
@@ -548,10 +625,19 @@ struct BusInner {
 /// already applied — every later epoch counts the leaver as implicitly
 /// served, so survivors' fetches still release epoch memory and no waiter
 /// deadlocks on a fetch that will never come.
+///
+/// # Elastic membership and retuning
+///
+/// The membership is dynamic in both directions: [`join`](Self::join)
+/// (the counterpart of `leave`) admits a new contributor whose replica
+/// synced through `applied` epochs — earlier epochs count it as
+/// implicitly served, later ones it fetches like any member — and
+/// [`retune_every`](Self::retune_every) changes the window period from
+/// the next epoch boundary at or beyond the routing frontier on, leaving
+/// every already-stamped step's epoch assignment untouched (the schedule
+/// is a list of [`Segment`]s, each a pure function of config + control
+/// script, so scripted retunes replay bitwise).
 pub struct ReduceBus {
-    devices: usize,
-    /// Effective period (`allreduce_every`, with 0 mapped to `u64::MAX`).
-    every: u64,
     /// Absolute steps already taken before this run (warm-start phase).
     start: u64,
     /// Hard bound on buffered (posted, unresolved) steps.
@@ -573,12 +659,20 @@ impl ReduceBus {
     pub fn new(devices: usize, allreduce_every: usize, steps_at_start: u64) -> ReduceBus {
         assert!(devices >= 1, "reduce bus needs at least one device");
         let every = if allreduce_every == 0 { u64::MAX } else { allreduce_every as u64 };
+        let first_end = (steps_at_start / every + 1)
+            .saturating_mul(every)
+            .saturating_sub(steps_at_start);
         ReduceBus {
-            devices,
-            every,
             start: steps_at_start,
             pending_cap: DEFAULT_PENDING_CAP,
             inner: Mutex::new(BusInner {
+                members: devices,
+                segments: vec![Segment {
+                    from_rel: 0,
+                    from_epoch: 0,
+                    period: every,
+                    first_end,
+                }],
                 pending: BTreeMap::new(),
                 forfeited: BTreeSet::new(),
                 forfeited_total: 0,
@@ -602,9 +696,10 @@ impl ReduceBus {
         self
     }
 
-    /// Replica count the bus serves.
+    /// Replica count the bus currently serves ([`join`](Self::join) grows
+    /// it mid-run).
     pub fn devices(&self) -> usize {
-        self.devices
+        self.inner.lock().expect("reduce bus poisoned").members
     }
 
     /// Number of epochs a replica must have applied before executing the
@@ -612,16 +707,110 @@ impl ReduceBus {
     /// that step belongs to).
     pub fn epochs_before(&self, step_abs: u64) -> u64 {
         debug_assert!(step_abs >= self.start);
-        step_abs / self.every - self.start / self.every
+        let inner = self.inner.lock().expect("reduce bus poisoned");
+        Self::epoch_of(&inner.segments, step_abs - self.start)
+    }
+
+    /// Epoch index of run-relative step `rel` under the segment schedule.
+    fn epoch_of(segments: &[Segment], rel: u64) -> u64 {
+        let seg = segments
+            .iter()
+            .rev()
+            .find(|s| s.from_rel <= rel)
+            .expect("segment 0 covers rel 0");
+        if rel < seg.first_end {
+            seg.from_epoch
+        } else {
+            seg.from_epoch + 1 + (rel - seg.first_end) / seg.period
+        }
     }
 
     /// One past the last run-relative step of epoch `e` (unclamped by the
     /// stream total).
-    fn end_rel(&self, e: u64) -> u64 {
-        let first_window = self.start / self.every;
-        (first_window + e + 1)
-            .saturating_mul(self.every)
-            .saturating_sub(self.start)
+    fn end_rel(segments: &[Segment], e: u64) -> u64 {
+        let seg = segments
+            .iter()
+            .rev()
+            .find(|s| s.from_epoch <= e)
+            .expect("segment 0 starts at epoch 0");
+        seg.first_end
+            .saturating_add((e - seg.from_epoch).saturating_mul(seg.period))
+    }
+
+    /// Admit a new contributor (the counterpart of [`leave`](Self::leave))
+    /// and return its device index. The joiner's replica has already
+    /// applied `applied` epochs (synced from the last resolved base), so
+    /// every earlier epoch counts it as implicitly served; from `applied`
+    /// on it fetches like any member — which is why admission fails if
+    /// any such epoch was already fully served and released (the data the
+    /// joiner needs is gone; it must re-sync and retry).
+    pub fn join(&self, applied: u64) -> Result<usize> {
+        sched::point(site::LANE_JOIN);
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        for idx in (applied as usize)..inner.resolved.len() {
+            if inner.resolved[idx].is_none() {
+                return Err(EtlError::Coord(format!(
+                    "reduce-bus join too late: epoch {idx} was already released, \
+                     but the joiner only synced through epoch {applied}"
+                )));
+            }
+        }
+        let device = inner.members;
+        inner.members += 1;
+        let members = inner.members;
+        let upto = (applied as usize).min(inner.resolved.len());
+        for idx in 0..upto {
+            if inner.resolved[idx].is_some() {
+                inner.served[idx] += 1;
+                if inner.served[idx] >= members {
+                    inner.resolved[idx] = None;
+                }
+            }
+        }
+        Ok(device)
+    }
+
+    /// Retune the all-reduce period at the routing frontier (the control
+    /// plane's `AllreduceEvery` knob): the window in progress finishes
+    /// under the old period, and the new one applies from the next epoch
+    /// boundary at or beyond run-relative step `frontier_rel` — every
+    /// already-stamped step keeps its epoch assignment. A no-op when the
+    /// period is unchanged; a re-retune before the previous boundary took
+    /// effect overrides it in place.
+    pub fn retune_every(&self, frontier_rel: u64, allreduce_every: usize) {
+        let period = if allreduce_every == 0 { u64::MAX } else { allreduce_every as u64 };
+        let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        let last = *inner.segments.last().expect("segment 0 always present");
+        if last.period == period {
+            return;
+        }
+        if inner.segments.len() > 1 && frontier_rel <= last.from_rel {
+            *inner.segments.last_mut().expect("non-empty") = Segment {
+                from_rel: last.from_rel,
+                from_epoch: last.from_epoch,
+                period,
+                first_end: last.from_rel.saturating_add(period),
+            };
+        } else {
+            let (boundary, from_epoch) = if frontier_rel <= last.first_end {
+                (last.first_end, last.from_epoch + 1)
+            } else {
+                let k = (frontier_rel - last.first_end).div_ceil(last.period);
+                (
+                    last.first_end.saturating_add(k.saturating_mul(last.period)),
+                    last.from_epoch + 1 + k,
+                )
+            };
+            inner.segments.push(Segment {
+                from_rel: boundary,
+                from_epoch,
+                period,
+                first_end: boundary.saturating_add(period),
+            });
+        }
+        self.try_resolve(&mut inner);
+        drop(inner);
+        self.cv.notify_all();
     }
 
     /// Post the gradient contribution of run-relative global step `step`
@@ -632,8 +821,8 @@ impl ReduceBus {
     /// end, and the cap turns that silent OOM footgun into a diagnosis.
     pub fn post(&self, step: u64, device: usize, grad: GradStep) -> Result<()> {
         sched::point(site::REDUCE_POST);
-        assert!(device < self.devices, "device {device} out of range");
         let mut inner = self.inner.lock().expect("reduce bus poisoned");
+        assert!(device < inner.members, "device {device} out of range");
         if inner.pending.len() >= self.pending_cap {
             return Err(EtlError::Mem(format!(
                 "reduce bus pending buffer hit its cap ({} steps) at step {step}: \
@@ -676,10 +865,11 @@ impl ReduceBus {
     pub fn leave(&self, applied: u64) {
         let mut inner = self.inner.lock().expect("reduce bus poisoned");
         inner.leavers += 1;
+        let members = inner.members;
         for idx in (applied as usize)..inner.resolved.len() {
             if inner.resolved[idx].is_some() {
                 inner.served[idx] += 1;
-                if inner.served[idx] >= self.devices {
+                if inner.served[idx] >= members {
                     inner.resolved[idx] = None;
                 }
             }
@@ -759,7 +949,7 @@ impl ReduceBus {
                         .expect("epoch fetched more than `devices` times"),
                 );
                 inner.served[idx] += 1;
-                if inner.served[idx] >= self.devices {
+                if inner.served[idx] >= inner.members {
                     inner.resolved[idx] = None;
                 }
                 return EpochWait::Resolved(ep);
@@ -783,7 +973,7 @@ impl ReduceBus {
         loop {
             let e = inner.resolved.len() as u64;
             let prev_end = inner.resolved_end;
-            let mut end = self.end_rel(e);
+            let mut end = Self::end_rel(&inner.segments, e);
             if let Some(total) = inner.total {
                 end = end.min(total);
             }
@@ -794,7 +984,7 @@ impl ReduceBus {
                 break; // window still has unposted steps
             }
             let mut per_dev: Vec<Vec<GradStep>> =
-                (0..self.devices).map(|_| Vec::new()).collect();
+                (0..inner.members).map(|_| Vec::new()).collect();
             for r in prev_end..end {
                 if inner.forfeited.remove(&r) {
                     continue; // tombstone: completes the window, no data
@@ -813,7 +1003,7 @@ impl ReduceBus {
                 .collect();
             // A departed replica never fetches: it is served from birth.
             let pre_served = inner.leavers;
-            inner.resolved.push(if pre_served >= self.devices {
+            inner.resolved.push(if pre_served >= inner.members {
                 None // everyone left; resolve for accounting, hold no data
             } else {
                 Some(Arc::new(ReducedEpoch { epoch: e, start: prev_end, end, contribs }))
@@ -1332,5 +1522,118 @@ mod tests {
             windowed.post(g, 0, grad(g as f64)).unwrap();
         }
         assert_eq!(windowed.resolved_count(), 16);
+    }
+
+    #[test]
+    fn mark_dead_clears_the_outstanding_byte_ledger() {
+        // The rejoin-skew bug: a lane dying with outstanding routed bytes
+        // used to keep them on the ledger forever, so LeastLoaded would
+        // shun the lane after it rejoined. Death must clear the ledger.
+        let mut r = DeviceRouter::new(2, RoutePolicy::LeastLoaded);
+        assert_eq!(r.route(1000), 0);
+        assert_eq!(r.route(10), 1);
+        assert_eq!(r.tracker().load(0), 1000);
+        r.mark_dead(0);
+        assert_eq!(r.tracker().load(0), 0, "death clears the ledger");
+        // Rejoin: the lane competes on equal footing again (it wins the
+        // 0-byte tie against lane 1's 10 outstanding bytes).
+        r.mark_alive(0);
+        assert_eq!(r.route(10), 0, "rejoined lane is not shunned");
+        // A straggling completion for work drained before death saturates
+        // against the cleared ledger instead of wrapping.
+        r.tracker().complete(0, 1000);
+        assert_eq!(r.tracker().load(0), 0);
+    }
+
+    #[test]
+    fn router_extend_admits_a_joiner_only_after_mark_alive() {
+        let mut r = DeviceRouter::with_capacity(2, 4, RoutePolicy::RoundRobin);
+        assert_eq!(r.devices(), 2);
+        let d = r.extend();
+        assert_eq!((d, r.devices()), (2, 3));
+        assert!(!r.is_alive(2), "a joiner starts out of rotation");
+        let before: Vec<usize> = (0..4).map(|_| r.route(10)).collect();
+        assert_eq!(before, vec![0, 1, 0, 1]);
+        r.mark_alive(2);
+        let after: Vec<usize> = (0..6).map(|_| r.route(10)).collect();
+        assert_eq!(after, vec![0, 1, 2, 0, 1, 2], "joiner enters the cycle");
+        // LeastLoaded sees the joiner's clean ledger too.
+        r.set_policy(RoutePolicy::LeastLoaded);
+        r.tracker().complete(2, 20); // clear the joiner's two charges
+        assert_eq!(r.route(10), 2);
+    }
+
+    #[test]
+    fn reduce_bus_join_raises_the_release_threshold() {
+        // 1 member, K = 1. Epoch 0 resolves and is fetched once (old
+        // threshold) — then a joiner synced through epoch 0 arrives:
+        // epoch 0 counts it as served, epoch 1 needs both fetches.
+        let bus = ReduceBus::new(1, 1, 0);
+        bus.post(0, 0, grad(0.0)).unwrap();
+        let EpochWait::Resolved(_) = bus.wait_epoch(0) else { panic!() };
+        let d = bus.join(1).unwrap();
+        assert_eq!((d, bus.devices()), (1, 2));
+        bus.post(1, 0, grad(1.0)).unwrap();
+        let EpochWait::Resolved(_) = bus.wait_epoch(1) else { panic!() };
+        // Not released yet: the joiner still owes its fetch.
+        let EpochWait::Resolved(ep) = bus.wait_epoch(1) else {
+            panic!("epoch 1 must survive until the joiner fetches it")
+        };
+        assert_eq!(ep.epoch, 1);
+        bus.close(2);
+        assert!(matches!(bus.wait_epoch(2), EpochWait::Finished));
+    }
+
+    #[test]
+    fn reduce_bus_join_past_a_released_epoch_is_rejected() {
+        let bus = ReduceBus::new(1, 1, 0);
+        bus.post(0, 0, grad(0.0)).unwrap();
+        let EpochWait::Resolved(_) = bus.wait_epoch(0) else { panic!() };
+        // Epoch 0 is fully served and dropped; a joiner synced through
+        // nothing (applied = 0) can never fetch it.
+        let err = bus.join(0).unwrap_err();
+        assert!(err.to_string().contains("join too late"), "{err}");
+        // Synced through epoch 0, the same joiner is admissible.
+        assert_eq!(bus.join(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn retune_every_applies_at_the_next_epoch_boundary() {
+        // K = 4 → retune to K = 2 at frontier 5: window [4, 8) finishes
+        // under the old period, then [8, 10), [10, 12).
+        let bus = ReduceBus::new(1, 4, 0);
+        bus.retune_every(5, 2);
+        for g in 0..12u64 {
+            bus.post(g, 0, grad(g as f64)).unwrap();
+        }
+        let mut ends = Vec::new();
+        for e in 0..bus.resolved_count() {
+            let EpochWait::Resolved(ep) = bus.wait_epoch(e) else { panic!() };
+            ends.push((ep.start, ep.end));
+        }
+        assert_eq!(ends, vec![(0, 4), (4, 8), (8, 10), (10, 12)]);
+        // Steps query their epoch through the same segment schedule.
+        assert_eq!(bus.epochs_before(7), 1);
+        assert_eq!(bus.epochs_before(8), 2);
+        assert_eq!(bus.epochs_before(10), 3);
+    }
+
+    #[test]
+    fn retune_every_same_period_and_reretune_are_stable() {
+        let bus = ReduceBus::new(1, 4, 0);
+        bus.retune_every(0, 4); // no-op: unchanged period
+        // Two retunes before the first boundary: the second overrides the
+        // first at the same boundary (step 4), so K = 3 wins.
+        bus.retune_every(1, 2);
+        bus.retune_every(2, 3);
+        for g in 0..10u64 {
+            bus.post(g, 0, grad(g as f64)).unwrap();
+        }
+        let mut ends = Vec::new();
+        for e in 0..bus.resolved_count() {
+            let EpochWait::Resolved(ep) = bus.wait_epoch(e) else { panic!() };
+            ends.push((ep.start, ep.end));
+        }
+        assert_eq!(ends, vec![(0, 4), (4, 7), (7, 10)]);
     }
 }

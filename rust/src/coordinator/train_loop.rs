@@ -106,7 +106,7 @@
 //! right after staging a slot it promotes that slot's embedding rows, and
 //! commits the hit/miss walk `lookahead` slots later — the router's
 //! head-start is what hides the promotion latency. Sparse embedding
-//! gradients ride the existing [`ReduceBus`] epochs (every step's f64
+//! gradients ride the existing [`crate::coordinator::scheduler::ReduceBus`] epochs (every step's f64
 //! gradient image already carries the touched embedding slots); rows owned
 //! by peer shards charge [`TrainReport::exchange_bytes`] both for the row
 //! fetch and the gradient routed back. Because the authoritative values
@@ -124,9 +124,9 @@
 //! ([`TransferConfig::max_retries`]) at the pack worker — without taking
 //! down the fleet. The dying side marks the lane dead (the router stops
 //! assigning it shards and re-routes the remainder to survivors), the
-//! consumer leaves the reduce group ([`ReduceBus::leave`]) so peers stop
+//! consumer leaves the reduce group ([`crate::coordinator::scheduler::ReduceBus::leave`]) so peers stop
 //! waiting on its fetches, and every step range still queued on the dead
-//! lane is forfeited ([`ReduceBus::forfeit`]) so reduce epochs keep
+//! lane is forfeited ([`crate::coordinator::scheduler::ReduceBus::forfeit`]) so reduce epochs keep
 //! resolving — survivors converge on the reduced state of the steps that
 //! actually ran. Only when **no** lane survives does the run fail, with
 //! [`EtlError::LaneLost`]. [`TrainReport::lanes_lost`],
@@ -135,26 +135,19 @@
 //! site-by-site fault matrix lives in [`crate::coordinator`]'s module
 //! docs.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
-
-use crate::coordinator::scheduler::{DeviceRouter, EpochWait, ReduceBus, RoutePolicy};
+use crate::coordinator::fleet::{self, ControlScript};
+use crate::coordinator::scheduler::RoutePolicy;
 use crate::coordinator::staging::StagingQueue;
 use crate::dataio::dataset::DatasetSpec;
 use crate::dataio::ingest::{AsyncIngest, IngestConfig, ShardInput};
-use crate::devmem::{
-    ArenaConfig, ArenaSet, DeviceArena, StagingSlot, TransferConfig, TransferEngine, TransferSet,
-};
+use crate::devmem::{ArenaConfig, TransferConfig};
 use crate::error::{EtlError, Result};
-use crate::etl::column::Batch;
 use crate::etl::exec::BufferPool;
 use crate::fpga::Pipeline;
-use crate::memsys::{ChannelModel, Path};
 use crate::metrics::TimeSeries;
 use crate::runtime::Trainer;
 use crate::trace::{self, kind as tkind};
-use crate::util::fault::{self, site as fsite};
-use crate::util::sched::{self, site};
+use crate::util::fault;
 
 /// Which staging dataflow the loop runs (see module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -191,7 +184,7 @@ pub struct TrainConfig {
     /// device when `devices` > 1).
     pub transfer: TransferConfig,
     /// Simulated GPUs fed by the staging dataflow. 1 = the single-device
-    /// arena path; > 1 routes shards across an [`ArenaSet`] (arena path
+    /// arena path; > 1 routes shards across an [`crate::devmem::ArenaSet`] (arena path
     /// only).
     pub devices: usize,
     /// Shard→device routing policy for `devices` > 1.
@@ -215,6 +208,11 @@ pub struct TrainConfig {
     /// costs one relaxed atomic load; tracing never changes the training
     /// arithmetic (pinned bitwise by `rust/tests/prop_trace.rs`).
     pub trace: bool,
+    /// Scripted mid-run control-plane changes — lane add/remove and live
+    /// knob retunes, applied deterministically at routing-frontier
+    /// quiesce points (see [`crate::coordinator::fleet`]; arena path
+    /// only). Empty (default) = a static fleet with zero overhead.
+    pub control: ControlScript,
 }
 
 impl Default for TrainConfig {
@@ -233,7 +231,62 @@ impl Default for TrainConfig {
             allreduce_every: 1,
             embedding: None,
             trace: false,
+            control: ControlScript::default(),
         }
+    }
+}
+
+impl TrainConfig {
+    /// Typed shape validation ([`EtlError::Config`]), called at the
+    /// entry of every training loop before anything spawns. Catches the
+    /// configs that would otherwise fail obscurely mid-run: a zero-wide
+    /// fleet, the channel path under multi-device/embedding features, a
+    /// credit pool too small to double-buffer, an embedding prefetcher
+    /// with no hot tier to promote into, and a malformed
+    /// [`ControlScript`].
+    pub fn validate(&self) -> Result<()> {
+        if self.devices == 0 {
+            return Err(EtlError::Config(
+                "TrainConfig::devices must be >= 1 (0 is a config bug, not single-device)"
+                    .into(),
+            ));
+        }
+        if self.devices > 1 && self.path != DataPath::Arena {
+            return Err(EtlError::Config(
+                "multi-device training requires DataPath::Arena (per-device staging regions)"
+                    .into(),
+            ));
+        }
+        if self.embedding.is_some() && self.path != DataPath::Arena {
+            return Err(EtlError::Config(
+                "the sharded embedding layer requires DataPath::Arena (its hot tier is pinned \
+                 in the device arena)"
+                    .into(),
+            ));
+        }
+        if self.path == DataPath::Arena && self.arena.slots < 2 {
+            return Err(EtlError::Config(format!(
+                "ArenaConfig::slots must be >= 2 for credit-gated double buffering (got {})",
+                self.arena.slots
+            )));
+        }
+        if let Some(e) = &self.embedding {
+            if e.cache_rows == 0 && e.lookahead > 0 {
+                return Err(EtlError::Config(format!(
+                    "EmbeddingConfig::cache_rows = 0 cannot host a lookahead of {} (nothing \
+                     to prefetch into)",
+                    e.lookahead
+                )));
+            }
+        }
+        if !self.control.is_empty() && self.path != DataPath::Arena {
+            return Err(EtlError::Config(
+                "a ControlScript requires DataPath::Arena (the control plane lives in the \
+                 fleet router)"
+                    .into(),
+            ));
+        }
+        self.control.validate(self.devices, &self.ingest)
     }
 }
 
@@ -333,6 +386,10 @@ pub struct TrainReport {
     /// Scheduled global steps forfeited by lost lanes (tombstoned in the
     /// reduce bus so epochs still resolved); 0 on a fault-free run.
     pub forfeited_steps: u64,
+    /// Control-plane changes the router applied mid-run (scripted
+    /// [`ControlScript`] events executed at quiesce points; 0 for a
+    /// static fleet or the channel path).
+    pub reconfigs: u64,
     /// Embedding lookups served from the hot caches (summed across
     /// lanes; 0 when [`TrainConfig::embedding`] is `None`).
     pub cache_hits: u64,
@@ -382,28 +439,7 @@ pub fn run(
     if !pipeline.is_fitted() && pipeline.plan.dag.stateful_count() > 0 {
         return Err(EtlError::Coord("pipeline must be fitted before training".into()));
     }
-    match (cfg.path, cfg.devices) {
-        (_, 0) => {
-            return Err(EtlError::Coord(
-                "TrainConfig::devices must be >= 1 (0 is a config bug, not single-device)"
-                    .into(),
-            ))
-        }
-        (DataPath::Channel, d) if d > 1 => {
-            return Err(EtlError::Coord(
-                "multi-device training requires DataPath::Arena (per-device staging regions)"
-                    .into(),
-            ))
-        }
-        (DataPath::Channel, _) if cfg.embedding.is_some() => {
-            return Err(EtlError::Coord(
-                "the sharded embedding layer requires DataPath::Arena (its hot tier is pinned \
-                 in the device arena)"
-                    .into(),
-            ))
-        }
-        _ => {}
-    }
+    cfg.validate()?;
     if !cfg.trace {
         return dispatch(pipeline, spec, trainer, cfg);
     }
@@ -427,981 +463,14 @@ fn dispatch(
     trainer: &mut Trainer,
     cfg: &TrainConfig,
 ) -> Result<TrainReport> {
-    match (cfg.path, cfg.devices) {
-        // The embedding layer rides the routed-fleet topology even at
-        // devices = 1 (one lane, one shard) — pinned bitwise identical to
-        // the plain arena path by the reproducibility matrix.
-        (DataPath::Arena, d) if d > 1 || cfg.embedding.is_some() => {
-            run_multi(pipeline, spec, trainer, cfg)
-        }
-        (DataPath::Arena, _) => run_arena(pipeline, spec, trainer, cfg),
-        (DataPath::Channel, _) => run_channel(pipeline, spec, trainer, cfg),
+    match cfg.path {
+        // Every arena run rides the routed-fleet topology — devices = 1
+        // is a one-lane fleet (pinned bitwise identical to the legacy
+        // single-device path by the reproducibility matrix), and the
+        // control plane only exists on this path.
+        DataPath::Arena => fleet::run(pipeline, spec, trainer, cfg),
+        DataPath::Channel => run_channel(pipeline, spec, trainer, cfg),
     }
-}
-
-/// Zero-copy path: ingest → fused pack into arena slots → simulated P2P
-/// DMA → in-place training → credit return.
-fn run_arena(
-    pipeline: &Pipeline,
-    spec: &DatasetSpec,
-    trainer: &mut Trainer,
-    cfg: &TrainConfig,
-) -> Result<TrainReport> {
-    let step_rows = trainer.meta.batch;
-    let steps_at_start = trainer.steps;
-    let (queue, consumer) = StagingQueue::<StagingSlot>::with_buffers(cfg.staging_buffers);
-    let stall_counter = queue.stall_counter();
-    let arena = DeviceArena::new(cfg.arena.clone());
-
-    let t0 = std::time::Instant::now();
-    let mut etl_host_s = 0.0f64;
-    let mut etl_sim_s = 0.0f64;
-    let mut ingest_wait_s = 0.0f64;
-    let mut transfer_wait_s = 0.0f64;
-    let mut dma_sim_s = 0.0f64;
-    let mut staged_bytes = 0u64;
-    let mut shards_done = 0u64;
-    let mut producer_stalls = 0u64;
-    let mut losses = Vec::new();
-    let mut train_busy_s = 0.0f64;
-    let mut util_trace = TimeSeries::default();
-    let mut dma_retried = 0u64;
-    let mut dma_failed = 0u64;
-    let fault_token = fault::enroll_token();
-    let trace_token = trace::enroll_token();
-
-    std::thread::scope(|scope| -> Result<()> {
-        // Producer: the FPGA data plane. Each shard is packed once,
-        // directly into an acquired arena slot, then the DMA engine
-        // schedules its chunked P2P transfer and the slot rides the queue
-        // to the consumer. The queue is moved in so dropping it at the end
-        // closes the channel and wakes the consumer.
-        let arena = &arena;
-        let ingest_cfg = cfg.ingest.clone();
-        let ingest_spec = spec.clone();
-        let transfer_cfg = cfg.transfer.clone();
-        let producer = scope.spawn(move || -> Result<(f64, f64, f64, f64, f64, u64, u64, u64, u64)> {
-            fault::enroll(fault_token);
-            trace::enroll(trace_token);
-            trace::set_thread_label("producer");
-            let queue = queue;
-            let mut ingest = AsyncIngest::spawn(
-                ShardInput::Synth { spec: ingest_spec, seed: cfg.seed },
-                &ingest_cfg,
-            );
-            let mut dma = TransferEngine::new(transfer_cfg);
-            let mut host_s = 0.0;
-            let mut sim_s = 0.0;
-            let mut wait_s = 0.0;
-            let mut shards = 0u64;
-            while let Some((_, shard)) = ingest.next()? {
-                // Credit wait: a free slot is the DMA engine's permission
-                // to start (§3 backpressure).
-                let t_acq = std::time::Instant::now();
-                let acq_span = trace::begin(tkind::SLOT_ACQUIRE, 0, shards);
-                let Some(mut slot) = arena.acquire() else {
-                    // Consumer closed the arena (reached max_steps).
-                    break;
-                };
-                acq_span.end();
-                wait_s += t_acq.elapsed().as_secs_f64();
-
-                let pack_span = trace::begin(tkind::PACK, 0, shards);
-                let timing = pipeline.process_into_slot(&shard, &mut slot)?;
-                pack_span.end_io(sim_s, sim_s + timing.elapsed_s, slot.packed_bytes(), 0);
-                ingest.recycle(shard);
-                host_s += timing.host_s;
-                sim_s += timing.elapsed_s;
-                shards += 1;
-
-                // Schedule the slot's chunked P2P write at the current
-                // simulated ETL clock; it overlaps the next shard's exec.
-                // A hard DMA failure (past the retry budget) with no
-                // sibling lane to absorb the work fails the run.
-                dma.submit(sim_s, slot.packed_bytes())?;
-
-                let t_push = std::time::Instant::now();
-                let pushed = queue.push(slot);
-                wait_s += t_push.elapsed().as_secs_f64();
-                if !pushed {
-                    // Consumer hung up (reached max_steps).
-                    break;
-                }
-            }
-            Ok((
-                host_s,
-                sim_s,
-                ingest.wait_seconds(),
-                wait_s,
-                dma.busy_s(),
-                dma.total_bytes(),
-                shards,
-                dma.retried_transfers(),
-                dma.failed_transfers(),
-            ))
-        });
-
-        // Consumer: the trainer steps in place on device-addressed views
-        // of each staged slot, then returns the slot's credit. Errors are
-        // collected (not early-returned) so shutdown below always runs —
-        // a producer blocked on a credit is only woken by `arena.close()`.
-        let mut consume = || -> Result<()> {
-            trace::set_thread_label("consumer-0");
-            let mut window_busy = 0.0f64;
-            let mut window_start = 0.0f64;
-            const WINDOW_STEPS: u64 = 20;
-            'consume: while trainer.steps < cfg.max_steps as u64 {
-                let Some(slot) = consumer.pop() else { break };
-                for view in slot.chunk_views(step_rows) {
-                    if trainer.steps >= cfg.max_steps as u64 {
-                        break;
-                    }
-                    let ts = std::time::Instant::now();
-                    let step_span = trace::begin(tkind::TRAIN_STEP, 0, trainer.steps);
-                    trainer.step_device(&view)?;
-                    step_span.end();
-                    let dt = ts.elapsed().as_secs_f64();
-                    train_busy_s += dt;
-                    window_busy += dt;
-                    if trainer.steps % (cfg.loss_every as u64).max(1) == 0 {
-                        losses.push((trainer.steps, trainer.loss()?));
-                    }
-                    if trainer.steps % WINDOW_STEPS == 0 {
-                        let now = t0.elapsed().as_secs_f64();
-                        let span = (now - window_start).max(1e-9);
-                        util_trace.push(now, (window_busy / span).min(1.0));
-                        window_busy = 0.0;
-                        window_start = now;
-                    }
-                }
-                // Credit return: the slot is reclaimable (epoch bump).
-                arena.release(slot)?;
-                if trainer.steps >= cfg.max_steps as u64 {
-                    break 'consume;
-                }
-            }
-            Ok(())
-        };
-        let consumed = consume();
-        // Shutdown: close the arena first so a producer blocked on a
-        // credit wakes, then drop the consumer so a blocked push fails.
-        arena.close();
-        drop(consumer);
-        let joined = producer.join();
-        consumed?;
-        match joined {
-            Ok(Ok((h, s, iw, tw, db, bytes, n, rt, fl))) => {
-                etl_host_s = h;
-                etl_sim_s = s;
-                ingest_wait_s = iw;
-                transfer_wait_s = tw;
-                dma_sim_s = db;
-                staged_bytes = bytes;
-                shards_done = n;
-                dma_retried = rt;
-                dma_failed = fl;
-            }
-            Ok(Err(e)) => return Err(e),
-            Err(_) => return Err(EtlError::Coord("producer panicked".into())),
-        }
-        producer_stalls = stall_counter.load(std::sync::atomic::Ordering::Relaxed)
-            + arena.stats().stalls;
-        Ok(())
-    })?;
-
-    let arena_stats = arena.stats();
-    let wall_s = t0.elapsed().as_secs_f64();
-    Ok(TrainReport {
-        steps: trainer.steps,
-        losses,
-        wall_s,
-        train_busy_s,
-        util: train_busy_s / wall_s.max(1e-9),
-        util_trace,
-        producer_stalls,
-        etl_host_s,
-        ingest_wait_s,
-        transfer_wait_s,
-        shards: shards_done,
-        etl_sim_s,
-        dma_sim_s,
-        staged_bytes,
-        host_copy_bytes: 0,
-        steady_allocs: arena_stats.steady_allocs,
-        per_device: vec![DeviceReport {
-            device: 0,
-            shards: shards_done,
-            steps: trainer.steps - steps_at_start,
-            transfer_wait_s,
-            dma_sim_s,
-            staged_bytes,
-            train_busy_s,
-            reduce_wait_s: 0.0,
-        }],
-        allreduce_sim_s: 0.0,
-        allreduces: 0,
-        reduce_wait_s: 0.0,
-        lanes_lost: 0,
-        retried_transfers: dma_retried,
-        failed_transfers: dma_failed,
-        forfeited_steps: 0,
-        cache_hits: 0,
-        cache_misses: 0,
-        exchange_bytes: 0,
-        prefetch_wait_s: 0.0,
-        emb: Vec::new(),
-        trace: None,
-        stall_attribution: None,
-    })
-}
-
-/// A staged slot annotated with its schedule position: the raw shard
-/// bytes charged to its lane's load ledger and the **run-relative global
-/// step index of its first trainer chunk** (the router stamps every slot
-/// in delivery order, so reduce epochs are schedule-independent — no
-/// consumer-side reordering stash is needed; each lane's queue is already
-/// FIFO in delivery order).
-struct RoutedSlot {
-    start_rel: u64,
-    /// Trainer chunks the router predicted for this slot (from the raw
-    /// shard's rows). The consumer verifies the packed batch yields
-    /// exactly this many — a mismatch would corrupt the global step
-    /// numbering and deadlock the bus, so it aborts loudly instead.
-    chunks: u64,
-    raw_bytes: u64,
-    slot: StagingSlot,
-}
-
-/// Per-lane producer accounting returned by each pack worker.
-#[derive(Default)]
-struct LaneOut {
-    host_s: f64,
-    sim_s: f64,
-    wait_s: f64,
-    shards: u64,
-    dma_busy_s: f64,
-    dma_bytes: u64,
-    dma_retried: u64,
-    dma_failed: u64,
-    /// This lane's embedding-cache observables (None when the embedding
-    /// layer is disabled).
-    emb: Option<crate::runtime::embedding::EmbCacheStats>,
-}
-
-/// One executed step's record kept by a consumer thread: merged across
-/// devices (in global-step order) into the fleet's losses, utilization
-/// trace and busy-time attribution.
-struct StepRec {
-    /// Absolute global step index (delivery order, warm-start offset).
-    g_abs: u64,
-    /// Wall-clock seconds since run start when the step finished.
-    end_s: f64,
-    /// Host seconds the step took.
-    busy_s: f64,
-    /// The step's batch loss (the loss-slot observable).
-    loss: f32,
-}
-
-/// Per-device consumer accounting returned by each consumer thread.
-#[derive(Default)]
-struct ConsumerOut {
-    recs: Vec<StepRec>,
-    reduce_wait_s: f64,
-    /// This lane was lost mid-run (its replica's state is stale — the
-    /// fleet's final parameters come from a surviving lane).
-    lost: bool,
-}
-
-/// Aborts the reduce bus if the owning thread unwinds by panic, so
-/// sibling consumers blocked on an epoch observe the failure instead of
-/// waiting forever.
-struct BusAbortOnPanic<'a>(&'a ReduceBus);
-
-impl Drop for BusAbortOnPanic<'_> {
-    fn drop(&mut self) {
-        if std::thread::panicking() {
-            self.0.abort();
-        }
-    }
-}
-
-/// Outcome of folding one reduce epoch into a replica.
-enum Fold {
-    /// An epoch was applied; the replica's synced base advanced.
-    Applied,
-    /// No further epochs will arrive (stream finished or run aborted).
-    Done,
-}
-
-/// Wait for `device`'s next reduce epoch and replay it onto the synced
-/// `base` (device-ascending contributions; see `Trainer::apply_reduced`).
-/// Fast path: when this device was the epoch's **sole** contributor, its
-/// replica already holds exactly `base` + its own steps — bitwise what
-/// the replay would rebuild (pinned by the grad/apply differential
-/// tests) — so only the base refresh is needed; the sync-every-step
-/// default takes this path on every contributing device. Time blocked on
-/// resolution is charged to `reduce_wait_s`. Shared by the consumer's
-/// mid-step dependency fold and its end-of-lane drain.
-fn fold_next_epoch(
-    bus: &ReduceBus,
-    device: usize,
-    replica: &mut Trainer,
-    base: &mut [f32],
-    applied: &mut u64,
-    reduce_wait_s: &mut f64,
-) -> Result<Fold> {
-    let t_wait = std::time::Instant::now();
-    // Covers both the wait for resolution and the replay itself.
-    let span = trace::begin(tkind::REDUCE_APPLY, device as u32, *applied);
-    match bus.wait_epoch(*applied) {
-        EpochWait::Resolved(ep) => {
-            *reduce_wait_s += t_wait.elapsed().as_secs_f64();
-            let self_only = ep.contribs.len() == 1 && ep.contribs[0].device == device;
-            if !self_only {
-                replica.apply_reduced(base, ep.contribs.iter().map(|c| c.steps.as_slice()))?;
-            }
-            base.copy_from_slice(replica.state());
-            *applied += 1;
-            span.end();
-            Ok(Fold::Applied)
-        }
-        EpochWait::Finished | EpochWait::Aborted => {
-            drop(span); // records the terminal wait too
-            Ok(Fold::Done)
-        }
-    }
-}
-
-/// Multi-device arena path: one staging region, DMA clock, pack worker
-/// **and consumer thread** per simulated GPU; the router assigns each
-/// ingested shard a lane and stamps its global step range; replicas step
-/// concurrently and stay consistent through the barrier-free
-/// gradient-level [`ReduceBus`] (see module docs).
-fn run_multi(
-    pipeline: &Pipeline,
-    spec: &DatasetSpec,
-    trainer: &mut Trainer,
-    cfg: &TrainConfig,
-) -> Result<TrainReport> {
-    let devices = cfg.devices;
-    let step_rows = trainer.meta.batch;
-    let steps_at_start = trainer.steps;
-    let max_steps = cfg.max_steps as u64;
-    let loss_every = (cfg.loss_every as u64).max(1);
-
-    let arenas = ArenaSet::new(devices, cfg.arena.clone());
-    let router = DeviceRouter::new(devices, cfg.route);
-    let tracker = router.tracker();
-    let bus = ReduceBus::new(devices, cfg.allreduce_every, steps_at_start);
-
-    // Sharded embedding layer: one shard cache per lane, its hot tier
-    // pinned in that lane's arena (the reservation errors if the hot set
-    // cannot fit the device's memory budget — shrink `cache_rows`), its
-    // prefetcher driven by the lane's own delivery order. Built before
-    // the fleet spawns so a sizing error fails the run cleanly.
-    let prefetchers: Vec<Option<crate::coordinator::scheduler::PrefetchPipeline>> =
-        match &cfg.embedding {
-            Some(ecfg) => {
-                use crate::runtime::embedding::{EmbShardCache, EmbeddingTable};
-                let table = EmbeddingTable::from_meta(&trainer.meta, devices, ecfg.policy)?;
-                let cache_rows = ecfg.cache_rows.min(table.rows()).max(1);
-                (0..devices)
-                    .map(|d| {
-                        let region = arenas
-                            .device(d)
-                            .reserve_cache(cache_rows as u64 * table.row_bytes())?;
-                        let mut cache = EmbShardCache::new(table.clone(), cache_rows, region)?;
-                        cache.seed(&ecfg.hot_seed, &|_| true);
-                        Ok(Some(crate::coordinator::scheduler::PrefetchPipeline::new(
-                            cache,
-                            ecfg.lookahead,
-                        )))
-                    })
-                    .collect::<Result<Vec<_>>>()?
-            }
-            None => (0..devices).map(|_| None).collect(),
-        };
-
-    // Per-device raw-shard lanes into the pack workers (depth 1: the
-    // router hands a lane its next shard while it packs the current one).
-    let mut shard_txs = Vec::with_capacity(devices);
-    let mut shard_rxs = Vec::with_capacity(devices);
-    for _ in 0..devices {
-        let (tx, rx) = std::sync::mpsc::sync_channel::<(u64, Batch)>(1);
-        shard_txs.push(tx);
-        shard_rxs.push(rx);
-    }
-    // Consumed shard buffers flow back to the router for pool recycling.
-    let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Batch>();
-
-    // Per-device staged-slot queues: each lane's worker feeds its own
-    // consumer thread in FIFO (= delivery) order, so no reorder stash is
-    // needed and a slow device backpressures only its own lane.
-    let mut slot_queues = Vec::with_capacity(devices);
-    let mut slot_rxs = Vec::with_capacity(devices);
-    let mut stall_counters = Vec::with_capacity(devices);
-    for _ in 0..devices {
-        let (q, c) = StagingQueue::<RoutedSlot>::with_buffers(cfg.staging_buffers);
-        stall_counters.push(q.stall_counter());
-        slot_queues.push(q);
-        slot_rxs.push(c);
-    }
-
-    // One replica per device, forked from the caller's current params.
-    let replicas: Vec<Trainer> = (0..devices).map(|_| trainer.replica()).collect();
-
-    // All-reduce cost model: a deterministic tree needs ceil(log2 N)
-    // rounds of reduce plus as many of broadcast, each moving the flat
-    // state over the calibrated P2P channel, charged once per epoch.
-    let allreduce_chan = ChannelModel::of(Path::P2pToGpu);
-    let reduce_rounds = (usize::BITS - (devices - 1).leading_zeros()) as f64;
-    let state_bytes = (trainer.meta.state_len() * std::mem::size_of::<f32>()) as u64;
-    let allreduce_cost_s = 2.0 * reduce_rounds * allreduce_chan.time(state_bytes);
-
-    let t0 = std::time::Instant::now();
-    let mut lanes: Vec<LaneOut> = Vec::with_capacity(devices);
-    let mut cons: Vec<(Trainer, ConsumerOut)> = Vec::with_capacity(devices);
-    let mut ingest_wait_s = 0.0f64;
-
-    // Lane liveness, shared across the router, pack workers and
-    // consumers: a dying side flips its lane's flag (the swap makes the
-    // loss counted exactly once even if both ends of a lane fail) and
-    // the router re-routes every not-yet-assigned shard to survivors.
-    let lane_alive: Vec<AtomicBool> = (0..devices).map(|_| AtomicBool::new(true)).collect();
-    let lanes_lost = AtomicU64::new(0);
-    // Run-relative step cap: forfeited ranges are clamped to it, exactly
-    // as consumers skip chunks past it, so the bus's closed total is the
-    // same set of steps whether a lane lived or died.
-    let cap_rel = max_steps.saturating_sub(steps_at_start);
-    let fault_token = fault::enroll_token();
-    let trace_token = trace::enroll_token();
-
-    std::thread::scope(|scope| -> Result<()> {
-        let arenas = &arenas;
-        let bus = &bus;
-        let lane_alive = &lane_alive;
-        let lanes_lost = &lanes_lost;
-        let mut first_err: Option<EtlError> = None;
-
-        // Pack workers: one per device lane, each owning its device's DMA
-        // engine clock and blocking only on its own arena's credits.
-        let dma_engines = TransferSet::new(devices, cfg.transfer.clone()).into_engines();
-        let mut workers = Vec::with_capacity(devices);
-        for (d, (((rx, queue), mut dma), mut prefetch)) in shard_rxs
-            .into_iter()
-            .zip(slot_queues)
-            .zip(dma_engines)
-            .zip(prefetchers)
-            .enumerate()
-        {
-            let recycle_tx = recycle_tx.clone();
-            let worker_tracker = Arc::clone(&tracker);
-            workers.push(scope.spawn(move || -> Result<LaneOut> {
-                fault::enroll(fault_token);
-                trace::enroll(trace_token);
-                trace::set_thread_label(&format!("pack-{d}"));
-                let _abort_on_panic = BusAbortOnPanic(bus);
-                let arena = arenas.device(d);
-                let mut out = LaneOut::default();
-                let mut failure: Option<EtlError> = None;
-                let mut dead = false;
-                let mut last_stage_s = 0.0f64;
-                while let Ok((start_rel, shard)) = rx.recv() {
-                    let raw_bytes = shard.total_bytes() as u64;
-                    // Same formula the router stamped the schedule with;
-                    // the consumer verifies the packed batch agrees.
-                    let chunks = (shard.rows() / step_rows) as u64;
-                    if dead {
-                        // Lane lost: these shards can no longer reach a
-                        // trainer. Forfeit their scheduled steps so reduce
-                        // epochs still resolve, settle the load ledger,
-                        // recycle the buffer, and keep draining until the
-                        // router (which re-routes to survivors) stops.
-                        let lo = start_rel.min(cap_rel);
-                        let hi = (start_rel + chunks).min(cap_rel);
-                        if lo < hi {
-                            bus.forfeit(lo..hi);
-                        }
-                        worker_tracker.complete(d, raw_bytes);
-                        let _ = recycle_tx.send(shard);
-                        continue;
-                    }
-                    let t_acq = std::time::Instant::now();
-                    let acq_span = trace::begin(tkind::SLOT_ACQUIRE, d as u32, out.shards);
-                    let Some(mut slot) = arena.acquire() else {
-                        break; // fleet shut down (arena closed)
-                    };
-                    acq_span.end();
-                    out.wait_s += t_acq.elapsed().as_secs_f64();
-                    let pack_span = trace::begin(tkind::PACK, d as u32, out.shards);
-                    let timing = match pipeline.process_into_slot(&shard, &mut slot) {
-                        Ok(t) => t,
-                        Err(e) => {
-                            failure = Some(e);
-                            let _ = arena.release(slot);
-                            break;
-                        }
-                    };
-                    pack_span.end_io(
-                        out.sim_s,
-                        out.sim_s + timing.elapsed_s,
-                        slot.packed_bytes(),
-                        0,
-                    );
-                    let _ = recycle_tx.send(shard);
-                    out.host_s += timing.host_s;
-                    out.sim_s += timing.elapsed_s;
-                    out.shards += 1;
-                    // This lane's chunked P2P write, on this device's own
-                    // engine clock. A hard failure (past the retry budget)
-                    // costs the lane, not the fleet: forfeit this slot's
-                    // steps, return its credit, and fall into drain mode.
-                    match dma.submit(out.sim_s, slot.packed_bytes()) {
-                        Ok(rec) => {
-                            // Prefetch planning: the router saw this shard
-                            // before its consumer will, so the lane can
-                            // promote the slot's embedding rows `lookahead`
-                            // slots ahead of its commit. Only the chunks
-                            // the consumer will actually step are traced;
-                            // a lane whose consumer died forfeits its
-                            // slots, so planning stops with it.
-                            if let Some(pf) = prefetch.as_mut() {
-                                let stepped = chunks.min(cap_rel.saturating_sub(start_rel));
-                                if stepped > 0 && lane_alive[d].load(Ordering::SeqCst) {
-                                    pf.on_packed(
-                                        &slot.batch().sparse,
-                                        stepped as usize * step_rows,
-                                        rec.done_s,
-                                        &|o: usize| lane_alive[o].load(Ordering::SeqCst),
-                                    );
-                                }
-                                last_stage_s = rec.done_s;
-                            }
-                        }
-                        Err(e) if e.is_fault() => {
-                            if lane_alive[d].swap(false, Ordering::SeqCst) {
-                                lanes_lost.fetch_add(1, Ordering::SeqCst);
-                            }
-                            let lo = start_rel.min(cap_rel);
-                            let hi = (start_rel + chunks).min(cap_rel);
-                            if lo < hi {
-                                bus.forfeit(lo..hi);
-                            }
-                            worker_tracker.complete(d, raw_bytes);
-                            let _ = arena.release(slot);
-                            dead = true;
-                            continue;
-                        }
-                        Err(e) => {
-                            failure = Some(e);
-                            let _ = arena.release(slot);
-                            break;
-                        }
-                    }
-                    let t_push = std::time::Instant::now();
-                    let pushed = queue.push(RoutedSlot { start_rel, chunks, raw_bytes, slot });
-                    out.wait_s += t_push.elapsed().as_secs_f64();
-                    if !pushed {
-                        break; // consumer hung up
-                    }
-                }
-                out.dma_busy_s = dma.busy_s();
-                out.dma_bytes = dma.total_bytes();
-                out.dma_retried = dma.retried_transfers();
-                out.dma_failed = dma.failed_transfers();
-                if let Some(mut pf) = prefetch.take() {
-                    // Drain the lookahead window: every slot that was
-                    // prefetch-planned commits exactly once, so the
-                    // hit/miss ledger covers every lookup the consumer
-                    // performed (exactly-once accounting).
-                    pf.flush(last_stage_s, &|o: usize| lane_alive[o].load(Ordering::SeqCst));
-                    out.emb = Some(pf.into_stats());
-                }
-                match failure {
-                    Some(e) => {
-                        // Unblock peers waiting on this lane's steps.
-                        bus.abort();
-                        Err(e)
-                    }
-                    None => Ok(out),
-                }
-            }));
-        }
-        // Workers now hold the only recycle producer handles.
-        drop(recycle_tx);
-
-        // Router: the producer front-end — ingest in delivery order,
-        // assign each shard a device lane, stamp it with the global step
-        // index of its first chunk (epochs are defined over this
-        // delivery-order numbering, independent of thread schedules),
-        // recycle consumed buffers, and close the bus with the stream's
-        // total step count on the way out.
-        let ingest_cfg = cfg.ingest.clone();
-        let ingest_spec = spec.clone();
-        let seed = cfg.seed;
-        let router_thread = scope.spawn(move || -> Result<f64> {
-            fault::enroll(fault_token);
-            trace::enroll(trace_token);
-            trace::set_thread_label("router");
-            let _abort_on_panic = BusAbortOnPanic(bus);
-            let shard_txs = shard_txs;
-            let mut router = router;
-            let mut ingest =
-                AsyncIngest::spawn(ShardInput::Synth { spec: ingest_spec, seed }, &ingest_cfg);
-            let mut cum = 0u64; // run-relative global steps scheduled so far
-            let mut last_dead = 0usize;
-            let routed = (|| -> Result<()> {
-                while let Some((_, shard)) = ingest.next()? {
-                    while let Ok(b) = recycle_rx.try_recv() {
-                        ingest.recycle(b);
-                    }
-                    if steps_at_start + cum >= max_steps || bus.is_aborted() {
-                        // Nothing past the cap (or past an abort) will
-                        // ever be stepped; stop routing instead of
-                        // packing dead shards.
-                        ingest.recycle(shard);
-                        break;
-                    }
-                    // Sync lane losses into the routing mask: the dead
-                    // lane's remaining shards land on survivors instead.
-                    for dd in 0..shard_txs.len() {
-                        if router.is_alive(dd) && !lane_alive[dd].load(Ordering::SeqCst) {
-                            router.mark_dead(dd);
-                            last_dead = dd;
-                        }
-                    }
-                    if router.alive_count() == 0 {
-                        // No lane left to absorb the stream: this is the
-                        // unrecoverable failure domain.
-                        ingest.recycle(shard);
-                        return Err(EtlError::LaneLost { device: last_dead, survivors: 0 });
-                    }
-                    let chunks = (shard.rows() / step_rows) as u64;
-                    let d = router.route(shard.total_bytes() as u64);
-                    if shard_txs[d].send((cum, shard)).is_err() {
-                        break; // lane worker exited (fleet shut down)
-                    }
-                    cum += chunks;
-                }
-                Ok(())
-            })();
-            match routed {
-                Ok(()) => {
-                    // The last routed slot may cross the cap; consumers
-                    // skip its excess chunks, so the stream total is the
-                    // capped count.
-                    bus.close(cum.min(max_steps.saturating_sub(steps_at_start)));
-                    Ok(ingest.wait_seconds())
-                }
-                Err(e) => {
-                    bus.abort();
-                    Err(e)
-                }
-            }
-        });
-
-        // Consumer threads: one per device. Each steps its own replica in
-        // place on its lane's staged slots (local SGD), posts one
-        // gradient contribution per step, and applies resolved reduce
-        // epochs onto its synced base before stepping into the next
-        // window — the only cross-device synchronization is the bus.
-        let mut consumers = Vec::with_capacity(devices);
-        for (d, (rx, mut replica)) in slot_rxs.into_iter().zip(replicas).enumerate() {
-            let tracker = Arc::clone(&tracker);
-            consumers.push(scope.spawn(move || -> Result<(Trainer, ConsumerOut)> {
-                fault::enroll(fault_token);
-                trace::enroll(trace_token);
-                trace::set_thread_label(&format!("consumer-{d}"));
-                let _abort_on_panic = BusAbortOnPanic(bus);
-                let mut out = ConsumerOut::default();
-                let mut base = replica.state_to_vec()?;
-                let mut applied = 0u64; // reduce epochs folded so far
-                let mut stepping = true;
-                let mut failure: Option<EtlError> = None;
-                while let Some(RoutedSlot { start_rel, chunks, raw_bytes, slot }) = rx.pop() {
-                    sched::point(site::LANE_HANDOFF);
-                    if !out.lost && failure.is_none() && fault::inject(fsite::LANE_LOSS, d as u64)
-                    {
-                        // Injected lane loss: this device is gone. Leave
-                        // the reduce group so peers stop waiting on this
-                        // replica's fetches, mark the lane dead for the
-                        // router, and fall into drain mode — every
-                        // remaining slot's steps are forfeited below so
-                        // reduce epochs still resolve for survivors.
-                        out.lost = true;
-                        if lane_alive[d].swap(false, Ordering::SeqCst) {
-                            lanes_lost.fetch_add(1, Ordering::SeqCst);
-                        }
-                        bus.leave(applied);
-                    }
-                    if out.lost {
-                        if failure.is_none() {
-                            let lo = start_rel.min(cap_rel);
-                            let hi = (start_rel + chunks).min(cap_rel);
-                            if lo < hi {
-                                bus.forfeit(lo..hi);
-                            }
-                        }
-                    } else if stepping && failure.is_none() {
-                        let views = slot.chunk_views(step_rows);
-                        if views.len() as u64 != chunks {
-                            // A row-dropping pipeline would corrupt the
-                            // schedule's step numbering and deadlock the
-                            // bus — fail loudly instead.
-                            bus.abort();
-                            failure = Some(EtlError::Coord(format!(
-                                "packed slot yields {} chunks but the router scheduled {} \
-                                 (pipeline did not preserve rows)",
-                                views.len(),
-                                chunks
-                            )));
-                        }
-                        for (c, view) in views.iter().enumerate() {
-                            if failure.is_some() {
-                                break;
-                            }
-                            let rel = start_rel + c as u64;
-                            let g_abs = steps_at_start + rel;
-                            if g_abs >= max_steps {
-                                break;
-                            }
-                            // Fold every epoch this step depends on.
-                            let need = bus.epochs_before(g_abs);
-                            while applied < need && failure.is_none() {
-                                match fold_next_epoch(
-                                    bus,
-                                    d,
-                                    &mut replica,
-                                    &mut base,
-                                    &mut applied,
-                                    &mut out.reduce_wait_s,
-                                ) {
-                                    Ok(Fold::Applied) => {}
-                                    Ok(Fold::Done) => {
-                                        stepping = false;
-                                        break;
-                                    }
-                                    Err(e) => {
-                                        bus.abort();
-                                        failure = Some(e);
-                                    }
-                                }
-                            }
-                            if !stepping || failure.is_some() {
-                                break;
-                            }
-                            let ts = std::time::Instant::now();
-                            let step_span = trace::begin(tkind::TRAIN_STEP, d as u32, g_abs);
-                            match replica.grad_step(view) {
-                                Ok(grad) => {
-                                    step_span.end();
-                                    out.recs.push(StepRec {
-                                        g_abs,
-                                        end_s: t0.elapsed().as_secs_f64(),
-                                        busy_s: ts.elapsed().as_secs_f64(),
-                                        loss: grad.loss as f32,
-                                    });
-                                    let post_span =
-                                        trace::begin(tkind::REDUCE_POST, d as u32, rel);
-                                    let posted = bus.post(rel, d, grad);
-                                    post_span.end();
-                                    if let Err(e) = posted {
-                                        // Pending-window cap blown (the
-                                        // allreduce_every=0 footgun):
-                                        // abort rather than buffer
-                                        // gradients without bound.
-                                        bus.abort();
-                                        failure = Some(e);
-                                    }
-                                }
-                                Err(e) => {
-                                    bus.abort();
-                                    failure = Some(e);
-                                }
-                            }
-                        }
-                    }
-                    // Credit + ledger return happen on the consumer
-                    // thread even when the slot's chunks were skipped
-                    // (max_steps cut or failure drain) — exactly once.
-                    tracker.complete(d, raw_bytes);
-                    if let Err(e) = arenas.device(d).release(slot) {
-                        if failure.is_none() {
-                            bus.abort();
-                            failure = Some(e);
-                        }
-                    }
-                }
-                // Lane closed: fold the remaining epochs so this replica
-                // lands on the final reduced state even though peers may
-                // still be stepping. A lost lane already left the reduce
-                // group — fetching again would double-count its serves —
-                // so it skips the drain and exits with stale state.
-                while !out.lost && failure.is_none() {
-                    match fold_next_epoch(
-                        bus,
-                        d,
-                        &mut replica,
-                        &mut base,
-                        &mut applied,
-                        &mut out.reduce_wait_s,
-                    ) {
-                        Ok(Fold::Applied) => {}
-                        Ok(Fold::Done) => break,
-                        Err(e) => {
-                            bus.abort();
-                            failure = Some(e);
-                        }
-                    }
-                }
-                match failure {
-                    Some(e) => Err(e),
-                    None => Ok((replica, out)),
-                }
-            }));
-        }
-
-        // Join consumers first: they exit once the router closed the bus
-        // and their lanes drained. Only then close the arenas (waking any
-        // worker still blocked on a credit after an abnormal consumer
-        // exit) and collect the producer side.
-        for handle in consumers {
-            match handle.join() {
-                Ok(Ok(pair)) => cons.push(pair),
-                Ok(Err(e)) => first_err = first_err.or(Some(e)),
-                Err(_) => {
-                    first_err =
-                        first_err.or_else(|| Some(EtlError::Coord("consumer panicked".into())))
-                }
-            }
-        }
-        arenas.close_all();
-        for handle in workers {
-            match handle.join() {
-                Ok(Ok(out)) => lanes.push(out),
-                Ok(Err(e)) => first_err = first_err.or(Some(e)),
-                Err(_) => {
-                    first_err =
-                        first_err.or_else(|| Some(EtlError::Coord("pack worker panicked".into())))
-                }
-            }
-        }
-        match router_thread.join() {
-            Ok(Ok(w)) => ingest_wait_s = w,
-            Ok(Err(e)) => first_err = first_err.or(Some(e)),
-            Err(_) => {
-                first_err = first_err.or_else(|| Some(EtlError::Coord("router panicked".into())))
-            }
-        }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(()),
-        }
-    })?;
-
-    // Every surviving replica drained the bus to the last resolved
-    // epoch, so the survivors are bitwise identical; the fleet
-    // parameters land back in the caller's trainer from the first one.
-    // Lost lanes' replicas are stale (they left the reduce group) and
-    // never source the final state; a fleet with no survivor at all is
-    // the unrecoverable outcome.
-    let total_steps: u64 = cons.iter().map(|(_, o)| o.recs.len() as u64).sum();
-    if lanes_lost.load(Ordering::SeqCst) >= devices as u64 {
-        let device = (0..devices)
-            .rev()
-            .find(|&dd| !lane_alive[dd].load(Ordering::SeqCst))
-            .unwrap_or(0);
-        return Err(EtlError::LaneLost { device, survivors: 0 });
-    }
-    let survivor = cons
-        .iter()
-        .position(|(_, o)| !o.lost)
-        .expect("a lane neither worker- nor consumer-lost has a live replica");
-    trainer.load_state(cons[survivor].0.state())?;
-    trainer.steps = steps_at_start + total_steps;
-    let allreduces = bus.resolved_count();
-    let allreduce_sim_s = allreduces as f64 * allreduce_cost_s;
-
-    // Merge the per-consumer step records into the fleet's observables,
-    // in global-step (delivery) order.
-    let mut dev_busy = vec![0.0f64; devices];
-    let mut merged: Vec<(u64, f64, f64, f32)> = Vec::with_capacity(total_steps as usize);
-    for (d, (_, out)) in cons.iter().enumerate() {
-        for r in &out.recs {
-            dev_busy[d] += r.busy_s;
-            merged.push((r.g_abs, r.end_s, r.busy_s, r.loss));
-        }
-    }
-    merged.sort_unstable_by_key(|r| r.0);
-    let mut losses = Vec::new();
-    for &(g, _, _, loss) in &merged {
-        if (g + 1) % loss_every == 0 {
-            losses.push((g + 1, loss));
-        }
-    }
-    // The trace wants execution (wall-clock completion) order — with
-    // concurrent consumers that is not global-step order.
-    let mut step_records: Vec<(f64, f64)> = merged.iter().map(|r| (r.1, r.2)).collect();
-    step_records.sort_unstable_by(|a, b| a.0.total_cmp(&b.0));
-    let util_trace = TimeSeries::from_step_records(&step_records, 20);
-    let train_busy_s: f64 = dev_busy.iter().sum();
-    let reduce_wait_s: f64 = cons.iter().map(|(_, o)| o.reduce_wait_s).sum();
-    let producer_stalls = stall_counters
-        .iter()
-        .map(|c| c.load(std::sync::atomic::Ordering::Relaxed))
-        .sum::<u64>()
-        + arenas.total_stats().stalls;
-
-    let per_device: Vec<DeviceReport> = (0..devices)
-        .map(|d| DeviceReport {
-            device: d,
-            shards: lanes[d].shards,
-            steps: cons[d].0.steps,
-            transfer_wait_s: lanes[d].wait_s,
-            dma_sim_s: lanes[d].dma_busy_s,
-            staged_bytes: lanes[d].dma_bytes,
-            train_busy_s: dev_busy[d],
-            reduce_wait_s: cons[d].1.reduce_wait_s,
-        })
-        .collect();
-    let wall_s = t0.elapsed().as_secs_f64();
-    // Per-lane cache stats roll up into the fleet-level counters; the
-    // per-shard vector keeps device attribution for the bench/report.
-    let emb: Vec<crate::runtime::embedding::EmbCacheStats> =
-        lanes.iter().filter_map(|l| l.emb).collect();
-    Ok(TrainReport {
-        steps: steps_at_start + total_steps,
-        losses,
-        wall_s,
-        train_busy_s,
-        util: (train_busy_s / wall_s.max(1e-9)).min(1.0),
-        util_trace,
-        producer_stalls,
-        etl_host_s: lanes.iter().map(|l| l.host_s).sum(),
-        ingest_wait_s,
-        transfer_wait_s: lanes.iter().map(|l| l.wait_s).sum(),
-        shards: lanes.iter().map(|l| l.shards).sum(),
-        etl_sim_s: lanes.iter().map(|l| l.sim_s).sum(),
-        dma_sim_s: lanes.iter().map(|l| l.dma_busy_s).sum(),
-        staged_bytes: lanes.iter().map(|l| l.dma_bytes).sum(),
-        host_copy_bytes: 0,
-        steady_allocs: arenas.total_stats().steady_allocs,
-        per_device,
-        allreduce_sim_s,
-        allreduces,
-        reduce_wait_s,
-        lanes_lost: lanes_lost.load(Ordering::SeqCst),
-        retried_transfers: lanes.iter().map(|l| l.dma_retried).sum(),
-        failed_transfers: lanes.iter().map(|l| l.dma_failed).sum(),
-        forfeited_steps: bus.forfeited_count(),
-        cache_hits: emb.iter().map(|e| e.hits).sum(),
-        cache_misses: emb.iter().map(|e| e.misses).sum(),
-        exchange_bytes: emb.iter().map(|e| e.exchange_bytes).sum(),
-        prefetch_wait_s: emb.iter().map(|e| e.prefetch_wait_s).sum(),
-        emb,
-        trace: None,
-        stall_attribution: None,
-    })
 }
 
 /// Legacy heap path: pool-recycled `PackedBatch`es travel the staging
@@ -1560,6 +629,7 @@ fn run_channel(
         retried_transfers: 0,
         failed_transfers: 0,
         forfeited_steps: 0,
+        reconfigs: 0,
         cache_hits: 0,
         cache_misses: 0,
         exchange_bytes: 0,
@@ -1634,5 +704,56 @@ mod tests {
         let cfg = super::TrainConfig { devices: 0, ..Default::default() };
         let err = super::run(&pipe, &spec, &mut trainer, &cfg).unwrap_err();
         assert!(err.to_string().contains("devices must be >= 1"), "{err}");
+    }
+
+    #[test]
+    fn validate_returns_typed_config_errors() {
+        use crate::error::EtlError;
+
+        // The happy default passes.
+        assert!(super::TrainConfig::default().validate().is_ok());
+
+        let cfg = super::TrainConfig { devices: 0, ..Default::default() };
+        match cfg.validate().unwrap_err() {
+            EtlError::Config(msg) => assert!(msg.contains("devices must be >= 1"), "{msg}"),
+            other => panic!("expected EtlError::Config, got {other:?}"),
+        }
+
+        let mut cfg = super::TrainConfig::default();
+        cfg.arena.slots = 1;
+        match cfg.validate().unwrap_err() {
+            EtlError::Config(msg) => assert!(msg.contains("slots"), "{msg}"),
+            other => panic!("expected EtlError::Config, got {other:?}"),
+        }
+
+        let mut cfg = super::TrainConfig::default();
+        cfg.embedding = Some(crate::runtime::embedding::EmbeddingConfig {
+            cache_rows: 0,
+            lookahead: 2,
+            ..Default::default()
+        });
+        match cfg.validate().unwrap_err() {
+            EtlError::Config(msg) => assert!(msg.contains("cache_rows"), "{msg}"),
+            other => panic!("expected EtlError::Config, got {other:?}"),
+        }
+
+        // Malformed control scripts are config errors too.
+        let mut cfg = super::TrainConfig::default();
+        cfg.control = crate::coordinator::fleet::ControlScript {
+            events: vec![
+                crate::coordinator::fleet::ControlEvent {
+                    at_step: 9,
+                    change: crate::coordinator::fleet::KnobChange::AddLane,
+                },
+                crate::coordinator::fleet::ControlEvent {
+                    at_step: 3,
+                    change: crate::coordinator::fleet::KnobChange::AddLane,
+                },
+            ],
+        };
+        match cfg.validate().unwrap_err() {
+            EtlError::Config(msg) => assert!(msg.contains("sorted"), "{msg}"),
+            other => panic!("expected EtlError::Config, got {other:?}"),
+        }
     }
 }

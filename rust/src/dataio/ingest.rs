@@ -643,6 +643,20 @@ impl AsyncIngest {
     /// (whole shards, or `cfg.chunk_rows`-row chunks for file-backed
     /// inputs), and push over a channel bounded at `cfg.channel_depth`.
     pub fn spawn(input: ShardInput, cfg: &IngestConfig) -> AsyncIngest {
+        AsyncIngest::spawn_from(input, cfg, 0)
+    }
+
+    /// [`spawn`](Self::spawn), resuming the shard stream at `first_shard`
+    /// (shards before it count as already finished and are never claimed).
+    /// This is the control plane's ingest-restart primitive: the fleet
+    /// router drops the old pipeline after delivering shard
+    /// `first_shard - 1` and spawns a replacement here with retuned
+    /// `workers`/`chunk_rows`, and because synth generation is a pure
+    /// function of (spec, seed, shard) the replacement produces the
+    /// remaining shards exactly as the original would have. In-order
+    /// delivery only (`DeliveryPolicy::InOrder`); the cursor starts at
+    /// `(first_shard, 0)`.
+    pub fn spawn_from(input: ShardInput, cfg: &IngestConfig, first_shard: usize) -> AsyncIngest {
         let input = Arc::new(input);
         let pool = Arc::new(BatchPool::new());
         let total = input.shards();
@@ -651,7 +665,7 @@ impl AsyncIngest {
         let ctx = Arc::new(WorkerCtx {
             input,
             pool: Arc::clone(&pool),
-            counter: Arc::new(AtomicUsize::new(0)),
+            counter: Arc::new(AtomicUsize::new(first_shard)),
             retry_q: Arc::new(Mutex::new(Vec::new())),
             retries: Arc::new(AtomicU64::new(0)),
             tx,
@@ -669,12 +683,12 @@ impl AsyncIngest {
             ctx: Some(ctx),
             handles,
             stash: BTreeMap::new(),
-            next_expected: (0, 0),
+            next_expected: (first_shard, 0),
             policy: cfg.policy,
             max_staleness: cfg.max_staleness,
             pool,
             total,
-            finished: 0,
+            finished: first_shard.min(total),
             live_workers: workers,
             next_worker: workers,
             quarantined_shards: BTreeSet::new(),
@@ -1002,6 +1016,32 @@ mod tests {
                         _ => ac == bc,
                     }
             })
+    }
+
+    #[test]
+    fn spawn_from_resumes_the_shard_stream_bitwise() {
+        // The ingest-restart primitive: spawn_from(s) must deliver shards
+        // s..total exactly as a full run's tail, bitwise, under any worker
+        // count — the control plane swaps pipelines mid-run on this.
+        let spec = spec(500, 5);
+        let full = collect(ShardInput::Synth { spec: spec.clone(), seed: 7 }, &IngestConfig::default());
+        for first in [0usize, 2, 4, 5] {
+            for workers in [1usize, 3] {
+                let cfg = IngestConfig { workers, ..IngestConfig::default() };
+                let mut ingest =
+                    AsyncIngest::spawn_from(ShardInput::Synth { spec: spec.clone(), seed: 7 }, &cfg, first);
+                let mut got = Vec::new();
+                while let Some((i, b)) = ingest.next().unwrap() {
+                    got.push((i, b));
+                }
+                let want: Vec<&(usize, Batch)> = full.iter().filter(|(i, _)| *i >= first).collect();
+                assert_eq!(got.len(), want.len(), "first={first} workers={workers}");
+                for ((gi, gb), (si, sb)) in got.iter().zip(&want) {
+                    assert_eq!(gi, si, "first={first}");
+                    assert!(batch_eq(gb, sb), "resumed shard {gi} differs");
+                }
+            }
+        }
     }
 
     #[test]

@@ -520,6 +520,15 @@ impl ArenaSet {
         self.arenas.len()
     }
 
+    /// Grow the set by one arena region (a joining lane's staging space),
+    /// mapped after the existing regions in the same shared address
+    /// space. Returns the new device index.
+    pub fn grow(&mut self, cfg: ArenaConfig) -> usize {
+        let device = self.arenas.len();
+        self.arenas.push(DeviceArena::with_mmu(cfg, device, Arc::clone(&self.mmu)));
+        device
+    }
+
     /// The arena of simulated GPU `device`.
     pub fn device(&self, device: usize) -> &DeviceArena {
         &self.arenas[device]
@@ -766,6 +775,26 @@ mod tests {
         set.close_all();
         assert!(set.device(0).try_acquire().is_none());
         assert!(set.device(1).try_acquire().is_none());
+    }
+
+    #[test]
+    fn arena_set_grow_maps_a_disjoint_region_in_the_shared_space() {
+        let cfg = ArenaConfig { slots: 2, slot_bytes: 1 << 16 };
+        let mut set = ArenaSet::new(2, cfg.clone());
+        assert_eq!(set.grow(cfg.clone()), 2);
+        assert_eq!(set.devices(), 3);
+        let grown = set.device(2);
+        assert_eq!(grown.device(), 2);
+        // The new region lives after the launch-time regions and resolves
+        // through the same shared MMU.
+        assert!(grown.base_vaddr() > set.device(1).base_vaddr());
+        let s = grown.try_acquire().unwrap();
+        assert_eq!(set.translate(s.vaddr()).unwrap().0, MemClass::Gpu);
+        assert_eq!(s.view().device, 2);
+        grown.release(s).unwrap();
+        // The siblings' credits are untouched by the grow.
+        assert_eq!(set.device(0).stats().acquires, 0);
+        assert_eq!(set.total_stats().acquires, 1);
     }
 
     #[test]

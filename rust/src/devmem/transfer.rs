@@ -305,6 +305,15 @@ impl TransferSet {
         self.engines.len()
     }
 
+    /// Grow the set by one engine clock (a joining lane's DMA queue),
+    /// starting at simulated time zero like its launch-time siblings.
+    /// Returns the new device index.
+    pub fn grow(&mut self, cfg: TransferConfig) -> usize {
+        let device = self.engines.len();
+        self.engines.push(TransferEngine::new(cfg).with_device(device as u32));
+        device
+    }
+
     /// The engine of simulated GPU `device`.
     pub fn engine(&self, device: usize) -> &TransferEngine {
         &self.engines[device]
@@ -445,6 +454,26 @@ mod tests {
         assert_eq!(engines.len(), 2);
         assert_eq!(engines[0].transfers(), 2);
         assert_eq!(engines[1].transfers(), 1);
+    }
+
+    #[test]
+    fn transfer_set_grow_adds_a_fresh_engine_clock() {
+        let cfg = TransferConfig {
+            path: Path::P2pToGpu,
+            chunk_bytes: MIB,
+            depth: 2,
+            record_cap: 8,
+            ..TransferConfig::default()
+        };
+        let mut set = TransferSet::new(2, cfg.clone());
+        set.submit(0, 0.0, 64 * MIB).unwrap();
+        assert_eq!(set.grow(cfg), 2);
+        assert_eq!(set.devices(), 3);
+        // The grown engine starts at sim time zero on its own clock.
+        let rec = set.submit(2, 0.0, 64 * MIB).unwrap();
+        assert_eq!(rec.start_s, 0.0, "grown device has its own clock");
+        assert_eq!(set.engine(2).transfers(), 1);
+        assert_eq!(set.total_bytes(), 128 * MIB);
     }
 
     #[test]

@@ -35,6 +35,11 @@ pub enum EtlError {
     /// its work (single-lane loss with survivors is *recovered*, not
     /// errored — see `coordinator::train_loop`).
     LaneLost { device: usize, survivors: usize },
+    /// A nonsense `TrainConfig` combination caught up-front by
+    /// `TrainConfig::validate` (devices = 0, too few arena slots, an
+    /// embedding lookahead with no cache to commit into, a malformed
+    /// control script, …) instead of a late panic deep in the fleet.
+    Config(String),
 }
 
 impl std::fmt::Display for EtlError {
@@ -66,6 +71,7 @@ impl std::fmt::Display for EtlError {
             EtlError::LaneLost { device, survivors } => {
                 write!(f, "device lane {device} lost ({survivors} survivors)")
             }
+            EtlError::Config(s) => write!(f, "config error: {s}"),
         }
     }
 }
@@ -131,6 +137,9 @@ mod tests {
         assert_eq!(l.to_string(), "device lane 1 lost (0 survivors)");
         assert!(l.is_fault());
         assert!(!EtlError::Coord("x".into()).is_fault());
+        let c = EtlError::Config("devices must be >= 1".into());
+        assert_eq!(c.to_string(), "config error: devices must be >= 1");
+        assert!(!c.is_fault());
     }
 
     #[test]

@@ -102,8 +102,14 @@ pub mod kind {
     pub const REDUCE_POST: u16 = 8;
     /// Waiting for and folding a resolved reduce epoch (key = epoch).
     pub const REDUCE_APPLY: u16 = 9;
+    /// A joining lane admitted to the live fleet at a quiesce point
+    /// (key = routed-chunk frontier at admission).
+    pub const LANE_JOIN: u16 = 10;
+    /// A live lane scripted out of the fleet: its shard channel closes
+    /// and it drains in-flight slots (key = routed-chunk frontier).
+    pub const LANE_DRAIN: u16 = 11;
 
-    pub(crate) const MAX: usize = 10;
+    pub(crate) const MAX: usize = 12;
 
     /// Human-readable kind name (Chrome event names, snapshot rows).
     pub fn name(k: u16) -> &'static str {
@@ -117,6 +123,8 @@ pub mod kind {
             TRAIN_STEP => "train_step",
             REDUCE_POST => "reduce_post",
             REDUCE_APPLY => "reduce_apply",
+            LANE_JOIN => "lane_join",
+            LANE_DRAIN => "lane_drain",
             _ => "unknown",
         }
     }

@@ -40,6 +40,12 @@ pub mod site {
     pub const REDUCE_WAIT: u64 = 6;
     /// Consumer-lane slot handoff in the multi-device train loop.
     pub const LANE_HANDOFF: u64 = 7;
+    /// A joining lane admitted to the fleet at a quiesce point
+    /// (`FleetRuntime` lane-add).
+    pub const LANE_JOIN: u64 = 8;
+    /// A scripted knob change applied at the routing frontier
+    /// (`ControlScript` event in the fleet router).
+    pub const KNOB_APPLY: u64 = 9;
 }
 
 static ACTIVE: AtomicBool = AtomicBool::new(false);

@@ -228,6 +228,77 @@ fn mid_stream_checkpoint_restore_resumes_multi_device_run_bitwise() {
 }
 
 #[test]
+fn checkpoint_restore_across_fleet_resize_is_bitwise() {
+    // Elastic restart: a run checkpointed mid-stream on one fleet size
+    // and resumed on another (2→4 grow and 4→2 shrink) must reproduce
+    // the uninterrupted run bitwise — at round-robin + sync-every-step
+    // the trajectory is width-independent, so the fleet size is a pure
+    // deployment knob, not part of the model state. Artifact-free.
+    let mut spec = DatasetSpec::dataset_i(0.004);
+    spec.shards = 4;
+    let dag = build(PipelineKind::II, &spec.schema);
+    let plan = compile(&dag, &spec.schema, &PlannerConfig::default()).unwrap();
+    let mut pipe = Pipeline::new(plan);
+    pipe.fit(&spec.shard(0, 42)).unwrap();
+
+    let cfg = |devices: usize, max_steps: usize| TrainConfig {
+        max_steps,
+        loss_every: 1,
+        devices,
+        route: RoutePolicy::RoundRobin,
+        allreduce_every: 1,
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
+        },
+        ..Default::default()
+    };
+
+    // Uninterrupted reference: one device straight to 22 steps.
+    let mut reference = Trainer::from_meta(criteo_meta(128), 7);
+    let whole = train(&pipe, &spec, &mut reference, &cfg(1, 22)).unwrap();
+    assert_eq!(whole.steps, 22, "reference must actually train");
+    let reference_state = reference.state_to_vec().unwrap();
+
+    for &(from, to) in &[(2usize, 4usize), (4, 2)] {
+        let label = format!("resize {from}→{to}");
+        // Leg 1 on the pre-resize fleet, cut mid-stream at 10 steps.
+        let mut trainer = Trainer::from_meta(criteo_meta(128), 7);
+        let leg1 = train(&pipe, &spec, &mut trainer, &cfg(from, 10)).unwrap();
+        assert_eq!(leg1.steps, 10, "{label}: leg 1 must cut mid-stream");
+        let ck = trainer.checkpoint(&pipe.state.clone()).unwrap();
+        assert_eq!(ck.step, 10);
+
+        // Leg 2 resumes from the checkpoint on the post-resize fleet.
+        let mut restored = Trainer::from_meta(criteo_meta(128), 555);
+        restored.restore(&ck).unwrap();
+        assert_eq!(restored.steps, 10);
+        let leg2 = train(&pipe, &spec, &mut restored, &cfg(to, 22)).unwrap();
+        assert_eq!(restored.steps, 22, "{label}: leg 2 reaches the cap");
+        assert_eq!(leg2.per_device.len(), to, "{label}: post-resize fleet width");
+
+        // Stitched losses replay the uninterrupted sequence bitwise...
+        let stitched: Vec<(u64, f32)> =
+            leg1.losses.iter().chain(&leg2.losses).copied().collect();
+        assert_eq!(stitched.len(), whole.losses.len(), "{label}: loss count");
+        for ((gs, gl), (ws, wl)) in stitched.iter().zip(&whole.losses) {
+            assert_eq!(gs, ws, "{label}: loss sampled at different steps");
+            assert_eq!(
+                gl.to_bits(),
+                wl.to_bits(),
+                "{label}: loss diverged at step {gs}"
+            );
+        }
+        // ...and so do the final parameters.
+        let state = restored.state_to_vec().unwrap();
+        assert_bits_equal(&state, &reference_state)
+            .unwrap_or_else(|e| panic!("{label}: params diverged: {e}"));
+    }
+}
+
+#[test]
 fn checkpoint_restore_resumes_training() {
     let Some(paths) = artifacts() else { return };
     let mut trainer = Trainer::load(&paths, 41).unwrap();

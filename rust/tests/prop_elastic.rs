@@ -1,0 +1,418 @@
+//! Schedule-fuzzing properties of the elastic fleet runtime
+//! (`coordinator::fleet`): a deterministic [`ControlScript`] of mid-run
+//! knob changes — lane adds, graceful lane drains, all-reduce retunes,
+//! ingest restarts, lookahead retunes, route flips — applies at quiesce
+//! points on the router thread, so a scripted run is a **pure function
+//! of the config**: bitwise identical (losses AND final parameters)
+//! under every fuzzed thread schedule.
+//!
+//! The second pillar is **exactly-once elasticity**: growing 1→4 or
+//! shrinking 3→1 mid-stream must deliver every shard exactly once, with
+//! every reduce epoch resolving and nothing forfeited — and because
+//! round-robin + `allreduce_every = 1` syncs every step, the grown and
+//! shrunk trajectories must replay the *static single-device* run
+//! bitwise.
+//!
+//! Same fixture family and fuzzing harness (`util::sched::SchedFuzzer`)
+//! as `prop_concurrent.rs`; CI runs this suite in the `elastic-fuzz`
+//! job under `--test-threads {1, 8}` across three seed ranges.
+
+use piperec::coordinator::{
+    train, ControlEvent, ControlScript, DataPath, KnobChange, RoutePolicy, TrainConfig,
+    TrainReport,
+};
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{DeliveryPolicy, IngestConfig};
+use piperec::dataio::synth::SynthConfig;
+use piperec::devmem::ArenaConfig;
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
+use piperec::runtime::embedding::{EmbeddingConfig, ShardPolicy};
+use piperec::runtime::Trainer;
+use piperec::trace::chrome::validate_chrome_trace;
+use piperec::trace::kind;
+use piperec::util::prop::assert_bits_equal;
+use piperec::util::sched::SchedFuzzer;
+
+/// Base seed of the fuzzing campaign (CI varies `PIPEREC_FUZZ_SEED_BASE`).
+fn campaign_base() -> u64 {
+    std::env::var("PIPEREC_FUZZ_SEED_BASE")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED_F422)
+}
+
+/// Stateless packing dag matching the reference-trainer meta (same
+/// generator family as prop_concurrent / prop_trace).
+fn passthrough_dag(nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-elastic");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    for i in 0..nd {
+        let d = dag.source(format!("t_i{i}"), ColType::F32);
+        let f = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[d],
+        );
+        dag.sink(format!("dense{i}"), f, SinkRole::Dense);
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink(format!("sparse{i}"), m, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn custom_spec(schema: Schema, rows: usize, shards: usize) -> DatasetSpec {
+    DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-elastic",
+        schema,
+        rows,
+        paper_rows: rows as u64,
+        shards,
+        synth: SynthConfig::default(),
+        ssd_bound: false,
+    }
+}
+
+fn trainer_meta(batch: usize, nd: usize, ns: usize) -> ModelMeta {
+    ModelMeta {
+        batch,
+        n_dense: nd,
+        n_sparse: ns,
+        vocab: 128,
+        embed_dim: 1,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![nd] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![ns * 32] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+const ND: usize = 2;
+const NS: usize = 2;
+const STEP_ROWS: usize = 16;
+/// 6 shards × 40 rows → 2 full 16-row steps per shard, 12 global steps:
+/// the routing frontier visits 0, 2, 4, 6, 8, 10, so scripts have room
+/// to fire well before the stream ends.
+const SHARDS: u64 = 6;
+const STEPS: u64 = 12;
+
+fn fixture() -> (Pipeline, DatasetSpec) {
+    let schema = Schema::tabular("t", ND, NS, 64);
+    let dag = passthrough_dag(ND, NS);
+    dag.validate(&schema).unwrap();
+    let spec = custom_spec(schema.clone(), 240, SHARDS as usize);
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    (Pipeline::new(plan), spec)
+}
+
+fn ev(at_step: u64, change: KnobChange) -> ControlEvent {
+    ControlEvent { at_step, change }
+}
+
+fn elastic_cfg(devices: usize, script: ControlScript) -> TrainConfig {
+    TrainConfig {
+        max_steps: usize::MAX / 2,
+        loss_every: 1,
+        staging_buffers: 2,
+        seed: 99,
+        ingest: IngestConfig {
+            workers: 2,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
+        },
+        path: DataPath::Arena,
+        arena: ArenaConfig { slots: 3, slot_bytes: 16 << 20 },
+        devices,
+        route: RoutePolicy::RoundRobin,
+        allreduce_every: 1,
+        control: script,
+        ..TrainConfig::default()
+    }
+}
+
+fn run_cfg(pipe: &Pipeline, spec: &DatasetSpec, cfg: &TrainConfig) -> (TrainReport, Vec<f32>) {
+    let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+    let report = train(pipe, spec, &mut trainer, cfg).unwrap();
+    let state = trainer.state_to_vec().unwrap();
+    (report, state)
+}
+
+fn run_elastic(
+    pipe: &Pipeline,
+    spec: &DatasetSpec,
+    devices: usize,
+    script: &ControlScript,
+) -> (TrainReport, Vec<f32>) {
+    run_cfg(pipe, spec, &elastic_cfg(devices, script.clone()))
+}
+
+fn assert_same_trajectory(
+    label: &str,
+    got: &(TrainReport, Vec<f32>),
+    want: &(TrainReport, Vec<f32>),
+) {
+    assert_eq!(got.0.steps, want.0.steps, "{label}: step counts differ");
+    assert_eq!(
+        got.0.losses.len(),
+        want.0.losses.len(),
+        "{label}: loss sample counts differ"
+    );
+    for ((gs, gl), (ws, wl)) in got.0.losses.iter().zip(&want.0.losses) {
+        assert_eq!(gs, ws, "{label}: loss sampled at different steps");
+        assert_eq!(
+            gl.to_bits(),
+            wl.to_bits(),
+            "{label}: loss diverged at step {gs}: {gl} vs {wl}"
+        );
+    }
+    assert_bits_equal(&got.1, &want.1).unwrap_or_else(|e| {
+        panic!("{label}: final parameters diverged: {e}");
+    });
+}
+
+/// Exactly-once delivery: every shard packed once, every step stepped
+/// once, the per-device breakdown sums to the fleet totals, and nothing
+/// was lost or forfeited (elastic transitions are graceful, not faults).
+fn assert_exactly_once(label: &str, report: &TrainReport, peak: usize) {
+    assert_eq!(report.shards, SHARDS, "{label}: every shard exactly once");
+    assert_eq!(report.steps, STEPS, "{label}: every chunk exactly once");
+    assert_eq!(report.per_device.len(), peak, "{label}: peak-wide breakdown");
+    let shard_sum: u64 = report.per_device.iter().map(|d| d.shards).sum();
+    assert_eq!(shard_sum, report.shards, "{label}: per-device shard sum");
+    let step_sum: u64 = report.per_device.iter().map(|d| d.steps).sum();
+    assert_eq!(step_sum, report.steps, "{label}: per-device step sum");
+    assert_eq!(report.lanes_lost, 0, "{label}: elastic is not a fault");
+    assert_eq!(report.forfeited_steps, 0, "{label}: nothing forfeited");
+    assert_eq!(report.host_copy_bytes, 0, "{label}: zero-copy broken");
+    assert!(report.losses.iter().all(|(_, l)| l.is_finite()), "{label}");
+}
+
+/// The full knob surface in one deterministic script (devices = 2,
+/// peak = 3): lane add, all-reduce retune, lookahead retune, two ingest
+/// restarts, and a graceful lane drain.
+fn mixed_script() -> ControlScript {
+    ControlScript {
+        events: vec![
+            ev(3, KnobChange::AddLane),
+            ev(4, KnobChange::AllreduceEvery(3)),
+            ev(6, KnobChange::Lookahead(4)),
+            ev(6, KnobChange::IngestWorkers(1)),
+            ev(8, KnobChange::ChunkRows(20)),
+            ev(8, KnobChange::RemoveLane(0)),
+        ],
+    }
+}
+
+#[test]
+fn scripted_reconfig_is_bitwise_under_fuzzing() {
+    // THE acceptance bar: a scripted run touching every knob class must
+    // be a pure function of the config — ≥ 20 perturbed schedules, each
+    // bitwise equal (losses AND final parameters) to the unfuzzed
+    // scripted reference. The embedding layer is on so the Lookahead
+    // retune actually lands in the prefetchers.
+    let (pipe, spec) = fixture();
+    let script = mixed_script();
+    let cfg = TrainConfig {
+        embedding: Some(EmbeddingConfig {
+            cache_rows: 32,
+            lookahead: 2,
+            policy: ShardPolicy::HashMod,
+            hot_seed: Vec::new(),
+        }),
+        ..elastic_cfg(2, script.clone())
+    };
+    let reference = run_cfg(&pipe, &spec, &cfg);
+    assert_eq!(
+        reference.0.reconfigs,
+        script.events.len() as u64,
+        "every scripted event must fire before the stream ends"
+    );
+    assert_eq!(reference.0.steps, STEPS, "fixture must actually train");
+    assert_eq!(reference.0.lanes_lost, 0);
+    assert_eq!(reference.0.forfeited_steps, 0);
+    assert!(reference.0.allreduces > 0);
+
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0xe1a5);
+    const SCHEDULES: usize = 24;
+    for i in 0..SCHEDULES {
+        let (seed, got) = fuzzer.with_schedule(|| run_cfg(&pipe, &spec, &cfg));
+        let label = format!("scripted schedule {i} (seed {seed:#x})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_eq!(got.0.reconfigs, reference.0.reconfigs, "{label}: reconfigs");
+        assert_eq!(got.0.allreduces, reference.0.allreduces, "{label}: epochs");
+        assert_eq!(got.0.shards, reference.0.shards, "{label}: shards");
+    }
+}
+
+#[test]
+fn grow_one_to_four_is_exactly_once_and_single_device_bitwise() {
+    // Growing 1 → 4 mid-stream: three scripted AddLanes admit the
+    // pre-assembled joiners at successive quiesce points. Round-robin +
+    // sync-every-step makes the trajectory independent of the fleet
+    // width, so the grown run must replay the static single-device run
+    // bitwise — while delivering every shard exactly once and resolving
+    // every epoch (one per step at K = 1).
+    let (pipe, spec) = fixture();
+    let reference = run_elastic(&pipe, &spec, 1, &ControlScript::default());
+    assert_eq!(reference.0.steps, STEPS, "fixture must actually train");
+    assert_eq!(reference.0.reconfigs, 0, "unscripted run applies nothing");
+
+    let grow = ControlScript {
+        events: vec![
+            ev(2, KnobChange::AddLane),
+            ev(4, KnobChange::AddLane),
+            ev(6, KnobChange::AddLane),
+        ],
+    };
+    let grown = run_elastic(&pipe, &spec, 1, &grow);
+    assert_same_trajectory("grow 1→4", &grown, &reference);
+    assert_exactly_once("grow 1→4", &grown.0, 4);
+    assert_eq!(grown.0.reconfigs, 3);
+    assert_eq!(grown.0.allreduces, STEPS, "all epochs resolve at K=1");
+    // The joiners actually took work: the original lane no longer packs
+    // the whole stream once admission starts at the third routing.
+    let late_shards: u64 = grown.0.per_device[1..].iter().map(|d| d.shards).sum();
+    assert!(late_shards > 0, "no joiner ever routed a shard");
+
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0x6404);
+    for i in 0..12 {
+        let (seed, got) = fuzzer.with_schedule(|| run_elastic(&pipe, &spec, 1, &grow));
+        let label = format!("grow schedule {i} (seed {seed:#x})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_exactly_once(&label, &got.0, 4);
+        assert_eq!(got.0.allreduces, STEPS, "{label}: all epochs resolve");
+    }
+}
+
+#[test]
+fn shrink_three_to_one_drains_gracefully_and_stays_bitwise() {
+    // Shrinking 3 → 1: two scripted RemoveLanes take the lanes' shard
+    // senders; queued slots still train (stamped pre-quiesce), the
+    // drained replicas fold to the end as valid survivors, and nothing
+    // is forfeited — unlike a fault death. At K = 1 the trajectory again
+    // matches the static single-device run bitwise.
+    let (pipe, spec) = fixture();
+    let reference = run_elastic(&pipe, &spec, 1, &ControlScript::default());
+    let shrink = ControlScript {
+        events: vec![
+            ev(2, KnobChange::RemoveLane(1)),
+            ev(6, KnobChange::RemoveLane(0)),
+        ],
+    };
+    let shrunk = run_elastic(&pipe, &spec, 3, &shrink);
+    assert_same_trajectory("shrink 3→1", &shrunk, &reference);
+    assert_exactly_once("shrink 3→1", &shrunk.0, 3);
+    assert_eq!(shrunk.0.reconfigs, 2);
+    // Lane 2 absorbed the tail of the stream.
+    assert!(shrunk.0.per_device[2].shards > 0, "survivor routed nothing");
+
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0x5421);
+    for i in 0..12 {
+        let (seed, got) = fuzzer.with_schedule(|| run_elastic(&pipe, &spec, 3, &shrink));
+        let label = format!("shrink schedule {i} (seed {seed:#x})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_exactly_once(&label, &got.0, 3);
+    }
+}
+
+#[test]
+fn traced_scripted_run_records_transitions_and_closes_the_ledger() {
+    // Tracing an elastic run: LANE_JOIN / LANE_DRAIN spans mark the
+    // transitions on the router track, the per-lane stall ledger closes
+    // for every lane the run ever stepped (joiners included), the chrome
+    // export validates, and the sim-clock timeline stays a pure function
+    // of the config under fuzzing.
+    let (pipe, spec) = fixture();
+    let script = ControlScript {
+        events: vec![ev(2, KnobChange::AddLane), ev(6, KnobChange::RemoveLane(0))],
+    };
+    let untraced = run_cfg(&pipe, &spec, &elastic_cfg(2, script.clone()));
+    let traced_cfg = TrainConfig { trace: true, ..elastic_cfg(2, script.clone()) };
+    let traced = run_cfg(&pipe, &spec, &traced_cfg);
+    assert_same_trajectory("traced elastic", &traced, &untraced);
+    let report = &traced.0;
+    assert_exactly_once("traced elastic", report, 3);
+
+    let trace = report.trace.as_ref().expect("traced run must carry a trace");
+    let joins: Vec<_> = trace.spans_of_kind(kind::LANE_JOIN).collect();
+    assert_eq!(joins.len(), 1, "one AddLane → one join span");
+    assert_eq!(joins[0].lane, 2, "the joiner is the pre-assembled lane 2");
+    let drains: Vec<_> = trace.spans_of_kind(kind::LANE_DRAIN).collect();
+    assert_eq!(drains.len(), 1, "one RemoveLane → one drain span");
+    assert_eq!(drains[0].lane, 0, "lane 0 was drained");
+
+    let att = report.stall_attribution.as_ref().expect("attribution");
+    assert_eq!(att.per_lane.len(), 3, "every lane that stepped or folded");
+    for lane in &att.per_lane {
+        assert!(
+            lane.closes(0.01),
+            "lane {} ledger does not close: attributed {:.6} vs wall {:.6}\n{}",
+            lane.lane,
+            lane.attributed_s(),
+            lane.wall_s,
+            att.render()
+        );
+    }
+    let json = trace.to_chrome_json();
+    validate_chrome_trace(&json)
+        .unwrap_or_else(|e| panic!("elastic trace does not validate: {e}"));
+    assert!(json.contains("router"), "no router track in export");
+
+    let reference_tl = trace.sim_timeline();
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0x7e1a);
+    for i in 0..6 {
+        let (seed, got) = fuzzer.with_schedule(|| run_cfg(&pipe, &spec, &traced_cfg));
+        let label = format!("traced elastic schedule {i} (seed {seed:#x})");
+        assert_same_trajectory(&label, &got, &untraced);
+        let tl = got.0.trace.as_ref().unwrap().sim_timeline();
+        assert_eq!(tl, reference_tl, "{label}: sim timeline is schedule-dependent");
+    }
+}
+
+#[test]
+fn invalid_scripts_fail_fast_with_typed_config_errors() {
+    // Shape bugs must surface at loop entry (TrainConfig::validate), not
+    // as a mid-run deadlock: unsorted events, ingest knobs without
+    // in-order delivery, removals outside the initial fleet.
+    let (pipe, spec) = fixture();
+    let run_err = |cfg: &TrainConfig| -> String {
+        let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+        match train(&pipe, &spec, &mut trainer, cfg) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("invalid script was accepted"),
+        }
+    };
+
+    let unsorted = ControlScript {
+        events: vec![ev(6, KnobChange::AddLane), ev(2, KnobChange::AddLane)],
+    };
+    let msg = run_err(&elastic_cfg(2, unsorted));
+    assert!(msg.contains("config error") && msg.contains("sorted"), "{msg}");
+
+    let bad_remove = ControlScript {
+        events: vec![ev(2, KnobChange::RemoveLane(5))],
+    };
+    let msg = run_err(&elastic_cfg(2, bad_remove));
+    assert!(msg.contains("RemoveLane(5)"), "{msg}");
+
+    let mut fresh = elastic_cfg(
+        2,
+        ControlScript { events: vec![ev(2, KnobChange::ChunkRows(20))] },
+    );
+    fresh.ingest.policy = DeliveryPolicy::FreshestFirst;
+    let msg = run_err(&fresh);
+    assert!(msg.contains("InOrder"), "{msg}");
+}

@@ -37,6 +37,7 @@ fn write_json(
     concurrent_consumers: &[(usize, f64, f64)],
     embedding_cache: &[(usize, f64, f64)],
     elastic: &[(String, f64)],
+    autotune: &[(String, f64)],
     fault_overhead: &[(String, f64)],
     trace_overhead: &[(String, f64)],
 ) {
@@ -100,6 +101,15 @@ fn write_json(
             name,
             shards_per_s,
             if i + 1 < elastic.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n  \"autotune\": [\n");
+    for (i, (name, steps_per_s)) in autotune.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": {:?}, \"steady_steps_per_s\": {:.2}}}{}\n",
+            name,
+            steps_per_s,
+            if i + 1 < autotune.len() { "," } else { "" }
         ));
     }
     s.push_str("  ],\n  \"fault_overhead\": [\n");
@@ -686,6 +696,46 @@ fn main() {
         elastic[1].1 / elastic[0].1,
     ));
 
+    // ---- autotune: the closed-loop hill climber on the adversarial
+    // scenario matrix (`piperec::scenarios`). Each scenario runs three
+    // arms over the same stream — the deliberately bad config, the best
+    // hand-tuned config, and the bad config with the controller live —
+    // all scored on the controller's modeled steady-state steps/s, so
+    // these rows are deterministic (simulated clocks, not wall time).
+    // The ROADMAP item-3 bar: auto ≥ 0.9× hand on every scenario, from
+    // the bad start.
+    let mut autotune_rows: Vec<(String, f64)> = Vec::new();
+    let mut worst_auto_vs_hand = f64::INFINITY;
+    println!("\nautotune (scenario matrix, modeled steady steps/s):");
+    for sc in piperec::scenarios::Scenario::all() {
+        let out = sc.evaluate().unwrap();
+        println!(
+            "  {:<15}: bad {:.1}, hand {:.1}, auto {:.1}  → auto/hand {:.2} ({} applied, {} reverted)",
+            sc.name,
+            out.bad.steady_steps_per_s,
+            out.hand.steady_steps_per_s,
+            out.auto.steady_steps_per_s,
+            out.auto_vs_hand(),
+            out.auto.applied,
+            out.auto.reverts,
+        );
+        assert!(
+            out.meets_bar(),
+            "{}: auto-tuned fell below the {}x bar: {:.3}",
+            sc.name,
+            piperec::scenarios::SUCCESS_BAR,
+            out.auto_vs_hand()
+        );
+        for (arm, score) in [("bad", out.bad), ("hand", out.hand), ("auto", out.auto)] {
+            autotune_rows.push((format!("{} {arm}", sc.name), score.steady_steps_per_s));
+        }
+        worst_auto_vs_hand = worst_auto_vs_hand.min(out.auto_vs_hand());
+    }
+    speedups.push((
+        "autotune auto vs hand-tuned (worst scenario, steady steps/s)".to_string(),
+        worst_auto_vs_hand,
+    ));
+
     // ---- fault-injection probe overhead: the chaos layer
     // (`util::fault`, exercised by rust/tests/prop_faults.rs) probes the
     // shard-read, DMA-submit and lane hot paths on every attempt, so its
@@ -767,6 +817,7 @@ fn main() {
         &concurrent_consumers,
         &embedding_cache,
         &elastic,
+        &autotune_rows,
         &fault_overhead,
         &trace_overhead,
     );

@@ -63,9 +63,14 @@
 //!                            ├─ AllreduceEvery(n) bus.retune_every      (next epoch boundary on)
 //!                            ├─ AddLane           router.mark_alive     (joiner eligible now)
 //!                            ├─ RemoveLane(d)     sender taken          (lane drains)
-//!                            ├─ Lookahead(n)      pre-dealt to workers  (shards with start_rel >= at_step)
+//!                            ├─ Lookahead(n)      queued to every lane  (shards with start_rel >= frontier)
 //!                            └─ IngestWorkers/ChunkRows                 (restart at next shard boundary)
 //! ```
+//!
+//! Events at the **same `at_step`** apply in stable event-index order
+//! (the order they appear in [`ControlScript::events`]); two events at
+//! the same step targeting the *same knob* are rejected by validation,
+//! so a script's effect at any frontier is unambiguous.
 //!
 //! No shard spans an application, so a script is a pure function of the
 //! delivery-order step numbering — scripted runs stay **bitwise
@@ -74,12 +79,23 @@
 //! finishes its current shard, its first delivery past that boundary is
 //! discarded (chunk-stable synth regenerates it identically), and a
 //! replacement spawns via [`AsyncIngest::spawn_from`].
+//!
+//! The same quiesce machinery serves the **online auto-tuner**
+//! ([`crate::coordinator::autotune`], `TrainConfig::autotune`): the
+//! router closes an observation window every W routed steps, hands it to
+//! the hill-climbing controller, and applies whatever [`KnobChange`] it
+//! emits through [`apply_knob_change`] — the same code path a scripted
+//! event takes, logged in the same [`KnobRegistry`] (with its trigger
+//! [`StallCause`](crate::coordinator::autotune::StallCause)).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
+use crate::coordinator::autotune::{
+    AppliedKnob, AutotuneReport, ClimberInit, HillClimber, ObsLedger, SlotObs, StallCause,
+};
 use crate::coordinator::scheduler::{
     DeviceRouter, EpochWait, PrefetchPipeline, ReduceBus, RoutePolicy,
 };
@@ -149,10 +165,21 @@ pub struct ControlEvent {
 /// A deterministic schedule of control-plane changes, sorted by
 /// `at_step`. Empty (the default) means a static fleet — the script adds
 /// zero overhead to an unscripted run.
+///
+/// **Tie-break**: events sharing an `at_step` apply in **stable
+/// event-index order** — the order they appear in `events`. That makes
+/// the applied sequence a pure function of the script. Two same-step
+/// events that touch the *same knob* would make the winner an authoring
+/// accident rather than a decision, so validation rejects them
+/// ([`EtlError::Config`]); the two exceptions follow the knobs'
+/// semantics — repeated `AddLane` events admit distinct joiners (never
+/// duplicates), and `RemoveLane` only conflicts with a removal of the
+/// *same* lane.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ControlScript {
     /// The events, sorted ascending by [`ControlEvent::at_step`]
-    /// (ties apply in vector order).
+    /// (ties apply in stable event-index order; duplicate same-step
+    /// same-knob pairs are rejected by [`ControlScript::validate`]).
     pub events: Vec<ControlEvent>,
 }
 
@@ -168,7 +195,20 @@ impl ControlScript {
         self.events.iter().filter(|e| matches!(e.change, KnobChange::AddLane)).count()
     }
 
+    /// Two same-step events conflict when applying both cannot be
+    /// order-independent: same knob, except that `AddLane`s admit
+    /// distinct joiners and `RemoveLane`s only clash on the same lane.
+    fn conflicts(a: KnobChange, b: KnobChange) -> bool {
+        match (a, b) {
+            (KnobChange::AddLane, KnobChange::AddLane) => false,
+            (KnobChange::RemoveLane(x), KnobChange::RemoveLane(y)) => x == y,
+            _ => a.name() == b.name(),
+        }
+    }
+
     /// Typed validation against the run's shape: events must be sorted,
+    /// same-step events must not touch the same knob twice (the
+    /// tie-break is stable event-index order — see the struct docs),
     /// ingest restarts need in-order delivery, lane removals must target
     /// the initial fleet.
     pub fn validate(&self, devices: usize, ingest: &IngestConfig) -> Result<()> {
@@ -182,6 +222,17 @@ impl ControlScript {
                 )));
             }
             last = ev.at_step;
+            for (j, prev) in self.events[..i].iter().enumerate() {
+                if prev.at_step == ev.at_step && Self::conflicts(prev.change, ev.change) {
+                    return Err(EtlError::Config(format!(
+                        "ControlScript: events {j} and {i} both touch knob \
+                         '{}' at step {} — same-step events apply in event-index \
+                         order, so a same-knob pair is ambiguous by construction",
+                        ev.change.name(),
+                        ev.at_step
+                    )));
+                }
+            }
             match ev.change {
                 KnobChange::IngestWorkers(0) => {
                     return Err(EtlError::Config(
@@ -213,20 +264,38 @@ impl ControlScript {
 }
 
 /// Log of the control-plane changes a run actually applied, in
-/// application order; [`TrainReport::reconfigs`] is its length.
+/// application order; [`TrainReport::reconfigs`] is its length. Scripted
+/// and controller-emitted changes land in the same registry — the cause
+/// column (`None` for scripted events, the trigger
+/// [`StallCause`] for auto-tuner emissions) is the only difference.
 #[derive(Debug, Default)]
 pub struct KnobRegistry {
     applied: Vec<(u64, KnobChange)>,
+    causes: Vec<Option<StallCause>>,
 }
 
 impl KnobRegistry {
     fn record(&mut self, frontier: u64, change: KnobChange) {
+        self.record_caused(frontier, change, None);
+    }
+
+    fn record_caused(&mut self, frontier: u64, change: KnobChange, cause: Option<StallCause>) {
         self.applied.push((frontier, change));
+        self.causes.push(cause);
     }
 
     /// Applied changes as `(routing frontier at application, change)`.
     pub fn applied(&self) -> &[(u64, KnobChange)] {
         &self.applied
+    }
+
+    /// The full typed log, each change with its provenance.
+    pub fn log(&self) -> Vec<AppliedKnob> {
+        self.applied
+            .iter()
+            .zip(&self.causes)
+            .map(|(&(at_step, change), &cause)| AppliedKnob { at_step, change, cause })
+            .collect()
     }
 
     /// Number of applied changes.
@@ -389,6 +458,11 @@ fn fold_next_epoch(
     }
 }
 
+/// Pending `(frontier, lookahead)` retunes queued to a lane by the
+/// control plane (scripted or auto-tuned); the lane's pack worker pops
+/// entries whose frontier its slot stream has reached.
+type LookaheadQueue = Arc<Mutex<VecDeque<(u64, usize)>>>;
+
 /// The per-device bundle [`FleetRuntime::assemble`] builds and `run`
 /// splits across the lane's pack-worker and consumer threads.
 struct Lane {
@@ -407,9 +481,10 @@ struct Lane {
     prefetch: Option<PrefetchPipeline>,
     /// This lane's trainer replica.
     replica: Trainer,
-    /// Scripted `(at_step, lookahead)` retunes, applied by the worker to
-    /// shards with `start_rel >= at_step`.
-    lookahead_events: Vec<(u64, usize)>,
+    /// Control-plane `(frontier, lookahead)` retunes, applied by the
+    /// worker to shards with `start_rel >= frontier`. The router pushes
+    /// at quiesce points (see [`apply_knob_change`]); the worker pops.
+    lookahead: LookaheadQueue,
 }
 
 /// Everything the fleet driver owns before threads spawn: shared
@@ -425,6 +500,8 @@ struct FleetRuntime {
     states: Vec<LaneStateCell>,
     /// Pre-assembled joiner device indices, in `AddLane` event order.
     joiners: VecDeque<usize>,
+    /// Router-side handles to every lane's lookahead retune queue.
+    lookaheads: Vec<LookaheadQueue>,
     /// Simulated cost of one all-reduce epoch at peak width.
     allreduce_cost_s: f64,
 }
@@ -490,16 +567,6 @@ impl FleetRuntime {
             None => (0..peak).map(|_| None).collect(),
         };
 
-        let lookahead_events: Vec<(u64, usize)> = cfg
-            .control
-            .events
-            .iter()
-            .filter_map(|e| match e.change {
-                KnobChange::Lookahead(n) => Some((e.at_step, n)),
-                _ => None,
-            })
-            .collect();
-
         // All-reduce cost model: a deterministic tree needs ceil(log2 N)
         // rounds of reduce plus as many of broadcast, each moving the
         // flat state over the calibrated P2P channel, once per epoch.
@@ -510,11 +577,14 @@ impl FleetRuntime {
 
         let mut shard_txs = Vec::with_capacity(peak);
         let mut lanes = Vec::with_capacity(peak);
+        let mut lookaheads = Vec::with_capacity(peak);
         for (d, (dma, prefetch)) in engines.into_iter().zip(prefetchers).enumerate() {
             let (tx, shard_rx) = std::sync::mpsc::sync_channel::<(u64, Batch)>(1);
             shard_txs.push(Some(tx));
             let (slot_queue, slot_rx) = StagingQueue::<RoutedSlot>::with_buffers(cfg.staging_buffers);
             let stall_counter = slot_queue.stall_counter();
+            let lookahead: LookaheadQueue = Arc::default();
+            lookaheads.push(Arc::clone(&lookahead));
             lanes.push(Lane {
                 device: d,
                 shard_rx,
@@ -524,7 +594,7 @@ impl FleetRuntime {
                 dma,
                 prefetch,
                 replica: trainer.replica(),
-                lookahead_events: lookahead_events.clone(),
+                lookahead,
             });
         }
 
@@ -543,8 +613,79 @@ impl FleetRuntime {
             shard_txs,
             states,
             joiners,
+            lookaheads,
             allreduce_cost_s,
         })
+    }
+}
+
+/// Apply one control-plane change at a quiesce point, on the router
+/// thread. This is the **single actuation path**: scripted
+/// [`ControlEvent`]s and auto-tuner emissions both land here, so a
+/// controller decision is byte-for-byte the change a hand-written
+/// script would have made. `cum` is the routing frontier (run-relative
+/// steps stamped so far); `idx` is the shard index currently in hand
+/// (the ingest-restart boundary).
+#[allow(clippy::too_many_arguments)]
+fn apply_knob_change(
+    change: KnobChange,
+    cum: u64,
+    idx: usize,
+    router: &mut DeviceRouter,
+    bus: &ReduceBus,
+    states: &[LaneStateCell],
+    shard_txs: &mut [Option<SyncSender<(u64, Batch)>>],
+    joiners: &mut VecDeque<usize>,
+    eff_ingest: &mut IngestConfig,
+    restart_after: &mut Option<usize>,
+    lookaheads: &[LookaheadQueue],
+) {
+    match change {
+        KnobChange::Route(p) => router.set_policy(p),
+        KnobChange::AllreduceEvery(v) => bus.retune_every(cum, v),
+        KnobChange::Lookahead(n) => {
+            // Queue to every lane: each slot stream is in start_rel
+            // order per lane, so the worker applying at its first shard
+            // at/past the frontier is that lane's quiesce point. Every
+            // shard routed before this call has start_rel < cum, so the
+            // retune touches exactly the shards a pre-dealt
+            // `(at_step, n)` event would have (the frontier is the
+            // first at/past the scripted step).
+            for q in lookaheads {
+                q.lock().unwrap_or_else(|p| p.into_inner()).push_back((cum, n));
+            }
+        }
+        KnobChange::IngestWorkers(n) => {
+            eff_ingest.workers = n;
+            *restart_after = Some(idx);
+        }
+        KnobChange::ChunkRows(n) => {
+            eff_ingest.chunk_rows = n;
+            *restart_after = Some(idx);
+        }
+        KnobChange::AddLane => {
+            let d = joiners
+                .pop_front()
+                .expect("validated: one joiner per AddLane event");
+            debug_assert_eq!(states[d].get(), LaneState::Joining);
+            sched::point(site::LANE_JOIN);
+            let span = trace::begin(tkind::LANE_JOIN, d as u32, cum);
+            router.mark_alive(d);
+            states[d].set(LaneState::Live);
+            span.end();
+        }
+        KnobChange::RemoveLane(d) => {
+            // Taking the sender is the drain trigger: the lane's worker
+            // exits once its queued shards are packed, its consumer
+            // trains them (all stamped pre-quiesce), then folds to the
+            // end as a valid survivor.
+            if shard_txs[d].take().is_some() {
+                let span = trace::begin(tkind::LANE_DRAIN, d as u32, cum);
+                router.mark_dead(d);
+                states[d].set(LaneState::Draining);
+                span.end();
+            }
+        }
     }
 }
 
@@ -566,9 +707,35 @@ pub(crate) fn run(
     let max_steps = cfg.max_steps as u64;
     let loss_every = (cfg.loss_every as u64).max(1);
 
-    let FleetRuntime { peak, arenas, router, bus, lanes: lane_bundles, shard_txs, states, joiners, allreduce_cost_s } =
+    let FleetRuntime { peak, arenas, router, bus, lanes: lane_bundles, shard_txs, states, joiners, lookaheads, allreduce_cost_s } =
         FleetRuntime::assemble(trainer, cfg)?;
     let tracker = router.tracker();
+
+    // Online auto-tuner: a shared router↔worker observation ledger plus
+    // the hill-climbing controller the router thread will drive at its
+    // window boundaries. Every observation is sim-clock, so the
+    // controller's decisions replay bitwise (see `autotune` module docs).
+    let tuner: Option<(Arc<ObsLedger>, HillClimber)> = cfg.autotune.map(|at| {
+        let init = ClimberInit {
+            route_round_robin: cfg.route == RoutePolicy::RoundRobin,
+            workers: cfg.ingest.workers,
+            chunk_rows: cfg.ingest.chunk_rows,
+            rows_per_shard: spec.rows_per_shard(),
+            lookahead: cfg.embedding.as_ref().map(|e| e.lookahead).unwrap_or(0),
+            embedding: cfg.embedding.is_some(),
+            allreduce_every: cfg.allreduce_every,
+            arena_slots: cfg.arena.slots,
+            ssd_bound: spec.ssd_bound,
+            allreduce_cost_s,
+            step_rows,
+            n_dense: trainer.meta.n_dense,
+            n_sparse: trainer.meta.n_sparse,
+            embed_dim: trainer.meta.embed_dim,
+        };
+        (Arc::new(ObsLedger::new()), HillClimber::new(at, init))
+    });
+    let obs_handle: Option<Arc<ObsLedger>> = tuner.as_ref().map(|(o, _)| Arc::clone(o));
+    let mut autotune_report: Option<AutotuneReport> = None;
 
     // Consumed shard buffers flow back to the router for pool recycling.
     let (recycle_tx, recycle_rx) = std::sync::mpsc::channel::<Batch>();
@@ -616,19 +783,20 @@ pub(crate) fn run(
                 dma,
                 prefetch,
                 replica,
-                lookahead_events,
+                lookahead,
             } = lane;
             stall_counters.push(stall_counter);
-            worker_parts.push((device, shard_rx, slot_queue, dma, prefetch, lookahead_events));
+            worker_parts.push((device, shard_rx, slot_queue, dma, prefetch, lookahead));
             consumer_parts.push((device, slot_rx, replica));
         }
 
         // Pack workers: one per lane, each owning its device's DMA
         // engine clock and blocking only on its own arena's credits.
         let mut workers = Vec::with_capacity(peak);
-        for (d, rx, queue, mut dma, mut prefetch, la_events) in worker_parts {
+        for (d, rx, queue, mut dma, mut prefetch, la_queue) in worker_parts {
             let recycle_tx = recycle_tx.clone();
             let worker_tracker = Arc::clone(&tracker);
+            let obs = obs_handle.clone();
             workers.push(scope.spawn(move || -> Result<LaneOut> {
                 fault::enroll(fault_token);
                 trace::enroll(trace_token);
@@ -639,16 +807,19 @@ pub(crate) fn run(
                 let mut failure: Option<EtlError> = None;
                 let mut dead = false;
                 let mut last_stage_s = 0.0f64;
-                let mut la_idx = 0usize;
                 while let Ok((start_rel, shard)) = rx.recv() {
-                    // Scripted lookahead retunes: the slot stream is in
-                    // start_rel order per lane, so applying at the first
-                    // shard at/past the threshold is the quiesce point.
-                    while la_idx < la_events.len() && start_rel >= la_events[la_idx].0 {
-                        if let Some(pf) = prefetch.as_mut() {
-                            pf.set_lookahead(la_events[la_idx].1);
+                    // Control-plane lookahead retunes: the slot stream
+                    // is in start_rel order per lane, so applying at the
+                    // first shard at/past the queued frontier is this
+                    // lane's quiesce point.
+                    {
+                        let mut q = la_queue.lock().unwrap_or_else(|p| p.into_inner());
+                        while q.front().is_some_and(|&(at, _)| start_rel >= at) {
+                            let (_, n) = q.pop_front().expect("front checked");
+                            if let Some(pf) = prefetch.as_mut() {
+                                pf.set_lookahead(n);
+                            }
                         }
-                        la_idx += 1;
                     }
                     let raw_bytes = shard.total_bytes() as u64;
                     // Same formula the router stamped the schedule with;
@@ -664,6 +835,11 @@ pub(crate) fn run(
                         let hi = (start_rel + chunks).min(cap_rel);
                         if lo < hi {
                             bus.forfeit(lo..hi);
+                        }
+                        if chunks > 0 {
+                            if let Some(o) = obs.as_deref() {
+                                o.forfeit_slot(start_rel);
+                            }
                         }
                         worker_tracker.complete(d, raw_bytes);
                         let _ = recycle_tx.send(shard);
@@ -701,6 +877,19 @@ pub(crate) fn run(
                     // steps, return its credit, and fall into drain mode.
                     match dma.submit(out.sim_s, slot.packed_bytes()) {
                         Ok(rec) => {
+                            // Auto-tuner observation: the slot's sim-clock
+                            // pack time and DMA wire time (queueing
+                            // excluded — the controller's model rebuilds
+                            // queueing from its own clocks).
+                            if chunks > 0 {
+                                if let Some(o) = obs.as_deref() {
+                                    o.complete_slot(
+                                        start_rel,
+                                        timing.elapsed_s,
+                                        rec.done_s - rec.start_s,
+                                    );
+                                }
+                            }
                             // Prefetch planning: the router saw this shard
                             // before its consumer will, so the lane can
                             // promote the slot's embedding rows `lookahead`
@@ -730,6 +919,11 @@ pub(crate) fn run(
                             let hi = (start_rel + chunks).min(cap_rel);
                             if lo < hi {
                                 bus.forfeit(lo..hi);
+                            }
+                            if chunks > 0 {
+                                if let Some(o) = obs.as_deref() {
+                                    o.forfeit_slot(start_rel);
+                                }
                             }
                             worker_tracker.complete(d, raw_bytes);
                             let _ = arena.release(slot);
@@ -785,7 +979,7 @@ pub(crate) fn run(
         let ingest_spec = spec.clone();
         let seed = cfg.seed;
         let script = cfg.control.events.clone();
-        let router_thread = scope.spawn(move || -> Result<(f64, KnobRegistry)> {
+        let router_thread = scope.spawn(move || -> Result<(f64, KnobRegistry, Option<AutotuneReport>)> {
             fault::enroll(fault_token);
             trace::enroll(trace_token);
             trace::set_thread_label("router");
@@ -793,7 +987,11 @@ pub(crate) fn run(
             let mut shard_txs = shard_txs;
             let mut router = router;
             let mut joiners = joiners;
+            let lookaheads = lookaheads;
             let mut registry = KnobRegistry::default();
+            let mut tuner = tuner;
+            // Next observation-window index the tuner will close.
+            let mut win_idx = 0u64;
             let mut eff_ingest = ingest_cfg;
             let mut ingest = AsyncIngest::spawn(
                 ShardInput::Synth { spec: ingest_spec.clone(), seed },
@@ -839,50 +1037,63 @@ pub(crate) fn run(
                     }
                     // Control plane: apply every scripted change whose
                     // step the routing frontier has reached, between two
-                    // shard routings (the quiesce point).
+                    // shard routings (the quiesce point). Same-step
+                    // events apply in stable event-index order.
                     while next_ev < script.len() && script[next_ev].at_step <= cum {
                         let ev = script[next_ev];
                         next_ev += 1;
                         sched::point(site::KNOB_APPLY);
-                        match ev.change {
-                            KnobChange::Route(p) => router.set_policy(p),
-                            KnobChange::AllreduceEvery(v) => bus.retune_every(cum, v),
-                            // Pre-dealt to the pack workers at assembly.
-                            KnobChange::Lookahead(_) => {}
-                            KnobChange::IngestWorkers(n) => {
-                                eff_ingest.workers = n;
-                                restart_after = Some(idx);
-                            }
-                            KnobChange::ChunkRows(n) => {
-                                eff_ingest.chunk_rows = n;
-                                restart_after = Some(idx);
-                            }
-                            KnobChange::AddLane => {
-                                let d = joiners
-                                    .pop_front()
-                                    .expect("validated: one joiner per AddLane event");
-                                debug_assert_eq!(states[d].get(), LaneState::Joining);
-                                sched::point(site::LANE_JOIN);
-                                let span = trace::begin(tkind::LANE_JOIN, d as u32, cum);
-                                router.mark_alive(d);
-                                states[d].set(LaneState::Live);
-                                span.end();
-                            }
-                            KnobChange::RemoveLane(d) => {
-                                // Taking the sender is the drain trigger:
-                                // the lane's worker exits once its queued
-                                // shards are packed, its consumer trains
-                                // them (all stamped pre-quiesce), then
-                                // folds to the end as a valid survivor.
-                                if shard_txs[d].take().is_some() {
-                                    let span = trace::begin(tkind::LANE_DRAIN, d as u32, cum);
-                                    router.mark_dead(d);
-                                    states[d].set(LaneState::Draining);
-                                    span.end();
-                                }
-                            }
-                        }
+                        apply_knob_change(
+                            ev.change,
+                            cum,
+                            idx,
+                            &mut router,
+                            bus,
+                            states,
+                            &mut shard_txs,
+                            &mut joiners,
+                            &mut eff_ingest,
+                            &mut restart_after,
+                            &lookaheads,
+                        );
                         registry.record(cum, ev.change);
+                    }
+                    // Auto-tuner: close every observation window the
+                    // frontier has fully routed, fold it into the
+                    // controller, and actuate its decision through the
+                    // exact path a scripted event takes. The wait is
+                    // deadlock-free — every step of the window is
+                    // already routed and lanes drain independently of
+                    // the router — and bounded by the abort probe.
+                    if let Some((obs, climber)) = tuner.as_mut() {
+                        let w = climber.window_steps();
+                        while cum >= (win_idx + 1) * w {
+                            let hi = (win_idx + 1) * w;
+                            if !obs.wait_through(hi, || bus.is_aborted()) {
+                                break;
+                            }
+                            let slots = obs.take_below(hi);
+                            if let Some((change, cause)) =
+                                climber.observe_window(win_idx, &slots, true)
+                            {
+                                sched::point(site::KNOB_APPLY);
+                                apply_knob_change(
+                                    change,
+                                    cum,
+                                    idx,
+                                    &mut router,
+                                    bus,
+                                    states,
+                                    &mut shard_txs,
+                                    &mut joiners,
+                                    &mut eff_ingest,
+                                    &mut restart_after,
+                                    &lookaheads,
+                                );
+                                registry.record_caused(cum, change, Some(cause));
+                            }
+                            win_idx += 1;
+                        }
                     }
                     // Sync lane losses into the routing mask: the dead
                     // lane's remaining shards land on survivors instead.
@@ -900,7 +1111,27 @@ pub(crate) fn run(
                         return Err(EtlError::LaneLost { device: last_dead, survivors: 0 });
                     }
                     let chunks = (shard.rows() / step_rows) as u64;
-                    let d = router.route(shard.total_bytes() as u64);
+                    let raw_bytes = shard.total_bytes() as u64;
+                    let d = router.route(raw_bytes);
+                    // Post the slot's schedule identity before the send
+                    // so the worker's completion always finds it. The
+                    // straggler flag is a pure plan query — it consumes
+                    // no fault attempts. Zero-chunk slots advance no
+                    // step and are never posted.
+                    if chunks > 0 {
+                        if let Some((obs, _)) = tuner.as_ref() {
+                            obs.note_route(SlotObs {
+                                start_rel: cum,
+                                chunks,
+                                lane: d as u32,
+                                raw_bytes,
+                                straggler: fault::afflicted(fsite::SLOW_SHARD, idx as u64),
+                                pack_sim_s: 0.0,
+                                dma_sim_s: 0.0,
+                                forfeited: false,
+                            });
+                        }
+                    }
                     let tx = shard_txs[d]
                         .as_ref()
                         .expect("router only routes to lanes whose sender it still holds");
@@ -918,7 +1149,25 @@ pub(crate) fn run(
                     // capped count.
                     bus.close(cum.min(max_steps.saturating_sub(steps_at_start)));
                     wait_s += ingest.wait_seconds();
-                    Ok((wait_s, registry))
+                    // Passively fold the tail windows (the last may be
+                    // partial) into the controller's report: routing is
+                    // over, so nothing is actuated, but the report
+                    // covers the whole run and the steady-state metric
+                    // reflects the converged configuration.
+                    let report = tuner.map(|(obs, mut climber)| {
+                        let w = climber.window_steps();
+                        while win_idx * w < cum {
+                            let hi = ((win_idx + 1) * w).min(cum);
+                            if !obs.wait_through(hi, || bus.is_aborted()) {
+                                break;
+                            }
+                            let slots = obs.take_below(hi);
+                            climber.observe_window(win_idx, &slots, false);
+                            win_idx += 1;
+                        }
+                        climber.finish()
+                    });
+                    Ok((wait_s, registry, report))
                 }
                 Err(e) => {
                     bus.abort();
@@ -1123,9 +1372,10 @@ pub(crate) fn run(
             }
         }
         match router_thread.join() {
-            Ok(Ok((w, reg))) => {
+            Ok(Ok((w, reg, rep))) => {
                 ingest_wait_s = w;
                 registry = reg;
+                autotune_report = rep;
             }
             Ok(Err(e)) => first_err = first_err.or(Some(e)),
             Err(_) => {
@@ -1234,6 +1484,8 @@ pub(crate) fn run(
         failed_transfers: lanes.iter().map(|l| l.dma_failed).sum(),
         forfeited_steps: bus.forfeited_count(),
         reconfigs: registry.reconfigs(),
+        knob_log: registry.log(),
+        autotune: autotune_report,
         cache_hits: emb.iter().map(|e| e.hits).sum(),
         cache_misses: emb.iter().map(|e| e.misses).sum(),
         exchange_bytes: emb.iter().map(|e| e.exchange_bytes).sum(),
@@ -1294,6 +1546,55 @@ mod tests {
     }
 
     #[test]
+    fn control_script_rejects_same_step_same_knob_pairs() {
+        // Same step, same knob: ambiguous under the event-index
+        // tie-break, so validation rejects with a typed Config error.
+        let dup = ControlScript {
+            events: vec![
+                ControlEvent { at_step: 4, change: KnobChange::Lookahead(2) },
+                ControlEvent { at_step: 4, change: KnobChange::Lookahead(6) },
+            ],
+        };
+        let err = dup.validate(2, &in_order()).unwrap_err();
+        assert!(matches!(err, EtlError::Config(_)));
+        assert!(err.to_string().contains("lookahead"), "{err}");
+
+        // Same step, different knobs: fine (applies in event order).
+        let mixed = ControlScript {
+            events: vec![
+                ControlEvent { at_step: 4, change: KnobChange::Lookahead(2) },
+                ControlEvent { at_step: 4, change: KnobChange::IngestWorkers(2) },
+            ],
+        };
+        assert!(mixed.validate(2, &in_order()).is_ok());
+
+        // Repeated AddLane at one step admits distinct joiners: allowed.
+        let grow2 = ControlScript {
+            events: vec![
+                ControlEvent { at_step: 4, change: KnobChange::AddLane },
+                ControlEvent { at_step: 4, change: KnobChange::AddLane },
+            ],
+        };
+        assert!(grow2.validate(2, &in_order()).is_ok());
+
+        // RemoveLane clashes only on the same lane index.
+        let shrink2 = ControlScript {
+            events: vec![
+                ControlEvent { at_step: 4, change: KnobChange::RemoveLane(0) },
+                ControlEvent { at_step: 4, change: KnobChange::RemoveLane(1) },
+            ],
+        };
+        assert!(shrink2.validate(3, &in_order()).is_ok());
+        let shrink_dup = ControlScript {
+            events: vec![
+                ControlEvent { at_step: 4, change: KnobChange::RemoveLane(1) },
+                ControlEvent { at_step: 4, change: KnobChange::RemoveLane(1) },
+            ],
+        };
+        assert!(shrink_dup.validate(3, &in_order()).is_err());
+    }
+
+    #[test]
     fn knob_registry_counts_applications_in_order() {
         let mut reg = KnobRegistry::default();
         assert_eq!(reg.reconfigs(), 0);
@@ -1302,6 +1603,20 @@ mod tests {
         assert_eq!(reg.reconfigs(), 2);
         assert_eq!(reg.applied()[0], (3, KnobChange::AddLane));
         assert_eq!(reg.applied()[1].1.name(), "route");
+        // Controller-emitted changes carry their trigger cause through
+        // the same registry; scripted ones stay cause-less.
+        reg.record_caused(9, KnobChange::IngestWorkers(4), Some(StallCause::Ingest));
+        let log = reg.log();
+        assert_eq!(log.len(), 3);
+        assert_eq!(log[0].cause, None);
+        assert_eq!(
+            log[2],
+            AppliedKnob {
+                at_step: 9,
+                change: KnobChange::IngestWorkers(4),
+                cause: Some(StallCause::Ingest),
+            }
+        );
     }
 
     #[test]

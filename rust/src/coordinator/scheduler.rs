@@ -237,6 +237,24 @@ impl LoadTracker {
     pub fn snapshot(&self) -> Vec<u64> {
         self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
     }
+
+    /// Snapshot with every non-routable lane masked out (`None`): the
+    /// routing view. A `Draining` lane after a `RemoveLane` — or a dead
+    /// one — must never appear in a `LeastLoaded` decision even though
+    /// its ledger entry still moves while its queued slots finish
+    /// (`clear` zeroes it, making it spuriously the *minimum*, not just
+    /// stale). Masking here rather than at each call site makes the
+    /// routing view the API; pinned by
+    /// `draining_lane_is_masked_out_of_least_loaded`.
+    pub fn snapshot_masked(&self, routable: &[bool]) -> Vec<Option<u64>> {
+        self.loads
+            .iter()
+            .enumerate()
+            .map(|(d, l)| {
+                routable.get(d).copied().unwrap_or(false).then(|| l.load(Ordering::Relaxed))
+            })
+            .collect()
+    }
 }
 
 /// The shard→device routing layer of the multi-device train loop: the
@@ -357,19 +375,19 @@ impl DeviceRouter {
                 }
             }
             RoutePolicy::LeastLoaded => {
-                // One coherent snapshot, then min by (load, index): the
-                // decision is a pure function of the snapshot, and
-                // outstanding-byte ties break to the **lowest device
-                // index** — previously the scan re-read each atomic while
-                // the consumer side concurrently completed work, so two
-                // routers over identical ledgers could break a tie
-                // differently. Pinned by
-                // `least_loaded_ties_break_to_lowest_index`.
-                let snap = self.tracker.snapshot();
+                // One coherent **masked** snapshot, then min by
+                // (load, index): the decision is a pure function of the
+                // snapshot, outstanding-byte ties break to the **lowest
+                // device index** (pinned by
+                // `least_loaded_ties_break_to_lowest_index`), and
+                // draining/dead lanes never appear at all — their zeroed
+                // ledgers would otherwise win every comparison (pinned
+                // by `draining_lane_is_masked_out_of_least_loaded`).
+                let snap = self.tracker.snapshot_masked(&self.alive);
                 snap.iter()
                     .enumerate()
-                    .filter(|(d, _)| self.alive.get(*d).copied().unwrap_or(false))
-                    .min_by_key(|(d, l)| (**l, *d))
+                    .filter_map(|(d, l)| l.map(|l| (d, l)))
+                    .min_by_key(|&(d, l)| (l, d))
                     .map(|(d, _)| d)
                     .expect("router has >= 1 live device")
             }
@@ -1208,6 +1226,35 @@ mod tests {
         assert_eq!(t.snapshot(), vec![30, 0, 20, 0]);
         assert_eq!(r.route(5), 1, "tie {{1, 3}} must break to device 1");
         assert_eq!(r.route(1), 3, "device 3 is now the unique minimum");
+    }
+
+    #[test]
+    fn draining_lane_is_masked_out_of_least_loaded() {
+        // Drain-then-route: after a RemoveLane-style mark_dead the
+        // retired lane's ledger is cleared — making it the *numerical*
+        // minimum — yet it must never win a LeastLoaded pick, and the
+        // masked snapshot must not expose it at all. Its queued slots
+        // still completing must not resurrect it either.
+        let mut r = DeviceRouter::new(3, RoutePolicy::LeastLoaded);
+        // Load the fleet unevenly: lane 0 heaviest, lane 1 lightest.
+        let t = r.tracker();
+        t.charge(0, 300);
+        t.charge(1, 100);
+        t.charge(2, 200);
+        // Lane 1 (the would-be winner) starts draining.
+        r.mark_dead(1);
+        assert_eq!(t.snapshot_masked(&[true, false, true]), vec![Some(300), None, Some(200)]);
+        // Every subsequent pick lands on a live lane — never the
+        // zero-load draining one.
+        for _ in 0..6 {
+            let d = r.route(10);
+            assert_ne!(d, 1, "routed to a draining lane");
+        }
+        // The draining lane's queued slots completing (saturating at 0)
+        // keeps it masked, not re-admitted.
+        t.complete(1, 50);
+        assert_eq!(t.load(1), 0);
+        assert_ne!(r.route(10), 1);
     }
 
     fn pipeline(lookahead: usize, cache_rows: usize) -> PrefetchPipeline {

@@ -135,11 +135,12 @@
 //! site-by-site fault matrix lives in [`crate::coordinator`]'s module
 //! docs.
 
+use crate::coordinator::autotune::{AppliedKnob, AutotuneConfig, AutotuneReport};
 use crate::coordinator::fleet::{self, ControlScript};
 use crate::coordinator::scheduler::RoutePolicy;
 use crate::coordinator::staging::StagingQueue;
 use crate::dataio::dataset::DatasetSpec;
-use crate::dataio::ingest::{AsyncIngest, IngestConfig, ShardInput};
+use crate::dataio::ingest::{AsyncIngest, DeliveryPolicy, IngestConfig, ShardInput};
 use crate::devmem::{ArenaConfig, TransferConfig};
 use crate::error::{EtlError, Result};
 use crate::etl::exec::BufferPool;
@@ -213,6 +214,16 @@ pub struct TrainConfig {
     /// quiesce points (see [`crate::coordinator::fleet`]; arena path
     /// only). Empty (default) = a static fleet with zero overhead.
     pub control: ControlScript,
+    /// Online hill-climbing auto-tuner (see
+    /// [`crate::coordinator::autotune`]; arena path + in-order ingest
+    /// only). `Some` closes the loop from windowed stall attribution to
+    /// live [`KnobChange`](crate::coordinator::fleet::KnobChange)
+    /// emissions at quiesce points; mutually exclusive with a
+    /// non-empty [`TrainConfig::control`] script (two writers to the
+    /// same knobs would race by construction). `None` (default) keeps
+    /// every knob static — pinned bitwise identical to pre-controller
+    /// behavior by `rust/tests/prop_autotune.rs`.
+    pub autotune: Option<AutotuneConfig>,
 }
 
 impl Default for TrainConfig {
@@ -232,6 +243,7 @@ impl Default for TrainConfig {
             embedding: None,
             trace: false,
             control: ControlScript::default(),
+            autotune: None,
         }
     }
 }
@@ -285,6 +297,32 @@ impl TrainConfig {
                  fleet router)"
                     .into(),
             ));
+        }
+        if let Some(at) = &self.autotune {
+            at.validate()?;
+            if self.path != DataPath::Arena {
+                return Err(EtlError::Config(
+                    "the auto-tuner requires DataPath::Arena (the controller lives in the \
+                     fleet router)"
+                        .into(),
+                ));
+            }
+            if self.ingest.policy != DeliveryPolicy::InOrder {
+                return Err(EtlError::Config(
+                    "the auto-tuner requires DeliveryPolicy::InOrder (its ingest knobs \
+                     restart at shard boundaries, and its observation windows are defined \
+                     over the in-order step numbering)"
+                        .into(),
+                ));
+            }
+            if !self.control.is_empty() {
+                return Err(EtlError::Config(
+                    "TrainConfig::autotune and a non-empty ControlScript are mutually \
+                     exclusive (two writers to the same knobs would race; script the run \
+                     or tune it, not both)"
+                        .into(),
+                ));
+            }
         }
         self.control.validate(self.devices, &self.ingest)
     }
@@ -387,9 +425,19 @@ pub struct TrainReport {
     /// reduce bus so epochs still resolved); 0 on a fault-free run.
     pub forfeited_steps: u64,
     /// Control-plane changes the router applied mid-run (scripted
-    /// [`ControlScript`] events executed at quiesce points; 0 for a
-    /// static fleet or the channel path).
+    /// [`ControlScript`] events and auto-tuner emissions executed at
+    /// quiesce points; 0 for a static fleet or the channel path).
     pub reconfigs: u64,
+    /// The full typed control-plane log: every applied change with its
+    /// routing frontier and provenance — `cause: None` for scripted
+    /// events, the trigger
+    /// [`StallCause`](crate::coordinator::autotune::StallCause) for
+    /// auto-tuner emissions. `reconfigs` is its length.
+    pub knob_log: Vec<AppliedKnob>,
+    /// The auto-tuner's windowed report (observation windows, modeled
+    /// throughput series, steady-state metric, applied/reverted counts)
+    /// when [`TrainConfig::autotune`] was set; `None` otherwise.
+    pub autotune: Option<AutotuneReport>,
     /// Embedding lookups served from the hot caches (summed across
     /// lanes; 0 when [`TrainConfig::embedding`] is `None`).
     pub cache_hits: u64,
@@ -630,6 +678,8 @@ fn run_channel(
         failed_transfers: 0,
         forfeited_steps: 0,
         reconfigs: 0,
+        knob_log: Vec::new(),
+        autotune: None,
         cache_hits: 0,
         cache_misses: 0,
         exchange_bytes: 0,
@@ -755,5 +805,47 @@ mod tests {
             EtlError::Config(msg) => assert!(msg.contains("sorted"), "{msg}"),
             other => panic!("expected EtlError::Config, got {other:?}"),
         }
+
+        // The auto-tuner composes with the arena path + in-order ingest
+        // only, and never alongside a user script.
+        let cfg = super::TrainConfig {
+            autotune: Some(crate::coordinator::autotune::AutotuneConfig::default()),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_ok());
+
+        let mut cfg = super::TrainConfig {
+            autotune: Some(crate::coordinator::autotune::AutotuneConfig::default()),
+            ..Default::default()
+        };
+        cfg.ingest.policy = crate::dataio::ingest::DeliveryPolicy::FreshestFirst;
+        match cfg.validate().unwrap_err() {
+            EtlError::Config(msg) => assert!(msg.contains("InOrder"), "{msg}"),
+            other => panic!("expected EtlError::Config, got {other:?}"),
+        }
+
+        let mut cfg = super::TrainConfig {
+            autotune: Some(crate::coordinator::autotune::AutotuneConfig::default()),
+            ..Default::default()
+        };
+        cfg.control = crate::coordinator::fleet::ControlScript {
+            events: vec![crate::coordinator::fleet::ControlEvent {
+                at_step: 3,
+                change: crate::coordinator::fleet::KnobChange::Lookahead(2),
+            }],
+        };
+        match cfg.validate().unwrap_err() {
+            EtlError::Config(msg) => assert!(msg.contains("mutually"), "{msg}"),
+            other => panic!("expected EtlError::Config, got {other:?}"),
+        }
+
+        let bad_window = super::TrainConfig {
+            autotune: Some(crate::coordinator::autotune::AutotuneConfig {
+                window: 0,
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        assert!(bad_window.validate().is_err());
     }
 }

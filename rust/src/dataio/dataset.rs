@@ -117,10 +117,45 @@ impl DatasetSpec {
     }
 
     /// Rows actually present in shard `i` (the trailing shards of an
-    /// uneven split are short or empty).
+    /// uneven split are short or empty). With
+    /// [`SynthConfig::shard_skew`](crate::dataio::synth::SynthConfig::shard_skew)
+    /// above 1.0 the split is deliberately uneven: per-shard weights are
+    /// a pure hash of the shard index and row boundaries follow the
+    /// weight prefix, so sizes vary up to ~`shard_skew`× yet still sum
+    /// exactly to `rows`.
     pub fn rows_in_shard(&self, i: usize) -> usize {
-        let start = i * self.rows_per_shard();
-        self.rows_per_shard().min(self.rows.saturating_sub(start))
+        if self.synth.shard_skew > 1.0 {
+            if i >= self.shards {
+                return 0;
+            }
+            self.skew_boundary(i + 1) - self.skew_boundary(i)
+        } else {
+            let start = i * self.rows_per_shard();
+            self.rows_per_shard().min(self.rows.saturating_sub(start))
+        }
+    }
+
+    /// Pseudorandom weight of shard `i` in `[1, shard_skew]` — a
+    /// splitmix-style hash of the shard index alone, so the skewed split
+    /// is a pure property of the spec (no RNG state threads through
+    /// ingest, and chunked regeneration sees identical boundaries).
+    fn skew_weight(&self, i: usize) -> f64 {
+        let mut z = (i as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        1.0 + u * (self.synth.shard_skew - 1.0)
+    }
+
+    /// Row boundary before shard `k` of the skewed split: `rows` scaled
+    /// by the weight prefix, rounded. Monotone in `k`, with
+    /// `boundary(0) = 0` and `boundary(shards) = rows` exactly — shard
+    /// sizes sum to the dataset with no drift.
+    fn skew_boundary(&self, k: usize) -> usize {
+        let total: f64 = (0..self.shards).map(|j| self.skew_weight(j)).sum();
+        let prefix: f64 = (0..k.min(self.shards)).map(|j| self.skew_weight(j)).sum();
+        ((self.rows as f64) * prefix / total).round() as usize
     }
 
     /// Generate shard `i` deterministically.
@@ -259,6 +294,51 @@ mod tests {
             // the hex token stream as the witness of bit-stability plus
             // row counts (synth's own tests pin dense bit-stability).
             assert_eq!(chunk.rows(), n);
+            for ((an, ac), (bn, bc)) in chunk.columns.iter().zip(&want.columns) {
+                assert_eq!(an, bn);
+                if let (Ok(a), Ok(b)) = (ac.as_hex8(), bc.as_hex8()) {
+                    assert_eq!(a, b, "col {an} rows [{row}, {})", row + n);
+                }
+            }
+            row += n;
+        }
+    }
+
+    #[test]
+    fn skewed_shards_vary_but_sum_exactly() {
+        let mut d = DatasetSpec::dataset_i(0.01);
+        d.shards = 6;
+        d.synth.shard_skew = 4.0;
+        let sizes: Vec<usize> = (0..d.shards).map(|i| d.rows_in_shard(i)).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), d.rows, "sizes {sizes:?}");
+        let (min, max) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        assert!(max as f64 >= 1.5 * min as f64, "skew too mild: {sizes:?}");
+        // Out-of-range shards are empty, and skew <= 1.0 is the legacy
+        // uniform split bit-for-bit.
+        assert_eq!(d.rows_in_shard(d.shards), 0);
+        d.synth.shard_skew = 0.0;
+        for i in 0..d.shards {
+            let start = i * d.rows_per_shard();
+            let legacy = d.rows_per_shard().min(d.rows.saturating_sub(start));
+            assert_eq!(d.rows_in_shard(i), legacy);
+        }
+    }
+
+    #[test]
+    fn skewed_shard_chunks_concatenate_to_whole_shard() {
+        let mut d = DatasetSpec::dataset_i(0.002);
+        d.shards = 4;
+        d.synth.shard_skew = 3.0;
+        let whole = d.shard(2, 9);
+        let rows = d.rows_in_shard(2);
+        assert_eq!(whole.rows(), rows);
+        let mut row = 0usize;
+        let mut chunk = Batch::new();
+        while row < rows {
+            let n = 29.min(rows - row);
+            d.shard_chunk_into(2, 9, row, n, &mut chunk);
+            assert_eq!(chunk.rows(), n);
+            let want = whole.slice_rows(row..row + n);
             for ((an, ac), (bn, bc)) in chunk.columns.iter().zip(&want.columns) {
                 assert_eq!(an, bn);
                 if let (Ok(a), Ok(b)) = (ac.as_hex8(), bc.as_hex8()) {

@@ -28,6 +28,14 @@ pub struct SynthConfig {
     pub zipf_s: f64,
     /// Distinct token universe per sparse column.
     pub cardinality: u64,
+    /// Shard-size skew: ≤ 1.0 (default 0.0) keeps the legacy uniform
+    /// split; above 1.0, per-shard weights are drawn pseudorandomly in
+    /// `[1, shard_skew]` (a pure hash of the shard index) and row
+    /// boundaries follow the weight prefix — shard byte costs then vary
+    /// up to ~`shard_skew`× while still summing exactly to the dataset's
+    /// rows (see `DatasetSpec::rows_in_shard`). The adversarial-skew
+    /// knob of the auto-tuner scenarios.
+    pub shard_skew: f64,
 }
 
 impl Default for SynthConfig {
@@ -37,6 +45,7 @@ impl Default for SynthConfig {
             negative_rate: 0.03,
             zipf_s: 1.05,
             cardinality: 2_000_000,
+            shard_skew: 0.0,
         }
     }
 }

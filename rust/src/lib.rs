@@ -46,6 +46,7 @@ pub mod metrics;
 pub mod planner;
 pub mod power;
 pub mod runtime;
+pub mod scenarios;
 pub mod trace;
 pub mod util;
 

@@ -108,6 +108,20 @@ impl TimeSeries {
         self.points.iter().map(|(_, v)| *v).fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// Mean of the last `n` points (all points when `n` exceeds the
+    /// series). The auto-tuner scores runs by *steady-state* throughput —
+    /// the tail windows after its knob changes have settled — rather than
+    /// the whole-run mean, which dilutes a good end state with the bad
+    /// start it was asked to climb out of.
+    pub fn tail_mean(&self, n: usize) -> f64 {
+        let start = self.points.len().saturating_sub(n.max(1));
+        let tail = &self.points[start..];
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().map(|(_, v)| v).sum::<f64>() / tail.len() as f64
+    }
+
     /// Coefficient of variation — used to quantify the *stability* of GPU
     /// utilization (Fig. 14's contrast is jitter, not just the mean).
     pub fn cv(&self) -> f64 {
@@ -276,6 +290,18 @@ mod tests {
         assert!(ts.cv() > 0.5);
         let stable = TimeSeries { points: (0..10).map(|i| (i as f64, 0.9)).collect() };
         assert!(stable.cv() < 1e-9);
+    }
+
+    #[test]
+    fn tail_mean_scores_the_settled_windows() {
+        let mut ts = TimeSeries::default();
+        for (i, v) in [1.0, 1.0, 1.0, 9.0, 9.0].iter().enumerate() {
+            ts.push(i as f64, *v);
+        }
+        assert!((ts.tail_mean(2) - 9.0).abs() < 1e-12);
+        assert!((ts.tail_mean(100) - ts.mean()).abs() < 1e-12);
+        assert!((ts.tail_mean(0) - 9.0).abs() < 1e-12, "n=0 degrades to last point");
+        assert_eq!(TimeSeries::default().tail_mean(3), 0.0);
     }
 
     #[test]

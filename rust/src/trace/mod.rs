@@ -77,7 +77,7 @@ use std::time::Instant;
 pub mod chrome;
 pub mod critpath;
 
-pub use critpath::{LaneAttribution, StallAttribution};
+pub use critpath::{LaneAttribution, StallAttribution, WindowAttributor};
 
 /// Typed span kinds (`Span::kind`). Stable small integers so per-kind
 /// live counters are a flat array.

@@ -305,6 +305,35 @@ pub fn stall(site: u64, key: u64) {
     std::thread::sleep(std::time::Duration::from_micros(micros));
 }
 
+/// Pure, non-consuming affliction query: is (`site`, `key`) afflicted by
+/// the installed plan, as seen from this (enrolled) thread? Unlike
+/// [`inject`] this never burns an attempt and ignores the attempt budget
+/// — it reports whether the *rule* hits the key, not whether the next
+/// attempt would fail. The control plane uses it to stamp deterministic
+/// straggler penalties into its observations ([`site::SLOW_SHARD`] keys)
+/// without perturbing the fault schedule the workers will see. One
+/// relaxed atomic load when no plan is installed.
+#[inline]
+pub fn afflicted(site: u64, key: u64) -> bool {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return false;
+    }
+    afflicted_slow(site, key)
+}
+
+#[cold]
+fn afflicted_slow(site: u64, key: u64) -> bool {
+    let token = ENROLLED.with(|c| c.get());
+    if token == 0 {
+        return false;
+    }
+    let st = STATE.lock().unwrap_or_else(|p| p.into_inner());
+    match st.as_ref() {
+        Some(s) if s.epoch == token => s.plan.afflicts(site, key).is_some(),
+        _ => false,
+    }
+}
+
 /// Total injections performed since the current plan was installed.
 pub fn injected_count() -> u64 {
     INJECTED.load(Ordering::Relaxed)
@@ -411,6 +440,26 @@ mod tests {
             assert!(!inject(site::SHARD_READ, k)); // no rule at all
         }
         assert_eq!(injected_count(), 0);
+    }
+
+    #[test]
+    fn afflicted_is_pure_and_never_consumes_attempts() {
+        let _g = FaultPlan::new(21).always(site::SLOW_SHARD, 1).install();
+        // Querying any number of times leaves the attempt budget intact…
+        for _ in 0..16 {
+            assert!(afflicted(site::SLOW_SHARD, 5));
+        }
+        assert_eq!(injected_count(), 0);
+        // …and ignores it: the key stays "afflicted by rule" even after
+        // its single failing attempt has been consumed by `inject`.
+        assert!(inject(site::SLOW_SHARD, 5));
+        assert!(!inject(site::SLOW_SHARD, 5));
+        assert!(afflicted(site::SLOW_SHARD, 5));
+        // Unenrolled threads never see the plan.
+        std::thread::scope(|scope| {
+            let clean = scope.spawn(|| afflicted(site::SLOW_SHARD, 5)).join().unwrap();
+            assert!(!clean);
+        });
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Properties of the online hill-climbing auto-tuner
+//! (`coordinator::autotune`) under schedule fuzzing, plus the
+//! adversarial scenario matrix's ROADMAP success bar:
+//!
+//! 1. `autotune: None` is bitwise identical to pre-controller behavior —
+//!    the observation ledger, window drive, and report plumbing cost
+//!    nothing and change nothing when the controller is disarmed.
+//! 2. Controller decisions are a **pure function of the config**: the
+//!    same config produces the identical `KnobChange` sequence (steps,
+//!    knobs, and trigger causes) across fuzzed thread schedules, and the
+//!    training trajectory stays bitwise.
+//! 3. Every emitted change is accounted: it appears in
+//!    `TrainReport::knob_log` with its trigger cause, is counted by
+//!    `TrainReport::reconfigs`, and matches the controller's own window
+//!    log in order.
+//! 4. Scenario matrix (`piperec::scenarios`): from a deliberately bad
+//!    config, the auto-tuned arm reaches ≥ 0.9× the hand-tuned arm's
+//!    steady-state modeled throughput on every scenario.
+//!
+//! CI runs this suite in the `autotune-fuzz` job under
+//! `--test-threads {1, 8}` across three seed ranges.
+
+use piperec::coordinator::{
+    train, AutotuneConfig, ControlEvent, ControlScript, DataPath, KnobChange, RoutePolicy,
+    StallCause, TrainConfig, TrainReport,
+};
+use piperec::dataio::dataset::{DatasetKind, DatasetSpec};
+use piperec::dataio::ingest::{DeliveryPolicy, IngestConfig};
+use piperec::dataio::synth::SynthConfig;
+use piperec::devmem::ArenaConfig;
+use piperec::etl::column::ColType;
+use piperec::etl::dag::{Dag, SinkRole};
+use piperec::etl::ops::OpSpec;
+use piperec::etl::schema::Schema;
+use piperec::fpga::Pipeline;
+use piperec::planner::{compile, PlannerConfig};
+use piperec::runtime::artifacts::{ModelMeta, ParamSpec};
+use piperec::runtime::Trainer;
+use piperec::scenarios::Scenario;
+use piperec::util::prop::assert_bits_equal;
+use piperec::util::sched::SchedFuzzer;
+
+/// Base seed of the fuzzing campaign (CI varies `PIPEREC_FUZZ_SEED_BASE`).
+fn campaign_base() -> u64 {
+    std::env::var("PIPEREC_FUZZ_SEED_BASE")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xA070_70E5)
+}
+
+/// Stateless packing dag matching the reference-trainer meta (same
+/// generator family as prop_elastic / prop_concurrent).
+fn passthrough_dag(nd: usize, ns: usize) -> Dag {
+    let mut dag = Dag::new("prop-autotune");
+    let l = dag.source("t_label", ColType::F32);
+    dag.sink("label", l, SinkRole::Label);
+    for i in 0..nd {
+        let d = dag.source(format!("t_i{i}"), ColType::F32);
+        let f = dag.op(
+            OpSpec::FillMissing { dense_default: 0.0, sparse_default: 0 },
+            &[d],
+        );
+        dag.sink(format!("dense{i}"), f, SinkRole::Dense);
+    }
+    for i in 0..ns {
+        let s = dag.source(format!("t_c{i}"), ColType::Hex8);
+        let h = dag.op(OpSpec::Hex2Int, &[s]);
+        let m = dag.op(OpSpec::Modulus { m: 1 << 16 }, &[h]);
+        dag.sink(format!("sparse{i}"), m, SinkRole::SparseIndex);
+    }
+    dag
+}
+
+fn trainer_meta(batch: usize, nd: usize, ns: usize) -> ModelMeta {
+    ModelMeta {
+        batch,
+        n_dense: nd,
+        n_sparse: ns,
+        vocab: 128,
+        embed_dim: 1,
+        params: vec![
+            ParamSpec { name: "w_dense".into(), dims: vec![nd] },
+            ParamSpec { name: "b".into(), dims: vec![1] },
+            ParamSpec { name: "emb".into(), dims: vec![ns * 32] },
+        ],
+        extra: Default::default(),
+    }
+}
+
+const ND: usize = 2;
+const NS: usize = 2;
+const STEP_ROWS: usize = 16;
+/// 8 shards × 64 rows → 4 full steps per shard, 32 global steps: enough
+/// for the controller to close several 4-step windows mid-stream.
+const SHARDS: usize = 8;
+const STEPS: u64 = 32;
+
+fn fixture() -> (Pipeline, DatasetSpec) {
+    let schema = Schema::tabular("t", ND, NS, 64);
+    let dag = passthrough_dag(ND, NS);
+    dag.validate(&schema).unwrap();
+    let spec = DatasetSpec {
+        kind: DatasetKind::I,
+        name: "prop-autotune",
+        schema: schema.clone(),
+        rows: 512,
+        paper_rows: 512,
+        shards: SHARDS,
+        synth: SynthConfig::default(),
+        ssd_bound: true, // high-setup ingest: the tuner has a real climb
+    };
+    let plan = compile(&dag, &schema, &PlannerConfig::default()).unwrap();
+    (Pipeline::new(plan), spec)
+}
+
+fn base_cfg() -> TrainConfig {
+    TrainConfig {
+        max_steps: usize::MAX / 2,
+        loss_every: 1,
+        staging_buffers: 2,
+        seed: 99,
+        ingest: IngestConfig {
+            workers: 1,
+            channel_depth: 2,
+            policy: DeliveryPolicy::InOrder,
+            ..IngestConfig::default()
+        },
+        path: DataPath::Arena,
+        arena: ArenaConfig { slots: 3, slot_bytes: 16 << 20 },
+        devices: 2,
+        route: RoutePolicy::RoundRobin,
+        allreduce_every: 1,
+        ..TrainConfig::default()
+    }
+}
+
+/// The armed controller config used by the purity properties: route
+/// flips disabled (`imbalance_threshold: INFINITY`) so every decision —
+/// and everything downstream of it — stays a pure function of the
+/// delivery-order step numbering.
+fn tuned_cfg() -> TrainConfig {
+    TrainConfig {
+        autotune: Some(AutotuneConfig {
+            window: 4,
+            cooldown: 0,
+            max_ingest_workers: 4,
+            imbalance_threshold: f64::INFINITY,
+            ..AutotuneConfig::default()
+        }),
+        ..base_cfg()
+    }
+}
+
+fn run_cfg(pipe: &Pipeline, spec: &DatasetSpec, cfg: &TrainConfig) -> (TrainReport, Vec<f32>) {
+    let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+    let report = train(pipe, spec, &mut trainer, cfg).unwrap();
+    let state = trainer.state_to_vec().unwrap();
+    (report, state)
+}
+
+fn assert_same_trajectory(
+    label: &str,
+    got: &(TrainReport, Vec<f32>),
+    want: &(TrainReport, Vec<f32>),
+) {
+    assert_eq!(got.0.steps, want.0.steps, "{label}: step counts differ");
+    assert_eq!(
+        got.0.losses.len(),
+        want.0.losses.len(),
+        "{label}: loss sample counts differ"
+    );
+    for ((gs, gl), (ws, wl)) in got.0.losses.iter().zip(&want.0.losses) {
+        assert_eq!(gs, ws, "{label}: loss sampled at different steps");
+        assert_eq!(
+            gl.to_bits(),
+            wl.to_bits(),
+            "{label}: loss diverged at step {gs}: {gl} vs {wl}"
+        );
+    }
+    assert_bits_equal(&got.1, &want.1).unwrap_or_else(|e| {
+        panic!("{label}: final parameters diverged: {e}");
+    });
+}
+
+#[test]
+fn disarmed_tuner_is_bitwise_invisible_under_fuzzing() {
+    // Property 1: with `autotune: None` the run carries no controller
+    // report, logs nothing, and replays bitwise across fuzzed schedules
+    // — i.e. pre-controller behavior, untouched.
+    let (pipe, spec) = fixture();
+    let cfg = base_cfg();
+    let reference = run_cfg(&pipe, &spec, &cfg);
+    assert_eq!(reference.0.steps, STEPS, "fixture must actually train");
+    assert!(reference.0.autotune.is_none(), "disarmed run grew a report");
+    assert!(reference.0.knob_log.is_empty());
+    assert_eq!(reference.0.reconfigs, 0);
+
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0x0ff);
+    for i in 0..20 {
+        let (seed, got) = fuzzer.with_schedule(|| run_cfg(&pipe, &spec, &cfg));
+        let label = format!("disarmed schedule {i} (seed {seed:#x})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert!(got.0.autotune.is_none(), "{label}");
+        assert_eq!(got.0.reconfigs, 0, "{label}");
+    }
+}
+
+#[test]
+fn controller_decisions_replay_bitwise_under_fuzzing() {
+    // Property 2: the armed controller's decisions — step, knob, cause,
+    // order — and the trajectory they steer are identical across ≥ 20
+    // fuzzed schedules of the same config.
+    let (pipe, spec) = fixture();
+    let cfg = tuned_cfg();
+    let reference = run_cfg(&pipe, &spec, &cfg);
+    assert_eq!(reference.0.steps, STEPS, "fixture must actually train");
+    let at = reference.0.autotune.as_ref().expect("armed run must report");
+    assert!(
+        at.applied >= 1,
+        "the SSD-bound 1-worker start must trigger at least one climb; windows: {:?}",
+        at.windows
+    );
+    assert!(
+        !reference.0.knob_log.is_empty(),
+        "applied changes must land in the knob log"
+    );
+
+    let mut fuzzer = SchedFuzzer::new(campaign_base() ^ 0x7e57);
+    const SCHEDULES: usize = 20;
+    for i in 0..SCHEDULES {
+        let (seed, got) = fuzzer.with_schedule(|| run_cfg(&pipe, &spec, &cfg));
+        let label = format!("tuned schedule {i} (seed {seed:#x})");
+        assert_same_trajectory(&label, &got, &reference);
+        assert_eq!(got.0.knob_log, reference.0.knob_log, "{label}: decisions");
+        assert_eq!(got.0.reconfigs, reference.0.reconfigs, "{label}: reconfigs");
+        let g = got.0.autotune.as_ref().unwrap();
+        assert_eq!(g.applied, at.applied, "{label}: applied");
+        assert_eq!(g.reverts, at.reverts, "{label}: reverts");
+        assert_eq!(g.windows, at.windows, "{label}: window log");
+    }
+}
+
+#[test]
+fn every_emitted_change_is_logged_with_its_cause() {
+    // Property 3: emissions, the registry log, and the report agree —
+    // every controller change appears in `knob_log` with a Some(cause),
+    // `reconfigs` counts exactly the log, and the controller's window
+    // log names the same changes in the same order.
+    let (pipe, spec) = fixture();
+    let (report, _) = run_cfg(&pipe, &spec, &tuned_cfg());
+    let at = report.autotune.as_ref().expect("armed run must report");
+
+    assert_eq!(
+        report.reconfigs,
+        report.knob_log.len() as u64,
+        "reconfigs must count the knob log exactly"
+    );
+    for k in &report.knob_log {
+        assert!(
+            k.cause.is_some(),
+            "controller-emitted change {:?} at step {} lost its cause",
+            k.change,
+            k.at_step
+        );
+    }
+    assert_eq!(
+        report.knob_log.len() as u64,
+        at.applied + at.reverts,
+        "log: {:?}",
+        report.knob_log
+    );
+
+    // The controller's own per-window action log names the same change
+    // sequence the registry recorded (actuated windows only: the
+    // passive tail windows after routing ends never emit).
+    let window_actions: Vec<KnobChange> =
+        at.windows.iter().filter_map(|w| w.action).collect();
+    let logged: Vec<KnobChange> = report.knob_log.iter().map(|k| k.change).collect();
+    assert_eq!(window_actions, logged, "windows: {:?}", at.windows);
+
+    // The climb this fixture is built to provoke: an ingest-caused
+    // worker raise comes first.
+    let first = &report.knob_log[0];
+    assert_eq!(first.cause, Some(StallCause::Ingest), "log: {:?}", report.knob_log);
+    assert!(
+        matches!(first.change, KnobChange::IngestWorkers(n) if n > 1),
+        "log: {:?}",
+        report.knob_log
+    );
+}
+
+#[test]
+fn autotune_and_control_script_are_mutually_exclusive() {
+    let (pipe, spec) = fixture();
+    let mut cfg = tuned_cfg();
+    cfg.control = ControlScript {
+        events: vec![ControlEvent { at_step: 4, change: KnobChange::AddLane }],
+    };
+    let mut trainer = Trainer::from_meta(trainer_meta(STEP_ROWS, ND, NS), 7);
+    let err = train(&pipe, &spec, &mut trainer, &cfg)
+        .expect_err("a script and the controller cannot share the knobs");
+    assert!(err.to_string().contains("mutually"), "{err}");
+}
+
+// ---- Scenario matrix: the ROADMAP item-3 success bar -----------------
+
+fn assert_scenario_bar(sc: &Scenario) {
+    let out = sc.evaluate().unwrap_or_else(|e| {
+        panic!("{}: scenario run failed: {e}", sc.name);
+    });
+    assert!(
+        out.auto.steady_steps_per_s > 0.0 && out.hand.steady_steps_per_s > 0.0,
+        "{}: degenerate scores: {out:?}",
+        sc.name
+    );
+    assert!(
+        out.auto.applied >= 1,
+        "{}: the controller never climbed from the bad start: {out:?}",
+        sc.name
+    );
+    assert!(
+        out.meets_bar(),
+        "{}: auto-tuned reached only {:.3}× hand-tuned (bar {:.2}): {out:?}",
+        sc.name,
+        out.auto_vs_hand(),
+        piperec::scenarios::SUCCESS_BAR
+    );
+}
+
+#[test]
+fn scenario_skewed_shards_meets_bar() {
+    assert_scenario_bar(&Scenario::skewed_shards());
+}
+
+#[test]
+fn scenario_straggler_lane_meets_bar() {
+    assert_scenario_bar(&Scenario::straggler_lane());
+}
+
+#[test]
+fn scenario_ssd_cliff_meets_bar() {
+    assert_scenario_bar(&Scenario::ssd_cliff());
+}
